@@ -1,0 +1,79 @@
+//! Compress a whole network with the paper's §V-C pipeline
+//! (prune → cluster), auto-select a format per layer, and report the
+//! compression / efficiency gains — the workflow a deployment would run.
+//!
+//! ```sh
+//! cargo run --release --example compress_network [-- <net> [keep] [clusters]]
+//! # e.g.  cargo run --release --example compress_network -- lenet5 0.05 8
+//! ```
+
+use cer::compress::pipeline::CompressionPipeline;
+use cer::coordinator::{select_format, Objective};
+use cer::costmodel::{trace_matvec, EnergyModel, TimeModel};
+use cer::formats::{FormatKind, MatrixFormat};
+use cer::kernels::AnyMatrix;
+use cer::networks::weights::synthesize_float_layer;
+use cer::networks::zoo::NetworkSpec;
+use cer::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net = args.first().map(String::as_str).unwrap_or("lenet-300-100");
+    let keep: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.09);
+    let clusters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let spec = NetworkSpec::by_name(net).unwrap_or_else(|| {
+        eprintln!("unknown network '{net}', using LeNet-300-100");
+        NetworkSpec::lenet_300_100()
+    });
+    println!(
+        "{}: {} layers, {:.2} MB dense; pipeline: keep {:.1}% + {clusters}-means\n",
+        spec.name,
+        spec.layers.len(),
+        spec.dense_mb(),
+        keep * 100.0
+    );
+
+    let energy = EnergyModel::table_i();
+    let time = TimeModel::default_model();
+    let pipeline = CompressionPipeline::deep_compression(keep, clusters);
+    let mut rng = Rng::new(7);
+
+    let (mut dense_bits, mut best_bits) = (0u64, 0u64);
+    let (mut dense_pj, mut best_pj) = (0.0f64, 0.0f64);
+    println!(
+        "{:<22} {:>6} {:>8} {:>8} {:>8}  {:>7}",
+        "layer", "p0", "H", "kbar", "format", "gain"
+    );
+    for l in &spec.layers {
+        let w = synthesize_float_layer(l, 0.05, 0.05, 4.0, &mut rng);
+        let r = pipeline.run(&w);
+        let (kind, crits) = select_format(&r.compressed, &energy, &time, Objective::Energy);
+        let enc = AnyMatrix::encode(kind, &r.compressed);
+        let s = &r.stats;
+        let winner_idx = FormatKind::ALL.iter().position(|&k| k == kind).unwrap();
+        let gain = crits[0].energy_pj / crits[winner_idx].energy_pj;
+        println!(
+            "{:<22} {:>6.3} {:>8.3} {:>8.2} {:>8}  x{:<6.2}",
+            l.name,
+            s.p0,
+            s.entropy,
+            s.kbar,
+            kind.name(),
+            gain
+        );
+        dense_bits += (l.rows * l.cols) as u64 * 32;
+        best_bits += enc.storage().total_bits();
+        let trace = trace_matvec(&enc);
+        let dense_trace = trace_matvec(&AnyMatrix::encode(FormatKind::Dense, &r.compressed));
+        dense_pj += dense_trace.energy_pj(&energy) * l.patches as f64;
+        best_pj += trace.energy_pj(&energy) * l.patches as f64;
+    }
+    println!(
+        "\nnetwork totals: storage x{:.2} ({:.2} MB → {:.2} MB), energy x{:.2} per inference",
+        dense_bits as f64 / best_bits as f64,
+        dense_bits as f64 / 8e6,
+        best_bits as f64 / 8e6,
+        dense_pj / best_pj,
+    );
+}

@@ -1,0 +1,106 @@
+//! End-to-end driver (deliverable (b)/E16): load the build-time-trained,
+//! §V-C-compressed MLP from `artifacts/`, run the full test set through
+//! all three engine backends, and report accuracy parity, latency and
+//! compression — proving the three layers compose:
+//!
+//!   L1 Pallas kernel  → lowered inside `model_cser.hlo.txt`
+//!   L2 JAX model      → both HLO artifacts
+//!   L3 Rust engine    → native CER/CSER kernels + PJRT execution
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example e2e_inference
+//! ```
+
+use std::time::Instant;
+
+use cer::coordinator::{Backend, Engine, Objective};
+use cer::formats::MatrixFormat;
+use cer::runtime::MlpArtifacts;
+
+fn main() -> anyhow::Result<()> {
+    let art = MlpArtifacts::load(std::path::Path::new("artifacts"))?;
+    println!(
+        "e2e model: {} layers, static batch {}, build-time accuracy float {:.4} / compressed {:.4}",
+        art.layers.len(),
+        art.batch,
+        art.accuracy_float,
+        art.accuracy_quant
+    );
+    for (i, l) in art.layers.iter().enumerate() {
+        let s = cer::costmodel::DistStats::measure(&l.quantized);
+        println!(
+            "  fc{i}: {}x{}  sparsity {:.1}%  K {}  H {:.2}",
+            l.quantized.rows(),
+            l.quantized.cols(),
+            (1.0 - s.p0) * 100.0,
+            s.k,
+            s.entropy
+        );
+    }
+    println!();
+
+    let mut reference: Option<Vec<usize>> = None;
+    for backend in [Backend::Native, Backend::XlaCser, Backend::XlaDense] {
+        let mut engine = Engine::from_artifacts(&art, backend, Objective::Energy)?;
+        let mut preds: Vec<usize> = Vec::with_capacity(art.n_test);
+        let t0 = Instant::now();
+        let mut start = 0;
+        while start < art.n_test {
+            let (x, _, valid) = art.test_batch(start);
+            let batch = engine.required_batch().unwrap_or(art.batch);
+            let p = engine.classify(&x[..batch * art.in_dim()], batch)?;
+            preds.extend_from_slice(&p[..valid]);
+            start += art.batch;
+        }
+        let dt = t0.elapsed();
+        let correct = preds
+            .iter()
+            .zip(&art.test_y)
+            .filter(|(p, y)| **p == **y as usize)
+            .count();
+        println!(
+            "{backend:?}: accuracy {:.4} ({correct}/{}), {:.1} µs/sample, formats {:?}, weights {:.1} KB",
+            correct as f64 / art.n_test as f64,
+            art.n_test,
+            dt.as_secs_f64() * 1e6 / art.n_test as f64,
+            engine.formats(),
+            engine.storage_bits() as f64 / 8.0 / 1024.0,
+        );
+        match &reference {
+            None => {
+                // Native is the reference; XLA-CSER must match it exactly
+                // on the quantized weights (same math through the Pallas
+                // kernel) — this is the L1↔L3 parity check.
+                reference = Some(preds);
+            }
+            Some(r) if backend == Backend::XlaCser => {
+                let agree = preds.iter().zip(r).filter(|(a, b)| a == b).count();
+                println!(
+                    "  → Native vs XlaCser prediction agreement: {agree}/{}",
+                    art.n_test
+                );
+                assert!(
+                    agree as f64 / art.n_test as f64 > 0.999,
+                    "quantized backends disagree"
+                );
+            }
+            _ => {}
+        }
+    }
+    let dense_bits: u64 = art
+        .layers
+        .iter()
+        .map(|l| (l.weights.rows() * l.weights.cols()) as u64 * 32)
+        .sum();
+    let mut native = Engine::from_artifacts(&art, Backend::Native, Objective::Energy)?;
+    let _ = native.forward(&vec![0.0; art.in_dim()], 1)?;
+    println!(
+        "\ncompression: {:.1} KB float → {:.1} KB in selected formats (x{:.1})",
+        dense_bits as f64 / 8.0 / 1024.0,
+        native.storage_bits() as f64 / 8.0 / 1024.0,
+        dense_bits as f64 / native.storage_bits() as f64,
+    );
+    Ok(())
+}

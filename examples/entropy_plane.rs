@@ -1,0 +1,79 @@
+//! Explore the entropy–sparsity plane (the paper's Figs. 3/4): synthesize
+//! matrices at chosen (H, p₀) points and print which format wins each of
+//! the four criteria — a compact, interactive version of `repro figure4`.
+//!
+//! ```sh
+//! cargo run --release --example entropy_plane            # tour of the plane
+//! cargo run --release --example entropy_plane -- 2.5 0.6 # one point
+//! ```
+
+use cer::costmodel::{Criterion4, EnergyModel, TimeModel};
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::stats::entropy::{max_entropy, min_entropy};
+use cer::stats::synth::PlanePoint;
+use cer::util::Rng;
+
+fn evaluate_point(h: f64, p0: f64, rng: &mut Rng, energy: &EnergyModel, time: &TimeModel) {
+    const K: usize = 128;
+    let (m, n) = (100, 100);
+    print!("H={h:<5.2} p0={p0:<5.2}  ");
+    let Some(point) = PlanePoint::synthesize(h, p0, K) else {
+        println!(
+            "infeasible (feasible H for this p0: [{:.2}, {:.2}])",
+            min_entropy(p0),
+            max_entropy(p0, K)
+        );
+        return;
+    };
+    // Average the criteria over a few samples.
+    let mut acc = [[0.0f64; 4]; 4];
+    for _ in 0..5 {
+        let mat = point.sample_matrix(m, n, rng);
+        for (fi, kind) in FormatKind::ALL.iter().enumerate() {
+            let c = Criterion4::evaluate(&AnyMatrix::encode(*kind, &mat), energy, time);
+            for ci in 0..4 {
+                acc[fi][ci] += c.get(ci);
+            }
+        }
+    }
+    for (ci, name) in Criterion4::NAMES.iter().enumerate() {
+        let mut best = 0;
+        for fi in 1..4 {
+            if acc[fi][ci] < acc[best][ci] {
+                best = fi;
+            }
+        }
+        print!(
+            "{name}:{} (x{:.2})  ",
+            FormatKind::ALL[best].name(),
+            acc[0][ci] / acc[best][ci]
+        );
+    }
+    println!();
+}
+
+fn main() {
+    let energy = EnergyModel::table_i();
+    let time = TimeModel::default_model();
+    let mut rng = Rng::new(1);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() == 2 {
+        let h: f64 = args[0].parse().expect("H");
+        let p0: f64 = args[1].parse().expect("p0");
+        evaluate_point(h, p0, &mut rng, &energy, &time);
+        return;
+    }
+    println!("winner per criterion across the (H, p0) plane, 100x100, K=128");
+    println!("(gain shown is dense/winner)\n");
+    for (h, p0) in [
+        (0.5, 0.9),  // deep low-entropy corner → CER/CSER
+        (1.5, 0.75), // low entropy, moderate sparsity
+        (3.0, 0.55), // the Fig. 5 band
+        (4.8, 0.07), // VGG16's Table IV operating point
+        (5.5, 0.3),  // near the spike-and-slab boundary → CSR competitive
+        (6.6, 0.05), // high entropy, low sparsity → dense competitive
+    ] {
+        evaluate_point(h, p0, &mut rng, &energy, &time);
+    }
+}

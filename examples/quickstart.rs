@@ -1,0 +1,77 @@
+//! Quickstart: encode a matrix in all four formats, compare the paper's
+//! four criteria, and run the dot product.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use cer::costmodel::{Criterion4, EnergyModel, TimeModel};
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::stats::quantize::uniform_quantize;
+use cer::util::Rng;
+
+fn main() {
+    // 1. A "trained layer": Gaussian weights, then the paper's §V-B 7-bit
+    //    uniform quantization (lossless to re-encode afterwards).
+    let (m, n) = (256, 1024);
+    let mut rng = Rng::new(42);
+    let weights = cer::formats::Dense::from_vec(
+        m,
+        n,
+        (0..m * n).map(|_| (rng.normal() * 0.05) as f32).collect(),
+    );
+    let quantized = uniform_quantize(&weights, 7);
+    let stats = cer::costmodel::DistStats::measure(&quantized);
+    println!(
+        "layer {}x{}  K={}  p0={:.3}  H={:.2} bits\n",
+        m, n, stats.k, stats.p0, stats.entropy
+    );
+
+    // 2. Encode in every representation and evaluate the four criteria.
+    let energy = EnergyModel::table_i();
+    let time = TimeModel::default_model();
+    println!(
+        "{:<8} {:>14} {:>12} {:>12} {:>12}",
+        "format", "storage[KB]", "#ops", "time[µs]", "energy[µJ]"
+    );
+    let mut encoded = Vec::new();
+    for kind in FormatKind::ALL {
+        let a = AnyMatrix::encode(kind, &quantized);
+        let c = Criterion4::evaluate(&a, &energy, &time);
+        println!(
+            "{:<8} {:>14.1} {:>12} {:>12.1} {:>12.2}",
+            kind.name(),
+            c.storage_bits as f64 / 8.0 / 1024.0,
+            c.ops,
+            c.time_ns / 1e3,
+            c.energy_pj / 1e6,
+        );
+        encoded.push(a);
+    }
+
+    // 3. The dot products agree (lossless formats, same math).
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let mut reference = vec![0.0f32; m];
+    encoded[0].matvec(&x, &mut reference);
+    for a in &encoded[1..] {
+        let mut y = vec![0.0f32; m];
+        a.matvec(&x, &mut y);
+        let max_err = y
+            .iter()
+            .zip(&reference)
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{}: {max_err}", a.kind().name());
+    }
+    println!("\nall formats agree on y = W·x (max |Δ| < 1e-3)");
+
+    // 4. Let the selector pick for you.
+    let (best, _) = cer::coordinator::select_format(
+        &quantized,
+        &energy,
+        &time,
+        cer::coordinator::Objective::Energy,
+    );
+    println!("selector picks {best} for the energy objective");
+}

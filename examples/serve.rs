@@ -1,0 +1,71 @@
+//! Serving demo: the inference server with dynamic batching under an open-
+//! loop Poisson-ish load, reporting throughput, latency and batch-size
+//! metrics. Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example serve -- [requests] [max_batch] [max_delay_us]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use cer::coordinator::batcher::BatcherConfig;
+use cer::coordinator::{Backend, Engine, InferenceServer, Objective, ServerConfig};
+use cer::runtime::MlpArtifacts;
+use cer::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let max_batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let max_delay_us: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1_000);
+
+    let art = MlpArtifacts::load(std::path::Path::new("artifacts"))?;
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_delay_us,
+        },
+    };
+    let art_engine = art.clone();
+    let srv = InferenceServer::spawn(
+        move || Engine::from_artifacts(&art_engine, Backend::Native, Objective::Energy),
+        cfg,
+    );
+
+    // Open-loop arrivals: exponential inter-arrival times around 50k req/s.
+    let mut rng = Rng::new(99);
+    let mut pending = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let s = i % art.n_test;
+        let x = art.test_x[s * art.in_dim()..(s + 1) * art.in_dim()].to_vec();
+        pending.push((i, srv.submit(x)));
+        let gap = (-rng.f64().max(1e-12).ln() * 20.0) as u64; // mean 20µs
+        if gap > 0 {
+            std::thread::sleep(Duration::from_micros(gap.min(200)));
+        }
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let logits = rx.recv()??;
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == art.test_y[i % art.n_test] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {requests} requests in {:.1} ms  ({:.0} req/s)",
+        dt.as_secs_f64() * 1e3,
+        requests as f64 / dt.as_secs_f64()
+    );
+    println!("accuracy {:.4}", correct as f64 / requests as f64);
+    println!("metrics: {}", srv.metrics().summary());
+    srv.shutdown();
+    Ok(())
+}

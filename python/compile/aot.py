@@ -1,0 +1,150 @@
+"""AOT entry point: train (once), compress, and lower both forward paths to
+HLO **text** artifacts for the Rust runtime.
+
+HLO text — not ``lowered.compiler_ir("hlo")`` protos and not
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (``make artifacts``):
+
+* ``artifacts/mlp/...``             — weights/testset/manifest (train.py).
+* ``artifacts/model_dense.hlo.txt`` — dense forward, params as arguments.
+* ``artifacts/model_cser.hlo.txt``  — Pallas-CSER forward (interpret-mode
+  lowering → plain HLO ops, runnable on the CPU PJRT client).
+* ``artifacts/quant_matmul.hlo.txt``— single quantized-layer kernel, used
+  by the runtime unit tests.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .model import LAYER_SIZES, mlp_cser, mlp_dense
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function → XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def codes_from_quantized(qw):
+    """Dense quantized weights → (codes int32, omega f32[K]) with omega
+    ascending. Any consistent (codes, omega) pair satisfies
+    omega[codes] == qw, so the Rust side can derive its own pair from the
+    same weights without coordination."""
+    omega, codes = np.unique(qw, return_inverse=True)
+    return codes.reshape(qw.shape).astype(np.int32), omega.astype(np.float32)
+
+
+def lower_dense(batch):
+    """Dense forward with weights as runtime parameters."""
+
+    def fwd(x, *flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(LAYER_SIZES))]
+        return (mlp_dense(x, params),)
+
+    args = [jax.ShapeDtypeStruct((batch, LAYER_SIZES[0][1]), jnp.float32)]
+    for out, inp in LAYER_SIZES:
+        args.append(jax.ShapeDtypeStruct((out, inp), jnp.float32))
+        args.append(jax.ShapeDtypeStruct((out,), jnp.float32))
+    return jax.jit(fwd).lower(*args)
+
+
+def lower_cser(batch, ks, bm, bn):
+    """Pallas-CSER forward; codes/codebooks/biases as runtime parameters.
+
+    ks: per-layer codebook sizes (static — they shape the one-hot op).
+    """
+
+    def fwd(x, *flat):
+        qparams = [
+            (flat[3 * i], flat[3 * i + 1], flat[3 * i + 2])
+            for i in range(len(LAYER_SIZES))
+        ]
+        return (mlp_cser(x, qparams, interpret=True, bm=bm, bn=bn),)
+
+    args = [jax.ShapeDtypeStruct((batch, LAYER_SIZES[0][1]), jnp.float32)]
+    for (out, inp), k in zip(LAYER_SIZES, ks):
+        args.append(jax.ShapeDtypeStruct((out, inp), jnp.int32))
+        args.append(jax.ShapeDtypeStruct((k,), jnp.float32))
+        args.append(jax.ShapeDtypeStruct((out,), jnp.float32))
+    return jax.jit(fwd).lower(*args)
+
+
+def lower_quant_matmul(m, n, k, b, bm, bn):
+    """Single quantized-layer kernel (runtime smoke tests)."""
+    from .kernels import cser_matmul
+
+    def fwd(codes, omega, x):
+        return (cser_matmul(codes, omega, x, bm=bm, bn=bn, interpret=True),)
+
+    return jax.jit(fwd).lower(
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((n, b), jnp.float32),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--bm", type=int, default=64, help="kernel block rows")
+    ap.add_argument("--bn", type=int, default=128, help="kernel block cols")
+    args = ap.parse_args()
+
+    out = args.out
+    mlp_dir = os.path.join(out, "mlp")
+    os.makedirs(out, exist_ok=True)
+
+    # 1. Train + compress (skip if already exported).
+    manifest = os.path.join(mlp_dir, "manifest.txt")
+    if not os.path.exists(manifest):
+        print("training e2e model ...")
+        _, _, accs = train_mod.run(mlp_dir, batch=args.batch, steps=args.steps)
+        print(f"  float acc {accs[0]:.4f}  compressed acc {accs[1]:.4f}")
+    else:
+        print(f"{manifest} exists; skipping training")
+
+    # Codebook sizes of the exported quantized layers (static for lowering).
+    ks = []
+    for i in range(len(LAYER_SIZES)):
+        qw = np.fromfile(os.path.join(mlp_dir, f"fcq{i}_w.f32"), np.float32).reshape(
+            LAYER_SIZES[i]
+        )
+        ks.append(int(np.unique(qw).size))
+    print(f"codebook sizes: {ks}")
+
+    # 2. Lower both forward paths + the single-layer kernel.
+    jobs = [
+        ("model_dense.hlo.txt", lower_dense(args.batch)),
+        ("model_cser.hlo.txt", lower_cser(args.batch, ks, args.bm, args.bn)),
+        ("quant_matmul.hlo.txt", lower_quant_matmul(16, 24, 5, 4, args.bm, args.bn)),
+    ]
+    for name, lowered in jobs:
+        text = to_hlo_text(lowered)
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    # Record the static batch/ks so the Rust runtime can check its inputs.
+    with open(os.path.join(out, "aot_manifest.txt"), "w") as f:
+        f.write(f"batch {args.batch}\n")
+        f.write("ks " + " ".join(str(k) for k in ks) + "\n")
+        f.write(f"bm {args.bm}\nbn {args.bn}\n")
+
+
+if __name__ == "__main__":
+    main()

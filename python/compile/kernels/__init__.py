@@ -1,0 +1,12 @@
+"""L1 kernels: Pallas implementations + pure-jnp oracles."""
+
+from .cser_mv import cser_matmul, vmem_footprint_bytes
+from .ref import cser_matmul_ref, decode, quantized_matmul_ref
+
+__all__ = [
+    "cser_matmul",
+    "cser_matmul_ref",
+    "decode",
+    "quantized_matmul_ref",
+    "vmem_footprint_bytes",
+]

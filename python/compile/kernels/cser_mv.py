@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: the paper's distributive-law dot product, re-thought
+for TPU (DESIGN.md §Hardware-Adaptation).
+
+The CPU formulation of CER/CSER gathers input elements per shared value and
+multiplies once per run — data-dependent gathers that are hostile to the
+MXU. The TPU formulation keeps the core insight (*factor the matmul through
+the codebook*) but expresses it densely:
+
+    Y[m, b] = sum_k omega[k] * sum_j 1[C[m, j] = k] * X[j, b]
+
+i.e. a one-hot contraction (MXU matmul of the block's one-hot expansion with
+the input tile) followed by a tiny (K-wide) second contraction. The one-hot
+expansion is materialized only per (bm x bn) VMEM block, never in HBM, so
+HBM traffic for the weights is the *codes* stream (b bits/element instead of
+32) — the entropy-bounded memory claim carried to TPU.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated in DESIGN.md / EXPERIMENTS.md from
+the VMEM footprint + MXU utilization of this BlockSpec schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cser_kernel(codes_ref, omega_ref, x_ref, o_ref, *, k: int):
+    """One (bm x bn) block step: accumulate the block's contribution to Y.
+
+    Grid = (m_tiles, n_tiles); the n axis is a reduction — all n steps map
+    to the same output block, initialized at j == 0.
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[...]  # (bm, bn) int32
+    x = x_ref[...]  # (bn, b) f32
+    omega = omega_ref[...]  # (k,) f32
+    bm, bn = codes.shape
+    # One-hot expansion of the code block: (bm, bn, k). On TPU this feeds
+    # the MXU as a (bm*k, bn) x (bn, b) matmul; under interpret=True it runs
+    # as plain XLA ops.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, bn, k), 2)
+    onehot = (codes[:, :, None] == iota).astype(x.dtype)
+    # S[m, k, b]: shared-value partial sums of this block, computed as one
+    # (bm*k, bn) x (bn, b) matmul — the MXU-shaped step.
+    s = jax.lax.dot_general(
+        onehot.transpose(0, 2, 1).reshape(bm * k, bn),
+        x,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bm, k, x.shape[1])
+    # The paper's "one multiply per shared value": contract with omega.
+    o_ref[...] += jnp.einsum("mkb,k->mb", s, omega)
+
+
+def _pad_to(a, multiple, axis):
+    size = a.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def cser_matmul(codes, omega, x, *, bm: int = 64, bn: int = 128, interpret: bool = True):
+    """Quantized matmul via the CSER one-hot factorization.
+
+    Args:
+      codes: (m, n) int32, values in [0, K).
+      omega: (K,) f32 codebook.
+      x: (n, b) f32 input block.
+      bm, bn: VMEM block shape of the codes tile.
+      interpret: must stay True off-TPU (see module docstring).
+
+    Returns (m, b) f32, equal to ``omega[codes] @ x`` up to float
+    associativity.
+    """
+    m, n = codes.shape
+    nb, b = x.shape
+    assert n == nb, f"shape mismatch: codes {codes.shape} x {x.shape}"
+    k = omega.shape[0]
+    bm_eff = min(bm, m)
+    bn_eff = min(bn, n)
+    codes_p = _pad_to(_pad_to(codes, bm_eff, 0), bn_eff, 1)
+    # Padding codes with K (an out-of-range id that one-hot maps to zero
+    # rows) keeps padded columns inert; padded x rows are zero anyway.
+    if codes_p.shape != codes.shape:
+        mask = jnp.zeros(codes_p.shape, jnp.bool_).at[:m, :n].set(True)
+        codes_p = jnp.where(mask, codes_p, k)
+    x_p = _pad_to(x, bn_eff, 0)
+    mp, np_ = codes_p.shape
+    grid = (mp // bm_eff, np_ // bn_eff)
+    out = pl.pallas_call(
+        functools.partial(_cser_kernel, k=k + 1),
+        out_shape=jax.ShapeDtypeStruct((mp, b), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_eff, bn_eff), lambda i, j: (i, j)),
+            pl.BlockSpec((k + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((bn_eff, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_eff, b), lambda i, j: (i, 0)),
+        interpret=interpret,
+    )(codes_p, jnp.concatenate([omega.astype(jnp.float32), jnp.zeros((1,), jnp.float32)]), x_p.astype(jnp.float32))
+    return out[:m]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, k: int, b: int) -> int:
+    """Estimated VMEM bytes of one kernel step (used by DESIGN.md §Perf):
+    codes block (int32) + one-hot expansion + x tile + S + output block.
+    """
+    codes = bm * bn * 4
+    onehot = bm * bn * (k + 1) * 4
+    x = bn * b * 4
+    s = bm * (k + 1) * b * 4
+    out = bm * b * 4
+    return codes + onehot + x + s + out

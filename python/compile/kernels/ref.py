@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package is validated against these references
+by ``python/tests/test_kernels.py`` (hypothesis shape/dtype sweeps).
+"""
+
+import jax.numpy as jnp
+
+
+def decode(codes, omega):
+    """Reconstruct the dense weight matrix W = omega[codes].
+
+    codes: (m, n) int32 in [0, K); omega: (K,) float.
+    """
+    return jnp.take(omega, codes, axis=0)
+
+
+def quantized_matmul_ref(codes, omega, x):
+    """Reference Y = W @ X with W = omega[codes].
+
+    codes: (m, n) int32; omega: (K,); x: (n, b). Returns (m, b) in f32.
+
+    This is the decode-then-multiply baseline the paper's §V-B side note
+    benchmarks (and finds slower on CPUs): every element is decoded before
+    the MAC.
+    """
+    w = decode(codes, omega.astype(jnp.float32))
+    return w @ x.astype(jnp.float32)
+
+
+def cser_partial_sums_ref(codes, x, k):
+    """Reference shared-value partial sums S[m, k, b] = sum_j 1[C_mj = k] x_jb.
+
+    The distributive-law intermediate of the paper's Algorithm 3/4, in its
+    TPU (one-hot contraction) form.
+    """
+    onehot = jnp.asarray(codes[:, :, None] == jnp.arange(k)[None, None, :], jnp.float32)
+    return jnp.einsum("mnk,nb->mkb", onehot, x.astype(jnp.float32))
+
+
+def cser_matmul_ref(codes, omega, x):
+    """Reference CSER-form product: factor through the codebook.
+
+    Y[m, b] = sum_k omega[k] * S[m, k, b]; numerically equal to
+    quantized_matmul_ref (associativity aside).
+    """
+    s = cser_partial_sums_ref(codes, x, omega.shape[0])
+    return jnp.einsum("mkb,k->mb", s, omega.astype(jnp.float32))

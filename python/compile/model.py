@@ -1,0 +1,60 @@
+"""L2: the JAX model — an MLP classifier (LeNet-300-100 shape) with two
+forward paths:
+
+* ``mlp_dense`` — plain dense matmuls (the baseline the paper compares
+  against);
+* ``mlp_cser`` — every layer's matmul runs through the L1 Pallas kernel
+  (``kernels.cser_matmul``), i.e. the quantized weights are consumed as
+  (codes, codebook) pairs and the product is factored through the codebook
+  exactly as CER/CSER factor it on CPU.
+
+Both paths are lowered by ``aot.py`` to HLO text artifacts that the Rust
+runtime executes via PJRT; Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cser_matmul
+
+#: Layer sizes of the e2e model (LeNet-300-100, the paper's Table V MLP).
+LAYER_SIZES = [(300, 784), (100, 300), (10, 100)]
+
+
+def init_params(key, sizes=None):
+    """He-initialized [(w, b)] with w of shape (out, in)."""
+    sizes = sizes or LAYER_SIZES
+    params = []
+    for out, inp in sizes:
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (out, inp), jnp.float32) * jnp.sqrt(2.0 / inp)
+        params.append((w, jnp.zeros((out,), jnp.float32)))
+    return params
+
+
+def mlp_dense(x, params):
+    """Dense forward: x (batch, in) → logits (batch, 10)."""
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w.T + b)
+    w, b = params[-1]
+    return h @ w.T + b
+
+
+def mlp_cser(x, qparams, *, interpret=True, bm=64, bn=128):
+    """Quantized forward through the Pallas kernel.
+
+    qparams: [(codes int32 (out, in), omega f32 (K,), bias f32 (out,))].
+    The kernel computes W @ X with X = h.T, so h @ W.T = (W @ h.T).T.
+    """
+    h = x
+    last = len(qparams) - 1
+    for i, (codes, omega, b) in enumerate(qparams):
+        z = cser_matmul(codes, omega, h.T, bm=bm, bn=bn, interpret=interpret).T + b
+        h = z if i == last else jax.nn.relu(z)
+    return h
+
+
+def accuracy(logits, labels):
+    """Top-1 accuracy."""
+    return jnp.mean(jnp.argmax(logits, axis=-1) == labels)

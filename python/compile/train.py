@@ -1,0 +1,201 @@
+"""Build-time training of the e2e model on a synthetic-digits workload,
+followed by the paper's §V-C compression pipeline (prune → k-means cluster)
+and export of everything the Rust side needs.
+
+Run once by ``make artifacts`` (skipped if the outputs already exist).
+Python is never on the request path.
+
+Exports under ``artifacts/mlp/``:
+
+* ``manifest.txt``      — key/value lines (dims, batch, accuracies, seed).
+* ``fc{i}_w.f32``       — trained float weights, row-major (out × in) LE f32.
+* ``fc{i}_b.f32``       — biases.
+* ``fcq{i}_w.f32``      — compressed (pruned + clustered) weights, dense.
+* ``test_x.f32``        — test inputs (n_test × 784).
+* ``test_y.i32``        — test labels (int32).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import LAYER_SIZES, accuracy, init_params, mlp_dense
+
+SEED = 20180707  # arXiv year/month of the paper + determinism
+
+
+def make_dataset(n_train=8000, n_test=2000, seed=SEED):
+    """Synthetic digits: 10 smooth 28×28 class prototypes + noise.
+
+    Prototypes are low-frequency patterns (7×7 Gaussian fields upsampled
+    4×), so the task has the structure of a tiny image problem while being
+    fully reproducible without external data (DESIGN.md §4).
+    """
+    rng = np.random.default_rng(seed)
+    protos = np.kron(rng.normal(size=(10, 7, 7)), np.ones((4, 4))).reshape(10, 784)
+    protos = protos / np.linalg.norm(protos, axis=1, keepdims=True) * 10.0
+
+    def sample(n):
+        y = rng.integers(0, 10, n)
+        x = protos[y] + rng.normal(size=(n, 784)) * 1.5
+        return x.astype(np.float32), y.astype(np.int32)
+
+    xtr, ytr = sample(n_train)
+    xte, yte = sample(n_test)
+    return (xtr, ytr), (xte, yte)
+
+
+def train(xtr, ytr, steps=600, batch=128, lr=0.05, momentum=0.9, seed=SEED):
+    """Plain SGD+momentum on softmax cross-entropy."""
+    params = init_params(jax.random.PRNGKey(seed))
+    vel = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+
+    def loss_fn(params, x, y):
+        logits = mlp_dense(x, params)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    @jax.jit
+    def step(params, vel, x, y):
+        g = jax.grad(loss_fn)(params, x, y)
+        new_vel = [
+            (momentum * vw - lr * gw, momentum * vb - lr * gb)
+            for (vw, vb), (gw, gb) in zip(vel, g)
+        ]
+        new_params = [
+            (w + vw, b + vb) for (w, b), (vw, vb) in zip(params, new_vel)
+        ]
+        return new_params, new_vel
+
+    rng = np.random.default_rng(seed + 1)
+    n = xtr.shape[0]
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, vel = step(params, vel, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+    return params
+
+
+def finetune_pruned(params, masks, xtr, ytr, steps=300, batch=128, lr=0.02, momentum=0.9, seed=SEED + 7):
+    """Masked fine-tuning after pruning (§V-C / Deep Compression stage 2b:
+    'retrain the surviving connections'). Gradients and weights are
+    projected onto the pruning mask every step."""
+    masks = [jnp.asarray(m) for m in masks]
+    params = [(jnp.asarray(w) * m, jnp.asarray(b)) for (w, b), m in zip(params, masks)]
+    vel = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+
+    def loss_fn(params, x, y):
+        logits = mlp_dense(x, params)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    @jax.jit
+    def step(params, vel, x, y):
+        g = jax.grad(loss_fn)(params, x, y)
+        new_vel = [
+            (momentum * vw - lr * gw * m, momentum * vb - lr * gb)
+            for (vw, vb), (gw, gb), m in zip(vel, g, masks)
+        ]
+        new_params = [
+            ((w + vw) * m, b + vb)
+            for (w, b), (vw, vb), m in zip(params, new_vel, masks)
+        ]
+        return new_params, new_vel
+
+    rng = np.random.default_rng(seed)
+    n = xtr.shape[0]
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, vel = step(params, vel, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+    return params
+
+
+def magnitude_prune(w, keep):
+    """Keep the `keep` fraction of largest-|w| entries (paper §V-C step 2)."""
+    flat = np.abs(w).ravel()
+    k = max(1, int(round(flat.size * keep)))
+    thresh = np.partition(flat, flat.size - k)[flat.size - k]
+    return np.where((np.abs(w) >= thresh) & (w != 0.0), w, 0.0).astype(np.float32)
+
+
+def kmeans_1d(values, k, iters=25):
+    """1-D Lloyd on the non-zero weights (Deep Compression's quantizer)."""
+    v = np.sort(values.astype(np.float64))
+    cent = np.linspace(v[0], v[-1], k)
+    for _ in range(iters):
+        bounds = (cent[1:] + cent[:-1]) / 2
+        assign = np.searchsorted(bounds, v)
+        new = np.array([v[assign == i].mean() if (assign == i).any() else cent[i] for i in range(k)])
+        if np.allclose(new, cent, atol=1e-12):
+            break
+        cent = new
+    return cent.astype(np.float32)
+
+
+def compress(params, xtr, ytr, keep=0.10, clusters=8, finetune_steps=400):
+    """The §V-C pipeline: prune → masked fine-tune → cluster (biases
+    untouched)."""
+    pruned_ws = [magnitude_prune(np.asarray(w), keep) for w, _ in params]
+    masks = [(w != 0.0).astype(np.float32) for w in pruned_ws]
+    tuned = finetune_pruned(
+        [(w, b) for w, (_, b) in zip(pruned_ws, params)],
+        masks,
+        xtr,
+        ytr,
+        steps=finetune_steps,
+    )
+    out = []
+    for w, b in tuned:
+        wn = np.asarray(w)
+        nz = wn[wn != 0.0]
+        cent = kmeans_1d(nz, clusters)
+        # Snap non-zeros to nearest centroid.
+        idx = np.abs(nz[:, None] - cent[None, :]).argmin(axis=1)
+        snapped = wn.copy()
+        snapped[snapped != 0.0] = cent[idx]
+        out.append((snapped.astype(np.float32), np.asarray(b)))
+    return out
+
+
+def export(out_dir, params, qparams, test, accs, batch):
+    os.makedirs(out_dir, exist_ok=True)
+    (xte, yte) = test
+    for i, ((w, b), (qw, _)) in enumerate(zip(params, qparams)):
+        np.asarray(w, np.float32).tofile(os.path.join(out_dir, f"fc{i}_w.f32"))
+        np.asarray(b, np.float32).tofile(os.path.join(out_dir, f"fc{i}_b.f32"))
+        qw.tofile(os.path.join(out_dir, f"fcq{i}_w.f32"))
+    xte.astype(np.float32).tofile(os.path.join(out_dir, "test_x.f32"))
+    yte.astype(np.int32).tofile(os.path.join(out_dir, "test_y.i32"))
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"layers {len(params)}\n")
+        for i, (out, inp) in enumerate(LAYER_SIZES):
+            f.write(f"layer{i} {out} {inp}\n")
+        f.write(f"test_n {xte.shape[0]}\n")
+        f.write(f"batch {batch}\n")
+        f.write(f"accuracy_float {accs[0]:.4f}\n")
+        f.write(f"accuracy_quant {accs[1]:.4f}\n")
+        f.write(f"seed {SEED}\n")
+
+
+def run(out_dir, batch=32, steps=600):
+    """Full build-time pipeline; returns (params, qparams, accuracies)."""
+    (xtr, ytr), (xte, yte) = make_dataset()
+    params = train(xtr, ytr, steps=steps)
+    logits = mlp_dense(jnp.asarray(xte), params)
+    acc_float = float(accuracy(logits, jnp.asarray(yte)))
+    qparams = compress(params, xtr, ytr)
+    qlogits = mlp_dense(jnp.asarray(xte), [(jnp.asarray(w), jnp.asarray(b)) for w, b in qparams])
+    acc_quant = float(accuracy(qlogits, jnp.asarray(yte)))
+    export(out_dir, params, qparams, (xte, yte), (acc_float, acc_quant), batch)
+    return params, qparams, (acc_float, acc_quant)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/mlp")
+    ap.add_argument("--steps", type=int, default=600)
+    args = ap.parse_args()
+    _, _, accs = run(args.out, steps=args.steps)
+    print(f"float accuracy {accs[0]:.4f}  compressed accuracy {accs[1]:.4f}")

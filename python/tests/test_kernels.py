@@ -1,0 +1,120 @@
+"""L1 correctness: the Pallas CSER kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, codebook sizes, block shapes and batch sizes;
+assert_allclose against ref.py is the core correctness signal of the
+compile path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    cser_matmul,
+    cser_matmul_ref,
+    decode,
+    quantized_matmul_ref,
+    vmem_footprint_bytes,
+)
+
+
+def make_case(rng, m, n, k, b):
+    codes = rng.integers(0, k, (m, n)).astype(np.int32)
+    omega = (rng.normal(size=k) * 0.5).astype(np.float32)
+    x = rng.normal(size=(n, b)).astype(np.float32)
+    return jnp.asarray(codes), jnp.asarray(omega), jnp.asarray(x)
+
+
+def test_paper_example_row():
+    # Row 2 of the paper's M with a = (1..12): 4 * 40 = 160.
+    row = np.array([[4, 4, 0, 0, 0, 4, 0, 0, 4, 4, 0, 4]], np.float32)
+    omega, codes = np.unique(row, return_inverse=True)
+    codes = codes.reshape(row.shape).astype(np.int32)
+    x = np.arange(1, 13, dtype=np.float32)[:, None]
+    y = cser_matmul(jnp.asarray(codes), jnp.asarray(omega), jnp.asarray(x), bm=4, bn=8)
+    assert float(y[0, 0]) == 160.0
+
+
+def test_oracles_agree():
+    rng = np.random.default_rng(0)
+    codes, omega, x = make_case(rng, 37, 53, 16, 3)
+    np.testing.assert_allclose(
+        np.asarray(quantized_matmul_ref(codes, omega, x)),
+        np.asarray(cser_matmul_ref(codes, omega, x)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_decode_reconstructs():
+    rng = np.random.default_rng(1)
+    codes, omega, _ = make_case(rng, 10, 20, 7, 1)
+    w = np.asarray(decode(codes, omega))
+    assert w.shape == (10, 20)
+    np.testing.assert_array_equal(w, np.asarray(omega)[np.asarray(codes)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 90),
+    k=st.integers(1, 40),
+    b=st.integers(1, 5),
+    bm=st.sampled_from([4, 16, 64]),
+    bn=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_oracle(m, n, k, b, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    codes, omega, x = make_case(rng, m, n, k, b)
+    got = np.asarray(cser_matmul(codes, omega, x, bm=bm, bn=bn))
+    want = np.asarray(quantized_matmul_ref(codes, omega, x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_zero_input_gives_zero(k, seed):
+    rng = np.random.default_rng(seed)
+    codes, omega, _ = make_case(rng, 9, 17, k, 2)
+    x = jnp.zeros((17, 2), jnp.float32)
+    got = np.asarray(cser_matmul(codes, omega, x, bm=4, bn=8))
+    assert np.all(got == 0.0)
+
+
+def test_kernel_non_divisible_shapes_padded_correctly():
+    # Shapes chosen so both axes need padding.
+    rng = np.random.default_rng(7)
+    codes, omega, x = make_case(rng, 65, 129, 5, 2)
+    got = np.asarray(cser_matmul(codes, omega, x, bm=64, bn=128))
+    want = np.asarray(quantized_matmul_ref(codes, omega, x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_single_value_codebook():
+    # K = 1: the whole matrix shares one value -> rank-1 output.
+    codes = jnp.zeros((6, 10), jnp.int32)
+    omega = jnp.asarray([2.5], jnp.float32)
+    x = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    got = np.asarray(cser_matmul(codes, omega, x, bm=4, bn=8))
+    want = 2.5 * np.asarray(x).sum(axis=0, keepdims=True).repeat(6, axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_vmem_footprint_under_budget():
+    # The default (bm=64, bn=128) schedule with K=128, b=32 must fit a TPU
+    # core's VMEM (~16 MB) with double buffering (x2).
+    fp = vmem_footprint_bytes(64, 128, 128, 32)
+    assert 2 * fp < 16 * 1024 * 1024, f"VMEM footprint {fp} bytes too large"
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kernel_dtype_passthrough(dtype):
+    rng = np.random.default_rng(3)
+    codes, omega, x = make_case(rng, 8, 8, 4, 1)
+    y = cser_matmul(codes, omega, x.astype(dtype), bm=4, bn=8)
+    assert y.dtype == jnp.float32

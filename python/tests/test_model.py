@@ -1,0 +1,111 @@
+"""L2 correctness: MLP shapes, dense-vs-CSER path agreement, and the
+training/compression pipeline."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import train as train_mod
+from compile.aot import codes_from_quantized
+from compile.model import LAYER_SIZES, accuracy, init_params, mlp_cser, mlp_dense
+
+
+def test_init_shapes():
+    params = init_params(jax.random.PRNGKey(0))
+    assert [(w.shape, b.shape) for w, b in params] == [
+        ((300, 784), (300,)),
+        ((100, 300), (100,)),
+        ((10, 100), (10,)),
+    ]
+
+
+def test_dense_forward_shape():
+    params = init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 784))
+    assert mlp_dense(x, params).shape == (4, 10)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000), batch=st.integers(1, 8))
+def test_cser_path_matches_dense_path(seed, batch):
+    """Quantize each layer to a small codebook; both forward paths must
+    produce identical logits (up to float assoc.)."""
+    rng = np.random.default_rng(seed)
+    sizes = [(13, 29), (7, 13), (4, 7)]
+    params = []
+    qparams = []
+    for out, inp in sizes:
+        grid = (rng.normal(size=5) * 0.3).astype(np.float32)
+        w = grid[rng.integers(0, 5, (out, inp))]
+        b = (rng.normal(size=out) * 0.1).astype(np.float32)
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+        codes, omega = codes_from_quantized(w)
+        qparams.append((jnp.asarray(codes), jnp.asarray(omega), jnp.asarray(b)))
+    x = jnp.asarray(rng.normal(size=(batch, 29)).astype(np.float32))
+
+    import compile.model as model_mod
+
+    old = model_mod.LAYER_SIZES
+    dense = mlp_dense(x, params)
+    cser = mlp_cser(x, qparams, bm=8, bn=16)
+    assert old is model_mod.LAYER_SIZES  # no global mutation
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(cser), rtol=2e-4, atol=2e-4)
+
+
+def test_codes_from_quantized_roundtrip():
+    rng = np.random.default_rng(2)
+    grid = np.array([-0.2, 0.0, 0.4], np.float32)
+    w = grid[rng.integers(0, 3, (6, 9))]
+    codes, omega = codes_from_quantized(w)
+    np.testing.assert_array_equal(omega[codes], w)
+    assert omega.dtype == np.float32 and codes.dtype == np.int32
+
+
+def test_dataset_deterministic_and_separable():
+    (xtr, ytr), (xte, yte) = train_mod.make_dataset(n_train=512, n_test=256)
+    (xtr2, _), _ = train_mod.make_dataset(n_train=512, n_test=256)
+    np.testing.assert_array_equal(xtr, xtr2)
+    assert xtr.shape == (512, 784) and yte.shape == (256,)
+    # Nearest-prototype classification should beat chance by a lot.
+    protos = np.stack([xtr[ytr == c].mean(axis=0) for c in range(10)])
+    pred = np.argmin(
+        ((xte[:, None, :] - protos[None, :, :]) ** 2).sum(-1), axis=1
+    )
+    assert (pred == yte).mean() > 0.8
+
+
+def test_magnitude_prune_fraction():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(50, 40)).astype(np.float32)
+    p = train_mod.magnitude_prune(w, 0.1)
+    frac = (p != 0).mean()
+    assert abs(frac - 0.1) < 0.01
+
+
+def test_kmeans_1d_centroids_sorted_and_k():
+    rng = np.random.default_rng(4)
+    v = rng.normal(size=4000).astype(np.float32)
+    c = train_mod.kmeans_1d(v, 8)
+    assert c.shape == (8,)
+    assert np.all(np.diff(c) > 0)
+
+
+def test_small_train_run_learns():
+    (xtr, ytr), (xte, yte) = train_mod.make_dataset(n_train=2000, n_test=500)
+    params = train_mod.train(xtr, ytr, steps=150)
+    acc = float(accuracy(mlp_dense(jnp.asarray(xte), params), jnp.asarray(yte)))
+    assert acc > 0.9, f"accuracy {acc}"
+
+
+def test_compress_pipeline_preserves_most_accuracy():
+    (xtr, ytr), (xte, yte) = train_mod.make_dataset(n_train=2000, n_test=500)
+    params = train_mod.train(xtr, ytr, steps=150)
+    qparams = train_mod.compress(params, xtr, ytr, keep=0.15, clusters=8, finetune_steps=150)
+    qp = [(jnp.asarray(w), jnp.asarray(b)) for w, b in qparams]
+    acc = float(accuracy(mlp_dense(jnp.asarray(xte), qp), jnp.asarray(yte)))
+    assert acc > 0.85, f"compressed accuracy {acc}"
+    # Sparsity reached.
+    for w, _ in qparams:
+        assert (w != 0).mean() < 0.16
+        assert np.unique(w).size <= 10

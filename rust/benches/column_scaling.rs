@@ -1,0 +1,49 @@
+//! Fig. 5 in wall-clock: efficiency of the real kernels as the column
+//! dimension grows (H = 4, p₀ = 0.55, m = 100 — the paper's operating
+//! point). The modeled version is `repro figure5`; this is the honest
+//! hardware measurement of the same sweep.
+//!
+//! Run: `cargo bench --bench column_scaling`
+
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::stats::synth::PlanePoint;
+use cer::util::bench::time_median_ns;
+use cer::util::Rng;
+
+fn main() {
+    let point = PlanePoint::synthesize(4.0, 0.55, 128).expect("feasible");
+    let mut rng = Rng::new(0xF1635);
+    println!(
+        "{:>7} {:>12} {:>12} {:>12} {:>12}   (ns/matvec; ratios vs dense)",
+        "n", "dense", "CSR", "CER", "CSER"
+    );
+    for n in [64usize, 256, 1024, 4096, 16384, 65536] {
+        let mat = point.sample_matrix(100, n, &mut rng);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut y = vec![0.0f32; 100];
+        let mut med = [0.0f64; 4];
+        for (i, kind) in FormatKind::ALL.iter().enumerate() {
+            let enc = AnyMatrix::encode(*kind, &mat);
+            let elems = 100 * n;
+            let batch = (2_000_000 / elems).max(1);
+            med[i] = time_median_ns(2, 9, || {
+                for _ in 0..batch {
+                    enc.matvec(&x, &mut y);
+                }
+                std::hint::black_box(&y);
+            }) / batch as f64;
+        }
+        println!(
+            "{:>7} {:>12.0} {:>12.0} {:>12.0} {:>12.0}   x{:.2} x{:.2} x{:.2}",
+            n,
+            med[0],
+            med[1],
+            med[2],
+            med[3],
+            med[0] / med[1],
+            med[0] / med[2],
+            med[0] / med[3],
+        );
+    }
+}

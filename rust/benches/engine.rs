@@ -1,0 +1,92 @@
+//! Coordinator benchmarks: engine forward latency per backend/batch size,
+//! and server throughput through the dynamic batcher. Needs
+//! `make artifacts` (skips gracefully otherwise).
+//!
+//! Run: `cargo bench --bench engine`
+
+use std::path::Path;
+
+use cer::coordinator::batcher::BatcherConfig;
+use cer::coordinator::{Backend, Engine, InferenceServer, Objective, ServerConfig};
+use cer::formats::FormatKind;
+use cer::runtime::MlpArtifacts;
+use cer::util::bench::{bench, fmt_ns, time_median_ns};
+
+fn main() {
+    let Ok(art) = MlpArtifacts::load(Path::new("artifacts")) else {
+        eprintln!("artifacts/ not found — run `make artifacts` first; skipping engine bench");
+        return;
+    };
+
+    // Native engine, each fixed format + auto selection.
+    for kind in FormatKind::ALL {
+        let layers: Vec<(String, cer::formats::Dense, Vec<f32>)> = art
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (format!("fc{i}"), l.quantized.clone(), l.bias.clone()))
+            .collect();
+        let mut engine = Engine::native_fixed(layers, kind);
+        for batch in [1usize, 32] {
+            let x = vec![0.1f32; batch * art.in_dim()];
+            let r = bench(
+                &format!("engine/native-{}/batch{batch}", kind.name()),
+                3,
+                11,
+                || {
+                    let y = engine.forward(&x, batch).unwrap();
+                    std::hint::black_box(&y);
+                },
+            );
+            let _ = r;
+        }
+    }
+
+    // XLA backends at their static batch.
+    for backend in [Backend::XlaDense, Backend::XlaCser] {
+        let mut engine = Engine::from_artifacts(&art, backend, Objective::Energy).unwrap();
+        let batch = engine.required_batch().unwrap();
+        let x = vec![0.1f32; batch * art.in_dim()];
+        let per = time_median_ns(2, 9, || {
+            let y = engine.forward(&x, batch).unwrap();
+            std::hint::black_box(&y);
+        });
+        println!(
+            "engine/{backend:?}/batch{batch}: {} per forward ({} per sample)",
+            fmt_ns(per),
+            fmt_ns(per / batch as f64)
+        );
+    }
+
+    // Server throughput (closed-loop flood).
+    for max_batch in [1usize, 8, 32, 128] {
+        let art_clone = art.clone();
+        let srv = InferenceServer::spawn(
+            move || Engine::from_artifacts(&art_clone, Backend::Native, Objective::Energy),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_delay_us: 500,
+                },
+            },
+        );
+        let n = 4000usize;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let s = i % art.n_test;
+                srv.submit(art.test_x[s * art.in_dim()..(s + 1) * art.in_dim()].to_vec())
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "server/max_batch={max_batch:<4} {:>9.0} req/s  ({})",
+            n as f64 / dt,
+            srv.metrics().summary()
+        );
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,57 @@
+//! Kernel-level matvec benchmarks: the real-wallclock numbers behind the
+//! paper's time criterion (Table III middle rows), across operating points
+//! of the (H, p₀) plane.
+//!
+//! Run: `cargo bench --bench matvec`
+
+use cer::formats::FormatKind;
+use cer::kernels::{AnyMatrix, PackedDense};
+use cer::stats::synth::PlanePoint;
+use cer::util::bench::bench;
+use cer::util::Rng;
+
+fn bench_point(name: &str, h: f64, p0: f64, m: usize, n: usize, k: usize, rng: &mut Rng) {
+    let Some(point) = PlanePoint::synthesize(h, p0, k) else {
+        println!("{name}: infeasible point (H={h}, p0={p0})");
+        return;
+    };
+    let mat = point.sample_matrix(m, n, rng);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let mut y = vec![0.0f32; m];
+    println!("--- {name}: {m}x{n}, K={k}, H={h}, p0={p0} ---");
+    let mut dense_med = 0.0;
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &mat);
+        let r = bench(&format!("{name}/{}", kind.name()), 3, 15, || {
+            enc.matvec(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        if kind == FormatKind::Dense {
+            dense_med = r.median_ns();
+        } else {
+            println!("    speedup vs dense: x{:.2}", dense_med / r.median_ns());
+        }
+    }
+    // The packed-dense decode path (§V-B side note).
+    let packed = PackedDense::from_dense(&mat);
+    let r = bench(&format!("{name}/packed-dense"), 3, 15, || {
+        packed.matvec(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "    slowdown vs dense: {:+.1}%",
+        (r.median_ns() / dense_med - 1.0) * 100.0
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE9C);
+    // Deep compression regime (AlexNet-DC stats).
+    bench_point("alexnet-dc-point", 0.9, 0.89, 512, 4096, 32, &mut rng);
+    // §V-B 7-bit uniform quantization regime (DenseNet stats).
+    bench_point("densenet-point", 3.73, 0.36, 512, 1327, 128, &mut rng);
+    // VGG16 stats (low sparsity, moderate entropy).
+    bench_point("vgg16-point", 4.8, 0.07, 512, 4096, 128, &mut rng);
+    // Fig. 5 operating point.
+    bench_point("fig5-point", 4.0, 0.55, 100, 4096, 128, &mut rng);
+}

@@ -1,0 +1,56 @@
+//! Network-level benchmarks (Tables II–IV): representative full-size layers
+//! of each §V-B network, all four formats, real kernel wall-clock.
+//!
+//! Run: `cargo bench --bench networks`
+
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::networks::weights::{synthesize_quantized_layer, TargetStats};
+use cer::networks::zoo::{LayerKind, LayerSpec, NetworkSpec};
+use cer::util::bench::bench;
+use cer::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x2E70);
+    for net in ["vgg16", "resnet152", "densenet"] {
+        let spec = NetworkSpec::by_name(net).unwrap();
+        let target = TargetStats::table_iv(net).unwrap();
+        // Largest conv + largest fc layer of each network.
+        let mut layers: Vec<&LayerSpec> = Vec::new();
+        if let Some(c) = spec
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .max_by_key(|l| l.params())
+        {
+            layers.push(c);
+        }
+        if let Some(f) = spec
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Fc)
+            .max_by_key(|l| l.params())
+        {
+            layers.push(f);
+        }
+        for l in layers {
+            let (mat, _) = synthesize_quantized_layer(l, target, &mut rng);
+            let x: Vec<f32> = (0..l.cols).map(|_| rng.f32()).collect();
+            let mut y = vec![0.0f32; l.rows];
+            println!("--- {net}/{} ({}x{}) ---", l.name, l.rows, l.cols);
+            let mut dense_med = 0.0;
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &mat);
+                let r = bench(&format!("{net}/{}/{}", l.name, kind.name()), 2, 9, || {
+                    enc.matvec(&x, &mut y);
+                    std::hint::black_box(&y);
+                });
+                if kind == FormatKind::Dense {
+                    dense_med = r.median_ns();
+                } else {
+                    println!("    vs dense: x{:.2}", dense_med / r.median_ns());
+                }
+            }
+        }
+    }
+}

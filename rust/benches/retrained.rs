@@ -1,0 +1,53 @@
+//! Tables V/VI in wall-clock: the §V-C retrained networks (prune→cluster
+//! pipeline) benchmarked with the real kernels, matvec per layer weighted
+//! by patches.
+//!
+//! Run: `cargo bench --bench retrained`
+
+use cer::compress::pipeline::CompressionPipeline;
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::networks::weights::synthesize_float_layer;
+use cer::networks::zoo::NetworkSpec;
+use cer::util::bench::time_median_ns;
+use cer::util::Rng;
+
+fn main() {
+    let nets = [
+        ("vgg-cifar10", 0.0428),
+        ("lenet-300-100", 0.0905),
+        ("lenet5", 0.019),
+    ];
+    for (net, keep) in nets {
+        let spec = NetworkSpec::by_name(net).unwrap();
+        let pipeline = CompressionPipeline::deep_compression(keep, 8);
+        let mut rng = Rng::new(0x5C5C);
+        // Patch-weighted per-network totals (one matvec per layer).
+        let mut totals = [0.0f64; 4];
+        for l in &spec.layers {
+            let w = synthesize_float_layer(l, 0.05, 0.05, 4.0, &mut rng);
+            let q = pipeline.run(&w).compressed;
+            let x: Vec<f32> = (0..l.cols).map(|_| rng.f32()).collect();
+            let mut y = vec![0.0f32; l.rows];
+            for (i, kind) in FormatKind::ALL.iter().enumerate() {
+                let enc = AnyMatrix::encode(*kind, &q);
+                let elems = l.rows * l.cols;
+                let batch = (500_000 / elems.max(1)).max(1);
+                let per = time_median_ns(1, 7, || {
+                    for _ in 0..batch {
+                        enc.matvec(&x, &mut y);
+                    }
+                    std::hint::black_box(&y);
+                }) / batch as f64;
+                totals[i] += per * l.patches as f64;
+            }
+        }
+        println!(
+            "{net:<14} dense {:>10.1}µs  CSR x{:<5.2} CER x{:<5.2} CSER x{:<5.2}  (full-net matvec wallclock)",
+            totals[0] / 1e3,
+            totals[0] / totals[1],
+            totals[0] / totals[2],
+            totals[0] / totals[3],
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! 1-D k-means (Lloyd's algorithm) weight clustering — the quantization
+//! stage of Deep Compression [26], used by the §V-C AlexNet experiment.
+//!
+//! Operates on the non-zero weights only (zeros stay zero, matching the
+//! prune-then-cluster pipeline). For 1-D data Lloyd's updates are exact and
+//! cheap: sort once, then iterate centroid/boundary refinement.
+
+use crate::formats::Dense;
+
+/// k-means clustering of the non-zero weights of a layer.
+#[derive(Clone, Debug)]
+pub struct KMeansQuantizer {
+    /// Cluster centroids, ascending.
+    pub centroids: Vec<f32>,
+}
+
+impl KMeansQuantizer {
+    /// Fit `k` clusters to the non-zero elements of `m` (linear
+    /// initialization over the value range, as in Deep Compression).
+    ///
+    /// `iters` Lloyd iterations (20 is plenty in 1-D).
+    pub fn fit(m: &Dense, k: usize, iters: usize) -> KMeansQuantizer {
+        let mut vals: Vec<f32> = m.data().iter().copied().filter(|&v| v != 0.0).collect();
+        assert!(!vals.is_empty(), "no non-zero weights to cluster");
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        let k = k.min(vals.len());
+        let (lo, hi) = (vals[0] as f64, vals[vals.len() - 1] as f64);
+        let mut centroids: Vec<f64> = if k == 1 {
+            vec![(lo + hi) / 2.0]
+        } else {
+            (0..k)
+                .map(|i| lo + (hi - lo) * i as f64 / (k - 1) as f64)
+                .collect()
+        };
+        for _ in 0..iters {
+            // Assignment boundaries are centroid midpoints (1-D Voronoi).
+            let mut sums = vec![0.0f64; k];
+            let mut counts = vec![0usize; k];
+            let mut c = 0usize;
+            for &v in &vals {
+                let v = v as f64;
+                while c + 1 < k && (centroids[c] + centroids[c + 1]) / 2.0 < v {
+                    c += 1;
+                }
+                // `vals` is sorted, so the cluster index is monotone — but a
+                // centroid may move behind us; rescan left if needed.
+                while c > 0 && (centroids[c - 1] + centroids[c]) / 2.0 > v {
+                    c -= 1;
+                }
+                sums[c] += v;
+                counts[c] += 1;
+            }
+            let mut moved = 0.0f64;
+            for i in 0..k {
+                if counts[i] > 0 {
+                    let new = sums[i] / counts[i] as f64;
+                    moved += (new - centroids[i]).abs();
+                    centroids[i] = new;
+                }
+            }
+            if moved < 1e-12 {
+                break;
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        centroids.dedup();
+        KMeansQuantizer {
+            centroids: centroids.into_iter().map(|c| c as f32).collect(),
+        }
+    }
+
+    /// Nearest centroid of `v` (zeros pass through unquantized).
+    pub fn quantize(&self, v: f32) -> f32 {
+        if v == 0.0 {
+            return 0.0;
+        }
+        // Binary search for nearest centroid.
+        let c = &self.centroids;
+        match c.binary_search_by(|p| p.partial_cmp(&v).expect("no NaN")) {
+            Ok(i) => c[i],
+            Err(i) => {
+                if i == 0 {
+                    c[0]
+                } else if i == c.len() {
+                    c[c.len() - 1]
+                } else if (v - c[i - 1]).abs() <= (c[i] - v).abs() {
+                    c[i - 1]
+                } else {
+                    c[i]
+                }
+            }
+        }
+    }
+
+    /// Quantize a whole matrix (zeros preserved).
+    pub fn quantize_matrix(&self, m: &Dense) -> Dense {
+        m.map(|v| self.quantize(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::codebook::frequency_codebook;
+    use crate::util::Rng;
+
+    #[test]
+    fn clusters_separate_modes() {
+        // Two well-separated value clumps → centroids near each.
+        let data: Vec<f32> = (0..50)
+            .map(|i| if i % 2 == 0 { 1.0 + (i as f32) * 1e-3 } else { -1.0 - (i as f32) * 1e-3 })
+            .collect();
+        let m = Dense::from_vec(5, 10, data);
+        let q = KMeansQuantizer::fit(&m, 2, 30);
+        assert_eq!(q.centroids.len(), 2);
+        assert!((q.centroids[0] + 1.02).abs() < 0.03, "{:?}", q.centroids);
+        assert!((q.centroids[1] - 1.02).abs() < 0.03);
+    }
+
+    #[test]
+    fn zeros_preserved() {
+        let m = Dense::from_rows(&[vec![0.0, 1.0, 0.0, 2.0]]);
+        let q = KMeansQuantizer::fit(&m, 2, 10);
+        let out = q.quantize_matrix(&m);
+        assert_eq!(out.get(0, 0), 0.0);
+        assert_eq!(out.get(0, 2), 0.0);
+        assert_eq!(out.nnz(), 2);
+    }
+
+    #[test]
+    fn reduces_cardinality_to_k_plus_zero() {
+        let mut rng = Rng::new(42);
+        let data: Vec<f32> = (0..5000)
+            .map(|_| if rng.f64() < 0.5 { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let m = Dense::from_vec(50, 100, data);
+        let q = KMeansQuantizer::fit(&m, 16, 25);
+        let out = q.quantize_matrix(&m);
+        let k = frequency_codebook(&out).len();
+        assert!(k <= 17, "K = {k}"); // 16 centroids + zero
+        assert!(k >= 10, "degenerate clustering: K = {k}");
+    }
+
+    #[test]
+    fn quantization_error_below_uniform() {
+        // k-means should beat a uniform grid on skewed data.
+        let mut rng = Rng::new(43);
+        let data: Vec<f32> = (0..4000)
+            .map(|_| {
+                let v = rng.normal() as f32;
+                v * v * v * 0.1 // heavy-tailed
+            })
+            .collect();
+        let m = Dense::from_vec(40, 100, data);
+        let km = KMeansQuantizer::fit(&m, 32, 30).quantize_matrix(&m);
+        let un = crate::stats::quantize::UniformQuantizer::fit(&m, 5).quantize_matrix(&m);
+        let mse = |a: &Dense| -> f64 {
+            a.data()
+                .iter()
+                .zip(m.data())
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(mse(&km) < mse(&un), "kmeans {} vs uniform {}", mse(&km), mse(&un));
+    }
+}

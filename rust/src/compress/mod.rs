@@ -1,0 +1,18 @@
+//! Network compression substrates used by the paper's §V-C experiments
+//! ("Compressed Neural Networks with Retraining"):
+//!
+//! * [`prune`] — magnitude pruning to a target sparsity (stand-in for the
+//!   variational-dropout sparsification of Molchanov et al. that the paper
+//!   uses; only the resulting sparsity level matters to the formats).
+//! * [`kmeans`] — 1-D k-means (Lloyd) weight clustering, the quantizer of
+//!   the Deep Compression pipeline (Han et al.).
+//! * [`pipeline`] — the full §V-C chain: prune → quantize non-zeros →
+//!   encode, with per-stage statistics.
+
+pub mod kmeans;
+pub mod pipeline;
+pub mod prune;
+
+pub use kmeans::KMeansQuantizer;
+pub use pipeline::{CompressionPipeline, CompressionReport};
+pub use prune::magnitude_prune;

@@ -1,0 +1,161 @@
+//! The §V-C compression pipeline: prune → quantize non-zeros → encode.
+//!
+//! Mirrors the four steps the paper lists: 1) pretrain (out of scope here —
+//! weights come in), 2) sparsify [27], 3) uniform/k-means quantize the
+//! non-zero values, 4) convert to the matrix representations and benchmark.
+
+use crate::compress::kmeans::KMeansQuantizer;
+use crate::compress::prune::{magnitude_prune, nonzero_fraction};
+use crate::costmodel::DistStats;
+use crate::formats::Dense;
+use crate::stats::quantize::UniformQuantizer;
+
+/// Which quantizer stage 3 uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantizerKind {
+    /// Uniform grid over the non-zero value range (`bits` wide).
+    Uniform { bits: u32 },
+    /// k-means clustering of the non-zero values (Deep Compression style).
+    KMeans { k: usize },
+    /// No quantization (pruning only).
+    None,
+}
+
+/// Configured compression pipeline.
+#[derive(Clone, Debug)]
+pub struct CompressionPipeline {
+    /// Fraction of weights kept non-zero by pruning (1.0 = no pruning).
+    pub keep_fraction: f64,
+    /// Quantizer applied to the surviving non-zeros.
+    pub quantizer: QuantizerKind,
+}
+
+/// Per-layer outcome of the pipeline.
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    /// The compressed (quantized, still-dense) matrix.
+    pub compressed: Dense,
+    /// Measured statistics after compression.
+    pub stats: DistStats,
+    /// Achieved sparsity (non-zero fraction).
+    pub nonzero_fraction: f64,
+    /// Mean squared quantization error vs. the input.
+    pub mse: f64,
+}
+
+impl CompressionPipeline {
+    /// Deep-Compression-like configuration: prune to `keep` then cluster
+    /// the survivors into `k` shared values.
+    pub fn deep_compression(keep: f64, k: usize) -> CompressionPipeline {
+        CompressionPipeline {
+            keep_fraction: keep,
+            quantizer: QuantizerKind::KMeans { k },
+        }
+    }
+
+    /// §V-C configuration: prune to `keep`, then uniform-quantize the
+    /// non-zero values to `bits`.
+    pub fn prune_uniform(keep: f64, bits: u32) -> CompressionPipeline {
+        CompressionPipeline {
+            keep_fraction: keep,
+            quantizer: QuantizerKind::Uniform { bits },
+        }
+    }
+
+    /// Run the pipeline on one layer.
+    pub fn run(&self, weights: &Dense) -> CompressionReport {
+        let pruned = if self.keep_fraction < 1.0 {
+            magnitude_prune(weights, self.keep_fraction)
+        } else {
+            weights.clone()
+        };
+        let compressed = match self.quantizer {
+            QuantizerKind::None => pruned,
+            QuantizerKind::Uniform { bits } => {
+                // Fit the grid to the *non-zero* values only; zeros stay 0.
+                let nz: Vec<f32> = pruned.data().iter().copied().filter(|&v| v != 0.0).collect();
+                if nz.is_empty() {
+                    pruned
+                } else {
+                    let (lo, hi) = nz
+                        .iter()
+                        .fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+                    let q = UniformQuantizer::over_range(lo, hi, 1usize << bits);
+                    pruned.map(|v| if v == 0.0 { 0.0 } else { q.quantize(v) })
+                }
+            }
+            QuantizerKind::KMeans { k } => {
+                if pruned.nnz() == 0 {
+                    pruned
+                } else {
+                    KMeansQuantizer::fit(&pruned, k, 25).quantize_matrix(&pruned)
+                }
+            }
+        };
+        let mse = compressed
+            .data()
+            .iter()
+            .zip(weights.data())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / (weights.rows() * weights.cols()) as f64;
+        CompressionReport {
+            nonzero_fraction: nonzero_fraction(&compressed),
+            stats: DistStats::measure(&compressed),
+            compressed,
+            mse,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian_layer(m: usize, n: usize, seed: u64) -> Dense {
+        let mut rng = Rng::new(seed);
+        Dense::from_vec(m, n, (0..m * n).map(|_| rng.normal() as f32 * 0.1).collect())
+    }
+
+    #[test]
+    fn prune_uniform_reaches_targets() {
+        let w = gaussian_layer(80, 120, 1);
+        let p = CompressionPipeline::prune_uniform(0.1, 5);
+        let r = p.run(&w);
+        assert!((r.nonzero_fraction - 0.1).abs() < 0.01);
+        assert!(r.stats.k <= 33, "K = {}", r.stats.k); // ≤32 values + 0
+        assert!(r.stats.p0 > 0.85);
+        // Entropy of a 90%-sparse 32-value matrix is low.
+        assert!(r.stats.entropy < 1.5, "H = {}", r.stats.entropy);
+    }
+
+    #[test]
+    fn deep_compression_reaches_low_entropy() {
+        let w = gaussian_layer(60, 100, 2);
+        // AlexNet-DC target: p0 = 0.89, few shared values.
+        let r = CompressionPipeline::deep_compression(0.11, 8).run(&w);
+        assert!((r.stats.p0 - 0.89).abs() < 0.01);
+        assert!(r.stats.entropy < 1.2, "H = {}", r.stats.entropy);
+    }
+
+    #[test]
+    fn lossless_when_disabled() {
+        let w = gaussian_layer(10, 10, 3);
+        let r = CompressionPipeline {
+            keep_fraction: 1.0,
+            quantizer: QuantizerKind::None,
+        }
+        .run(&w);
+        assert_eq!(r.compressed.data(), w.data());
+        assert_eq!(r.mse, 0.0);
+    }
+
+    #[test]
+    fn mse_grows_with_aggressiveness() {
+        let w = gaussian_layer(50, 100, 4);
+        let light = CompressionPipeline::prune_uniform(0.9, 7).run(&w).mse;
+        let heavy = CompressionPipeline::prune_uniform(0.05, 3).run(&w).mse;
+        assert!(heavy > light);
+    }
+}

@@ -1,0 +1,79 @@
+//! Magnitude pruning: zero out the smallest-magnitude fraction of weights.
+//!
+//! The paper's §V-C uses the variational-dropout sparsifier of [27] and the
+//! pruning stage of Deep Compression [26]; for the format benchmarks only
+//! the *resulting sparsity level* matters (Theorems 1/2 depend on the
+//! element distribution, not on how it was reached), so magnitude pruning
+//! to the paper's reported sparsity is an exact substitution (DESIGN.md §4).
+
+use crate::formats::Dense;
+
+/// Zero out weights so that only `keep_fraction` of the elements stay
+/// non-zero (the paper's `sp` column in Table V). Ties at the threshold are
+/// kept. Returns the pruned matrix.
+pub fn magnitude_prune(m: &Dense, keep_fraction: f64) -> Dense {
+    assert!(
+        (0.0..=1.0).contains(&keep_fraction),
+        "keep_fraction = {keep_fraction}"
+    );
+    let n = m.rows() * m.cols();
+    let keep = ((n as f64) * keep_fraction).round() as usize;
+    if keep == 0 {
+        return Dense::zeros(m.rows(), m.cols());
+    }
+    if keep >= n {
+        return m.clone();
+    }
+    // Threshold = keep-th largest |w|.
+    let mut mags: Vec<f32> = m.data().iter().map(|v| v.abs()).collect();
+    mags.select_nth_unstable_by(n - keep, |a, b| a.partial_cmp(b).expect("no NaN"));
+    let threshold = mags[n - keep];
+    m.map(|v| if v.abs() >= threshold && v != 0.0 { v } else { 0.0 })
+}
+
+/// Fraction of non-zero elements of `m` (the paper's sparsity column `sp`).
+pub fn nonzero_fraction(m: &Dense) -> f64 {
+    m.nnz() as f64 / (m.rows() * m.cols()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn keeps_requested_fraction() {
+        let mut rng = Rng::new(11);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        let m = Dense::from_vec(100, 100, data);
+        for keep in [0.05, 0.1, 0.5, 0.9] {
+            let p = magnitude_prune(&m, keep);
+            let frac = nonzero_fraction(&p);
+            assert!(
+                (frac - keep).abs() < 0.01,
+                "keep {keep} → frac {frac}"
+            );
+        }
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let m = Dense::from_rows(&[vec![0.1, -5.0, 0.2, 3.0, -0.05, 1.0]]);
+        let p = magnitude_prune(&m, 0.5);
+        assert_eq!(p.data(), &[0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn extremes() {
+        let m = Dense::from_rows(&[vec![1.0, 2.0]]);
+        assert_eq!(magnitude_prune(&m, 0.0).nnz(), 0);
+        assert_eq!(magnitude_prune(&m, 1.0).data(), m.data());
+    }
+
+    #[test]
+    fn already_sparse_matrix() {
+        let m = Dense::from_rows(&[vec![0.0, 0.0, 0.0, 7.0]]);
+        let p = magnitude_prune(&m, 0.25);
+        assert_eq!(p.data(), &[0.0, 0.0, 0.0, 7.0]);
+    }
+}

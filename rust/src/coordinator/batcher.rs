@@ -1,0 +1,193 @@
+//! Dynamic batching policy — pure, deterministic logic (time is an
+//! injected `u64` tick in microseconds) so the invariants are property-
+//! testable: FIFO order preserved, batches never exceed `max_batch`, a
+//! request never waits past its deadline once the batcher is polled.
+
+use std::collections::VecDeque;
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long (µs).
+    pub max_delay_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_delay_us: 2_000,
+        }
+    }
+}
+
+/// A queued request.
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued_us: u64,
+}
+
+/// FIFO dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a request observed at `now_us`.
+    pub fn push(&mut self, id: u64, payload: T, now_us: u64) {
+        self.queue.push_back(Pending {
+            id,
+            payload,
+            enqueued_us: now_us,
+        });
+    }
+
+    /// Deadline of the oldest request (µs tick at which a flush is due),
+    /// or None if empty.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|p| p.enqueued_us + self.cfg.max_delay_us)
+    }
+
+    /// Should a batch be cut right now?
+    pub fn ready(&self, now_us: u64) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.next_deadline_us() {
+            Some(d) => now_us >= d,
+            None => false,
+        }
+    }
+
+    /// Cut a batch if one is due. FIFO prefix of at most `max_batch`.
+    pub fn pop_batch(&mut self, now_us: u64) -> Option<Vec<Pending<T>>> {
+        if !self.ready(now_us) {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Pending<T>> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg(max_batch: usize, delay: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_delay_us: delay,
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(cfg(3, 1_000));
+        b.push(1, (), 0);
+        b.push(2, (), 1);
+        assert!(!b.ready(2));
+        b.push(3, (), 2);
+        assert!(b.ready(2));
+        let batch = b.pop_batch(2).unwrap();
+        assert_eq!(batch.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(cfg(10, 500));
+        b.push(1, (), 100);
+        assert!(!b.ready(599));
+        assert!(b.ready(600));
+        assert_eq!(b.next_deadline_us(), Some(600));
+        let batch = b.pop_batch(600).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_cuts_max_batch_prefix() {
+        let mut b = Batcher::new(cfg(4, 1_000));
+        for i in 0..11 {
+            b.push(i, (), 0);
+        }
+        let batch = b.pop_batch(0).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(b.len(), 7);
+    }
+
+    /// Property test (in-tree randomized harness — proptest substitute):
+    /// over random interleavings of pushes and polls,
+    /// 1. batches preserve FIFO order globally,
+    /// 2. no batch exceeds max_batch,
+    /// 3. whenever pop_batch is called at time t, no *remaining* request
+    ///    has exceeded its deadline (i.e. polling at/after a deadline
+    ///    always flushes the overdue request).
+    #[test]
+    fn property_fifo_bounded_deadline() {
+        for trial in 0..200 {
+            let mut rng = Rng::new(0xBA7C + trial);
+            let max_batch = 1 + rng.below(8);
+            let delay = 10 + rng.below(500) as u64;
+            let mut b: Batcher<()> = Batcher::new(cfg(max_batch, delay));
+            let mut now = 0u64;
+            let mut next_id = 0u64;
+            let mut popped: Vec<u64> = Vec::new();
+            for _ in 0..100 {
+                now += rng.below(80) as u64;
+                if rng.f64() < 0.6 {
+                    b.push(next_id, (), now);
+                    next_id += 1;
+                }
+                // The server polls whenever a deadline is due or by choice.
+                let must_poll = b.next_deadline_us().map(|d| now >= d).unwrap_or(false);
+                if must_poll || rng.f64() < 0.3 {
+                    while let Some(batch) = b.pop_batch(now) {
+                        assert!(batch.len() <= max_batch, "batch too large");
+                        popped.extend(batch.iter().map(|p| p.id));
+                        if batch.len() < max_batch {
+                            break; // deadline flush drained the queue head
+                        }
+                    }
+                    // After polling, nothing left is overdue.
+                    if let Some(d) = b.next_deadline_us() {
+                        assert!(d > now, "overdue request left after poll (trial {trial})");
+                    }
+                }
+            }
+            popped.extend(b.drain_all().iter().map(|p| p.id));
+            // FIFO: popped ids are exactly 0..next_id in order.
+            assert_eq!(popped, (0..next_id).collect::<Vec<_>>(), "trial {trial}");
+        }
+    }
+}

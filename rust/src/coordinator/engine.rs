@@ -1,0 +1,409 @@
+//! The inference engine: a stack of compressed layers (each in its
+//! selected representation) with two execution backends:
+//!
+//! * **Native** — the Rust CER/CSER/CSR/dense kernels of this crate; the
+//!   paper's contribution on the serving path.
+//! * **Xla** — the AOT-compiled artifacts (`model_dense.hlo.txt` /
+//!   `model_cser.hlo.txt`) executed through PJRT; the L1/L2 layers of the
+//!   stack, with identical numerics (asserted by the e2e example and the
+//!   integration tests).
+//!
+//! Batch layout trick: a row-major (batch × n) activation buffer *is* a
+//! column-major (n × batch) matrix, so the native path feeds
+//! `matmul_colmajor` without any transpose copies.
+
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::selector::{select_format, Objective};
+use crate::costmodel::{EnergyModel, TimeModel};
+use crate::formats::{Dense, FormatKind};
+use crate::kernels::AnyMatrix;
+use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
+
+/// Which execution backend the engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust kernels over the selected formats.
+    Native,
+    /// PJRT execution of the AOT CSER-kernel artifact.
+    XlaCser,
+    /// PJRT execution of the AOT dense artifact (float weights).
+    XlaDense,
+}
+
+/// One layer of the engine.
+#[derive(Clone, Debug)]
+pub struct EngineLayer {
+    pub name: String,
+    pub matrix: AnyMatrix,
+    pub bias: Vec<f32>,
+}
+
+/// Derive a (codes, omega) pair from a quantized dense matrix with omega
+/// ascending — the convention shared with `aot.codes_from_quantized`.
+pub fn to_codes(m: &Dense) -> (Vec<i32>, Vec<f32>) {
+    let mut omega: Vec<f32> = m.data().to_vec();
+    omega.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+    omega.dedup();
+    let codes = m
+        .data()
+        .iter()
+        .map(|v| {
+            omega
+                .binary_search_by(|p| p.partial_cmp(v).unwrap())
+                .expect("value in codebook") as i32
+        })
+        .collect();
+    (codes, omega)
+}
+
+/// XLA backend state (owned by the engine; not Send — construct the engine
+/// inside its serving thread).
+struct XlaState {
+    /// Keeps the PJRT client (and its executable cache) alive for `exe`.
+    #[allow(dead_code)]
+    runtime: XlaRuntime,
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    /// Fixed (weight) arguments appended after the input batch.
+    fixed_args: Vec<Arg>,
+    batch: usize,
+}
+
+/// The inference engine.
+pub struct Engine {
+    pub layers: Vec<EngineLayer>,
+    backend: Backend,
+    xla: Option<XlaState>,
+    /// Scratch activation buffers (reused across forwards).
+    scratch: Vec<Vec<f32>>,
+}
+
+impl Engine {
+    /// Build a native engine from quantized layers, auto-selecting each
+    /// layer's format for `objective`.
+    pub fn native_auto(
+        layers: Vec<(String, Dense, Vec<f32>)>,
+        energy: &EnergyModel,
+        time: &TimeModel,
+        objective: Objective,
+    ) -> Engine {
+        let layers = layers
+            .into_iter()
+            .map(|(name, m, bias)| {
+                let (kind, _) = select_format(&m, energy, time, objective);
+                EngineLayer {
+                    name,
+                    matrix: AnyMatrix::encode(kind, &m),
+                    bias,
+                }
+            })
+            .collect();
+        Engine {
+            layers,
+            backend: Backend::Native,
+            xla: None,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Build a native engine with an explicit format for every layer.
+    pub fn native_fixed(layers: Vec<(String, Dense, Vec<f32>)>, kind: FormatKind) -> Engine {
+        let layers = layers
+            .into_iter()
+            .map(|(name, m, bias)| EngineLayer {
+                name,
+                matrix: AnyMatrix::encode(kind, &m),
+                bias,
+            })
+            .collect();
+        Engine {
+            layers,
+            backend: Backend::Native,
+            xla: None,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Build an engine over the e2e artifacts.
+    ///
+    /// `Backend::Native` encodes the quantized weights with auto-selection;
+    /// the XLA backends compile the corresponding HLO artifact and bind the
+    /// weight arguments once.
+    pub fn from_artifacts(
+        art: &MlpArtifacts,
+        backend: Backend,
+        objective: Objective,
+    ) -> Result<Engine> {
+        let named = |quantized: bool| -> Vec<(String, Dense, Vec<f32>)> {
+            art.layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    (
+                        format!("fc{i}"),
+                        if quantized {
+                            l.quantized.clone()
+                        } else {
+                            l.weights.clone()
+                        },
+                        l.bias.clone(),
+                    )
+                })
+                .collect()
+        };
+        match backend {
+            Backend::Native => Ok(Engine::native_auto(
+                named(true),
+                &EnergyModel::table_i(),
+                &TimeModel::default_model(),
+                objective,
+            )),
+            Backend::XlaDense | Backend::XlaCser => {
+                let mut runtime = XlaRuntime::cpu()?;
+                let (path, fixed_args) = if backend == Backend::XlaDense {
+                    let mut args = Vec::new();
+                    for l in &art.layers {
+                        let (m, n) = (l.weights.rows(), l.weights.cols());
+                        args.push(Arg::f32(l.weights.data().to_vec(), &[m, n]));
+                        args.push(Arg::f32(l.bias.clone(), &[m]));
+                    }
+                    (art.dense_hlo.clone(), args)
+                } else {
+                    let mut args = Vec::new();
+                    for l in &art.layers {
+                        let (m, n) = (l.quantized.rows(), l.quantized.cols());
+                        let (codes, omega) = to_codes(&l.quantized);
+                        args.push(Arg::i32(codes, &[m, n]));
+                        args.push(Arg::f32(omega.clone(), &[omega.len()]));
+                        args.push(Arg::f32(l.bias.clone(), &[m]));
+                    }
+                    (art.cser_hlo.clone(), args)
+                };
+                let exe = runtime
+                    .load(&path)
+                    .with_context(|| format!("loading {}", path.display()))?;
+                Ok(Engine {
+                    layers: named(backend == Backend::XlaCser)
+                        .into_iter()
+                        .map(|(name, m, bias)| EngineLayer {
+                            name,
+                            matrix: AnyMatrix::Dense(m),
+                            bias,
+                        })
+                        .collect(),
+                    backend,
+                    xla: Some(XlaState {
+                        runtime,
+                        exe,
+                        fixed_args,
+                        batch: art.batch,
+                    }),
+                    scratch: Vec::new(),
+                })
+            }
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Input dimensionality.
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].matrix.cols()
+    }
+
+    /// Output dimensionality.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().matrix.rows()
+    }
+
+    /// Static batch size required by the XLA backends (None = any).
+    pub fn required_batch(&self) -> Option<usize> {
+        self.xla.as_ref().map(|x| x.batch)
+    }
+
+    /// Forward a batch: `x` row-major (batch × in_dim) → logits row-major
+    /// (batch × out_dim). ReLU between layers, none after the last.
+    pub fn forward(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), batch * self.in_dim(), "input shape");
+        match self.backend {
+            Backend::Native => Ok(self.forward_native(x, batch)),
+            Backend::XlaDense | Backend::XlaCser => {
+                let st = self.xla.as_mut().expect("xla state");
+                assert_eq!(
+                    batch, st.batch,
+                    "XLA backend lowered for batch {}, got {batch}",
+                    st.batch
+                );
+                let mut args = vec![Arg::f32(x.to_vec(), &[batch, x.len() / batch])];
+                args.extend(st.fixed_args.iter().cloned());
+                st.exe.run_f32(&args)
+            }
+        }
+    }
+
+    fn forward_native(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+        // Row-major (batch × n) ≡ column-major (n × batch): no transposes.
+        self.scratch.resize(self.layers.len(), Vec::new());
+        let mut cur: Vec<f32> = x.to_vec();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (m, _n) = (layer.matrix.rows(), layer.matrix.cols());
+            let out = &mut self.scratch[i];
+            out.clear();
+            out.resize(m * batch, 0.0);
+            layer.matrix.matmul_colmajor(&cur, out, batch);
+            for s in 0..batch {
+                let col = &mut out[s * m..(s + 1) * m];
+                for (v, b) in col.iter_mut().zip(&layer.bias) {
+                    *v += b;
+                    if i != last && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            std::mem::swap(&mut cur, out);
+        }
+        cur
+    }
+
+    /// Classify a batch: argmax logits per sample.
+    pub fn classify(&mut self, x: &[f32], batch: usize) -> Result<Vec<usize>> {
+        let logits = self.forward(x, batch)?;
+        let out = self.out_dim();
+        Ok((0..batch)
+            .map(|s| {
+                let row = &logits[s * out..(s + 1) * out];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect())
+    }
+
+    /// Total storage of the engine's weight matrices (bits).
+    pub fn storage_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.matrix.storage().total_bits())
+            .sum()
+    }
+
+    /// Formats in use, per layer.
+    pub fn formats(&self) -> Vec<FormatKind> {
+        self.layers.iter().map(|l| l.matrix.kind()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_layers(seed: u64) -> Vec<(String, Dense, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        let grid = [-0.4f32, -0.2, 0.0, 0.2, 0.4];
+        let mk = |rng: &mut Rng, m: usize, n: usize| {
+            Dense::from_vec(
+                m,
+                n,
+                (0..m * n).map(|_| grid[rng.below(5)]).collect(),
+            )
+        };
+        vec![
+            ("fc0".into(), mk(&mut rng, 8, 12), vec![0.1; 8]),
+            ("fc1".into(), mk(&mut rng, 5, 8), vec![-0.1; 5]),
+            ("fc2".into(), mk(&mut rng, 3, 5), vec![0.0; 3]),
+        ]
+    }
+
+    /// Oracle forward in f64.
+    fn oracle_forward(layers: &[(String, Dense, Vec<f32>)], x: &[f32], batch: usize) -> Vec<f32> {
+        let mut cur: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let last = layers.len() - 1;
+        for (i, (_, w, b)) in layers.iter().enumerate() {
+            let (m, n) = (w.rows(), w.cols());
+            let mut next = vec![0.0f64; batch * m];
+            for s in 0..batch {
+                for r in 0..m {
+                    let mut acc = b[r] as f64;
+                    for c in 0..n {
+                        acc += w.get(r, c) as f64 * cur[s * n + c];
+                    }
+                    next[s * m + r] = if i != last && acc < 0.0 { 0.0 } else { acc };
+                }
+            }
+            cur = next;
+        }
+        cur.into_iter().map(|v| v as f32).collect()
+    }
+
+    #[test]
+    fn native_forward_matches_oracle_all_formats() {
+        let layers = tiny_layers(1);
+        let mut rng = Rng::new(2);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+        let want = oracle_forward(&layers, &x, batch);
+        for kind in FormatKind::ALL {
+            let mut e = Engine::native_fixed(layers.clone(), kind);
+            let got = e.forward(&x, batch).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_engine_picks_formats_and_matches() {
+        let layers = tiny_layers(3);
+        let mut auto = Engine::native_auto(
+            layers.clone(),
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Energy,
+        );
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..2 * 12).map(|_| rng.f32()).collect();
+        let want = oracle_forward(&layers, &x, 2);
+        let got = auto.forward(&x, 2).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(auto.formats().len(), 3);
+    }
+
+    #[test]
+    fn to_codes_roundtrip() {
+        let m = crate::paper_example_matrix();
+        let (codes, omega) = to_codes(&m);
+        assert_eq!(omega, vec![0.0, 2.0, 3.0, 4.0]);
+        for (i, &v) in m.data().iter().enumerate() {
+            assert_eq!(omega[codes[i] as usize], v);
+        }
+    }
+
+    #[test]
+    fn classify_argmax() {
+        let layers = vec![(
+            "out".into(),
+            Dense::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![0.5, 0.5]]),
+            vec![0.0; 3],
+        )];
+        let mut e = Engine::native_fixed(layers, FormatKind::Dense);
+        let pred = e.classify(&[3.0, 0.0, 0.0, 3.0], 2).unwrap();
+        assert_eq!(pred, vec![0, 1]);
+    }
+
+    #[test]
+    fn storage_reflects_selected_formats() {
+        let layers = tiny_layers(5);
+        let dense = Engine::native_fixed(layers.clone(), FormatKind::Dense);
+        let cser = Engine::native_fixed(layers, FormatKind::Cser);
+        assert!(cser.storage_bits() < dense.storage_bits());
+    }
+}

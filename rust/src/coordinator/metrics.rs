@@ -1,0 +1,96 @@
+//! Serving metrics: lock-free counters shared between the worker thread
+//! and callers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cumulative serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Σ batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+    /// Σ request latency (µs, enqueue → response).
+    pub total_latency_us: AtomicU64,
+    /// Max observed latency (µs).
+    pub max_latency_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn shared() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, us: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
+        self.max_latency_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Mean latency in µs over completed requests.
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests {} completed {} batches {} mean_batch {:.2} mean_latency {:.0}µs max_latency {}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.mean_latency_us(),
+            self.max_latency_us.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(2);
+        for us in [100, 200, 300] {
+            m.record_latency(us);
+        }
+        assert_eq!(m.mean_batch(), 3.0);
+        assert_eq!(m.mean_latency_us(), 200.0);
+        assert_eq!(m.max_latency_us.load(Ordering::Relaxed), 300);
+        assert!(m.summary().contains("batches 2"));
+    }
+
+    #[test]
+    fn empty_metrics_no_division_by_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 coordinator: the serving side of the library.
+//!
+//! * [`selector`] — cost-model-driven automatic format selection per layer
+//!   (the deployment decision §IV's analysis enables).
+//! * [`engine`] — the inference engine: compressed layers in their selected
+//!   formats, executed either by the native Rust kernels or through the
+//!   AOT XLA artifacts (PJRT).
+//! * [`batcher`] — deterministic dynamic batching policy (max batch size +
+//!   deadline flush), pure logic for testability.
+//! * [`server`] — the request loop: worker thread owning the engine, mpsc
+//!   ingress, per-request response channels, metrics.
+//!
+//! The serving loop uses OS threads + channels rather than an async
+//! runtime: tokio is not in the offline vendor set (DESIGN.md §4) and a
+//! single-worker engine loop has no I/O concurrency to hide.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod selector;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{Backend, Engine, EngineLayer};
+pub use metrics::Metrics;
+pub use selector::{select_format, Objective};
+pub use server::{InferenceServer, ServerConfig};

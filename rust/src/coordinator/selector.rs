@@ -1,0 +1,138 @@
+//! Automatic format selection: evaluate all four representations of a
+//! layer under the cost model and pick the argmin for the deployment
+//! objective. This is the paper's Fig. 3/4 analysis turned into a runtime
+//! policy — dense layers in the high-entropy corner stay dense, compressed
+//! layers get CER/CSER, spike-and-slab layers get CSR.
+
+use crate::costmodel::{Criterion4, EnergyModel, TimeModel};
+use crate::formats::{Dense, FormatKind};
+use crate::kernels::AnyMatrix;
+
+/// What the deployment optimizes for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize modeled energy per inference (the paper's headline metric).
+    Energy,
+    /// Minimize modeled time per inference.
+    Time,
+    /// Minimize elementary operations.
+    Ops,
+    /// Minimize storage footprint.
+    Storage,
+    /// Weighted blend (weights over [storage, ops, time, energy],
+    /// normalized by the dense baseline so units are comparable).
+    Weighted([f64; 4]),
+}
+
+impl Objective {
+    fn score(&self, c: &Criterion4, dense: &Criterion4) -> f64 {
+        match self {
+            Objective::Energy => c.energy_pj,
+            Objective::Time => c.time_ns,
+            Objective::Ops => c.ops as f64,
+            Objective::Storage => c.storage_bits as f64,
+            Objective::Weighted(w) => {
+                let norm = |v: f64, b: f64| if b > 0.0 { v / b } else { v };
+                w[0] * norm(c.storage_bits as f64, dense.storage_bits as f64)
+                    + w[1] * norm(c.ops as f64, dense.ops as f64)
+                    + w[2] * norm(c.time_ns, dense.time_ns)
+                    + w[3] * norm(c.energy_pj, dense.energy_pj)
+            }
+        }
+    }
+}
+
+/// Evaluate all formats for `m` and return (winner, per-format criteria in
+/// [`FormatKind::ALL`] order).
+pub fn select_format(
+    m: &Dense,
+    energy: &EnergyModel,
+    time: &TimeModel,
+    objective: Objective,
+) -> (FormatKind, [Criterion4; 4]) {
+    let crits: Vec<Criterion4> = FormatKind::ALL
+        .iter()
+        .map(|&k| Criterion4::evaluate(&AnyMatrix::encode(k, m), energy, time))
+        .collect();
+    let dense = crits[0];
+    let mut best = 0usize;
+    let mut best_score = objective.score(&crits[0], &dense);
+    for (i, c) in crits.iter().enumerate().skip(1) {
+        let s = objective.score(c, &dense);
+        if s < best_score {
+            best = i;
+            best_score = s;
+        }
+    }
+    (
+        FormatKind::ALL[best],
+        [crits[0], crits[1], crits[2], crits[3]],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::synth::PlanePoint;
+    use crate::util::Rng;
+
+    fn models() -> (EnergyModel, TimeModel) {
+        (EnergyModel::table_i(), TimeModel::default_model())
+    }
+
+    #[test]
+    fn low_entropy_layer_selects_proposed_format() {
+        let (e, t) = models();
+        let p = PlanePoint::synthesize(1.5, 0.6, 32).unwrap();
+        let m = p.sample_matrix(100, 400, &mut Rng::new(1));
+        let (kind, _) = select_format(&m, &e, &t, Objective::Energy);
+        assert!(
+            matches!(kind, FormatKind::Cer | FormatKind::Cser),
+            "picked {kind:?}"
+        );
+        let (kind, _) = select_format(&m, &e, &t, Objective::Storage);
+        assert!(matches!(kind, FormatKind::Cer | FormatKind::Cser));
+    }
+
+    #[test]
+    fn high_entropy_layer_keeps_dense_for_ops() {
+        let (e, t) = models();
+        // Near-uniform over 128 values: the dense-wins corner for #ops.
+        let p = PlanePoint::synthesize(6.9, 0.009, 128).unwrap();
+        let m = p.sample_matrix(60, 60, &mut Rng::new(2));
+        let (kind, _) = select_format(&m, &e, &t, Objective::Ops);
+        assert_eq!(kind, FormatKind::Dense);
+    }
+
+    #[test]
+    fn selector_is_argmin_for_every_objective() {
+        let (e, t) = models();
+        let p = PlanePoint::synthesize(3.0, 0.4, 64).unwrap();
+        let m = p.sample_matrix(80, 200, &mut Rng::new(3));
+        for obj in [
+            Objective::Energy,
+            Objective::Time,
+            Objective::Ops,
+            Objective::Storage,
+        ] {
+            let (kind, crits) = select_format(&m, &e, &t, obj);
+            let winner_idx = FormatKind::ALL.iter().position(|&k| k == kind).unwrap();
+            let dense = crits[0];
+            for (i, c) in crits.iter().enumerate() {
+                assert!(
+                    obj.score(&crits[winner_idx], &dense) <= obj.score(c, &dense) + 1e-9,
+                    "{obj:?}: {kind:?} not argmin vs format {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_objective_blends() {
+        let (e, t) = models();
+        let p = PlanePoint::synthesize(2.0, 0.5, 32).unwrap();
+        let m = p.sample_matrix(50, 300, &mut Rng::new(4));
+        let (kind, _) = select_format(&m, &e, &t, Objective::Weighted([1.0, 0.0, 0.0, 1.0]));
+        assert!(matches!(kind, FormatKind::Cer | FormatKind::Cser));
+    }
+}

@@ -1,0 +1,317 @@
+//! The serving loop: a worker thread owns the engine (XLA state is not
+//! `Send`, so the engine is *constructed inside* the thread from a `Send`
+//! builder closure), requests arrive over an mpsc channel, the dynamic
+//! batcher cuts batches by size/deadline, responses flow back through
+//! per-request channels.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+}
+
+/// One in-flight request.
+struct Request {
+    x: Vec<f32>,
+    resp: Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Infer(Request),
+    Shutdown,
+}
+
+/// Handle to a running inference server.
+pub struct InferenceServer {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    in_dim: usize,
+}
+
+impl InferenceServer {
+    /// Spawn the worker. `build` constructs the engine inside the worker
+    /// thread; an engine construction error surfaces on the first request.
+    pub fn spawn<F>(build: F, cfg: ServerConfig) -> InferenceServer
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Metrics::shared();
+        let metrics_worker = metrics.clone();
+        // in_dim is filled in lazily by the first caller via submit()'s
+        // shape assertion on the worker side; keep 0 = unknown here.
+        let worker = std::thread::spawn(move || worker_loop(build, rx, cfg, metrics_worker));
+        InferenceServer {
+            tx,
+            worker: Some(worker),
+            metrics,
+            in_dim: 0,
+        }
+    }
+
+    /// Submit one sample; returns a receiver for the logits.
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<Result<Vec<f32>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request {
+            x,
+            resp: resp_tx,
+            enqueued: Instant::now(),
+        };
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if self.tx.send(Msg::Infer(req)).is_err() {
+            // Worker gone; the receiver will read the hangup as an error.
+        }
+        resp_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)
+            .recv()
+            .map_err(|_| anyhow!("server worker terminated"))?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Declared input dim (0 if unknown — informational only).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Stop the worker, flushing queued requests first.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn now_us(epoch: Instant) -> u64 {
+    epoch.elapsed().as_micros() as u64
+}
+
+fn worker_loop<F>(build: F, rx: Receiver<Msg>, cfg: ServerConfig, metrics: Arc<Metrics>)
+where
+    F: FnOnce() -> Result<Engine>,
+{
+    let epoch = Instant::now();
+    let mut engine = match build() {
+        Ok(e) => e,
+        Err(err) => {
+            // Fail every request with the construction error.
+            let msg = format!("engine construction failed: {err:#}");
+            while let Ok(m) = rx.recv() {
+                match m {
+                    Msg::Infer(req) => {
+                        let _ = req.resp.send(Err(anyhow!(msg.clone())));
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher);
+    let mut next_id = 0u64;
+    'outer: loop {
+        // Wait for work: bounded by the oldest request's deadline.
+        let msg = match batcher.next_deadline_us() {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break 'outer,
+            },
+            Some(deadline) => {
+                let now = now_us(epoch);
+                if now >= deadline {
+                    None // flush due
+                } else {
+                    match rx.recv_timeout(Duration::from_micros(deadline - now)) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break 'outer,
+                    }
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Shutdown) => break 'outer,
+            Some(Msg::Infer(req)) => {
+                batcher.push(next_id, req, now_us(epoch));
+                next_id += 1;
+            }
+            None => {}
+        }
+        while let Some(batch) = batcher.pop_batch(now_us(epoch)) {
+            run_batch(&mut engine, batch, &metrics);
+        }
+    }
+    // Drain on shutdown.
+    let rest = batcher.drain_all();
+    if !rest.is_empty() {
+        run_batch(&mut engine, rest, &metrics);
+    }
+}
+
+fn run_batch(
+    engine: &mut Engine,
+    batch: Vec<crate::coordinator::batcher::Pending<Request>>,
+    metrics: &Metrics,
+) {
+    let in_dim = engine.in_dim();
+    let out_dim = engine.out_dim();
+    let n = batch.len();
+    // XLA backends are lowered for a fixed batch: pad up to it (and split
+    // if the dynamic batch exceeds it).
+    let exec_batch = engine.required_batch().unwrap_or(n).max(1);
+    metrics.record_batch(n);
+    let mut idx = 0usize;
+    while idx < n {
+        let chunk = &batch[idx..(idx + exec_batch).min(n)];
+        let mut x = vec![0.0f32; exec_batch * in_dim];
+        for (i, p) in chunk.iter().enumerate() {
+            if p.payload.x.len() == in_dim {
+                x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&p.payload.x);
+            }
+        }
+        let result = engine.forward(&x, exec_batch);
+        match result {
+            Ok(logits) => {
+                for (i, p) in chunk.iter().enumerate() {
+                    let reply = if p.payload.x.len() != in_dim {
+                        Err(anyhow!(
+                            "input dim {} != expected {in_dim}",
+                            p.payload.x.len()
+                        ))
+                    } else {
+                        Ok(logits[i * out_dim..(i + 1) * out_dim].to_vec())
+                    };
+                    metrics.record_latency(p.payload.enqueued.elapsed().as_micros() as u64);
+                    let _ = p.payload.resp.send(reply);
+                }
+            }
+            Err(err) => {
+                let msg = format!("{err:#}");
+                for p in chunk {
+                    metrics.record_latency(p.payload.enqueued.elapsed().as_micros() as u64);
+                    let _ = p.payload.resp.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+        idx += exec_batch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::formats::{Dense, FormatKind};
+
+    fn identity_engine() -> Result<Engine> {
+        let mut w = Dense::zeros(3, 3);
+        for i in 0..3 {
+            w.set(i, i, 1.0);
+        }
+        Ok(Engine::native_fixed(
+            vec![("id".into(), w, vec![0.0; 3])],
+            FormatKind::Dense,
+        ))
+    }
+
+    #[test]
+    fn serves_identity() {
+        let srv = InferenceServer::spawn(identity_engine, ServerConfig::default());
+        let y = srv.infer_blocking(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay_us: 3_000,
+            },
+        };
+        let srv = InferenceServer::spawn(identity_engine, cfg);
+        let rxs: Vec<_> = (0..20)
+            .map(|i| srv.submit(vec![i as f32, 0.0, 0.0]))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let y = rx.recv().unwrap().unwrap();
+            assert_eq!(y[0], i as f32);
+        }
+        assert_eq!(
+            srv.metrics()
+                .completed
+                .load(std::sync::atomic::Ordering::Relaxed),
+            20
+        );
+        assert!(srv.metrics().mean_batch() >= 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_dim_is_an_error_not_a_crash() {
+        let srv = InferenceServer::spawn(identity_engine, ServerConfig::default());
+        let err = srv.infer_blocking(vec![1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("input dim"));
+        // Server still alive.
+        assert!(srv.infer_blocking(vec![1.0, 1.0, 1.0]).is_ok());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn construction_error_propagates() {
+        let srv = InferenceServer::spawn(
+            || Err(anyhow!("boom")),
+            ServerConfig::default(),
+        );
+        let err = srv.infer_blocking(vec![1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 1000,
+                max_delay_us: 60_000_000, // would wait a minute
+            },
+        };
+        let srv = InferenceServer::spawn(identity_engine, cfg);
+        let rx = srv.submit(vec![7.0, 0.0, 0.0]);
+        srv.shutdown(); // must flush, not drop
+        let y = rx.recv().unwrap().unwrap();
+        assert_eq!(y[0], 7.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Table I — energy (pJ) of elementary operations for a 45nm CMOS process
+//! (Horowitz, ISSCC'14), as used by the paper's energy criterion.
+//!
+//! Read/write cost depends on the total size of the array the operand
+//! resides in, bucketed into four tiers. The paper's printed value for the
+//! 16-bit `>1MB` read/write is `5000.0` pJ — an obvious typo (the column is
+//! otherwise exactly ×2 per width step and its 8/32-bit neighbours are 250
+//! and 1000); we use 500 pJ and note the substitution in DESIGN.md §4.
+
+use super::opcount::BaseOp;
+
+/// Memory tier of an array, by its total byte size (Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemTier {
+    /// < 8 KB.
+    Under8K,
+    /// < 32 KB.
+    Under32K,
+    /// < 1 MB.
+    Under1M,
+    /// ≥ 1 MB.
+    Over1M,
+}
+
+impl MemTier {
+    /// Tier of an array of `bytes` total size.
+    pub fn for_bytes(bytes: u64) -> MemTier {
+        if bytes < 8 * 1024 {
+            MemTier::Under8K
+        } else if bytes < 32 * 1024 {
+            MemTier::Under32K
+        } else if bytes < 1024 * 1024 {
+            MemTier::Under1M
+        } else {
+            MemTier::Over1M
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MemTier::Under8K => "<8KB",
+            MemTier::Under32K => "<32KB",
+            MemTier::Under1M => "<1MB",
+            MemTier::Over1M => ">1MB",
+        }
+    }
+
+    pub const ALL: [MemTier; 4] = [
+        MemTier::Under8K,
+        MemTier::Under32K,
+        MemTier::Under1M,
+        MemTier::Over1M,
+    ];
+}
+
+/// Width column of Table I (8 / 16 / 32 bits). Widths in between are
+/// rounded *up* (conservative), matching the paper's restriction of index
+/// widths to {8, 16, 32}.
+fn width_col(bits: u32) -> usize {
+    match bits {
+        0..=8 => 0,
+        9..=16 => 1,
+        _ => 2,
+    }
+}
+
+/// Energy model: pJ per elementary operation.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// float add, by width column.
+    pub add: [f64; 3],
+    /// float mul, by width column.
+    pub mul: [f64; 3],
+    /// read/write, by tier then width column.
+    pub rw: [[f64; 3]; 4],
+}
+
+impl EnergyModel {
+    /// The paper's Table I (with the 16-bit `>1MB` typo corrected to 500).
+    pub fn table_i() -> EnergyModel {
+        EnergyModel {
+            add: [0.2, 0.4, 0.9],
+            mul: [0.6, 1.1, 3.7],
+            rw: [
+                [1.25, 2.5, 5.0],    // <8KB
+                [2.5, 5.0, 10.0],    // <32KB
+                [12.5, 25.0, 50.0],  // <1MB
+                [250.0, 500.0, 1000.0], // >1MB
+            ],
+        }
+    }
+
+    /// Cost in pJ of one `op` on `bits`-wide operands in tier `tier`.
+    pub fn cost_pj(&self, op: BaseOp, bits: u32, tier: MemTier) -> f64 {
+        let w = width_col(bits);
+        match op {
+            BaseOp::Sum => self.add[w],
+            BaseOp::Mul => self.mul[w],
+            BaseOp::Read | BaseOp::Write => self.rw[tier as usize][w],
+        }
+    }
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel::table_i()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_boundaries() {
+        assert_eq!(MemTier::for_bytes(0), MemTier::Under8K);
+        assert_eq!(MemTier::for_bytes(8 * 1024 - 1), MemTier::Under8K);
+        assert_eq!(MemTier::for_bytes(8 * 1024), MemTier::Under32K);
+        assert_eq!(MemTier::for_bytes(32 * 1024), MemTier::Under1M);
+        assert_eq!(MemTier::for_bytes(1024 * 1024), MemTier::Over1M);
+    }
+
+    #[test]
+    fn table_i_values() {
+        let m = EnergyModel::table_i();
+        assert_eq!(m.cost_pj(BaseOp::Sum, 8, MemTier::Under8K), 0.2);
+        assert_eq!(m.cost_pj(BaseOp::Sum, 32, MemTier::Over1M), 0.9); // tier irrelevant
+        assert_eq!(m.cost_pj(BaseOp::Mul, 16, MemTier::Under8K), 1.1);
+        assert_eq!(m.cost_pj(BaseOp::Read, 8, MemTier::Under8K), 1.25);
+        assert_eq!(m.cost_pj(BaseOp::Write, 32, MemTier::Under1M), 50.0);
+        assert_eq!(m.cost_pj(BaseOp::Read, 16, MemTier::Over1M), 500.0);
+    }
+
+    #[test]
+    fn widths_round_up() {
+        let m = EnergyModel::table_i();
+        assert_eq!(m.cost_pj(BaseOp::Read, 7, MemTier::Under8K), 1.25);
+        assert_eq!(m.cost_pj(BaseOp::Read, 9, MemTier::Under8K), 2.5);
+        assert_eq!(m.cost_pj(BaseOp::Read, 24, MemTier::Under8K), 5.0);
+    }
+
+    #[test]
+    fn paper_example_from_table_caption() {
+        // Caption of Table I: a 16-bit colI entry in a 30KB array → 5.0 pJ.
+        let m = EnergyModel::table_i();
+        let tier = MemTier::for_bytes(30 * 1024);
+        assert_eq!(m.cost_pj(BaseOp::Read, 16, tier), 5.0);
+    }
+}

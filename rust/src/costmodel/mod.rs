@@ -1,0 +1,34 @@
+//! The paper's §IV cost model.
+//!
+//! A dot-product algorithm is modeled as a computational graph of four
+//! elementary operations — *sum*, *mul*, *read*, *write* — each with a cost
+//! that depends on the operand bit-size and, for memory operations, on the
+//! size of the array the operand lives in (Table I). This module provides:
+//!
+//! * [`opcount`] — [`OpTrace`]: exact elementary-operation counts of a dot
+//!   product, keyed by operation class / bit-width / memory tier.
+//! * [`trace`] — walks each representation and produces its `OpTrace`
+//!   (the "counted kernels": same accounting as the paper's worked example
+//!   in §III-B).
+//! * [`energy`] — [`EnergyModel`]: Table I (45nm CMOS) energy per op.
+//! * [`time`] — [`TimeModel`]: per-op latencies (static defaults for
+//!   determinism + on-host calibration).
+//! * [`analytic`] — the closed-form storage/energy equations (1)–(12) and
+//!   the Theorem 1/2 / Corollary 2.1 bounds.
+
+pub mod analytic;
+pub mod energy;
+pub mod opcount;
+pub mod time;
+pub mod trace;
+
+pub use analytic::DistStats;
+pub use energy::{EnergyModel, MemTier};
+pub use opcount::{BaseOp, OpClass, OpTrace};
+pub use time::TimeModel;
+pub use trace::{trace_matvec, Criterion4};
+
+use crate::formats::FormatKind;
+
+/// Re-export for harness ergonomics.
+pub type Format = FormatKind;

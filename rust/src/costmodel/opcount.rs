@@ -1,0 +1,244 @@
+//! Elementary-operation traces.
+//!
+//! An [`OpTrace`] is a multiset of (operation class, bit-width, memory tier)
+//! counts. Operation *classes* distinguish which array a memory operation
+//! touches (input vector, weight values, column indices, pointers, ...) so
+//! the per-figure breakdowns of the paper (Figs. 7–9) fall out directly;
+//! each class maps onto one of the four *base* operations of §IV-A whose
+//! cost functions σ, µ, γ, δ are tabulated by the energy/time models.
+
+use std::collections::BTreeMap;
+
+use super::energy::{EnergyModel, MemTier};
+use super::time::TimeModel;
+
+/// The four elementary operations of §IV-A.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum BaseOp {
+    /// σ — summation.
+    Sum,
+    /// µ — multiplication.
+    Mul,
+    /// γ — read from memory.
+    Read,
+    /// δ — write to memory.
+    Write,
+}
+
+/// Operation classes: base op + which array is touched.
+///
+/// Matches the breakdown labels of Figs. 7–9: `In_load`, `colI_load`,
+/// `Ω_load`, `add`, `mul`, `others` (pointer loads + writes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpClass {
+    /// Accumulating addition.
+    Add,
+    /// Multiplication.
+    Mul,
+    /// Load of an input-vector element (the paper's In_load).
+    LoadInput,
+    /// Load of a weight/codebook value (Ω_load / W load).
+    LoadWeight,
+    /// Load of a column index (colI_load).
+    LoadColIdx,
+    /// Load of a pointer (rowPtr / ΩPtr) or ΩI entry.
+    LoadPtr,
+    /// Write of an output element.
+    Write,
+}
+
+impl OpClass {
+    pub fn base(self) -> BaseOp {
+        match self {
+            OpClass::Add => BaseOp::Sum,
+            OpClass::Mul => BaseOp::Mul,
+            OpClass::LoadInput | OpClass::LoadWeight | OpClass::LoadColIdx | OpClass::LoadPtr => {
+                BaseOp::Read
+            }
+            OpClass::Write => BaseOp::Write,
+        }
+    }
+
+    /// Label used in the figure CSVs.
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::Add => "add",
+            OpClass::Mul => "mul",
+            OpClass::LoadInput => "In_load",
+            OpClass::LoadWeight => "W_load",
+            OpClass::LoadColIdx => "colI_load",
+            OpClass::LoadPtr => "ptr_load",
+            OpClass::Write => "write",
+        }
+    }
+
+    pub const ALL: [OpClass; 7] = [
+        OpClass::Add,
+        OpClass::Mul,
+        OpClass::LoadInput,
+        OpClass::LoadWeight,
+        OpClass::LoadColIdx,
+        OpClass::LoadPtr,
+        OpClass::Write,
+    ];
+}
+
+/// One bucket of identical operations.
+type Key = (OpClass, u32, MemTier);
+
+/// Exact multiset of elementary operations of one dot product.
+///
+/// Keys are ordered (BTreeMap) so iteration — and therefore every report —
+/// is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct OpTrace {
+    counts: BTreeMap<Key, u64>,
+}
+
+impl OpTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `count` operations of `class` on `bits`-wide operands living
+    /// in an array of tier `tier` (tier is ignored for Add/Mul costs but
+    /// kept in the key for uniformity).
+    pub fn record(&mut self, class: OpClass, bits: u32, tier: MemTier, count: u64) {
+        if count > 0 {
+            *self.counts.entry((class, bits, tier)).or_insert(0) += count;
+        }
+    }
+
+    /// Merge another trace into this one.
+    pub fn merge(&mut self, other: &OpTrace) {
+        for (&k, &v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+    }
+
+    /// Multiply all counts (e.g. conv layers weight a matvec trace by the
+    /// number of patches n_p, Appendix A.2).
+    pub fn scale(&self, factor: u64) -> OpTrace {
+        OpTrace {
+            counts: self
+                .counts
+                .iter()
+                .map(|(&k, &v)| (k, v * factor))
+                .collect(),
+        }
+    }
+
+    /// Total number of elementary operations (the paper's #ops criterion).
+    pub fn total_ops(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Operations of one class.
+    pub fn ops_of(&self, class: OpClass) -> u64 {
+        self.counts
+            .iter()
+            .filter(|((c, _, _), _)| *c == class)
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Total energy in pJ under `model`.
+    pub fn energy_pj(&self, model: &EnergyModel) -> f64 {
+        self.counts
+            .iter()
+            .map(|(&(class, bits, tier), &n)| {
+                n as f64 * model.cost_pj(class.base(), bits, tier)
+            })
+            .sum()
+    }
+
+    /// Energy of one class only (for the Fig. 9 breakdown).
+    pub fn energy_of_pj(&self, class: OpClass, model: &EnergyModel) -> f64 {
+        self.counts
+            .iter()
+            .filter(|((c, _, _), _)| *c == class)
+            .map(|(&(_, bits, tier), &n)| n as f64 * model.cost_pj(class.base(), bits, tier))
+            .sum()
+    }
+
+    /// Total modeled time in ns under `model`.
+    pub fn time_ns(&self, model: &TimeModel) -> f64 {
+        self.counts
+            .iter()
+            .map(|(&(class, bits, tier), &n)| {
+                n as f64 * model.cost_ns(class.base(), bits, tier)
+            })
+            .sum()
+    }
+
+    /// Modeled time of one class (Fig. 8 breakdown).
+    pub fn time_of_ns(&self, class: OpClass, model: &TimeModel) -> f64 {
+        self.counts
+            .iter()
+            .filter(|((c, _, _), _)| *c == class)
+            .map(|(&(_, bits, tier), &n)| n as f64 * model.cost_ns(class.base(), bits, tier))
+            .sum()
+    }
+
+    /// Iterate buckets (deterministic order).
+    pub fn buckets(&self) -> impl Iterator<Item = (OpClass, u32, MemTier, u64)> + '_ {
+        self.counts.iter().map(|(&(c, b, t), &n)| (c, b, t, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_totals() {
+        let mut t = OpTrace::new();
+        t.record(OpClass::Add, 32, MemTier::Under8K, 10);
+        t.record(OpClass::Add, 32, MemTier::Under8K, 5);
+        t.record(OpClass::Mul, 32, MemTier::Under8K, 3);
+        t.record(OpClass::Write, 32, MemTier::Under1M, 0); // no-op
+        assert_eq!(t.total_ops(), 18);
+        assert_eq!(t.ops_of(OpClass::Add), 15);
+        assert_eq!(t.ops_of(OpClass::Write), 0);
+    }
+
+    #[test]
+    fn scale_and_merge() {
+        let mut t = OpTrace::new();
+        t.record(OpClass::LoadInput, 32, MemTier::Under32K, 7);
+        let t2 = t.scale(3);
+        assert_eq!(t2.total_ops(), 21);
+        let mut t3 = OpTrace::new();
+        t3.merge(&t);
+        t3.merge(&t2);
+        assert_eq!(t3.total_ops(), 28);
+    }
+
+    #[test]
+    fn energy_uses_table_i() {
+        // 1 × 32-bit add (0.9 pJ) + 2 × 32-bit mul (3.7) + 4 × 32-bit read
+        // (<8KB → 5.0) + 1 × 32-bit write (5.0) = 0.9+7.4+20+5 = 33.3 pJ —
+        // the Fig. 2 example graph.
+        let mut t = OpTrace::new();
+        t.record(OpClass::Add, 32, MemTier::Under8K, 1);
+        t.record(OpClass::Mul, 32, MemTier::Under8K, 2);
+        t.record(OpClass::LoadInput, 32, MemTier::Under8K, 4);
+        t.record(OpClass::Write, 32, MemTier::Under8K, 1);
+        let e = t.energy_pj(&EnergyModel::table_i());
+        assert!((e - 33.3).abs() < 1e-9, "got {e}");
+    }
+
+    #[test]
+    fn class_breakdown_sums_to_total() {
+        let mut t = OpTrace::new();
+        t.record(OpClass::Add, 32, MemTier::Under8K, 3);
+        t.record(OpClass::LoadColIdx, 8, MemTier::Under1M, 11);
+        t.record(OpClass::LoadPtr, 16, MemTier::Under32K, 2);
+        let m = EnergyModel::table_i();
+        let total: f64 = OpClass::ALL
+            .iter()
+            .map(|&c| t.energy_of_pj(c, &m))
+            .sum();
+        assert!((total - t.energy_pj(&m)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,304 @@
+//! Compressed Entropy Row (CER) — first contribution of the paper (§III-A).
+//!
+//! Exploits two properties of low-entropy matrices:
+//! 1. many elements share the same value → each distinct value is stored
+//!    once, in the global frequency-major codebook `Ω`;
+//! 2. the frequency ordering of values is similar across rows → the
+//!    per-row association between index runs and values is *implicit*: the
+//!    j-th run of a row (empty runs included) belongs to `Ω[1 + j]`.
+//!
+//! The most frequent element `Ω[0]` is never stored per-position: positions
+//! not listed in `colI` carry it implicitly. If an element of `Ω` is absent
+//! from a row but a rarer element is present, an **empty run** (repeated
+//! pointer, the paper's "padded index") is emitted; trailing absent
+//! elements cost nothing.
+
+use super::codebook::{frequency_codebook, rank_lookup, value_key};
+use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// CER matrix.
+#[derive(Clone, Debug)]
+pub struct Cer {
+    rows: usize,
+    cols: usize,
+    /// Distinct values, frequency-major. `omega[0]` is the implicit value.
+    pub omega: Vec<f32>,
+    /// Concatenated column-index runs.
+    pub col_idx: ColIndices,
+    /// Run boundaries into `col_idx`; `omega_ptr[0] == 0`, length = runs+1.
+    pub omega_ptr: Vec<u32>,
+    /// `row_ptr[r]..row_ptr[r+1]` selects the run *slots* of row `r`
+    /// (indices into `omega_ptr`); length = rows+1.
+    pub row_ptr: Vec<u32>,
+    /// Total number of empty (padded) runs across the matrix (Σ k̃_r).
+    padded_runs: u64,
+}
+
+impl Cer {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Convert from dense, O(N).
+    pub fn from_dense(m: &Dense) -> Cer {
+        let codebook = frequency_codebook(m);
+        let ranks = rank_lookup(&codebook);
+        let k = codebook.len();
+        let (rows, cols) = (m.rows(), m.cols());
+
+        let mut col_idx: Vec<usize> = Vec::new();
+        let mut omega_ptr: Vec<u32> = vec![0];
+        let mut row_ptr: Vec<u32> = vec![0];
+        let mut padded_runs = 0u64;
+        // Reusable per-row buckets: columns of each rank.
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for r in 0..rows {
+            for b in buckets.iter_mut() {
+                b.clear();
+            }
+            for (c, &v) in m.row(r).iter().enumerate() {
+                let rank = ranks[&value_key(v)] as usize;
+                if rank != 0 {
+                    buckets[rank].push(c);
+                }
+            }
+            // Last rank present in this row; ranks beyond it are free.
+            let last_present = (1..k).rev().find(|&j| !buckets[j].is_empty());
+            if let Some(last) = last_present {
+                for bucket in &buckets[1..=last] {
+                    if bucket.is_empty() {
+                        padded_runs += 1;
+                    }
+                    col_idx.extend_from_slice(bucket);
+                    omega_ptr.push(col_idx.len() as u32);
+                }
+            }
+            row_ptr.push((omega_ptr.len() - 1) as u32);
+        }
+
+        Cer {
+            rows,
+            cols,
+            omega: codebook.into_iter().map(|(v, _)| v).collect(),
+            col_idx: ColIndices::pack(&col_idx, cols),
+            omega_ptr,
+            row_ptr,
+            padded_runs,
+        }
+    }
+
+    /// Number of stored column indices (non-`Ω[0]` elements).
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Number of distinct values (K).
+    pub fn codebook_len(&self) -> usize {
+        self.omega.len()
+    }
+
+    /// Total run slots (Σ (k̄_r + k̃_r)).
+    pub fn total_runs(&self) -> u64 {
+        (self.omega_ptr.len() - 1) as u64
+    }
+
+    /// Total padded (empty) runs (Σ k̃_r).
+    pub fn padded_runs(&self) -> u64 {
+        self.padded_runs
+    }
+
+    /// Average number of shared elements per row, excluding the most
+    /// frequent value — the paper's k̄.
+    pub fn kbar(&self) -> f64 {
+        (self.total_runs() - self.padded_runs) as f64 / self.rows as f64
+    }
+
+    /// Average number of padded indices per row — the paper's k̃.
+    pub fn ktilde(&self) -> f64 {
+        self.padded_runs as f64 / self.rows as f64
+    }
+
+    /// Accounted width of the ΩPtr array (values up to nnz).
+    pub fn omega_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.nnz())
+    }
+
+    /// Accounted width of the rowPtr array (values up to total_runs).
+    pub fn row_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.total_runs() as usize)
+    }
+
+    /// Run slots of row `r`: for each run `j` (0-based within the row), the
+    /// value is `omega[1 + j]` and the columns are
+    /// `col_idx[omega_ptr[s+j] .. omega_ptr[s+j+1]]`.
+    #[inline]
+    pub fn row_runs(&self, r: usize) -> (usize, usize) {
+        (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize)
+    }
+}
+
+impl MatrixFormat for Cer {
+    fn name(&self) -> &'static str {
+        "CER"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        // Fill with the implicit most-frequent value.
+        let w0 = self.omega[0];
+        if w0 != 0.0 {
+            out.data_mut().fill(w0);
+        }
+        for r in 0..self.rows {
+            let (s, e) = self.row_runs(r);
+            for (j, slot) in (s..e).enumerate() {
+                let value = self.omega[1 + j];
+                let (rs, re) = (
+                    self.omega_ptr[slot] as usize,
+                    self.omega_ptr[slot + 1] as usize,
+                );
+                for i in rs..re {
+                    out.set(r, self.col_idx.get(i), value);
+                }
+            }
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "Omega",
+                    entries: self.omega.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "colI",
+                    entries: self.col_idx.len() as u64,
+                    bits_per_entry: self.col_idx.width().bits(),
+                },
+                StoragePart {
+                    name: "OmegaPtr",
+                    entries: self.omega_ptr.len() as u64,
+                    bits_per_entry: self.omega_ptr_width().bits(),
+                },
+                StoragePart {
+                    name: "rowPtr",
+                    entries: self.row_ptr.len() as u64,
+                    bits_per_entry: self.row_ptr_width().bits(),
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_example_arrays() {
+        // §III-A gives the exact CER arrays of the 5×12 running example.
+        let cer = Cer::from_dense(&paper_example_matrix());
+        assert_eq!(cer.omega, vec![0.0, 4.0, 3.0, 2.0]);
+        assert_eq!(
+            cer.col_idx.to_vec(),
+            vec![
+                4, 9, 11, 1, 8, 3, 7, 0, 1, 5, 8, 9, 11, 0, 3, 7, 2, 9, 3, 4, 5, 8, 9, 7, 1, 2,
+                5, 7
+            ]
+        );
+        assert_eq!(cer.omega_ptr, vec![0, 3, 5, 7, 13, 16, 17, 18, 23, 24, 28]);
+        assert_eq!(cer.row_ptr, vec![0, 3, 4, 7, 9, 10]);
+        // "49 entries" (§III-A): 4 + 28 + 11 + 6.
+        let entries: u64 = cer.storage().parts.iter().map(|p| p.entries).sum();
+        assert_eq!(entries, 49);
+        // No padding needed in the paper example.
+        assert_eq!(cer.padded_runs(), 0);
+        assert!((cer.kbar() - 10.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roundtrip_paper_example() {
+        let m = paper_example_matrix();
+        assert_eq!(Cer::from_dense(&m).to_dense(), m);
+    }
+
+    #[test]
+    fn padding_emitted_for_gap_rows() {
+        // Row contains the 3rd-most-frequent value but not the 2nd: one
+        // empty run must be padded in.
+        let m = Dense::from_rows(&[
+            vec![0.0, 1.0, 1.0, 1.0], // freq: 0×1? — values: 0 once, 1 thrice
+            vec![0.0, 0.0, 2.0, 3.0],
+            vec![0.0, 0.0, 0.0, 3.0],
+        ]);
+        // counts: 0→6, 1→3, 3→2, 2→1 → Ω = [0,1,3,2]
+        let cer = Cer::from_dense(&m);
+        assert_eq!(cer.omega, vec![0.0, 1.0, 3.0, 2.0]);
+        // Row 1 has {2,3}: runs must be [empty for 1][3 at col 3][2 at col 2]
+        // Row 2 has {3}: runs [empty for 1][3 at col 3]
+        assert_eq!(cer.padded_runs(), 2);
+        assert_eq!(cer.to_dense(), m);
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = Dense::zeros(3, 8);
+        let cer = Cer::from_dense(&m);
+        assert_eq!(cer.nnz(), 0);
+        assert_eq!(cer.total_runs(), 0);
+        assert_eq!(cer.to_dense(), m);
+    }
+
+    #[test]
+    fn constant_nonzero_matrix() {
+        // Most frequent value is 7, stored implicitly; nothing in colI.
+        let m = Dense::from_vec(2, 3, vec![7.0; 6]);
+        let cer = Cer::from_dense(&m);
+        assert_eq!(cer.omega, vec![7.0]);
+        assert_eq!(cer.nnz(), 0);
+        assert_eq!(cer.to_dense(), m);
+    }
+
+    #[test]
+    fn zero_present_but_not_most_frequent() {
+        let m = Dense::from_rows(&[vec![5.0, 5.0, 0.0], vec![5.0, 5.0, 1.0]]);
+        let cer = Cer::from_dense(&m);
+        assert_eq!(cer.omega[0], 5.0);
+        assert_eq!(cer.to_dense(), m);
+    }
+
+    #[test]
+    fn single_element_matrix() {
+        let m = Dense::from_vec(1, 1, vec![3.0]);
+        assert_eq!(Cer::from_dense(&m).to_dense(), m);
+    }
+
+    #[test]
+    fn kbar_ktilde_accounting() {
+        let m = Dense::from_rows(&[
+            vec![0.0, 1.0, 2.0, 1.0], // 2 distinct non-zero → k̄_0 = 2
+            vec![0.0, 0.0, 0.0, 0.0], // k̄_1 = 0
+        ]);
+        let cer = Cer::from_dense(&m);
+        assert!((cer.kbar() - 1.0).abs() < 1e-12);
+        assert!((cer.ktilde() - 0.0).abs() < 1e-12);
+    }
+}

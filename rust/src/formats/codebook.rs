@@ -1,0 +1,84 @@
+//! Shared-value codebook extraction: find the set Ω of distinct element
+//! values of a matrix together with their frequencies (§II, §IV notation).
+
+use std::collections::HashMap;
+
+use super::Dense;
+
+/// Normalize the f32 bit pattern used as a codebook key (-0.0 → +0.0 so the
+/// zero element is unique).
+#[inline]
+pub fn value_key(v: f32) -> u32 {
+    assert!(!v.is_nan(), "NaN matrix elements are not representable");
+    if v == 0.0 {
+        0f32.to_bits()
+    } else {
+        v.to_bits()
+    }
+}
+
+/// Distinct values of `m` with their counts.
+///
+/// Returned most-frequent-first; ties broken by ascending value so the
+/// codebook is deterministic. This is the paper's "frequency-major order"
+/// (§III-A, CER step 1).
+pub fn frequency_codebook(m: &Dense) -> Vec<(f32, usize)> {
+    let mut counts: HashMap<u32, (f32, usize)> = HashMap::new();
+    for &v in m.data() {
+        let e = counts.entry(value_key(v)).or_insert((v, 0));
+        e.1 += 1;
+    }
+    let mut pairs: Vec<(f32, usize)> = counts.into_values().collect();
+    pairs.sort_by(|a, b| {
+        b.1.cmp(&a.1)
+            .then(a.0.partial_cmp(&b.0).expect("no NaN"))
+    });
+    pairs
+}
+
+/// Rank lookup: value bit-key → index into the codebook ordering.
+pub fn rank_lookup(codebook: &[(f32, usize)]) -> HashMap<u32, u32> {
+    codebook
+        .iter()
+        .enumerate()
+        .map(|(i, &(v, _))| (value_key(v), i as u32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_example_codebook() {
+        // §III-A: Ω = {0, 4, 3, 2}, appearing {32, 21, 4, 3} times.
+        let cb = frequency_codebook(&paper_example_matrix());
+        assert_eq!(cb, vec![(0.0, 32), (4.0, 21), (3.0, 4), (2.0, 3)]);
+    }
+
+    #[test]
+    fn ties_broken_by_value() {
+        let m = Dense::from_rows(&[vec![2.0, 1.0, 1.0, 2.0]]);
+        let cb = frequency_codebook(&m);
+        assert_eq!(cb, vec![(1.0, 2), (2.0, 2)]);
+    }
+
+    #[test]
+    fn negative_zero_folds_into_zero() {
+        let m = Dense::from_rows(&[vec![-0.0, 0.0, 1.0]]);
+        let cb = frequency_codebook(&m);
+        assert_eq!(cb[0].1, 2);
+        assert_eq!(cb[0].0, 0.0);
+    }
+
+    #[test]
+    fn rank_lookup_inverts_codebook() {
+        let cb = frequency_codebook(&paper_example_matrix());
+        let lut = rank_lookup(&cb);
+        assert_eq!(lut[&value_key(0.0)], 0);
+        assert_eq!(lut[&value_key(4.0)], 1);
+        assert_eq!(lut[&value_key(3.0)], 2);
+        assert_eq!(lut[&value_key(2.0)], 3);
+    }
+}

@@ -1,0 +1,285 @@
+//! Compressed Shared Elements Row (CSER) — second contribution (§III-A).
+//!
+//! Relaxes CER's assumption that the frequency ordering is shared across
+//! rows: an explicit per-run codebook-index array `ΩI` names the value of
+//! each run, so rows with arbitrary per-row distributions encode without
+//! padding. The most frequent element stays implicit (positions absent from
+//! `colI`).
+
+use super::codebook::{frequency_codebook, rank_lookup, value_key};
+use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// CSER matrix.
+#[derive(Clone, Debug)]
+pub struct Cser {
+    rows: usize,
+    cols: usize,
+    /// Distinct values. `omega[0]` is the implicit (most frequent) value;
+    /// the rest are sorted ascending (the ordering is immaterial, §III-A —
+    /// ascending keeps the representation canonical; the paper's example
+    /// likewise lists Ω = [0, 2, 3, 4]).
+    pub omega: Vec<f32>,
+    /// Concatenated column-index runs.
+    pub col_idx: ColIndices,
+    /// Codebook index of each run (into `omega`, always ≥ 1).
+    pub omega_idx: Vec<u32>,
+    /// Run boundaries into `col_idx`; `omega_ptr[0] == 0`, length = runs+1.
+    pub omega_ptr: Vec<u32>,
+    /// `row_ptr[r]..row_ptr[r+1]` selects the run slots of row `r`.
+    pub row_ptr: Vec<u32>,
+}
+
+impl Cser {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Convert from dense, O(N).
+    ///
+    /// Runs are emitted per row in *frequency-major* order (matching the
+    /// paper's printed example, and making CSER's `colI` identical to
+    /// CER's), while `ΩI` references the value-sorted codebook. §III-A
+    /// notes both orderings are arbitrary as long as the arrays are
+    /// mutually consistent.
+    pub fn from_dense(m: &Dense) -> Cser {
+        let codebook = frequency_codebook(m);
+        let freq_ranks = rank_lookup(&codebook);
+        // omega[0] = most frequent; the rest ascending by value.
+        let mut omega: Vec<f32> = codebook.iter().map(|&(v, _)| v).collect();
+        omega[1..].sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        // frequency rank → index into `omega`.
+        let mut rank_to_omega = vec![0u32; omega.len()];
+        for (freq_rank, &(v, _)) in codebook.iter().enumerate() {
+            let oi = omega
+                .iter()
+                .position(|&o| value_key(o) == value_key(v))
+                .expect("codebook value present");
+            rank_to_omega[freq_rank] = oi as u32;
+        }
+
+        let k = omega.len();
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut col_idx: Vec<usize> = Vec::new();
+        let mut omega_idx: Vec<u32> = Vec::new();
+        let mut omega_ptr: Vec<u32> = vec![0];
+        let mut row_ptr: Vec<u32> = vec![0];
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for r in 0..rows {
+            for b in buckets.iter_mut() {
+                b.clear();
+            }
+            for (c, &v) in m.row(r).iter().enumerate() {
+                let rank = freq_ranks[&value_key(v)] as usize;
+                if rank != 0 {
+                    buckets[rank].push(c);
+                }
+            }
+            for (rank, bucket) in buckets.iter().enumerate().skip(1) {
+                if !bucket.is_empty() {
+                    col_idx.extend_from_slice(bucket);
+                    omega_idx.push(rank_to_omega[rank]);
+                    omega_ptr.push(col_idx.len() as u32);
+                }
+            }
+            row_ptr.push((omega_ptr.len() - 1) as u32);
+        }
+
+        Cser {
+            rows,
+            cols,
+            omega,
+            col_idx: ColIndices::pack(&col_idx, cols),
+            omega_idx,
+            omega_ptr,
+            row_ptr,
+        }
+    }
+
+    /// Number of stored column indices.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Number of distinct values (K).
+    pub fn codebook_len(&self) -> usize {
+        self.omega.len()
+    }
+
+    /// Total runs (Σ k̄_r — CSER has no padding).
+    pub fn total_runs(&self) -> u64 {
+        self.omega_idx.len() as u64
+    }
+
+    /// Average shared elements per row excluding the implicit value (k̄).
+    pub fn kbar(&self) -> f64 {
+        self.total_runs() as f64 / self.rows as f64
+    }
+
+    /// Accounted width of ΩPtr (values up to nnz).
+    pub fn omega_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.nnz())
+    }
+
+    /// Accounted width of rowPtr (values up to total_runs).
+    pub fn row_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.total_runs() as usize)
+    }
+
+    /// Accounted width of ΩI (values up to K-1).
+    pub fn omega_idx_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.codebook_len().saturating_sub(1))
+    }
+
+    /// Run-slot range of row `r`.
+    #[inline]
+    pub fn row_runs(&self, r: usize) -> (usize, usize) {
+        (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize)
+    }
+}
+
+impl MatrixFormat for Cser {
+    fn name(&self) -> &'static str {
+        "CSER"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        let w0 = self.omega[0];
+        if w0 != 0.0 {
+            out.data_mut().fill(w0);
+        }
+        for r in 0..self.rows {
+            let (s, e) = self.row_runs(r);
+            for slot in s..e {
+                let value = self.omega[self.omega_idx[slot] as usize];
+                let (rs, re) = (
+                    self.omega_ptr[slot] as usize,
+                    self.omega_ptr[slot + 1] as usize,
+                );
+                for i in rs..re {
+                    out.set(r, self.col_idx.get(i), value);
+                }
+            }
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "Omega",
+                    entries: self.omega.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "colI",
+                    entries: self.col_idx.len() as u64,
+                    bits_per_entry: self.col_idx.width().bits(),
+                },
+                StoragePart {
+                    name: "OmegaI",
+                    entries: self.omega_idx.len() as u64,
+                    bits_per_entry: self.omega_idx_width().bits(),
+                },
+                StoragePart {
+                    name: "OmegaPtr",
+                    entries: self.omega_ptr.len() as u64,
+                    bits_per_entry: self.omega_ptr_width().bits(),
+                },
+                StoragePart {
+                    name: "rowPtr",
+                    entries: self.row_ptr.len() as u64,
+                    bits_per_entry: self.row_ptr_width().bits(),
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_example_arrays() {
+        // §III-A gives the exact CSER arrays of the 5×12 running example.
+        let cser = Cser::from_dense(&paper_example_matrix());
+        assert_eq!(cser.omega, vec![0.0, 2.0, 3.0, 4.0]);
+        assert_eq!(
+            cser.col_idx.to_vec(),
+            vec![
+                4, 9, 11, 1, 8, 3, 7, 0, 1, 5, 8, 9, 11, 0, 3, 7, 2, 9, 3, 4, 5, 8, 9, 7, 1, 2,
+                5, 7
+            ]
+        );
+        assert_eq!(cser.omega_idx, vec![3, 2, 1, 3, 3, 2, 1, 3, 2, 3]);
+        assert_eq!(cser.omega_ptr, vec![0, 3, 5, 7, 13, 16, 17, 18, 23, 24, 28]);
+        assert_eq!(cser.row_ptr, vec![0, 3, 4, 7, 9, 10]);
+        // "59 entries" (§III-A): 4 + 28 + 10 + 11 + 6.
+        let entries: u64 = cser.storage().parts.iter().map(|p| p.entries).sum();
+        assert_eq!(entries, 59);
+    }
+
+    #[test]
+    fn roundtrip_paper_example() {
+        let m = paper_example_matrix();
+        assert_eq!(Cser::from_dense(&m).to_dense(), m);
+    }
+
+    #[test]
+    fn row_local_distributions_no_padding() {
+        // A matrix whose per-row frequency orderings differ wildly — CER
+        // pays padding, CSER does not.
+        let m = Dense::from_rows(&[
+            vec![0.0, 1.0, 1.0, 2.0],
+            vec![0.0, 2.0, 2.0, 1.0],
+            vec![0.0, 3.0, 3.0, 3.0],
+        ]);
+        let cser = Cser::from_dense(&m);
+        let cer = super::super::Cer::from_dense(&m);
+        assert_eq!(cser.to_dense(), m);
+        assert_eq!(cer.to_dense(), m);
+        assert_eq!(cser.total_runs(), 5); // 2+2+1 non-empty runs
+        assert!(cer.padded_runs() > 0); // CER must pad the gap rows
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = Dense::zeros(3, 5);
+        let cser = Cser::from_dense(&m);
+        assert_eq!(cser.nnz(), 0);
+        assert_eq!(cser.to_dense(), m);
+    }
+
+    #[test]
+    fn implicit_value_not_zero() {
+        let m = Dense::from_rows(&[vec![9.0, 9.0, 1.0], vec![9.0, 9.0, 0.0]]);
+        let cser = Cser::from_dense(&m);
+        assert_eq!(cser.omega[0], 9.0);
+        assert_eq!(cser.to_dense(), m);
+    }
+
+    #[test]
+    fn kbar_matches_distinct_count() {
+        let m = paper_example_matrix();
+        let cser = Cser::from_dense(&m);
+        // rows have 3,1,3,2,1 distinct non-zero values → k̄ = 10/5 = 2.
+        assert!((cser.kbar() - 2.0).abs() < 1e-12);
+    }
+}

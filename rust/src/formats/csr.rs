@@ -1,0 +1,181 @@
+//! Compressed Sparse Row — the sparse baseline (§III-A "Sparse format").
+//!
+//! Stores the non-zero values in row-major order (`values`), their column
+//! indices (`col_idx`) and row pointers into those arrays (`row_ptr`).
+
+use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// CSR matrix with minimal-width column indices.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Non-zero values in row-major scan order (the paper's `W`).
+    pub values: Vec<f32>,
+    /// Column index of each value.
+    pub col_idx: ColIndices,
+    /// `row_ptr[r]..row_ptr[r+1]` indexes `values`/`col_idx` for row `r`.
+    pub row_ptr: Vec<u32>,
+}
+
+impl Csr {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Convert from dense, O(N).
+    pub fn from_dense(m: &Dense) -> Csr {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut values = Vec::new();
+        let mut cols_v: Vec<usize> = Vec::new();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    values.push(v);
+                    cols_v.push(c);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr {
+            rows,
+            cols,
+            values,
+            col_idx: ColIndices::pack(&cols_v, cols),
+            row_ptr,
+        }
+    }
+
+    /// Number of stored (non-zero) elements.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Accounted width of the row-pointer array (max value is nnz).
+    pub fn row_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.nnz())
+    }
+}
+
+impl MatrixFormat for Csr {
+    fn name(&self) -> &'static str {
+        "CSR"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in s..e {
+                out.set(r, self.col_idx.get(i), self.values[i]);
+            }
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "Omega",
+                    entries: self.values.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "colI",
+                    entries: self.col_idx.len() as u64,
+                    bits_per_entry: self.col_idx.width().bits(),
+                },
+                StoragePart {
+                    name: "rowPtr",
+                    entries: self.row_ptr.len() as u64,
+                    bits_per_entry: self.row_ptr_width().bits(),
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_example_arrays() {
+        // §III-A gives the exact CSR arrays of the 5×12 running example.
+        let m = paper_example_matrix();
+        let csr = Csr::from_dense(&m);
+        assert_eq!(
+            csr.values,
+            vec![
+                3., 2., 4., 2., 3., 4., 4., 4., 4., 4., 4., 4., 4., 4., 3., 4., 4., 2., 4., 4.,
+                4., 3., 4., 4., 4., 4., 4., 4.
+            ]
+        );
+        assert_eq!(
+            csr.col_idx.to_vec(),
+            vec![
+                1, 3, 4, 7, 8, 9, 11, 0, 1, 5, 8, 9, 11, 0, 2, 3, 7, 9, 3, 4, 5, 7, 8, 9, 1, 2,
+                5, 7
+            ]
+        );
+        assert_eq!(csr.row_ptr, vec![0, 7, 13, 18, 24, 28]);
+        // "62 entries" (§III-A): 28 values + 28 indices + 6 pointers.
+        let entries: u64 = csr.storage().parts.iter().map(|p| p.entries).sum();
+        assert_eq!(entries, 62);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = paper_example_matrix();
+        assert_eq!(Csr::from_dense(&m).to_dense(), m);
+    }
+
+    #[test]
+    fn empty_and_full_rows() {
+        let m = Dense::from_rows(&[
+            vec![0.0, 0.0, 0.0],
+            vec![1.0, 2.0, 3.0],
+            vec![0.0, 5.0, 0.0],
+        ]);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.row_ptr, vec![0, 0, 3, 4]);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = Dense::zeros(4, 7);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn storage_matches_eq3_shape() {
+        // Eq. (3): per-element storage (1-p0)(b_Omega + b_I) + b_I/n (+ptr rounding).
+        let m = paper_example_matrix();
+        let csr = Csr::from_dense(&m);
+        let bits = csr.storage().total_bits();
+        // 28 values * 32 + 28 idx * 8 + 6 ptr * 8
+        assert_eq!(bits, 28 * 32 + 28 * 8 + 6 * 8);
+    }
+}

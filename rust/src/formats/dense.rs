@@ -1,0 +1,163 @@
+//! Dense row-major matrix — the paper's baseline representation and the
+//! interchange type all other formats convert from/to.
+
+use super::{MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Dense {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Dense {
+        Dense {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// From a row-major buffer (length must be `rows*cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Dense { rows, cols, data }
+    }
+
+    /// From per-row slices (all rows must have equal length).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Dense {
+        assert!(!rows.is_empty(), "empty matrix");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Dense {
+            rows: rows.len(),
+            cols,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw row-major buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of non-zero elements.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Map every element (returns a new matrix).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Dense {
+        Dense {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+impl MatrixFormat for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn to_dense(&self) -> Dense {
+        self.clone()
+    }
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![StoragePart {
+                name: "Omega",
+                entries: (self.rows * self.cols) as u64,
+                bits_per_entry: VALUE_BITS,
+            }],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Dense::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.nnz(), 4);
+    }
+
+    #[test]
+    fn storage_is_32_bits_per_element() {
+        // Eq. (1): S_dense = b_Omega.
+        let m = Dense::zeros(5, 12);
+        assert_eq!(m.storage().total_bits(), 5 * 12 * 32);
+        assert!((m.storage().bits_per_element(60) - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        Dense::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn map_and_set() {
+        let mut m = Dense::zeros(2, 2);
+        m.set(0, 1, 5.0);
+        let m2 = m.map(|v| v * 2.0);
+        assert_eq!(m2.get(0, 1), 10.0);
+        assert_eq!(m2.nnz(), 1);
+    }
+}

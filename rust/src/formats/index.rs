@@ -1,0 +1,203 @@
+//! Index-width machinery.
+//!
+//! The paper (§V) stores index and pointer arrays "compressed ... to their
+//! minimum required bit-sizes, where we restricted them to be either 8, 16
+//! or 32 bits". The column-index array is the one that dominates both
+//! storage and the dot-product inner loop, so it is kept *physically* at the
+//! minimal width ([`ColIndices`]) and every kernel is monomorphized over the
+//! element type. Pointer arrays (rowPtr, ΩPtr, ΩI) are touched only O(m·k̄)
+//! times per product — they are held as `u32` in memory for simplicity and
+//! their *accounted* width ([`IndexWidth::minimal`] of their max value) is
+//! what enters the storage/energy model, exactly as in the paper's
+//! analytical accounting.
+
+/// One of the three admissible index bit-widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum IndexWidth {
+    U8,
+    U16,
+    U32,
+}
+
+impl IndexWidth {
+    /// Minimal admissible width able to represent `max_value`.
+    pub fn minimal(max_value: usize) -> IndexWidth {
+        if max_value <= u8::MAX as usize {
+            IndexWidth::U8
+        } else if max_value <= u16::MAX as usize {
+            IndexWidth::U16
+        } else {
+            assert!(
+                max_value <= u32::MAX as usize,
+                "index value {max_value} exceeds u32"
+            );
+            IndexWidth::U32
+        }
+    }
+
+    /// Width in bits (the paper's b_I).
+    pub fn bits(self) -> u32 {
+        match self {
+            IndexWidth::U8 => 8,
+            IndexWidth::U16 => 16,
+            IndexWidth::U32 => 32,
+        }
+    }
+
+    /// Width in bytes.
+    pub fn bytes(self) -> usize {
+        self.bits() as usize / 8
+    }
+}
+
+/// Trait over the physical column-index element types.
+pub trait Idx: Copy + Send + Sync + 'static {
+    const BITS: u32;
+    fn to_usize(self) -> usize;
+    fn from_usize(v: usize) -> Self;
+}
+
+macro_rules! impl_idx {
+    ($t:ty, $bits:expr) => {
+        impl Idx for $t {
+            const BITS: u32 = $bits;
+            #[inline(always)]
+            fn to_usize(self) -> usize {
+                self as usize
+            }
+            #[inline(always)]
+            fn from_usize(v: usize) -> Self {
+                debug_assert!(v <= <$t>::MAX as usize);
+                v as $t
+            }
+        }
+    };
+}
+impl_idx!(u8, 8);
+impl_idx!(u16, 16);
+impl_idx!(u32, 32);
+
+/// A column-index array physically stored at its minimal width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ColIndices {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+impl ColIndices {
+    /// Pack `indices` (each `< n_cols`) at the minimal width for `n_cols`.
+    ///
+    /// The width is chosen from the matrix column count (not the max index
+    /// present) so that matrices with identical shapes always get identical
+    /// layouts — this matches the paper's accounting, where b_I is a
+    /// property of the matrix dimension.
+    pub fn pack(indices: &[usize], n_cols: usize) -> ColIndices {
+        match IndexWidth::minimal(n_cols.saturating_sub(1)) {
+            IndexWidth::U8 => ColIndices::U8(indices.iter().map(|&i| i as u8).collect()),
+            IndexWidth::U16 => ColIndices::U16(indices.iter().map(|&i| i as u16).collect()),
+            IndexWidth::U32 => ColIndices::U32(indices.iter().map(|&i| i as u32).collect()),
+        }
+    }
+
+    pub fn width(&self) -> IndexWidth {
+        match self {
+            ColIndices::U8(_) => IndexWidth::U8,
+            ColIndices::U16(_) => IndexWidth::U16,
+            ColIndices::U32(_) => IndexWidth::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ColIndices::U8(v) => v.len(),
+            ColIndices::U16(v) => v.len(),
+            ColIndices::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage footprint in bits.
+    pub fn bits(&self) -> u64 {
+        self.len() as u64 * self.width().bits() as u64
+    }
+
+    /// Random access (dispatching; use [`crate::with_col_indices!`] in hot
+    /// loops instead).
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        match self {
+            ColIndices::U8(v) => v[i] as usize,
+            ColIndices::U16(v) => v[i] as usize,
+            ColIndices::U32(v) => v[i] as usize,
+        }
+    }
+
+    /// Copy out as `usize` values (slow path, tests/validation only).
+    pub fn to_vec(&self) -> Vec<usize> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+/// Dispatch a generic block over the physical index type of a
+/// [`ColIndices`]. `$slice` binds to the typed `&[T]` slice.
+#[macro_export]
+macro_rules! with_col_indices {
+    ($ci:expr, $slice:ident => $body:expr) => {
+        match $ci {
+            $crate::formats::ColIndices::U8($slice) => $body,
+            $crate::formats::ColIndices::U16($slice) => $body,
+            $crate::formats::ColIndices::U32($slice) => $body,
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_width_boundaries() {
+        assert_eq!(IndexWidth::minimal(0), IndexWidth::U8);
+        assert_eq!(IndexWidth::minimal(255), IndexWidth::U8);
+        assert_eq!(IndexWidth::minimal(256), IndexWidth::U16);
+        assert_eq!(IndexWidth::minimal(65_535), IndexWidth::U16);
+        assert_eq!(IndexWidth::minimal(65_536), IndexWidth::U32);
+    }
+
+    #[test]
+    fn pack_uses_column_count_not_max_present() {
+        // Even if all indices fit in u8, a 70k-column matrix needs u32.
+        let ci = ColIndices::pack(&[1, 2, 3], 70_000);
+        assert_eq!(ci.width(), IndexWidth::U32);
+        let ci = ColIndices::pack(&[1, 2, 3], 200);
+        assert_eq!(ci.width(), IndexWidth::U8);
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for n in [10usize, 1_000, 100_000] {
+            let idx: Vec<usize> = (0..9).map(|i| i * (n / 9)).collect();
+            let ci = ColIndices::pack(&idx, n);
+            assert_eq!(ci.to_vec(), idx);
+            assert_eq!(ci.len(), idx.len());
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let ci = ColIndices::pack(&[0, 1, 2, 3], 1_000);
+        assert_eq!(ci.width(), IndexWidth::U16);
+        assert_eq!(ci.bits(), 4 * 16);
+    }
+
+    #[test]
+    fn macro_dispatch() {
+        let ci = ColIndices::pack(&[5, 6], 100);
+        let total: usize = with_col_indices!(&ci, s => s.iter().map(|&v| v as usize).sum());
+        assert_eq!(total, 11);
+    }
+}

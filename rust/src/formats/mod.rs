@@ -1,0 +1,165 @@
+//! The four matrix representations of the paper (§III):
+//!
+//! * [`Dense`] — row-major array (baseline).
+//! * [`Csr`] — Compressed Sparse Row (baseline; spike-and-slab prior).
+//! * [`Cer`] — Compressed Entropy Row (contribution; low-entropy prior with
+//!   shared per-row frequency ordering).
+//! * [`Cser`] — Compressed Shared Elements Row (contribution; low-entropy
+//!   prior, per-row orderings independent).
+//!
+//! All formats are lossless: `format.to_dense()` reproduces the source
+//! matrix bit-exactly. Conversion from dense is O(N) (§V, side note).
+//!
+//! Storage accounting follows §V: matrix element values are f32
+//! (`VALUE_BITS` = 32) and index/pointer arrays are accounted at their
+//! minimal width out of {8, 16, 32} bits.
+
+pub mod cer;
+pub mod codebook;
+pub mod cser;
+pub mod csr;
+pub mod dense;
+pub mod index;
+
+pub use cer::Cer;
+pub use cser::Cser;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use index::{ColIndices, Idx, IndexWidth};
+
+/// Bit-width of a stored matrix element value (single-precision float, §V).
+pub const VALUE_BITS: u32 = 32;
+
+/// One named array of a representation, for storage accounting and the
+/// per-part breakdowns of the paper's Fig. 6.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoragePart {
+    /// Array name as printed in the paper (`Omega`, `colI`, `OmegaPtr`, ...).
+    pub name: &'static str,
+    /// Number of entries in the array.
+    pub entries: u64,
+    /// Accounted bits per entry.
+    pub bits_per_entry: u32,
+}
+
+impl StoragePart {
+    pub fn bits(&self) -> u64 {
+        self.entries * self.bits_per_entry as u64
+    }
+}
+
+/// Full storage breakdown of one represented matrix.
+#[derive(Clone, Debug, Default)]
+pub struct StorageBreakdown {
+    pub parts: Vec<StoragePart>,
+}
+
+impl StorageBreakdown {
+    pub fn total_bits(&self) -> u64 {
+        self.parts.iter().map(|p| p.bits()).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.total_bits() as f64 / 8.0
+    }
+
+    /// Effective bits per matrix element (the paper's S measure).
+    pub fn bits_per_element(&self, n_elements: usize) -> f64 {
+        self.total_bits() as f64 / n_elements as f64
+    }
+
+    /// Bits of the part with the given name (0 if absent).
+    pub fn part_bits(&self, name: &str) -> u64 {
+        self.parts
+            .iter()
+            .filter(|p| p.name == name)
+            .map(|p| p.bits())
+            .sum()
+    }
+}
+
+/// Common interface over the four representations.
+pub trait MatrixFormat {
+    /// Format name as used in the paper's tables.
+    fn name(&self) -> &'static str;
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// Lossless reconstruction.
+    fn to_dense(&self) -> Dense;
+    /// Storage accounting per §V.
+    fn storage(&self) -> StorageBreakdown;
+}
+
+/// Which of the four formats — used by the cost model, selector and engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    Dense,
+    Csr,
+    Cer,
+    Cser,
+}
+
+impl FormatKind {
+    pub const ALL: [FormatKind; 4] = [
+        FormatKind::Dense,
+        FormatKind::Csr,
+        FormatKind::Cer,
+        FormatKind::Cser,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Dense => "dense",
+            FormatKind::Csr => "CSR",
+            FormatKind::Cer => "CER",
+            FormatKind::Cser => "CSER",
+        }
+    }
+}
+
+impl std::fmt::Display for FormatKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for FormatKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(FormatKind::Dense),
+            "csr" => Ok(FormatKind::Csr),
+            "cer" => Ok(FormatKind::Cer),
+            "cser" => Ok(FormatKind::Cser),
+            other => Err(format!("unknown format '{other}' (dense|csr|cer|cser)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_breakdown_totals() {
+        let b = StorageBreakdown {
+            parts: vec![
+                StoragePart { name: "Omega", entries: 4, bits_per_entry: 32 },
+                StoragePart { name: "colI", entries: 28, bits_per_entry: 8 },
+            ],
+        };
+        assert_eq!(b.total_bits(), 4 * 32 + 28 * 8);
+        assert_eq!(b.part_bits("colI"), 224);
+        assert_eq!(b.part_bits("nope"), 0);
+        assert!((b.bits_per_element(60) - 352.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn format_kind_parse_roundtrip() {
+        for k in FormatKind::ALL {
+            let parsed: FormatKind = k.name().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("bogus".parse::<FormatKind>().is_err());
+    }
+}

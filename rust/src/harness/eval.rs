@@ -1,0 +1,295 @@
+//! Shared evaluation core of the reproduction harness.
+
+use crate::costmodel::{trace_matvec, Criterion4, DistStats, EnergyModel, TimeModel};
+use crate::formats::{Dense, FormatKind};
+use crate::kernels::AnyMatrix;
+use crate::networks::weights::{synthesize_quantized_network, TargetStats};
+use crate::networks::zoo::NetworkSpec;
+use crate::stats::decompose::Decomposed;
+use crate::util::bench::time_median_ns;
+use crate::util::Rng;
+
+/// Number of benchmarked formats (dense, CSR, CER, CSER).
+pub const NFMT: usize = 4;
+
+/// Evaluation configuration.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Seed for weight synthesis and benchmark inputs.
+    pub seed: u64,
+    /// Divide layer rows/cols by this factor (1 = paper-exact shapes;
+    /// larger values for fast test runs — ratios stay meaningful but tier
+    /// boundaries shift).
+    pub scale: usize,
+    /// Also measure real kernel wall-clock per layer (slower).
+    pub wallclock: bool,
+    pub energy: EnergyModel,
+    pub time: TimeModel,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            seed: 0xCE5E,
+            scale: 1,
+            wallclock: true,
+            energy: EnergyModel::table_i(),
+            time: TimeModel::default_model(),
+        }
+    }
+}
+
+impl EvalConfig {
+    /// Fast configuration for tests: shrunken layers, no wall-clock.
+    pub fn fast(scale: usize) -> EvalConfig {
+        EvalConfig {
+            scale,
+            wallclock: false,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-layer, per-format results.
+#[derive(Clone, Debug)]
+pub struct LayerEval {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub patches: u64,
+    /// Post-decomposition distribution statistics.
+    pub stats: DistStats,
+    /// The four criteria per format, order = [`FormatKind::ALL`].
+    pub crit: [Criterion4; NFMT],
+    /// Measured matvec wall-clock (ns) per format; 0 if not measured.
+    pub wall_ns: [f64; NFMT],
+}
+
+/// Aggregated network totals for one format.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Totals {
+    /// Σ layer storage (bits) — storage is not patch-weighted.
+    pub storage_bits: f64,
+    /// Σ layer ops × patches.
+    pub ops: f64,
+    /// Σ layer modeled time × patches (ns).
+    pub time_ns: f64,
+    /// Σ layer modeled energy × patches (pJ).
+    pub energy_pj: f64,
+    /// Σ layer wall-clock × patches (ns).
+    pub wall_ns: f64,
+}
+
+/// Whole-network evaluation.
+#[derive(Clone, Debug)]
+pub struct NetworkEval {
+    pub net: String,
+    pub layers: Vec<LayerEval>,
+}
+
+/// Scale a layer dimension down for fast runs (≥ 4 to keep formats
+/// non-degenerate).
+fn scaled(dim: usize, scale: usize) -> usize {
+    (dim / scale).max(4)
+}
+
+impl NetworkEval {
+    /// Synthesize `spec`'s layers at `target` statistics and evaluate.
+    pub fn run_synthesized(
+        spec: &NetworkSpec,
+        target: TargetStats,
+        cfg: &EvalConfig,
+    ) -> NetworkEval {
+        let spec_used = if cfg.scale == 1 {
+            spec.clone()
+        } else {
+            let mut s = spec.clone();
+            for l in &mut s.layers {
+                l.rows = scaled(l.rows, cfg.scale);
+                l.cols = scaled(l.cols, cfg.scale);
+            }
+            s
+        };
+        let layers = synthesize_quantized_network(&spec_used, target, cfg.seed);
+        Self::run_matrices(
+            spec.name,
+            spec_used
+                .layers
+                .iter()
+                .map(|l| (l.name.clone(), l.patches))
+                .zip(layers)
+                .map(|((name, patches), m)| (name, patches, m))
+                .collect(),
+            cfg,
+        )
+    }
+
+    /// Evaluate pre-built layer matrices (`(name, patches, matrix)`); used
+    /// by the §V-C pipeline tables and the e2e example.
+    pub fn run_matrices(
+        net: &str,
+        layers: Vec<(String, u64, Dense)>,
+        cfg: &EvalConfig,
+    ) -> NetworkEval {
+        let mut rng = Rng::new(cfg.seed ^ 0xBE0C);
+        let evals = layers
+            .into_iter()
+            .map(|(name, patches, raw)| {
+                // Appendix A.1 preprocessing: mode → 0.
+                let dec = Decomposed::new(&raw);
+                let m = dec.shifted;
+                let stats = DistStats::measure(&m);
+                let x: Vec<f32> = (0..m.cols()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let mut crit = [Criterion4 {
+                    storage_bits: 0,
+                    ops: 0,
+                    time_ns: 0.0,
+                    energy_pj: 0.0,
+                }; NFMT];
+                let mut wall = [0.0f64; NFMT];
+                for (i, kind) in FormatKind::ALL.iter().enumerate() {
+                    let enc = AnyMatrix::encode(*kind, &m);
+                    let trace = trace_matvec(&enc);
+                    crit[i] = Criterion4 {
+                        storage_bits: enc.storage().total_bits(),
+                        ops: trace.total_ops(),
+                        time_ns: trace.time_ns(&cfg.time),
+                        energy_pj: trace.energy_pj(&cfg.energy),
+                    };
+                    if cfg.wallclock {
+                        let mut y = vec![0.0f32; m.rows()];
+                        // Batch tiny layers so each sample is ≥ ~100k elements.
+                        let elems = (m.rows() * m.cols()).max(1);
+                        let batch = (100_000 / elems).max(1);
+                        let per = time_median_ns(1, 5, || {
+                            for _ in 0..batch {
+                                enc.matvec(&x, &mut y);
+                            }
+                            std::hint::black_box(&y);
+                        }) / batch as f64;
+                        wall[i] = per;
+                    }
+                }
+                LayerEval {
+                    name,
+                    rows: m.rows(),
+                    cols: m.cols(),
+                    patches,
+                    stats,
+                    crit,
+                    wall_ns: wall,
+                }
+            })
+            .collect();
+        NetworkEval {
+            net: net.to_string(),
+            layers: evals,
+        }
+    }
+
+    /// Patch-weighted totals per format.
+    pub fn totals(&self) -> [Totals; NFMT] {
+        let mut out = [Totals::default(); NFMT];
+        for l in &self.layers {
+            let p = l.patches as f64;
+            for i in 0..NFMT {
+                out[i].storage_bits += l.crit[i].storage_bits as f64;
+                out[i].ops += l.crit[i].ops as f64 * p;
+                out[i].time_ns += l.crit[i].time_ns * p;
+                out[i].energy_pj += l.crit[i].energy_pj * p;
+                out[i].wall_ns += l.wall_ns[i] * p;
+            }
+        }
+        out
+    }
+
+    /// Network-level effective statistics (Table IV aggregation):
+    /// (p0, H, k̄, n) weighted as the paper specifies.
+    pub fn effective_stats(&self) -> (f64, f64, f64, f64) {
+        let mut total_w = 0.0; // elements
+        let mut total_rows = 0.0;
+        let (mut p0, mut h, mut kbar, mut params) = (0.0, 0.0, 0.0, 0.0);
+        for l in &self.layers {
+            let w = (l.rows * l.cols) as f64;
+            total_w += w;
+            total_rows += l.rows as f64;
+            p0 += l.stats.p0 * w;
+            h += l.stats.entropy * w;
+            kbar += l.stats.kbar * l.rows as f64;
+            params += w;
+        }
+        (
+            p0 / total_w,
+            h / total_w,
+            kbar / total_rows,
+            params / total_rows,
+        )
+    }
+}
+
+/// Gain (×) of format `i` relative to dense for a given criterion accessor.
+pub fn gain(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64, i: usize) -> f64 {
+    f(&totals[0]) / f(&totals[i])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::zoo::NetworkSpec;
+
+    #[test]
+    fn lenet_eval_shapes_and_gains() {
+        let spec = NetworkSpec::lenet_300_100();
+        let t = TargetStats { p0: 0.36, entropy: 3.73, k: 128 };
+        let cfg = EvalConfig::fast(1);
+        let ev = NetworkEval::run_synthesized(&spec, t, &cfg);
+        assert_eq!(ev.layers.len(), 3);
+        let totals = ev.totals();
+        // Dense storage = params × 32 bits.
+        assert_eq!(
+            totals[0].storage_bits as u64,
+            spec.params() * 32
+        );
+        // On a low-entropy net, CER (idx 2) and CSER (idx 3) must beat
+        // dense on storage and energy.
+        for i in [2usize, 3] {
+            assert!(totals[i].storage_bits < totals[0].storage_bits);
+            assert!(totals[i].energy_pj < totals[0].energy_pj);
+            assert!(totals[i].ops < totals[0].ops);
+        }
+    }
+
+    #[test]
+    fn scaled_eval_shrinks_layers() {
+        let spec = NetworkSpec::lenet_300_100();
+        let t = TargetStats { p0: 0.3, entropy: 3.0, k: 64 };
+        let cfg = EvalConfig::fast(4);
+        let ev = NetworkEval::run_synthesized(&spec, t, &cfg);
+        assert_eq!(ev.layers[0].rows, 75);
+        assert_eq!(ev.layers[0].cols, 196);
+    }
+
+    #[test]
+    fn effective_stats_are_weighted() {
+        let spec = NetworkSpec::lenet_300_100();
+        let t = TargetStats { p0: 0.36, entropy: 3.73, k: 128 };
+        let ev = NetworkEval::run_synthesized(&spec, t, &EvalConfig::fast(1));
+        let (p0, h, kbar, n) = ev.effective_stats();
+        assert!((p0 - 0.36).abs() < 0.1, "p0 {p0}");
+        assert!((h - 3.73).abs() < 0.5, "H {h}");
+        assert!(kbar > 10.0, "kbar {kbar}");
+        assert!((n - spec.effective_cols()).abs() < 1.0, "n {n}");
+    }
+
+    #[test]
+    fn patch_weighting_multiplies_conv_costs() {
+        let spec = NetworkSpec::lenet5();
+        let t = TargetStats { p0: 0.5, entropy: 2.0, k: 32 };
+        let ev = NetworkEval::run_synthesized(&spec, t, &EvalConfig::fast(1));
+        let conv1 = &ev.layers[0];
+        assert_eq!(conv1.patches, 576);
+        let totals = ev.totals();
+        // conv1 alone contributes more ops than its single-matvec trace.
+        assert!(totals[0].ops > conv1.crit[0].ops as f64 * 500.0);
+    }
+}

@@ -1,0 +1,437 @@
+//! Figures 1, 4, 5, 6–9 (and the 12–14 per-network variants), 10 — each as
+//! a CSV under `results/` plus a terminal summary.
+
+use std::io;
+use std::path::Path;
+
+use crate::costmodel::{trace_matvec, Criterion4, DistStats, EnergyModel, OpClass, TimeModel};
+use crate::formats::FormatKind;
+use crate::harness::eval::{NetworkEval, NFMT};
+use crate::kernels::AnyMatrix;
+use crate::networks::weights::synthesize_float_layer;
+use crate::networks::zoo::{LayerKind, LayerSpec, NetworkSpec};
+use crate::stats::entropy::{max_entropy, min_entropy};
+use crate::stats::quantize::uniform_quantize;
+use crate::stats::synth::PlanePoint;
+use crate::util::csv::CsvWriter;
+use crate::util::Rng;
+
+/// Fig. 1 — distribution of the quantized VGG-16 last layer (1000×4096,
+/// 7-bit uniform quantizer): writes the pmf and the top-15 values.
+/// Returns (mode value, mode frequency, K).
+pub fn figure1(out_dir: &Path, seed: u64) -> io::Result<(f32, f64, usize)> {
+    let spec = LayerSpec {
+        name: "vgg16.fc8".into(),
+        kind: LayerKind::Fc,
+        rows: 1000,
+        cols: 4096,
+        patches: 1,
+    };
+    let mut rng = Rng::new(seed ^ 0xF161);
+    // Scale-mixture weights → realistic heavy-tailed layer (DESIGN.md §4).
+    let w = synthesize_float_layer(&spec, 0.008, 0.03, 6.0, &mut rng);
+    let q = uniform_quantize(&w, 7);
+    let codebook = crate::formats::codebook::frequency_codebook(&q);
+    let n = (q.rows() * q.cols()) as f64;
+    let mut csv = CsvWriter::create(out_dir.join("figure1_pmf.csv"), &["value", "pmf"])?;
+    let mut by_value = codebook.clone();
+    by_value.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (v, c) in &by_value {
+        csv.row(&[format!("{v}"), format!("{}", *c as f64 / n)])?;
+    }
+    csv.finish()?;
+    let mut top = CsvWriter::create(out_dir.join("figure1_top15.csv"), &["rank", "value", "freq"])?;
+    for (i, (v, c)) in codebook.iter().take(15).enumerate() {
+        top.row(&[
+            format!("{}", i + 1),
+            format!("{v}"),
+            format!("{}", *c as f64 / n),
+        ])?;
+    }
+    top.finish()?;
+    Ok((codebook[0].0, codebook[0].1 as f64 / n, codebook.len()))
+}
+
+/// Fig. 4 — winner map on the (H, p₀) plane.
+///
+/// For `grid × grid` points, samples `samples` matrices of `m × n` with
+/// `K = k` values, averages the four criteria per format and records which
+/// of {dense, CSR, CER/CSER} wins each criterion. Infeasible points are
+/// skipped. Writes `figure4.csv` with one row per feasible point.
+/// Returns (feasible points, per-criterion win counts [dense, csr, proposed]).
+#[allow(clippy::too_many_arguments)]
+pub fn figure4(
+    out_dir: &Path,
+    seed: u64,
+    grid: usize,
+    samples: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    energy: &EnergyModel,
+    time: &TimeModel,
+) -> io::Result<(usize, [[u32; 3]; 4])> {
+    let mut csv = CsvWriter::create(
+        out_dir.join("figure4.csv"),
+        &[
+            "H",
+            "p0",
+            "win_storage",
+            "win_ops",
+            "win_time",
+            "win_energy",
+        ],
+    )?;
+    let mut rng = Rng::new(seed ^ 0xF164);
+    let mut feasible = 0usize;
+    let mut wins = [[0u32; 3]; 4];
+    let h_top = (k as f64).log2();
+    for gi in 0..grid {
+        // p0 ∈ (0, 1): grid midpoints.
+        let p0 = (gi as f64 + 0.5) / grid as f64;
+        for gj in 0..grid {
+            let h = h_top * (gj as f64 + 0.5) / grid as f64;
+            if h < min_entropy(p0) || h > max_entropy(p0, k) {
+                continue;
+            }
+            let Some(point) = PlanePoint::synthesize(h, p0, k) else {
+                continue;
+            };
+            feasible += 1;
+            // Average criteria over samples.
+            let mut acc = [[0.0f64; 4]; NFMT];
+            for _ in 0..samples {
+                let mat = point.sample_matrix(m, n, &mut rng);
+                for (fi, kind) in FormatKind::ALL.iter().enumerate() {
+                    let c = Criterion4::evaluate(&AnyMatrix::encode(*kind, &mat), energy, time);
+                    for ci in 0..4 {
+                        acc[fi][ci] += c.get(ci);
+                    }
+                }
+            }
+            // Winner per criterion, folded to {0: dense, 1: csr, 2: cer|cser}.
+            let mut row = vec![format!("{h:.4}"), format!("{p0:.4}")];
+            for ci in 0..4 {
+                let mut best = 0usize;
+                for fi in 1..NFMT {
+                    if acc[fi][ci] < acc[best][ci] {
+                        best = fi;
+                    }
+                }
+                let folded = match best {
+                    0 => 0,
+                    1 => 1,
+                    _ => 2,
+                };
+                wins[ci][folded] += 1;
+                row.push(["dense", "csr", "proposed"][folded].to_string());
+            }
+            csv.row(&row)?;
+        }
+    }
+    csv.finish()?;
+    Ok((feasible, wins))
+}
+
+/// Fig. 5 — efficiency ratios vs the dense format as the column count n
+/// grows (H = 4, p₀ = 0.55, m = 100 in the paper). Writes `figure5.csv`
+/// with per-(n, format) ratio rows for all four criteria.
+#[allow(clippy::too_many_arguments)]
+pub fn figure5(
+    out_dir: &Path,
+    seed: u64,
+    h: f64,
+    p0: f64,
+    m: usize,
+    cols: &[usize],
+    samples: usize,
+    k: usize,
+    energy: &EnergyModel,
+    time: &TimeModel,
+) -> io::Result<Vec<(usize, [[f64; 4]; NFMT])>> {
+    let point = PlanePoint::synthesize(h, p0, k).expect("feasible (H,p0)");
+    let mut rng = Rng::new(seed ^ 0xF165);
+    let mut csv = CsvWriter::create(
+        out_dir.join("figure5.csv"),
+        &["n", "format", "storage_ratio", "ops_ratio", "time_ratio", "energy_ratio"],
+    )?;
+    let mut out = Vec::new();
+    for &n in cols {
+        let mut acc = [[0.0f64; 4]; NFMT];
+        for _ in 0..samples {
+            let mat = point.sample_matrix(m, n, &mut rng);
+            for (fi, kind) in FormatKind::ALL.iter().enumerate() {
+                let c = Criterion4::evaluate(&AnyMatrix::encode(*kind, &mat), energy, time);
+                for ci in 0..4 {
+                    acc[fi][ci] += c.get(ci);
+                }
+            }
+        }
+        // Ratios vs dense (dense/X, >1 = better than dense).
+        let mut ratios = [[0.0f64; 4]; NFMT];
+        for fi in 0..NFMT {
+            for ci in 0..4 {
+                ratios[fi][ci] = acc[0][ci] / acc[fi][ci];
+            }
+            csv.row(&[
+                format!("{n}"),
+                FormatKind::ALL[fi].name().to_string(),
+                format!("{:.4}", ratios[fi][0]),
+                format!("{:.4}", ratios[fi][1]),
+                format!("{:.4}", ratios[fi][2]),
+                format!("{:.4}", ratios[fi][3]),
+            ])?;
+        }
+        out.push((n, ratios));
+    }
+    csv.finish()?;
+    Ok(out)
+}
+
+/// Figs. 6–9 (and 12–14 for other nets) — per-format breakdowns for one
+/// evaluated network:
+///
+/// * `*_storage.csv` — bits per data-structure part (Fig. 6),
+/// * `*_ops.csv` / `*_time.csv` / `*_energy.csv` — totals per operation
+///   class (Figs. 7–9), patch-weighted like the tables.
+pub fn breakdown(
+    ev: &NetworkEval,
+    matrices: &[(String, u64, crate::formats::Dense)],
+    out_dir: &Path,
+    energy: &EnergyModel,
+    time: &TimeModel,
+) -> io::Result<()> {
+    let tag = ev.net.to_ascii_lowercase();
+    // Storage parts.
+    let mut s_csv = CsvWriter::create(
+        out_dir.join(format!("breakdown_{tag}_storage.csv")),
+        &["format", "part", "bits"],
+    )?;
+    let part_names = ["Omega", "colI", "OmegaI", "OmegaPtr", "rowPtr", "codes"];
+    for kind in FormatKind::ALL {
+        let mut totals: std::collections::BTreeMap<&str, u64> = Default::default();
+        for (_, _, m) in matrices {
+            let enc = AnyMatrix::encode(kind, m);
+            for p in enc.storage().parts {
+                *totals.entry(p.name).or_insert(0) += p.bits();
+            }
+        }
+        for name in part_names {
+            if let Some(&bits) = totals.get(name) {
+                s_csv.row(&[kind.name().to_string(), name.to_string(), bits.to_string()])?;
+            }
+        }
+    }
+    s_csv.finish()?;
+    // Op-class breakdowns.
+    for (metric, fname) in [("ops", "ops"), ("time", "time"), ("energy", "energy")] {
+        let mut csv = CsvWriter::create(
+            out_dir.join(format!("breakdown_{tag}_{fname}.csv")),
+            &["format", "class", "value"],
+        )?;
+        for kind in FormatKind::ALL {
+            let mut by_class = [0.0f64; OpClass::ALL.len()];
+            for (_, patches, m) in matrices {
+                let trace = trace_matvec(&AnyMatrix::encode(kind, m));
+                for (i, class) in OpClass::ALL.iter().enumerate() {
+                    let v = match metric {
+                        "ops" => trace.ops_of(*class) as f64,
+                        "time" => trace.time_of_ns(*class, time),
+                        _ => trace.energy_of_pj(*class, energy),
+                    };
+                    by_class[i] += v * *patches as f64;
+                }
+            }
+            for (i, class) in OpClass::ALL.iter().enumerate() {
+                csv.row(&[
+                    kind.name().to_string(),
+                    class.label().to_string(),
+                    format!("{}", by_class[i]),
+                ])?;
+            }
+        }
+        csv.finish()?;
+    }
+    Ok(())
+}
+
+/// Fig. 10 — per-layer (H, p₀) scatter of the §V-B zoo plus the feasible-
+/// region boundary lines. Writes `figure10.csv`.
+pub fn figure10(evals: &[NetworkEval], out_dir: &Path) -> io::Result<()> {
+    let mut csv = CsvWriter::create(
+        out_dir.join("figure10.csv"),
+        &["net", "layer", "H", "p0", "elements"],
+    )?;
+    for ev in evals {
+        for l in &ev.layers {
+            csv.row(&[
+                ev.net.clone(),
+                l.name.clone(),
+                format!("{:.4}", l.stats.entropy),
+                format!("{:.4}", l.stats.p0),
+                format!("{}", l.rows * l.cols),
+            ])?;
+        }
+    }
+    csv.finish()?;
+    // Boundary lines for the plot.
+    let mut b = CsvWriter::create(
+        out_dir.join("figure10_boundary.csv"),
+        &["p0", "H_min", "H_max"],
+    )?;
+    for i in 1..100 {
+        let p0 = i as f64 / 100.0;
+        b.row(&[
+            format!("{p0:.2}"),
+            format!("{:.4}", min_entropy(p0)),
+            format!("{:.4}", max_entropy(p0, 128)),
+        ])?;
+    }
+    b.finish()?;
+    Ok(())
+}
+
+/// Convenience: rebuild the layer matrices of an evaluated §V-B network for
+/// the breakdown figures (same seed ⇒ same matrices as the tables).
+pub fn synthesize_vb_matrices(
+    net: &str,
+    seed: u64,
+    scale: usize,
+) -> Vec<(String, u64, crate::formats::Dense)> {
+    let spec = NetworkSpec::by_name(net).unwrap();
+    let target = crate::networks::weights::TargetStats::table_iv(net).unwrap();
+    let mut spec_used = spec.clone();
+    if scale > 1 {
+        for l in &mut spec_used.layers {
+            l.rows = (l.rows / scale).max(4);
+            l.cols = (l.cols / scale).max(4);
+        }
+    }
+    let mats = crate::networks::weights::synthesize_quantized_network(&spec_used, target, seed);
+    spec_used
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), l.patches))
+        .zip(mats)
+        .map(|((name, patches), m)| (name, patches, m))
+        .collect()
+}
+
+/// Quick text summary of a figure-4 run (used by the CLI).
+pub fn figure4_summary(wins: &[[u32; 3]; 4]) -> String {
+    let mut out = String::new();
+    for (ci, name) in Criterion4::NAMES.iter().enumerate() {
+        out.push_str(&format!(
+            "{name:>8}: dense {:>4}  csr {:>4}  proposed {:>4}\n",
+            wins[ci][0], wins[ci][1], wins[ci][2]
+        ));
+    }
+    out
+}
+
+/// Measured statistics summary of a matrix (CLI `inspect`).
+pub fn inspect(m: &crate::formats::Dense) -> String {
+    let s = DistStats::measure(m);
+    format!(
+        "shape {}x{}  K {}  p0 {:.4}  H {:.4} bits  kbar {:.2}  ktilde {:.2}",
+        s.m, s.n, s.k, s.p0, s.entropy, s.kbar, s.ktilde
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::eval::EvalConfig;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("cer_fig_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn figure1_mode_is_small_and_k_near_128() {
+        let d = tmp();
+        let (_, freq, k) = figure1(&d, 1).unwrap();
+        // Fig. 1: mode frequency ≈ 4.2%, no dominant spike.
+        assert!(freq > 0.005 && freq < 0.3, "mode freq {freq}");
+        assert!(k > 48 && k <= 128, "K = {k}");
+        assert!(d.join("figure1_pmf.csv").exists());
+        assert!(d.join("figure1_top15.csv").exists());
+    }
+
+    #[test]
+    fn figure4_small_grid_produces_expected_regions() {
+        let d = tmp();
+        let e = EnergyModel::table_i();
+        let t = TimeModel::default_model();
+        let (feasible, wins) = figure4(&d, 3, 6, 2, 40, 40, 32, &e, &t).unwrap();
+        assert!(feasible > 8, "feasible {feasible}");
+        // Energy criterion: the proposed formats win somewhere.
+        assert!(wins[3][2] > 0, "proposed should win some energy points");
+        // Storage: the proposed formats dominate the low-entropy region.
+        assert!(wins[0][2] > 0, "proposed should win some storage points");
+        // #ops: dense wins the high-entropy/low-sparsity corner (no index
+        // loads) — the paper's upper-left blue region.
+        assert!(wins[1][0] > 0, "dense should win some ops points");
+    }
+
+    #[test]
+    fn figure5_ratios_improve_with_n() {
+        let d = tmp();
+        let e = EnergyModel::table_i();
+        let t = TimeModel::default_model();
+        let rows = figure5(&d, 5, 4.0, 0.55, 50, &[64, 512, 4096], 2, 128, &e, &t).unwrap();
+        // CER (idx 2) storage ratio at n=4096 must exceed ratio at n=64 and
+        // beat dense (>1).
+        let r64 = rows[0].1[2][0];
+        let r4096 = rows[2].1[2][0];
+        assert!(r4096 > r64, "CER storage ratio: {r64} → {r4096}");
+        assert!(r4096 > 1.0);
+        // CER and CSER converge as n → ∞ (§IV corollary).
+        let cer = rows[2].1[2][0];
+        let cser = rows[2].1[3][0];
+        assert!((cer - cser).abs() / cer < 0.1, "CER {cer} vs CSER {cser}");
+    }
+
+    #[test]
+    fn breakdown_files_written() {
+        let d = tmp();
+        let mats = synthesize_vb_matrices("densenet", 7, 32);
+        let ev = NetworkEval::run_matrices(
+            "DenseNet",
+            mats.clone(),
+            &EvalConfig::fast(32),
+        );
+        breakdown(
+            &ev,
+            &mats,
+            &d,
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+        )
+        .unwrap();
+        for f in [
+            "breakdown_densenet_storage.csv",
+            "breakdown_densenet_ops.csv",
+            "breakdown_densenet_time.csv",
+            "breakdown_densenet_energy.csv",
+        ] {
+            assert!(d.join(f).exists(), "{f}");
+        }
+    }
+
+    #[test]
+    fn figure10_scatter_within_feasible_region() {
+        let d = tmp();
+        let cfg = EvalConfig::fast(24);
+        let evals = crate::harness::tables::eval_vb_networks(&cfg);
+        figure10(&evals, &d).unwrap();
+        for ev in &evals {
+            for l in &ev.layers {
+                assert!(l.stats.entropy >= min_entropy(l.stats.p0) - 1e-6);
+                assert!(l.stats.entropy <= max_entropy(l.stats.p0, 129) + 1e-6);
+            }
+        }
+    }
+}

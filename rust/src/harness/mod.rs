@@ -1,0 +1,17 @@
+//! Reproduction harness: everything needed to regenerate each table and
+//! figure of the paper (see DESIGN.md §3 for the experiment index).
+//!
+//! * [`eval`] — shared evaluation core: synthesize/compress a network's
+//!   layers, benchmark every representation under all four criteria
+//!   (storage / #ops / modeled time / modeled energy) plus real kernel
+//!   wall-clock, and aggregate over layers exactly as the paper does
+//!   (conv layers weighted by patch count, Appendix A.2).
+//! * [`tables`] — Tables I–VI and the AlexNet/packed-dense experiments.
+//! * [`figures`] — Figures 1, 4, 5, 6–9 (+12–14 variants), 10 as CSVs under
+//!   `results/`.
+
+pub mod eval;
+pub mod figures;
+pub mod tables;
+
+pub use eval::{EvalConfig, LayerEval, NetworkEval, Totals, NFMT};

@@ -1,0 +1,544 @@
+//! Tables I–VI of the paper, plus the AlexNet (Fig. 11) and packed-dense
+//! (§V-B side note, E15) experiments.
+//!
+//! Each function prints the table in the paper's layout and (where given an
+//! output directory) writes a CSV twin under `results/`.
+
+use std::io;
+use std::path::Path;
+
+use crate::compress::pipeline::CompressionPipeline;
+use crate::costmodel::{trace_matvec, EnergyModel, MemTier};
+use crate::costmodel::opcount::BaseOp;
+use crate::costmodel::trace::trace_packed;
+use crate::harness::eval::{EvalConfig, NetworkEval, Totals, NFMT};
+use crate::kernels::{AnyMatrix, PackedDense};
+use crate::networks::weights::{synthesize_float_layer, TargetStats};
+use crate::networks::zoo::NetworkSpec;
+use crate::util::bench::time_median_ns;
+use crate::util::csv::CsvWriter;
+use crate::util::table::TextTable;
+use crate::util::Rng;
+
+/// Table I — print the energy model constants (audit of the inputs).
+pub fn table1() -> String {
+    let e = EnergyModel::table_i();
+    let mut t = TextTable::new(&["Op", "8 bits", "16 bits", "32 bits"]);
+    t.row(vec![
+        "float add".into(),
+        format!("{}", e.add[0]),
+        format!("{}", e.add[1]),
+        format!("{}", e.add[2]),
+    ]);
+    t.row(vec![
+        "float mul".into(),
+        format!("{}", e.mul[0]),
+        format!("{}", e.mul[1]),
+        format!("{}", e.mul[2]),
+    ]);
+    for (tier, row) in MemTier::ALL.iter().zip(e.rw.iter()) {
+        t.row(vec![
+            format!("R/W ({})", tier.label()),
+            format!("{}", row[0]),
+            format!("{}", row[1]),
+            format!("{}", row[2]),
+        ]);
+    }
+    t.render()
+}
+
+/// The §V-B networks with their Table IV operating points.
+fn vb_networks() -> Vec<(NetworkSpec, TargetStats)> {
+    ["vgg16", "resnet152", "densenet"]
+        .iter()
+        .map(|n| {
+            (
+                NetworkSpec::by_name(n).unwrap(),
+                TargetStats::table_iv(n).unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Evaluate the three §V-B networks (shared by Tables II–IV).
+pub fn eval_vb_networks(cfg: &EvalConfig) -> Vec<NetworkEval> {
+    vb_networks()
+        .iter()
+        .map(|(spec, t)| NetworkEval::run_synthesized(spec, *t, cfg))
+        .collect()
+}
+
+fn gains_row(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64) -> [f64; NFMT] {
+    let base = f(&totals[0]);
+    [
+        1.0,
+        base / f(&totals[1]),
+        base / f(&totals[2]),
+        base / f(&totals[3]),
+    ]
+}
+
+/// Table II — storage gains of the §V-B networks.
+pub fn table2(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    let mut t = TextTable::new(&["Storage", "original [MB]", "CSR", "CER", "CSER"]);
+    let mut csv = out_dir
+        .map(|d| CsvWriter::create(d.join("table2.csv"), &["net", "original_mb", "csr", "cer", "cser"]))
+        .transpose()?;
+    for ev in evals {
+        let totals = ev.totals();
+        let g = gains_row(&totals, |t| t.storage_bits);
+        let mb = totals[0].storage_bits / 8.0 / 1e6;
+        t.row(vec![
+            ev.net.clone(),
+            format!("{mb:.2}"),
+            format!("x{:.2}", g[1]),
+            format!("x{:.2}", g[2]),
+            format!("x{:.2}", g[3]),
+        ]);
+        if let Some(w) = csv.as_mut() {
+            w.row(&[
+                ev.net.clone(),
+                format!("{mb:.3}"),
+                format!("{:.3}", g[1]),
+                format!("{:.3}", g[2]),
+                format!("{:.3}", g[3]),
+            ])?;
+        }
+    }
+    if let Some(w) = csv {
+        w.finish()?;
+    }
+    Ok(t.render())
+}
+
+/// Table III / Table VI — #ops, modeled time, modeled energy and measured
+/// wall-clock gains. `units` scales the "original" column: (ops divisor,
+/// label) etc. are chosen per table by the caller.
+pub fn table_ops_time_energy(
+    evals: &[NetworkEval],
+    ops_unit: (f64, &str),
+    time_unit: (f64, &str),
+    energy_unit: (f64, &str),
+    csv_name: &str,
+    out_dir: Option<&Path>,
+) -> io::Result<String> {
+    let mut t = TextTable::new(&["criterion", "original", "CSR", "CER", "CSER"]);
+    let mut csv = out_dir
+        .map(|d| {
+            CsvWriter::create(
+                d.join(csv_name),
+                &["net", "criterion", "original", "csr", "cer", "cser"],
+            )
+        })
+        .transpose()?;
+    for ev in evals {
+        let totals = ev.totals();
+        let rows: Vec<(&str, f64, &str, [f64; NFMT])> = vec![
+            (
+                "#ops",
+                totals[0].ops / ops_unit.0,
+                ops_unit.1,
+                gains_row(&totals, |t| t.ops),
+            ),
+            (
+                "time (model)",
+                totals[0].time_ns / time_unit.0,
+                time_unit.1,
+                gains_row(&totals, |t| t.time_ns),
+            ),
+            (
+                "energy",
+                totals[0].energy_pj / energy_unit.0,
+                energy_unit.1,
+                gains_row(&totals, |t| t.energy_pj),
+            ),
+            (
+                "time (wallclock)",
+                totals[0].wall_ns / time_unit.0,
+                time_unit.1,
+                if totals[0].wall_ns > 0.0 {
+                    gains_row(&totals, |t| t.wall_ns)
+                } else {
+                    [1.0; NFMT]
+                },
+            ),
+        ];
+        for (crit, orig, unit, g) in rows {
+            t.row(vec![
+                format!("{} {}", ev.net, crit),
+                format!("{orig:.2} {unit}"),
+                format!("x{:.2}", g[1]),
+                format!("x{:.2}", g[2]),
+                format!("x{:.2}", g[3]),
+            ]);
+            if let Some(w) = csv.as_mut() {
+                w.row(&[
+                    ev.net.clone(),
+                    crit.to_string(),
+                    format!("{orig:.4}"),
+                    format!("{:.3}", g[1]),
+                    format!("{:.3}", g[2]),
+                    format!("{:.3}", g[3]),
+                ])?;
+            }
+        }
+    }
+    if let Some(w) = csv {
+        w.finish()?;
+    }
+    Ok(t.render())
+}
+
+/// Table III with the paper's units (Gops, s, J).
+pub fn table3(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    table_ops_time_energy(
+        evals,
+        (1e9, "G"),
+        (1e9, "s"),
+        (1e12, "J"),
+        "table3.csv",
+        out_dir,
+    )
+}
+
+/// Table IV — effective network statistics.
+pub fn table4(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    let mut t = TextTable::new(&["net", "p0", "H", "kbar", "n", "kbar/n"]);
+    let mut csv = out_dir
+        .map(|d| CsvWriter::create(d.join("table4.csv"), &["net", "p0", "H", "kbar", "n", "kbar_over_n"]))
+        .transpose()?;
+    for ev in evals {
+        let (p0, h, kbar, n) = ev.effective_stats();
+        t.row(vec![
+            ev.net.clone(),
+            format!("{p0:.2}"),
+            format!("{h:.2}"),
+            format!("{kbar:.2}"),
+            format!("{n:.2}"),
+            format!("{:.2}", kbar / n),
+        ]);
+        if let Some(w) = csv.as_mut() {
+            w.row(&[
+                ev.net.clone(),
+                format!("{p0:.4}"),
+                format!("{h:.4}"),
+                format!("{kbar:.4}"),
+                format!("{n:.2}"),
+                format!("{:.4}", kbar / n),
+            ])?;
+        }
+    }
+    if let Some(w) = csv {
+        w.finish()?;
+    }
+    Ok(t.render())
+}
+
+/// Build the §V-C retrained networks: synthesize float weights, run the
+/// prune→cluster pipeline at the paper's Table V sparsities.
+///
+/// Quantizer: k-means with 8 clusters. The paper's retrained checkpoints
+/// have network entropies of ~0.2–0.5 bits — the non-zero alphabet is
+/// *heavily* concentrated (that is what stages 2–3 of Deep Compression
+/// optimize for). A small shared-value alphabet reproduces that operating
+/// point; a 5-bit uniform grid over Gaussian tails would not.
+pub fn eval_retrained_networks(cfg: &EvalConfig) -> Vec<NetworkEval> {
+    let nets = [
+        ("vgg-cifar10", 0.0428, 8usize),
+        ("lenet-300-100", 0.0905, 8),
+        ("lenet5", 0.019, 8),
+    ];
+    nets.iter()
+        .map(|&(name, keep, k)| {
+            let spec = NetworkSpec::by_name(name).unwrap();
+            let mut rng = Rng::new(cfg.seed ^ 0x5c5c);
+            let pipeline = CompressionPipeline::deep_compression(keep, k);
+            let layers: Vec<(String, u64, crate::formats::Dense)> = spec
+                .layers
+                .iter()
+                .map(|l| {
+                    let mut spec_l = l.clone();
+                    if cfg.scale > 1 {
+                        spec_l.rows = (l.rows / cfg.scale).max(4);
+                        spec_l.cols = (l.cols / cfg.scale).max(4);
+                    }
+                    let w = synthesize_float_layer(&spec_l, 0.05, 0.05, 4.0, &mut rng);
+                    let r = pipeline.run(&w);
+                    (l.name.clone(), l.patches, r.compressed)
+                })
+                .collect();
+            NetworkEval::run_matrices(spec.name, layers, cfg)
+        })
+        .collect()
+}
+
+/// Table V — storage gains of the retrained networks (sparsity column
+/// included).
+pub fn table5(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    let mut t = TextTable::new(&["Storage", "sp [%]", "orgnl [MB]", "CSR", "CER", "CSER"]);
+    let mut csv = out_dir
+        .map(|d| {
+            CsvWriter::create(
+                d.join("table5.csv"),
+                &["net", "sparsity", "original_mb", "csr", "cer", "cser"],
+            )
+        })
+        .transpose()?;
+    for ev in evals {
+        let totals = ev.totals();
+        let (p0, _, _, _) = ev.effective_stats();
+        let sp = (1.0 - p0) * 100.0;
+        let g = gains_row(&totals, |t| t.storage_bits);
+        let mb = totals[0].storage_bits / 8.0 / 1e6;
+        t.row(vec![
+            ev.net.clone(),
+            format!("{sp:.2}"),
+            format!("{mb:.2}"),
+            format!("x{:.2}", g[1]),
+            format!("x{:.2}", g[2]),
+            format!("x{:.2}", g[3]),
+        ]);
+        if let Some(w) = csv.as_mut() {
+            w.row(&[
+                ev.net.clone(),
+                format!("{sp:.3}"),
+                format!("{mb:.3}"),
+                format!("{:.3}", g[1]),
+                format!("{:.3}", g[2]),
+                format!("{:.3}", g[3]),
+            ])?;
+        }
+    }
+    if let Some(w) = csv {
+        w.finish()?;
+    }
+    Ok(t.render())
+}
+
+/// Table VI — ops/time/energy gains of the retrained networks
+/// (paper units: M ops, ms, mJ).
+pub fn table6(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    table_ops_time_energy(
+        evals,
+        (1e6, "M"),
+        (1e6, "ms"),
+        (1e9, "mJ"),
+        "table6.csv",
+        out_dir,
+    )
+}
+
+/// The Fig. 11 experiment: AlexNet compressed with the Deep-Compression
+/// pipeline (prune to p0 ≈ 0.89, k-means-cluster survivors → H ≈ 0.89).
+pub fn eval_alexnet_dc(cfg: &EvalConfig) -> NetworkEval {
+    let spec = NetworkSpec::alexnet();
+    let mut rng = Rng::new(cfg.seed ^ 0xA1E);
+    let pipeline = CompressionPipeline::deep_compression(0.11, 16);
+    let layers: Vec<(String, u64, crate::formats::Dense)> = spec
+        .layers
+        .iter()
+        .map(|l| {
+            let mut spec_l = l.clone();
+            if cfg.scale > 1 {
+                spec_l.rows = (l.rows / cfg.scale).max(4);
+                spec_l.cols = (l.cols / cfg.scale).max(4);
+            }
+            let w = synthesize_float_layer(&spec_l, 0.02, 0.05, 5.0, &mut rng);
+            let r = pipeline.run(&w);
+            (l.name.clone(), l.patches, r.compressed)
+        })
+        .collect();
+    NetworkEval::run_matrices("AlexNet-DC", layers, cfg)
+}
+
+/// E15 — the packed-dense decode-penalty experiment (§V-B last paragraph):
+/// 7-bit-packed dense vs plain dense on VGG-16-shaped quantized layers.
+/// Returns (modeled slowdown %, wall-clock slowdown %).
+pub fn packed_dense_experiment(cfg: &EvalConfig) -> (f64, f64) {
+    let spec = NetworkSpec::vgg16();
+    let mut rng = Rng::new(cfg.seed ^ 0x7b17);
+    let time = &cfg.time;
+    let (mut dense_t, mut packed_t) = (0.0f64, 0.0f64);
+    let (mut dense_w, mut packed_w) = (0.0f64, 0.0f64);
+    for l in &spec.layers {
+        let mut spec_l = l.clone();
+        // This experiment is always run scaled (every element is decoded —
+        // full VGG16 wall-clock would dominate the harness run).
+        let scale = cfg.scale.max(4);
+        spec_l.rows = (l.rows / scale).max(4);
+        spec_l.cols = (l.cols / scale).max(4);
+        let w = synthesize_float_layer(&spec_l, 0.02, 0.05, 6.0, &mut rng);
+        let q = crate::stats::quantize::uniform_quantize(&w, 7);
+        let p = PackedDense::from_dense(&q);
+        let dm = AnyMatrix::Dense(q.clone());
+        dense_t += trace_matvec(&dm).time_ns(time) * l.patches as f64;
+        packed_t += trace_packed(&p).time_ns(time) * l.patches as f64;
+        if cfg.wallclock {
+            let x: Vec<f32> = (0..q.cols()).map(|_| rng.f32()).collect();
+            let mut y = vec![0.0f32; q.rows()];
+            let elems = (q.rows() * q.cols()).max(1);
+            let batch = (200_000 / elems).max(1);
+            dense_w += l.patches as f64
+                * (time_median_ns(1, 3, || {
+                    for _ in 0..batch {
+                        crate::kernels::dense_matvec(&q, &x, &mut y);
+                    }
+                    std::hint::black_box(&y);
+                }) / batch as f64);
+            packed_w += l.patches as f64
+                * (time_median_ns(1, 3, || {
+                    for _ in 0..batch {
+                        p.matvec(&x, &mut y);
+                    }
+                    std::hint::black_box(&y);
+                }) / batch as f64);
+        }
+    }
+    let modeled = (packed_t / dense_t - 1.0) * 100.0;
+    let wall = if dense_w > 0.0 {
+        (packed_w / dense_w - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    (modeled, wall)
+}
+
+/// E15 companion: CSR-with-quantization-indices vs plain CSR (§V-C last
+/// paragraph: the paper measures *fewer* gains when CSR values are replaced
+/// by code indices needing a decode). Returns storage bits of (csr,
+/// csr-packed-values) and the per-matvec modeled times.
+pub fn csr_decode_overhead(cfg: &EvalConfig) -> (f64, f64) {
+    // CSR where `values` are b-bit codes into a codebook: one extra
+    // codebook read per non-zero in the dot product.
+    let spec = NetworkSpec::vgg_cifar10();
+    let mut rng = Rng::new(cfg.seed ^ 0xdec0de);
+    let pipeline = CompressionPipeline::prune_uniform(0.0428, 5);
+    let (mut t_plain, mut t_packed) = (0.0, 0.0);
+    for l in &spec.layers {
+        let mut spec_l = l.clone();
+        if cfg.scale > 1 {
+            spec_l.rows = (l.rows / cfg.scale).max(4);
+            spec_l.cols = (l.cols / cfg.scale).max(4);
+        }
+        let w = synthesize_float_layer(&spec_l, 0.05, 0.05, 4.0, &mut rng);
+        let q = pipeline.run(&w).compressed;
+        let csr = crate::formats::Csr::from_dense(&q);
+        let trace = crate::costmodel::trace::trace_csr(&csr);
+        t_plain += trace.time_ns(&cfg.time) * l.patches as f64;
+        // Packed-value CSR: replace each 32-bit value load by a 5-bit code
+        // load + a codebook read (same accounting as PackedDense decode).
+        let mut t2 = crate::costmodel::OpTrace::new();
+        for (class, bits, tier, n) in trace.buckets() {
+            use crate::costmodel::OpClass;
+            if class == OpClass::LoadWeight {
+                let codes_tier = MemTier::for_bytes(csr.nnz() as u64 * 5 / 8);
+                t2.record(OpClass::LoadColIdx, 5, codes_tier, n);
+                t2.record(
+                    OpClass::LoadWeight,
+                    32,
+                    MemTier::for_bytes(33 * 4),
+                    n,
+                );
+            } else {
+                t2.record(class, bits, tier, n);
+            }
+        }
+        t_packed += t2.time_ns(&cfg.time) * l.patches as f64;
+    }
+    (t_plain, t_packed)
+}
+
+/// Check a trace op kind (helper for the CSR decode experiment).
+#[allow(dead_code)]
+fn is_read(op: BaseOp) -> bool {
+    matches!(op, BaseOp::Read)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_prints_paper_constants() {
+        let t = table1();
+        assert!(t.contains("float add"));
+        assert!(t.contains("3.7"));
+        assert!(t.contains(">1MB"));
+        assert!(t.contains("1000"));
+    }
+
+    #[test]
+    fn tables_2_3_4_on_scaled_networks() {
+        // Scaled-down zoo to keep the test fast; checks shape + direction.
+        let cfg = EvalConfig::fast(16);
+        let evals = eval_vb_networks(&cfg);
+        let t2 = table2(&evals, None).unwrap();
+        assert!(t2.contains("VGG16") && t2.contains("DenseNet"));
+        let t3 = table3(&evals, None).unwrap();
+        assert!(t3.contains("#ops"));
+        let t4 = table4(&evals, None).unwrap();
+        assert!(t4.contains("kbar"));
+        // Direction: CER storage gain > CSR storage gain on these nets.
+        for ev in &evals {
+            let totals = ev.totals();
+            assert!(
+                totals[2].storage_bits < totals[1].storage_bits,
+                "{}: CER should beat CSR on storage",
+                ev.net
+            );
+        }
+    }
+
+    #[test]
+    fn retrained_pipeline_high_gains() {
+        // Scale 4 keeps column counts large enough that the O(K/n) pointer
+        // overhead stays in the paper's regime (see Corollary 2.1).
+        let cfg = EvalConfig::fast(4);
+        let evals = eval_retrained_networks(&cfg);
+        assert_eq!(evals.len(), 3);
+        for ev in &evals {
+            let totals = ev.totals();
+            let g_cer = totals[0].storage_bits / totals[2].storage_bits;
+            assert!(g_cer > 5.0, "{}: CER storage gain {g_cer}", ev.net);
+            // CER should beat CSR (the paper's headline claim).
+            assert!(
+                totals[2].storage_bits < totals[1].storage_bits,
+                "{}: CER {} vs CSR {}",
+                ev.net,
+                totals[2].storage_bits,
+                totals[1].storage_bits
+            );
+        }
+    }
+
+    #[test]
+    fn alexnet_dc_stats_near_table_iv() {
+        let cfg = EvalConfig::fast(8);
+        let ev = eval_alexnet_dc(&cfg);
+        let (p0, h, _, _) = ev.effective_stats();
+        assert!((p0 - 0.89).abs() < 0.02, "p0 = {p0}");
+        assert!(h < 1.3, "H = {h}");
+    }
+
+    #[test]
+    fn packed_dense_is_slower_in_wallclock() {
+        // The decode penalty is an ALU/wall-clock phenomenon (the paper
+        // measured −47% on VGG-16); the pJ/tier *energy* model sees only an
+        // extra small-array load, so the wall-clock measurement is the
+        // meaningful assert here.
+        let mut cfg = EvalConfig::fast(24);
+        cfg.wallclock = true;
+        let (_modeled, wall) = packed_dense_experiment(&cfg);
+        assert!(
+            wall > 10.0,
+            "packed dense should be >10% slower in wallclock (got {wall:.1}%)"
+        );
+    }
+
+    #[test]
+    fn csr_decode_overhead_positive() {
+        let cfg = EvalConfig::fast(8);
+        let (plain, packed) = csr_decode_overhead(&cfg);
+        assert!(packed > plain, "decode adds time: {packed} vs {plain}");
+    }
+}

@@ -1,0 +1,243 @@
+//! Algorithm 3 — CER dot product.
+//!
+//! The distributive-law kernel: per run, *sum* the gathered input elements
+//! (no multiplies in the inner loop), then scale once by the shared value.
+//! The run's value is implicit in its position: run `j` of a row belongs to
+//! `Ω[1 + j]` (empty/padded runs advance `j` without contributing).
+
+use crate::formats::Cer;
+use crate::formats::index::Idx;
+use crate::with_col_indices;
+
+/// Gather-sum of `x` over a run of column indices.
+///
+/// Four independent accumulators break the serial add dependency chain
+/// (§Perf iteration 1: +35–60% on long runs); `get_unchecked` elides the
+/// bounds check, relying on the construction invariant that every stored
+/// column index is < cols == x.len() (guaranteed by `from_dense`; checked
+/// in debug builds).
+#[inline(always)]
+pub(crate) fn gather_sum<I: Idx>(cols: &[I], x: &[f32]) -> f32 {
+    // Short runs are common (run length ≈ nnz/row ÷ k̄_row): skip the
+    // unroll preamble for them (§Perf iteration 3).
+    if cols.len() < 8 {
+        let mut tail = 0.0f32;
+        for ci in cols {
+            debug_assert!(ci.to_usize() < x.len());
+            tail += unsafe { *x.get_unchecked(ci.to_usize()) };
+        }
+        return tail;
+    }
+    let mut acc = [0.0f32; 4];
+    let mut chunks = cols.chunks_exact(4);
+    for c in chunks.by_ref() {
+        debug_assert!(c.iter().all(|ci| ci.to_usize() < x.len()));
+        unsafe {
+            acc[0] += *x.get_unchecked(c[0].to_usize());
+            acc[1] += *x.get_unchecked(c[1].to_usize());
+            acc[2] += *x.get_unchecked(c[2].to_usize());
+            acc[3] += *x.get_unchecked(c[3].to_usize());
+        }
+    }
+    let mut tail = 0.0f32;
+    for ci in chunks.remainder() {
+        debug_assert!(ci.to_usize() < x.len());
+        tail += unsafe { *x.get_unchecked(ci.to_usize()) };
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `y = M·x` over the CER representation.
+pub fn cer_matvec(m: &Cer, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), m.rows(), "y length");
+    let w0 = m.omega[0];
+    let sum_x: f32 = if w0 != 0.0 { x.iter().sum() } else { 0.0 };
+    with_col_indices!(&m.col_idx, ci => cer_matvec_inner(m, ci, x, y, w0, sum_x));
+}
+
+fn cer_matvec_inner<I: Idx>(
+    m: &Cer,
+    col_idx: &[I],
+    x: &[f32],
+    y: &mut [f32],
+    w0: f32,
+    sum_x: f32,
+) {
+    let omega = &m.omega;
+    let omega_ptr = &m.omega_ptr;
+    if w0 == 0.0 {
+        // Hot path (decomposed matrices): no correction bookkeeping.
+        for (r, out) in y.iter_mut().enumerate() {
+            let (s, e) = m.row_runs(r);
+            let mut acc = 0.0f32;
+            let mut start = omega_ptr[s] as usize;
+            for (j, slot) in (s..e).enumerate() {
+                let end = omega_ptr[slot + 1] as usize;
+                if end != start {
+                    acc += gather_sum(&col_idx[start..end], x) * omega[1 + j];
+                    start = end;
+                }
+                // Empty (padded) run: value Ω[1+j] absent from this row.
+            }
+            *out = acc;
+        }
+        return;
+    }
+    for (r, out) in y.iter_mut().enumerate() {
+        let (s, e) = m.row_runs(r);
+        let mut acc = 0.0f32;
+        // Σ of x over *all* listed positions of this row — needed for the
+        // decomposition correction when Ω[0] ≠ 0.
+        let mut listed = 0.0f32;
+        let mut start = omega_ptr[s] as usize;
+        for (j, slot) in (s..e).enumerate() {
+            let end = omega_ptr[slot + 1] as usize;
+            if end != start {
+                let partial = gather_sum(&col_idx[start..end], x);
+                acc += partial * omega[1 + j];
+                listed += partial;
+                start = end;
+            }
+        }
+        acc += w0 * (sum_x - listed);
+        *out = acc;
+    }
+}
+
+/// 4-lane gather-sum: one index stream amortized over four input columns
+/// (§Perf iteration 4 — the "data reuse techniques ... of the input
+/// vector" the paper's §V-C names as the lever for further time gains).
+#[inline(always)]
+pub(crate) fn gather_sum4<I: Idx>(cols: &[I], xs: &[&[f32]; 4]) -> [f32; 4] {
+    let mut acc = [0.0f32; 4];
+    for ci in cols {
+        let i = ci.to_usize();
+        debug_assert!(i < xs[0].len());
+        unsafe {
+            acc[0] += *xs[0].get_unchecked(i);
+            acc[1] += *xs[1].get_unchecked(i);
+            acc[2] += *xs[2].get_unchecked(i);
+            acc[3] += *xs[3].get_unchecked(i);
+        }
+    }
+    acc
+}
+
+/// `Y = M·X` over CER with `X` column-major (n × l): processes four rhs
+/// columns per pass so every column index is loaded once per 4 samples.
+pub fn cer_matmul_colmajor(m: &Cer, x: &[f32], y: &mut [f32], l: usize) {
+    let (rows, n) = (m.rows(), m.cols());
+    assert_eq!(x.len(), n * l, "rhs shape");
+    assert_eq!(y.len(), rows * l, "out shape");
+    let w0 = m.omega[0];
+    let mut c = 0usize;
+    while c + 4 <= l {
+        with_col_indices!(&m.col_idx, ci => {
+            let xs: [&[f32]; 4] = [
+                &x[c * n..(c + 1) * n],
+                &x[(c + 1) * n..(c + 2) * n],
+                &x[(c + 2) * n..(c + 3) * n],
+                &x[(c + 3) * n..(c + 4) * n],
+            ];
+            cer_matmul4_inner(m, ci, &xs, y, c, w0);
+        });
+        c += 4;
+    }
+    for c in c..l {
+        let (xc, yc) = (&x[c * n..(c + 1) * n], &mut y[c * rows..(c + 1) * rows]);
+        cer_matvec(m, xc, yc);
+    }
+}
+
+fn cer_matmul4_inner<I: Idx>(
+    m: &Cer,
+    col_idx: &[I],
+    xs: &[&[f32]; 4],
+    y: &mut [f32],
+    c: usize,
+    w0: f32,
+) {
+    let rows = m.rows();
+    let omega = &m.omega;
+    let omega_ptr = &m.omega_ptr;
+    let sum_x: [f32; 4] = if w0 != 0.0 {
+        [
+            xs[0].iter().sum(),
+            xs[1].iter().sum(),
+            xs[2].iter().sum(),
+            xs[3].iter().sum(),
+        ]
+    } else {
+        [0.0; 4]
+    };
+    for r in 0..rows {
+        let (s, e) = m.row_runs(r);
+        let mut acc = [0.0f32; 4];
+        let mut listed = [0.0f32; 4];
+        let mut start = omega_ptr[s] as usize;
+        for (j, slot) in (s..e).enumerate() {
+            let end = omega_ptr[slot + 1] as usize;
+            if end != start {
+                let p = gather_sum4(&col_idx[start..end], xs);
+                let w = omega[1 + j];
+                for lane in 0..4 {
+                    acc[lane] += p[lane] * w;
+                    listed[lane] += p[lane];
+                }
+                start = end;
+            }
+        }
+        for lane in 0..4 {
+            let mut v = acc[lane];
+            if w0 != 0.0 {
+                v += w0 * (sum_x[lane] - listed[lane]);
+            }
+            y[(c + lane) * rows + r] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_row2_distributive_form() {
+        // §III-B CER expression: 4·(a1+a2+a6+a9+a10+a12) — one multiply.
+        let cer = Cer::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        let mut y = vec![0.0; 5];
+        cer_matvec(&cer, &x, &mut y);
+        assert_eq!(y[1], 4.0 * 40.0);
+    }
+
+    #[test]
+    fn padded_runs_do_not_contribute() {
+        // Row with a frequency gap exercises the empty-run path.
+        let m = Dense::from_rows(&[
+            vec![0.0, 1.0, 1.0, 1.0],
+            vec![0.0, 0.0, 2.0, 3.0],
+            vec![0.0, 0.0, 0.0, 3.0],
+        ]);
+        let cer = Cer::from_dense(&m);
+        assert!(cer.padded_runs() > 0);
+        let x = vec![1.0, 10.0, 100.0, 1000.0];
+        let mut y = vec![0.0; 3];
+        cer_matvec(&cer, &x, &mut y);
+        assert_eq!(y, vec![1110.0, 3200.0, 3000.0]);
+    }
+
+    #[test]
+    fn correction_term_for_nonzero_implicit() {
+        let m = Dense::from_rows(&[vec![2.0, 2.0, 1.0]]);
+        let cer = Cer::from_dense(&m);
+        assert_eq!(cer.omega[0], 2.0);
+        let x = vec![1.0, 1.0, 1.0];
+        let mut y = vec![0.0; 1];
+        cer_matvec(&cer, &x, &mut y);
+        assert_eq!(y[0], 5.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Algorithm 4 — CSER dot product.
+//!
+//! Identical to the CER kernel except each run's value is named explicitly
+//! by the `ΩI` array (`omega[omega_idx[slot]]`) instead of positionally.
+
+use crate::formats::Cser;
+use crate::formats::index::Idx;
+use crate::with_col_indices;
+
+/// `y = M·x` over the CSER representation.
+pub fn cser_matvec(m: &Cser, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), m.rows(), "y length");
+    let w0 = m.omega[0];
+    let sum_x: f32 = if w0 != 0.0 { x.iter().sum() } else { 0.0 };
+    with_col_indices!(&m.col_idx, ci => cser_matvec_inner(m, ci, x, y, w0, sum_x));
+}
+
+fn cser_matvec_inner<I: Idx>(
+    m: &Cser,
+    col_idx: &[I],
+    x: &[f32],
+    y: &mut [f32],
+    w0: f32,
+    sum_x: f32,
+) {
+    let omega = &m.omega;
+    let omega_idx = &m.omega_idx;
+    let omega_ptr = &m.omega_ptr;
+    if w0 == 0.0 {
+        // Hot path (decomposed matrices) — see cer_k::gather_sum.
+        for (r, out) in y.iter_mut().enumerate() {
+            let (s, e) = m.row_runs(r);
+            let mut acc = 0.0f32;
+            let mut start = omega_ptr[s] as usize;
+            for slot in s..e {
+                let end = omega_ptr[slot + 1] as usize;
+                acc += super::cer_k::gather_sum(&col_idx[start..end], x)
+                    * omega[omega_idx[slot] as usize];
+                start = end;
+            }
+            *out = acc;
+        }
+        return;
+    }
+    for (r, out) in y.iter_mut().enumerate() {
+        let (s, e) = m.row_runs(r);
+        let mut acc = 0.0f32;
+        let mut listed = 0.0f32;
+        let mut start = omega_ptr[s] as usize;
+        for slot in s..e {
+            let end = omega_ptr[slot + 1] as usize;
+            let partial = super::cer_k::gather_sum(&col_idx[start..end], x);
+            acc += partial * omega[omega_idx[slot] as usize];
+            listed += partial;
+            start = end;
+        }
+        acc += w0 * (sum_x - listed);
+        *out = acc;
+    }
+}
+
+/// `Y = M·X` over CSER with `X` column-major (n × l): four rhs columns per
+/// pass (see `cer_k::gather_sum4`).
+pub fn cser_matmul_colmajor(m: &Cser, x: &[f32], y: &mut [f32], l: usize) {
+    let (rows, n) = (m.rows(), m.cols());
+    assert_eq!(x.len(), n * l, "rhs shape");
+    assert_eq!(y.len(), rows * l, "out shape");
+    let w0 = m.omega[0];
+    let mut c = 0usize;
+    while c + 4 <= l {
+        with_col_indices!(&m.col_idx, ci => {
+            let xs: [&[f32]; 4] = [
+                &x[c * n..(c + 1) * n],
+                &x[(c + 1) * n..(c + 2) * n],
+                &x[(c + 2) * n..(c + 3) * n],
+                &x[(c + 3) * n..(c + 4) * n],
+            ];
+            cser_matmul4_inner(m, ci, &xs, y, c, w0);
+        });
+        c += 4;
+    }
+    for c in c..l {
+        let (xc, yc) = (&x[c * n..(c + 1) * n], &mut y[c * rows..(c + 1) * rows]);
+        cser_matvec(m, xc, yc);
+    }
+}
+
+fn cser_matmul4_inner<I: Idx>(
+    m: &Cser,
+    col_idx: &[I],
+    xs: &[&[f32]; 4],
+    y: &mut [f32],
+    c: usize,
+    w0: f32,
+) {
+    let rows = m.rows();
+    let omega = &m.omega;
+    let omega_idx = &m.omega_idx;
+    let omega_ptr = &m.omega_ptr;
+    let sum_x: [f32; 4] = if w0 != 0.0 {
+        [
+            xs[0].iter().sum(),
+            xs[1].iter().sum(),
+            xs[2].iter().sum(),
+            xs[3].iter().sum(),
+        ]
+    } else {
+        [0.0; 4]
+    };
+    for r in 0..rows {
+        let (s, e) = m.row_runs(r);
+        let mut acc = [0.0f32; 4];
+        let mut listed = [0.0f32; 4];
+        let mut start = omega_ptr[s] as usize;
+        for slot in s..e {
+            let end = omega_ptr[slot + 1] as usize;
+            let p = super::cer_k::gather_sum4(&col_idx[start..end], xs);
+            let w = omega[omega_idx[slot] as usize];
+            for lane in 0..4 {
+                acc[lane] += p[lane] * w;
+                listed[lane] += p[lane];
+            }
+            start = end;
+        }
+        for lane in 0..4 {
+            let mut v = acc[lane];
+            if w0 != 0.0 {
+                v += w0 * (sum_x[lane] - listed[lane]);
+            }
+            y[(c + lane) * rows + r] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn paper_row2_distributive_form() {
+        let cser = Cser::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        let mut y = vec![0.0; 5];
+        cser_matvec(&cser, &x, &mut y);
+        assert_eq!(y[1], 4.0 * 40.0);
+    }
+
+    #[test]
+    fn row_local_orderings() {
+        let m = Dense::from_rows(&[
+            vec![0.0, 1.0, 1.0, 2.0],
+            vec![0.0, 2.0, 2.0, 1.0],
+        ]);
+        let cser = Cser::from_dense(&m);
+        let x = vec![1.0, 10.0, 100.0, 1000.0];
+        let mut y = vec![0.0; 2];
+        cser_matvec(&cser, &x, &mut y);
+        assert_eq!(y, vec![110.0 + 2000.0, 220.0 + 1000.0]);
+    }
+
+    #[test]
+    fn correction_term_for_nonzero_implicit() {
+        let m = Dense::from_rows(&[vec![3.0, 3.0, 0.0, 1.0]]);
+        let cser = Cser::from_dense(&m);
+        assert_eq!(cser.omega[0], 3.0);
+        let x = vec![1.0, 2.0, 4.0, 8.0];
+        let mut y = vec![0.0; 1];
+        cser_matvec(&cser, &x, &mut y);
+        assert_eq!(y[0], 3.0 + 6.0 + 0.0 + 8.0);
+    }
+}

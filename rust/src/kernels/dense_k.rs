@@ -1,0 +1,46 @@
+//! Algorithm 1 — dense dot product (the standard 3-loop nest).
+
+use crate::formats::Dense;
+
+/// `y = M·x` over the dense representation.
+///
+/// Straightforward row-times-vector loops; the inner loop auto-vectorizes.
+/// Accumulation is f32 (matching the paper's single-precision setting).
+pub fn dense_matvec(m: &Dense, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), m.rows(), "y length");
+    for (r, out) in y.iter_mut().enumerate() {
+        let row = m.row(r);
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        *out = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matvec() {
+        let mut m = Dense::zeros(3, 3);
+        for i in 0..3 {
+            m.set(i, i, 1.0);
+        }
+        let x = vec![2.0, -3.0, 4.5];
+        let mut y = vec![0.0; 3];
+        dense_matvec(&m, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_shape_mismatch() {
+        let m = Dense::zeros(2, 3);
+        let x = vec![0.0; 2];
+        let mut y = vec![0.0; 2];
+        dense_matvec(&m, &x, &mut y);
+    }
+}

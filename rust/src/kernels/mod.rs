@@ -1,0 +1,267 @@
+//! Dot-product algorithms for the four representations — the paper's
+//! Appendix Algorithms 1 (dense), 2 (CSR), 3 (CER) and 4 (CSER) — plus the
+//! bit-packed dense variant used by the §V-B side experiment.
+//!
+//! All kernels compute `y = M · x` (matrix–vector) or `Y = M · X`
+//! (matrix–matrix, rhs column-major). CER/CSER kernels implement the
+//! distributive-law factorization: per run they *sum* the gathered input
+//! elements and multiply once by the shared value.
+//!
+//! If the implicit codebook value `Ω[0]` is non-zero (i.e. the matrix was
+//! not pre-decomposed per Appendix A.1), the kernels apply the
+//! decomposition correction `y += Ω[0]·(Σx − Σ_listed x)` transparently, so
+//! every kernel is exact for every representable matrix.
+
+pub(crate) mod cer_k;
+pub(crate) mod cser_k;
+mod csr_k;
+mod dense_k;
+pub mod packed;
+
+pub use cer_k::cer_matvec;
+pub use cser_k::cser_matvec;
+pub use csr_k::csr_matvec;
+pub use dense_k::dense_matvec;
+pub use packed::PackedDense;
+
+use crate::formats::{Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown};
+
+/// Type-erased representation — what the coordinator stores per layer after
+/// format selection.
+#[derive(Clone, Debug)]
+pub enum AnyMatrix {
+    Dense(Dense),
+    Csr(Csr),
+    Cer(Cer),
+    Cser(Cser),
+}
+
+impl AnyMatrix {
+    /// Encode `m` in the requested format.
+    pub fn encode(kind: FormatKind, m: &Dense) -> AnyMatrix {
+        match kind {
+            FormatKind::Dense => AnyMatrix::Dense(m.clone()),
+            FormatKind::Csr => AnyMatrix::Csr(Csr::from_dense(m)),
+            FormatKind::Cer => AnyMatrix::Cer(Cer::from_dense(m)),
+            FormatKind::Cser => AnyMatrix::Cser(Cser::from_dense(m)),
+        }
+    }
+
+    pub fn kind(&self) -> FormatKind {
+        match self {
+            AnyMatrix::Dense(_) => FormatKind::Dense,
+            AnyMatrix::Csr(_) => FormatKind::Csr,
+            AnyMatrix::Cer(_) => FormatKind::Cer,
+            AnyMatrix::Cser(_) => FormatKind::Cser,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            AnyMatrix::Dense(m) => m.rows(),
+            AnyMatrix::Csr(m) => m.rows(),
+            AnyMatrix::Cer(m) => m.rows(),
+            AnyMatrix::Cser(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            AnyMatrix::Dense(m) => m.cols(),
+            AnyMatrix::Csr(m) => m.cols(),
+            AnyMatrix::Cer(m) => m.cols(),
+            AnyMatrix::Cser(m) => m.cols(),
+        }
+    }
+
+    pub fn storage(&self) -> StorageBreakdown {
+        match self {
+            AnyMatrix::Dense(m) => m.storage(),
+            AnyMatrix::Csr(m) => m.storage(),
+            AnyMatrix::Cer(m) => m.storage(),
+            AnyMatrix::Cser(m) => m.storage(),
+        }
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        match self {
+            AnyMatrix::Dense(m) => m.clone(),
+            AnyMatrix::Csr(m) => m.to_dense(),
+            AnyMatrix::Cer(m) => m.to_dense(),
+            AnyMatrix::Cser(m) => m.to_dense(),
+        }
+    }
+
+    /// `y = M·x`. `x.len() == cols()`, `y.len() == rows()`.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            AnyMatrix::Dense(m) => dense_matvec(m, x, y),
+            AnyMatrix::Csr(m) => csr_matvec(m, x, y),
+            AnyMatrix::Cer(m) => cer_matvec(m, x, y),
+            AnyMatrix::Cser(m) => cser_matvec(m, x, y),
+        }
+    }
+
+    /// `Y = M·X` with `X` column-major (`n × l`), `Y` column-major (`m × l`).
+    ///
+    /// CER/CSER use the 4-wide multi-rhs kernels (one index-stream pass per
+    /// 4 samples — §Perf iteration 4); dense/CSR fall back to per-column
+    /// matvec.
+    pub fn matmul_colmajor(&self, x: &[f32], y: &mut [f32], l: usize) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(x.len(), n * l, "rhs shape");
+        assert_eq!(y.len(), m * l, "out shape");
+        match self {
+            AnyMatrix::Cer(c) => return cer_k::cer_matmul_colmajor(c, x, y, l),
+            AnyMatrix::Cser(c) => return cser_k::cser_matmul_colmajor(c, x, y, l),
+            _ => {}
+        }
+        for c in 0..l {
+            self.matvec(&x[c * n..(c + 1) * n], &mut y[c * m..(c + 1) * m]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+    use crate::util::Rng;
+
+    /// Naive f64 oracle.
+    fn oracle(m: &Dense, x: &[f32]) -> Vec<f32> {
+        (0..m.rows())
+            .map(|r| {
+                m.row(r)
+                    .iter()
+                    .zip(x)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let tol = 1e-4 * (1.0 + x.abs().max(y.abs()));
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_formats_agree_on_paper_example() {
+        let m = paper_example_matrix();
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) * 0.5 - 2.0).collect();
+        let want = oracle(&m, &x);
+        for kind in FormatKind::ALL {
+            let a = AnyMatrix::encode(kind, &m);
+            let mut y = vec![0.0; 5];
+            a.matvec(&x, &mut y);
+            assert_close(&y, &want);
+        }
+    }
+
+    #[test]
+    fn paper_row2_scalar_product() {
+        // §III-B: row 2 (1-based) with a = ones gives 4·(a1+a2+a6+a9+a10+a12) = 24.
+        let m = paper_example_matrix();
+        let x = vec![1.0f32; 12];
+        let mut y = vec![0.0; 5];
+        AnyMatrix::encode(FormatKind::Cer, &m).matvec(&x, &mut y);
+        assert_eq!(y[1], 24.0);
+    }
+
+    #[test]
+    fn random_matrices_all_formats_agree() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for trial in 0..20 {
+            let rows = 1 + rng.below(40);
+            let cols = 1 + rng.below(60);
+            let k = 1 + rng.below(8);
+            let values: Vec<f32> = (0..k).map(|i| i as f32 - (k / 2) as f32).collect();
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| values[rng.below(k)])
+                .collect();
+            let m = Dense::from_vec(rows, cols, data);
+            let x: Vec<f32> = (0..cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let want = oracle(&m, &x);
+            for kind in FormatKind::ALL {
+                let a = AnyMatrix::encode(kind, &m);
+                let mut y = vec![0.0; rows];
+                a.matvec(&x, &mut y);
+                assert_close(&y, &want);
+                assert_eq!(a.to_dense(), m, "trial {trial} kind {kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_implicit_value_correction() {
+        // Matrix where the most frequent element is 5.0 (not 0): CER/CSER
+        // must apply the decomposition correction.
+        let m = Dense::from_rows(&[
+            vec![5.0, 5.0, 5.0, 2.0],
+            vec![5.0, 1.0, 5.0, 5.0],
+        ]);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let want = oracle(&m, &x);
+        for kind in FormatKind::ALL {
+            let a = AnyMatrix::encode(kind, &m);
+            let mut y = vec![0.0; 2];
+            a.matvec(&x, &mut y);
+            assert_close(&y, &want);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_column_matvecs() {
+        let m = paper_example_matrix();
+        let a = AnyMatrix::encode(FormatKind::Cser, &m);
+        let l = 3;
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..12 * l).map(|_| rng.f32()).collect();
+        let mut y = vec![0.0; 5 * l];
+        a.matmul_colmajor(&x, &mut y, l);
+        for c in 0..l {
+            let want = oracle(&m, &x[c * 12..(c + 1) * 12]);
+            assert_close(&y[c * 5..(c + 1) * 5], &want);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_kernels_match_per_column_matvec() {
+        // l ≥ 4 exercises the 4-wide CER/CSER paths (incl. remainder
+        // columns), also with a non-zero implicit value.
+        let mut rng = Rng::new(0x4444);
+        for mat in [
+            paper_example_matrix(),
+            Dense::from_rows(&[vec![5.0, 5.0, 2.0], vec![5.0, 1.0, 5.0]]),
+        ] {
+            let (m, n) = (mat.rows(), mat.cols());
+            for l in [4usize, 5, 8, 9] {
+                let x: Vec<f32> = (0..n * l).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                for kind in [FormatKind::Cer, FormatKind::Cser] {
+                    let a = AnyMatrix::encode(kind, &mat);
+                    let mut y = vec![0.0; m * l];
+                    a.matmul_colmajor(&x, &mut y, l);
+                    for c in 0..l {
+                        let mut want = vec![0.0; m];
+                        a.matvec(&x[c * n..(c + 1) * n], &mut want);
+                        assert_close(&y[c * m..(c + 1) * m], &want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_matrix_zero_output() {
+        let m = Dense::zeros(4, 6);
+        let x = vec![1.0; 6];
+        for kind in FormatKind::ALL {
+            let mut y = vec![9.0; 4];
+            AnyMatrix::encode(kind, &m).matvec(&x, &mut y);
+            assert_eq!(y, vec![0.0; 4]);
+        }
+    }
+}

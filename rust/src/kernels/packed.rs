@@ -1,0 +1,178 @@
+//! Bit-packed dense representation — the "trivially compressed dense"
+//! alternative discussed at the end of §V-B.
+//!
+//! Element values are replaced by `bits`-wide codebook indices packed into a
+//! byte stream. This achieves ~b/32 of the dense storage but the dot
+//! product must *decode* every element (unpack + codebook lookup) before
+//! multiplying — the paper measures this at ≈47% slower than plain dense on
+//! VGG-16. `repro packed-dense` (E15) reproduces that comparison.
+
+use crate::formats::{Dense, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+use crate::formats::codebook::{frequency_codebook, rank_lookup, value_key};
+
+/// Dense matrix of bit-packed codebook indices.
+#[derive(Clone, Debug)]
+pub struct PackedDense {
+    rows: usize,
+    cols: usize,
+    /// Code width in bits (1..=16).
+    pub bits: u32,
+    /// Codebook, frequency-major (codes index into this).
+    pub omega: Vec<f32>,
+    /// Bit stream of `rows*cols` codes, LSB-first within each byte.
+    packed: Vec<u8>,
+}
+
+impl PackedDense {
+    /// Pack `m` using the minimal code width for its distinct-value count.
+    pub fn from_dense(m: &Dense) -> PackedDense {
+        let codebook = frequency_codebook(m);
+        let ranks = rank_lookup(&codebook);
+        let k = codebook.len();
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        assert!(bits <= 16, "codebook too large to pack ({k} values)");
+        let n = m.rows() * m.cols();
+        let mut packed = vec![0u8; (n * bits as usize).div_ceil(8)];
+        for (i, &v) in m.data().iter().enumerate() {
+            let code = ranks[&value_key(v)] as u64;
+            let bit_pos = i * bits as usize;
+            let (byte, off) = (bit_pos / 8, bit_pos % 8);
+            // Codes are ≤16 bits, so they span at most 3 bytes.
+            let merged = code << off;
+            packed[byte] |= (merged & 0xFF) as u8;
+            if off + bits as usize > 8 {
+                packed[byte + 1] |= ((merged >> 8) & 0xFF) as u8;
+            }
+            if off + bits as usize > 16 {
+                packed[byte + 2] |= ((merged >> 16) & 0xFF) as u8;
+            }
+        }
+        PackedDense {
+            rows: m.rows(),
+            cols: m.cols(),
+            bits,
+            omega: codebook.into_iter().map(|(v, _)| v).collect(),
+            packed,
+        }
+    }
+
+    /// Decode the code of element `i` (row-major flat index).
+    #[inline]
+    pub fn code(&self, i: usize) -> usize {
+        let bits = self.bits as usize;
+        let bit_pos = i * bits;
+        let (byte, off) = (bit_pos / 8, bit_pos % 8);
+        let mut w = self.packed[byte] as u32;
+        if byte + 1 < self.packed.len() {
+            w |= (self.packed[byte + 1] as u32) << 8;
+        }
+        if byte + 2 < self.packed.len() {
+            w |= (self.packed[byte + 2] as u32) << 16;
+        }
+        ((w >> off) & ((1u32 << bits) - 1)) as usize
+    }
+
+    /// `y = M·x` with per-element decode (the expensive step the paper
+    /// highlights: every element costs unpack + table lookup before the
+    /// multiply-add).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols, "x length");
+        assert_eq!(y.len(), self.rows, "y length");
+        for (r, out) in y.iter_mut().enumerate() {
+            let base = r * self.cols;
+            let mut acc = 0.0f32;
+            for (c, xv) in x.iter().enumerate() {
+                acc += self.omega[self.code(base + c)] * xv;
+            }
+            *out = acc;
+        }
+    }
+}
+
+impl MatrixFormat for PackedDense {
+    fn name(&self) -> &'static str {
+        "packed-dense"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        for i in 0..self.rows * self.cols {
+            out.data_mut()[i] = self.omega[self.code(i)];
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "Omega",
+                    entries: self.omega.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "codes",
+                    entries: (self.rows * self.cols) as u64,
+                    bits_per_entry: self.bits,
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_paper_example() {
+        let m = paper_example_matrix();
+        let p = PackedDense::from_dense(&m);
+        assert_eq!(p.bits, 2); // 4 distinct values → 2 bits
+        assert_eq!(p.to_dense(), m);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = paper_example_matrix();
+        let p = PackedDense::from_dense(&m);
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.25).collect();
+        let mut y1 = vec![0.0; 5];
+        let mut y2 = vec![0.0; 5];
+        crate::kernels::dense_matvec(&m, &x, &mut y1);
+        p.matvec(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn seven_bit_codes() {
+        // 128 distinct values → 7-bit codes, the paper's §V-B setting.
+        let mut rng = Rng::new(1);
+        let values: Vec<f32> = (0..128).map(|i| i as f32 * 0.01 - 0.64).collect();
+        let data: Vec<f32> = (0..64 * 33).map(|_| values[rng.below(128)]).collect();
+        let m = Dense::from_vec(64, 33, data);
+        let p = PackedDense::from_dense(&m);
+        assert_eq!(p.bits, 7);
+        assert_eq!(p.to_dense(), m);
+        // storage ≈ 7/32 of dense + codebook
+        let dense_bits = m.storage().total_bits();
+        let packed_bits = p.storage().total_bits();
+        assert!(packed_bits < dense_bits / 4 + 128 * 32 + 64);
+    }
+
+    #[test]
+    fn single_value_matrix_one_bit() {
+        let m = Dense::from_vec(3, 3, vec![2.5; 9]);
+        let p = PackedDense::from_dense(&m);
+        assert_eq!(p.bits, 1);
+        assert_eq!(p.to_dense(), m);
+    }
+}

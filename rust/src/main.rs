@@ -1,0 +1,443 @@
+//! `repro` — the reproduction launcher.
+//!
+//! One subcommand per paper table/figure (DESIGN.md §3 experiment index),
+//! plus the e2e driver and the demo server. Run `repro help` for usage.
+//!
+//! Argument parsing is hand-rolled (clap is not in the offline vendor set —
+//! DESIGN.md §4); flags are `--key value` pairs after the subcommand.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use cer::costmodel::{EnergyModel, TimeModel};
+use cer::harness::{figures, tables};
+use cer::harness::eval::{EvalConfig, NetworkEval};
+use cer::networks::weights::TargetStats;
+use cer::networks::zoo::NetworkSpec;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let key = rest[i]
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{}'", rest[i]))?;
+            let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                i += 1;
+                rest[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), value);
+            i += 1;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn eval_config(a: &Args) -> EvalConfig {
+    let mut cfg = EvalConfig {
+        seed: a.get("seed", 0xCE5Eu64),
+        scale: a.get("scale", 1usize),
+        wallclock: !a.has("no-wallclock"),
+        energy: EnergyModel::table_i(),
+        time: TimeModel::default_model(),
+    };
+    if a.has("calibrate-time") {
+        eprintln!("calibrating per-op time model on this host ...");
+        cfg.time = TimeModel::calibrate();
+        eprintln!(
+            "  add {:.3}ns mul {:.3}ns rw {:?}ns",
+            cfg.time.add, cfg.time.mul, cfg.time.rw
+        );
+    }
+    cfg
+}
+
+fn out_dir(a: &Args) -> PathBuf {
+    PathBuf::from(a.get_str("out", "results"))
+}
+
+const HELP: &str = "\
+repro — reproduction harness for 'Compact and Computationally Efficient
+Representation of Deep Neural Networks' (Wiedemann, Müller & Samek, 2018)
+
+USAGE: repro <command> [--flag value ...]
+
+Experiment commands (DESIGN.md §3; CSVs land in --out, default results/):
+  table1                     print the Table I energy constants
+  table2                     storage gains, §V-B nets (Table II)
+  table3                     #ops/time/energy gains, §V-B nets (Table III)
+  table4                     effective network statistics (Table IV)
+  table5                     storage gains, retrained nets (Table V)
+  table6                     #ops/time/energy gains, retrained nets (Table VI)
+  alexnet                    AlexNet Deep-Compression gains (Fig. 11/14)
+  packed-dense               7-bit packed-dense decode penalty (§V-B note)
+  figure1                    quantized VGG-16 fc8 distribution (Fig. 1)
+  figure4                    (H,p0)-plane winner map (Fig. 4)
+  figure5                    column-size scaling (Fig. 5)
+  figure10                   per-layer (H,p0) scatter (Fig. 10)
+  breakdown --net <name>     storage/ops/time/energy breakdowns (Figs. 6-9, 12-13)
+  all                        run every experiment above
+
+System commands:
+  e2e                        end-to-end inference over the AOT artifacts
+  serve                      demo inference server (batching + metrics)
+  inspect --net <name>       print layer statistics of a synthesized net
+  help                       this text
+
+Common flags:
+  --seed N          RNG seed (default 0xCE5E)
+  --scale N         divide layer dims by N for quick runs (default 1 = paper-exact)
+  --out DIR         CSV output directory (default results/)
+  --no-wallclock    skip real-kernel wall-clock measurement
+  --calibrate-time  measure per-op latencies on this host instead of defaults
+  --artifacts DIR   artifacts directory for e2e/serve (default artifacts/)
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = match Args::parse(&argv[1.min(argv.len())..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match run(cmd, &args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        "table1" => print!("{}", tables::table1()),
+        "table2" | "table3" | "table4" => {
+            let cfg = eval_config(a);
+            eprintln!(
+                "evaluating VGG16 / ResNet152 / DenseNet at scale {} (seed {}) ...",
+                cfg.scale, cfg.seed
+            );
+            let evals = tables::eval_vb_networks(&cfg);
+            let dir = out_dir(a);
+            match cmd {
+                "table2" => print!("{}", tables::table2(&evals, Some(&dir))?),
+                "table3" => print!("{}", tables::table3(&evals, Some(&dir))?),
+                _ => print!("{}", tables::table4(&evals, Some(&dir))?),
+            }
+        }
+        "table5" | "table6" => {
+            let cfg = eval_config(a);
+            eprintln!("running §V-C compression pipelines (scale {}) ...", cfg.scale);
+            let evals = tables::eval_retrained_networks(&cfg);
+            let dir = out_dir(a);
+            if cmd == "table5" {
+                print!("{}", tables::table5(&evals, Some(&dir))?);
+            } else {
+                print!("{}", tables::table6(&evals, Some(&dir))?);
+            }
+        }
+        "alexnet" => {
+            let cfg = eval_config(a);
+            eprintln!("running Deep-Compression AlexNet pipeline ...");
+            let ev = tables::eval_alexnet_dc(&cfg);
+            let dir = out_dir(a);
+            print!("{}", tables::table2(std::slice::from_ref(&ev), None)?);
+            print!(
+                "{}",
+                tables::table_ops_time_energy(
+                    std::slice::from_ref(&ev),
+                    (1e9, "G"),
+                    (1e9, "s"),
+                    (1e12, "J"),
+                    "alexnet.csv",
+                    Some(&dir),
+                )?
+            );
+            let (p0, h, kbar, n) = ev.effective_stats();
+            println!("stats: p0 {p0:.2}  H {h:.2}  kbar {kbar:.2}  n {n:.2}");
+        }
+        "packed-dense" => {
+            let cfg = eval_config(a);
+            let (modeled, wall) = tables::packed_dense_experiment(&cfg);
+            println!("packed-dense vs dense matvec (VGG16-shaped, 7-bit codes):");
+            println!("  modeled time delta:   {modeled:+.1}%");
+            println!("  wallclock time delta: {wall:+.1}%  (paper: ≈ +47%)");
+            let (plain, packed) = tables::csr_decode_overhead(&cfg);
+            println!(
+                "CSR with coded values (decode per nnz): {:+.1}% modeled time vs plain CSR",
+                (packed / plain - 1.0) * 100.0
+            );
+        }
+        "figure1" => {
+            let (mode, freq, k) = figures::figure1(&out_dir(a), a.get("seed", 1u64))?;
+            println!(
+                "VGG-16 fc8 quantized: K = {k}, most frequent value {mode:.4} at {:.2}% \
+                 (paper: -0.008 at ≈4.2%)",
+                freq * 100.0
+            );
+            println!("CSVs: figure1_pmf.csv, figure1_top15.csv");
+        }
+        "figure4" => {
+            let cfg = eval_config(a);
+            let grid = a.get("grid", 24usize);
+            let samples = a.get("samples", 10usize);
+            let (m, n) = (a.get("rows", 100usize), a.get("cols", 100usize));
+            let k = a.get("k", 128usize);
+            eprintln!("sweeping {grid}x{grid} grid, {samples} samples/point, {m}x{n}, K={k} ...");
+            let (feasible, wins) = figures::figure4(
+                &out_dir(a),
+                cfg.seed,
+                grid,
+                samples,
+                m,
+                n,
+                k,
+                &cfg.energy,
+                &cfg.time,
+            )?;
+            println!("{feasible} feasible points; wins per criterion:");
+            print!("{}", figures::figure4_summary(&wins));
+            println!("CSV: figure4.csv");
+        }
+        "figure5" => {
+            let cfg = eval_config(a);
+            let samples = a.get("samples", 20usize);
+            let cols: Vec<usize> = vec![32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384];
+            eprintln!("column sweep at H=4, p0=0.55, m=100, {samples} samples ...");
+            let rows = figures::figure5(
+                &out_dir(a),
+                cfg.seed,
+                4.0,
+                0.55,
+                100,
+                &cols,
+                samples,
+                128,
+                &cfg.energy,
+                &cfg.time,
+            )?;
+            println!("ratios vs dense (storage / ops / time / energy):");
+            for (n, r) in &rows {
+                println!(
+                    "  n={n:>6}  CSR {:>5.2} {:>5.2} {:>5.2} {:>5.2}   CER {:>5.2} {:>5.2} {:>5.2} {:>5.2}   CSER {:>5.2} {:>5.2} {:>5.2} {:>5.2}",
+                    r[1][0], r[1][1], r[1][2], r[1][3],
+                    r[2][0], r[2][1], r[2][2], r[2][3],
+                    r[3][0], r[3][1], r[3][2], r[3][3],
+                );
+            }
+            println!("CSV: figure5.csv");
+        }
+        "figure10" => {
+            let cfg = eval_config(a);
+            let evals = tables::eval_vb_networks(&cfg);
+            figures::figure10(&evals, &out_dir(a))?;
+            println!("CSV: figure10.csv, figure10_boundary.csv");
+        }
+        "breakdown" => {
+            let cfg = eval_config(a);
+            let net = a.get_str("net", "densenet");
+            let mats = figures::synthesize_vb_matrices(&net, cfg.seed, cfg.scale);
+            let ev = NetworkEval::run_matrices(
+                NetworkSpec::by_name(&net)
+                    .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?
+                    .name,
+                mats.clone(),
+                &cfg,
+            );
+            figures::breakdown(&ev, &mats, &out_dir(a), &cfg.energy, &cfg.time)?;
+            println!("CSVs: breakdown_{}_{{storage,ops,time,energy}}.csv", net.to_lowercase());
+        }
+        "inspect" => {
+            let cfg = eval_config(a);
+            let net = a.get_str("net", "densenet");
+            let spec = NetworkSpec::by_name(&net)
+                .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?;
+            let target = TargetStats::table_iv(&net)
+                .or_else(|| TargetStats::retrained(&net))
+                .unwrap_or(TargetStats { p0: 0.36, entropy: 3.73, k: 128 });
+            let ev = NetworkEval::run_synthesized(&spec, target, &cfg);
+            println!("{}: {} layers, {:.2} MB dense", spec.name, spec.layers.len(), spec.dense_mb());
+            for l in &ev.layers {
+                println!(
+                    "  {:<22} {:>6}x{:<6} patches {:>6}  p0 {:.3}  H {:.3}  kbar {:>7.2}",
+                    l.name, l.rows, l.cols, l.patches, l.stats.p0, l.stats.entropy, l.stats.kbar
+                );
+            }
+            let (p0, h, kbar, n) = ev.effective_stats();
+            println!("effective: p0 {p0:.2}  H {h:.2}  kbar {kbar:.2}  n {n:.2}");
+        }
+        "e2e" => {
+            let dir = PathBuf::from(a.get_str("artifacts", "artifacts"));
+            run_e2e(&dir, a)?;
+        }
+        "serve" => {
+            let dir = PathBuf::from(a.get_str("artifacts", "artifacts"));
+            run_serve_demo(&dir, a)?;
+        }
+        "all" => {
+            let cfg = eval_config(a);
+            let dir = out_dir(a);
+            println!("\n===== table1 =====");
+            print!("{}", tables::table1());
+            // Evaluate the §V-B zoo once; Tables II–IV and Fig. 10 share it.
+            eprintln!("evaluating VGG16 / ResNet152 / DenseNet (scale {}) ...", cfg.scale);
+            let vb = tables::eval_vb_networks(&cfg);
+            println!("\n===== table2 =====");
+            print!("{}", tables::table2(&vb, Some(&dir))?);
+            println!("\n===== table3 =====");
+            print!("{}", tables::table3(&vb, Some(&dir))?);
+            println!("\n===== table4 =====");
+            print!("{}", tables::table4(&vb, Some(&dir))?);
+            println!("\n===== figure10 =====");
+            figures::figure10(&vb, &dir)?;
+            println!("CSV: figure10.csv, figure10_boundary.csv");
+            drop(vb);
+            for c in [
+                "table5", "table6", "alexnet", "packed-dense", "figure1", "figure4", "figure5",
+            ] {
+                println!("\n===== {c} =====");
+                run(c, a)?;
+            }
+            for net in ["densenet", "resnet152", "vgg16"] {
+                println!("\n===== breakdown {net} =====");
+                let mut flags = a.flags.clone();
+                flags.insert("net".into(), net.into());
+                run("breakdown", &Args { flags })?;
+            }
+        }
+        other => {
+            anyhow::bail!("unknown command '{other}' — run `repro help`");
+        }
+    }
+    Ok(())
+}
+
+/// The e2e driver shared by `repro e2e` (also available as
+/// `examples/e2e_inference.rs`).
+fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
+    use cer::coordinator::{Backend, Engine, Objective};
+    use cer::runtime::MlpArtifacts;
+
+    let art = MlpArtifacts::load(artifacts)?;
+    println!(
+        "loaded e2e model: {} layers, batch {}, build-time accuracies float {:.4} / quant {:.4}",
+        art.layers.len(),
+        art.batch,
+        art.accuracy_float,
+        art.accuracy_quant
+    );
+    let n_batches = a.get("batches", usize::MAX);
+    for backend in [Backend::Native, Backend::XlaDense, Backend::XlaCser] {
+        let mut engine = Engine::from_artifacts(&art, backend, Objective::Energy)?;
+        let t0 = std::time::Instant::now();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut b = 0usize;
+        let mut start = 0usize;
+        while start < art.n_test && b < n_batches {
+            let (x, y, valid) = art.test_batch(start);
+            let batch = engine.required_batch().unwrap_or(art.batch);
+            let pred = engine.classify(&x[..batch * art.in_dim()], batch)?;
+            for i in 0..valid {
+                if pred[i] == y[i] as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+            start += art.batch;
+            b += 1;
+        }
+        let elapsed = t0.elapsed();
+        println!(
+            "{:?}: accuracy {:.4} ({correct}/{total}), {:.2} ms total, {:.1} µs/sample, formats {:?}, weights {:.1} KB",
+            backend,
+            correct as f64 / total as f64,
+            elapsed.as_secs_f64() * 1e3,
+            elapsed.as_secs_f64() * 1e6 / total as f64,
+            engine.formats(),
+            engine.storage_bits() as f64 / 8.0 / 1024.0,
+        );
+    }
+    Ok(())
+}
+
+fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
+    use cer::coordinator::{Backend, Engine, InferenceServer, Objective, ServerConfig};
+    use cer::coordinator::batcher::BatcherConfig;
+    use cer::runtime::MlpArtifacts;
+
+    let art = MlpArtifacts::load(artifacts)?;
+    let requests = a.get("requests", 512usize);
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: a.get("max-batch", 32usize),
+            max_delay_us: a.get("max-delay-us", 2_000u64),
+        },
+    };
+    let art_clone = art.clone();
+    let srv = InferenceServer::spawn(
+        move || Engine::from_artifacts(&art_clone, Backend::Native, Objective::Energy),
+        cfg,
+    );
+    println!("serving {requests} requests through the dynamic batcher ...");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let s = i % art.n_test;
+            srv.submit(art.test_x[s * art.in_dim()..(s + 1) * art.in_dim()].to_vec())
+        })
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx.recv()??;
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == art.test_y[i % art.n_test] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done: accuracy {:.4}, {:.1} req/s, metrics: {}",
+        correct as f64 / requests as f64,
+        requests as f64 / dt.as_secs_f64(),
+        srv.metrics().summary()
+    );
+    srv.shutdown();
+    Ok(())
+}

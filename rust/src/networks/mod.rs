@@ -1,0 +1,10 @@
+//! The evaluation model zoo (§V): layer-exact architecture specs of the
+//! networks the paper benchmarks, conv-as-matmul accounting (Appendix A.2),
+//! and statistics-matched weight synthesis (the DESIGN.md §4 substitution
+//! for the pretrained checkpoints).
+
+pub mod weights;
+pub mod zoo;
+
+pub use weights::{synthesize_float_layer, synthesize_quantized_network, TargetStats};
+pub use zoo::{LayerKind, LayerSpec, NetworkSpec};

@@ -1,0 +1,352 @@
+//! Architecture specifications of the paper's benchmark networks.
+//!
+//! Each layer is recorded in its *matrix view* (Appendix A.2): a conv layer
+//! with F_n filters over n_ch channels and (m_F × n_F) kernels is an
+//! `F_n × (n_ch·m_F·n_F)` matrix whose dot product is executed once per
+//! input patch — the benchmark weights its matvec cost by the patch count
+//! n_p, exactly as the paper does.
+
+/// Layer type (for reporting; both map to a weight matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution, `spatial` = output feature-map side length.
+    Conv,
+    /// Fully connected.
+    Fc,
+}
+
+/// One weight layer in matrix view.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Matrix rows m (output features / filters).
+    pub rows: usize,
+    /// Matrix columns n (fan-in: n_ch·m_F·n_F for conv).
+    pub cols: usize,
+    /// Number of patches n_p the matvec is executed for (1 for FC).
+    pub patches: u64,
+}
+
+impl LayerSpec {
+    fn conv(name: impl Into<String>, out_ch: usize, in_ch: usize, k: usize, out_hw: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            rows: out_ch,
+            cols: in_ch * k * k,
+            patches: (out_hw * out_hw) as u64,
+        }
+    }
+
+    fn fc(name: impl Into<String>, out: usize, inp: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            rows: out,
+            cols: inp,
+            patches: 1,
+        }
+    }
+
+    /// Parameter count of this layer (weights only; biases are not part of
+    /// the paper's benchmark).
+    pub fn params(&self) -> u64 {
+        (self.rows * self.cols) as u64
+    }
+}
+
+/// A whole network.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    /// Total weight count.
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Dense f32 size in MB (the paper's "original [MB]" column).
+    pub fn dense_mb(&self) -> f64 {
+        self.params() as f64 * 4.0 / 1e6
+    }
+
+    /// Effective column dimension: total weights divided by the total
+    /// number of matrix rows in the network — the averaging Table IV uses
+    /// ("dividing the result by the total number of rows that appear in the
+    /// network"). Reproduces the paper's n = 10311.86 for VGG-16.
+    pub fn effective_cols(&self) -> f64 {
+        let rows: u64 = self.layers.iter().map(|l| l.rows as u64).sum();
+        self.params() as f64 / rows as f64
+    }
+
+    /// Total number of matrix rows across all layers.
+    pub fn total_rows(&self) -> u64 {
+        self.layers.iter().map(|l| l.rows as u64).sum()
+    }
+
+    /// Look up a spec by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<NetworkSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "alexnet" => Some(Self::alexnet()),
+            "vgg16" => Some(Self::vgg16()),
+            "resnet152" => Some(Self::resnet152()),
+            "densenet" | "densenet161" => Some(Self::densenet161()),
+            "vgg-cifar10" | "vggcifar10" => Some(Self::vgg_cifar10()),
+            "lenet-300-100" | "lenet300" => Some(Self::lenet_300_100()),
+            "lenet5" => Some(Self::lenet5()),
+            _ => None,
+        }
+    }
+
+    /// All zoo networks (§V-B group then §V-C group).
+    pub fn all() -> Vec<NetworkSpec> {
+        vec![
+            Self::vgg16(),
+            Self::resnet152(),
+            Self::densenet161(),
+            Self::alexnet(),
+            Self::vgg_cifar10(),
+            Self::lenet_300_100(),
+            Self::lenet5(),
+        ]
+    }
+
+    /// AlexNet (Krizhevsky et al. 2012), single-tower layout, ≈ 60.9M
+    /// weights.
+    pub fn alexnet() -> NetworkSpec {
+        NetworkSpec {
+            name: "AlexNet",
+            layers: vec![
+                LayerSpec::conv("conv1", 96, 3, 11, 55),
+                LayerSpec::conv("conv2", 256, 96, 5, 27),
+                LayerSpec::conv("conv3", 384, 256, 3, 13),
+                LayerSpec::conv("conv4", 384, 384, 3, 13),
+                LayerSpec::conv("conv5", 256, 384, 3, 13),
+                LayerSpec::fc("fc6", 4096, 256 * 6 * 6),
+                LayerSpec::fc("fc7", 4096, 4096),
+                LayerSpec::fc("fc8", 1000, 4096),
+            ],
+        }
+    }
+
+    /// VGG-16 (Simonyan & Zisserman), ≈ 138.3M weights → 553 MB dense,
+    /// matching the paper's Table II "original 553.43 MB".
+    pub fn vgg16() -> NetworkSpec {
+        let mut layers = Vec::new();
+        let cfg: [(usize, usize, usize); 13] = [
+            (64, 3, 224),
+            (64, 64, 224),
+            (128, 64, 112),
+            (128, 128, 112),
+            (256, 128, 56),
+            (256, 256, 56),
+            (256, 256, 56),
+            (512, 256, 28),
+            (512, 512, 28),
+            (512, 512, 28),
+            (512, 512, 14),
+            (512, 512, 14),
+            (512, 512, 14),
+        ];
+        for (i, &(out, inp, hw)) in cfg.iter().enumerate() {
+            layers.push(LayerSpec::conv(format!("conv{}", i + 1), out, inp, 3, hw));
+        }
+        layers.push(LayerSpec::fc("fc6", 4096, 512 * 7 * 7));
+        layers.push(LayerSpec::fc("fc7", 4096, 4096));
+        layers.push(LayerSpec::fc("fc8", 1000, 4096));
+        NetworkSpec {
+            name: "VGG16",
+            layers,
+        }
+    }
+
+    /// ResNet-152 (He et al.), bottleneck blocks [3, 8, 36, 3],
+    /// ≈ 60.1M weights → 240 MB dense (paper: 240.77 MB).
+    pub fn resnet152() -> NetworkSpec {
+        let mut layers = vec![LayerSpec::conv("conv1", 64, 3, 7, 112)];
+        let stages: [(usize, usize, usize, usize); 4] = [
+            // (blocks, width, out_width, spatial)
+            (3, 64, 256, 56),
+            (8, 128, 512, 28),
+            (36, 256, 1024, 14),
+            (3, 512, 2048, 7),
+        ];
+        let mut in_ch = 64;
+        for (s, &(blocks, w, out_w, hw)) in stages.iter().enumerate() {
+            for b in 0..blocks {
+                let pre = format!("layer{}.{}", s + 2, b);
+                layers.push(LayerSpec::conv(format!("{pre}.conv1"), w, in_ch, 1, hw));
+                layers.push(LayerSpec::conv(format!("{pre}.conv2"), w, w, 3, hw));
+                layers.push(LayerSpec::conv(format!("{pre}.conv3"), out_w, w, 1, hw));
+                if b == 0 {
+                    // Projection shortcut.
+                    layers.push(LayerSpec::conv(format!("{pre}.down"), out_w, in_ch, 1, hw));
+                }
+                in_ch = out_w;
+            }
+        }
+        layers.push(LayerSpec::fc("fc", 1000, 2048));
+        NetworkSpec {
+            name: "ResNet152",
+            layers,
+        }
+    }
+
+    /// DenseNet-161 (Huang et al.; growth 48, blocks [6, 12, 36, 24]),
+    /// ≈ 28.6M weights → 114 MB dense (paper: 114.72 MB).
+    pub fn densenet161() -> NetworkSpec {
+        let growth = 48usize;
+        let bn_width = 4 * growth; // 1×1 bottleneck output channels
+        let mut layers = vec![LayerSpec::conv("conv0", 96, 3, 7, 112)];
+        let mut ch = 96usize;
+        let blocks = [6usize, 12, 36, 24];
+        let spatial = [56usize, 28, 14, 7];
+        for (bi, (&nlayers, &hw)) in blocks.iter().zip(&spatial).enumerate() {
+            for li in 0..nlayers {
+                let pre = format!("block{}.layer{}", bi + 1, li + 1);
+                layers.push(LayerSpec::conv(format!("{pre}.bn1x1"), bn_width, ch, 1, hw));
+                layers.push(LayerSpec::conv(format!("{pre}.conv3x3"), growth, bn_width, 3, hw));
+                ch += growth;
+            }
+            if bi < 3 {
+                // Transition: 1×1 halving conv (output spatial of next block).
+                let out = ch / 2;
+                layers.push(LayerSpec::conv(
+                    format!("trans{}", bi + 1),
+                    out,
+                    ch,
+                    1,
+                    spatial[bi + 1],
+                ));
+                ch = out;
+            }
+        }
+        layers.push(LayerSpec::fc("fc", 1000, ch));
+        NetworkSpec {
+            name: "DenseNet",
+            layers,
+        }
+    }
+
+    /// VGG adapted for CIFAR-10 (torch.ch blog version the paper cites):
+    /// 13 convs + 2 FC, ≈ 15.0M weights → ≈ 60 MB (paper: 59.91 MB).
+    pub fn vgg_cifar10() -> NetworkSpec {
+        let mut layers = Vec::new();
+        let cfg: [(usize, usize, usize); 13] = [
+            (64, 3, 32),
+            (64, 64, 32),
+            (128, 64, 16),
+            (128, 128, 16),
+            (256, 128, 8),
+            (256, 256, 8),
+            (256, 256, 8),
+            (512, 256, 4),
+            (512, 512, 4),
+            (512, 512, 4),
+            (512, 512, 2),
+            (512, 512, 2),
+            (512, 512, 2),
+        ];
+        for (i, &(out, inp, hw)) in cfg.iter().enumerate() {
+            layers.push(LayerSpec::conv(format!("conv{}", i + 1), out, inp, 3, hw));
+        }
+        layers.push(LayerSpec::fc("fc1", 512, 512));
+        layers.push(LayerSpec::fc("fc2", 10, 512));
+        NetworkSpec {
+            name: "VGG-CIFAR10",
+            layers,
+        }
+    }
+
+    /// LeNet-300-100 (MNIST MLP), 266.2k weights → 1.06 MB (paper: 1.06 MB).
+    pub fn lenet_300_100() -> NetworkSpec {
+        NetworkSpec {
+            name: "LeNet-300-100",
+            layers: vec![
+                LayerSpec::fc("fc1", 300, 784),
+                LayerSpec::fc("fc2", 100, 300),
+                LayerSpec::fc("fc3", 10, 100),
+            ],
+        }
+    }
+
+    /// LeNet-5 (Caffe variant), 430.5k weights → 1.72 MB (paper: 1.722 MB).
+    pub fn lenet5() -> NetworkSpec {
+        NetworkSpec {
+            name: "LeNet5",
+            layers: vec![
+                LayerSpec::conv("conv1", 20, 1, 5, 24),
+                LayerSpec::conv("conv2", 50, 20, 5, 8),
+                LayerSpec::fc("fc1", 500, 50 * 4 * 4),
+                LayerSpec::fc("fc2", 10, 500),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_match_paper_table_ii_sizes() {
+        // Paper Table II/V "original [MB]" column (±3% tolerance: biases
+        // and implementation details differ).
+        let cases = [
+            (NetworkSpec::vgg16(), 553.43),
+            (NetworkSpec::resnet152(), 240.77),
+            (NetworkSpec::densenet161(), 114.72),
+            (NetworkSpec::vgg_cifar10(), 59.91),
+            (NetworkSpec::lenet_300_100(), 1.06),
+            (NetworkSpec::lenet5(), 1.722),
+        ];
+        for (net, mb) in cases {
+            let got = net.dense_mb();
+            let err = (got - mb).abs() / mb;
+            assert!(err < 0.03, "{}: {got:.2} MB vs paper {mb} MB", net.name);
+        }
+    }
+
+    #[test]
+    fn alexnet_is_61m() {
+        let p = NetworkSpec::alexnet().params();
+        assert!((60_000_000..63_000_000).contains(&p), "params = {p}");
+    }
+
+    #[test]
+    fn effective_cols_match_table_iv_order_of_magnitude() {
+        // Table IV: VGG16 n ≈ 10312, ResNet152 ≈ 783, DenseNet ≈ 1327,
+        // AlexNet ≈ 5768.
+        let n_vgg = NetworkSpec::vgg16().effective_cols();
+        assert!((8000.0..13000.0).contains(&n_vgg), "VGG16 n = {n_vgg}");
+        let n_res = NetworkSpec::resnet152().effective_cols();
+        assert!((600.0..1100.0).contains(&n_res), "ResNet152 n = {n_res}");
+        let n_dn = NetworkSpec::densenet161().effective_cols();
+        assert!((900.0..1800.0).contains(&n_dn), "DenseNet n = {n_dn}");
+        let n_alex = NetworkSpec::alexnet().effective_cols();
+        assert!((4000.0..7500.0).contains(&n_alex), "AlexNet n = {n_alex}");
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for net in NetworkSpec::all() {
+            assert!(NetworkSpec::by_name(net.name).is_some(), "{}", net.name);
+        }
+        assert!(NetworkSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn conv_matrix_view_shapes() {
+        let lenet5 = NetworkSpec::lenet5();
+        let conv2 = &lenet5.layers[1];
+        assert_eq!(conv2.rows, 50);
+        assert_eq!(conv2.cols, 20 * 5 * 5);
+        assert_eq!(conv2.patches, 64);
+        let fc1 = &lenet5.layers[2];
+        assert_eq!(fc1.patches, 1);
+    }
+}

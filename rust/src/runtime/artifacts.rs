@@ -1,0 +1,217 @@
+//! Readers for the build-time artifacts exported by `python/compile/train.py`
+//! (weights, test set, manifest) — see that module's docstring for the file
+//! formats. Everything is raw little-endian binary + a key/value manifest,
+//! so no serde dependency is needed.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::Dense;
+
+/// One loaded MLP layer.
+#[derive(Clone, Debug)]
+pub struct MlpLayer {
+    /// Trained float weights (out × in).
+    pub weights: Dense,
+    /// Compressed (pruned + clustered) weights, same shape.
+    pub quantized: Dense,
+    /// Bias (out).
+    pub bias: Vec<f32>,
+}
+
+/// The full artifact bundle of the e2e model.
+#[derive(Clone, Debug)]
+pub struct MlpArtifacts {
+    pub layers: Vec<MlpLayer>,
+    /// Test inputs, row-major (n_test × in_dim).
+    pub test_x: Vec<f32>,
+    /// Test labels.
+    pub test_y: Vec<i32>,
+    pub n_test: usize,
+    /// Static batch size the HLO artifacts were lowered for.
+    pub batch: usize,
+    /// Accuracies recorded at build time (float, compressed).
+    pub accuracy_float: f64,
+    pub accuracy_quant: f64,
+    /// Paths of the HLO artifacts.
+    pub dense_hlo: PathBuf,
+    pub cser_hlo: PathBuf,
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl MlpArtifacts {
+    /// Load from `artifacts/` (expects the layout written by aot.py).
+    pub fn load(artifacts_dir: &Path) -> Result<MlpArtifacts> {
+        let mlp = artifacts_dir.join("mlp");
+        let manifest = fs::read_to_string(mlp.join("manifest.txt"))
+            .with_context(|| format!("{}/manifest.txt — run `make artifacts`", mlp.display()))?;
+        let mut kv = std::collections::HashMap::new();
+        let mut layer_dims: Vec<(usize, usize)> = Vec::new();
+        for line in manifest.lines() {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            let rest: Vec<&str> = it.collect();
+            if let Some(idx) = key.strip_prefix("layer") {
+                if let Ok(i) = idx.parse::<usize>() {
+                    if rest.len() == 2 {
+                        let out: usize = rest[0].parse()?;
+                        let inp: usize = rest[1].parse()?;
+                        if layer_dims.len() <= i {
+                            layer_dims.resize(i + 1, (0, 0));
+                        }
+                        layer_dims[i] = (out, inp);
+                        continue;
+                    }
+                }
+            }
+            kv.insert(key.to_string(), rest.join(" "));
+        }
+        let n_layers: usize = kv
+            .get("layers")
+            .context("manifest missing 'layers'")?
+            .parse()?;
+        if layer_dims.len() != n_layers {
+            bail!("manifest: {} layer dims for {} layers", layer_dims.len(), n_layers);
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for (i, &(out, inp)) in layer_dims.iter().enumerate() {
+            let w = read_f32(&mlp.join(format!("fc{i}_w.f32")))?;
+            let qw = read_f32(&mlp.join(format!("fcq{i}_w.f32")))?;
+            let b = read_f32(&mlp.join(format!("fc{i}_b.f32")))?;
+            if w.len() != out * inp || qw.len() != out * inp || b.len() != out {
+                bail!("layer {i}: file sizes do not match manifest dims {out}x{inp}");
+            }
+            layers.push(MlpLayer {
+                weights: Dense::from_vec(out, inp, w),
+                quantized: Dense::from_vec(out, inp, qw),
+                bias: b,
+            });
+        }
+        let n_test: usize = kv.get("test_n").context("manifest missing test_n")?.parse()?;
+        let test_x = read_f32(&mlp.join("test_x.f32"))?;
+        let test_y = read_i32(&mlp.join("test_y.i32"))?;
+        let in_dim = layer_dims[0].1;
+        if test_x.len() != n_test * in_dim || test_y.len() != n_test {
+            bail!("test set sizes do not match manifest");
+        }
+        Ok(MlpArtifacts {
+            layers,
+            test_x,
+            test_y,
+            n_test,
+            batch: kv.get("batch").context("manifest missing batch")?.parse()?,
+            accuracy_float: kv
+                .get("accuracy_float")
+                .context("missing accuracy_float")?
+                .parse()?,
+            accuracy_quant: kv
+                .get("accuracy_quant")
+                .context("missing accuracy_quant")?
+                .parse()?,
+            dense_hlo: artifacts_dir.join("model_dense.hlo.txt"),
+            cser_hlo: artifacts_dir.join("model_cser.hlo.txt"),
+        })
+    }
+
+    /// Input dimensionality.
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].weights.cols()
+    }
+
+    /// One test batch (padded with zeros to `batch` if needed). Returns
+    /// (x row-major batch×in_dim, labels, valid_count).
+    pub fn test_batch(&self, start: usize) -> (Vec<f32>, Vec<i32>, usize) {
+        let in_dim = self.in_dim();
+        let end = (start + self.batch).min(self.n_test);
+        let valid = end - start;
+        let mut x = vec![0.0f32; self.batch * in_dim];
+        x[..valid * in_dim]
+            .copy_from_slice(&self.test_x[start * in_dim..end * in_dim]);
+        let y = self.test_y[start..end].to_vec();
+        (x, y, valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Write a minimal synthetic artifact bundle and read it back.
+    #[test]
+    fn roundtrip_synthetic_bundle() {
+        let dir = std::env::temp_dir().join(format!("cer_art_{}", std::process::id()));
+        let mlp = dir.join("mlp");
+        fs::create_dir_all(&mlp).unwrap();
+        let dims = [(3usize, 4usize), (2, 3)];
+        for (i, &(out, inp)) in dims.iter().enumerate() {
+            let w: Vec<f32> = (0..out * inp).map(|v| v as f32).collect();
+            let b: Vec<f32> = vec![0.5; out];
+            for (suffix, data) in [("w", &w), ("b", &b)] {
+                let mut f =
+                    fs::File::create(mlp.join(format!("fc{i}_{suffix}.f32"))).unwrap();
+                for v in data.iter() {
+                    f.write_all(&v.to_le_bytes()).unwrap();
+                }
+            }
+            let mut f = fs::File::create(mlp.join(format!("fcq{i}_w.f32"))).unwrap();
+            for v in &w {
+                f.write_all(&(v * 0.5).to_le_bytes()).unwrap();
+            }
+        }
+        let n_test = 5;
+        let mut f = fs::File::create(mlp.join("test_x.f32")).unwrap();
+        for v in 0..n_test * 4 {
+            f.write_all(&(v as f32).to_le_bytes()).unwrap();
+        }
+        let mut f = fs::File::create(mlp.join("test_y.i32")).unwrap();
+        for v in 0..n_test {
+            f.write_all(&(v as i32 % 2).to_le_bytes()).unwrap();
+        }
+        fs::write(
+            mlp.join("manifest.txt"),
+            "layers 2\nlayer0 3 4\nlayer1 2 3\ntest_n 5\nbatch 2\naccuracy_float 0.99\naccuracy_quant 0.97\nseed 1\n",
+        )
+        .unwrap();
+
+        let art = MlpArtifacts::load(&dir).unwrap();
+        assert_eq!(art.layers.len(), 2);
+        assert_eq!(art.layers[0].weights.rows(), 3);
+        assert_eq!(art.layers[0].weights.cols(), 4);
+        assert_eq!(art.layers[0].quantized.get(0, 1), 0.5);
+        assert_eq!(art.n_test, 5);
+        assert!((art.accuracy_float - 0.99).abs() < 1e-9);
+        // Batch padding.
+        let (x, y, valid) = art.test_batch(4);
+        assert_eq!(valid, 1);
+        assert_eq!(y.len(), 1);
+        assert_eq!(x.len(), 2 * 4);
+        assert_eq!(&x[4..], &[0.0; 4]); // padded row
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable_error() {
+        let err = MlpArtifacts::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

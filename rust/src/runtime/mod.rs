@@ -1,0 +1,143 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and execute them from Rust. Python is never on
+//! this path — the HLO text is compiled once per process and executed with
+//! concrete buffers.
+//!
+//! * [`XlaRuntime`] — one PJRT CPU client + executable cache.
+//! * [`artifacts`] — readers for the weight/testset/manifest files.
+
+pub mod artifacts;
+
+pub use artifacts::MlpArtifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Typed input buffer for an executable.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Arg {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Arg {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Arg::F32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Arg {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Arg::I32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Arg::I32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled executable (one AOT'd jax function).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path it was loaded from (diagnostics).
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given arguments; returns the flattened f32 output
+    /// of the first tuple element (all our AOT functions return 1-tuples —
+    /// `return_tuple=True` in aot.py).
+    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client with an executable cache (compile once per path).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let entry = std::rc::Rc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+        });
+        self.cache.insert(path.to_path_buf(), entry.clone());
+        Ok(entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need the artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts` to
+    // have run). Here: pure argument-shape logic.
+    use super::*;
+
+    #[test]
+    fn arg_shape_checked() {
+        let a = Arg::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        match a {
+            Arg::F32 { dims, .. } => assert_eq!(dims, vec![2, 2]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn arg_shape_mismatch_panics() {
+        Arg::f32(vec![1.0; 3], &[2, 2]);
+    }
+}

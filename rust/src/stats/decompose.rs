@@ -1,0 +1,109 @@
+//! Matrix decomposition preprocessing (Appendix A.1).
+//!
+//! After quantization the zero value may be absent or may not be the most
+//! frequent element. The paper decomposes `W = Ŵ + ω_max·𝟙` where `ω_max`
+//! is the *most frequent* element, so that `Ŵ` has 0 as its mode and the
+//! CER/CSER formats apply at full efficiency. The dot product incurs only
+//! the correction `y += ω_max · Σᵢ xᵢ` (n adds + 1 mul per product).
+
+use crate::formats::Dense;
+use crate::formats::codebook::frequency_codebook;
+use crate::kernels::AnyMatrix;
+use crate::formats::FormatKind;
+
+/// A decomposed matrix: `original = shifted + offset·𝟙`.
+#[derive(Clone, Debug)]
+pub struct Decomposed {
+    /// Ŵ — most frequent element is exactly 0.
+    pub shifted: Dense,
+    /// ω_max — the subtracted mode.
+    pub offset: f32,
+}
+
+impl Decomposed {
+    /// Decompose `m` so its mode becomes 0.
+    pub fn new(m: &Dense) -> Decomposed {
+        let mode = frequency_codebook(m)[0].0;
+        if mode == 0.0 {
+            return Decomposed {
+                shifted: m.clone(),
+                offset: 0.0,
+            };
+        }
+        Decomposed {
+            shifted: m.map(|v| if v == mode { 0.0 } else { v - mode }),
+            offset: mode,
+        }
+    }
+
+    /// Reconstruct the original matrix.
+    pub fn reconstruct(&self) -> Dense {
+        if self.offset == 0.0 {
+            self.shifted.clone()
+        } else {
+            self.shifted.map(|v| v + self.offset)
+        }
+    }
+
+    /// Encode the shifted matrix and compute `y = W·x` including the
+    /// correction term.
+    pub fn matvec(&self, kind: FormatKind, x: &[f32], y: &mut [f32]) {
+        let enc = AnyMatrix::encode(kind, &self.shifted);
+        enc.matvec(x, y);
+        if self.offset != 0.0 {
+            let c_out: f32 = self.offset * x.iter().sum::<f32>();
+            for v in y.iter_mut() {
+                *v += c_out;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_when_zero_is_mode() {
+        let m = crate::paper_example_matrix();
+        let d = Decomposed::new(&m);
+        assert_eq!(d.offset, 0.0);
+        assert_eq!(d.shifted, m);
+    }
+
+    #[test]
+    fn shifts_mode_to_zero() {
+        let m = Dense::from_rows(&[vec![2.0, 2.0, 3.0], vec![2.0, 2.0, 1.0]]);
+        let d = Decomposed::new(&m);
+        assert_eq!(d.offset, 2.0);
+        assert_eq!(d.shifted.data(), &[0.0, 0.0, 1.0, 0.0, 0.0, -1.0]);
+        assert_eq!(d.reconstruct(), m);
+    }
+
+    #[test]
+    fn reconstruct_exact_even_without_zero_value() {
+        // Quantized layer with no zero point at all.
+        let m = Dense::from_rows(&[vec![0.5, 0.5, 0.7], vec![0.9, 0.5, 0.7]]);
+        let d = Decomposed::new(&m);
+        assert_eq!(d.reconstruct(), m);
+        // Shifted mode is zero, so CER sees maximal implicit positions.
+        let s = crate::costmodel::DistStats::measure(&d.shifted);
+        assert!(s.p0 >= 0.5);
+    }
+
+    #[test]
+    fn matvec_with_correction_matches_dense() {
+        let m = Dense::from_rows(&[vec![2.0, 2.0, 3.0], vec![2.0, 1.0, 2.0]]);
+        let d = Decomposed::new(&m);
+        let x = vec![1.5, -2.0, 0.25];
+        let mut want = vec![0.0; 2];
+        crate::kernels::dense_matvec(&m, &x, &mut want);
+        for kind in FormatKind::ALL {
+            let mut y = vec![0.0; 2];
+            d.matvec(kind, &x, &mut y);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+}

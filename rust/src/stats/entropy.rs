@@ -1,0 +1,146 @@
+//! Shannon entropy of empirical element distributions (§II), and the
+//! feasibility boundaries of the entropy–sparsity plane (§IV-D, Fig. 3).
+
+use crate::formats::Dense;
+use crate::formats::codebook::frequency_codebook;
+
+/// Shannon entropy (bits) of a pmf. Zero-probability outcomes contribute 0.
+pub fn entropy_bits(pmf: &[f64]) -> f64 {
+    let sum: f64 = pmf.iter().sum();
+    debug_assert!((sum - 1.0).abs() < 1e-6, "pmf sums to {sum}");
+    pmf.iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Entropy of the empirical element distribution of a matrix.
+pub fn matrix_entropy(m: &Dense) -> f64 {
+    let n = (m.rows() * m.cols()) as f64;
+    frequency_codebook(m)
+        .iter()
+        .map(|&(_, c)| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Minimum achievable entropy given that the most frequent element has mass
+/// `p0` — the bottom boundary of the feasible (H, p₀) region (the paper's
+/// Fig. 3 caption: "distributions whose entropy equal their respective
+/// min-entropy, that is, where H = −log₂ p₀").
+///
+/// Every other value is bounded by `p0`, so the most concentrated
+/// distribution packs ⌊1/p₀⌋ values at mass `p0` plus one remainder:
+/// `H_min = −⌊1/p₀⌋·p₀·lg p₀ − r·lg r`. For `p0 ≥ 0.5` this reduces to the
+/// binary entropy of (p₀, 1−p₀); for small `p0` it approaches −lg p₀.
+pub fn min_entropy(p0: f64) -> f64 {
+    if p0 <= 0.0 || p0 >= 1.0 {
+        return 0.0;
+    }
+    let full = (1.0 / p0).floor();
+    let r = (1.0 - full * p0).max(0.0);
+    let mut h = -full * p0 * p0.log2();
+    if r > 1e-12 {
+        h -= r * r.log2();
+    }
+    h
+}
+
+/// Maximum achievable entropy given mass `p0` on the most frequent element
+/// and `k` distinct values total (remaining mass uniform over k−1 values:
+/// the spike-and-slab family) — the right boundary of Fig. 3.
+///
+/// Note: if `p0 < 1/k`, the "most frequent element" constraint caps the
+/// uniform tail at mass `p0` each; the unconstrained formula would violate
+/// p₀-is-max. We return the constrained maximum.
+pub fn max_entropy(p0: f64, k: usize) -> f64 {
+    assert!(k >= 1);
+    if k == 1 || p0 >= 1.0 {
+        return 0.0;
+    }
+    let tail = 1.0 - p0;
+    let per = tail / (k - 1) as f64;
+    if per <= p0 {
+        // spike-and-slab: H = -p0·lg p0 − tail·lg(per)
+        -(p0 * p0.log2()) - tail * per.log2()
+    } else {
+        // p0 too small to dominate a uniform tail; max is uniform over k.
+        (k as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn uniform_pmf_entropy() {
+        let pmf = vec![0.25; 4];
+        assert!((entropy_bits(&pmf) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_pmf_entropy_zero() {
+        assert_eq!(entropy_bits(&[1.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn paper_example_entropy() {
+        let h = matrix_entropy(&paper_example_matrix());
+        // {32,21,4,3}/60 → ≈ 1.53 bits.
+        assert!(h > 1.4 && h < 1.7, "H = {h}");
+    }
+
+    #[test]
+    fn min_entropy_is_binary_entropy_for_large_p0() {
+        assert!((min_entropy(0.5) - 1.0).abs() < 1e-12);
+        let p0: f64 = 0.9;
+        let binary = -(p0 * p0.log2() + 0.1f64 * 0.1f64.log2());
+        assert!((min_entropy(0.9) - binary).abs() < 1e-12);
+        assert_eq!(min_entropy(1.0), 0.0);
+        assert_eq!(min_entropy(0.0), 0.0);
+    }
+
+    #[test]
+    fn min_entropy_approaches_neg_log_p0_for_small_p0() {
+        // Fig. 3's bottom boundary: H_min = −lg p₀ when 1/p₀ is integral.
+        assert!((min_entropy(1.0 / 16.0) - 4.0).abs() < 1e-9);
+        assert!((min_entropy(1.0 / 64.0) - 6.0).abs() < 1e-9);
+        // And always ≥ the unconstrained binary entropy.
+        for p0 in [0.05, 0.1, 0.3] {
+            let q = 1.0 - p0;
+            let binary = -(p0 * (p0 as f64).log2() + q * q.log2());
+            assert!(min_entropy(p0) >= binary - 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_entropy_spike_and_slab() {
+        // p0 = 0.5, K = 3: H = 0.5 + 0.5·lg(4) = 0.5·1 + 0.5·2 = 1.5.
+        let h = max_entropy(0.5, 3);
+        assert!((h - 1.5).abs() < 1e-12, "{h}");
+        // Min ≤ max always.
+        for p0 in [0.1, 0.3, 0.6, 0.9] {
+            assert!(min_entropy(p0) <= max_entropy(p0, 128) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_entropy_small_p0_caps_at_uniform() {
+        // p0 = 1/128 exactly uniform: H = 7.
+        let h = max_entropy(1.0 / 128.0, 128);
+        assert!((h - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn renyi_relation_p0_geq_2_pow_neg_h() {
+        // §IV: p0 ≥ 2^{-H} for any distribution where p0 is the max.
+        let m = paper_example_matrix();
+        let h = matrix_entropy(&m);
+        let p0 = 32.0 / 60.0;
+        assert!(p0 >= 2f64.powf(-h));
+    }
+}

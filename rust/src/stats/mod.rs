@@ -1,0 +1,19 @@
+//! Statistical machinery of the paper's experiments:
+//!
+//! * [`entropy`] — Shannon entropy of pmfs and matrices, feasibility limits
+//!   of the (H, p₀) plane (the two black boundary lines of Figs. 3/10).
+//! * [`synth`] — the (H, p₀)-plane matrix synthesizer behind Figs. 4 & 5:
+//!   builds a pmf with exactly the requested entropy/sparsity and samples
+//!   iid matrices from it.
+//! * [`quantize`] — the uniform quantizer of §V-B.
+//! * [`decompose`] — the Appendix A.1 preprocessing `W = Ŵ + ω_max·𝟙`.
+
+pub mod decompose;
+pub mod entropy;
+pub mod quantize;
+pub mod synth;
+
+pub use decompose::Decomposed;
+pub use entropy::{entropy_bits, matrix_entropy, max_entropy, min_entropy};
+pub use quantize::UniformQuantizer;
+pub use synth::PlanePoint;

@@ -1,0 +1,118 @@
+//! Uniform quantizer (§V-B): place `K = 2^b` equidistant points over the
+//! range of weight values of a layer and round every element to its
+//! nearest point. "We chose the uniform quantizer because of its
+//! simplicity and high performance relative to other, more sophisticated
+//! quantizers" (§V-B).
+
+use crate::formats::Dense;
+
+/// Uniform quantizer over `[w_min, w_max]` with `K` points.
+#[derive(Clone, Debug)]
+pub struct UniformQuantizer {
+    /// Quantization points Ω, ascending.
+    pub points: Vec<f32>,
+}
+
+impl UniformQuantizer {
+    /// Fit to the value range of `m` with `2^bits` points.
+    pub fn fit(m: &Dense, bits: u32) -> UniformQuantizer {
+        assert!(bits >= 1 && bits <= 16, "bits = {bits}");
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for &v in m.data() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        assert!(lo.is_finite() && hi.is_finite(), "non-finite weights");
+        UniformQuantizer::over_range(lo, hi, 1usize << bits)
+    }
+
+    /// `k` equidistant points over `[lo, hi]`.
+    pub fn over_range(lo: f32, hi: f32, k: usize) -> UniformQuantizer {
+        assert!(k >= 1 && hi >= lo);
+        let points = if k == 1 || hi == lo {
+            vec![lo]
+        } else {
+            let step = (hi - lo) as f64 / (k - 1) as f64;
+            (0..k).map(|i| (lo as f64 + step * i as f64) as f32).collect()
+        };
+        UniformQuantizer { points }
+    }
+
+    /// Nearest quantization point of `v`.
+    #[inline]
+    pub fn quantize(&self, v: f32) -> f32 {
+        let k = self.points.len();
+        if k == 1 {
+            return self.points[0];
+        }
+        let lo = self.points[0] as f64;
+        let step = (self.points[k - 1] as f64 - lo) / (k - 1) as f64;
+        let idx = (((v as f64 - lo) / step).round() as i64).clamp(0, (k - 1) as i64);
+        self.points[idx as usize]
+    }
+
+    /// Quantize a whole matrix.
+    pub fn quantize_matrix(&self, m: &Dense) -> Dense {
+        m.map(|v| self.quantize(v))
+    }
+}
+
+/// Convenience: §V-B's whole pipeline for one layer — fit a `bits`-wide
+/// uniform quantizer to `m` and return the quantized matrix.
+pub fn uniform_quantize(m: &Dense, bits: u32) -> Dense {
+    UniformQuantizer::fit(m, bits).quantize_matrix(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::codebook::frequency_codebook;
+    use crate::util::Rng;
+
+    #[test]
+    fn grid_is_equidistant_and_spans_range() {
+        let q = UniformQuantizer::over_range(-1.0, 1.0, 5);
+        assert_eq!(q.points, vec![-1.0, -0.5, 0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn quantize_rounds_to_nearest() {
+        let q = UniformQuantizer::over_range(0.0, 4.0, 5);
+        assert_eq!(q.quantize(0.4), 0.0);
+        assert_eq!(q.quantize(0.6), 1.0);
+        assert_eq!(q.quantize(3.9), 4.0);
+        assert_eq!(q.quantize(-10.0), 0.0); // clamped
+        assert_eq!(q.quantize(10.0), 4.0);
+    }
+
+    #[test]
+    fn quantized_matrix_has_at_most_k_values() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..4000).map(|_| rng.normal() as f32 * 0.1).collect();
+        let m = Dense::from_vec(40, 100, data);
+        let qm = uniform_quantize(&m, 7);
+        let k = frequency_codebook(&qm).len();
+        assert!(k <= 128, "K = {k}");
+        assert!(k > 64, "quantizer degenerate: K = {k}");
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Rng::new(6);
+        let data: Vec<f32> = (0..1000).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let m = Dense::from_vec(10, 100, data);
+        let q = UniformQuantizer::fit(&m, 7);
+        let step = q.points[1] - q.points[0];
+        let qm = q.quantize_matrix(&m);
+        for (a, b) in m.data().iter().zip(qm.data()) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_matrix_single_point() {
+        let m = Dense::from_vec(2, 2, vec![3.0; 4]);
+        let qm = uniform_quantize(&m, 7);
+        assert_eq!(qm.data(), &[3.0; 4]);
+    }
+}

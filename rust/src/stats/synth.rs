@@ -1,0 +1,196 @@
+//! (H, p₀)-plane matrix synthesizer — the workload generator of the
+//! simulated experiments (Figs. 4 & 5).
+//!
+//! A *point distribution* on the plane is a pmf over K values with
+//! prescribed sparsity `p0` (mass of the zero element, which must remain
+//! the most frequent) and prescribed Shannon entropy `H`. We realize it as
+//! a truncated-geometric family over the K−1 non-zero values,
+//! `p_k ∝ q^k`, whose entropy is continuous and strictly increasing in
+//! `q ∈ (0, 1]`; a bisection on `q` hits the target entropy to 1e-9 bits.
+//! `q = 1` recovers the spike-and-slab (CSR-optimal) boundary, `q → 0` the
+//! min-entropy boundary.
+
+use crate::formats::Dense;
+use crate::stats::entropy::{entropy_bits, max_entropy, min_entropy};
+use crate::util::{AliasTable, Rng};
+
+/// A point distribution on the entropy–sparsity plane.
+#[derive(Clone, Debug)]
+pub struct PlanePoint {
+    /// Target sparsity (mass of the zero element).
+    pub p0: f64,
+    /// Achieved entropy (bits) — equals the requested H within 1e-6.
+    pub entropy: f64,
+    /// The full pmf: index 0 is the zero element, 1..K the non-zero values.
+    pub pmf: Vec<f64>,
+    /// The value associated with each pmf index (`values[0] == 0.0`).
+    pub values: Vec<f32>,
+}
+
+/// Entropy of the geometric-tail pmf for a given q.
+fn tail_entropy(p0: f64, k: usize, q: f64) -> f64 {
+    entropy_bits(&build_pmf(p0, k, q))
+}
+
+/// Build the pmf [p0, tail...] with tail ∝ q^i over k−1 values, **capped**
+/// at p0 so the zero element stays the mode (§IV's standing assumption).
+///
+/// Capping uses cap-and-carry: excess mass above p0 spills to the next
+/// (rarer) value. As q → 0 this converges to the min-entropy configuration
+/// (⌊1/p₀⌋ values at mass p₀), as q → 1 to the spike-and-slab boundary, so
+/// the family spans the paper's entire feasible (H, p₀) band.
+fn build_pmf(p0: f64, k: usize, q: f64) -> Vec<f64> {
+    let tail_n = k - 1;
+    let mut tail: Vec<f64> = (0..tail_n).map(|i| q.powi(i as i32)).collect();
+    let s: f64 = tail.iter().sum();
+    for t in tail.iter_mut() {
+        *t *= (1.0 - p0) / s;
+    }
+    // Cap-and-carry waterfill at p0.
+    let mut carry = 0.0f64;
+    for t in tail.iter_mut() {
+        let want = *t + carry;
+        *t = want.min(p0);
+        carry = want - *t;
+    }
+    // carry > 0 means (k)·p0 < 1: infeasible mode constraint; the caller's
+    // feasibility check rejects this before sampling.
+    let mut pmf = Vec::with_capacity(k);
+    pmf.push(p0);
+    pmf.extend(tail);
+    pmf
+}
+
+impl PlanePoint {
+    /// Synthesize a pmf at `(entropy, p0)` over `k` distinct values.
+    ///
+    /// Returns `None` when the point is infeasible: outside
+    /// `[min_entropy(p0), max_entropy(p0, k)]`, or when the required tail
+    /// would make a non-zero value more frequent than the zero element
+    /// (`p0` must stay the mode, §IV's standing assumption).
+    pub fn synthesize(entropy: f64, p0: f64, k: usize) -> Option<PlanePoint> {
+        if !(0.0..1.0).contains(&p0) || p0 == 0.0 || k < 2 {
+            return None;
+        }
+        // Mode feasibility: K values at mass ≤ p0 must cover all the mass.
+        if (k as f64) * p0 < 1.0 - 1e-9 {
+            return None;
+        }
+        let (h_min, h_max) = (min_entropy(p0), max_entropy(p0, k));
+        if entropy < h_min - 1e-9 || entropy > h_max + 1e-9 {
+            return None;
+        }
+        // Bisection on q ∈ (0, 1]; tail_entropy is increasing in q.
+        let (mut lo, mut hi) = (1e-12, 1.0);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if tail_entropy(p0, k, mid) < entropy {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let q = 0.5 * (lo + hi);
+        let pmf = build_pmf(p0, k, q);
+        // Mode constraint: zero element must be most frequent.
+        if pmf[1..].iter().any(|&p| p > p0 + 1e-12) {
+            return None;
+        }
+        let achieved = entropy_bits(&pmf);
+        if (achieved - entropy).abs() > 1e-6 {
+            return None;
+        }
+        // Non-zero values: symmetric grid around 0 excluding 0 itself
+        // (mimicking a quantizer output alphabet).
+        let values: Vec<f32> = std::iter::once(0.0f32)
+            .chain((1..k).map(|i| {
+                let sign = if i % 2 == 1 { 1.0 } else { -1.0 };
+                sign * (i.div_ceil(2)) as f32 * 0.01
+            }))
+            .collect();
+        Some(PlanePoint {
+            p0,
+            entropy: achieved,
+            pmf,
+            values,
+        })
+    }
+
+    /// Number of distinct values K.
+    pub fn k(&self) -> usize {
+        self.pmf.len()
+    }
+
+    /// Sample an `m × n` matrix with iid elements from this pmf.
+    pub fn sample_matrix(&self, m: usize, n: usize, rng: &mut Rng) -> Dense {
+        let alias = AliasTable::new(&self.pmf);
+        let data: Vec<f32> = (0..m * n)
+            .map(|_| self.values[alias.sample(rng)])
+            .collect();
+        Dense::from_vec(m, n, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::DistStats;
+
+    #[test]
+    fn hits_requested_entropy_and_sparsity() {
+        // The Fig. 5 operating point: H = 4.0, p0 = 0.55, K = 2^7.
+        let p = PlanePoint::synthesize(4.0, 0.55, 128).expect("feasible");
+        assert!((p.entropy - 4.0).abs() < 1e-6);
+        assert!((p.pmf[0] - 0.55).abs() < 1e-12);
+        let total: f64 = p.pmf.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_matrix_statistics_converge() {
+        let p = PlanePoint::synthesize(4.0, 0.55, 128).unwrap();
+        let mut rng = Rng::new(2024);
+        let m = p.sample_matrix(200, 500, &mut rng);
+        let s = DistStats::measure(&m);
+        assert!((s.p0 - 0.55).abs() < 0.01, "p0 = {}", s.p0);
+        assert!((s.entropy - 4.0).abs() < 0.05, "H = {}", s.entropy);
+    }
+
+    #[test]
+    fn infeasible_points_rejected() {
+        // Entropy above the spike-and-slab max for this (p0, K).
+        assert!(PlanePoint::synthesize(6.9, 0.9, 128).is_none());
+        // Entropy below binary min.
+        assert!(PlanePoint::synthesize(0.2, 0.5, 128).is_none());
+        // Degenerate inputs.
+        assert!(PlanePoint::synthesize(1.0, 0.0, 128).is_none());
+        assert!(PlanePoint::synthesize(1.0, 0.5, 1).is_none());
+    }
+
+    #[test]
+    fn boundary_q_equals_one_is_spike_and_slab() {
+        // At the max-entropy boundary, the tail is (near) uniform.
+        let p0 = 0.6;
+        let h = crate::stats::entropy::max_entropy(p0, 64);
+        let p = PlanePoint::synthesize(h - 1e-9, p0, 64).expect("boundary feasible");
+        let tail = &p.pmf[1..];
+        let (lo, hi) = tail
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        assert!(hi / lo < 1.001, "tail not uniform: {lo}..{hi}");
+    }
+
+    #[test]
+    fn low_entropy_concentrates_tail() {
+        let p = PlanePoint::synthesize(1.2, 0.5, 128).unwrap();
+        // First non-zero value carries almost all the non-zero mass.
+        assert!(p.pmf[1] > 0.4 * (1.0 - 0.5));
+    }
+
+    #[test]
+    fn mode_constraint_enforced() {
+        // Low p0 with low entropy forces a dominant non-zero value → must
+        // be rejected to keep p0 the mode.
+        assert!(PlanePoint::synthesize(0.9, 0.05, 128).is_none());
+    }
+}

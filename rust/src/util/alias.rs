@@ -1,0 +1,132 @@
+//! Walker's alias method for O(1) sampling from a discrete distribution.
+//!
+//! The (H, p₀)-plane experiments of the paper (Figs. 4 and 5) sample tens of
+//! millions of matrix elements from synthesized probability mass functions;
+//! the alias table makes this O(1) per element after O(K) setup.
+
+use super::rng::Rng;
+
+/// Precomputed alias table over `K` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from (not necessarily normalized) non-negative weights.
+    ///
+    /// Panics if `weights` is empty, contains a negative/NaN value, or sums
+    /// to zero.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "alias table needs at least one outcome");
+        let sum: f64 = weights.iter().sum();
+        assert!(
+            sum > 0.0 && sum.is_finite(),
+            "weights must sum to a positive finite value"
+        );
+        for &w in weights {
+            assert!(w >= 0.0, "negative weight {w}");
+        }
+        let k = weights.len();
+        let mut prob: Vec<f64> = weights.iter().map(|&w| w / sum * k as f64).collect();
+        let mut alias = vec![0u32; k];
+        let mut small: Vec<u32> = Vec::with_capacity(k);
+        let mut large: Vec<u32> = Vec::with_capacity(k);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers: force to 1.
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_target_distribution() {
+        let weights = [0.5, 0.25, 0.125, 0.125];
+        let t = AliasTable::new(&weights);
+        let mut rng = Rng::new(123);
+        let n = 400_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - w).abs() < 0.005,
+                "outcome {i}: empirical {emp} vs target {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[3.0]);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[1.0, 0.0, 1.0]);
+        let mut rng = Rng::new(5);
+        for _ in 0..50_000 {
+            assert_ne!(t.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty() {
+        AliasTable::new(&[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

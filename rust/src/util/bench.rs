@@ -1,0 +1,142 @@
+//! Minimal benchmarking harness (in-tree substitute for criterion, which is
+//! not available in the offline vendor set — see DESIGN.md §4).
+//!
+//! Methodology: warmup runs, then `iters` timed samples of the closure;
+//! reports min / median / mean / p95. Samples are wall-clock per call
+//! (callers batch internally when the payload is too small to time).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-call times in ns, sorted ascending.
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns[0]
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let s = &self.samples_ns;
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        let idx = ((self.samples_ns.len() as f64) * 0.95) as usize;
+        self.samples_ns[idx.min(self.samples_ns.len() - 1)]
+    }
+
+    /// criterion-like one-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} min {:>12}  med {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            fmt_ns(self.min_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, printing a criterion-style line.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Median wall-clock ns of `f` without printing (harness-internal use).
+pub fn time_median_ns(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        0.5 * (samples[n / 2 - 1] + samples[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics_ordered() {
+        let r = bench("noop", 2, 11, || {
+            std::hint::black_box(42);
+        });
+        assert!(r.min_ns() <= r.median_ns());
+        assert!(r.median_ns() <= r.p95_ns() + 1e-9);
+        assert_eq!(r.samples_ns.len(), 11);
+    }
+
+    #[test]
+    fn time_median_positive_for_real_work() {
+        let mut v = vec![0u64; 4096];
+        let t = time_median_ns(1, 5, || {
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = x.wrapping_add(i as u64);
+            }
+            std::hint::black_box(&v);
+        });
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.21e9), "3.210 s");
+    }
+}

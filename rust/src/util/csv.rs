@@ -1,0 +1,78 @@
+//! Minimal CSV writer used by the harness to dump figure/table data.
+//!
+//! The harness writes one CSV per paper figure under `results/` so the plots
+//! can be regenerated with any plotting tool; values are formatted with
+//! enough precision to round-trip f64.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, creating parent directories, and write the
+    /// header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Write one row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    /// Write one row of f64 values (common case for figure data).
+    pub fn row_f64(&mut self, fields: &[f64]) -> io::Result<()> {
+        let formatted: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&formatted)
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("cer_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row_f64(&[0.5, 1.25]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n0.5,1.25\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("cer_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        w.row(&["only-one".into()]).unwrap();
+    }
+}

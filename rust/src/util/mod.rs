@@ -1,0 +1,58 @@
+//! Small self-contained utilities: deterministic RNG, discrete sampling,
+//! CSV emission and terminal tables.
+//!
+//! Everything here is dependency-free so the core library stays portable;
+//! determinism (seeded RNG, stable float formatting) is load-bearing for the
+//! reproduction harness — every table in EXPERIMENTS.md is regenerable
+//! bit-for-bit from a seed.
+
+pub mod alias;
+pub mod bench;
+pub mod csv;
+pub mod rng;
+pub mod table;
+
+pub use alias::AliasTable;
+pub use rng::Rng;
+
+/// Human-readable byte size (`12.3 KB`, `1.1 MB`, ...).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// `x{ratio}` formatting used throughout the paper's tables (e.g. `x2.74`).
+pub fn ratio(baseline: f64, value: f64) -> String {
+    if value == 0.0 {
+        return "x∞".to_string();
+    }
+    format!("x{:.2}", baseline / value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KB");
+        assert_eq!(human_bytes(3.5 * 1024.0 * 1024.0), "3.50 MB");
+    }
+
+    #[test]
+    fn ratio_matches_paper_style() {
+        assert_eq!(ratio(114.72, 41.13), "x2.79");
+        assert_eq!(ratio(10.0, 0.0), "x∞");
+    }
+}

@@ -1,0 +1,87 @@
+//! Plain-text table rendering for the harness (`repro table2` etc. print
+//! the paper's tables to the terminal in the same row/column layout).
+
+/// Column-aligned text table.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        TextTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) -> &mut Self {
+        assert_eq!(fields.len(), self.header.len(), "arity mismatch");
+        self.rows.push(fields);
+        self
+    }
+
+    /// Render with single-space-padded, `|`-separated columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.chars().count());
+            }
+        }
+        let fmt_row = |fields: &[String]| -> String {
+            let cells: Vec<String> = fields
+                .iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:w$}", f, w = widths[i]))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let sep = format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new(&["net", "ratio"]);
+        t.row(vec!["VGG16".into(), "x2.11".into()]);
+        t.row(vec!["DenseNet".into(), "x2.79".into()]);
+        let r = t.render();
+        assert!(r.contains("| net      | ratio |"));
+        assert!(r.contains("| VGG16    | x2.11 |"));
+        assert!(r.contains("| DenseNet | x2.79 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_arity() {
+        let mut t = TextTable::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the reproduction harness: run every table and
+//! figure generator at reduced scale and assert (a) the artifacts are
+//! written and (b) the qualitative shape of the paper's results holds —
+//! who wins, in which region, with gains in the right order.
+
+use std::path::PathBuf;
+
+use cer::costmodel::{EnergyModel, TimeModel};
+use cer::harness::eval::EvalConfig;
+use cer::harness::{figures, tables};
+
+fn outdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cer_harness_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn fast_cfg(scale: usize) -> EvalConfig {
+    EvalConfig::fast(scale)
+}
+
+#[test]
+fn tables_2_3_4_shapes_hold() {
+    let cfg = fast_cfg(12);
+    let evals = tables::eval_vb_networks(&cfg);
+    let d = outdir("t234");
+    let t2 = tables::table2(&evals, Some(&d)).unwrap();
+    let t3 = tables::table3(&evals, Some(&d)).unwrap();
+    let t4 = tables::table4(&evals, Some(&d)).unwrap();
+    assert!(d.join("table2.csv").exists());
+    assert!(d.join("table3.csv").exists());
+    assert!(d.join("table4.csv").exists());
+    assert!(t2.contains("VGG16") && t3.contains("energy") && t4.contains("kbar"));
+    for ev in &evals {
+        let totals = ev.totals();
+        // Paper shape (Tables II & III): CER/CSER beat dense on storage,
+        // ops and energy; CER/CSER beat CSR on storage.
+        for i in [2usize, 3] {
+            assert!(totals[i].storage_bits < totals[0].storage_bits, "{}", ev.net);
+            assert!(totals[i].ops < totals[0].ops, "{}", ev.net);
+            assert!(totals[i].energy_pj < totals[0].energy_pj, "{}", ev.net);
+            assert!(totals[i].storage_bits < totals[1].storage_bits, "{}", ev.net);
+        }
+        // CSR ≈ dense or worse on storage for these 7-bit nets (paper: CSR
+        // gains ≤ x1.04 on storage, i.e. essentially none).
+        assert!(
+            totals[1].storage_bits > totals[0].storage_bits / 2.0,
+            "{}: CSR should not be a big storage win here",
+            ev.net
+        );
+    }
+}
+
+#[test]
+fn table_5_6_retrained_shape_holds() {
+    let cfg = fast_cfg(4);
+    let evals = tables::eval_retrained_networks(&cfg);
+    let d = outdir("t56");
+    tables::table5(&evals, Some(&d)).unwrap();
+    tables::table6(&evals, Some(&d)).unwrap();
+    assert!(d.join("table5.csv").exists());
+    assert!(d.join("table6.csv").exists());
+    for ev in &evals {
+        let totals = ev.totals();
+        let g_csr = totals[0].storage_bits / totals[1].storage_bits;
+        let g_cer = totals[0].storage_bits / totals[2].storage_bits;
+        // Paper Table V ordering: CER > CSR, both large.
+        assert!(g_cer > g_csr, "{}: CER {g_cer} ≤ CSR {g_csr}", ev.net);
+        assert!(g_csr > 3.0, "{}: CSR gain too small {g_csr}", ev.net);
+        // Energy: big gains (paper: x54–x96).
+        let e_cer = totals[0].energy_pj / totals[2].energy_pj;
+        assert!(e_cer > 8.0, "{}: CER energy gain {e_cer}", ev.net);
+    }
+}
+
+#[test]
+fn alexnet_dc_beats_csr_everywhere() {
+    let cfg = fast_cfg(6);
+    let ev = tables::eval_alexnet_dc(&cfg);
+    let totals = ev.totals();
+    for crit in [
+        |t: &cer::harness::Totals| t.storage_bits,
+        |t: &cer::harness::Totals| t.ops,
+        |t: &cer::harness::Totals| t.energy_pj,
+    ] {
+        assert!(crit(&totals[2]) < crit(&totals[1]), "CER vs CSR");
+        assert!(crit(&totals[3]) < crit(&totals[0]), "CSER vs dense");
+    }
+}
+
+#[test]
+fn figure4_regions_match_paper_sketch() {
+    let d = outdir("f4");
+    let e = EnergyModel::table_i();
+    let t = TimeModel::default_model();
+    let (feasible, wins) = figures::figure4(&d, 9, 10, 3, 60, 60, 128, &e, &t).unwrap();
+    assert!(feasible >= 25, "feasible {feasible}");
+    // Proposed formats dominate energy over the whole feasible plane.
+    assert!(wins[3][2] > wins[3][0] + wins[3][1]);
+    // Dense wins a nonzero share of #ops points (upper-left region).
+    assert!(wins[1][0] > 0);
+    let text = std::fs::read_to_string(d.join("figure4.csv")).unwrap();
+    assert!(text.lines().count() > feasible);
+}
+
+#[test]
+fn figure5_convergence_and_crossover() {
+    let d = outdir("f5");
+    let e = EnergyModel::table_i();
+    let t = TimeModel::default_model();
+    let rows =
+        figures::figure5(&d, 11, 4.0, 0.55, 100, &[64, 1024, 16384], 3, 128, &e, &t).unwrap();
+    // Storage ratio of CER grows with n and exceeds both dense (>1) and
+    // CSR at large n.
+    let cer_small = rows[0].1[2][0];
+    let cer_large = rows[2].1[2][0];
+    let csr_large = rows[2].1[1][0];
+    assert!(cer_large > cer_small);
+    assert!(cer_large > 1.0);
+    assert!(cer_large > csr_large);
+    // CER and CSER converge (§IV: same limit as n → ∞).
+    let cser_large = rows[2].1[3][0];
+    assert!((cer_large - cser_large).abs() / cer_large < 0.05);
+}
+
+#[test]
+fn figure1_and_figure10_artifacts() {
+    let d = outdir("f110");
+    let (_, freq, k) = figures::figure1(&d, 3).unwrap();
+    assert!(k > 32 && freq < 0.3);
+    let cfg = fast_cfg(24);
+    let evals = tables::eval_vb_networks(&cfg);
+    figures::figure10(&evals, &d).unwrap();
+    let scatter = std::fs::read_to_string(d.join("figure10.csv")).unwrap();
+    // One row per layer of the three networks (+ header).
+    let expected: usize = evals.iter().map(|e| e.layers.len()).sum();
+    assert_eq!(scatter.lines().count(), expected + 1);
+    assert!(d.join("figure10_boundary.csv").exists());
+}
+
+#[test]
+fn breakdown_storage_parts_sum_to_total() {
+    let d = outdir("bd");
+    // Scale 4 keeps column counts in the paper's regime (at tiny n the
+    // O(K/n) pointer overhead would dominate instead — Corollary 2.1).
+    let mats = figures::synthesize_vb_matrices("densenet", 5, 4);
+    let ev = cer::harness::NetworkEval::run_matrices("DenseNet", mats.clone(), &fast_cfg(4));
+    figures::breakdown(
+        &ev,
+        &mats,
+        &d,
+        &EnergyModel::table_i(),
+        &TimeModel::default_model(),
+    )
+    .unwrap();
+    // colI must dominate CER storage (paper Fig. 6: "most of the storage
+    // goes to the column indices").
+    let text = std::fs::read_to_string(d.join("breakdown_densenet_storage.csv")).unwrap();
+    let mut cer_parts: Vec<(String, u64)> = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f[0] == "CER" {
+            cer_parts.push((f[1].to_string(), f[2].parse().unwrap()));
+        }
+    }
+    let coli = cer_parts.iter().find(|(n, _)| n == "colI").unwrap().1;
+    let total: u64 = cer_parts.iter().map(|(_, b)| b).sum();
+    assert!(
+        coli as f64 / total as f64 > 0.5,
+        "colI {coli} / total {total}"
+    );
+}
+
+#[test]
+fn packed_dense_storage_small_but_decode_costly() {
+    let mut cfg = fast_cfg(16);
+    cfg.wallclock = true;
+    let (_, wall) = tables::packed_dense_experiment(&cfg);
+    assert!(wall > 0.0, "decode penalty {wall}% should be positive");
+}

@@ -1,0 +1,127 @@
+//! Integration tests across the runtime boundary: the HLO text artifacts
+//! produced by the build-time JAX/Pallas layer must execute through PJRT
+//! with numerics matching the native Rust kernels.
+//!
+//! These tests need `make artifacts`; they skip (with a notice) if the
+//! artifacts are missing so `cargo test` works on a fresh checkout.
+
+use std::path::Path;
+
+use cer::coordinator::engine::to_codes;
+use cer::coordinator::{Backend, Engine, Objective};
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::AnyMatrix;
+use cer::runtime::{Arg, MlpArtifacts, XlaRuntime};
+use cer::util::Rng;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("aot_manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts`; skipping runtime test");
+        None
+    }
+}
+
+#[test]
+fn quant_matmul_artifact_matches_native_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let exe = rt.load(&dir.join("quant_matmul.hlo.txt")).expect("compile");
+    // The artifact was lowered for (m, n, k, b) = (16, 24, 5, 4) — see
+    // aot.py lower_quant_matmul.
+    let (m, n, k, b) = (16usize, 24usize, 5usize, 4usize);
+    let mut rng = Rng::new(77);
+    let omega: Vec<f32> = (0..k).map(|i| i as f32 * 0.3 - 0.6).collect();
+    let codes: Vec<i32> = (0..m * n).map(|_| rng.below(k) as i32).collect();
+    let x: Vec<f32> = (0..n * b).map(|_| rng.f32() - 0.5).collect();
+    let got = exe
+        .run_f32(&[
+            Arg::i32(codes.clone(), &[m, n]),
+            Arg::f32(omega.clone(), &[k]),
+            Arg::f32(x.clone(), &[n, b]),
+        ])
+        .expect("execute");
+    assert_eq!(got.len(), m * b);
+    // Native check: W = omega[codes]; y_col = W @ x_col per column.
+    let w = Dense::from_vec(
+        m,
+        n,
+        codes.iter().map(|&c| omega[c as usize]).collect(),
+    );
+    let enc = AnyMatrix::encode(FormatKind::Cser, &w);
+    for col in 0..b {
+        let xc: Vec<f32> = (0..n).map(|r| x[r * b + col]).collect();
+        let mut y = vec![0.0f32; m];
+        enc.matvec(&xc, &mut y);
+        for r in 0..m {
+            let g = got[r * b + col];
+            assert!(
+                (g - y[r]).abs() < 1e-3 * (1.0 + y[r].abs()),
+                "({r},{col}): xla {g} vs native {}",
+                y[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_backends_agree_on_quantized_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let art = MlpArtifacts::load(dir).expect("artifacts");
+    let mut native = Engine::from_artifacts(&art, Backend::Native, Objective::Energy).unwrap();
+    let mut xla = Engine::from_artifacts(&art, Backend::XlaCser, Objective::Energy).unwrap();
+    let batch = xla.required_batch().unwrap();
+    let (x, _, _) = art.test_batch(0);
+    let y_native = native.forward(&x, batch).unwrap();
+    let y_xla = xla.forward(&x, batch).unwrap();
+    assert_eq!(y_native.len(), y_xla.len());
+    for (i, (a, b)) in y_native.iter().zip(&y_xla).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-2 * (1.0 + b.abs()),
+            "logit {i}: native {a} vs xla {b}"
+        );
+    }
+}
+
+#[test]
+fn xla_dense_matches_build_time_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let art = MlpArtifacts::load(dir).expect("artifacts");
+    let mut engine = Engine::from_artifacts(&art, Backend::XlaDense, Objective::Energy).unwrap();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut start = 0usize;
+    // First 10 batches are enough for a ±5% accuracy check.
+    for _ in 0..10 {
+        if start >= art.n_test {
+            break;
+        }
+        let (x, y, valid) = art.test_batch(start);
+        let pred = engine.classify(&x, art.batch).unwrap();
+        for i in 0..valid {
+            if pred[i] == y[i] as usize {
+                correct += 1;
+            }
+        }
+        total += valid;
+        start += art.batch;
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(
+        (acc - art.accuracy_float).abs() < 0.05,
+        "accuracy {acc} vs recorded {}",
+        art.accuracy_float
+    );
+}
+
+#[test]
+fn to_codes_agrees_with_python_convention() {
+    // Ascending unique values — the shared convention with
+    // aot.codes_from_quantized (np.unique is ascending).
+    let m = Dense::from_rows(&[vec![0.5, -0.5, 0.0], vec![0.0, 0.5, 0.5]]);
+    let (codes, omega) = to_codes(&m);
+    assert_eq!(omega, vec![-0.5, 0.0, 0.5]);
+    assert_eq!(codes, vec![2, 0, 1, 1, 2, 2]);
+}
