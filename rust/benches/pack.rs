@@ -1,0 +1,137 @@
+//! `.cerpack` artifact benchmarks: serialized size per zoo network and the
+//! cold-start path (read + decode + engine build) that production serving
+//! depends on. Results are printed and also written to `BENCH_pack.json`
+//! in the working directory to start the perf trajectory for the artifact
+//! subsystem.
+//!
+//! Run: `cargo bench --bench pack`
+//!
+//! Large nets are benchmarked at a reduced scale (set `BENCH_PACK_SCALE=1`
+//! for paper-exact shapes; default 8) — sizes scale with the layer dims,
+//! the cold-start cost per byte does not.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use cer::coordinator::{Engine, Objective};
+use cer::costmodel::{EnergyModel, TimeModel};
+use cer::networks::weights::synthesize_zoo_layers;
+use cer::util::bench::fmt_ns;
+use cer::util::human_bytes;
+
+struct Row {
+    net: String,
+    layers: usize,
+    dense_bytes: u64,
+    pack_file_bytes: u64,
+    array_bytes: u64,
+    cold_start_ns: f64,
+    save_ns: f64,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+fn main() {
+    let scale: usize = std::env::var("BENCH_PACK_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let energy = EnergyModel::table_i();
+    let time = TimeModel::default_model();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Small nets at full scale, large §V-B nets at `scale`.
+    let cases: [(&str, usize); 6] = [
+        ("lenet-300-100", 1),
+        ("lenet5", 1),
+        ("vgg-cifar10", scale.max(1)),
+        ("densenet", scale.max(1)),
+        ("resnet152", scale.max(1)),
+        ("vgg16", scale.max(1)),
+    ];
+    for (net, net_scale) in cases {
+        let (spec_used, layers) = synthesize_zoo_layers(net, net_scale, 0xCE5E).expect("zoo net");
+        let engine = Engine::native_auto(layers, &energy, &time, Objective::Energy);
+
+        let path = std::env::temp_dir().join(format!(
+            "cer-bench-pack-{}-{net}.cerpack",
+            std::process::id()
+        ));
+        // Save (measure once per iteration: serialize + fs write).
+        let mut save_samples = Vec::new();
+        let mut file_bytes = 0u64;
+        let mut array_bytes = 0u64;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let (fb, manifest) = engine
+                .save_pack(&path, spec_used.name, "argmin energy (modeled)")
+                .expect("save");
+            save_samples.push(t0.elapsed().as_nanos() as f64);
+            file_bytes = fb;
+            array_bytes = manifest.total_array_bytes();
+        }
+        // Cold start: read + checksum + decode + engine build.
+        let mut load_samples = Vec::new();
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            let e = Engine::from_pack(&path).expect("cold start");
+            load_samples.push(t0.elapsed().as_nanos() as f64);
+            std::hint::black_box(e.storage_bits());
+        }
+        std::fs::remove_file(&path).ok();
+
+        let dense_bytes: u64 = spec_used.layers.iter().map(|l| l.params() * 4).sum();
+        let row = Row {
+            net: spec_used.name.to_string(),
+            layers: spec_used.layers.len(),
+            dense_bytes,
+            pack_file_bytes: file_bytes,
+            array_bytes,
+            cold_start_ns: median(load_samples),
+            save_ns: median(save_samples),
+        };
+        println!(
+            "{:<14} scale {:>2}: {} pack ({} dense, x{:.2}), save {:>10}, cold start {:>10}",
+            row.net,
+            net_scale,
+            human_bytes(row.pack_file_bytes as f64),
+            human_bytes(row.dense_bytes as f64),
+            row.dense_bytes as f64 / row.pack_file_bytes.max(1) as f64,
+            fmt_ns(row.save_ns),
+            fmt_ns(row.cold_start_ns),
+        );
+        rows.push(row);
+    }
+
+    // Hand-rolled JSON (the offline build has no serde).
+    let mut json = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"layers\": {}, \"dense_bytes\": {}, \
+             \"pack_file_bytes\": {}, \"array_bytes\": {}, \
+             \"compression_ratio\": {:.4}, \"save_ms\": {:.3}, \
+             \"cold_start_ms\": {:.3}}}{}\n",
+            r.net,
+            r.layers,
+            r.dense_bytes,
+            r.pack_file_bytes,
+            r.array_bytes,
+            r.dense_bytes as f64 / r.pack_file_bytes.max(1) as f64,
+            r.save_ns / 1e6,
+            r.cold_start_ns / 1e6,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("]\n");
+    let mut f = std::fs::File::create("BENCH_pack.json").expect("BENCH_pack.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_pack.json");
+    println!("wrote BENCH_pack.json ({} networks)", rows.len());
+}

@@ -1,0 +1,81 @@
+//! `.cerpack` round trip: compress a zoo network, save the artifact,
+//! cold-start a fresh engine from disk, and check that inference matches
+//! the original engine bit-for-bit — the encode-once / load-in-
+//! milliseconds / serve-forever workflow.
+//!
+//! ```sh
+//! cargo run --release --example pack_roundtrip [-- <net> [scale]]
+//! # e.g.  cargo run --release --example pack_roundtrip -- lenet5 1
+//! ```
+
+use std::time::Instant;
+
+use cer::coordinator::{Engine, Objective};
+use cer::costmodel::{EnergyModel, TimeModel};
+use cer::networks::weights::synthesize_zoo_layers;
+use cer::util::{human_bytes, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net = args.first().map(String::as_str).unwrap_or("lenet-300-100");
+    let scale: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    // 1. Compress: synthesize quantized layers, auto-select formats.
+    println!("compressing {net} (scale {scale}) ...");
+    let t0 = Instant::now();
+    let (spec, layers) = synthesize_zoo_layers(net, scale, 0xCE5E).unwrap_or_else(|| {
+        eprintln!("unknown net '{net}', using lenet-300-100");
+        synthesize_zoo_layers("lenet-300-100", scale, 0xCE5E).unwrap()
+    });
+    let mut original = Engine::native_auto(
+        layers,
+        &EnergyModel::table_i(),
+        &TimeModel::default_model(),
+        Objective::Energy,
+    );
+    let compress_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // 2. Save the artifact.
+    let path = std::env::temp_dir().join(format!(
+        "cer-pack-roundtrip-{}.cerpack",
+        std::process::id()
+    ));
+    let (file_bytes, manifest) = original.save_pack(&path, spec.name, "argmin energy (modeled)")?;
+    println!(
+        "saved {} ({} layers, formats {:?}) in {}",
+        path.display(),
+        manifest.layers.len(),
+        original.formats(),
+        human_bytes(file_bytes as f64)
+    );
+    println!(
+        "  dense baseline {}  on-disk arrays {}  (x{:.2})",
+        human_bytes(manifest.dense_baseline_bytes() as f64),
+        human_bytes(manifest.total_array_bytes() as f64),
+        manifest.dense_baseline_bytes() as f64 / manifest.total_array_bytes().max(1) as f64
+    );
+
+    // 3. Cold start: load without re-running any compression.
+    let t0 = Instant::now();
+    let mut cold = Engine::from_pack(&path)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cold start in {load_ms:.2} ms vs {compress_ms:.0} ms compress+select ({:.0}x faster)",
+        compress_ms / load_ms.max(1e-9)
+    );
+
+    // 4. Infer on both engines: identical kernels over bit-identical
+    //    layers must agree exactly.
+    let mut rng = Rng::new(7);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * cold.in_dim()).map(|_| rng.f32() - 0.5).collect();
+    let a = original.forward(&x, batch)?;
+    let b = cold.forward(&x, batch)?;
+    anyhow::ensure!(a == b, "cold-start engine diverged from the original");
+    println!(
+        "inference OK: {} logits per sample, bit-exact across the round trip",
+        cold.out_dim()
+    );
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -13,12 +13,15 @@
 //! `matmul_colmajor` without any transpose copies.
 
 
+use std::path::Path;
+
 use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format, Objective};
 use crate::costmodel::{EnergyModel, TimeModel};
 use crate::formats::{Dense, FormatKind};
 use crate::kernels::AnyMatrix;
+use crate::pack::{self, LayerView, Manifest, Pack};
 use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
 
 /// Which execution backend the engine uses.
@@ -285,6 +288,71 @@ impl Engine {
             .collect())
     }
 
+    /// Snapshot the engine's layers (selected formats, biases, measured
+    /// provenance) into an in-memory [`Pack`]. Clones the layers — use
+    /// [`Engine::save_pack`] to serialize without the copy.
+    pub fn to_pack(&self, network: &str, rationale: &str) -> Pack {
+        Pack::from_layers(
+            network,
+            rationale,
+            self.layers
+                .iter()
+                .map(|l| (l.name.clone(), l.matrix.clone(), l.bias.clone()))
+                .collect(),
+        )
+    }
+
+    /// Serialize the engine to a `.cerpack` artifact, borrowing the
+    /// layers (no clone of the network). Returns the file size in bytes
+    /// and the manifest as written (with measured on-disk byte counts
+    /// filled in).
+    pub fn save_pack(
+        &self,
+        path: &Path,
+        network: &str,
+        rationale: &str,
+    ) -> Result<(u64, Manifest)> {
+        let views: Vec<LayerView<'_>> = self
+            .layers
+            .iter()
+            .map(|l| LayerView {
+                name: &l.name,
+                matrix: &l.matrix,
+                bias: &l.bias,
+            })
+            .collect();
+        let manifest = pack::build_manifest(network, rationale, &views);
+        let (bytes, manifest) = pack::serialize(&manifest, &views);
+        std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+        Ok((bytes.len() as u64, manifest))
+    }
+
+    /// Cold-start a native engine from a `.cerpack` artifact: layers come
+    /// back in their stored (already-selected) formats — no pruning,
+    /// clustering, re-encoding or format selection runs.
+    pub fn from_pack(path: &Path) -> Result<Engine> {
+        let pack = Pack::read(path).with_context(|| format!("loading {}", path.display()))?;
+        Ok(Engine::from_pack_data(pack))
+    }
+
+    /// Build a native engine from an already-decoded [`Pack`].
+    pub fn from_pack_data(pack: Pack) -> Engine {
+        Engine {
+            layers: pack
+                .layers
+                .into_iter()
+                .map(|l| EngineLayer {
+                    name: l.name,
+                    matrix: l.matrix,
+                    bias: l.bias,
+                })
+                .collect(),
+            backend: Backend::Native,
+            xla: None,
+            scratch: Vec::new(),
+        }
+    }
+
     /// Total storage of the engine's weight matrices (bits).
     pub fn storage_bits(&self) -> u64 {
         self.layers
@@ -405,5 +473,46 @@ mod tests {
         let dense = Engine::native_fixed(layers.clone(), FormatKind::Dense);
         let cser = Engine::native_fixed(layers, FormatKind::Cser);
         assert!(cser.storage_bits() < dense.storage_bits());
+    }
+
+    #[test]
+    fn pack_cold_start_reproduces_engine_bit_exactly() {
+        let layers = tiny_layers(8);
+        let mut original = Engine::native_auto(
+            layers,
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Energy,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "cer-engine-pack-test-{}.cerpack",
+            std::process::id()
+        ));
+        let (file_bytes, manifest) = original
+            .save_pack(&path, "tiny-net", "argmin energy (modeled)")
+            .unwrap();
+        assert!(file_bytes > 0);
+        assert_eq!(manifest.layers.len(), 3);
+        assert!(manifest.layers.iter().all(|l| l.payload_bytes > 0));
+
+        let mut cold = Engine::from_pack(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cold.backend(), Backend::Native);
+        assert_eq!(cold.formats(), original.formats());
+        assert_eq!(cold.storage_bits(), original.storage_bits());
+
+        // Same kernels over bit-identical layers: outputs are bit-exact.
+        let mut rng = Rng::new(31);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+        let a = original.forward(&x, batch).unwrap();
+        let b = cold.forward(&x, batch).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_pack_missing_file_errors() {
+        let e = Engine::from_pack(Path::new("/nonexistent/nope.cerpack")).unwrap_err();
+        assert!(format!("{e:#}").contains("nope.cerpack"));
     }
 }

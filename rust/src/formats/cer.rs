@@ -143,6 +143,117 @@ impl Cer {
     pub fn row_runs(&self, r: usize) -> (usize, usize) {
         (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize)
     }
+
+    /// `.cerpack` section codec. Header (dims, K, counts, width tags),
+    /// then the arrays widest-first — `f32` Ω, ΩPtr, rowPtr, colI, the
+    /// last three at their accounted minimal widths, each padded to
+    /// natural alignment. Array bytes equal [`MatrixFormat::storage`]
+    /// exactly.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{pad_rel, put_f32_array, put_u32, put_u32s_at_width, put_u64};
+        let base = out.len();
+        let op_w = self.omega_ptr_width();
+        let rp_w = self.row_ptr_width();
+        let ci_w = self.col_idx.width();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u32(out, self.omega.len() as u32);
+        put_u64(out, self.nnz() as u64);
+        put_u64(out, self.total_runs());
+        put_u64(out, self.padded_runs);
+        out.push(op_w.tag());
+        out.push(rp_w.tag());
+        out.push(ci_w.tag());
+        pad_rel(out, base, 4);
+        let mut arrays = 0usize;
+        let mark = out.len();
+        put_f32_array(out, &self.omega);
+        arrays += out.len() - mark;
+        pad_rel(out, base, op_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.omega_ptr, op_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, rp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.row_ptr, rp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, ci_w.bytes());
+        let mark = out.len();
+        self.col_idx.encode_into(out);
+        arrays += out.len() - mark;
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays,
+        }
+    }
+
+    /// Inverse of [`Cer::encode_into`]; `buf` must be exactly one payload.
+    /// Validates the run structure (monotone pointers, per-row run counts
+    /// within the codebook, in-range column indices).
+    pub fn decode_from(buf: &[u8]) -> Result<Cer, crate::pack::PackError> {
+        use crate::formats::csr::validate_row_ptr;
+        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        use crate::pack::PackError;
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("cer rows")?;
+        let cols = cur.u32_len("cer cols")?;
+        let k = cur.u32_len("cer codebook size")?;
+        let nnz = cur.u64_len("cer nnz")?;
+        let total_runs = cur.u64_len("cer run count")?;
+        let padded_runs = cur.u64()?;
+        if nnz > u32::MAX as usize || nnz as u64 > rows as u64 * cols as u64 {
+            return Err(PackError::malformed("cer nnz out of range"));
+        }
+        if total_runs > u32::MAX as usize || padded_runs > total_runs as u64 {
+            return Err(PackError::malformed("cer run counts out of range"));
+        }
+        // u64 arithmetic: rows/cols are u32-sized but their product (and
+        // rows + 1 on 32-bit hosts) could overflow usize.
+        if k == 0 && rows as u64 * cols as u64 != 0 {
+            return Err(PackError::malformed("cer empty codebook for non-empty matrix"));
+        }
+        let rp_count = rows
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("cer row count overflow"))?;
+        let op_count = total_runs
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("cer run count overflow"))?;
+        let op_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad OmegaPtr width tag"))?;
+        let rp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad rowPtr width tag"))?;
+        let ci_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
+        cur.align(4)?;
+        let omega = cur.f32_array(k)?;
+        cur.align(op_w.bytes())?;
+        let omega_ptr = read_u32s_at_width(&mut cur, op_count, op_w)?;
+        validate_row_ptr(&omega_ptr, nnz, "cer Omega")?;
+        cur.align(rp_w.bytes())?;
+        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        validate_row_ptr(&row_ptr, total_runs, "cer row")?;
+        // Each row's run count indexes omega[1 + j]: must stay within K.
+        if row_ptr
+            .windows(2)
+            .any(|w| (w[1] - w[0]) as usize > k.saturating_sub(1))
+        {
+            return Err(PackError::malformed("cer row has more runs than codebook values"));
+        }
+        cur.align(ci_w.bytes())?;
+        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in cer payload"));
+        }
+        Ok(Cer {
+            rows,
+            cols,
+            omega,
+            col_idx,
+            omega_ptr,
+            row_ptr,
+            padded_runs,
+        })
+    }
 }
 
 impl MatrixFormat for Cer {

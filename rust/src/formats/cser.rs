@@ -143,6 +143,121 @@ impl Cser {
     pub fn row_runs(&self, r: usize) -> (usize, usize) {
         (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize)
     }
+
+    /// `.cerpack` section codec. Header (dims, K, counts, width tags),
+    /// then the arrays widest-first — `f32` Ω, ΩPtr, rowPtr, ΩI, colI,
+    /// pointer/index arrays at their accounted minimal widths, each
+    /// padded to natural alignment. Array bytes equal
+    /// [`MatrixFormat::storage`] exactly.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{pad_rel, put_f32_array, put_u32, put_u32s_at_width, put_u64};
+        let base = out.len();
+        let op_w = self.omega_ptr_width();
+        let rp_w = self.row_ptr_width();
+        let oi_w = self.omega_idx_width();
+        let ci_w = self.col_idx.width();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u32(out, self.omega.len() as u32);
+        put_u64(out, self.nnz() as u64);
+        put_u64(out, self.total_runs());
+        out.push(op_w.tag());
+        out.push(rp_w.tag());
+        out.push(oi_w.tag());
+        out.push(ci_w.tag());
+        pad_rel(out, base, 4);
+        let mut arrays = 0usize;
+        let mark = out.len();
+        put_f32_array(out, &self.omega);
+        arrays += out.len() - mark;
+        pad_rel(out, base, op_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.omega_ptr, op_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, rp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.row_ptr, rp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, oi_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.omega_idx, oi_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, ci_w.bytes());
+        let mark = out.len();
+        self.col_idx.encode_into(out);
+        arrays += out.len() - mark;
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays,
+        }
+    }
+
+    /// Inverse of [`Cser::encode_into`]; `buf` must be exactly one
+    /// payload. Validates run structure and that every ΩI entry names a
+    /// non-implicit codebook value.
+    pub fn decode_from(buf: &[u8]) -> Result<Cser, crate::pack::PackError> {
+        use crate::formats::csr::validate_row_ptr;
+        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        use crate::pack::PackError;
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("cser rows")?;
+        let cols = cur.u32_len("cser cols")?;
+        let k = cur.u32_len("cser codebook size")?;
+        let nnz = cur.u64_len("cser nnz")?;
+        let total_runs = cur.u64_len("cser run count")?;
+        if nnz > u32::MAX as usize || nnz as u64 > rows as u64 * cols as u64 {
+            return Err(PackError::malformed("cser nnz out of range"));
+        }
+        if total_runs > u32::MAX as usize {
+            return Err(PackError::malformed("cser run count out of range"));
+        }
+        // u64 arithmetic: rows/cols are u32-sized but their product (and
+        // rows + 1 on 32-bit hosts) could overflow usize.
+        if k == 0 && rows as u64 * cols as u64 != 0 {
+            return Err(PackError::malformed("cser empty codebook for non-empty matrix"));
+        }
+        let rp_count = rows
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("cser row count overflow"))?;
+        let op_count = total_runs
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("cser run count overflow"))?;
+        let op_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad OmegaPtr width tag"))?;
+        let rp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad rowPtr width tag"))?;
+        let oi_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad OmegaI width tag"))?;
+        let ci_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
+        cur.align(4)?;
+        let omega = cur.f32_array(k)?;
+        cur.align(op_w.bytes())?;
+        let omega_ptr = read_u32s_at_width(&mut cur, op_count, op_w)?;
+        validate_row_ptr(&omega_ptr, nnz, "cser Omega")?;
+        cur.align(rp_w.bytes())?;
+        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        validate_row_ptr(&row_ptr, total_runs, "cser row")?;
+        cur.align(oi_w.bytes())?;
+        let omega_idx = read_u32s_at_width(&mut cur, total_runs, oi_w)?;
+        if omega_idx.iter().any(|&i| i == 0 || i as usize >= k) {
+            return Err(PackError::malformed("cser OmegaI entry out of range"));
+        }
+        cur.align(ci_w.bytes())?;
+        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in cser payload"));
+        }
+        Ok(Cser {
+            rows,
+            cols,
+            omega,
+            col_idx,
+            omega_idx,
+            omega_ptr,
+            row_ptr,
+        })
+    }
 }
 
 impl MatrixFormat for Cser {

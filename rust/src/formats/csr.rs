@@ -65,6 +65,101 @@ impl Csr {
     pub fn row_ptr_width(&self) -> IndexWidth {
         IndexWidth::minimal(self.nnz())
     }
+
+    /// `.cerpack` section codec. Header (`u32` rows, `u32` cols, `u64`
+    /// nnz, width tags), then the arrays widest-first — `f32` values,
+    /// rowPtr at its accounted width, colI at its accounted width — each
+    /// padded to natural alignment. The array bytes equal the
+    /// [`MatrixFormat::storage`] accounting exactly.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{pad_rel, put_f32_array, put_u32, put_u32s_at_width, put_u64};
+        let base = out.len();
+        let rp_w = self.row_ptr_width();
+        let ci_w = self.col_idx.width();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u64(out, self.nnz() as u64);
+        out.push(rp_w.tag());
+        out.push(ci_w.tag());
+        pad_rel(out, base, 4);
+        let mut arrays = 0usize;
+        let mark = out.len();
+        put_f32_array(out, &self.values);
+        arrays += out.len() - mark;
+        pad_rel(out, base, rp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.row_ptr, rp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, ci_w.bytes());
+        let mark = out.len();
+        self.col_idx.encode_into(out);
+        arrays += out.len() - mark;
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays,
+        }
+    }
+
+    /// Inverse of [`Csr::encode_into`]; `buf` must be exactly one payload.
+    /// Structure is validated (monotone rowPtr ending at nnz, in-range
+    /// column indices) so corrupted input fails instead of mis-decoding.
+    pub fn decode_from(buf: &[u8]) -> Result<Csr, crate::pack::PackError> {
+        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        use crate::pack::PackError;
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("csr rows")?;
+        let cols = cur.u32_len("csr cols")?;
+        let nnz = cur.u64_len("csr nnz")?;
+        if nnz > u32::MAX as usize || nnz as u64 > rows as u64 * cols as u64 {
+            return Err(PackError::malformed("csr nnz out of range"));
+        }
+        let rp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad rowPtr width tag"))?;
+        let ci_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
+        let rp_count = rows
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("csr row count overflow"))?;
+        cur.align(4)?;
+        let values = cur.f32_array(nnz)?;
+        cur.align(rp_w.bytes())?;
+        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        validate_row_ptr(&row_ptr, nnz, "csr")?;
+        cur.align(ci_w.bytes())?;
+        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in csr payload"));
+        }
+        Ok(Csr {
+            rows,
+            cols,
+            values,
+            col_idx,
+            row_ptr,
+        })
+    }
+}
+
+/// Shared pointer-array validation: starts at 0, non-decreasing, ends at
+/// `last` — the invariant every decoded rowPtr/ΩPtr must satisfy.
+pub(crate) fn validate_row_ptr(
+    ptr: &[u32],
+    last: usize,
+    what: &str,
+) -> Result<(), crate::pack::PackError> {
+    use crate::pack::PackError;
+    if ptr.first() != Some(&0) {
+        return Err(PackError::malformed(format!("{what} pointer array must start at 0")));
+    }
+    if ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(PackError::malformed(format!("{what} pointer array not monotone")));
+    }
+    if *ptr.last().unwrap() as usize != last {
+        return Err(PackError::malformed(format!(
+            "{what} pointer array must end at {last}"
+        )));
+    }
+    Ok(())
 }
 
 impl MatrixFormat for Csr {

@@ -98,6 +98,38 @@ impl Dense {
             data: self.data.iter().map(|&v| f(v)).collect(),
         }
     }
+
+    /// `.cerpack` section codec: `u32` rows, `u32` cols, then the
+    /// row-major `f32` data (little-endian, 4-byte aligned).
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{put_f32_array, put_u32};
+        let base = out.len();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        let arrays_start = out.len();
+        put_f32_array(out, &self.data);
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays: out.len() - arrays_start,
+        }
+    }
+
+    /// Inverse of [`Dense::encode_into`]; `buf` must be exactly one
+    /// payload.
+    pub fn decode_from(buf: &[u8]) -> Result<Dense, crate::pack::PackError> {
+        use crate::pack::{wire::Cursor, PackError};
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("dense rows")?;
+        let cols = cur.u32_len("dense cols")?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| PackError::malformed("dense element count overflow"))?;
+        let data = cur.f32_array(n)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in dense payload"));
+        }
+        Ok(Dense { rows, cols, data })
+    }
 }
 
 impl MatrixFormat for Dense {

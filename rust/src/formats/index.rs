@@ -48,6 +48,25 @@ impl IndexWidth {
     pub fn bytes(self) -> usize {
         self.bits() as usize / 8
     }
+
+    /// Stable one-byte wire tag used by the `.cerpack` container.
+    pub fn tag(self) -> u8 {
+        match self {
+            IndexWidth::U8 => 0,
+            IndexWidth::U16 => 1,
+            IndexWidth::U32 => 2,
+        }
+    }
+
+    /// Inverse of [`IndexWidth::tag`].
+    pub fn from_tag(tag: u8) -> Option<IndexWidth> {
+        match tag {
+            0 => Some(IndexWidth::U8),
+            1 => Some(IndexWidth::U16),
+            2 => Some(IndexWidth::U32),
+            _ => None,
+        }
+    }
 }
 
 /// Trait over the physical column-index element types.
@@ -139,6 +158,77 @@ impl ColIndices {
     /// Copy out as `usize` values (slow path, tests/validation only).
     pub fn to_vec(&self) -> Vec<usize> {
         (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// Append the raw little-endian element bytes (`.cerpack` codec). The
+    /// physical width is *not* written here — callers store
+    /// [`IndexWidth::tag`] in their own headers.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            ColIndices::U8(v) => out.extend_from_slice(v),
+            ColIndices::U16(v) => {
+                out.reserve(v.len() * 2);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            ColIndices::U32(v) => {
+                out.reserve(v.len() * 4);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode `count` elements stored at `width`, validating every index
+    /// against `n_cols` so corrupted payloads cannot produce out-of-range
+    /// column accesses.
+    pub fn decode_from(
+        width: IndexWidth,
+        count: usize,
+        n_cols: usize,
+        cur: &mut crate::pack::wire::Cursor,
+    ) -> Result<ColIndices, crate::pack::PackError> {
+        use crate::pack::PackError;
+        let out = match width {
+            IndexWidth::U8 => ColIndices::U8(cur.take(count)?.to_vec()),
+            IndexWidth::U16 => {
+                let bytes = cur.take(
+                    count
+                        .checked_mul(2)
+                        .ok_or_else(|| PackError::malformed("colI size overflow"))?,
+                )?;
+                ColIndices::U16(
+                    bytes
+                        .chunks_exact(2)
+                        .map(|b| u16::from_le_bytes([b[0], b[1]]))
+                        .collect(),
+                )
+            }
+            IndexWidth::U32 => {
+                let bytes = cur.take(
+                    count
+                        .checked_mul(4)
+                        .ok_or_else(|| PackError::malformed("colI size overflow"))?,
+                )?;
+                ColIndices::U32(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                )
+            }
+        };
+        for i in 0..out.len() {
+            if out.get(i) >= n_cols {
+                return Err(PackError::malformed(format!(
+                    "column index {} out of range (cols = {n_cols})",
+                    out.get(i)
+                )));
+            }
+        }
+        Ok(out)
     }
 }
 

@@ -115,6 +115,27 @@ impl FormatKind {
             FormatKind::Cser => "CSER",
         }
     }
+
+    /// Stable one-byte wire tag used by the `.cerpack` container.
+    pub fn tag(self) -> u8 {
+        match self {
+            FormatKind::Dense => 0,
+            FormatKind::Csr => 1,
+            FormatKind::Cer => 2,
+            FormatKind::Cser => 3,
+        }
+    }
+
+    /// Inverse of [`FormatKind::tag`].
+    pub fn from_tag(tag: u8) -> Option<FormatKind> {
+        match tag {
+            0 => Some(FormatKind::Dense),
+            1 => Some(FormatKind::Csr),
+            2 => Some(FormatKind::Cer),
+            3 => Some(FormatKind::Cser),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for FormatKind {
@@ -161,5 +182,13 @@ mod tests {
             assert_eq!(parsed, k);
         }
         assert!("bogus".parse::<FormatKind>().is_err());
+    }
+
+    #[test]
+    fn format_kind_tag_roundtrip() {
+        for k in FormatKind::ALL {
+            assert_eq!(FormatKind::from_tag(k.tag()), Some(k));
+        }
+        assert_eq!(FormatKind::from_tag(9), None);
     }
 }

@@ -23,6 +23,10 @@ pub struct EvalConfig {
     pub scale: usize,
     /// Also measure real kernel wall-clock per layer (slower).
     pub wallclock: bool,
+    /// Also measure serialized `.cerpack` payload bytes per layer and
+    /// format (the table2 disk columns). Off by default: it costs one
+    /// serialization pass per format, and only table2 reports it.
+    pub disk: bool,
     pub energy: EnergyModel,
     pub time: TimeModel,
 }
@@ -33,6 +37,7 @@ impl Default for EvalConfig {
             seed: 0xCE5E,
             scale: 1,
             wallclock: true,
+            disk: false,
             energy: EnergyModel::table_i(),
             time: TimeModel::default_model(),
         }
@@ -63,6 +68,13 @@ pub struct LayerEval {
     pub crit: [Criterion4; NFMT],
     /// Measured matvec wall-clock (ns) per format; 0 if not measured.
     pub wall_ns: [f64; NFMT],
+    /// Measured `.cerpack` payload bytes per format (serialized size on
+    /// disk, incl. the ~50-byte structural record header and padding).
+    pub disk_bytes: [u64; NFMT],
+    /// Measured bytes of just the matrix arrays on disk — the part the
+    /// storage model accounts for, directly comparable to
+    /// `crit[i].storage_bits`.
+    pub disk_array_bytes: [u64; NFMT],
 }
 
 /// Aggregated network totals for one format.
@@ -78,6 +90,11 @@ pub struct Totals {
     pub energy_pj: f64,
     /// Σ layer wall-clock × patches (ns).
     pub wall_ns: f64,
+    /// Σ layer measured `.cerpack` payload bytes (not patch-weighted,
+    /// like storage).
+    pub disk_bytes: f64,
+    /// Σ layer measured matrix-array bytes (the model-comparable part).
+    pub disk_array_bytes: f64,
 }
 
 /// Whole-network evaluation.
@@ -87,12 +104,6 @@ pub struct NetworkEval {
     pub layers: Vec<LayerEval>,
 }
 
-/// Scale a layer dimension down for fast runs (≥ 4 to keep formats
-/// non-degenerate).
-fn scaled(dim: usize, scale: usize) -> usize {
-    (dim / scale).max(4)
-}
-
 impl NetworkEval {
     /// Synthesize `spec`'s layers at `target` statistics and evaluate.
     pub fn run_synthesized(
@@ -100,16 +111,7 @@ impl NetworkEval {
         target: TargetStats,
         cfg: &EvalConfig,
     ) -> NetworkEval {
-        let spec_used = if cfg.scale == 1 {
-            spec.clone()
-        } else {
-            let mut s = spec.clone();
-            for l in &mut s.layers {
-                l.rows = scaled(l.rows, cfg.scale);
-                l.cols = scaled(l.cols, cfg.scale);
-            }
-            s
-        };
+        let spec_used = spec.scaled(cfg.scale);
         let layers = synthesize_quantized_network(&spec_used, target, cfg.seed);
         Self::run_matrices(
             spec.name,
@@ -147,9 +149,18 @@ impl NetworkEval {
                     energy_pj: 0.0,
                 }; NFMT];
                 let mut wall = [0.0f64; NFMT];
+                let mut disk = [0u64; NFMT];
+                let mut disk_arrays = [0u64; NFMT];
+                let mut scratch: Vec<u8> = Vec::new();
                 for (i, kind) in FormatKind::ALL.iter().enumerate() {
                     let enc = AnyMatrix::encode(*kind, &m);
                     let trace = trace_matvec(&enc);
+                    if cfg.disk {
+                        scratch.clear();
+                        let emitted = enc.encode_into(&mut scratch);
+                        disk[i] = emitted.total as u64;
+                        disk_arrays[i] = emitted.arrays as u64;
+                    }
                     crit[i] = Criterion4 {
                         storage_bits: enc.storage().total_bits(),
                         ops: trace.total_ops(),
@@ -178,6 +189,8 @@ impl NetworkEval {
                     stats,
                     crit,
                     wall_ns: wall,
+                    disk_bytes: disk,
+                    disk_array_bytes: disk_arrays,
                 }
             })
             .collect();
@@ -198,6 +211,8 @@ impl NetworkEval {
                 out[i].time_ns += l.crit[i].time_ns * p;
                 out[i].energy_pj += l.crit[i].energy_pj * p;
                 out[i].wall_ns += l.wall_ns[i] * p;
+                out[i].disk_bytes += l.disk_bytes[i] as f64;
+                out[i].disk_array_bytes += l.disk_array_bytes[i] as f64;
             }
         }
         out
@@ -241,7 +256,7 @@ mod tests {
     fn lenet_eval_shapes_and_gains() {
         let spec = NetworkSpec::lenet_300_100();
         let t = TargetStats { p0: 0.36, entropy: 3.73, k: 128 };
-        let cfg = EvalConfig::fast(1);
+        let cfg = EvalConfig { disk: true, ..EvalConfig::fast(1) };
         let ev = NetworkEval::run_synthesized(&spec, t, &cfg);
         assert_eq!(ev.layers.len(), 3);
         let totals = ev.totals();
@@ -256,6 +271,22 @@ mod tests {
             assert!(totals[i].storage_bits < totals[0].storage_bits);
             assert!(totals[i].energy_pj < totals[0].energy_pj);
             assert!(totals[i].ops < totals[0].ops);
+        }
+        // Measured serialized bytes track the analytic storage model: the
+        // matrix arrays match it exactly, and the payload total only adds
+        // bounded structural overhead.
+        for i in 0..NFMT {
+            let model = totals[i].storage_bits / 8.0;
+            assert_eq!(
+                totals[i].disk_array_bytes, model,
+                "format {i}: on-disk arrays diverge from the storage model"
+            );
+            let disk = totals[i].disk_bytes;
+            assert!(disk >= model, "format {i}: disk {disk} below model {model}");
+            assert!(
+                disk < model * 1.10,
+                "format {i}: disk {disk} vs model {model}"
+            );
         }
     }
 

@@ -298,15 +298,8 @@ pub fn synthesize_vb_matrices(
     seed: u64,
     scale: usize,
 ) -> Vec<(String, u64, crate::formats::Dense)> {
-    let spec = NetworkSpec::by_name(net).unwrap();
+    let spec_used = NetworkSpec::by_name(net).unwrap().scaled(scale);
     let target = crate::networks::weights::TargetStats::table_iv(net).unwrap();
-    let mut spec_used = spec.clone();
-    if scale > 1 {
-        for l in &mut spec_used.layers {
-            l.rows = (l.rows / scale).max(4);
-            l.cols = (l.cols / scale).max(4);
-        }
-    }
     let mats = crate::networks::weights::synthesize_quantized_network(&spec_used, target, seed);
     spec_used
         .layers

@@ -79,21 +79,73 @@ fn gains_row(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64) -> [f64; NFMT]
 }
 
 /// Table II — storage gains of the §V-B networks.
+///
+/// Beyond the paper's analytic gains, the table reports the *measured*
+/// serialized size of the winning CSER representation (`.cerpack` payload
+/// bytes, via the same codecs `repro pack` uses) next to the analytic
+/// model, flagging any >5% divergence with `!` — the model and the bytes
+/// on disk must agree.
 pub fn table2(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
-    let mut t = TextTable::new(&["Storage", "original [MB]", "CSR", "CER", "CSER"]);
+    let mut t = TextTable::new(&[
+        "Storage",
+        "original [MB]",
+        "CSR",
+        "CER",
+        "CSER",
+        "CSER disk [MB]",
+        "disk vs model",
+    ]);
     let mut csv = out_dir
-        .map(|d| CsvWriter::create(d.join("table2.csv"), &["net", "original_mb", "csr", "cer", "cser"]))
+        .map(|d| {
+            CsvWriter::create(
+                d.join("table2.csv"),
+                &[
+                    "net",
+                    "original_mb",
+                    "csr",
+                    "cer",
+                    "cser",
+                    "cser_disk_mb",
+                    "disk_div_pct",
+                ],
+            )
+        })
         .transpose()?;
     for ev in evals {
         let totals = ev.totals();
         let g = gains_row(&totals, |t| t.storage_bits);
         let mb = totals[0].storage_bits / 8.0 / 1e6;
+        // Divergence compares the model-accounted arrays only; the size
+        // column reports the full payload (arrays + structural headers).
+        // Evals run with `EvalConfig::disk == false` carry no measurement.
+        let (disk_cell, div_cell, disk_csv, div_csv) = if totals[3].disk_bytes > 0.0 {
+            let disk_mb = totals[3].disk_bytes / 1e6;
+            let div_pct = crate::pack::divergence_pct(
+                totals[3].disk_array_bytes as u64,
+                totals[3].storage_bits as u64,
+            );
+            let flag = if div_pct.abs() > crate::pack::DIVERGENCE_FLAG_PCT {
+                " !"
+            } else {
+                ""
+            };
+            (
+                format!("{disk_mb:.2}"),
+                format!("{div_pct:+.2}%{flag}"),
+                format!("{disk_mb:.4}"),
+                format!("{div_pct:.3}"),
+            )
+        } else {
+            ("n/a".into(), "n/a".into(), String::new(), String::new())
+        };
         t.row(vec![
             ev.net.clone(),
             format!("{mb:.2}"),
             format!("x{:.2}", g[1]),
             format!("x{:.2}", g[2]),
             format!("x{:.2}", g[3]),
+            disk_cell,
+            div_cell,
         ]);
         if let Some(w) = csv.as_mut() {
             w.row(&[
@@ -102,6 +154,8 @@ pub fn table2(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<Strin
                 format!("{:.3}", g[1]),
                 format!("{:.3}", g[2]),
                 format!("{:.3}", g[3]),
+                disk_csv,
+                div_csv,
             ])?;
         }
     }
@@ -470,10 +524,12 @@ mod tests {
     #[test]
     fn tables_2_3_4_on_scaled_networks() {
         // Scaled-down zoo to keep the test fast; checks shape + direction.
-        let cfg = EvalConfig::fast(16);
+        // disk: true exercises the measured-bytes columns of table2.
+        let cfg = EvalConfig { disk: true, ..EvalConfig::fast(16) };
         let evals = eval_vb_networks(&cfg);
         let t2 = table2(&evals, None).unwrap();
         assert!(t2.contains("VGG16") && t2.contains("DenseNet"));
+        assert!(!t2.contains("n/a"), "disk columns must be measured here");
         let t3 = table3(&evals, None).unwrap();
         assert!(t3.contains("#ops"));
         let t4 = table4(&evals, None).unwrap();

@@ -102,6 +102,41 @@ impl AnyMatrix {
         }
     }
 
+    /// `.cerpack` payload codec: one format tag byte plus 3 reserved
+    /// bytes, then the selected format's own section encoding. Returns
+    /// the byte accounting (total appended / bulk-array bytes).
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        let base = out.len();
+        out.push(self.kind().tag());
+        out.extend_from_slice(&[0u8; 3]);
+        let mut emitted = match self {
+            AnyMatrix::Dense(m) => m.encode_into(out),
+            AnyMatrix::Csr(m) => m.encode_into(out),
+            AnyMatrix::Cer(m) => m.encode_into(out),
+            AnyMatrix::Cser(m) => m.encode_into(out),
+        };
+        emitted.total = out.len() - base;
+        emitted
+    }
+
+    /// Inverse of [`AnyMatrix::encode_into`]; `buf` must be exactly one
+    /// payload.
+    pub fn decode_from(buf: &[u8]) -> Result<AnyMatrix, crate::pack::PackError> {
+        use crate::pack::PackError;
+        if buf.len() < 4 {
+            return Err(PackError::Truncated);
+        }
+        let kind = FormatKind::from_tag(buf[0])
+            .ok_or_else(|| PackError::Malformed(format!("unknown format tag {}", buf[0])))?;
+        let body = &buf[4..];
+        Ok(match kind {
+            FormatKind::Dense => AnyMatrix::Dense(Dense::decode_from(body)?),
+            FormatKind::Csr => AnyMatrix::Csr(Csr::decode_from(body)?),
+            FormatKind::Cer => AnyMatrix::Cer(Cer::decode_from(body)?),
+            FormatKind::Cser => AnyMatrix::Cser(Cser::decode_from(body)?),
+        })
+    }
+
     /// `Y = M·X` with `X` column-major (`n × l`), `Y` column-major (`m × l`).
     ///
     /// CER/CSER use the 4-wide multi-rhs kernels (one index-stream pass per

@@ -47,7 +47,12 @@
 //! * [`networks`] — the evaluation model zoo + weight synthesis.
 //! * [`coordinator`] — format auto-selection, the layer engine, and the
 //!   tokio serving loop with dynamic batching.
-//! * [`runtime`] — PJRT loading/execution of the AOT artifacts.
+//! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
+//!   compressed network (selected formats, codebooks, biases, provenance
+//!   manifest, per-section checksums) serialized once and cold-started by
+//!   [`coordinator::Engine::from_pack`] without re-running compression.
+//! * [`runtime`] — PJRT loading/execution of the AOT artifacts (stubbed
+//!   unless built with the `xla` feature).
 //! * [`harness`] — regenerates every table and figure of the paper.
 
 pub mod compress;
@@ -57,6 +62,7 @@ pub mod formats;
 pub mod harness;
 pub mod kernels;
 pub mod networks;
+pub mod pack;
 pub mod runtime;
 pub mod stats;
 pub mod util;

@@ -18,16 +18,22 @@ use cer::networks::zoo::NetworkSpec;
 
 struct Args {
     flags: HashMap<String, String>,
+    /// Bare (non `--flag`) arguments, e.g. the file path of
+    /// `repro inspect net.cerpack`.
+    positional: Vec<String>,
 }
 
 impl Args {
     fn parse(rest: &[String]) -> Result<Args, String> {
         let mut flags = HashMap::new();
+        let mut positional = Vec::new();
         let mut i = 0;
         while i < rest.len() {
-            let key = rest[i]
-                .strip_prefix("--")
-                .ok_or_else(|| format!("expected --flag, got '{}'", rest[i]))?;
+            let Some(key) = rest[i].strip_prefix("--") else {
+                positional.push(rest[i].clone());
+                i += 1;
+                continue;
+            };
             let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                 i += 1;
                 rest[i].clone()
@@ -37,7 +43,7 @@ impl Args {
             flags.insert(key.to_string(), value);
             i += 1;
         }
-        Ok(Args { flags })
+        Ok(Args { flags, positional })
     }
 
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
@@ -64,6 +70,7 @@ fn eval_config(a: &Args) -> EvalConfig {
         seed: a.get("seed", 0xCE5Eu64),
         scale: a.get("scale", 1usize),
         wallclock: !a.has("no-wallclock"),
+        disk: false, // the table2/alexnet/all arms opt in
         energy: EnergyModel::table_i(),
         time: TimeModel::default_model(),
     };
@@ -104,8 +111,24 @@ Experiment commands (DESIGN.md §3; CSVs land in --out, default results/):
   breakdown --net <name>     storage/ops/time/energy breakdowns (Figs. 6-9, 12-13)
   all                        run every experiment above
 
+Artifact commands (.cerpack — the on-disk format for compressed networks):
+  pack --network <name>      compress a zoo network (synthesize → auto-select
+                             formats) and serialize it to --out (default
+                             <name>.cerpack); add --objective
+                             energy|time|ops|storage (default energy),
+                             --scale N for shrunken quick runs
+  inspect <file.cerpack>     verify checksums, dump header + manifest, and
+                             compare measured on-disk bytes per layer with
+                             the analytic StorageBreakdown bits and the
+                             N*H entropy bound (divergence >5% is flagged);
+                             then cold-start an engine from the file
+  pack-demo                  tiny end-to-end demo: pack the paper's 5x12
+                             example matrix, reload, run a dot product
+
 System commands:
   e2e                        end-to-end inference over the AOT artifacts
+                             (XLA backends skip gracefully when the crate
+                             is built without the `xla` feature)
   serve                      demo inference server (batching + metrics)
   inspect --net <name>       print layer statistics of a synthesized net
   help                       this text
@@ -113,7 +136,8 @@ System commands:
 Common flags:
   --seed N          RNG seed (default 0xCE5E)
   --scale N         divide layer dims by N for quick runs (default 1 = paper-exact)
-  --out DIR         CSV output directory (default results/)
+  --out DIR|FILE    CSV output directory (default results/); for `pack`, the
+                    output .cerpack path
   --no-wallclock    skip real-kernel wall-clock measurement
   --calibrate-time  measure per-op latencies on this host instead of defaults
   --artifacts DIR   artifacts directory for e2e/serve (default artifacts/)
@@ -139,11 +163,22 @@ fn main() -> ExitCode {
 }
 
 fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
+    // Only `inspect` takes a bare argument (the .cerpack path); anywhere
+    // else a stray positional is a mistyped flag — fail loudly rather
+    // than silently running with defaults.
+    if !a.positional.is_empty() && cmd != "inspect" {
+        anyhow::bail!(
+            "unexpected argument '{}' — flags are `--key value` (run `repro help`)",
+            a.positional[0]
+        );
+    }
     match cmd {
         "help" | "--help" | "-h" => print!("{HELP}"),
         "table1" => print!("{}", tables::table1()),
         "table2" | "table3" | "table4" => {
-            let cfg = eval_config(a);
+            let mut cfg = eval_config(a);
+            // Only table2 prints the measured disk columns.
+            cfg.disk = cmd == "table2";
             eprintln!(
                 "evaluating VGG16 / ResNet152 / DenseNet at scale {} (seed {}) ...",
                 cfg.scale, cfg.seed
@@ -168,7 +203,8 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             }
         }
         "alexnet" => {
-            let cfg = eval_config(a);
+            let mut cfg = eval_config(a);
+            cfg.disk = true; // the storage table below reports disk columns
             eprintln!("running Deep-Compression AlexNet pipeline ...");
             let ev = tables::eval_alexnet_dc(&cfg);
             let dir = out_dir(a);
@@ -278,7 +314,21 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             figures::breakdown(&ev, &mats, &out_dir(a), &cfg.energy, &cfg.time)?;
             println!("CSVs: breakdown_{}_{{storage,ops,time,energy}}.csv", net.to_lowercase());
         }
+        "pack" => cmd_pack(a)?,
+        "pack-demo" => cmd_pack_demo()?,
+        "inspect" if !a.positional.is_empty() => {
+            cmd_inspect_pack(Path::new(&a.positional[0]))?;
+        }
         "inspect" => {
+            // Catch `repro inspect --some-flag net.cerpack`, where the
+            // parser attached the file to the flag: a silent fall-through
+            // to the synthesized-net inspector would be baffling.
+            if let Some((k, v)) = a.flags.iter().find(|(_, v)| v.ends_with(".cerpack")) {
+                anyhow::bail!(
+                    "'{v}' was parsed as the value of --{k}; put the pack file \
+                     directly after `inspect`"
+                );
+            }
             let cfg = eval_config(a);
             let net = a.get_str("net", "densenet");
             let spec = NetworkSpec::by_name(&net)
@@ -306,7 +356,8 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             run_serve_demo(&dir, a)?;
         }
         "all" => {
-            let cfg = eval_config(a);
+            let mut cfg = eval_config(a);
+            cfg.disk = true; // the shared eval feeds table2's disk columns
             let dir = out_dir(a);
             println!("\n===== table1 =====");
             print!("{}", tables::table1());
@@ -333,13 +384,234 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
                 println!("\n===== breakdown {net} =====");
                 let mut flags = a.flags.clone();
                 flags.insert("net".into(), net.into());
-                run("breakdown", &Args { flags })?;
+                run(
+                    "breakdown",
+                    &Args {
+                        flags,
+                        positional: Vec::new(),
+                    },
+                )?;
             }
         }
         other => {
             anyhow::bail!("unknown command '{other}' — run `repro help`");
         }
     }
+    Ok(())
+}
+
+/// `repro pack` — compress a zoo network (synthesize at its Table-IV/V
+/// operating point, auto-select each layer's format) and serialize it to a
+/// `.cerpack` artifact, then prove the cold-start path by reloading it.
+fn cmd_pack(a: &Args) -> anyhow::Result<()> {
+    use cer::coordinator::{Engine, Objective};
+    use cer::formats::FormatKind;
+    use cer::networks::weights::synthesize_zoo_layers;
+    use cer::util::human_bytes;
+    use std::time::Instant;
+
+    let net = if a.has("network") {
+        a.get_str("network", "densenet")
+    } else {
+        a.get_str("net", "densenet")
+    };
+    let cfg = eval_config(a);
+    let objective_str = a.get_str("objective", "energy");
+    let objective = match objective_str.as_str() {
+        "energy" => Objective::Energy,
+        "time" => Objective::Time,
+        "ops" => Objective::Ops,
+        "storage" => Objective::Storage,
+        other => anyhow::bail!("unknown objective '{other}' (energy|time|ops|storage)"),
+    };
+
+    eprintln!(
+        "synthesizing {net} at scale {} (seed {}) ...",
+        cfg.scale, cfg.seed
+    );
+    let (spec, layers) = synthesize_zoo_layers(&net, cfg.scale, cfg.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?;
+    eprintln!("selecting formats (argmin {objective_str}, modeled) ...");
+    let t0 = Instant::now();
+    let engine = Engine::native_auto(layers, &cfg.energy, &cfg.time, objective);
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let out = a.get_str("out", &format!("{}.cerpack", net.to_lowercase()));
+    let path = PathBuf::from(&out);
+    let t0 = Instant::now();
+    let (file_bytes, manifest) = engine.save_pack(
+        &path,
+        spec.name,
+        &format!("argmin {objective_str} (modeled)"),
+    )?;
+    let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let dense = manifest.dense_baseline_bytes();
+    let analytic = manifest.total_analytic_bits();
+    let measured = manifest.total_array_bytes();
+    println!(
+        "packed {} ({} layers) -> {} ({} on disk)",
+        manifest.network,
+        manifest.layers.len(),
+        path.display(),
+        human_bytes(file_bytes as f64)
+    );
+    let format_counts: Vec<String> = FormatKind::ALL
+        .iter()
+        .map(|k| {
+            let n = manifest.layers.iter().filter(|l| l.format == *k).count();
+            format!("{n} {}", k.name())
+        })
+        .collect();
+    println!("  formats: {}", format_counts.join(", "));
+    println!(
+        "  dense baseline {}  analytic bound {}  measured arrays {}  (x{:.2} vs dense)",
+        human_bytes(dense as f64),
+        human_bytes(analytic as f64 / 8.0),
+        human_bytes(measured as f64),
+        dense as f64 / (measured.max(1)) as f64
+    );
+    println!("  compress+select {build_ms:.0} ms, serialize {save_ms:.1} ms");
+
+    // Cold-start proof: reload from disk and run one forward pass.
+    let t0 = Instant::now();
+    let mut cold = Engine::from_pack(&path)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let x = vec![0.1f32; cold.in_dim()];
+    let y = cold.forward(&x, 1)?;
+    println!(
+        "  cold start: load {:.2} ms ({:.0}x faster than re-compressing), forward OK ({} logits)",
+        load_ms,
+        build_ms / load_ms.max(1e-9),
+        y.len()
+    );
+    Ok(())
+}
+
+/// `repro inspect <file.cerpack>` — verify checksums, dump the header and
+/// manifest, compare measured on-disk bytes with the analytic
+/// StorageBreakdown bits and the N·H entropy bound, then cold-start an
+/// engine from the file.
+fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use cer::coordinator::Engine;
+    use cer::pack::{DIVERGENCE_FLAG_PCT, Pack, VERSION};
+    use cer::util::human_bytes;
+    use cer::util::table::TextTable;
+    use std::time::Instant;
+
+    // One read, one CRC pass: the full decode below reuses these bytes.
+    let inspecting = || format!("inspecting {}", path.display());
+    let bytes = std::fs::read(path).with_context(inspecting)?;
+    let file_bytes = bytes.len() as u64;
+    let t0 = Instant::now();
+    let pack = Pack::from_bytes(&bytes).with_context(inspecting)?;
+    let decode_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let manifest = pack.manifest.clone();
+    println!(
+        "{}: cerpack v{VERSION}, network '{}', {} layers, {} on disk",
+        path.display(),
+        manifest.network,
+        manifest.layers.len(),
+        human_bytes(file_bytes as f64)
+    );
+    println!("created by: {}", manifest.created_by);
+    println!("section checksums: OK");
+    if let Some(l) = manifest.layers.first() {
+        println!("selection rationale: {}", l.rationale);
+    }
+
+    let mut t = TextTable::new(&[
+        "layer", "fmt", "shape", "K", "H", "p0", "H-bound", "analytic", "on-disk", "div%",
+    ]);
+    let mut flagged = 0usize;
+    for l in &manifest.layers {
+        let elems = l.rows as u64 * l.cols as u64;
+        let div = l.divergence_pct();
+        let flag = if div.abs() > DIVERGENCE_FLAG_PCT {
+            flagged += 1;
+            " !"
+        } else {
+            ""
+        };
+        t.row(vec![
+            l.name.clone(),
+            l.format.name().to_string(),
+            format!("{}x{}", l.rows, l.cols),
+            format!("{}", l.k),
+            format!("{:.2}", l.entropy),
+            format!("{:.3}", l.p0),
+            human_bytes(l.entropy * elems as f64 / 8.0),
+            human_bytes(l.analytic_bits as f64 / 8.0),
+            human_bytes(l.array_bytes as f64),
+            format!("{div:+.2}{flag}"),
+        ]);
+    }
+    print!("{}", t.render());
+    let dense = manifest.dense_baseline_bytes();
+    let analytic = manifest.total_analytic_bits();
+    let measured = manifest.total_array_bytes();
+    let total_div = manifest.total_divergence_pct();
+    println!(
+        "totals: dense {}  analytic {}  on-disk arrays {}  (divergence {total_div:+.2}%, x{:.2} vs dense)",
+        human_bytes(dense as f64),
+        human_bytes(analytic as f64 / 8.0),
+        human_bytes(measured as f64),
+        dense as f64 / (measured.max(1)) as f64
+    );
+    if flagged > 0 {
+        println!(
+            "WARNING: {flagged} layer(s) diverge >{DIVERGENCE_FLAG_PCT}% between measured \
+             on-disk bytes and the analytic storage model"
+        );
+    }
+
+    // Cold start from the already-decoded payloads.
+    if pack.layers.is_empty() {
+        println!("cold start: skipped (pack has no layers)");
+        return Ok(());
+    }
+    let mut engine = Engine::from_pack_data(pack);
+    let x = vec![0.1f32; engine.in_dim()];
+    let y = engine.forward(&x, 1)?;
+    println!(
+        "cold start: decoded + built engine in {decode_ms:.2} ms, forward OK ({} logits)",
+        y.len()
+    );
+    Ok(())
+}
+
+/// `repro pack-demo` — smallest end-to-end artifact demo: pack the paper's
+/// 5x12 running example, reload it cold, and check one dot product.
+fn cmd_pack_demo() -> anyhow::Result<()> {
+    use cer::coordinator::Engine;
+    use cer::formats::FormatKind;
+    use cer::kernels::AnyMatrix;
+    use cer::pack::Pack;
+
+    let m = cer::paper_example_matrix();
+    let pack = Pack::from_layers(
+        "paper-example",
+        "fixed CSER (demo)",
+        vec![(
+            "example".to_string(),
+            AnyMatrix::encode(FormatKind::Cser, &m),
+            vec![0.0; m.rows()],
+        )],
+    );
+    let path = std::env::temp_dir().join(format!("cer-pack-demo-{}.cerpack", std::process::id()));
+    let (bytes, manifest) = pack.write_to(&path)?;
+    let l = &manifest.layers[0];
+    println!(
+        "packed the paper's 5x12 example as CSER: {bytes} B file, {} B arrays vs {} bits analytic",
+        l.array_bytes, l.analytic_bits
+    );
+    let mut engine = Engine::from_pack(&path)?;
+    std::fs::remove_file(&path).ok();
+    let x: Vec<f32> = vec![1.0; 12];
+    let y = engine.forward(&x, 1)?;
+    println!("cold-start row sums: {y:?} (row 2 = 24 per the paper's worked example)");
+    anyhow::ensure!((y[1] - 24.0).abs() < 1e-6, "row-2 dot product mismatch");
     Ok(())
 }
 
@@ -359,7 +631,17 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
     );
     let n_batches = a.get("batches", usize::MAX);
     for backend in [Backend::Native, Backend::XlaDense, Backend::XlaCser] {
-        let mut engine = Engine::from_artifacts(&art, backend, Objective::Energy)?;
+        // XLA backends are unavailable when built without the `xla`
+        // feature (or when PJRT fails) — report and keep going. Native
+        // failures are real errors and still abort the command.
+        let mut engine = match Engine::from_artifacts(&art, backend, Objective::Energy) {
+            Ok(e) => e,
+            Err(e) if backend != Backend::Native => {
+                println!("{backend:?}: skipped ({e})");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         let t0 = std::time::Instant::now();
         let mut correct = 0usize;
         let mut total = 0usize;

@@ -127,6 +127,36 @@ pub fn synthesize_quantized_network(
         .collect()
 }
 
+/// Synthesize a whole zoo network ready for packing/serving: quantized
+/// layers at the network's paper operating point (Table IV, the §V-C
+/// retrained targets, or a generic low-entropy fallback for nets in
+/// neither), dims optionally divided by `scale` (floor 4), zero biases.
+///
+/// This is the shared input path of `repro pack`, `benches/pack.rs` and
+/// `examples/pack_roundtrip.rs` — returns the (possibly scaled) spec used
+/// plus `(name, matrix, bias)` layers, or `None` for an unknown name.
+pub fn synthesize_zoo_layers(
+    net: &str,
+    scale: usize,
+    seed: u64,
+) -> Option<(NetworkSpec, Vec<(String, Dense, Vec<f32>)>)> {
+    let spec_used = NetworkSpec::by_name(net)?.scaled(scale);
+    let target = TargetStats::table_iv(net)
+        .or_else(|| TargetStats::retrained(net))
+        .unwrap_or(TargetStats { p0: 0.36, entropy: 3.73, k: 128 });
+    let mats = synthesize_quantized_network(&spec_used, target, seed);
+    let layers = spec_used
+        .layers
+        .iter()
+        .zip(mats)
+        .map(|(l, m)| {
+            let rows = m.rows();
+            (l.name.clone(), m, vec![0.0; rows])
+        })
+        .collect();
+    Some((spec_used, layers))
+}
+
 /// Continuous (float) weights for one layer from a Gaussian scale mixture:
 /// `w ~ (1-ε)·N(0, σ²) + ε·N(0, (tail·σ)²)`.
 ///

@@ -88,6 +88,21 @@ impl NetworkSpec {
         self.layers.iter().map(|l| l.rows as u64).sum()
     }
 
+    /// Copy with every layer's dims divided by `scale` for fast runs
+    /// (floor of 4 keeps the formats non-degenerate); `scale` 1 returns
+    /// the spec unchanged. The single scaling rule shared by the eval
+    /// harness, `repro pack`, and the pack bench/example.
+    pub fn scaled(&self, scale: usize) -> NetworkSpec {
+        let mut s = self.clone();
+        if scale > 1 {
+            for l in &mut s.layers {
+                l.rows = (l.rows / scale).max(4);
+                l.cols = (l.cols / scale).max(4);
+            }
+        }
+        s
+    }
+
     /// Look up a spec by (case-insensitive) name.
     pub fn by_name(name: &str) -> Option<NetworkSpec> {
         match name.to_ascii_lowercase().as_str() {

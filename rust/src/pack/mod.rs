@@ -1,0 +1,840 @@
+//! `cerpack` — the native on-disk artifact format for compressed networks.
+//!
+//! The paper's deliverable is not a measurement but an artifact: a network
+//! whose layers are stored in their entropy-optimal representations. This
+//! module serializes a whole compressed network — every layer's
+//! [`AnyMatrix`] payload in its *selected* format (dense/CSR/CER/CSER with
+//! codebooks and index-width tags), biases, topology, and a provenance
+//! manifest — into a single versioned `.cerpack` file, and loads it back
+//! without re-running pruning, clustering, encoding or format selection
+//! (the engine cold-start path, [`crate::coordinator::Engine::from_pack`]).
+//!
+//! # Wire layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"CERPACK\0"
+//! 8       2     version (= 1)
+//! 10      2     flags   (= 0, reserved)
+//! 12      4     section count  (u32)
+//! 16      24×n  section table, one entry per section:
+//!                   u32 kind        1 = manifest, 2 = layer
+//!                   u32 crc32       CRC-32 (IEEE) of the raw section bytes
+//!                   u64 offset      absolute file offset (8-byte aligned)
+//!                   u64 len         section byte length (before padding)
+//! ...           sections, each zero-padded to an 8-byte boundary
+//! ```
+//!
+//! The first section is the **manifest** (exactly one per file); it is
+//! followed by one **layer** section per layer, in forward order.
+//!
+//! ## Manifest section
+//!
+//! Strings are `u32` byte-length + UTF-8. Per file: `network` name,
+//! `created_by` tool string, `u32` layer count; then per layer: name,
+//! `u8` format tag (0 dense, 1 CSR, 2 CER, 3 CSER), `u32` rows, `u32`
+//! cols, `u32` codebook size K, `f64` entropy H (bits), `f64` p₀,
+//! `u64` analytic storage bits ([`crate::formats::StorageBreakdown`]),
+//! `u64` measured matrix-array bytes, `u64` total payload bytes, and a
+//! free-form selection-rationale string. The manifest is self-contained:
+//! everything `repro inspect` tabulates comes from it, without touching
+//! the matrix payloads.
+//!
+//! ## Layer section
+//!
+//! Layer name (padded to 4), `u32` bias length, bias `f32`s, `u64`
+//! payload length, then the [`AnyMatrix`] payload: a `u8` format tag plus
+//! 3 reserved bytes, followed by the format's own encoding (see
+//! `encode_into`/`decode_from` on [`crate::formats::Dense`],
+//! [`crate::formats::Csr`], [`crate::formats::Cer`],
+//! [`crate::formats::Cser`]). Format payloads write their bulk arrays
+//! widest-element-first (f32/u32, then u16, then u8) with explicit padding
+//! so every array starts naturally aligned at its element size — a
+//! decoder may reinterpret them in place. Pointer and index arrays are
+//! stored at the same minimal {8,16,32}-bit widths the paper's storage
+//! accounting uses, so the measured array bytes on disk equal the
+//! analytic [`crate::formats::StorageBreakdown`] bits to the byte.
+//!
+//! # Integrity
+//!
+//! Every section carries a CRC-32; readers verify it before parsing, so a
+//! flipped byte surfaces as [`PackError::ChecksumMismatch`], a truncated
+//! file as [`PackError::Truncated`], and a foreign file as
+//! [`PackError::BadMagic`] — never a panic or garbage weights. All decode
+//! paths are bounds-checked and validate structural invariants (monotone
+//! pointer arrays, in-range column indices and codebook references).
+
+pub mod wire;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::formats::FormatKind;
+use crate::kernels::AnyMatrix;
+use crate::util::crc32::crc32;
+use wire::{put_f32_array, put_f64, put_string, put_u16, put_u32, put_u64, Cursor};
+
+/// File magic, 8 bytes.
+pub const MAGIC: [u8; 8] = *b"CERPACK\0";
+/// Container version this build writes and reads.
+pub const VERSION: u16 = 1;
+/// Section kind: provenance manifest (exactly one, first).
+pub const SECTION_MANIFEST: u32 = 1;
+/// Section kind: one encoded layer.
+pub const SECTION_LAYER: u32 = 2;
+
+const HEADER_BYTES: usize = 16;
+const TABLE_ENTRY_BYTES: usize = 24;
+/// Upper bound on the section count a reader will accept (corrupt headers
+/// must not drive huge allocations).
+const MAX_SECTIONS: u32 = 1 << 20;
+
+/// Measured-vs-analytic divergence (in percent) above which `repro
+/// inspect` and the harness tables flag a layer/network — on-disk bytes
+/// and the storage model must agree.
+pub const DIVERGENCE_FLAG_PCT: f64 = 5.0;
+
+/// Relative divergence of measured bytes vs analytic bits, in percent
+/// (positive = disk larger than the model; 0 when the model is empty).
+pub fn divergence_pct(measured_bytes: u64, analytic_bits: u64) -> f64 {
+    if analytic_bits == 0 {
+        return 0.0;
+    }
+    (measured_bytes as f64 * 8.0 / analytic_bits as f64 - 1.0) * 100.0
+}
+
+/// Everything that can go wrong reading or writing a `.cerpack`.
+#[derive(Debug)]
+pub enum PackError {
+    /// Underlying filesystem error.
+    Io(io::Error),
+    /// The file does not start with [`MAGIC`].
+    BadMagic,
+    /// The container version is newer than this build understands.
+    UnsupportedVersion(u16),
+    /// A section's stored CRC-32 does not match its bytes.
+    ChecksumMismatch {
+        /// Index of the failing section in the section table.
+        section: usize,
+    },
+    /// The buffer/file ended before a read completed.
+    Truncated,
+    /// Structurally invalid content (bad tags, non-monotone pointers,
+    /// out-of-range indices, ...).
+    Malformed(String),
+}
+
+impl PackError {
+    pub(crate) fn malformed(msg: impl Into<String>) -> PackError {
+        PackError::Malformed(msg.into())
+    }
+}
+
+impl fmt::Display for PackError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PackError::Io(e) => write!(f, "I/O error: {e}"),
+            PackError::BadMagic => write!(f, "not a cerpack file (bad magic)"),
+            PackError::UnsupportedVersion(v) => {
+                write!(f, "unsupported cerpack version {v} (this build reads {VERSION})")
+            }
+            PackError::ChecksumMismatch { section } => {
+                write!(f, "checksum mismatch in section {section} (corrupted file)")
+            }
+            PackError::Truncated => write!(f, "unexpected end of file (truncated cerpack)"),
+            PackError::Malformed(msg) => write!(f, "malformed cerpack: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PackError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PackError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for PackError {
+    fn from(e: io::Error) -> PackError {
+        PackError::Io(e)
+    }
+}
+
+/// Byte accounting returned by the `encode_into` codecs.
+///
+/// `arrays` counts only the bulk matrix arrays (values, codebook, column
+/// indices, pointers) — the bytes the paper's storage model accounts for.
+/// `total` additionally includes the fixed structural header (dims, tags,
+/// counts) and alignment padding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Emitted {
+    pub total: usize,
+    pub arrays: usize,
+}
+
+/// Per-layer provenance recorded in the manifest: why this layer looks the
+/// way it does on disk, and how its measured footprint compares to the
+/// analytic model.
+#[derive(Clone, Debug)]
+pub struct LayerProvenance {
+    pub name: String,
+    /// The selected representation of this layer.
+    pub format: FormatKind,
+    pub rows: u32,
+    pub cols: u32,
+    /// Distinct element values K.
+    pub k: u32,
+    /// Empirical element entropy H (bits).
+    pub entropy: f64,
+    /// Mass of the most frequent element (sparsity after decomposition).
+    pub p0: f64,
+    /// Analytic storage bound of the selected format, in bits
+    /// ([`crate::formats::StorageBreakdown::total_bits`]).
+    pub analytic_bits: u64,
+    /// Measured on-disk bytes of the matrix arrays (excludes the ~50-byte
+    /// structural record header; directly comparable to `analytic_bits`).
+    pub array_bytes: u64,
+    /// Total payload bytes including the structural header and padding.
+    pub payload_bytes: u64,
+    /// Free-form note on how the format was chosen.
+    pub rationale: String,
+}
+
+impl LayerProvenance {
+    /// Relative divergence of measured array bytes vs the analytic bits,
+    /// in percent (positive = disk larger than the model).
+    pub fn divergence_pct(&self) -> f64 {
+        divergence_pct(self.array_bytes, self.analytic_bits)
+    }
+}
+
+/// The provenance manifest: one record per layer plus file-level metadata.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Network name (zoo name or caller-supplied).
+    pub network: String,
+    /// Tool string, e.g. `cer 0.2.0 repro pack`.
+    pub created_by: String,
+    pub layers: Vec<LayerProvenance>,
+}
+
+impl Manifest {
+    /// Sum of analytic bits across layers.
+    pub fn total_analytic_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.analytic_bits).sum()
+    }
+
+    /// Sum of measured matrix-array bytes across layers.
+    pub fn total_array_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.array_bytes).sum()
+    }
+
+    /// Dense f32 baseline bytes for the packed shapes.
+    pub fn dense_baseline_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.rows as u64 * l.cols as u64 * 4)
+            .sum()
+    }
+
+    /// Network-level measured-vs-analytic divergence in percent.
+    pub fn total_divergence_pct(&self) -> f64 {
+        divergence_pct(self.total_array_bytes(), self.total_analytic_bits())
+    }
+}
+
+/// One layer as stored: name, encoded matrix, bias.
+#[derive(Clone, Debug)]
+pub struct PackLayer {
+    pub name: String,
+    pub matrix: AnyMatrix,
+    pub bias: Vec<f32>,
+}
+
+impl PackLayer {
+    fn view(&self) -> LayerView<'_> {
+        LayerView {
+            name: &self.name,
+            matrix: &self.matrix,
+            bias: &self.bias,
+        }
+    }
+}
+
+/// Borrowed view of one layer for serialization — lets callers that
+/// already own encoded layers (e.g. the engine) write a `.cerpack`
+/// without cloning the whole network into a [`Pack`] first.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerView<'a> {
+    pub name: &'a str,
+    pub matrix: &'a AnyMatrix,
+    pub bias: &'a [f32],
+}
+
+/// Build a provenance manifest for borrowed layers (measured byte fields
+/// are placeholders until [`serialize`] fills them).
+pub fn build_manifest(network: &str, rationale: &str, layers: &[LayerView<'_>]) -> Manifest {
+    Manifest {
+        network: network.to_string(),
+        created_by: format!("cer {} cerpack v{VERSION}", env!("CARGO_PKG_VERSION")),
+        layers: layers
+            .iter()
+            .map(|l| {
+                let (k, p0, entropy) = element_stats(l.matrix);
+                LayerProvenance {
+                    name: l.name.to_string(),
+                    format: l.matrix.kind(),
+                    rows: l.matrix.rows() as u32,
+                    cols: l.matrix.cols() as u32,
+                    k: k as u32,
+                    entropy,
+                    p0,
+                    analytic_bits: l.matrix.storage().total_bits(),
+                    array_bytes: 0,
+                    payload_bytes: 0,
+                    rationale: rationale.to_string(),
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Serialize borrowed layers under `manifest` into a `.cerpack` file
+/// image. Returns the bytes and the manifest as written (measured byte
+/// counts filled in).
+pub fn serialize(manifest: &Manifest, layers: &[LayerView<'_>]) -> (Vec<u8>, Manifest) {
+    assert_eq!(
+        manifest.layers.len(),
+        layers.len(),
+        "manifest/layer count mismatch"
+    );
+    // Encode layer sections first to measure payload sizes.
+    let mut manifest = manifest.clone();
+    let mut layer_sections: Vec<Vec<u8>> = Vec::with_capacity(layers.len());
+    for (layer, prov) in layers.iter().zip(&mut manifest.layers) {
+        let mut payload = Vec::new();
+        let emitted = layer.matrix.encode_into(&mut payload);
+        debug_assert_eq!(emitted.total, payload.len());
+        prov.array_bytes = emitted.arrays as u64;
+        prov.payload_bytes = emitted.total as u64;
+
+        let mut sec = Vec::new();
+        put_string(&mut sec, layer.name);
+        wire::pad_to(&mut sec, 4);
+        put_u32(&mut sec, layer.bias.len() as u32);
+        put_f32_array(&mut sec, layer.bias);
+        put_u64(&mut sec, payload.len() as u64);
+        sec.extend_from_slice(&payload);
+        layer_sections.push(sec);
+    }
+    let manifest_section = encode_manifest(&manifest);
+
+    // Assemble: header, table, 8-aligned sections.
+    let n_sections = 1 + layer_sections.len();
+    let mut offset = HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES;
+    offset = (offset + 7) & !7;
+    let mut table: Vec<(u32, u32, u64, u64)> = Vec::with_capacity(n_sections);
+    let mut place = |kind: u32, sec: &[u8]| {
+        let entry = (kind, crc32(sec), offset as u64, sec.len() as u64);
+        offset = (offset + sec.len() + 7) & !7;
+        entry
+    };
+    table.push(place(SECTION_MANIFEST, &manifest_section));
+    for sec in &layer_sections {
+        table.push(place(SECTION_LAYER, sec));
+    }
+
+    let mut out = Vec::with_capacity(offset);
+    out.extend_from_slice(&MAGIC);
+    put_u16(&mut out, VERSION);
+    put_u16(&mut out, 0); // flags
+    put_u32(&mut out, n_sections as u32);
+    for &(kind, crc, off, len) in &table {
+        put_u32(&mut out, kind);
+        put_u32(&mut out, crc);
+        put_u64(&mut out, off);
+        put_u64(&mut out, len);
+    }
+    for (i, sec) in std::iter::once(&manifest_section)
+        .chain(layer_sections.iter())
+        .enumerate()
+    {
+        while (out.len() as u64) < table[i].2 {
+            out.push(0);
+        }
+        out.extend_from_slice(sec);
+    }
+    wire::pad_to(&mut out, 8);
+    (out, manifest)
+}
+
+/// An in-memory `.cerpack`: manifest + layers.
+///
+/// Note: on a freshly built (not yet written) pack, the manifest's
+/// `array_bytes`/`payload_bytes` are 0 placeholders — they are measured
+/// during serialization; [`Pack::write_to`] and [`Pack::to_bytes`] return
+/// the manifest with measured values filled in, and [`Pack::read`] yields
+/// the stored ones.
+#[derive(Clone, Debug)]
+pub struct Pack {
+    pub manifest: Manifest,
+    pub layers: Vec<PackLayer>,
+}
+
+impl Pack {
+    /// Build a pack from encoded layers, measuring provenance statistics
+    /// (entropy, p₀, K, analytic bits) from each matrix. `rationale` is
+    /// recorded verbatim on every layer (e.g. `argmin energy (modeled)`).
+    pub fn from_layers(
+        network: &str,
+        rationale: &str,
+        layers: Vec<(String, AnyMatrix, Vec<f32>)>,
+    ) -> Pack {
+        let pack_layers: Vec<PackLayer> = layers
+            .into_iter()
+            .map(|(name, matrix, bias)| PackLayer { name, matrix, bias })
+            .collect();
+        let views: Vec<LayerView<'_>> = pack_layers.iter().map(PackLayer::view).collect();
+        let manifest = build_manifest(network, rationale, &views);
+        Pack {
+            manifest,
+            layers: pack_layers,
+        }
+    }
+
+    /// Serialize to bytes. Returns the file image together with the
+    /// manifest as written (measured byte counts filled in).
+    pub fn to_bytes(&self) -> (Vec<u8>, Manifest) {
+        let views: Vec<LayerView<'_>> = self.layers.iter().map(PackLayer::view).collect();
+        serialize(&self.manifest, &views)
+    }
+
+    /// Write to `path`. Returns (file bytes written, manifest as written).
+    pub fn write_to(&self, path: &Path) -> Result<(u64, Manifest), PackError> {
+        let (bytes, manifest) = self.to_bytes();
+        fs::write(path, &bytes)?;
+        Ok((bytes.len() as u64, manifest))
+    }
+
+    /// Read and fully decode a `.cerpack` file (checksums verified).
+    pub fn read(path: &Path) -> Result<Pack, PackError> {
+        Self::from_bytes(&fs::read(path)?)
+    }
+
+    /// Decode a `.cerpack` from memory (checksums verified).
+    pub fn from_bytes(buf: &[u8]) -> Result<Pack, PackError> {
+        let (manifest, layer_slices) = parse_container(buf)?;
+        if layer_slices.len() != manifest.layers.len() {
+            return Err(PackError::malformed(format!(
+                "{} layer sections but manifest lists {} layers",
+                layer_slices.len(),
+                manifest.layers.len()
+            )));
+        }
+        let mut layers: Vec<PackLayer> = Vec::with_capacity(layer_slices.len());
+        for (i, sec) in layer_slices.iter().enumerate() {
+            let layer = decode_layer_section(sec).map_err(|e| annotate_layer(e, i))?;
+            let prov = &manifest.layers[i];
+            if layer.matrix.rows() != prov.rows as usize
+                || layer.matrix.cols() != prov.cols as usize
+                || layer.matrix.kind() != prov.format
+            {
+                return Err(PackError::malformed(format!(
+                    "layer {i}: payload shape/format disagrees with manifest"
+                )));
+            }
+            // Engine invariants, so a checksum-valid but inconsistent file
+            // errors here instead of panicking inside forward():
+            // bias per output row, and consecutive layers must chain.
+            if layer.bias.len() != layer.matrix.rows() {
+                return Err(PackError::malformed(format!(
+                    "layer {i}: bias length {} does not match {} rows",
+                    layer.bias.len(),
+                    layer.matrix.rows()
+                )));
+            }
+            if let Some(prev) = layers.last() {
+                if layer.matrix.cols() != prev.matrix.rows() {
+                    return Err(PackError::malformed(format!(
+                        "layer {i}: input dim {} does not chain with previous output dim {}",
+                        layer.matrix.cols(),
+                        prev.matrix.rows()
+                    )));
+                }
+            }
+            layers.push(layer);
+        }
+        Ok(Pack { manifest, layers })
+    }
+
+}
+
+/// (K, p₀, entropy H) of a matrix's element distribution, computed from
+/// the encoded representation — the save path would otherwise materialize
+/// a dense copy of every layer (hundreds of MB for paper-scale FC layers)
+/// just to fill three manifest fields. Agrees with
+/// `DistStats::measure(&matrix.to_dense())` on those fields because the
+/// formats are lossless.
+fn element_stats(matrix: &AnyMatrix) -> (usize, f64, f64) {
+    use crate::formats::codebook::value_key;
+    use std::collections::HashMap;
+
+    let n = matrix.rows() as u64 * matrix.cols() as u64;
+    if n == 0 {
+        return (0, 0.0, 0.0);
+    }
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    match matrix {
+        AnyMatrix::Dense(m) => {
+            for &v in m.data() {
+                *counts.entry(value_key(v)).or_insert(0) += 1;
+            }
+        }
+        AnyMatrix::Csr(m) => {
+            let nnz = m.nnz() as u64;
+            if n > nnz {
+                *counts.entry(value_key(0.0)).or_insert(0) += n - nnz;
+            }
+            for &v in &m.values {
+                *counts.entry(value_key(v)).or_insert(0) += 1;
+            }
+        }
+        AnyMatrix::Cer(m) => {
+            let nnz = m.nnz() as u64;
+            if n > nnz {
+                *counts.entry(value_key(m.omega[0])).or_insert(0) += n - nnz;
+            }
+            for r in 0..m.rows() {
+                let (s, e) = m.row_runs(r);
+                for (j, slot) in (s..e).enumerate() {
+                    let run = (m.omega_ptr[slot + 1] - m.omega_ptr[slot]) as u64;
+                    if run > 0 {
+                        *counts.entry(value_key(m.omega[1 + j])).or_insert(0) += run;
+                    }
+                }
+            }
+        }
+        AnyMatrix::Cser(m) => {
+            let nnz = m.nnz() as u64;
+            if n > nnz {
+                *counts.entry(value_key(m.omega[0])).or_insert(0) += n - nnz;
+            }
+            for (slot, &oi) in m.omega_idx.iter().enumerate() {
+                let run = (m.omega_ptr[slot + 1] - m.omega_ptr[slot]) as u64;
+                if run > 0 {
+                    *counts.entry(value_key(m.omega[oi as usize])).or_insert(0) += run;
+                }
+            }
+        }
+    }
+    let total = n as f64;
+    let pmf: Vec<f64> = counts.values().map(|&c| c as f64 / total).collect();
+    let p0 = counts.values().copied().max().unwrap_or(0) as f64 / total;
+    (counts.len(), p0, crate::stats::entropy::entropy_bits(&pmf))
+}
+
+fn annotate_layer(e: PackError, i: usize) -> PackError {
+    match e {
+        PackError::Malformed(m) => PackError::Malformed(format!("layer {i}: {m}")),
+        other => other,
+    }
+}
+
+/// Validate header + section table + CRCs; return the parsed manifest and
+/// the raw layer section slices in file order.
+fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<&[u8]>), PackError> {
+    if buf.len() < HEADER_BYTES {
+        return if buf.len() >= 8 && buf[..8] != MAGIC {
+            Err(PackError::BadMagic)
+        } else {
+            Err(PackError::Truncated)
+        };
+    }
+    if buf[..8] != MAGIC {
+        return Err(PackError::BadMagic);
+    }
+    let mut cur = Cursor::new(&buf[8..HEADER_BYTES]);
+    let version = cur.u16()?;
+    let flags = cur.u16()?;
+    let n_sections = cur.u32()?;
+    if version != VERSION {
+        return Err(PackError::UnsupportedVersion(version));
+    }
+    // Reserved: a future writer setting a flag (e.g. section compression)
+    // must be rejected cleanly, like an unknown version.
+    if flags != 0 {
+        return Err(PackError::malformed(format!("unsupported flags 0x{flags:04x}")));
+    }
+    if n_sections == 0 || n_sections > MAX_SECTIONS {
+        return Err(PackError::malformed(format!(
+            "implausible section count {n_sections}"
+        )));
+    }
+    let table_end = HEADER_BYTES + n_sections as usize * TABLE_ENTRY_BYTES;
+    if buf.len() < table_end {
+        return Err(PackError::Truncated);
+    }
+    let mut cur = Cursor::new(&buf[HEADER_BYTES..table_end]);
+    let mut manifest: Option<Manifest> = None;
+    let mut layer_slices = Vec::new();
+    let mut max_end = table_end as u64;
+    for i in 0..n_sections as usize {
+        let kind = cur.u32()?;
+        let crc = cur.u32()?;
+        let off = cur.u64()?;
+        let len = cur.u64()?;
+        let end = off.checked_add(len).ok_or(PackError::Truncated)?;
+        if end > buf.len() as u64 {
+            return Err(PackError::Truncated);
+        }
+        max_end = max_end.max(end);
+        let sec = &buf[off as usize..end as usize];
+        if crc32(sec) != crc {
+            return Err(PackError::ChecksumMismatch { section: i });
+        }
+        match kind {
+            SECTION_MANIFEST => {
+                if manifest.is_some() {
+                    return Err(PackError::malformed("duplicate manifest section"));
+                }
+                if i != 0 {
+                    return Err(PackError::malformed("manifest is not the first section"));
+                }
+                manifest = Some(decode_manifest(sec)?);
+            }
+            SECTION_LAYER => layer_slices.push(sec),
+            other => {
+                return Err(PackError::malformed(format!(
+                    "unknown section kind {other}"
+                )))
+            }
+        }
+    }
+    let manifest = manifest.ok_or_else(|| PackError::malformed("missing manifest section"))?;
+    // The file must be exactly the sections plus their trailing 8-byte
+    // alignment padding: a cut anywhere — even inside the final pad — is
+    // truncation, and extra bytes are not silently carried along.
+    let expected_len = (max_end + 7) & !7;
+    if (buf.len() as u64) < expected_len {
+        return Err(PackError::Truncated);
+    }
+    if buf.len() as u64 > expected_len {
+        return Err(PackError::malformed("trailing bytes after the last section"));
+    }
+    Ok((manifest, layer_slices))
+}
+
+fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_string(&mut out, &m.network);
+    put_string(&mut out, &m.created_by);
+    put_u32(&mut out, m.layers.len() as u32);
+    for l in &m.layers {
+        put_string(&mut out, &l.name);
+        out.push(l.format.tag());
+        put_u32(&mut out, l.rows);
+        put_u32(&mut out, l.cols);
+        put_u32(&mut out, l.k);
+        put_f64(&mut out, l.entropy);
+        put_f64(&mut out, l.p0);
+        put_u64(&mut out, l.analytic_bits);
+        put_u64(&mut out, l.array_bytes);
+        put_u64(&mut out, l.payload_bytes);
+        put_string(&mut out, &l.rationale);
+    }
+    out
+}
+
+fn decode_manifest(buf: &[u8]) -> Result<Manifest, PackError> {
+    let mut cur = Cursor::new(buf);
+    let network = cur.string()?;
+    let created_by = cur.string()?;
+    let n = cur.u32_len("manifest layer count")?;
+    if n > MAX_SECTIONS as usize {
+        return Err(PackError::malformed("implausible manifest layer count"));
+    }
+    let mut layers = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let name = cur.string()?;
+        let tag = cur.u8()?;
+        let format = FormatKind::from_tag(tag)
+            .ok_or_else(|| PackError::malformed(format!("unknown format tag {tag}")))?;
+        layers.push(LayerProvenance {
+            name,
+            format,
+            rows: cur.u32()?,
+            cols: cur.u32()?,
+            k: cur.u32()?,
+            entropy: cur.f64()?,
+            p0: cur.f64()?,
+            analytic_bits: cur.u64()?,
+            array_bytes: cur.u64()?,
+            payload_bytes: cur.u64()?,
+            rationale: cur.string()?,
+        });
+    }
+    if cur.remaining() != 0 {
+        return Err(PackError::malformed("trailing bytes after manifest"));
+    }
+    Ok(Manifest {
+        network,
+        created_by,
+        layers,
+    })
+}
+
+fn decode_layer_section(buf: &[u8]) -> Result<PackLayer, PackError> {
+    let mut cur = Cursor::new(buf);
+    let name = cur.string()?;
+    cur.align(4)?;
+    let bias_len = cur.u32_len("bias length")?;
+    let bias = cur.f32_array(bias_len)?;
+    let payload_len = cur.u64_len("payload length")?;
+    let payload = cur.take(payload_len)?;
+    if cur.remaining() != 0 {
+        return Err(PackError::malformed("trailing bytes after layer payload"));
+    }
+    let matrix = AnyMatrix::decode_from(payload)?;
+    Ok(PackLayer { name, matrix, bias })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::paper_example_matrix;
+
+    fn tiny_pack() -> Pack {
+        let m = paper_example_matrix();
+        Pack::from_layers(
+            "unit-test-net",
+            "fixed (test)",
+            vec![
+                (
+                    "fc0".to_string(),
+                    AnyMatrix::encode(FormatKind::Cser, &m),
+                    vec![0.5; 5],
+                ),
+                (
+                    "fc1".to_string(),
+                    AnyMatrix::encode(FormatKind::Dense, &Dense::zeros(3, 5)),
+                    vec![-0.25, 0.0, 0.25],
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let pack = tiny_pack();
+        let (bytes, written) = pack.to_bytes();
+        assert!(written.layers.iter().all(|l| l.payload_bytes > 0));
+        let back = Pack::from_bytes(&bytes).expect("decode");
+        assert_eq!(back.manifest.network, "unit-test-net");
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].name, "fc0");
+        assert_eq!(back.layers[0].bias, vec![0.5; 5]);
+        assert_eq!(back.layers[0].matrix.to_dense(), paper_example_matrix());
+        assert_eq!(back.layers[0].matrix.kind(), FormatKind::Cser);
+        assert_eq!(back.layers[1].matrix.kind(), FormatKind::Dense);
+        // Deterministic: re-serialization is byte-identical.
+        let (bytes2, _) = back.to_bytes();
+        assert_eq!(bytes, bytes2);
+    }
+
+    #[test]
+    fn measured_array_bytes_match_analytic_bits() {
+        let pack = tiny_pack();
+        let (_, manifest) = pack.to_bytes();
+        for l in &manifest.layers {
+            assert_eq!(
+                l.array_bytes * 8,
+                l.analytic_bits,
+                "{}: disk arrays must match the storage model",
+                l.name
+            );
+            assert!(l.divergence_pct().abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn element_stats_match_dense_measurement() {
+        // element_stats re-derives (K, p0, H) from the encoded arrays; it
+        // must agree with the dense-side DistStats on every format.
+        let mut rng = crate::util::Rng::new(0x57A7);
+        let values = [0.0f32, 0.5, -0.5, 1.0, 2.0];
+        let data: Vec<f32> = (0..40 * 17).map(|_| values[rng.below(5)]).collect();
+        let m = Dense::from_vec(40, 17, data);
+        let want = crate::costmodel::DistStats::measure(&m);
+        for kind in FormatKind::ALL {
+            let (k, p0, h) = element_stats(&AnyMatrix::encode(kind, &m));
+            assert_eq!(k, want.k, "{kind:?}: K");
+            assert!((p0 - want.p0).abs() < 1e-12, "{kind:?}: p0 {p0} vs {}", want.p0);
+            assert!((h - want.entropy).abs() < 1e-9, "{kind:?}: H {h} vs {}", want.entropy);
+        }
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let (mut bytes, _) = tiny_pack().to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(matches!(Pack::from_bytes(&bytes), Err(PackError::BadMagic)));
+    }
+
+    #[test]
+    fn unsupported_version_detected() {
+        let (mut bytes, _) = tiny_pack().to_bytes();
+        bytes[8] = 0xFE;
+        let r = Pack::from_bytes(&bytes);
+        assert!(matches!(r, Err(PackError::UnsupportedVersion(_))));
+    }
+
+    #[test]
+    fn flipped_byte_is_a_checksum_error() {
+        let (bytes, _) = tiny_pack().to_bytes();
+        // Flip one byte in the interior of every section (offsets read
+        // from the section table); each must surface as a checksum
+        // mismatch. The header/table region is covered by the structural
+        // checks instead.
+        for i in 0..3usize {
+            let entry = HEADER_BYTES + i * TABLE_ENTRY_BYTES;
+            let off = u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap());
+            let len = u64::from_le_bytes(bytes[entry + 16..entry + 24].try_into().unwrap());
+            let pos = (off + len / 2) as usize;
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x40;
+            assert!(
+                matches!(
+                    Pack::from_bytes(&corrupt),
+                    Err(PackError::ChecksumMismatch { section }) if section == i
+                ),
+                "flip at {pos} (section {i}) not caught"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_detected_at_every_length() {
+        let (bytes, _) = tiny_pack().to_bytes();
+        // Every proper prefix must fail cleanly (no panic, no Ok).
+        for cut in [0, 4, 8, 15, HEADER_BYTES, HEADER_BYTES + 10, bytes.len() - 1] {
+            let r = Pack::from_bytes(&bytes[..cut]);
+            assert!(r.is_err(), "prefix of {cut} bytes decoded successfully");
+        }
+    }
+
+    #[test]
+    fn manifest_only_read_skips_payload_decode() {
+        let pack = tiny_pack();
+        let (bytes, written) = pack.to_bytes();
+        let (manifest, slices) = parse_container(&bytes).unwrap();
+        assert_eq!(slices.len(), 2);
+        assert_eq!(manifest.layers[0].payload_bytes, written.layers[0].payload_bytes);
+        assert_eq!(manifest.total_analytic_bits(), written.total_analytic_bits());
+        assert!(manifest.dense_baseline_bytes() >= manifest.total_array_bytes());
+    }
+}

@@ -1,0 +1,307 @@
+//! Little-endian wire primitives shared by the `.cerpack` writers and
+//! readers: a bounds-checked read cursor and append-style emit helpers.
+//!
+//! Every multi-byte integer/float on the wire is little-endian. Strings are
+//! `u32` byte length + UTF-8 bytes (no NUL). Bulk `f32`/`u32`/`u16` arrays
+//! are written element-wise in LE order; the section layouts in
+//! [`crate::pack`] order arrays widest-element-first so each array starts
+//! naturally aligned at its element size whenever the enclosing section is
+//! 8-byte aligned in the file.
+
+use super::PackError;
+use crate::formats::IndexWidth;
+
+/// Bounds-checked read cursor over a byte slice. Every `take` past the end
+/// fails with [`PackError::Truncated`] — corrupted lengths can never cause
+/// a panic or out-of-bounds read.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Current offset from the start of the buffer.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Skip padding so the next read starts at a multiple of `align`
+    /// (relative to the start of this cursor's buffer).
+    pub fn align(&mut self, align: usize) -> Result<(), PackError> {
+        let rem = self.pos % align;
+        if rem != 0 {
+            self.take(align - rem)?;
+        }
+        Ok(())
+    }
+
+    /// Take the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], PackError> {
+        if n > self.remaining() {
+            return Err(PackError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, PackError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, PackError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, PackError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, PackError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, PackError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, PackError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// `u32` read as `usize`, with a semantic label for error messages.
+    pub fn u32_len(&mut self, what: &str) -> Result<usize, PackError> {
+        let v = self.u32()?;
+        usize::try_from(v).map_err(|_| PackError::malformed(format!("{what} overflows usize")))
+    }
+
+    /// `u64` read as `usize`, rejecting values a 32-bit host can't index.
+    pub fn u64_len(&mut self, what: &str) -> Result<usize, PackError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| PackError::malformed(format!("{what} overflows usize")))
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self) -> Result<String, PackError> {
+        let n = self.u32_len("string length")?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| PackError::malformed("string is not valid UTF-8"))
+    }
+
+    /// `count` little-endian `f32`s.
+    pub fn f32_array(&mut self, count: usize) -> Result<Vec<f32>, PackError> {
+        let bytes = self.take(
+            count
+                .checked_mul(4)
+                .ok_or_else(|| PackError::malformed("f32 array size overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// `count` little-endian `u32`s.
+    pub fn u32_array(&mut self, count: usize) -> Result<Vec<u32>, PackError> {
+        let bytes = self.take(
+            count
+                .checked_mul(4)
+                .ok_or_else(|| PackError::malformed("u32 array size overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// `count` little-endian `u16`s widened to `u32`.
+    pub fn u16_array_widened(&mut self, count: usize) -> Result<Vec<u32>, PackError> {
+        let bytes = self.take(
+            count
+                .checked_mul(2)
+                .ok_or_else(|| PackError::malformed("u16 array size overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]) as u32)
+            .collect())
+    }
+
+    /// `count` `u8`s widened to `u32`.
+    pub fn u8_array_widened(&mut self, count: usize) -> Result<Vec<u32>, PackError> {
+        Ok(self.take(count)?.iter().map(|&b| b as u32).collect())
+    }
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed UTF-8 string (`u32` byte length + bytes).
+pub fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn put_f32_array(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn put_u32_array(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Write `vs` (values known to fit) narrowed to `u16`.
+pub fn put_u32_array_as_u16(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len() * 2);
+    for &v in vs {
+        debug_assert!(v <= u16::MAX as u32);
+        out.extend_from_slice(&(v as u16).to_le_bytes());
+    }
+}
+
+/// Write `vs` (values known to fit) narrowed to `u8`.
+pub fn put_u32_array_as_u8(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len());
+    for &v in vs {
+        debug_assert!(v <= u8::MAX as u32);
+        out.push(v as u8);
+    }
+}
+
+/// Zero-pad `out` to the next multiple of `align` bytes.
+pub fn pad_to(out: &mut Vec<u8>, align: usize) {
+    while out.len() % align != 0 {
+        out.push(0);
+    }
+}
+
+/// Zero-pad `out` so that `out.len() - base` is a multiple of `align` —
+/// the self-relative padding used inside format payloads, mirrored on the
+/// read side by [`Cursor::align`].
+pub fn pad_rel(out: &mut Vec<u8>, base: usize, align: usize) {
+    while (out.len() - base) % align != 0 {
+        out.push(0);
+    }
+}
+
+/// Write `vs` at the given storage width (values must fit; the encoders
+/// pass the same minimal accounted widths the storage model uses).
+pub fn put_u32s_at_width(out: &mut Vec<u8>, vs: &[u32], width: IndexWidth) {
+    match width {
+        IndexWidth::U8 => put_u32_array_as_u8(out, vs),
+        IndexWidth::U16 => put_u32_array_as_u16(out, vs),
+        IndexWidth::U32 => put_u32_array(out, vs),
+    }
+}
+
+/// Read `count` values stored at `width`, widened to `u32`.
+pub fn read_u32s_at_width(
+    cur: &mut Cursor,
+    count: usize,
+    width: IndexWidth,
+) -> Result<Vec<u32>, PackError> {
+    match width {
+        IndexWidth::U8 => cur.u8_array_widened(count),
+        IndexWidth::U16 => cur.u16_array_widened(count),
+        IndexWidth::U32 => cur.u32_array(count),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut buf = Vec::new();
+        put_u16(&mut buf, 0xBEEF);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, 0x0123_4567_89AB_CDEF);
+        put_f32(&mut buf, -1.5);
+        put_f64(&mut buf, 2.25);
+        put_string(&mut buf, "cerpack");
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.u16().unwrap(), 0xBEEF);
+        assert_eq!(c.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(c.f32().unwrap(), -1.5);
+        assert_eq!(c.f64().unwrap(), 2.25);
+        assert_eq!(c.string().unwrap(), "cerpack");
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn array_roundtrip_all_widths() {
+        let mut buf = Vec::new();
+        put_f32_array(&mut buf, &[1.0, -2.0, 0.5]);
+        put_u32_array(&mut buf, &[70_000, 0, 9]);
+        put_u32_array_as_u16(&mut buf, &[300, 65_535]);
+        put_u32_array_as_u8(&mut buf, &[0, 255, 7]);
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.f32_array(3).unwrap(), vec![1.0, -2.0, 0.5]);
+        assert_eq!(c.u32_array(3).unwrap(), vec![70_000, 0, 9]);
+        assert_eq!(c.u16_array_widened(2).unwrap(), vec![300, 65_535]);
+        assert_eq!(c.u8_array_widened(3).unwrap(), vec![0, 255, 7]);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let buf = [1u8, 2, 3];
+        let mut c = Cursor::new(&buf);
+        assert!(matches!(c.u32(), Err(PackError::Truncated)));
+        // A huge length prefix must not allocate or panic.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX);
+        let mut c = Cursor::new(&buf);
+        assert!(matches!(c.string(), Err(PackError::Truncated)));
+    }
+
+    #[test]
+    fn padding() {
+        let mut buf = vec![0xFFu8; 5];
+        pad_to(&mut buf, 8);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(&buf[5..], &[0, 0, 0]);
+        pad_to(&mut buf, 8);
+        assert_eq!(buf.len(), 8);
+    }
+}

@@ -5,15 +5,26 @@
 //!
 //! * [`XlaRuntime`] — one PJRT CPU client + executable cache.
 //! * [`artifacts`] — readers for the weight/testset/manifest files.
+//!
+//! The PJRT backend needs the external `xla` crate, which is not part of
+//! the offline build. It is gated behind the `xla` cargo feature: without
+//! it, [`XlaRuntime::cpu`] returns an error (and
+//! [`XlaRuntime::available`] reports `false`) so callers — the engine, the
+//! e2e driver, the integration tests — can detect the stub and fall back
+//! to the native kernels. The artifact *file* readers are plain `std` and
+//! always available.
 
 pub mod artifacts;
 
 pub use artifacts::MlpArtifacts;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::Context;
+#[cfg(feature = "xla")]
+use std::collections::HashMap;
 
 /// Typed input buffer for an executable.
 #[derive(Clone, Debug)]
@@ -39,6 +50,7 @@ impl Arg {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             Arg::F32 { data, dims } => {
@@ -56,6 +68,7 @@ impl Arg {
 
 /// A compiled executable (one AOT'd jax function).
 pub struct Executable {
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
     /// Path it was loaded from (diagnostics).
     pub path: PathBuf,
@@ -65,6 +78,7 @@ impl Executable {
     /// Execute with the given arguments; returns the flattened f32 output
     /// of the first tuple element (all our AOT functions return 1-tuples —
     /// `return_tuple=True` in aot.py).
+    #[cfg(feature = "xla")]
     pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<f32>> {
         let literals: Vec<xla::Literal> = args
             .iter()
@@ -74,16 +88,36 @@ impl Executable {
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
+
+    /// Stub: always errors — the crate was built without the `xla` feature.
+    #[cfg(not(feature = "xla"))]
+    pub fn run_f32(&self, _args: &[Arg]) -> Result<Vec<f32>> {
+        anyhow::bail!(
+            "cannot execute {}: built without the `xla` feature (PJRT backend unavailable)",
+            self.path.display()
+        )
+    }
 }
 
 /// PJRT CPU client with an executable cache (compile once per path).
 pub struct XlaRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
+    #[cfg(feature = "xla")]
     cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+    #[cfg(not(feature = "xla"))]
+    #[allow(dead_code)]
+    _private: (),
 }
 
 impl XlaRuntime {
+    /// Whether the PJRT backend was compiled in.
+    pub fn available() -> bool {
+        cfg!(feature = "xla")
+    }
+
     /// Create the CPU client.
+    #[cfg(feature = "xla")]
     pub fn cpu() -> Result<XlaRuntime> {
         Ok(XlaRuntime {
             client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
@@ -91,12 +125,30 @@ impl XlaRuntime {
         })
     }
 
+    /// Stub: always errors — the crate was built without the `xla` feature.
+    #[cfg(not(feature = "xla"))]
+    pub fn cpu() -> Result<XlaRuntime> {
+        anyhow::bail!(
+            "PJRT backend unavailable: built without the `xla` feature \
+             (use Backend::Native, or rebuild with --features xla and the \
+             `xla` crate added as a dependency)"
+        )
+    }
+
     /// Platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "xla")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            "unavailable (built without the `xla` feature)".to_string()
+        }
     }
 
     /// Load + compile an HLO text artifact (cached).
+    #[cfg(feature = "xla")]
     pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
         if let Some(e) = self.cache.get(path) {
             return Ok(e.clone());
@@ -116,6 +168,15 @@ impl XlaRuntime {
         });
         self.cache.insert(path.to_path_buf(), entry.clone());
         Ok(entry)
+    }
+
+    /// Stub: always errors — the crate was built without the `xla` feature.
+    #[cfg(not(feature = "xla"))]
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        anyhow::bail!(
+            "cannot compile {}: built without the `xla` feature",
+            path.display()
+        )
     }
 }
 
@@ -139,5 +200,13 @@ mod tests {
     #[should_panic]
     fn arg_shape_mismatch_panics() {
         Arg::f32(vec![1.0; 3], &[2, 2]);
+    }
+
+    #[test]
+    fn stub_reports_unavailable_without_feature() {
+        if !XlaRuntime::available() {
+            let err = XlaRuntime::cpu().err().expect("stub must error");
+            assert!(format!("{err:#}").contains("xla"));
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Small self-contained utilities: deterministic RNG, discrete sampling,
-//! CSV emission and terminal tables.
+//! CSV emission, terminal tables and the CRC-32 used by `.cerpack`
+//! checksums.
 //!
 //! Everything here is dependency-free so the core library stays portable;
 //! determinism (seeded RNG, stable float formatting) is load-bearing for the
@@ -8,11 +9,13 @@
 
 pub mod alias;
 pub mod bench;
+pub mod crc32;
 pub mod csv;
 pub mod rng;
 pub mod table;
 
 pub use alias::AliasTable;
+pub use crc32::crc32;
 pub use rng::Rng;
 
 /// Human-readable byte size (`12.3 KB`, `1.1 MB`, ...).

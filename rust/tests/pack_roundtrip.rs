@@ -1,0 +1,248 @@
+//! `.cerpack` integration tests: seeded-RNG round-trip properties across
+//! all four formats and all index widths (save → load must be bit-exact),
+//! the paper-example acceptance check (measured on-disk size vs the
+//! analytic `StorageBreakdown`), and corruption handling (truncated file,
+//! bad magic, flipped byte → clean typed errors, never UB or garbage
+//! weights).
+
+use std::path::PathBuf;
+
+use cer::coordinator::Engine;
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::AnyMatrix;
+use cer::pack::{Pack, PackError};
+use cer::util::Rng;
+
+/// A quantized random matrix with ~`k` distinct values and a heavy zero
+/// mass (the regime the formats are built for).
+fn random_quantized(rng: &mut Rng, rows: usize, cols: usize, k: usize) -> Dense {
+    let values: Vec<f32> = (0..k)
+        .map(|i| (i as f32 - (k / 2) as f32) * 0.25)
+        .collect();
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            if rng.f64() < 0.4 {
+                0.0
+            } else {
+                values[rng.below(k)]
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "cer-pack-test-{}-{tag}.cerpack",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn payload_roundtrip_all_formats_across_index_widths() {
+    let mut rng = Rng::new(0x9ACC);
+    // Shapes chosen to force u8 / u16 / u32 column-index widths and u8 /
+    // u16 pointer widths (nnz and run counts above and below 255).
+    let shapes: [(usize, usize); 5] = [(7, 40), (3, 300), (2, 70_000), (60, 200), (200, 90)];
+    for &(rows, cols) in &shapes {
+        for k in [1usize, 2, 5, 17] {
+            let m = random_quantized(&mut rng, rows, cols, k);
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                let mut buf = Vec::new();
+                let emitted = enc.encode_into(&mut buf);
+                assert_eq!(emitted.total, buf.len(), "{kind:?} {rows}x{cols}");
+                // The matrix arrays on disk must match the paper's
+                // analytic storage accounting bit for bit.
+                assert_eq!(
+                    emitted.arrays as u64 * 8,
+                    enc.storage().total_bits(),
+                    "{kind:?} {rows}x{cols} k={k}: disk arrays vs storage model"
+                );
+                let dec = AnyMatrix::decode_from(&buf)
+                    .unwrap_or_else(|e| panic!("{kind:?} {rows}x{cols}: {e}"));
+                assert_eq!(dec.kind(), kind);
+                // Lossless and bit-exact.
+                assert_eq!(dec.to_dense(), m, "{kind:?} {rows}x{cols} k={k}");
+                // Deterministic: re-encoding reproduces the exact bytes.
+                let mut buf2 = Vec::new();
+                dec.encode_into(&mut buf2);
+                assert_eq!(buf, buf2, "{kind:?} {rows}x{cols} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_example_on_disk_size_matches_storage_breakdown() {
+    // Acceptance: the measured `.cerpack` bytes for the paper's 5x12
+    // example must be within 10% of the `StorageBreakdown` prediction.
+    // The array bytes match it *exactly* (the codecs store pointer/index
+    // arrays at the same minimal widths the accounting uses).
+    let m = cer::paper_example_matrix();
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &m);
+        let mut buf = Vec::new();
+        let emitted = enc.encode_into(&mut buf);
+        let analytic_bits = enc.storage().total_bits();
+        assert_eq!(
+            emitted.arrays as u64 * 8,
+            analytic_bits,
+            "{kind:?}: measured arrays diverge from the analytic bound"
+        );
+        let div = (emitted.arrays as f64 * 8.0 / analytic_bits as f64 - 1.0).abs();
+        assert!(div < 0.10, "{kind:?}: divergence {div}");
+    }
+    // CSER analytic storage of the example is 568 bits (§III-A: 59
+    // entries = 4x32 + 28x8 + 10x8 + 11x8 + 6x8) — 71 bytes on disk.
+    let cser = AnyMatrix::encode(FormatKind::Cser, &m);
+    let mut buf = Vec::new();
+    assert_eq!(cser.encode_into(&mut buf).arrays, 71);
+}
+
+#[test]
+fn engine_save_load_bit_exact_for_every_format() {
+    let mut rng = Rng::new(0xE2E);
+    for kind in FormatKind::ALL {
+        let layers: Vec<(String, Dense, Vec<f32>)> = vec![
+            (
+                "fc0".into(),
+                random_quantized(&mut rng, 9, 14, 6),
+                (0..9).map(|i| i as f32 * 0.1).collect(),
+            ),
+            (
+                "fc1".into(),
+                random_quantized(&mut rng, 4, 9, 3),
+                vec![0.0; 4],
+            ),
+        ];
+        let mut original = Engine::native_fixed(layers, kind);
+        let path = tmp_path(&format!("fixed-{}", kind.name()));
+        original.save_pack(&path, "roundtrip-net", "fixed (test)").unwrap();
+        let mut cold = Engine::from_pack(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cold.formats(), vec![kind; 2]);
+        let x: Vec<f32> = (0..2 * 14).map(|_| rng.f32() - 0.5).collect();
+        let a = original.forward(&x, 2).unwrap();
+        let b = cold.forward(&x, 2).unwrap();
+        assert_eq!(a, b, "{kind:?}: cold-start forward must be bit-exact");
+    }
+}
+
+/// Build a small real pack file and return its bytes.
+fn sample_pack_bytes() -> Vec<u8> {
+    let mut rng = Rng::new(0xC0DE);
+    let pack = Pack::from_layers(
+        "corruption-net",
+        "fixed (test)",
+        vec![
+            (
+                "a".to_string(),
+                AnyMatrix::encode(FormatKind::Cser, &random_quantized(&mut rng, 12, 30, 7)),
+                vec![0.0; 12],
+            ),
+            (
+                "b".to_string(),
+                AnyMatrix::encode(FormatKind::Csr, &random_quantized(&mut rng, 5, 12, 4)),
+                vec![0.1; 5],
+            ),
+        ],
+    );
+    pack.to_bytes().0
+}
+
+#[test]
+fn truncated_file_fails_cleanly() {
+    let bytes = sample_pack_bytes();
+    let path = tmp_path("trunc");
+    // Every prefix (sampled densely) must produce an error — and in
+    // particular never panic or return a mangled pack.
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(7).collect();
+    cuts.extend([0, 1, 8, 15, 16, bytes.len() - 1]);
+    for cut in cuts {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let r = Pack::read(&path);
+        assert!(r.is_err(), "prefix of {cut} bytes decoded successfully");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bad_magic_fails_with_typed_error() {
+    let mut bytes = sample_pack_bytes();
+    bytes[..8].copy_from_slice(b"NOTAPACK");
+    let path = tmp_path("magic");
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(matches!(Pack::read(&path), Err(PackError::BadMagic)));
+    std::fs::remove_file(&path).ok();
+
+    // An engine cold start surfaces the same failure as a readable error.
+    let path2 = tmp_path("magic2");
+    std::fs::write(&path2, &bytes).unwrap();
+    let e = Engine::from_pack(&path2).unwrap_err();
+    assert!(format!("{e:#}").contains("bad magic"), "{e:#}");
+    std::fs::remove_file(&path2).ok();
+}
+
+#[test]
+fn every_flipped_section_byte_is_a_checksum_error() {
+    let bytes = sample_pack_bytes();
+    // Parse the section table (header: magic 8, version 2, flags 2,
+    // count 4; entries of 24 bytes: kind u32, crc u32, off u64, len u64).
+    let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    assert_eq!(n_sections, 3); // manifest + 2 layers
+    let path = tmp_path("flip");
+    for s in 0..n_sections {
+        let entry = 16 + s * 24;
+        let off = u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[entry + 16..entry + 24].try_into().unwrap()) as usize;
+        // Flip a byte at several positions inside the section.
+        for pos in [off, off + len / 3, off + len / 2, off + len - 1] {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x01;
+            std::fs::write(&path, &corrupt).unwrap();
+            match Pack::read(&path) {
+                Err(PackError::ChecksumMismatch { section }) => assert_eq!(section, s),
+                other => panic!("flip at {pos}: expected checksum error, got {other:?}"),
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn header_and_table_corruption_fails_cleanly() {
+    let bytes = sample_pack_bytes();
+    let path = tmp_path("table");
+    // Version byte, section count, and every table byte: flipping any of
+    // them must yield an error (checksum, truncated, malformed, or
+    // version), never an Ok pack or a panic.
+    let mut positions: Vec<usize> = vec![8, 9, 12, 13, 14, 15];
+    positions.extend(16..16 + 3 * 24);
+    for pos in positions {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0x80;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(Pack::read(&path).is_err(), "flip at header/table byte {pos}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pack_preserves_manifest_provenance() {
+    let bytes = sample_pack_bytes();
+    let pack = Pack::from_bytes(&bytes).unwrap();
+    assert_eq!(pack.manifest.network, "corruption-net");
+    assert_eq!(pack.manifest.layers.len(), 2);
+    let l0 = &pack.manifest.layers[0];
+    assert_eq!(l0.format, FormatKind::Cser);
+    assert_eq!((l0.rows, l0.cols), (12, 30));
+    assert!(l0.entropy > 0.0 && l0.p0 > 0.0 && l0.k >= 2);
+    assert_eq!(l0.rationale, "fixed (test)");
+    // Stored measured bytes must match a fresh encoding.
+    let mut buf = Vec::new();
+    let emitted = pack.layers[0].matrix.encode_into(&mut buf);
+    assert_eq!(l0.payload_bytes, emitted.total as u64);
+    assert_eq!(l0.array_bytes, emitted.arrays as u64);
+    assert_eq!(l0.analytic_bits, pack.layers[0].matrix.storage().total_bits());
+}

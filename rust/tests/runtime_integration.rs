@@ -2,8 +2,9 @@
 //! produced by the build-time JAX/Pallas layer must execute through PJRT
 //! with numerics matching the native Rust kernels.
 //!
-//! These tests need `make artifacts`; they skip (with a notice) if the
-//! artifacts are missing so `cargo test` works on a fresh checkout.
+//! These tests need `make artifacts` *and* a build with the `xla` feature;
+//! they skip (with a notice) if either is missing so `cargo test` works on
+//! a fresh checkout of the offline build.
 
 use std::path::Path;
 
@@ -15,6 +16,10 @@ use cer::runtime::{Arg, MlpArtifacts, XlaRuntime};
 use cer::util::Rng;
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if !XlaRuntime::available() {
+        eprintln!("built without the `xla` feature; skipping runtime test");
+        return None;
+    }
     let p = Path::new("artifacts");
     if p.join("aot_manifest.txt").exists() {
         Some(p)

@@ -1,0 +1,248 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment for this repository has no network access and no
+//! vendored registry, so the real `anyhow` cannot be fetched. This shim
+//! implements the (small) subset of its API the workspace actually uses,
+//! with the same semantics:
+//!
+//! * [`Error`] — an opaque error value holding a chain of messages
+//!   (outermost context first, root cause last).
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending a frame to the chain.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction.
+//! * `?` conversion from any `E: std::error::Error + Send + Sync + 'static`
+//!   (the same blanket `From` impl the real crate has — which is also why
+//!   `Error` itself deliberately does *not* implement `std::error::Error`).
+//!
+//! Display formatting matches what the workspace relies on: `{e}` prints
+//! the outermost message, `{e:#}` prints the whole chain joined by `: `,
+//! and `{e:?}` prints the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of human-readable frames, outermost first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context frame (used by [`Context`]).
+    fn push_context(mut self, frame: String) -> Error {
+        self.frames.insert(0, frame);
+        self
+    }
+
+    /// The error chain, outermost frame first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+
+    /// The root cause (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same blanket conversion the real anyhow has. It coexists with core's
+// reflexive `impl From<T> for T` because `Error` does not implement
+// `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            frames.push(s.to_string());
+            source = s.source();
+        }
+        Error { frames }
+    }
+}
+
+mod ext {
+    use super::Error;
+    use std::fmt::Display;
+
+    /// Private extension trait so [`super::Context`] can accept both plain
+    /// `std::error::Error` values and [`Error`] itself (mirrors anyhow's
+    /// `ext::StdError`).
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).push_context(context.to_string())
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.push_context(context.to_string())
+        }
+    }
+}
+
+/// Attach context to errors, as in the real anyhow.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alt_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        let e = Err::<(), Error>(e)
+            .with_context(|| format!("loading {}", "artifacts"))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifacts");
+        assert_eq!(
+            format!("{e:#}"),
+            "loading artifacts: reading manifest: missing file"
+        );
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        fn f() -> Result<()> {
+            bail!("stop {}", "now");
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "stop now");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
