@@ -1,0 +1,173 @@
+//! Dot-kernel scaling benchmarks: per-format, per-zoo-network matvec
+//! throughput of the exec plane at 1/2/4/8 threads, in GFLOP-equivalents
+//! (2·m·n dense-equivalent FLOPs per product, whatever the format actually
+//! executes). Results are printed and written to `BENCH_dot.json` so the
+//! multi-core perf trajectory has a baseline.
+//!
+//! Run: `cargo bench --bench dot`
+//! CI smoke mode (small shapes, few iterations): `cargo bench --bench dot
+//! -- --smoke`
+//!
+//! Large nets are benchmarked at a reduced scale (`BENCH_DOT_SCALE`, like
+//! the pack bench's `BENCH_PACK_SCALE`); throughput per element does not
+//! depend on absolute layer size once out of cache. The shard-balance
+//! debug line (nnz per shard at 4 threads) shows the plans partition by
+//! stored-index count, not by row count.
+
+use std::io::Write as _;
+
+use cer::exec::ExecPlane;
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::networks::weights::synthesize_zoo_layers;
+use cer::util::bench::{fmt_ns, time_median_ns};
+use cer::util::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct Row {
+    net: String,
+    format: &'static str,
+    threads: usize,
+    params: u64,
+    pass_ns: f64,
+    gflops: f64,
+    speedup_vs_1t: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale: usize = std::env::var("BENCH_DOT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 16 } else { 8 })
+        .max(1);
+    let (warmup, iters) = if smoke { (1, 3) } else { (3, 11) };
+
+    let cases: [(&str, usize); 6] = [
+        ("lenet-300-100", 1),
+        ("lenet5", 1),
+        ("vgg-cifar10", scale),
+        ("densenet", scale),
+        ("resnet152", scale),
+        ("vgg16", scale),
+    ];
+
+    let mut rng = Rng::new(0xD07);
+    let mut rows: Vec<Row> = Vec::new();
+    for (net, net_scale) in cases {
+        let (spec, layers) = synthesize_zoo_layers(net, net_scale, 0xCE5E).expect("zoo net");
+        let params: u64 = layers
+            .iter()
+            .map(|(_, m, _)| (m.rows() * m.cols()) as u64)
+            .sum();
+        println!(
+            "=== {} (scale {net_scale}, {} layers, {params} params benched) ===",
+            spec.name,
+            layers.len()
+        );
+        for kind in FormatKind::ALL {
+            let encoded: Vec<AnyMatrix> = layers
+                .iter()
+                .map(|(_, m, _)| AnyMatrix::encode(kind, m))
+                .collect();
+            let flops: f64 = encoded
+                .iter()
+                .map(|a| 2.0 * a.rows() as f64 * a.cols() as f64)
+                .sum();
+            let xs: Vec<Vec<f32>> = encoded
+                .iter()
+                .map(|a| (0..a.cols()).map(|_| rng.f32() - 0.5).collect())
+                .collect();
+            let mut ys: Vec<Vec<f32>> = encoded.iter().map(|a| vec![0.0; a.rows()]).collect();
+
+            let mut base_ns = f64::NAN;
+            let mut line = format!("{:<14} {:<6}", spec.name, kind.name());
+            for &t in &THREAD_COUNTS {
+                let plane = ExecPlane::with_threads(t);
+                let plans: Vec<_> = encoded.iter().map(|a| a.shard_plan(t)).collect();
+                let pass_ns = time_median_ns(warmup, iters, || {
+                    for (i, a) in encoded.iter().enumerate() {
+                        match plane.pool() {
+                            Some(pool) => a.matvec_sharded(&xs[i], &mut ys[i], &plans[i], pool),
+                            None => a.matvec(&xs[i], &mut ys[i]),
+                        }
+                    }
+                    std::hint::black_box(&ys);
+                });
+                if t == 1 {
+                    base_ns = pass_ns;
+                }
+                let gflops = flops / pass_ns; // FLOP/ns == GFLOP/s
+                let speedup = base_ns / pass_ns;
+                line.push_str(&format!(
+                    "  {t}t {:>10} ({gflops:>6.2} GF/s, x{speedup:.2})",
+                    fmt_ns(pass_ns)
+                ));
+                rows.push(Row {
+                    net: spec.name.to_string(),
+                    format: kind.name(),
+                    threads: t,
+                    params,
+                    pass_ns,
+                    gflops,
+                    speedup_vs_1t: speedup,
+                });
+            }
+            println!("{line}");
+            // Acceptance trace: 4-thread CER/CSER scaling on big nets.
+            if matches!(kind, FormatKind::Cer | FormatKind::Cser) {
+                let x4 = rows
+                    .iter()
+                    .rev()
+                    .find(|r| r.threads == 4)
+                    .map(|r| r.speedup_vs_1t)
+                    .unwrap_or(0.0);
+                let verdict = if params < 1_000_000 {
+                    "n/a (<1M params)"
+                } else if x4 >= 2.0 {
+                    "PASS (>=2x)"
+                } else {
+                    "BELOW TARGET (<2x)"
+                };
+                println!("    4-thread scaling x{x4:.2} — {verdict}");
+            }
+        }
+        // Shard-balance debug: the largest layer's CER plan at 4 threads.
+        if let Some((name, biggest)) = layers
+            .iter()
+            .map(|(name, m, _)| (name, m))
+            .max_by_key(|(_, m)| m.rows() * m.cols())
+        {
+            let plan = AnyMatrix::encode(FormatKind::Cer, biggest).shard_plan(4);
+            println!("    plan[{name}]: {}", plan.summary());
+        }
+    }
+
+    // Hand-rolled JSON (the offline build has no serde).
+    let mut json = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"format\": \"{}\", \"threads\": {}, \
+             \"params\": {}, \"pass_ns\": {:.1}, \"gflops_equiv\": {:.4}, \
+             \"speedup_vs_1t\": {:.4}}}{}\n",
+            r.net,
+            r.format,
+            r.threads,
+            r.params,
+            r.pass_ns,
+            r.gflops,
+            r.speedup_vs_1t,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("]\n");
+    let mut f = std::fs::File::create("BENCH_dot.json").expect("BENCH_dot.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_dot.json");
+    println!(
+        "wrote BENCH_dot.json ({} rows: {} networks x 4 formats x {:?} threads)",
+        rows.len(),
+        cases.len(),
+        THREAD_COUNTS
+    );
+}

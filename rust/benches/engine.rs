@@ -68,6 +68,7 @@ fn main() {
                     max_batch,
                     max_delay_us: 500,
                 },
+                threads: None,
             },
         );
         let n = 4000usize;

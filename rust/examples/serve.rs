@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             max_delay_us,
         },
+        threads: None, // CER_THREADS env still applies
     };
     let art_engine = art.clone();
     let srv = InferenceServer::spawn(

@@ -19,6 +19,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format, Objective};
 use crate::costmodel::{EnergyModel, TimeModel};
+use crate::exec::{ExecPlane, ShardPlan};
 use crate::formats::{Dense, FormatKind};
 use crate::kernels::AnyMatrix;
 use crate::pack::{self, LayerView, Manifest, Pack};
@@ -80,6 +81,11 @@ pub struct Engine {
     xla: Option<XlaState>,
     /// Scratch activation buffers (reused across forwards).
     scratch: Vec<Vec<f32>>,
+    /// Multi-core execution plane (serial unless [`Engine::set_threads`]).
+    exec: ExecPlane,
+    /// One nnz-balanced plan per layer, computed once when the plane is
+    /// configured (empty when serial).
+    plans: Vec<ShardPlan>,
 }
 
 impl Engine {
@@ -107,6 +113,8 @@ impl Engine {
             backend: Backend::Native,
             xla: None,
             scratch: Vec::new(),
+            exec: ExecPlane::serial(),
+            plans: Vec::new(),
         }
     }
 
@@ -125,6 +133,8 @@ impl Engine {
             backend: Backend::Native,
             xla: None,
             scratch: Vec::new(),
+            exec: ExecPlane::serial(),
+            plans: Vec::new(),
         }
     }
 
@@ -203,6 +213,8 @@ impl Engine {
                         batch: art.batch,
                     }),
                     scratch: Vec::new(),
+                    exec: ExecPlane::serial(),
+                    plans: Vec::new(),
                 })
             }
         }
@@ -210,6 +222,40 @@ impl Engine {
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Configure the multi-core execution plane: `threads <= 1` restores
+    /// the exact serial code path; otherwise a persistent pool of
+    /// `threads - 1` workers is (re)built and one nnz-balanced
+    /// [`ShardPlan`] per layer is computed here, once — never on the hot
+    /// path. Forward results are bit-identical at every thread count.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.exec = ExecPlane::with_threads(threads);
+        self.plans = if self.exec.is_parallel() {
+            self.layers
+                .iter()
+                .map(|l| l.matrix.shard_plan(self.exec.threads()))
+                .collect()
+        } else {
+            Vec::new()
+        };
+    }
+
+    /// Builder form of [`Engine::set_threads`].
+    pub fn with_threads(mut self, threads: usize) -> Engine {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Execution lanes in use (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
+    /// The per-layer shard plans (empty when serial) — balance is
+    /// observable via [`ShardPlan::summary`].
+    pub fn shard_plans(&self) -> &[ShardPlan] {
+        &self.plans
     }
 
     /// Input dimensionality.
@@ -257,7 +303,12 @@ impl Engine {
             let out = &mut self.scratch[i];
             out.clear();
             out.resize(m * batch, 0.0);
-            layer.matrix.matmul_colmajor(&cur, out, batch);
+            match (self.exec.pool(), self.plans.get(i)) {
+                (Some(pool), Some(plan)) => {
+                    layer.matrix.matmul_colmajor_sharded(&cur, out, batch, plan, pool)
+                }
+                _ => layer.matrix.matmul_colmajor(&cur, out, batch),
+            }
             for s in 0..batch {
                 let col = &mut out[s * m..(s + 1) * m];
                 for (v, b) in col.iter_mut().zip(&layer.bias) {
@@ -350,6 +401,8 @@ impl Engine {
             backend: Backend::Native,
             xla: None,
             scratch: Vec::new(),
+            exec: ExecPlane::serial(),
+            plans: Vec::new(),
         }
     }
 
@@ -443,6 +496,27 @@ mod tests {
             assert!((a - b).abs() < 1e-4);
         }
         assert_eq!(auto.formats().len(), 3);
+    }
+
+    #[test]
+    fn threaded_forward_bit_identical_to_serial() {
+        let layers = tiny_layers(11);
+        let mut rng = Rng::new(5);
+        let batch = 6;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+        for kind in FormatKind::ALL {
+            let mut serial = Engine::native_fixed(layers.clone(), kind);
+            let want = serial.forward(&x, batch).unwrap();
+            let mut par = Engine::native_fixed(layers.clone(), kind).with_threads(4);
+            assert_eq!(par.threads(), 4);
+            assert_eq!(par.shard_plans().len(), 3);
+            assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} @4");
+            // Back to serial: plans drop, results unchanged.
+            par.set_threads(1);
+            assert_eq!(par.threads(), 1);
+            assert!(par.shard_plans().is_empty());
+            assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} @1");
+        }
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //!
 //! The serving loop uses OS threads + channels rather than an async
 //! runtime: tokio is not in the offline vendor set (DESIGN.md §4) and a
-//! single-worker engine loop has no I/O concurrency to hide.
+//! single-worker engine loop has no I/O concurrency to hide. Kernel-level
+//! parallelism lives below this layer: when `ServerConfig::threads` (or
+//! `CER_THREADS`) is set, the engine fans each batch matmul out across
+//! the [`crate::exec`] plane's nnz-balanced row shards while the engine
+//! itself stays single-owner.
 
 pub mod batcher;
 pub mod engine;

@@ -19,6 +19,13 @@ use crate::coordinator::metrics::Metrics;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
+    /// Kernel execution threads for the engine (resolved through
+    /// [`crate::exec::resolve_threads`]: `None` consults the
+    /// `CER_THREADS` env var and defaults to serial, `Some(0)` means all
+    /// cores). The engine stays single-*owner* — one worker thread holds
+    /// it — but each batch matmul fans out across the exec pool's
+    /// nnz-balanced shards.
+    pub threads: Option<usize>,
 }
 
 /// One in-flight request.
@@ -123,7 +130,10 @@ where
 {
     let epoch = Instant::now();
     let mut engine = match build() {
-        Ok(e) => e,
+        Ok(mut e) => {
+            e.set_threads(crate::exec::resolve_threads(cfg.threads));
+            e
+        }
         Err(err) => {
             // Fail every request with the construction error.
             let msg = format!("engine construction failed: {err:#}");
@@ -260,6 +270,7 @@ mod tests {
                 max_batch: 8,
                 max_delay_us: 3_000,
             },
+            threads: None,
         };
         let srv = InferenceServer::spawn(identity_engine, cfg);
         let rxs: Vec<_> = (0..20)
@@ -276,6 +287,27 @@ mod tests {
             20
         );
         assert!(srv.metrics().mean_batch() >= 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn threaded_server_serves_identical_results() {
+        // Same engine, explicit 3-way exec plane: the batch path fans out
+        // across shards but answers must be unchanged.
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay_us: 1_000,
+            },
+            threads: Some(3),
+        };
+        let srv = InferenceServer::spawn(identity_engine, cfg);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| srv.submit(vec![i as f32, -1.0, 0.5]))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32, -1.0, 0.5]);
+        }
         srv.shutdown();
     }
 
@@ -307,6 +339,7 @@ mod tests {
                 max_batch: 1000,
                 max_delay_us: 60_000_000, // would wait a minute
             },
+            threads: None,
         };
         let srv = InferenceServer::spawn(identity_engine, cfg);
         let rx = srv.submit(vec![7.0, 0.0, 0.0]);

@@ -1,0 +1,193 @@
+//! The multi-core execution plane: nnz-balanced row sharding for the
+//! dot-product kernels.
+//!
+//! * [`ThreadPool`] — persistent scoped worker pool (std threads +
+//!   channels; no external dependencies, same style as the serving loop).
+//! * [`ShardPlan`] — per-layer contiguous row partition balanced by
+//!   stored-index (nnz) count rather than row count, since run-length skew
+//!   is exactly what low-entropy matrices exhibit.
+//! * [`ExecPlane`] — pool handle + thread-count policy (the `--threads`
+//!   CLI flag / `CER_THREADS` env knob resolve through
+//!   [`resolve_threads`]).
+//!
+//! **Determinism guarantee:** sharding never changes any row's reduction
+//! order — each shard runs the exact serial inner loop over its own rows,
+//! and the Ω\[0\]-correction input sums are computed once per call and
+//! shared by all shards — so parallel output is bit-identical to serial
+//! output at every thread count. `--threads 1` (or an absent pool) takes
+//! today's serial code path unchanged.
+
+mod pool;
+mod shard;
+
+pub use pool::ThreadPool;
+pub use shard::ShardPlan;
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+/// Environment variable consulted when no explicit thread count is given.
+pub const THREADS_ENV: &str = "CER_THREADS";
+
+/// Hard ceiling on user-requested thread counts: row sharding past the
+/// core count only adds scheduling overhead, and an absurd request must
+/// not panic deep inside worker spawn.
+pub const MAX_THREADS: usize = 256;
+
+/// Resolve a thread-count request into an actual count.
+///
+/// * `Some(n)` for `n >= 1` — use `n` threads (clamped to
+///   [`MAX_THREADS`]).
+/// * `Some(0)` — use all available cores.
+/// * `None` — consult the `CER_THREADS` env var (`"0"`/`"auto"` = all
+///   cores); absent or unparsable means 1 (serial).
+pub fn resolve_threads(requested: Option<usize>) -> usize {
+    let req = requested.or_else(|| {
+        std::env::var(THREADS_ENV).ok().and_then(|v| {
+            if v.eq_ignore_ascii_case("auto") {
+                Some(0)
+            } else {
+                v.trim().parse().ok()
+            }
+        })
+    });
+    match req {
+        None => 1,
+        Some(0) => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        Some(n) => n.min(MAX_THREADS),
+    }
+}
+
+/// A (possibly absent) execution pool: the engine-facing handle that turns
+/// a thread-count policy into shardable execution. Cloning shares the
+/// underlying pool.
+#[derive(Clone, Default)]
+pub struct ExecPlane {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl ExecPlane {
+    /// No pool: every kernel call takes the serial path.
+    pub fn serial() -> ExecPlane {
+        ExecPlane { pool: None }
+    }
+
+    /// Pool for `threads`-way execution (`threads - 1` workers — the
+    /// calling thread is the remaining lane). `threads <= 1` is serial.
+    pub fn with_threads(threads: usize) -> ExecPlane {
+        if threads <= 1 {
+            ExecPlane::serial()
+        } else {
+            ExecPlane {
+                pool: Some(Arc::new(ThreadPool::new(threads - 1))),
+            }
+        }
+    }
+
+    /// Total execution lanes (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.workers() + 1)
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_deref()
+    }
+}
+
+impl std::fmt::Debug for ExecPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecPlane({} thread(s))", self.threads())
+    }
+}
+
+/// A shared-writable f32 output cell for column-major matmul outputs,
+/// where one shard's rows are strided across every output column and thus
+/// cannot be handed out as disjoint `&mut` slices.
+///
+/// Soundness model: the parallel driver hands every shard the same
+/// `&[SyncCell]` view of the output buffer, and the [`ShardPlan`]
+/// invariants (disjoint row ranges) guarantee no two tasks ever touch the
+/// same cell; the kernels that write through it are `unsafe fn`s carrying
+/// that contract.
+#[repr(transparent)]
+pub struct SyncCell(UnsafeCell<f32>);
+
+// SAFETY: access discipline is enforced by the unsafe-fn contract above —
+// concurrent tasks write strictly disjoint cells.
+unsafe impl Sync for SyncCell {}
+unsafe impl Send for SyncCell {}
+
+impl SyncCell {
+    /// Write `v` into the cell.
+    ///
+    /// # Safety
+    /// No other thread may access this cell for the duration of the write.
+    #[inline(always)]
+    pub(crate) unsafe fn set(&self, v: f32) {
+        *self.0.get() = v;
+    }
+}
+
+/// View an exclusively borrowed f32 slice as shared cells for
+/// disjoint-row parallel writes.
+pub(crate) fn as_cells(y: &mut [f32]) -> &[SyncCell] {
+    let len = y.len();
+    // SAFETY: SyncCell is repr(transparent) over UnsafeCell<f32>, which is
+    // repr(transparent) over f32; deriving the pointer from `&mut` keeps
+    // write provenance, and exclusivity of the borrow means the shared
+    // view is refined only by our own disjoint per-shard writes.
+    unsafe { std::slice::from_raw_parts(y.as_mut_ptr() as *const SyncCell, len) }
+}
+
+/// Reborrow a cell sub-range as a plain `&mut [f32]` (for reusing the
+/// contiguous-output matvec inner loops on one column's shard segment).
+///
+/// # Safety
+/// The range must not be accessed by any other party for the lifetime of
+/// the returned slice.
+pub(crate) unsafe fn cells_as_mut(cells: &[SyncCell]) -> &mut [f32] {
+    std::slice::from_raw_parts_mut(cells.as_ptr() as *mut f32, cells.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_plane_thread_accounting() {
+        assert_eq!(ExecPlane::serial().threads(), 1);
+        assert!(!ExecPlane::serial().is_parallel());
+        assert_eq!(ExecPlane::with_threads(0).threads(), 1);
+        assert_eq!(ExecPlane::with_threads(1).threads(), 1);
+        let p = ExecPlane::with_threads(4);
+        assert_eq!(p.threads(), 4);
+        assert!(p.is_parallel());
+        assert_eq!(p.pool().unwrap().workers(), 3);
+    }
+
+    #[test]
+    fn resolve_explicit_requests() {
+        assert_eq!(resolve_threads(Some(1)), 1);
+        assert_eq!(resolve_threads(Some(6)), 6);
+        assert!(resolve_threads(Some(0)) >= 1); // all cores
+        assert_eq!(resolve_threads(Some(500_000)), MAX_THREADS); // clamped
+    }
+
+    #[test]
+    fn cells_roundtrip() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        let cells = as_cells(&mut y);
+        unsafe {
+            cells[1].set(9.0);
+            let m = cells_as_mut(&cells[2..]);
+            m[0] = 7.0;
+        }
+        assert_eq!(y, vec![1.0, 9.0, 7.0]);
+    }
+}

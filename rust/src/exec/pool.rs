@@ -1,0 +1,223 @@
+//! Persistent worker pool — std threads + channels only, in the same
+//! dependency-free style as `coordinator/server.rs` (rayon/crossbeam are
+//! not in the offline vendor set).
+//!
+//! The pool is *scoped*: [`ThreadPool::run_scoped`] accepts non-`'static`
+//! closures and does not return until every one of them has finished, so
+//! shard tasks may borrow the caller's stack — the input vector, the
+//! output slices, the matrix being multiplied. The calling thread
+//! participates instead of idling: the first task runs inline, so a pool
+//! sized for `t`-way execution needs only `t - 1` workers.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of worker threads executing scoped shard tasks.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` persistent worker threads. `workers == 0` is valid:
+    /// every task of [`ThreadPool::run_scoped`] then runs inline on the
+    /// calling thread (the serial fallback).
+    pub fn new(workers: usize) -> ThreadPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("cer-exec-{i}"))
+                    .spawn(move || loop {
+                        // Hold the queue lock only for the recv itself.
+                        let job = { rx.lock().expect("exec queue lock").recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped: queue closed
+                        }
+                    })
+                    .expect("spawning exec worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Number of worker threads. The calling thread adds one more lane of
+    /// parallelism during [`ThreadPool::run_scoped`].
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every task to completion; tasks may borrow caller state.
+    ///
+    /// The first task runs inline on the calling thread, the rest are
+    /// dispatched to the workers. Panics inside tasks are caught on the
+    /// executing thread — so the scope guarantee (no task outlives this
+    /// call) holds even then — and re-raised here once all tasks are done.
+    pub fn run_scoped<'s>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n == 1 {
+            // No workers (or nothing to fan out): plain sequential run.
+            let mut first_panic = None;
+            for task in tasks {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                    first_panic.get_or_insert(p);
+                }
+            }
+            if let Some(p) = first_panic {
+                resume_unwind(p);
+            }
+            return;
+        }
+        type TaskResult = Result<(), Box<dyn std::any::Any + Send + 'static>>;
+        let tx = self.tx.as_ref().expect("pool alive");
+        let (done_tx, done_rx) = channel::<TaskResult>();
+        let mut tasks = tasks.into_iter();
+        let inline = tasks.next().expect("n >= 1");
+        for task in tasks {
+            // SAFETY: the wait loop below blocks until every dispatched
+            // task has signalled completion, so the `'s` borrows strictly
+            // outlive the workers' use of them — the lifetime is erased
+            // only inside this call's dynamic extent.
+            let task: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(task) };
+            let done = done_tx.clone();
+            tx.send(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(task)).map(|_| ());
+                let _ = done.send(result);
+            }))
+            .expect("exec workers alive");
+        }
+        let inline_panic = catch_unwind(AssertUnwindSafe(inline)).err();
+        // Wait for ALL dispatched tasks before returning or re-panicking —
+        // this is what makes the lifetime erasure above sound. Keep the
+        // first worker payload so the real failure stays diagnosable.
+        let mut worker_panic = None;
+        for _ in 1..n {
+            match done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => {
+                    worker_panic.get_or_insert(p);
+                }
+                Err(_) => unreachable!("done senders outlive their tasks"),
+            }
+        }
+        if let Some(p) = inline_panic.or(worker_panic) {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_with_borrows() {
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 8];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest: &mut [u64] = &mut out;
+            for i in 0..8u64 {
+                let slab = rest;
+                let (mine, tail) = slab.split_at_mut(1);
+                rest = tail;
+                tasks.push(Box::new(move || mine[0] = i * i));
+            }
+            debug_assert!(rest.is_empty());
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_survives_across_calls() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..10 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let total = &total;
+                    Box::new(move || {
+                        total.fetch_add(i, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 10 * (0 + 1 + 2 + 3));
+    }
+
+    #[test]
+    fn task_panic_propagates_after_all_tasks_finish() {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let done = &done;
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("shard boom");
+                        }
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }));
+        assert!(result.is_err());
+        assert_eq!(done.load(Ordering::Relaxed), 3);
+        // The pool must still be usable after a panicking scope.
+        let ok = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|_| {
+                let ok = &ok;
+                Box::new(move || {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+}

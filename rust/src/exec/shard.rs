@@ -1,0 +1,216 @@
+//! Nnz-balanced contiguous row sharding.
+//!
+//! The unit of work for the sparse dot-product kernels is the *stored
+//! index*, not the row: low-entropy matrices exhibit exactly the run-length
+//! skew (a few dense rows, many nearly-implicit ones) that makes an
+//! equal-row split unbalanced. A [`ShardPlan`] partitions `0..rows` into
+//! contiguous, disjoint, covering, non-empty shards whose stored-index
+//! counts are as equal as the row granularity allows, computed from prefix
+//! sums over the format's pointer arrays (`row_ptr`/`omega_ptr` for
+//! CER/CSER, `row_ptr` for CSR, uniform `cols` for dense layouts).
+//!
+//! Plans are computed once per layer (at compression or `from_pack` time)
+//! and reused for every product, so planning cost is off the hot path.
+
+use std::ops::Range;
+
+/// A contiguous, disjoint, covering partition of a matrix's rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Shard `i` covers rows `bounds[i]..bounds[i + 1]`; len = shards + 1.
+    bounds: Vec<usize>,
+    /// Work units (stored indices) per shard.
+    work: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Build a plan from per-row work prefix sums.
+    ///
+    /// `prefix.len() == rows + 1`, `prefix[0] == 0`, `prefix[r + 1] -
+    /// prefix[r]` is row `r`'s work (stored-index count). The plan has
+    /// `min(shards, max(rows, 1))` shards; every shard is non-empty
+    /// (except the single shard of a zero-row matrix). Boundaries land on
+    /// the rows closest to the ideal `total·i/shards` work marks, so the
+    /// heaviest row can at worst make one shard heavy — never two.
+    pub fn from_prefix(prefix: &[u64], shards: usize) -> ShardPlan {
+        assert!(
+            !prefix.is_empty() && prefix[0] == 0,
+            "prefix sums must start at 0"
+        );
+        debug_assert!(prefix.windows(2).all(|w| w[1] >= w[0]), "prefix not monotone");
+        let rows = prefix.len() - 1;
+        let shards = shards.max(1).min(rows.max(1));
+        let total = prefix[rows] as u128;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        bounds.push(0usize);
+        for i in 1..shards {
+            let target = (total * i as u128 / shards as u128) as u64;
+            // First row boundary at or past the ideal work mark, clamped so
+            // this shard and every remaining one stay non-empty.
+            let r = prefix.partition_point(|&p| p < target);
+            let lo = bounds[i - 1] + 1;
+            let hi = rows - (shards - i);
+            bounds.push(r.clamp(lo, hi));
+        }
+        bounds.push(rows);
+        let work = bounds
+            .windows(2)
+            .map(|w| prefix[w[1]] - prefix[w[0]])
+            .collect();
+        ShardPlan { bounds, work }
+    }
+
+    /// Plan for uniform per-row cost (dense layouts: every row costs
+    /// `cost_per_row` = cols).
+    pub fn uniform(rows: usize, cost_per_row: u64, shards: usize) -> ShardPlan {
+        let prefix: Vec<u64> = (0..=rows as u64).map(|r| r * cost_per_row).collect();
+        ShardPlan::from_prefix(&prefix, shards)
+    }
+
+    /// Total rows covered by the plan.
+    pub fn rows(&self) -> usize {
+        *self.bounds.last().expect("bounds non-empty")
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Row range of shard `i`.
+    pub fn shard(&self, i: usize) -> Range<usize> {
+        self.bounds[i]..self.bounds[i + 1]
+    }
+
+    /// Iterate over the shard row ranges, in order.
+    pub fn shards(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.shard_count()).map(|i| self.shard(i))
+    }
+
+    /// Work units (stored indices) assigned to shard `i`.
+    pub fn work(&self, i: usize) -> u64 {
+        self.work[i]
+    }
+
+    /// Total work units across all shards.
+    pub fn total_work(&self) -> u64 {
+        self.work.iter().sum()
+    }
+
+    /// Heaviest shard's work relative to the ideal equal split (1.0 =
+    /// perfectly balanced). A plain equal-row split of a skewed matrix
+    /// scores close to `shard_count()`.
+    pub fn max_imbalance(&self) -> f64 {
+        let total = self.total_work();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.shard_count() as f64;
+        self.work.iter().copied().max().unwrap_or(0) as f64 / mean
+    }
+
+    /// Human-readable balance report: per-shard row ranges and nnz counts.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} shard(s) over {} rows, {} nnz (imbalance x{:.2}):",
+            self.shard_count(),
+            self.rows(),
+            self.total_work(),
+            self.max_imbalance()
+        );
+        for i in 0..self.shard_count() {
+            let r = self.shard(i);
+            s.push_str(&format!(" [{}..{}) nnz {}", r.start, r.end, self.work(i)));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(plan: &ShardPlan, rows: usize, requested: usize, prefix: &[u64]) {
+        assert_eq!(plan.rows(), rows);
+        assert_eq!(plan.shard_count(), requested.max(1).min(rows.max(1)));
+        let mut covered = 0usize;
+        for (i, r) in plan.shards().enumerate() {
+            assert_eq!(r.start, covered, "shards must be contiguous");
+            if rows > 0 {
+                assert!(!r.is_empty(), "shard {i} empty");
+            }
+            assert_eq!(plan.work(i), prefix[r.end] - prefix[r.start]);
+            covered = r.end;
+        }
+        assert_eq!(covered, rows, "shards must cover all rows");
+        assert_eq!(plan.total_work(), *prefix.last().unwrap());
+    }
+
+    #[test]
+    fn uniform_costs_split_evenly() {
+        for rows in [1usize, 2, 5, 64, 100] {
+            for shards in [1usize, 2, 4, 7, 100] {
+                let prefix: Vec<u64> = (0..=rows as u64).collect();
+                let plan = ShardPlan::from_prefix(&prefix, shards);
+                check_invariants(&plan, rows, shards, &prefix);
+                let per = rows / plan.shard_count();
+                for r in plan.shards() {
+                    assert!(r.len() >= per, "uniform split should not starve a shard");
+                    assert!(r.len() <= per + 1, "uniform split should be near-even");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_work_balances_by_nnz_not_rows() {
+        // Row 0 carries 900 of 1000 units; rows 1..=9 carry ~11 each.
+        let mut prefix = vec![0u64, 900];
+        for r in 1..10u64 {
+            prefix.push(900 + r * 11);
+        }
+        let rows = prefix.len() - 1;
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        check_invariants(&plan, rows, 4, &prefix);
+        // The heavy row must sit alone in its shard; the other rows share.
+        assert_eq!(plan.shard(0), 0..1);
+        assert_eq!(plan.work(0), 900);
+        // An equal-row split would put heavy+light rows together: imbalance
+        // there is ~3.6x; by-nnz it is bounded by the single heavy row.
+        let by_rows = ShardPlan::uniform(rows, 1, 4);
+        assert!(plan.max_imbalance() <= by_rows.shard_count() as f64);
+        assert!(plan.summary().contains("nnz 900"));
+    }
+
+    #[test]
+    fn all_work_in_one_row_degenerates_gracefully() {
+        let prefix = vec![0u64, 0, 0, 50, 50, 50];
+        let plan = ShardPlan::from_prefix(&prefix, 3);
+        check_invariants(&plan, 5, 3, &prefix);
+        assert_eq!(plan.total_work(), 50);
+    }
+
+    #[test]
+    fn fewer_rows_than_shards() {
+        let prefix = vec![0u64, 4, 9];
+        let plan = ShardPlan::from_prefix(&prefix, 7);
+        check_invariants(&plan, 2, 7, &prefix);
+        assert_eq!(plan.shard_count(), 2);
+    }
+
+    #[test]
+    fn zero_rows_single_empty_shard() {
+        let plan = ShardPlan::from_prefix(&[0], 4);
+        assert_eq!(plan.shard_count(), 1);
+        assert_eq!(plan.rows(), 0);
+        assert!(plan.shard(0).is_empty());
+        assert!((plan.max_imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_total_work_falls_back_to_row_split() {
+        let prefix = vec![0u64; 9]; // 8 rows, no stored indices at all
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        check_invariants(&plan, 8, 4, &prefix);
+    }
+}

@@ -6,6 +6,8 @@
 //! padding. The most frequent element stays implicit (positions absent from
 //! `colI`).
 
+use std::collections::HashMap;
+
 use super::codebook::{frequency_codebook, rank_lookup, value_key};
 use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 
@@ -55,14 +57,17 @@ impl Cser {
         // omega[0] = most frequent; the rest ascending by value.
         let mut omega: Vec<f32> = codebook.iter().map(|&(v, _)| v).collect();
         omega[1..].sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
-        // frequency rank → index into `omega`.
+        // frequency rank → index into `omega`, via a value-key map (a
+        // linear scan per codebook entry would be O(K²) — measurable for
+        // the K=2^12 quantization grids of the retrained pipelines).
+        let omega_pos: HashMap<u32, u32> = omega
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (value_key(v), i as u32))
+            .collect();
         let mut rank_to_omega = vec![0u32; omega.len()];
         for (freq_rank, &(v, _)) in codebook.iter().enumerate() {
-            let oi = omega
-                .iter()
-                .position(|&o| value_key(o) == value_key(v))
-                .expect("codebook value present");
-            rank_to_omega[freq_rank] = oi as u32;
+            rank_to_omega[freq_rank] = omega_pos[&value_key(v)];
         }
 
         let k = omega.len();

@@ -4,7 +4,16 @@
 //! (no multiplies in the inner loop), then scale once by the shared value.
 //! The run's value is implicit in its position: run `j` of a row belongs to
 //! `Ω[1 + j]` (empty/padded runs advance `j` without contributing).
+//!
+//! Every kernel has a row-range entry point for the exec plane's shards;
+//! each shard runs this exact serial inner loop over its own rows, so
+//! parallel output is bit-identical to serial. The Ω[0]-correction sums
+//! (`Σx` per rhs column) are hoisted to once per call — never recomputed
+//! per shard or per 4-lane group.
 
+use std::ops::Range;
+
+use crate::exec::SyncCell;
 use crate::formats::Cer;
 use crate::formats::index::Idx;
 use crate::with_col_indices;
@@ -47,18 +56,48 @@ pub(crate) fn gather_sum<I: Idx>(cols: &[I], x: &[f32]) -> f32 {
     (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
+/// The implicit value Ω[0] (0.0 for an empty codebook, i.e. a 0-element
+/// matrix).
+#[inline]
+fn w0(m: &Cer) -> f32 {
+    m.omega.first().copied().unwrap_or(0.0)
+}
+
 /// `y = M·x` over the CER representation.
 pub fn cer_matvec(m: &Cer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
-    let w0 = m.omega[0];
-    let sum_x: f32 = if w0 != 0.0 { x.iter().sum() } else { 0.0 };
-    with_col_indices!(&m.col_idx, ci => cer_matvec_inner(m, ci, x, y, w0, sum_x));
+    let sum_x = super::correction_sum(w0(m), x);
+    cer_matvec_range_with(m, 0..m.rows(), x, y, sum_x);
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Bit-identical to [`cer_matvec`] over the same rows.
+pub fn cer_matvec_range(m: &Cer, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    let sum_x = super::correction_sum(w0(m), x);
+    cer_matvec_range_with(m, rows, x, y, sum_x);
+}
+
+/// Range kernel with the correction `Σx` precomputed by the caller, so
+/// every shard of one product shares the identical sum.
+pub(crate) fn cer_matvec_range_with(
+    m: &Cer,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    sum_x: f32,
+) {
+    let w = w0(m);
+    with_col_indices!(&m.col_idx, ci => cer_matvec_inner(m, ci, rows, x, y, w, sum_x));
 }
 
 fn cer_matvec_inner<I: Idx>(
     m: &Cer,
     col_idx: &[I],
+    rows: Range<usize>,
     x: &[f32],
     y: &mut [f32],
     w0: f32,
@@ -68,7 +107,7 @@ fn cer_matvec_inner<I: Idx>(
     let omega_ptr = &m.omega_ptr;
     if w0 == 0.0 {
         // Hot path (decomposed matrices): no correction bookkeeping.
-        for (r, out) in y.iter_mut().enumerate() {
+        for (out, r) in y.iter_mut().zip(rows) {
             let (s, e) = m.row_runs(r);
             let mut acc = 0.0f32;
             let mut start = omega_ptr[s] as usize;
@@ -84,7 +123,7 @@ fn cer_matvec_inner<I: Idx>(
         }
         return;
     }
-    for (r, out) in y.iter_mut().enumerate() {
+    for (out, r) in y.iter_mut().zip(rows) {
         let (s, e) = m.row_runs(r);
         let mut acc = 0.0f32;
         // Σ of x over *all* listed positions of this row — needed for the
@@ -130,48 +169,79 @@ pub fn cer_matmul_colmajor(m: &Cer, x: &[f32], y: &mut [f32], l: usize) {
     let (rows, n) = (m.rows(), m.cols());
     assert_eq!(x.len(), n * l, "rhs shape");
     assert_eq!(y.len(), rows * l, "out shape");
-    let w0 = m.omega[0];
-    let mut c = 0usize;
-    while c + 4 <= l {
-        with_col_indices!(&m.col_idx, ci => {
+    let col_sums = super::correction_col_sums(w0(m), x, n, l);
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { cer_matmul_cells(m, 0..rows, x, cells, l, &col_sums) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// `col_sums` carries the precomputed per-column correction sums (len `l`
+/// when Ω[0] ≠ 0, else empty) shared by every shard.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn cer_matmul_cells(
+    m: &Cer,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    col_sums: &[f32],
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    let w0 = w0(m);
+    debug_assert!(w0 == 0.0 || col_sums.len() == l);
+    with_col_indices!(&m.col_idx, ci => {
+        let mut c = 0usize;
+        while c + 4 <= l {
             let xs: [&[f32]; 4] = [
                 &x[c * n..(c + 1) * n],
                 &x[(c + 1) * n..(c + 2) * n],
                 &x[(c + 2) * n..(c + 3) * n],
                 &x[(c + 3) * n..(c + 4) * n],
             ];
-            cer_matmul4_inner(m, ci, &xs, y, c, w0);
-        });
-        c += 4;
-    }
-    for c in c..l {
-        let (xc, yc) = (&x[c * n..(c + 1) * n], &mut y[c * rows..(c + 1) * rows]);
-        cer_matvec(m, xc, yc);
-    }
+            let sum4 = if w0 != 0.0 {
+                [col_sums[c], col_sums[c + 1], col_sums[c + 2], col_sums[c + 3]]
+            } else {
+                [0.0; 4]
+            };
+            cer_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4);
+            c += 4;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            let sum_x = if w0 != 0.0 { col_sums[c] } else { 0.0 };
+            cer_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x);
+        }
+    });
 }
 
-fn cer_matmul4_inner<I: Idx>(
+/// # Safety
+/// Same contract as [`cer_matmul_cells`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn cer_matmul4_inner<I: Idx>(
     m: &Cer,
     col_idx: &[I],
+    rows: Range<usize>,
     xs: &[&[f32]; 4],
-    y: &mut [f32],
+    y: &[SyncCell],
     c: usize,
     w0: f32,
+    sum_x: [f32; 4],
 ) {
-    let rows = m.rows();
+    let m_total = m.rows();
     let omega = &m.omega;
     let omega_ptr = &m.omega_ptr;
-    let sum_x: [f32; 4] = if w0 != 0.0 {
-        [
-            xs[0].iter().sum(),
-            xs[1].iter().sum(),
-            xs[2].iter().sum(),
-            xs[3].iter().sum(),
-        ]
-    } else {
-        [0.0; 4]
-    };
-    for r in 0..rows {
+    for r in rows {
         let (s, e) = m.row_runs(r);
         let mut acc = [0.0f32; 4];
         let mut listed = [0.0f32; 4];
@@ -193,7 +263,7 @@ fn cer_matmul4_inner<I: Idx>(
             if w0 != 0.0 {
                 v += w0 * (sum_x[lane] - listed[lane]);
             }
-            y[(c + lane) * rows + r] = v;
+            y[(c + lane) * m_total + r].set(v);
         }
     }
 }
@@ -239,5 +309,18 @@ mod tests {
         let mut y = vec![0.0; 1];
         cer_matvec(&cer, &x, &mut y);
         assert_eq!(y[0], 5.0);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let cer = Cer::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.4 - 2.0).collect();
+        let mut want = vec![0.0; 5];
+        cer_matvec(&cer, &x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, b) = got.split_at_mut(3);
+        cer_matvec_range(&cer, 0..3, &x, a);
+        cer_matvec_range(&cer, 3..5, &x, b);
+        assert_eq!(got, want);
     }
 }

@@ -2,23 +2,58 @@
 //!
 //! Identical to the CER kernel except each run's value is named explicitly
 //! by the `ΩI` array (`omega[omega_idx[slot]]`) instead of positionally.
+//! Row-range entry points and correction-sum hoisting mirror `cer_k` — see
+//! that module for the determinism notes.
 
+use std::ops::Range;
+
+use crate::exec::SyncCell;
 use crate::formats::Cser;
 use crate::formats::index::Idx;
 use crate::with_col_indices;
+
+/// The implicit value Ω[0] (0.0 for an empty codebook, i.e. a 0-element
+/// matrix).
+#[inline]
+fn w0(m: &Cser) -> f32 {
+    m.omega.first().copied().unwrap_or(0.0)
+}
 
 /// `y = M·x` over the CSER representation.
 pub fn cser_matvec(m: &Cser, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
-    let w0 = m.omega[0];
-    let sum_x: f32 = if w0 != 0.0 { x.iter().sum() } else { 0.0 };
-    with_col_indices!(&m.col_idx, ci => cser_matvec_inner(m, ci, x, y, w0, sum_x));
+    let sum_x = super::correction_sum(w0(m), x);
+    cser_matvec_range_with(m, 0..m.rows(), x, y, sum_x);
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Bit-identical to [`cser_matvec`] over the same rows.
+pub fn cser_matvec_range(m: &Cser, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    let sum_x = super::correction_sum(w0(m), x);
+    cser_matvec_range_with(m, rows, x, y, sum_x);
+}
+
+/// Range kernel with the correction `Σx` precomputed by the caller, so
+/// every shard of one product shares the identical sum.
+pub(crate) fn cser_matvec_range_with(
+    m: &Cser,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    sum_x: f32,
+) {
+    let w = w0(m);
+    with_col_indices!(&m.col_idx, ci => cser_matvec_inner(m, ci, rows, x, y, w, sum_x));
 }
 
 fn cser_matvec_inner<I: Idx>(
     m: &Cser,
     col_idx: &[I],
+    rows: Range<usize>,
     x: &[f32],
     y: &mut [f32],
     w0: f32,
@@ -29,7 +64,7 @@ fn cser_matvec_inner<I: Idx>(
     let omega_ptr = &m.omega_ptr;
     if w0 == 0.0 {
         // Hot path (decomposed matrices) — see cer_k::gather_sum.
-        for (r, out) in y.iter_mut().enumerate() {
+        for (out, r) in y.iter_mut().zip(rows) {
             let (s, e) = m.row_runs(r);
             let mut acc = 0.0f32;
             let mut start = omega_ptr[s] as usize;
@@ -43,7 +78,7 @@ fn cser_matvec_inner<I: Idx>(
         }
         return;
     }
-    for (r, out) in y.iter_mut().enumerate() {
+    for (out, r) in y.iter_mut().zip(rows) {
         let (s, e) = m.row_runs(r);
         let mut acc = 0.0f32;
         let mut listed = 0.0f32;
@@ -66,49 +101,80 @@ pub fn cser_matmul_colmajor(m: &Cser, x: &[f32], y: &mut [f32], l: usize) {
     let (rows, n) = (m.rows(), m.cols());
     assert_eq!(x.len(), n * l, "rhs shape");
     assert_eq!(y.len(), rows * l, "out shape");
-    let w0 = m.omega[0];
-    let mut c = 0usize;
-    while c + 4 <= l {
-        with_col_indices!(&m.col_idx, ci => {
+    let col_sums = super::correction_col_sums(w0(m), x, n, l);
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { cser_matmul_cells(m, 0..rows, x, cells, l, &col_sums) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// `col_sums` carries the precomputed per-column correction sums (len `l`
+/// when Ω[0] ≠ 0, else empty) shared by every shard.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn cser_matmul_cells(
+    m: &Cser,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    col_sums: &[f32],
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    let w0 = w0(m);
+    debug_assert!(w0 == 0.0 || col_sums.len() == l);
+    with_col_indices!(&m.col_idx, ci => {
+        let mut c = 0usize;
+        while c + 4 <= l {
             let xs: [&[f32]; 4] = [
                 &x[c * n..(c + 1) * n],
                 &x[(c + 1) * n..(c + 2) * n],
                 &x[(c + 2) * n..(c + 3) * n],
                 &x[(c + 3) * n..(c + 4) * n],
             ];
-            cser_matmul4_inner(m, ci, &xs, y, c, w0);
-        });
-        c += 4;
-    }
-    for c in c..l {
-        let (xc, yc) = (&x[c * n..(c + 1) * n], &mut y[c * rows..(c + 1) * rows]);
-        cser_matvec(m, xc, yc);
-    }
+            let sum4 = if w0 != 0.0 {
+                [col_sums[c], col_sums[c + 1], col_sums[c + 2], col_sums[c + 3]]
+            } else {
+                [0.0; 4]
+            };
+            cser_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4);
+            c += 4;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            let sum_x = if w0 != 0.0 { col_sums[c] } else { 0.0 };
+            cser_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x);
+        }
+    });
 }
 
-fn cser_matmul4_inner<I: Idx>(
+/// # Safety
+/// Same contract as [`cser_matmul_cells`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn cser_matmul4_inner<I: Idx>(
     m: &Cser,
     col_idx: &[I],
+    rows: Range<usize>,
     xs: &[&[f32]; 4],
-    y: &mut [f32],
+    y: &[SyncCell],
     c: usize,
     w0: f32,
+    sum_x: [f32; 4],
 ) {
-    let rows = m.rows();
+    let m_total = m.rows();
     let omega = &m.omega;
     let omega_idx = &m.omega_idx;
     let omega_ptr = &m.omega_ptr;
-    let sum_x: [f32; 4] = if w0 != 0.0 {
-        [
-            xs[0].iter().sum(),
-            xs[1].iter().sum(),
-            xs[2].iter().sum(),
-            xs[3].iter().sum(),
-        ]
-    } else {
-        [0.0; 4]
-    };
-    for r in 0..rows {
+    for r in rows {
         let (s, e) = m.row_runs(r);
         let mut acc = [0.0f32; 4];
         let mut listed = [0.0f32; 4];
@@ -128,7 +194,7 @@ fn cser_matmul4_inner<I: Idx>(
             if w0 != 0.0 {
                 v += w0 * (sum_x[lane] - listed[lane]);
             }
-            y[(c + lane) * rows + r] = v;
+            y[(c + lane) * m_total + r].set(v);
         }
     }
 }
@@ -170,5 +236,18 @@ mod tests {
         let mut y = vec![0.0; 1];
         cser_matvec(&cser, &x, &mut y);
         assert_eq!(y[0], 3.0 + 6.0 + 0.0 + 8.0);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let cser = Cser::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.15 - 1.0).collect();
+        let mut want = vec![0.0; 5];
+        cser_matvec(&cser, &x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, b) = got.split_at_mut(1);
+        cser_matvec_range(&cser, 0..1, &x, a);
+        cser_matvec_range(&cser, 1..5, &x, b);
+        assert_eq!(got, want);
     }
 }

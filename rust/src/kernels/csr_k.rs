@@ -1,5 +1,10 @@
 //! Algorithm 2 — CSR dot product: multiply-add over the non-zero entries.
+//! Includes the 4-wide multi-rhs kernel (one index/value stream pass per 4
+//! samples) and the row-range entry points used by the exec plane.
 
+use std::ops::Range;
+
+use crate::exec::SyncCell;
 use crate::formats::Csr;
 use crate::formats::index::Idx;
 use crate::with_col_indices;
@@ -8,17 +13,31 @@ use crate::with_col_indices;
 pub fn csr_matvec(m: &Csr, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
-    with_col_indices!(&m.col_idx, ci => csr_matvec_inner(&m.values, ci, &m.row_ptr, x, y));
+    with_col_indices!(&m.col_idx, ci => {
+        csr_matvec_inner(&m.values, ci, &m.row_ptr, 0..m.rows(), x, y)
+    });
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Bit-identical to [`csr_matvec`] over the same rows.
+pub fn csr_matvec_range(m: &Csr, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.col_idx, ci => {
+        csr_matvec_inner(&m.values, ci, &m.row_ptr, rows, x, y)
+    });
 }
 
 fn csr_matvec_inner<I: Idx>(
     values: &[f32],
     col_idx: &[I],
     row_ptr: &[u32],
+    rows: Range<usize>,
     x: &[f32],
     y: &mut [f32],
 ) {
-    for (r, out) in y.iter_mut().enumerate() {
+    for (out, r) in y.iter_mut().zip(rows) {
         let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
         // Two independent FMA chains + bounds-check elision (§Perf
         // iteration 1); construction guarantees col_idx[i] < cols ==
@@ -39,6 +58,99 @@ fn csr_matvec_inner<I: Idx>(
             acc0 += v * x[c.to_usize()];
         }
         *out = acc0 + acc1;
+    }
+}
+
+/// `Y = M·X` with `X` column-major (`n × l`): four rhs columns per pass so
+/// every stored value/index pair is loaded once per 4 samples. Each output
+/// column is bit-identical to [`csr_matvec`] on that column (the per-lane
+/// accumulator chains mirror the scalar kernel's exactly).
+pub fn csr_matmul_colmajor(m: &Csr, x: &[f32], y: &mut [f32], l: usize) {
+    assert_eq!(x.len(), m.cols() * l, "rhs shape");
+    assert_eq!(y.len(), m.rows() * l, "out shape");
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { csr_matmul_cells(m, 0..m.rows(), x, cells, l) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn csr_matmul_cells(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    with_col_indices!(&m.col_idx, ci => {
+        let mut c = 0usize;
+        while c + 4 <= l {
+            let xs: [&[f32]; 4] = [
+                &x[c * n..(c + 1) * n],
+                &x[(c + 1) * n..(c + 2) * n],
+                &x[(c + 2) * n..(c + 3) * n],
+                &x[(c + 3) * n..(c + 4) * n],
+            ];
+            csr_matmul4_inner(&m.values, ci, &m.row_ptr, rows.clone(), &xs, y, c, m_total);
+            c += 4;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            csr_matvec_inner(&m.values, ci, &m.row_ptr, rows.clone(), &x[c * n..(c + 1) * n], yc);
+        }
+    });
+}
+
+/// # Safety
+/// Same contract as [`csr_matmul_cells`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn csr_matmul4_inner<I: Idx>(
+    values: &[f32],
+    col_idx: &[I],
+    row_ptr: &[u32],
+    rows: Range<usize>,
+    xs: &[&[f32]; 4],
+    y: &[SyncCell],
+    c: usize,
+    m_total: usize,
+) {
+    for r in rows {
+        let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+        let (vals, cols) = (&values[s..e], &col_idx[s..e]);
+        // Mirror csr_matvec_inner's two accumulator chains per lane so
+        // every output column stays bit-identical to the scalar kernel.
+        let mut acc0 = [0.0f32; 4];
+        let mut acc1 = [0.0f32; 4];
+        let mut vch = vals.chunks_exact(2);
+        let mut cch = cols.chunks_exact(2);
+        for (v2, c2) in vch.by_ref().zip(cch.by_ref()) {
+            let (i0, i1) = (c2[0].to_usize(), c2[1].to_usize());
+            debug_assert!(i0 < xs[0].len() && i1 < xs[0].len());
+            for lane in 0..4 {
+                acc0[lane] += v2[0] * *xs[lane].get_unchecked(i0);
+                acc1[lane] += v2[1] * *xs[lane].get_unchecked(i1);
+            }
+        }
+        for (v, cc) in vch.remainder().iter().zip(cch.remainder()) {
+            let i = cc.to_usize();
+            for lane in 0..4 {
+                acc0[lane] += v * xs[lane][i];
+            }
+        }
+        for lane in 0..4 {
+            y[(c + lane) * m_total + r].set(acc0[lane] + acc1[lane]);
+        }
     }
 }
 
@@ -65,5 +177,33 @@ mod tests {
         let mut y = vec![7.0; 2];
         csr_matvec(&csr, &[3.0, 4.0], &mut y);
         assert_eq!(y, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let csr = Csr::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let mut want = vec![0.0; 5];
+        csr_matvec(&csr, &x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, b) = got.split_at_mut(2);
+        csr_matvec_range(&csr, 0..2, &x, a);
+        csr_matvec_range(&csr, 2..5, &x, b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_per_column_matvec() {
+        let csr = Csr::from_dense(&paper_example_matrix());
+        for l in [1usize, 4, 5, 9] {
+            let x: Vec<f32> = (0..12 * l).map(|i| (i as f32) * 0.21 - 1.3).collect();
+            let mut got = vec![0.0; 5 * l];
+            csr_matmul_colmajor(&csr, &x, &mut got, l);
+            for c in 0..l {
+                let mut want = vec![0.0; 5];
+                csr_matvec(&csr, &x[c * 12..(c + 1) * 12], &mut want);
+                assert_eq!(&got[c * 5..(c + 1) * 5], &want[..], "column {c}");
+            }
+        }
     }
 }

@@ -1,5 +1,10 @@
-//! Algorithm 1 — dense dot product (the standard 3-loop nest).
+//! Algorithm 1 — dense dot product (the standard 3-loop nest), plus the
+//! 4-wide multi-rhs variant and the row-range entry points used by the
+//! exec plane's shards.
 
+use std::ops::Range;
+
+use crate::exec::SyncCell;
 use crate::formats::Dense;
 
 /// `y = M·x` over the dense representation.
@@ -9,13 +14,87 @@ use crate::formats::Dense;
 pub fn dense_matvec(m: &Dense, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
-    for (r, out) in y.iter_mut().enumerate() {
+    dense_matvec_rows(m, 0..m.rows(), x, y);
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Identical inner loop — hence bit-identical output —
+/// to [`dense_matvec`] over the same rows.
+pub fn dense_matvec_range(m: &Dense, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    dense_matvec_rows(m, rows, x, y);
+}
+
+fn dense_matvec_rows(m: &Dense, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    for (out, r) in y.iter_mut().zip(rows) {
         let row = m.row(r);
         let mut acc = 0.0f32;
         for (a, b) in row.iter().zip(x) {
             acc += a * b;
         }
         *out = acc;
+    }
+}
+
+/// `Y = M·X` with `X` column-major (`n × l`), `Y` column-major (`m × l`):
+/// four rhs columns per pass so each weight row streams through the cache
+/// once per 4 samples. Every output column is bit-identical to
+/// [`dense_matvec`] on that column (same per-row accumulation order).
+pub fn dense_matmul_colmajor(m: &Dense, x: &[f32], y: &mut [f32], l: usize) {
+    assert_eq!(x.len(), m.cols() * l, "rhs shape");
+    assert_eq!(y.len(), m.rows() * l, "out shape");
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { dense_matmul_cells(m, 0..m.rows(), x, cells, l) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn dense_matmul_cells(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    let mut c = 0usize;
+    while c + 4 <= l {
+        let x0 = &x[c * n..(c + 1) * n];
+        let x1 = &x[(c + 1) * n..(c + 2) * n];
+        let x2 = &x[(c + 2) * n..(c + 3) * n];
+        let x3 = &x[(c + 3) * n..(c + 4) * n];
+        for r in rows.clone() {
+            let row = &m.row(r)[..n];
+            let mut acc = [0.0f32; 4];
+            for i in 0..n {
+                let w = row[i];
+                acc[0] += w * x0[i];
+                acc[1] += w * x1[i];
+                acc[2] += w * x2[i];
+                acc[3] += w * x3[i];
+            }
+            y[c * m_total + r].set(acc[0]);
+            y[(c + 1) * m_total + r].set(acc[1]);
+            y[(c + 2) * m_total + r].set(acc[2]);
+            y[(c + 3) * m_total + r].set(acc[3]);
+        }
+        c += 4;
+    }
+    for c in c..l {
+        let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+        // SAFETY: this shard exclusively owns rows `rows` of every column.
+        let yc = crate::exec::cells_as_mut(seg);
+        dense_matvec_rows(m, rows.clone(), &x[c * n..(c + 1) * n], yc);
     }
 }
 
@@ -42,5 +121,43 @@ mod tests {
         let x = vec![0.0; 2];
         let mut y = vec![0.0; 2];
         dense_matvec(&m, &x, &mut y);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let m = Dense::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+            vec![-1.0, 0.5, 2.5],
+        ]);
+        let x = vec![0.5, -1.5, 2.0];
+        let mut want = vec![0.0; 4];
+        dense_matvec(&m, &x, &mut want);
+        let mut got = vec![0.0; 4];
+        let (a, b) = got.split_at_mut(1);
+        dense_matvec_range(&m, 0..1, &x, a);
+        let (b1, b2) = b.split_at_mut(2);
+        dense_matvec_range(&m, 1..3, &x, b1);
+        dense_matvec_range(&m, 3..4, &x, b2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_per_column_matvec() {
+        let m = Dense::from_rows(&[
+            vec![0.1, -0.7, 1.3, 0.0],
+            vec![2.0, 0.25, -0.5, 1.0],
+        ]);
+        for l in [1usize, 3, 4, 5, 8, 9] {
+            let x: Vec<f32> = (0..4 * l).map(|i| (i as f32) * 0.37 - 1.1).collect();
+            let mut got = vec![0.0; 2 * l];
+            dense_matmul_colmajor(&m, &x, &mut got, l);
+            for c in 0..l {
+                let mut want = vec![0.0; 2];
+                dense_matvec(&m, &x[c * 4..(c + 1) * 4], &mut want);
+                assert_eq!(&got[c * 2..(c + 1) * 2], &want[..], "column {c}");
+            }
+        }
     }
 }

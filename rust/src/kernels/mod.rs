@@ -11,6 +11,18 @@
 //! not pre-decomposed per Appendix A.1), the kernels apply the
 //! decomposition correction `y += Ω[0]·(Σx − Σ_listed x)` transparently, so
 //! every kernel is exact for every representable matrix.
+//!
+//! ## Multi-core execution
+//!
+//! Every kernel additionally exposes a `*_range(rows, …)` entry point that
+//! computes a contiguous row slice of the output with the *same* serial
+//! inner loop — the unit the [`crate::exec`] plane schedules. The sharded
+//! drivers ([`AnyMatrix::matvec_sharded`] /
+//! [`AnyMatrix::matmul_colmajor_sharded`]) partition rows with an
+//! nnz-balanced [`crate::exec::ShardPlan`] and run one shard per thread;
+//! because no row's reduction order changes and the Ω[0]-correction sums
+//! are computed once per call and shared, the parallel output is
+//! **bit-identical** to the serial output at every thread count.
 
 pub(crate) mod cer_k;
 pub(crate) mod cser_k;
@@ -18,13 +30,38 @@ mod csr_k;
 mod dense_k;
 pub mod packed;
 
-pub use cer_k::cer_matvec;
-pub use cser_k::cser_matvec;
-pub use csr_k::csr_matvec;
-pub use dense_k::dense_matvec;
+pub use cer_k::{cer_matmul_colmajor, cer_matvec, cer_matvec_range};
+pub use cser_k::{cser_matmul_colmajor, cser_matvec, cser_matvec_range};
+pub use csr_k::{csr_matmul_colmajor, csr_matvec, csr_matvec_range};
+pub use dense_k::{dense_matmul_colmajor, dense_matvec, dense_matvec_range};
 pub use packed::PackedDense;
 
+use std::ops::Range;
+
+use crate::exec::{self, ShardPlan, SyncCell, ThreadPool};
 use crate::formats::{Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown};
+
+/// `Σx` for the Ω[0]-decomposition correction — the single definition all
+/// kernels and drivers share, so every shard of one product (and the
+/// serial path) sums in the identical order. 0.0 (unused) when `w0 == 0`.
+pub(crate) fn correction_sum(w0: f32, x: &[f32]) -> f32 {
+    if w0 != 0.0 {
+        x.iter().sum()
+    } else {
+        0.0
+    }
+}
+
+/// Per-rhs-column `Σx` (columns of length `n`, `l` of them), computed once
+/// per matmul call — never per shard or per 4-lane group. Empty when no
+/// correction applies.
+pub(crate) fn correction_col_sums(w0: f32, x: &[f32], n: usize, l: usize) -> Vec<f32> {
+    if w0 != 0.0 {
+        (0..l).map(|c| x[c * n..(c + 1) * n].iter().sum()).collect()
+    } else {
+        Vec::new()
+    }
+}
 
 /// Type-erased representation — what the coordinator stores per layer after
 /// format selection.
@@ -102,6 +139,106 @@ impl AnyMatrix {
         }
     }
 
+    /// Shard entry: compute rows `rows` of `y = M·x` into `y`
+    /// (`y.len() == rows.len()`). Bit-identical to [`AnyMatrix::matvec`]
+    /// over the same rows.
+    pub fn matvec_range(&self, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+        match self {
+            AnyMatrix::Dense(m) => dense_matvec_range(m, rows, x, y),
+            AnyMatrix::Csr(m) => csr_matvec_range(m, rows, x, y),
+            AnyMatrix::Cer(m) => cer_matvec_range(m, rows, x, y),
+            AnyMatrix::Cser(m) => cser_matvec_range(m, rows, x, y),
+        }
+    }
+
+    /// Range dispatch with the Ω[0]-correction `Σx` precomputed by the
+    /// caller (ignored by dense/CSR), so every shard of one product shares
+    /// the identical sum.
+    fn matvec_range_with(&self, rows: Range<usize>, x: &[f32], y: &mut [f32], sum_x: f32) {
+        match self {
+            AnyMatrix::Dense(m) => dense_k::dense_matvec_range(m, rows, x, y),
+            AnyMatrix::Csr(m) => csr_k::csr_matvec_range(m, rows, x, y),
+            AnyMatrix::Cer(m) => cer_k::cer_matvec_range_with(m, rows, x, y, sum_x),
+            AnyMatrix::Cser(m) => cser_k::cser_matvec_range_with(m, rows, x, y, sum_x),
+        }
+    }
+
+    /// The implicit codebook value Ω[0] when this format carries the
+    /// decomposition correction (0.0 otherwise — also for dense/CSR,
+    /// which store every non-zero explicitly).
+    fn correction_w0(&self) -> f32 {
+        match self {
+            AnyMatrix::Cer(m) => m.omega.first().copied().unwrap_or(0.0),
+            AnyMatrix::Cser(m) => m.omega.first().copied().unwrap_or(0.0),
+            _ => 0.0,
+        }
+    }
+
+    fn rhs_sum(&self, x: &[f32]) -> f32 {
+        correction_sum(self.correction_w0(), x)
+    }
+
+    fn rhs_col_sums(&self, x: &[f32], l: usize) -> Vec<f32> {
+        correction_col_sums(self.correction_w0(), x, self.cols(), l)
+    }
+
+    /// Stored-index (work-unit) prefix sums over rows: `prefix[r]` is the
+    /// work before row `r`, `prefix.len() == rows + 1`. CER/CSER count the
+    /// colI span via `omega_ptr`/`row_ptr`, CSR uses `row_ptr`, dense
+    /// costs `cols` per row — the per-format quantities the exec plane
+    /// balances shards by.
+    pub fn work_prefix(&self) -> Vec<u64> {
+        match self {
+            AnyMatrix::Dense(m) => {
+                let cols = m.cols() as u64;
+                (0..=m.rows() as u64).map(|r| r * cols).collect()
+            }
+            AnyMatrix::Csr(m) => m.row_ptr.iter().map(|&p| p as u64).collect(),
+            AnyMatrix::Cer(m) => m
+                .row_ptr
+                .iter()
+                .map(|&s| m.omega_ptr[s as usize] as u64)
+                .collect(),
+            AnyMatrix::Cser(m) => m
+                .row_ptr
+                .iter()
+                .map(|&s| m.omega_ptr[s as usize] as u64)
+                .collect(),
+        }
+    }
+
+    /// Nnz-balanced contiguous row partition for `shards`-way execution.
+    /// Computed once per layer and reused for every product.
+    pub fn shard_plan(&self, shards: usize) -> ShardPlan {
+        ShardPlan::from_prefix(&self.work_prefix(), shards)
+    }
+
+    /// Parallel `y = M·x` over `plan`'s shards. Bit-identical to
+    /// [`AnyMatrix::matvec`] at every thread count: each row keeps its
+    /// serial reduction order and the Ω[0]-correction `Σx` is computed
+    /// once and shared by all shards. Single-shard plans and worker-less
+    /// pools take the serial path unchanged.
+    pub fn matvec_sharded(&self, x: &[f32], y: &mut [f32], plan: &ShardPlan, pool: &ThreadPool) {
+        assert_eq!(x.len(), self.cols(), "x length");
+        assert_eq!(y.len(), self.rows(), "y length");
+        assert_eq!(plan.rows(), self.rows(), "plan/matrix row mismatch");
+        if plan.shard_count() <= 1 || pool.workers() == 0 {
+            return self.matvec(x, y);
+        }
+        let sum_x = self.rhs_sum(x);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(plan.shard_count());
+        let mut rest: &mut [f32] = y;
+        for r in plan.shards() {
+            let slab = rest;
+            let (mine, tail) = slab.split_at_mut(r.len());
+            rest = tail;
+            tasks.push(Box::new(move || self.matvec_range_with(r, x, mine, sum_x)));
+        }
+        debug_assert!(rest.is_empty());
+        pool.run_scoped(tasks);
+    }
+
     /// `.cerpack` payload codec: one format tag byte plus 3 reserved
     /// bytes, then the selected format's own section encoding. Returns
     /// the byte accounting (total appended / bulk-array bytes).
@@ -139,21 +276,85 @@ impl AnyMatrix {
 
     /// `Y = M·X` with `X` column-major (`n × l`), `Y` column-major (`m × l`).
     ///
-    /// CER/CSER use the 4-wide multi-rhs kernels (one index-stream pass per
-    /// 4 samples — §Perf iteration 4); dense/CSR fall back to per-column
-    /// matvec.
+    /// Every format uses its 4-wide multi-rhs kernel (one weight-stream
+    /// pass per 4 samples — §Perf iteration 4); dense/CSR outputs are
+    /// bit-identical to per-column [`AnyMatrix::matvec`].
     pub fn matmul_colmajor(&self, x: &[f32], y: &mut [f32], l: usize) {
         let (m, n) = (self.rows(), self.cols());
         assert_eq!(x.len(), n * l, "rhs shape");
         assert_eq!(y.len(), m * l, "out shape");
+        let sums = self.rhs_col_sums(x, l);
+        let cells = exec::as_cells(y);
+        // SAFETY: `y` is exclusively borrowed and this single call covers
+        // all rows — no concurrent writer exists.
+        unsafe { self.matmul_cells(0..m, x, cells, l, &sums) };
+    }
+
+    /// Shard entry: compute rows `rows` of `Y = M·X` into the *full-size*
+    /// column-major `y` (`rows() × l`); other rows are left untouched.
+    pub fn matmul_colmajor_range(&self, rows: Range<usize>, x: &[f32], y: &mut [f32], l: usize) {
+        let (m, n) = (self.rows(), self.cols());
+        assert!(rows.start <= rows.end && rows.end <= m, "row range");
+        assert_eq!(x.len(), n * l, "rhs shape");
+        assert_eq!(y.len(), m * l, "out shape");
+        let sums = self.rhs_col_sums(x, l);
+        let cells = exec::as_cells(y);
+        // SAFETY: `y` is exclusively borrowed — no concurrent writer.
+        unsafe { self.matmul_cells(rows, x, cells, l, &sums) };
+    }
+
+    /// Format dispatch for the cell-writing matmul kernels.
+    ///
+    /// # Safety
+    /// No other thread may access rows `rows` of `y` during the call.
+    unsafe fn matmul_cells(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &[SyncCell],
+        l: usize,
+        col_sums: &[f32],
+    ) {
         match self {
-            AnyMatrix::Cer(c) => return cer_k::cer_matmul_colmajor(c, x, y, l),
-            AnyMatrix::Cser(c) => return cser_k::cser_matmul_colmajor(c, x, y, l),
-            _ => {}
+            AnyMatrix::Dense(m) => dense_k::dense_matmul_cells(m, rows, x, y, l),
+            AnyMatrix::Csr(m) => csr_k::csr_matmul_cells(m, rows, x, y, l),
+            AnyMatrix::Cer(m) => cer_k::cer_matmul_cells(m, rows, x, y, l, col_sums),
+            AnyMatrix::Cser(m) => cser_k::cser_matmul_cells(m, rows, x, y, l, col_sums),
         }
-        for c in 0..l {
-            self.matvec(&x[c * n..(c + 1) * n], &mut y[c * m..(c + 1) * m]);
+    }
+
+    /// Parallel `Y = M·X` over `plan`'s shards — the server batch path.
+    /// Bit-identical to [`AnyMatrix::matmul_colmajor`] at every thread
+    /// count (same per-row reduction order; correction column sums are
+    /// computed once per call, not per shard or per 4-lane group).
+    pub fn matmul_colmajor_sharded(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        l: usize,
+        plan: &ShardPlan,
+        pool: &ThreadPool,
+    ) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(x.len(), n * l, "rhs shape");
+        assert_eq!(y.len(), m * l, "out shape");
+        assert_eq!(plan.rows(), m, "plan/matrix row mismatch");
+        if plan.shard_count() <= 1 || pool.workers() == 0 {
+            return self.matmul_colmajor(x, y, l);
         }
+        let sums = self.rhs_col_sums(x, l);
+        let sums_ref: &[f32] = &sums;
+        let cells = exec::as_cells(y);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = plan
+            .shards()
+            .map(|r| {
+                // SAFETY: plan shards are disjoint and covering, so each
+                // task writes a private row range of `y`.
+                Box::new(move || unsafe { self.matmul_cells(r, x, cells, l, sums_ref) })
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
     }
 }
 

@@ -7,6 +7,9 @@
 //! multiplying — the paper measures this at ≈47% slower than plain dense on
 //! VGG-16. `repro packed-dense` (E15) reproduces that comparison.
 
+use std::ops::Range;
+
+use crate::exec::ShardPlan;
 use crate::formats::{Dense, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 use crate::formats::codebook::{frequency_codebook, rank_lookup, value_key};
 
@@ -78,7 +81,21 @@ impl PackedDense {
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols, "x length");
         assert_eq!(y.len(), self.rows, "y length");
-        for (r, out) in y.iter_mut().enumerate() {
+        self.matvec_rows(0..self.rows, x, y);
+    }
+
+    /// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot
+    /// per row of the range). Same per-row decode order as
+    /// [`PackedDense::matvec`], hence bit-identical over the same rows.
+    pub fn matvec_range(&self, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+        assert!(rows.start <= rows.end && rows.end <= self.rows, "row range");
+        assert_eq!(x.len(), self.cols, "x length");
+        assert_eq!(y.len(), rows.len(), "y length");
+        self.matvec_rows(rows, x, y);
+    }
+
+    fn matvec_rows(&self, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+        for (out, r) in y.iter_mut().zip(rows) {
             let base = r * self.cols;
             let mut acc = 0.0f32;
             for (c, xv) in x.iter().enumerate() {
@@ -86,6 +103,12 @@ impl PackedDense {
             }
             *out = acc;
         }
+    }
+
+    /// Row-shard plan for the exec plane: every row costs `cols` decodes,
+    /// so the balanced partition is uniform in rows.
+    pub fn shard_plan(&self, shards: usize) -> ShardPlan {
+        ShardPlan::uniform(self.rows, self.cols as u64, shards)
     }
 }
 
@@ -166,6 +189,23 @@ mod tests {
         let dense_bits = m.storage().total_bits();
         let packed_bits = p.storage().total_bits();
         assert!(packed_bits < dense_bits / 4 + 128 * 32 + 64);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let m = paper_example_matrix();
+        let p = PackedDense::from_dense(&m);
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut want = vec![0.0; 5];
+        p.matvec(&x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, b) = got.split_at_mut(2);
+        p.matvec_range(0..2, &x, a);
+        p.matvec_range(2..5, &x, b);
+        assert_eq!(got, want);
+        let plan = p.shard_plan(3);
+        assert_eq!(plan.rows(), 5);
+        assert_eq!(plan.shard_count(), 3);
     }
 
     #[test]

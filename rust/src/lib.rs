@@ -38,7 +38,12 @@
 //! ## Modules
 //!
 //! * [`formats`] — the four matrix containers and conversions.
-//! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4).
+//! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4),
+//!   each with row-range entry points for sharded execution.
+//! * [`exec`] — the multi-core execution plane: a persistent scoped
+//!   thread pool plus per-layer [`exec::ShardPlan`]s that partition rows
+//!   by stored-index (nnz) count; parallel results are bit-identical to
+//!   serial at every thread count (`--threads` / `CER_THREADS` knob).
 //! * [`costmodel`] — op traces, the Table-I energy model, the calibrated
 //!   time model, and the closed-form equations of §IV.
 //! * [`stats`] — entropy statistics, the (H, p₀)-plane synthesizer,
@@ -46,7 +51,8 @@
 //! * [`compress`] — pruning / k-means clustering / the §V-C pipeline.
 //! * [`networks`] — the evaluation model zoo + weight synthesis.
 //! * [`coordinator`] — format auto-selection, the layer engine, and the
-//!   tokio serving loop with dynamic batching.
+//!   threaded serving loop with dynamic batching; batch matmuls fan out
+//!   across the exec plane when threads are configured.
 //! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
 //!   compressed network (selected formats, codebooks, biases, provenance
 //!   manifest, per-section checksums) serialized once and cold-started by
@@ -58,6 +64,7 @@
 pub mod compress;
 pub mod coordinator;
 pub mod costmodel;
+pub mod exec;
 pub mod formats;
 pub mod harness;
 pub mod kernels;

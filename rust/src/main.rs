@@ -141,7 +141,22 @@ Common flags:
   --no-wallclock    skip real-kernel wall-clock measurement
   --calibrate-time  measure per-op latencies on this host instead of defaults
   --artifacts DIR   artifacts directory for e2e/serve (default artifacts/)
+  --threads N       kernel execution threads for pack/e2e/serve engines
+                    (0 = all cores; default: CER_THREADS env, else 1 =
+                    serial). Parallel output is bit-identical to serial —
+                    rows are sharded by stored-index count per layer.
 ";
+
+/// `--threads` as an explicit request: a number, or `auto`/`0` for all
+/// cores. Absent or unparsable values fall back to `CER_THREADS` (None).
+fn threads_flag(a: &Args) -> Option<usize> {
+    let v = a.flags.get("threads")?;
+    if v.eq_ignore_ascii_case("auto") {
+        Some(0)
+    } else {
+        v.parse().ok()
+    }
+}
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -477,6 +492,11 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
     let t0 = Instant::now();
     let mut cold = Engine::from_pack(&path)?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let threads = cer::exec::resolve_threads(threads_flag(a));
+    if threads > 1 {
+        cold.set_threads(threads);
+        println!("  exec plane: {threads} threads, nnz-balanced shards per layer");
+    }
     let x = vec![0.1f32; cold.in_dim()];
     let y = cold.forward(&x, 1)?;
     println!(
@@ -642,6 +662,9 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
             }
             Err(e) => return Err(e),
         };
+        if backend == Backend::Native {
+            engine.set_threads(cer::exec::resolve_threads(threads_flag(a)));
+        }
         let t0 = std::time::Instant::now();
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -681,12 +704,17 @@ fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
 
     let art = MlpArtifacts::load(artifacts)?;
     let requests = a.get("requests", 512usize);
+    let threads = cer::exec::resolve_threads(threads_flag(a));
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch: a.get("max-batch", 32usize),
             max_delay_us: a.get("max-delay-us", 2_000u64),
         },
+        threads: Some(threads),
     };
+    if threads > 1 {
+        println!("engine exec plane: {threads} threads (nnz-balanced row shards)");
+    }
     let art_clone = art.clone();
     let srv = InferenceServer::spawn(
         move || Engine::from_artifacts(&art_clone, Backend::Native, Objective::Energy),

@@ -1,0 +1,312 @@
+//! Exec-plane property tests: parallel output must be **bit-identical** to
+//! serial output (asserted with `assert_eq!`, never tolerances) for every
+//! format, every physical index width (u8/u16/u32 columns), thread counts
+//! {1, 2, 4, 7}, and both Ω[0] regimes (decomposed and correction-path);
+//! plus the `ShardPlan` partition invariants, including the degenerate
+//! shapes (fewer rows than threads, all nnz concentrated in one row).
+
+use cer::exec::{ShardPlan, ThreadPool};
+use cer::formats::{Dense, FormatKind, IndexWidth};
+use cer::kernels::{AnyMatrix, PackedDense};
+use cer::util::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+/// Random low-entropy matrix. `implicit_zero` selects the Ω[0] regime:
+/// true → zeros dominate (decomposed hot path), false → 5.0 dominates
+/// (the Ω[0] ≠ 0 correction path in CER/CSER).
+fn sample_matrix(rows: usize, cols: usize, implicit_zero: bool, rng: &mut Rng) -> Dense {
+    let dominant = if implicit_zero { 0.0f32 } else { 5.0f32 };
+    let rare = [1.0f32, -2.0, 0.25, 3.5, -0.75];
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            if rng.f32() < 0.6 {
+                dominant
+            } else {
+                rare[rng.below(rare.len())]
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+fn expected_width(cols: usize) -> IndexWidth {
+    IndexWidth::minimal(cols - 1)
+}
+
+#[test]
+fn parallel_matvec_bit_identical_across_formats_widths_threads() {
+    let mut rng = Rng::new(0xE4EC);
+    // (rows, cols) chosen so colI is physically u8 / u16 / u32.
+    let shapes = [(37usize, 41usize), (16, 700), (3, 70_000)];
+    for (rows, cols) in shapes {
+        for implicit_zero in [true, false] {
+            let m = sample_matrix(rows, cols, implicit_zero, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                if let AnyMatrix::Cer(c) = &enc {
+                    assert_eq!(c.col_idx.width(), expected_width(cols));
+                    assert_eq!(c.omega[0] != 0.0, !implicit_zero, "Ω[0] regime");
+                }
+                let mut want = vec![0.0f32; rows];
+                enc.matvec(&x, &mut want);
+                for t in THREADS {
+                    let plan = enc.shard_plan(t);
+                    let pool = ThreadPool::new(t.saturating_sub(1));
+                    let mut got = vec![f32::NAN; rows];
+                    enc.matvec_sharded(&x, &mut got, &plan, &pool);
+                    assert_eq!(
+                        got, want,
+                        "{kind:?} {rows}x{cols} implicit_zero={implicit_zero} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_matmul_bit_identical_across_formats_and_threads() {
+    let mut rng = Rng::new(0xBA7C);
+    for implicit_zero in [true, false] {
+        let m = sample_matrix(33, 50, implicit_zero, &mut rng);
+        for l in [1usize, 4, 9] {
+            let x: Vec<f32> = (0..50 * l).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                let mut want = vec![0.0f32; 33 * l];
+                enc.matmul_colmajor(&x, &mut want, l);
+                for t in THREADS {
+                    let plan = enc.shard_plan(t);
+                    let pool = ThreadPool::new(t.saturating_sub(1));
+                    let mut got = vec![f32::NAN; 33 * l];
+                    enc.matmul_colmajor_sharded(&x, &mut got, l, &plan, &pool);
+                    assert_eq!(
+                        got, want,
+                        "{kind:?} l={l} implicit_zero={implicit_zero} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_rhs_dense_csr_bit_identical_to_per_column_matvec() {
+    // The 4-lane Dense/CSR kernels mirror the scalar accumulation chains,
+    // so batch serving is exact — not approximately equal — per column.
+    let mut rng = Rng::new(0x5EED);
+    let m = sample_matrix(19, 63, true, &mut rng);
+    for l in [1usize, 3, 4, 5, 8, 11] {
+        let x: Vec<f32> = (0..63 * l).map(|_| rng.f32() - 0.5).collect();
+        for kind in [FormatKind::Dense, FormatKind::Csr] {
+            let enc = AnyMatrix::encode(kind, &m);
+            let mut got = vec![0.0f32; 19 * l];
+            enc.matmul_colmajor(&x, &mut got, l);
+            for c in 0..l {
+                let mut want = vec![0.0f32; 19];
+                enc.matvec(&x[c * 63..(c + 1) * 63], &mut want);
+                assert_eq!(&got[c * 19..(c + 1) * 19], &want[..], "{kind:?} col {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn matvec_range_pieces_compose_for_all_formats() {
+    let mut rng = Rng::new(0xC0);
+    let m = sample_matrix(23, 31, false, &mut rng);
+    let x: Vec<f32> = (0..31).map(|_| rng.f32()).collect();
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &m);
+        let mut want = vec![0.0f32; 23];
+        enc.matvec(&x, &mut want);
+        let mut got = vec![0.0f32; 23];
+        let (a, rest) = got.split_at_mut(7);
+        let (b, c) = rest.split_at_mut(9);
+        enc.matvec_range(0..7, &x, a);
+        enc.matvec_range(7..16, &x, b);
+        enc.matvec_range(16..23, &x, c);
+        assert_eq!(got, want, "{kind:?}");
+    }
+}
+
+#[test]
+fn matmul_range_writes_only_its_rows() {
+    let mut rng = Rng::new(0x11);
+    let m = sample_matrix(12, 18, true, &mut rng);
+    let l = 5;
+    let x: Vec<f32> = (0..18 * l).map(|_| rng.f32()).collect();
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &m);
+        let mut want = vec![0.0f32; 12 * l];
+        enc.matmul_colmajor(&x, &mut want, l);
+        let mut got = vec![f32::NAN; 12 * l];
+        enc.matmul_colmajor_range(4..9, &x, &mut got, l);
+        for c in 0..l {
+            for r in 0..12 {
+                let v = got[c * 12 + r];
+                if (4..9).contains(&r) {
+                    assert_eq!(v, want[c * 12 + r], "{kind:?} col {c} row {r}");
+                } else {
+                    assert!(v.is_nan(), "{kind:?} row {r} outside range was written");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_plan_invariants_across_shapes() {
+    let mut rng = Rng::new(0x51A2);
+    for (rows, cols) in [(1usize, 9usize), (2, 300), (5, 40), (64, 120)] {
+        for implicit_zero in [true, false] {
+            let m = sample_matrix(rows, cols, implicit_zero, &mut rng);
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                let prefix = enc.work_prefix();
+                assert_eq!(prefix.len(), rows + 1, "{kind:?} prefix length");
+                assert_eq!(prefix[0], 0);
+                assert!(prefix.windows(2).all(|w| w[1] >= w[0]), "{kind:?} monotone");
+                for shards in [1usize, 2, 4, 7, 100] {
+                    let plan = enc.shard_plan(shards);
+                    assert_eq!(plan.rows(), rows);
+                    assert_eq!(plan.shard_count(), shards.min(rows));
+                    let mut covered = 0usize;
+                    for (i, r) in plan.shards().enumerate() {
+                        assert_eq!(r.start, covered, "{kind:?} shard {i} not contiguous");
+                        assert!(!r.is_empty(), "{kind:?} shard {i} empty");
+                        assert_eq!(plan.work(i), prefix[r.end] - prefix[r.start]);
+                        covered = r.end;
+                    }
+                    assert_eq!(covered, rows, "{kind:?} shards must cover all rows");
+                    assert_eq!(plan.total_work(), *prefix.last().unwrap());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_plan_balances_by_nnz_not_rows() {
+    // One dense row among 63 nearly-empty ones: by-nnz planning must
+    // isolate the heavy row instead of splitting rows evenly.
+    let rows = 64usize;
+    let cols = 256usize;
+    let mut data = vec![0.0f32; rows * cols];
+    for c in 0..cols {
+        data[c] = 1.0 + (c % 7) as f32; // row 0: fully dense
+    }
+    for r in 1..rows {
+        data[r * cols + (r % cols)] = 2.0; // one nnz per other row
+    }
+    let m = Dense::from_vec(rows, cols, data);
+    for kind in [FormatKind::Csr, FormatKind::Cer, FormatKind::Cser] {
+        let enc = AnyMatrix::encode(kind, &m);
+        let plan = enc.shard_plan(4);
+        assert_eq!(plan.shard(0), 0..1, "{kind:?}: heavy row must sit alone");
+        assert!(
+            plan.work(0) >= cols as u64,
+            "{kind:?}: shard 0 carries the dense row's indices"
+        );
+        // The balance must be observable in the debug output.
+        let s = plan.summary();
+        assert!(s.contains("nnz"), "summary must report nnz: {s}");
+        // An equal-row split would leave ~16 rows (with the heavy one)
+        // in one shard; nnz planning caps imbalance at the heavy row.
+        let even = ShardPlan::uniform(rows, 1, 4);
+        assert!(even.shard(0).len() == 16);
+        assert!(plan.max_imbalance() < even.shard_count() as f64);
+    }
+}
+
+#[test]
+fn all_nnz_in_one_row_and_fewer_rows_than_threads() {
+    let mut rng = Rng::new(0x77);
+    // 2 rows, 7 threads: plan must clamp to 2 non-empty shards and the
+    // parallel product must still be exact.
+    let m = sample_matrix(2, 40, true, &mut rng);
+    let enc = AnyMatrix::encode(FormatKind::Cser, &m);
+    let plan = enc.shard_plan(7);
+    assert_eq!(plan.shard_count(), 2);
+    let x: Vec<f32> = (0..40).map(|_| rng.f32()).collect();
+    let mut want = vec![0.0f32; 2];
+    enc.matvec(&x, &mut want);
+    let pool = ThreadPool::new(6);
+    let mut got = vec![0.0f32; 2];
+    enc.matvec_sharded(&x, &mut got, &plan, &pool);
+    assert_eq!(got, want);
+
+    // All stored indices in a single middle row.
+    let mut data = vec![0.0f32; 9 * 33];
+    for c in 0..33 {
+        data[4 * 33 + c] = (1 + c % 3) as f32;
+    }
+    let m = Dense::from_vec(9, 33, data);
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &m);
+        let x: Vec<f32> = (0..33).map(|_| rng.f32()).collect();
+        let mut want = vec![0.0f32; 9];
+        enc.matvec(&x, &mut want);
+        for t in THREADS {
+            let plan = enc.shard_plan(t);
+            assert_eq!(plan.total_work(), *enc.work_prefix().last().unwrap());
+            let pool = ThreadPool::new(t.saturating_sub(1));
+            let mut got = vec![0.0f32; 9];
+            enc.matvec_sharded(&x, &mut got, &plan, &pool);
+            assert_eq!(got, want, "{kind:?} t={t}");
+        }
+    }
+}
+
+#[test]
+fn packed_dense_shards_bit_identical_through_the_pool() {
+    // PackedDense sits outside AnyMatrix, so shard it directly: split y
+    // by its uniform plan and run one matvec_range per shard task.
+    let mut rng = Rng::new(0x9AC);
+    let m = sample_matrix(21, 57, true, &mut rng);
+    let p = PackedDense::from_dense(&m);
+    let x: Vec<f32> = (0..57).map(|_| rng.f32() - 0.5).collect();
+    let mut want = vec![0.0f32; 21];
+    p.matvec(&x, &mut want);
+    for t in THREADS {
+        let plan = p.shard_plan(t);
+        let pool = ThreadPool::new(t.saturating_sub(1));
+        let mut got = vec![f32::NAN; 21];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest: &mut [f32] = &mut got;
+            for r in plan.shards() {
+                let slab = rest;
+                let (mine, tail) = slab.split_at_mut(r.len());
+                rest = tail;
+                let p = &p;
+                let x = &x;
+                tasks.push(Box::new(move || p.matvec_range(r, x, mine)));
+            }
+            assert!(rest.is_empty());
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(got, want, "t={t}");
+    }
+}
+
+#[test]
+fn pool_reuse_across_many_products_is_stable() {
+    // The persistent pool must give identical answers call after call
+    // (no state bleed between scoped runs).
+    let mut rng = Rng::new(0xAB);
+    let m = sample_matrix(48, 96, false, &mut rng);
+    let enc = AnyMatrix::encode(FormatKind::Cer, &m);
+    let plan = enc.shard_plan(4);
+    let pool = ThreadPool::new(3);
+    for trial in 0..25 {
+        let x: Vec<f32> = (0..96).map(|_| rng.f32() - 0.5).collect();
+        let mut want = vec![0.0f32; 48];
+        enc.matvec(&x, &mut want);
+        let mut got = vec![0.0f32; 48];
+        enc.matvec_sharded(&x, &mut got, &plan, &pool);
+        assert_eq!(got, want, "trial {trial}");
+    }
+}
