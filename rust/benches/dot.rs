@@ -1,8 +1,19 @@
-//! Dot-kernel scaling benchmarks: per-format, per-zoo-network matvec
-//! throughput of the exec plane at 1/2/4/8 threads, in GFLOP-equivalents
-//! (2·m·n dense-equivalent FLOPs per product, whatever the format actually
-//! executes). Results are printed and written to `BENCH_dot.json` so the
-//! multi-core perf trajectory has a baseline.
+//! Dot-kernel and forward-pass scaling benchmarks.
+//!
+//! Section "dot": per-format, per-zoo-network matvec throughput of the
+//! exec plane at 1/2/4/8 threads, in GFLOP-equivalents (2·m·n
+//! dense-equivalent FLOPs per product, whatever the format actually
+//! executes).
+//!
+//! Section "forward": end-to-end engine forward latency per zoo network
+//! at 1/2/4/8 threads, **fused** (in-shard bias+ReLU epilogue, one pool
+//! dispatch per forward, zero-allocation activation arena — the serving
+//! path) vs. **unfused** (the retained PR-2 reference: per-call input
+//! copy, per-layer dispatch, serial bias+ReLU post-pass).
+//!
+//! Results are printed and written to `BENCH_dot.json` (an object with a
+//! `"dot"` and a `"forward"` array) so the multi-core perf trajectory has
+//! a baseline.
 //!
 //! Run: `cargo bench --bench dot`
 //! CI smoke mode (small shapes, few iterations): `cargo bench --bench dot
@@ -12,10 +23,13 @@
 //! the pack bench's `BENCH_PACK_SCALE`); throughput per element does not
 //! depend on absolute layer size once out of cache. The shard-balance
 //! debug line (nnz per shard at 4 threads) shows the plans partition by
-//! stored-index count, not by row count.
+//! stored-index count, not by row count, and prints the cost model's
+//! plan-aware predicted speed-up next to it.
 
 use std::io::Write as _;
 
+use cer::coordinator::{Engine, Objective};
+use cer::costmodel::{EnergyModel, TimeModel};
 use cer::exec::ExecPlane;
 use cer::formats::FormatKind;
 use cer::kernels::AnyMatrix;
@@ -33,6 +47,15 @@ struct Row {
     pass_ns: f64,
     gflops: f64,
     speedup_vs_1t: f64,
+}
+
+struct FwdRow {
+    net: String,
+    threads: usize,
+    batch: usize,
+    fused_ns: f64,
+    unfused_ns: f64,
+    fused_speedup: f64,
 }
 
 fn main() {
@@ -55,6 +78,8 @@ fn main() {
 
     let mut rng = Rng::new(0xD07);
     let mut rows: Vec<Row> = Vec::new();
+    let mut fwd_rows: Vec<FwdRow> = Vec::new();
+    let batch = 8usize;
     for (net, net_scale) in cases {
         let (spec, layers) = synthesize_zoo_layers(net, net_scale, 0xCE5E).expect("zoo net");
         let params: u64 = layers
@@ -133,19 +158,70 @@ fn main() {
                 println!("    4-thread scaling x{x4:.2} — {verdict}");
             }
         }
-        // Shard-balance debug: the largest layer's CER plan at 4 threads.
+        // Shard-balance debug: the largest layer's CER plan at 4 threads,
+        // with the cost model's plan-aware predicted speed-up (critical
+        // path = heaviest shard) next to the measured numbers above.
         if let Some((name, biggest)) = layers
             .iter()
             .map(|(name, m, _)| (name, m))
             .max_by_key(|(_, m)| m.rows() * m.cols())
         {
             let plan = AnyMatrix::encode(FormatKind::Cer, biggest).shard_plan(4);
-            println!("    plan[{name}]: {}", plan.summary());
+            let tm = TimeModel::default_model();
+            // Nominal 1 ns per stored index keeps the dispatch overhead
+            // on a realistic scale relative to the layer's size.
+            let serial_ns = plan.total_work() as f64;
+            let predicted = serial_ns / tm.sharded_ns(serial_ns, &plan).max(1e-9);
+            println!(
+                "    plan[{name}]: {} (cost-model predicted speedup x{predicted:.2})",
+                plan.summary()
+            );
         }
+
+        // Forward section: fused serving path vs the retained PR-2
+        // unfused reference, per thread count, same auto-selected engine.
+        let mut engine = Engine::native_auto(
+            layers.clone(),
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Energy,
+        );
+        let x: Vec<f32> = (0..batch * engine.in_dim())
+            .map(|_| rng.f32() - 0.5)
+            .collect();
+        let mut out: Vec<f32> = Vec::new();
+        let mut line = format!("{:<14} forward(b{batch})", spec.name);
+        for &t in &THREAD_COUNTS {
+            engine.set_threads(t);
+            engine.reserve_batch(batch);
+            let fused_ns = time_median_ns(warmup, iters, || {
+                engine.forward_into(&x, batch, &mut out).expect("forward");
+                std::hint::black_box(&out);
+            });
+            let unfused_ns = time_median_ns(warmup, iters, || {
+                let y = engine.forward_reference(&x, batch);
+                std::hint::black_box(&y);
+            });
+            let fused_speedup = unfused_ns / fused_ns;
+            line.push_str(&format!(
+                "  {t}t {:>10} vs {:>10} (x{fused_speedup:.2})",
+                fmt_ns(fused_ns),
+                fmt_ns(unfused_ns)
+            ));
+            fwd_rows.push(FwdRow {
+                net: spec.name.to_string(),
+                threads: t,
+                batch,
+                fused_ns,
+                unfused_ns,
+                fused_speedup,
+            });
+        }
+        println!("{line}");
     }
 
     // Hand-rolled JSON (the offline build has no serde).
-    let mut json = String::from("[\n");
+    let mut json = String::from("{\n\"dot\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "  {{\"net\": \"{}\", \"format\": \"{}\", \"threads\": {}, \
@@ -161,12 +237,28 @@ fn main() {
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
-    json.push_str("]\n");
+    json.push_str("],\n\"forward\": [\n");
+    for (i, r) in fwd_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"threads\": {}, \"batch\": {}, \
+             \"fused_pass_ns\": {:.1}, \"unfused_pass_ns\": {:.1}, \
+             \"fused_speedup\": {:.4}}}{}\n",
+            r.net,
+            r.threads,
+            r.batch,
+            r.fused_ns,
+            r.unfused_ns,
+            r.fused_speedup,
+            if i + 1 < fwd_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("]\n}\n");
     let mut f = std::fs::File::create("BENCH_dot.json").expect("BENCH_dot.json");
     f.write_all(json.as_bytes()).expect("write BENCH_dot.json");
     println!(
-        "wrote BENCH_dot.json ({} rows: {} networks x 4 formats x {:?} threads)",
+        "wrote BENCH_dot.json ({} dot rows + {} forward rows: {} networks x {:?} threads)",
         rows.len(),
+        fwd_rows.len(),
         cases.len(),
         THREAD_COUNTS
     );

@@ -85,16 +85,33 @@ impl<T> Batcher<T> {
 
     /// Cut a batch if one is due. FIFO prefix of at most `max_batch`.
     pub fn pop_batch(&mut self, now_us: u64) -> Option<Vec<Pending<T>>> {
+        let mut out = Vec::new();
+        self.pop_batch_into(now_us, &mut out).then_some(out)
+    }
+
+    /// Allocation-reusing variant of [`Batcher::pop_batch`]: clears `out`
+    /// and fills it with the due batch, returning whether one was cut.
+    /// The serving loop keeps a single buffer alive across batches, so a
+    /// warm server cuts batches without allocating.
+    pub fn pop_batch_into(&mut self, now_us: u64, out: &mut Vec<Pending<T>>) -> bool {
+        out.clear();
         if !self.ready(now_us) {
-            return None;
+            return false;
         }
         let n = self.queue.len().min(self.cfg.max_batch);
-        Some(self.queue.drain(..n).collect())
+        out.extend(self.queue.drain(..n));
+        true
     }
 
     /// Drain everything regardless of deadlines (shutdown path).
     pub fn drain_all(&mut self) -> Vec<Pending<T>> {
         self.queue.drain(..).collect()
+    }
+
+    /// Allocation-reusing variant of [`Batcher::drain_all`].
+    pub fn drain_all_into(&mut self, out: &mut Vec<Pending<T>>) {
+        out.clear();
+        out.extend(self.queue.drain(..));
     }
 }
 
@@ -144,6 +161,24 @@ mod tests {
         assert_eq!(batch.len(), 4);
         assert_eq!(batch[0].id, 0);
         assert_eq!(b.len(), 7);
+    }
+
+    #[test]
+    fn pop_batch_into_reuses_buffer_and_matches_pop_batch() {
+        let mut b = Batcher::new(cfg(3, 1_000));
+        let mut out: Vec<Pending<()>> = Vec::with_capacity(8);
+        assert!(!b.pop_batch_into(0, &mut out));
+        assert!(out.is_empty());
+        for i in 0..5 {
+            b.push(i, (), 0);
+        }
+        let cap = out.capacity();
+        assert!(b.pop_batch_into(0, &mut out));
+        assert_eq!(out.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(out.capacity(), cap, "must reuse, not reallocate");
+        b.drain_all_into(&mut out);
+        assert_eq!(out.iter().map(|p| p.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(b.is_empty());
     }
 
     /// Property test (in-tree randomized harness — proptest substitute):

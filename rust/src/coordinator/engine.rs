@@ -11,7 +11,31 @@
 //! Batch layout trick: a row-major (batch × n) activation buffer *is* a
 //! column-major (n × batch) matrix, so the native path feeds
 //! `matmul_colmajor` without any transpose copies.
-
+//!
+//! ## The fused forward pipeline
+//!
+//! The native forward pass is fully fused and allocation-free in steady
+//! state:
+//!
+//! * **In-shard epilogue** — each layer's bias add + ReLU runs inside the
+//!   dot-product kernels via [`crate::kernels::Epilogue`], while every
+//!   output row is still cache-hot; the serial `m × batch` post-pass is
+//!   gone. Fused output is bit-identical to the unfused path (same
+//!   `acc + bias[r]` add order, then the clamp) — asserted by
+//!   `tests/forward_fused.rs`.
+//! * **One pool dispatch per forward** — a [`crate::exec::Pipeline`] job
+//!   submits the whole layer sequence to the persistent pool once; lanes
+//!   rendezvous at a lightweight [`crate::exec::WaveBarrier`] between
+//!   layers instead of paying a dispatch/join round trip per layer.
+//! * **Activation arena** — [`ActivationArena`] double-buffers the
+//!   inter-layer activations (sized from the layer dims, grown only to the
+//!   batch high-water mark) and layer 0 reads the caller's input slice
+//!   directly, so [`Engine::forward_into`] performs zero heap allocations
+//!   per call after warm-up (asserted by `tests/alloc_free.rs`).
+//!
+//! The PR-2 unfused path is retained verbatim as
+//! [`Engine::forward_reference`] for differential tests and the
+//! fused-vs-unfused benchmark (`cargo bench --bench dot`).
 
 use std::path::Path;
 
@@ -19,9 +43,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format, Objective};
 use crate::costmodel::{EnergyModel, TimeModel};
-use crate::exec::{ExecPlane, ShardPlan};
+use crate::exec::{self, ExecPlane, Pipeline, ShardPlan};
 use crate::formats::{Dense, FormatKind};
-use crate::kernels::AnyMatrix;
+use crate::kernels::{AnyMatrix, Epilogue};
 use crate::pack::{self, LayerView, Manifest, Pack};
 use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
 
@@ -62,6 +86,63 @@ pub fn to_codes(m: &Dense) -> (Vec<i32>, Vec<f32>) {
     (codes, omega)
 }
 
+/// Double-buffered activation storage for the fused forward pass.
+///
+/// Layer `i` reads the buffer layer `i - 1` wrote (layer 0 reads the
+/// caller's input slice directly — the seed path's per-call `x.to_vec()`
+/// copy is gone) and writes the other buffer; `sums` holds per-lane
+/// scratch for the Ω[0]-correction column sums so pipeline lanes never
+/// allocate. Buffers are sized once from the layer dims and grown only
+/// when a larger batch than ever seen arrives, so steady-state serving
+/// performs **zero heap allocations per request**.
+#[derive(Debug, Default)]
+struct ActivationArena {
+    /// Ping/pong activation buffers, each `max_rows × batch_cap`.
+    bufs: [Vec<f32>; 2],
+    /// Lane-local correction-sum scratch, `lanes × batch_cap`.
+    sums: Vec<f32>,
+    /// Widest layer output (rows) across the network.
+    max_rows: usize,
+    /// Execution lanes the sums scratch is sized for.
+    lanes: usize,
+    /// Batch high-water mark the buffers are sized for.
+    batch_cap: usize,
+}
+
+impl ActivationArena {
+    fn new(max_rows: usize) -> ActivationArena {
+        ActivationArena {
+            max_rows,
+            lanes: 1,
+            ..ActivationArena::default()
+        }
+    }
+
+    /// Re-size the per-lane sums scratch for a new lane count (called from
+    /// `set_threads`, never on the hot path).
+    fn configure(&mut self, lanes: usize) {
+        self.lanes = lanes.max(1);
+        self.sums.clear();
+        self.sums.resize(self.lanes * self.batch_cap, 0.0);
+    }
+
+    /// Grow to hold `batch`-wide activations. A no-op once the high-water
+    /// mark covers `batch` — the steady-state path allocates nothing here.
+    fn ensure(&mut self, batch: usize) {
+        if batch <= self.batch_cap {
+            return;
+        }
+        let n = self.max_rows * batch;
+        for b in &mut self.bufs {
+            b.clear();
+            b.resize(n, 0.0);
+        }
+        self.sums.clear();
+        self.sums.resize(self.lanes * batch, 0.0);
+        self.batch_cap = batch;
+    }
+}
+
 /// XLA backend state (owned by the engine; not Send — construct the engine
 /// inside its serving thread).
 struct XlaState {
@@ -79,8 +160,15 @@ pub struct Engine {
     pub layers: Vec<EngineLayer>,
     backend: Backend,
     xla: Option<XlaState>,
-    /// Scratch activation buffers (reused across forwards).
-    scratch: Vec<Vec<f32>>,
+    /// Double-buffered activations + lane scratch (reused across
+    /// forwards; zero allocation after warm-up).
+    arena: ActivationArena,
+    /// PR-2 per-layer scratch, used only by [`Engine::forward_reference`]
+    /// so the unfused baseline keeps its original allocation behavior
+    /// (buffers persist across calls, exactly as the seed path did).
+    ref_scratch: Vec<Vec<f32>>,
+    /// The whole-forward pipeline job (one pool dispatch per forward).
+    pipeline: Pipeline,
     /// Multi-core execution plane (serial unless [`Engine::set_threads`]).
     exec: ExecPlane,
     /// One nnz-balanced plan per layer, computed once when the plane is
@@ -89,6 +177,33 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Shared native-engine assembly: arena sized from the layer dims,
+    /// serial exec plane.
+    fn assemble(layers: Vec<EngineLayer>) -> Engine {
+        // The fused epilogue indexes bias[r] for every output row, where
+        // the historical post-pass zip-truncated; validate up front so a
+        // malformed layer fails identically (and immediately) on both
+        // paths instead of panicking deep inside a pool worker.
+        for l in &layers {
+            assert_eq!(
+                l.bias.len(),
+                l.matrix.rows(),
+                "layer '{}': bias length must equal the row count",
+                l.name
+            );
+        }
+        let max_rows = layers.iter().map(|l| l.matrix.rows()).max().unwrap_or(0);
+        Engine {
+            layers,
+            backend: Backend::Native,
+            xla: None,
+            arena: ActivationArena::new(max_rows),
+            ref_scratch: Vec::new(),
+            pipeline: Pipeline::new(),
+            exec: ExecPlane::serial(),
+            plans: Vec::new(),
+        }
+    }
     /// Build a native engine from quantized layers, auto-selecting each
     /// layer's format for `objective`.
     pub fn native_auto(
@@ -108,14 +223,7 @@ impl Engine {
                 }
             })
             .collect();
-        Engine {
-            layers,
-            backend: Backend::Native,
-            xla: None,
-            scratch: Vec::new(),
-            exec: ExecPlane::serial(),
-            plans: Vec::new(),
-        }
+        Engine::assemble(layers)
     }
 
     /// Build a native engine with an explicit format for every layer.
@@ -128,14 +236,7 @@ impl Engine {
                 bias,
             })
             .collect();
-        Engine {
-            layers,
-            backend: Backend::Native,
-            xla: None,
-            scratch: Vec::new(),
-            exec: ExecPlane::serial(),
-            plans: Vec::new(),
-        }
+        Engine::assemble(layers)
     }
 
     /// Build an engine over the e2e artifacts.
@@ -196,8 +297,8 @@ impl Engine {
                 let exe = runtime
                     .load(&path)
                     .with_context(|| format!("loading {}", path.display()))?;
-                Ok(Engine {
-                    layers: named(backend == Backend::XlaCser)
+                let mut engine = Engine::assemble(
+                    named(backend == Backend::XlaCser)
                         .into_iter()
                         .map(|(name, m, bias)| EngineLayer {
                             name,
@@ -205,17 +306,15 @@ impl Engine {
                             bias,
                         })
                         .collect(),
-                    backend,
-                    xla: Some(XlaState {
-                        runtime,
-                        exe,
-                        fixed_args,
-                        batch: art.batch,
-                    }),
-                    scratch: Vec::new(),
-                    exec: ExecPlane::serial(),
-                    plans: Vec::new(),
-                })
+                );
+                engine.backend = backend;
+                engine.xla = Some(XlaState {
+                    runtime,
+                    exe,
+                    fixed_args,
+                    batch: art.batch,
+                });
+                Ok(engine)
             }
         }
     }
@@ -239,6 +338,15 @@ impl Engine {
         } else {
             Vec::new()
         };
+        self.arena.configure(self.exec.threads());
+    }
+
+    /// Pre-size the activation arena for batches up to `batch`, so even
+    /// the first request at that width allocates nothing. The server
+    /// calls this with its configured `max_batch`; otherwise the arena
+    /// grows lazily to the batch high-water mark.
+    pub fn reserve_batch(&mut self, batch: usize) {
+        self.arena.ensure(batch);
     }
 
     /// Builder form of [`Engine::set_threads`].
@@ -276,31 +384,204 @@ impl Engine {
     /// Forward a batch: `x` row-major (batch × in_dim) → logits row-major
     /// (batch × out_dim). ReLU between layers, none after the last.
     pub fn forward(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.forward_into(x, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Engine::forward`] into a caller-owned buffer (cleared, then
+    /// filled with batch × out_dim logits). With a reused `out`, the
+    /// native path performs **zero heap allocations** per call after
+    /// warm-up — the serving loop's steady state.
+    pub fn forward_into(&mut self, x: &[f32], batch: usize, out: &mut Vec<f32>) -> Result<()> {
         assert_eq!(x.len(), batch * self.in_dim(), "input shape");
         match self.backend {
-            Backend::Native => Ok(self.forward_native(x, batch)),
+            Backend::Native => {
+                let logits = self.forward_native(x, batch);
+                out.clear();
+                out.extend_from_slice(logits);
+                Ok(())
+            }
             Backend::XlaDense | Backend::XlaCser => {
-                let st = self.xla.as_mut().expect("xla state");
-                assert_eq!(
-                    batch, st.batch,
-                    "XLA backend lowered for batch {}, got {batch}",
-                    st.batch
-                );
-                let mut args = vec![Arg::f32(x.to_vec(), &[batch, x.len() / batch])];
-                args.extend(st.fixed_args.iter().cloned());
-                st.exe.run_f32(&args)
+                *out = self.forward_xla(x, batch)?;
+                Ok(())
             }
         }
     }
 
-    fn forward_native(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+    fn forward_xla(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let st = self.xla.as_mut().expect("xla state");
+        assert_eq!(
+            batch, st.batch,
+            "XLA backend lowered for batch {}, got {batch}",
+            st.batch
+        );
+        // The input clone is hoisted behind the feature gate: a stub
+        // build never copies the batch (or the per-layer weight args)
+        // into `Arg`s just to throw them away. In practice a stub build
+        // cannot even construct an `XlaState` (`XlaRuntime::cpu`/`load`
+        // bail first), so this arm only documents-and-guards that
+        // invariant by surfacing the stub's descriptive error directly.
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = (x, &st.fixed_args); // not cloned in stub builds — that's the point
+            st.exe.run_f32(&[])
+        }
+        #[cfg(feature = "xla")]
+        {
+            let mut args = Vec::with_capacity(1 + st.fixed_args.len());
+            args.push(Arg::f32(x.to_vec(), &[batch, x.len() / batch]));
+            args.extend(st.fixed_args.iter().cloned());
+            st.exe.run_f32(&args)
+        }
+    }
+
+    /// The fused native forward pass: bias+ReLU run inside the kernels
+    /// (in-shard epilogue), the whole layer sequence is one pool dispatch
+    /// (pipeline with a per-layer barrier), activations ping-pong through
+    /// the arena, and layer 0 reads `x` directly — no input copy. Returns
+    /// the logits slice borrowed from the arena.
+    ///
+    /// Bit-identical to [`Engine::forward_reference`] at every thread
+    /// count; allocation-free after warm-up.
+    fn forward_native(&mut self, x: &[f32], batch: usize) -> &[f32] {
         // Row-major (batch × n) ≡ column-major (n × batch): no transposes.
-        self.scratch.resize(self.layers.len(), Vec::new());
+        let last = self.layers.len() - 1;
+        self.arena.ensure(batch);
+        let layers = &self.layers;
+        let plans = &self.plans;
+        let batch_cap = self.arena.batch_cap;
+        let [buf_a, buf_b] = &mut self.arena.bufs;
+        match (self.exec.pool(), plans.is_empty()) {
+            (Some(pool), false) => {
+                // Shared cell views: within a layer, lanes write disjoint
+                // plan shards; across layers, the pipeline barrier retires
+                // all writers before any reader.
+                let cells_a = exec::as_cells(buf_a);
+                let cells_b = exec::as_cells(buf_b);
+                let sums_cells = exec::as_cells(&mut self.arena.sums);
+                let lanes = self.exec.threads();
+                let step = |i: usize, lane: usize| {
+                    let layer = &layers[i];
+                    let plan = &plans[i];
+                    let (m, n) = (layer.matrix.rows(), layer.matrix.cols());
+                    let (src_cells, dst_cells) = if i % 2 == 0 {
+                        (cells_b, cells_a)
+                    } else {
+                        (cells_a, cells_b)
+                    };
+                    // SAFETY: the inter-layer barrier guarantees every
+                    // writer of the previous layer's buffer has finished.
+                    let src: &[f32] = if i == 0 {
+                        x
+                    } else {
+                        unsafe { exec::cells_as_slice(&src_cells[..n * batch]) }
+                    };
+                    let epi = Epilogue {
+                        bias: &layer.bias,
+                        relu: i != last,
+                    };
+                    if lane >= plan.shard_count() {
+                        return; // idle lane (fewer shards than lanes)
+                    }
+                    // Ω[0]-correction column sums, once per (layer, lane)
+                    // into the lane's private scratch. Lanes with a shard
+                    // compute them redundantly rather than paying a second
+                    // barrier per layer; the summation order is identical
+                    // to correction_col_sums, so every copy is bit-equal
+                    // (and the regime is rare — decomposed matrices, the
+                    // paper's recommended deployment, skip this entirely).
+                    let col_sums: &[f32] = if layer.matrix.correction_w0() != 0.0 {
+                        let seg = &sums_cells[lane * batch_cap..lane * batch_cap + batch];
+                        // SAFETY: each lane owns its private segment.
+                        let seg = unsafe { exec::cells_as_mut(seg) };
+                        crate::kernels::correction_col_sums_into(src, n, batch, seg);
+                        seg
+                    } else {
+                        &[]
+                    };
+                    // Stride over shards so correctness never depends on
+                    // lanes == shard_count.
+                    let mut shard = lane;
+                    while shard < plan.shard_count() {
+                        // SAFETY: plan shards are disjoint row ranges.
+                        unsafe {
+                            layer.matrix.matmul_cells_epi(
+                                plan.shard(shard),
+                                src,
+                                &dst_cells[..m * batch],
+                                batch,
+                                col_sums,
+                                Some(&epi),
+                            )
+                        };
+                        shard += lanes;
+                    }
+                };
+                // The shard stride and per-lane sums indexing inside
+                // `step` assume the pipeline runs exactly `lanes` lanes;
+                // Pipeline::run clamps to the pool's lane limit, so the
+                // two must agree or strided shards would never execute.
+                debug_assert_eq!(lanes, pool.lane_limit(), "stride/lane-count invariant");
+                self.pipeline.run(Some(pool), lanes, layers.len(), &step);
+            }
+            _ => {
+                // Serial fused loop: same arena ping-pong, same epilogue,
+                // correction sums through the arena scratch — zero
+                // allocations in both Ω[0] regimes.
+                let sums = &mut self.arena.sums;
+                let mut prev_rows = 0usize;
+                for (i, layer) in layers.iter().enumerate() {
+                    let (m, n) = (layer.matrix.rows(), layer.matrix.cols());
+                    let epi = Epilogue {
+                        bias: &layer.bias,
+                        relu: i != last,
+                    };
+                    let (src, dst): (&[f32], &mut [f32]) = if i % 2 == 0 {
+                        (
+                            if i == 0 { x } else { &buf_b[..prev_rows * batch] },
+                            &mut buf_a[..m * batch],
+                        )
+                    } else {
+                        (&buf_a[..prev_rows * batch], &mut buf_b[..m * batch])
+                    };
+                    let col_sums: &[f32] = if layer.matrix.correction_w0() != 0.0 {
+                        crate::kernels::correction_col_sums_into(src, n, batch, sums);
+                        &sums[..batch]
+                    } else {
+                        &[]
+                    };
+                    let cells = exec::as_cells(dst);
+                    // SAFETY: `dst` is exclusively borrowed and this
+                    // single call covers all rows — no concurrent writer.
+                    unsafe {
+                        layer
+                            .matrix
+                            .matmul_cells_epi(0..m, src, cells, batch, col_sums, Some(&epi))
+                    };
+                    prev_rows = m;
+                }
+            }
+        }
+        let out_dim = self.layers[last].matrix.rows();
+        &self.arena.bufs[last % 2][..out_dim * batch]
+    }
+
+    /// The PR-2 *unfused* forward pass, retained verbatim — including its
+    /// allocation behavior (per-call `x.to_vec()` input copy, per-layer
+    /// scratch buffers that persist across calls) — for differential
+    /// testing and the fused-vs-unfused benchmark: (sharded) matmul
+    /// without epilogue, then the serial `m × batch` bias+ReLU post-pass.
+    /// Native backend only.
+    pub fn forward_reference(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(self.backend, Backend::Native, "reference path is native-only");
+        assert_eq!(x.len(), batch * self.in_dim(), "input shape");
+        self.ref_scratch.resize(self.layers.len(), Vec::new());
         let mut cur: Vec<f32> = x.to_vec();
         let last = self.layers.len() - 1;
         for (i, layer) in self.layers.iter().enumerate() {
-            let (m, _n) = (layer.matrix.rows(), layer.matrix.cols());
-            let out = &mut self.scratch[i];
+            let m = layer.matrix.rows();
+            let out = &mut self.ref_scratch[i];
             out.clear();
             out.resize(m * batch, 0.0);
             match (self.exec.pool(), self.plans.get(i)) {
@@ -388,9 +669,8 @@ impl Engine {
 
     /// Build a native engine from an already-decoded [`Pack`].
     pub fn from_pack_data(pack: Pack) -> Engine {
-        Engine {
-            layers: pack
-                .layers
+        Engine::assemble(
+            pack.layers
                 .into_iter()
                 .map(|l| EngineLayer {
                     name: l.name,
@@ -398,12 +678,7 @@ impl Engine {
                     bias: l.bias,
                 })
                 .collect(),
-            backend: Backend::Native,
-            xla: None,
-            scratch: Vec::new(),
-            exec: ExecPlane::serial(),
-            plans: Vec::new(),
-        }
+        )
     }
 
     /// Total storage of the engine's weight matrices (bits).
@@ -517,6 +792,43 @@ mod tests {
             assert!(par.shard_plans().is_empty());
             assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} @1");
         }
+    }
+
+    #[test]
+    fn fused_forward_bit_identical_to_reference_path() {
+        // The fused pipeline (in-shard epilogue, one dispatch, arena) must
+        // reproduce the retained PR-2 unfused path bit for bit, serial and
+        // parallel, across varying batch sizes on one engine (arena
+        // high-water growth and reuse included).
+        let layers = tiny_layers(21);
+        let mut rng = Rng::new(22);
+        for kind in FormatKind::ALL {
+            for threads in [1usize, 3, 4] {
+                let mut e = Engine::native_fixed(layers.clone(), kind).with_threads(threads);
+                for batch in [4usize, 1, 8, 3] {
+                    let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+                    let want = e.forward_reference(&x, batch);
+                    let got = e.forward(&x, batch).unwrap();
+                    assert_eq!(got, want, "{kind:?} threads={threads} batch={batch}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_into_reuses_caller_buffer() {
+        let layers = tiny_layers(23);
+        let mut e = Engine::native_fixed(layers, FormatKind::Cser);
+        e.reserve_batch(2);
+        let mut rng = Rng::new(24);
+        let x: Vec<f32> = (0..2 * 12).map(|_| rng.f32()).collect();
+        let mut out = Vec::new();
+        e.forward_into(&x, 2, &mut out).unwrap();
+        let first = out.clone();
+        assert_eq!(out.len(), 2 * e.out_dim());
+        // Second call must refill, not append.
+        e.forward_into(&x, 2, &mut out).unwrap();
+        assert_eq!(out, first);
     }
 
     #[test]

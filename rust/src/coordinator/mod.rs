@@ -14,9 +14,11 @@
 //! runtime: tokio is not in the offline vendor set (DESIGN.md §4) and a
 //! single-worker engine loop has no I/O concurrency to hide. Kernel-level
 //! parallelism lives below this layer: when `ServerConfig::threads` (or
-//! `CER_THREADS`) is set, the engine fans each batch matmul out across
-//! the [`crate::exec`] plane's nnz-balanced row shards while the engine
-//! itself stays single-owner.
+//! `CER_THREADS`) is set, the engine runs each forward pass as one fused
+//! [`crate::exec::Pipeline`] job — every batch matmul fans out across the
+//! exec plane's nnz-balanced row shards with bias+ReLU applied in-shard,
+//! one pool dispatch per forward — while the engine itself stays
+//! single-owner and the warm path stays allocation-free.
 
 pub mod batcher;
 pub mod engine;

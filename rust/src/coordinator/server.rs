@@ -3,6 +3,14 @@
 //! builder closure), requests arrive over an mpsc channel, the dynamic
 //! batcher cuts batches by size/deadline, responses flow back through
 //! per-request channels.
+//!
+//! The batch split loop is fused with the engine's pipelined forward:
+//! every chunk — including dynamic batches of 1–3 samples, below the
+//! kernels' 4-wide rhs grouping — executes through the exec pool's
+//! sharded fused path, and the input-assembly and logits buffers persist
+//! across batches ([`Engine::forward_into`] + the batcher's `*_into`
+//! cuts), so a warm server runs the whole submit→forward→reply cycle
+//! without allocating anything but the per-request reply vectors.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -148,7 +156,12 @@ where
             return;
         }
     };
+    // Pre-size the arena for the configured batch ceiling so even the
+    // first full batch allocates nothing inside the engine.
+    engine.reserve_batch(cfg.batcher.max_batch.max(1));
     let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher);
+    let mut scratch = BatchScratch::default();
+    let mut batch: Vec<crate::coordinator::batcher::Pending<Request>> = Vec::new();
     let mut next_id = 0u64;
     'outer: loop {
         // Wait for work: bounded by the oldest request's deadline.
@@ -178,41 +191,55 @@ where
             }
             None => {}
         }
-        while let Some(batch) = batcher.pop_batch(now_us(epoch)) {
-            run_batch(&mut engine, batch, &metrics);
+        while batcher.pop_batch_into(now_us(epoch), &mut batch) {
+            run_batch(&mut engine, &batch, &metrics, &mut scratch);
         }
     }
     // Drain on shutdown.
-    let rest = batcher.drain_all();
-    if !rest.is_empty() {
-        run_batch(&mut engine, rest, &metrics);
+    batcher.drain_all_into(&mut batch);
+    if !batch.is_empty() {
+        run_batch(&mut engine, &batch, &metrics, &mut scratch);
     }
+}
+
+/// Input-assembly and logits buffers reused across every batch the worker
+/// runs — with the engine's activation arena this keeps the steady-state
+/// forward path free of per-request heap allocation.
+#[derive(Default)]
+struct BatchScratch {
+    x: Vec<f32>,
+    logits: Vec<f32>,
 }
 
 fn run_batch(
     engine: &mut Engine,
-    batch: Vec<crate::coordinator::batcher::Pending<Request>>,
+    batch: &[crate::coordinator::batcher::Pending<Request>],
     metrics: &Metrics,
+    scratch: &mut BatchScratch,
 ) {
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
     let n = batch.len();
     // XLA backends are lowered for a fixed batch: pad up to it (and split
-    // if the dynamic batch exceeds it).
+    // if the dynamic batch exceeds it). Every chunk of the split loop —
+    // padded, full, or a 1–3 sample remainder below the kernels' 4-wide
+    // rhs grouping — runs through the engine's pooled fused pipeline.
     let exec_batch = engine.required_batch().unwrap_or(n).max(1);
     metrics.record_batch(n);
+    let BatchScratch { x, logits } = scratch;
     let mut idx = 0usize;
     while idx < n {
         let chunk = &batch[idx..(idx + exec_batch).min(n)];
-        let mut x = vec![0.0f32; exec_batch * in_dim];
+        x.clear();
+        x.resize(exec_batch * in_dim, 0.0);
         for (i, p) in chunk.iter().enumerate() {
             if p.payload.x.len() == in_dim {
                 x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&p.payload.x);
             }
         }
-        let result = engine.forward(&x, exec_batch);
+        let result = engine.forward_into(x, exec_batch, logits);
         match result {
-            Ok(logits) => {
+            Ok(()) => {
                 for (i, p) in chunk.iter().enumerate() {
                     let reply = if p.payload.x.len() != in_dim {
                         Err(anyhow!(
@@ -307,6 +334,48 @@ mod tests {
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32, -1.0, 0.5]);
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn small_batches_through_pool_bit_identical_to_serial() {
+        // Dynamic batches of 1–3 samples sit below the kernels' 4-wide
+        // rhs grouping; they must still run through the pooled fused
+        // pipeline and answer bit-identically to a serial engine.
+        use crate::util::Rng;
+        let mk_layers = || {
+            let mut rng = Rng::new(0x5B);
+            let grid = [-0.5f32, 0.0, 0.25, 0.5];
+            let mk = |rng: &mut Rng, m: usize, n: usize| {
+                Dense::from_vec(m, n, (0..m * n).map(|_| grid[rng.below(4)]).collect())
+            };
+            vec![
+                ("fc0".into(), mk(&mut rng, 9, 6), vec![-0.2; 9]),
+                ("fc1".into(), mk(&mut rng, 4, 9), vec![0.1; 4]),
+            ]
+        };
+        let mut serial = Engine::native_fixed(mk_layers(), FormatKind::Cser);
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 3,
+                max_delay_us: 500,
+            },
+            threads: Some(4),
+        };
+        let srv = InferenceServer::spawn(
+            move || Ok(Engine::native_fixed(mk_layers(), FormatKind::Cser)),
+            cfg,
+        );
+        let mut rng = Rng::new(0x99);
+        let xs: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..6).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| srv.submit(x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = serial.forward(x, 1).unwrap();
+            assert_eq!(got, want);
         }
         srv.shutdown();
     }

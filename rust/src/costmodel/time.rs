@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use super::energy::MemTier;
 use super::opcount::BaseOp;
+use crate::exec::ShardPlan;
 
 /// Time model: ns per elementary operation.
 #[derive(Clone, Debug)]
@@ -53,6 +54,35 @@ impl TimeModel {
             BaseOp::Mul => self.mul,
             BaseOp::Read | BaseOp::Write => self.rw[tier as usize],
         }
+    }
+
+    /// Per-dispatch overhead (ns) of fanning a layer product across the
+    /// exec pool: one condvar broadcast plus the shard joins. With the
+    /// pipelined forward this is paid once per *forward*, but attributing
+    /// it to each layer keeps single-layer estimates conservative.
+    pub const DISPATCH_OVERHEAD_NS: f64 = 2_000.0;
+
+    /// Predicted wall time of one layer product executed across `plan`'s
+    /// shards, given the layer's serial estimate.
+    ///
+    /// Current consumers: the dot bench's shard-balance debug line and
+    /// the unit test below. Wiring it into [`crate::coordinator`]'s
+    /// format selector (so `--threads` can change the chosen format per
+    /// layer) is a tracked ROADMAP follow-up.
+    ///
+    /// The parallel critical path is the *heaviest* shard, so the
+    /// estimate scales by `plan.max_work() / plan.total_work()` — the
+    /// actual nnz balance the planner achieved — rather than the ideal
+    /// `1 / shards`. A perfectly balanced plan approaches the ideal; a
+    /// plan dominated by one dense row predicts (correctly) almost no
+    /// speed-up. Single-shard plans and zero-work layers return the
+    /// serial estimate unchanged.
+    pub fn sharded_ns(&self, serial_ns: f64, plan: &ShardPlan) -> f64 {
+        let total = plan.total_work();
+        if total == 0 || plan.shard_count() <= 1 {
+            return serial_ns;
+        }
+        serial_ns * (plan.max_work() as f64 / total as f64) + Self::DISPATCH_OVERHEAD_NS
     }
 
     /// Measure per-op latencies on the host. Best-effort (subject to
@@ -130,6 +160,35 @@ mod tests {
         assert_eq!(m.cost_ns(BaseOp::Sum, 32, MemTier::Under8K), 0.25);
         assert_eq!(m.cost_ns(BaseOp::Read, 8, MemTier::Over1M), 20.0);
         assert_eq!(m.cost_ns(BaseOp::Write, 32, MemTier::Under32K), 2.0);
+    }
+
+    #[test]
+    fn sharded_estimate_follows_hand_computed_plan_balance() {
+        let m = TimeModel::default_model();
+        // Hand-computed skewed plan: row 0 carries 900 of 999 work units,
+        // rows 1..=9 carry 11 each. At 4 shards the planner isolates the
+        // heavy row, so max_work = 900 and the critical-path fraction is
+        // 900/999 — nnz feedback, not the ideal 1/4.
+        let mut prefix = vec![0u64, 900];
+        for r in 1..10u64 {
+            prefix.push(900 + r * 11);
+        }
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        assert_eq!(plan.max_work(), 900);
+        assert_eq!(plan.total_work(), 999);
+        let serial = 999_000.0; // 1000 ns per work unit
+        let got = m.sharded_ns(serial, &plan);
+        let want = serial * (900.0 / 999.0) + TimeModel::DISPATCH_OVERHEAD_NS;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // A balanced uniform plan approaches the ideal 1/4 split.
+        let even = ShardPlan::uniform(16, 100, 4);
+        assert_eq!(even.max_work(), 400);
+        let got = m.sharded_ns(serial, &even);
+        let want = serial * 0.25 + TimeModel::DISPATCH_OVERHEAD_NS;
+        assert!((got - want).abs() < 1e-9);
+        // Degenerate plans fall back to the serial estimate.
+        assert_eq!(m.sharded_ns(serial, &ShardPlan::uniform(8, 1, 1)), serial);
+        assert_eq!(m.sharded_ns(serial, &ShardPlan::from_prefix(&[0, 0, 0], 2)), serial);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! The multi-core execution plane: nnz-balanced row sharding for the
 //! dot-product kernels.
 //!
-//! * [`ThreadPool`] — persistent scoped worker pool (std threads +
-//!   channels; no external dependencies, same style as the serving loop).
+//! * [`ThreadPool`] — persistent scoped worker pool (std threads + a
+//!   condvar-broadcast job slot; no external dependencies, same style as
+//!   the serving loop). Its [`ThreadPool::run_lanes`] entry dispatches
+//!   without heap allocation.
 //! * [`ShardPlan`] — per-layer contiguous row partition balanced by
 //!   stored-index (nnz) count rather than row count, since run-length skew
 //!   is exactly what low-entropy matrices exhibit.
+//! * [`Pipeline`] / [`WaveBarrier`] — whole-forward pipelined jobs: one
+//!   pool dispatch for the entire layer sequence, with a lightweight
+//!   generation barrier between layers instead of a dispatch/join round
+//!   trip per layer.
 //! * [`ExecPlane`] — pool handle + thread-count policy (the `--threads`
 //!   CLI flag / `CER_THREADS` env knob resolve through
 //!   [`resolve_threads`]).
@@ -17,9 +23,11 @@
 //! output at every thread count. `--threads 1` (or an absent pool) takes
 //! today's serial code path unchanged.
 
+mod pipeline;
 mod pool;
 mod shard;
 
+pub use pipeline::{Pipeline, WaveBarrier};
 pub use pool::ThreadPool;
 pub use shard::ShardPlan;
 
@@ -153,6 +161,18 @@ pub(crate) fn as_cells(y: &mut [f32]) -> &[SyncCell] {
 /// the returned slice.
 pub(crate) unsafe fn cells_as_mut(cells: &[SyncCell]) -> &mut [f32] {
     std::slice::from_raw_parts_mut(cells.as_ptr() as *mut f32, cells.len())
+}
+
+/// View cells as a plain shared `&[f32]` — how a pipeline step reads the
+/// previous layer's activations after the barrier has retired every
+/// writer.
+///
+/// # Safety
+/// No thread may write any of these cells for the lifetime of the
+/// returned slice (in the pipeline, the inter-layer barrier guarantees
+/// this).
+pub(crate) unsafe fn cells_as_slice(cells: &[SyncCell]) -> &[f32] {
+    std::slice::from_raw_parts(cells.as_ptr() as *const f32, cells.len())
 }
 
 #[cfg(test)]

@@ -1,0 +1,259 @@
+//! One-dispatch-per-forward pipelined execution.
+//!
+//! PR 2 parallelized each layer product with its own pool dispatch: one
+//! `run_scoped` fan-out plus a full join barrier per layer. For a deep
+//! network at small batch sizes that round trip — wake the workers, run a
+//! sub-millisecond shard, park the workers, repeat — dominates the layer
+//! compute itself. A [`Pipeline`] job instead submits the *whole layer
+//! sequence* to the persistent pool once: every execution lane loops over
+//! the steps, and a lightweight generation-counting [`WaveBarrier`]
+//! between steps replaces the dispatch/join round trip. Workers never
+//! park between layers of one forward pass.
+//!
+//! **Determinism:** the pipeline only changes *when* shard kernels run,
+//! never what they compute — each lane executes the same `ShardPlan`
+//! shards with the same serial inner loops, so output stays bit-identical
+//! to both the serial path and the per-layer-dispatch path.
+//!
+//! **Allocation:** `Pipeline::run` goes through
+//! [`ThreadPool::run_lanes`], which dispatches without heap allocation;
+//! together with the engine's activation arena this makes the
+//! steady-state fused forward pass allocation-free (asserted by
+//! `tests/alloc_free.rs`).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::ThreadPool;
+
+/// A reusable generation-counting rendezvous barrier.
+///
+/// Three-stage waiting: spin (keeps the inter-layer gap in the tens of
+/// nanoseconds when lanes are balanced — the `ShardPlan`'s job), then
+/// `yield_now`, then **park on a condvar** — so an oversubscribed lane
+/// count (`--threads` past the core count) degrades to sleeping waiters
+/// instead of a yield storm that burns exactly the cores the straggler
+/// lanes need. The release path always bumps the generation under the
+/// park lock before notifying, so a parked waiter can never miss a wave.
+#[derive(Debug, Default)]
+pub struct WaveBarrier {
+    arrived: AtomicUsize,
+    gen: AtomicUsize,
+    park: Mutex<()>,
+    unpark: Condvar,
+}
+
+impl WaveBarrier {
+    pub fn new() -> WaveBarrier {
+        WaveBarrier::default()
+    }
+
+    /// Block until `parties` threads (this one included) have called
+    /// `wait` in the current generation. Every caller of one generation
+    /// must pass the same `parties`.
+    pub fn wait(&self, parties: usize) {
+        debug_assert!(parties >= 1);
+        let gen = self.gen.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == parties {
+            // Last arriver: reset the count *before* releasing the wave so
+            // an early next-generation arriver can never observe a stale
+            // count (the release on `gen` orders the reset for waiters).
+            self.arrived.store(0, Ordering::Relaxed);
+            // Bump under the park lock: a waiter decides to sleep only
+            // while holding it, so the bump+notify can't slip between its
+            // last check and its wait (no lost wakeup).
+            let guard = self.park.lock().expect("barrier park lock");
+            self.gen.fetch_add(1, Ordering::Release);
+            drop(guard);
+            self.unpark.notify_all();
+            return;
+        }
+        let mut spins = 0u32;
+        while self.gen.load(Ordering::Acquire) == gen {
+            spins = spins.wrapping_add(1);
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else if spins < 512 {
+                std::thread::yield_now();
+            } else {
+                // Stage 3: park until the wave is released.
+                let mut guard = self.park.lock().expect("barrier park lock");
+                while self.gen.load(Ordering::Acquire) == gen {
+                    guard = self.unpark.wait(guard).expect("barrier park lock");
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// A pipelined multi-step job: the exec plane's unit of *whole-forward*
+/// work, vs. [`ThreadPool::run_scoped`]'s per-product shard fan-out.
+///
+/// The barrier is owned (not per-run stack state) so one engine reuses it
+/// across every forward pass; generation counting makes reuse safe.
+#[derive(Debug, Default)]
+pub struct Pipeline {
+    barrier: WaveBarrier,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    /// Execute `steps` dependent stages in **one** pool dispatch.
+    ///
+    /// `step(s, lane)` is called for every `s in 0..steps` on every `lane
+    /// in 0..lanes`, with a barrier between consecutive steps: no lane
+    /// starts step `s + 1` until every lane has finished step `s` (so step
+    /// `s + 1` may read anything step `s` wrote). Within a step, lanes run
+    /// concurrently and must write disjoint data — the engine hands each
+    /// lane its own `ShardPlan` rows.
+    ///
+    /// `lanes` is clamped to the pool's [`ThreadPool::lane_limit`]; with
+    /// no pool (or a single lane) the steps run serially on the caller,
+    /// which is exactly the engine's `--threads 1` path.
+    ///
+    /// A panic inside a step poisons the pipeline: remaining steps are
+    /// skipped (lanes keep arriving at the barriers so every lane drains),
+    /// and the first payload is re-raised here.
+    pub fn run(
+        &self,
+        pool: Option<&ThreadPool>,
+        lanes: usize,
+        steps: usize,
+        step: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        if steps == 0 {
+            return;
+        }
+        let lanes = match pool {
+            Some(p) => lanes.clamp(1, p.lane_limit()),
+            None => 1,
+        };
+        let (Some(pool), true) = (pool, lanes > 1) else {
+            for s in 0..steps {
+                step(s, 0);
+            }
+            return;
+        };
+        let poisoned = AtomicBool::new(false);
+        let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let barrier = &self.barrier;
+        pool.run_lanes(lanes, &|lane| {
+            for s in 0..steps {
+                if s > 0 {
+                    barrier.wait(lanes);
+                }
+                if poisoned.load(Ordering::Acquire) {
+                    continue;
+                }
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| step(s, lane))) {
+                    poisoned.store(true, Ordering::Release);
+                    payload
+                        .lock()
+                        .expect("pipeline panic slot")
+                        .get_or_insert(p);
+                }
+            }
+        });
+        if let Some(p) = payload.lock().expect("pipeline panic slot").take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_pipeline_runs_steps_in_order() {
+        let p = Pipeline::new();
+        let log = Mutex::new(Vec::new());
+        p.run(None, 4, 3, &|s, lane| {
+            assert_eq!(lane, 0);
+            log.lock().unwrap().push(s);
+        });
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn steps_are_barrier_separated() {
+        // Every lane must see the *complete* previous step: lane sums of a
+        // shared counter only match if no lane raced ahead of the barrier.
+        let pool = ThreadPool::new(3);
+        let p = Pipeline::new();
+        let lanes = pool.lane_limit();
+        let steps = 16usize;
+        let counter = AtomicU64::new(0);
+        let bad = AtomicUsize::new(0);
+        p.run(Some(&pool), lanes, steps, &|s, _lane| {
+            // At entry to step s, all lanes have finished steps 0..s:
+            // exactly lanes * s increments must be visible.
+            if counter.load(Ordering::SeqCst) < (lanes * s) as u64 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+        assert_eq!(counter.load(Ordering::SeqCst), (lanes * steps) as u64);
+    }
+
+    #[test]
+    fn pipeline_reuse_across_runs() {
+        let pool = ThreadPool::new(2);
+        let p = Pipeline::new();
+        let lanes = pool.lane_limit();
+        for _ in 0..20 {
+            let hits = AtomicUsize::new(0);
+            p.run(Some(&pool), lanes, 5, &|_, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), lanes * 5);
+        }
+    }
+
+    #[test]
+    fn lane_count_clamps_to_pool() {
+        let pool = ThreadPool::new(1);
+        let p = Pipeline::new();
+        let seen = Mutex::new(std::collections::BTreeSet::new());
+        p.run(Some(&pool), 64, 2, &|_, lane| {
+            seen.lock().unwrap().insert(lane);
+        });
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), pool.lane_limit());
+        assert!(seen.iter().all(|&l| l < pool.lane_limit()));
+    }
+
+    #[test]
+    fn panic_poisons_but_drains_and_propagates() {
+        let pool = ThreadPool::new(2);
+        let p = Pipeline::new();
+        let after = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            p.run(Some(&pool), 3, 4, &|s, lane| {
+                if s == 1 && lane == 0 {
+                    panic!("step boom");
+                }
+                if s > 1 {
+                    after.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Poison halts later steps on every lane (at most the racing
+        // step-1 stragglers slip through, never steps 2..).
+        assert!(after.load(Ordering::Relaxed) <= 3 * 2);
+        // And the pipeline + pool stay usable.
+        let ok = AtomicUsize::new(0);
+        p.run(Some(&pool), 3, 2, &|_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 6);
+    }
+}

@@ -1,78 +1,192 @@
-//! Persistent worker pool — std threads + channels only, in the same
-//! dependency-free style as `coordinator/server.rs` (rayon/crossbeam are
-//! not in the offline vendor set).
+//! Persistent worker pool — std threads + a condvar-broadcast job slot, in
+//! the same dependency-free style as `coordinator/server.rs` (rayon and
+//! crossbeam are not in the offline vendor set).
 //!
-//! The pool is *scoped*: [`ThreadPool::run_scoped`] accepts non-`'static`
-//! closures and does not return until every one of them has finished, so
-//! shard tasks may borrow the caller's stack — the input vector, the
-//! output slices, the matrix being multiplied. The calling thread
-//! participates instead of idling: the first task runs inline, so a pool
-//! sized for `t`-way execution needs only `t - 1` workers.
+//! The pool is *scoped*: both entry points accept non-`'static` borrows and
+//! do not return until every task has finished, so shard tasks may borrow
+//! the caller's stack — the input vector, the output slices, the matrix
+//! being multiplied. The calling thread always participates as one more
+//! execution lane, so a pool sized for `t`-way execution needs only `t - 1`
+//! workers.
+//!
+//! Two entry points share one dispatch primitive:
+//!
+//! * [`ThreadPool::run_scoped`] — a vector of heterogeneous `FnOnce` tasks;
+//!   threads greedily claim task indices until none remain (a fast thread
+//!   may run several). This is the per-product shard path.
+//! * [`ThreadPool::run_lanes`] — one shared `Fn(lane)` executed once per
+//!   lane with **at most one lane per thread**. This is the contract a
+//!   [`crate::exec::Pipeline`] job needs: its lanes rendezvous at internal
+//!   barriers, so two lanes on one thread would deadlock. Unlike
+//!   `run_scoped`, this path performs **zero heap allocations** — the job
+//!   descriptor lives inline in the pool's mutex and the lane function is
+//!   passed by reference — which is what makes a steady-state fused forward
+//!   pass allocation-free end to end.
+//!
+//! Dispatches are serialized: one job owns the pool at a time (a second
+//! dispatching thread blocks until the first completes). **Dispatching
+//! from inside a task deadlocks**: the nested call waits on the dispatch
+//! lock the outer job holds, and the outer job cannot finish while its
+//! task is blocked — unlike the old channel pool, which queued nested
+//! jobs. No engine code nests (kernel shard tasks never dispatch), and an
+//! assertion catches dispatch from a worker thread. Panics inside
+//! tasks are caught on the executing thread — so the scope guarantee (no
+//! task outlives the dispatch) holds even then — and the first payload is
+//! re-raised on the dispatching thread once all tasks are done.
 
+use std::any::Any;
+use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// The dispatch's shared lane function with its borrow lifetime erased.
+/// Soundness: [`ThreadPool::dispatch`] blocks until `remaining == 0`, and a
+/// worker only dereferences this after claiming a slot (which keeps
+/// `remaining` above zero until the call returns), so the erased borrow is
+/// only ever used inside the dispatch's dynamic extent.
+type ErasedLaneFn = &'static (dyn Fn(usize) + Sync);
+
+/// One in-flight dispatch. Lives inline in [`State`] — dispatching
+/// allocates nothing (the panic box only materializes on the failure path).
+struct InFlight {
+    f: ErasedLaneFn,
+    /// Total slots to execute (task count, or lane count).
+    slots: usize,
+    /// Next unclaimed slot index.
+    next: usize,
+    /// At most one slot per participating thread (pipeline mode).
+    exclusive: bool,
+    /// Slots claimed-or-unclaimed that have not finished executing.
+    remaining: usize,
+    /// First caught panic payload, re-raised by the dispatcher.
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
+struct State {
+    /// Bumped once per dispatch; lets a worker recognise a job it already
+    /// claimed its exclusive lane from.
+    epoch: u64,
+    job: Option<InFlight>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new job (or more claimable slots).
+    work_cv: Condvar,
+    /// The dispatcher waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
 
 /// A persistent pool of worker threads executing scoped shard tasks.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    shared: Arc<Shared>,
+    /// Serializes dispatches from multiple threads (one job at a time).
+    dispatch_lock: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
     /// Spawn `workers` persistent worker threads. `workers == 0` is valid:
-    /// every task of [`ThreadPool::run_scoped`] then runs inline on the
-    /// calling thread (the serial fallback).
+    /// every task then runs inline on the calling thread (the serial
+    /// fallback).
     pub fn new(workers: usize) -> ThreadPool {
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let handles = (0..workers)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("cer-exec-{i}"))
-                    .spawn(move || loop {
-                        // Hold the queue lock only for the recv itself.
-                        let job = { rx.lock().expect("exec queue lock").recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // pool dropped: queue closed
-                        }
-                    })
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawning exec worker")
             })
             .collect();
         ThreadPool {
-            tx: Some(tx),
+            shared,
+            dispatch_lock: Mutex::new(()),
             handles,
         }
     }
 
     /// Number of worker threads. The calling thread adds one more lane of
-    /// parallelism during [`ThreadPool::run_scoped`].
+    /// parallelism during a dispatch.
     pub fn workers(&self) -> usize {
         self.handles.len()
     }
 
+    /// Maximum concurrent lanes a dispatch can count on: the workers plus
+    /// the calling thread. [`ThreadPool::run_lanes`] callers must clamp
+    /// their lane count to this before sizing internal barriers.
+    pub fn lane_limit(&self) -> usize {
+        self.handles.len() + 1
+    }
+
     /// Run every task to completion; tasks may borrow caller state.
     ///
-    /// The first task runs inline on the calling thread, the rest are
-    /// dispatched to the workers. Panics inside tasks are caught on the
-    /// executing thread — so the scope guarantee (no task outlives this
-    /// call) holds even then — and re-raised here once all tasks are done.
+    /// Threads (the caller included) greedily claim task indices, so a
+    /// fast thread may execute several tasks. Panics inside tasks are
+    /// caught and the first payload re-raised here once all tasks finish.
     pub fn run_scoped<'s>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
         let n = tasks.len();
         if n == 0 {
             return;
         }
-        if self.handles.is_empty() || n == 1 {
-            // No workers (or nothing to fan out): plain sequential run.
+        let slots = TaskSlots(tasks.into_iter().map(|t| UnsafeCell::new(Some(t))).collect());
+        let run = |slot: usize| {
+            // SAFETY: the dispatch hands each slot index to exactly one
+            // thread, so no cell is ever accessed concurrently or twice.
+            let task = unsafe { (*slots.0[slot].get()).take() }.expect("slot claimed once");
+            task();
+        };
+        self.dispatch(n, false, &run);
+    }
+
+    /// Run `f(lane)` once for every `lane in 0..lanes`, with at most one
+    /// lane per thread — the contract barrier-synchronized pipeline jobs
+    /// require. Performs no heap allocation.
+    ///
+    /// `lanes` must not exceed [`ThreadPool::lane_limit`]: with fewer
+    /// threads than lanes and internal barriers, the job could never make
+    /// progress.
+    pub fn run_lanes(&self, lanes: usize, f: &(dyn Fn(usize) + Sync)) {
+        assert!(
+            lanes <= self.lane_limit(),
+            "run_lanes({lanes}) exceeds the lane limit {}",
+            self.lane_limit()
+        );
+        self.dispatch(lanes, true, f);
+    }
+
+    /// The shared dispatch primitive behind both entry points.
+    fn dispatch(&self, slots: usize, exclusive: bool, f: &(dyn Fn(usize) + Sync)) {
+        if slots == 0 {
+            return;
+        }
+        // Re-entrant dispatch from a pool worker can never complete (see
+        // the module docs); fail fast — in release builds too, where this
+        // one name compare per dispatch is noise next to the fan-out, a
+        // diagnosable panic beats a permanent silent hang.
+        assert!(
+            !std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("cer-exec-")),
+            "exec pool dispatch from inside a pool task would deadlock"
+        );
+        if self.handles.is_empty() || slots == 1 {
+            // No workers (or nothing to fan out): plain sequential run,
+            // still catching per-slot so every slot executes.
             let mut first_panic = None;
-            for task in tasks {
-                if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+            for s in 0..slots {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(s))) {
                     first_panic.get_or_insert(p);
                 }
             }
@@ -81,48 +195,120 @@ impl ThreadPool {
             }
             return;
         }
-        type TaskResult = Result<(), Box<dyn std::any::Any + Send + 'static>>;
-        let tx = self.tx.as_ref().expect("pool alive");
-        let (done_tx, done_rx) = channel::<TaskResult>();
-        let mut tasks = tasks.into_iter();
-        let inline = tasks.next().expect("n >= 1");
-        for task in tasks {
-            // SAFETY: the wait loop below blocks until every dispatched
-            // task has signalled completion, so the `'s` borrows strictly
-            // outlive the workers' use of them — the lifetime is erased
-            // only inside this call's dynamic extent.
-            let task: Job =
-                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(task) };
-            let done = done_tx.clone();
-            tx.send(Box::new(move || {
-                let result = catch_unwind(AssertUnwindSafe(task)).map(|_| ());
-                let _ = done.send(result);
-            }))
-            .expect("exec workers alive");
+        let serialize_guard = self.dispatch_lock.lock().expect("exec dispatch lock");
+        // SAFETY: lifetime erasure only (same-layout reference transmute) —
+        // the wait loop below blocks until every slot has finished, so the
+        // borrow strictly outlives all worker use of it (see
+        // `ErasedLaneFn`).
+        let erased: ErasedLaneFn = unsafe { std::mem::transmute(f) };
+        {
+            let mut st = self.shared.state.lock().expect("exec pool state");
+            debug_assert!(st.job.is_none(), "dispatches are serialized");
+            st.epoch += 1;
+            st.job = Some(InFlight {
+                f: erased,
+                slots,
+                next: 0,
+                exclusive,
+                remaining: slots,
+                panic: None,
+            });
+            self.shared.work_cv.notify_all();
         }
-        let inline_panic = catch_unwind(AssertUnwindSafe(inline)).err();
-        // Wait for ALL dispatched tasks before returning or re-panicking —
-        // this is what makes the lifetime erasure above sound. Keep the
-        // first worker payload so the real failure stays diagnosable.
-        let mut worker_panic = None;
-        for _ in 1..n {
-            match done_rx.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(p)) => {
-                    worker_panic.get_or_insert(p);
+        // The calling thread participates as a lane.
+        let mut claimed = false;
+        loop {
+            let slot = {
+                let mut st = self.shared.state.lock().expect("exec pool state");
+                let job = st.job.as_mut().expect("job live during dispatch");
+                if job.next < job.slots && !(exclusive && claimed) {
+                    let s = job.next;
+                    job.next += 1;
+                    Some(s)
+                } else {
+                    None
                 }
-                Err(_) => unreachable!("done senders outlive their tasks"),
+            };
+            let Some(s) = slot else { break };
+            claimed = true;
+            let result = catch_unwind(AssertUnwindSafe(|| f(s)));
+            let mut st = self.shared.state.lock().expect("exec pool state");
+            let job = st.job.as_mut().expect("job live during dispatch");
+            if let Err(p) = result {
+                job.panic.get_or_insert(p);
             }
+            job.remaining -= 1;
         }
-        if let Some(p) = inline_panic.or(worker_panic) {
+        // Wait for ALL slots before returning or re-panicking — this is
+        // what makes the lifetime erasure above sound.
+        let mut st = self.shared.state.lock().expect("exec pool state");
+        while st.job.as_ref().expect("job live during dispatch").remaining > 0 {
+            st = self.shared.done_cv.wait(st).expect("exec pool state");
+        }
+        let job = st.job.take().expect("job live during dispatch");
+        drop(st);
+        // Release the dispatch serialization BEFORE re-raising: unwinding
+        // with the guard live would poison `dispatch_lock` and kill the
+        // pool for every later dispatch (the pool must survive task
+        // panics — see the tests below).
+        drop(serialize_guard);
+        if let Some(p) = job.panic {
             resume_unwind(p);
+        }
+    }
+}
+
+/// Heterogeneous `FnOnce` tasks behind [`ThreadPool::run_scoped`].
+struct TaskSlots<'s>(Vec<UnsafeCell<Option<Box<dyn FnOnce() + Send + 's>>>>);
+
+// SAFETY: each slot index is handed out by the dispatch's claim counter to
+// exactly one thread, so no cell is ever touched by two threads.
+unsafe impl<'s> Sync for TaskSlots<'s> {}
+
+fn worker_loop(shared: &Shared) {
+    // Epoch of the job this worker last claimed an exclusive lane from
+    // (epochs start at 1, so 0 never matches).
+    let mut claimed_epoch = 0u64;
+    loop {
+        let (f, slot) = {
+            let mut st = shared.state.lock().expect("exec pool state");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let epoch = st.epoch;
+                if let Some(job) = st.job.as_mut() {
+                    if job.next < job.slots && !(job.exclusive && claimed_epoch == epoch) {
+                        let slot = job.next;
+                        job.next += 1;
+                        claimed_epoch = epoch;
+                        break (job.f, slot);
+                    }
+                }
+                st = shared.work_cv.wait(st).expect("exec pool state");
+            }
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(slot)));
+        let mut st = shared.state.lock().expect("exec pool state");
+        if let Some(job) = st.job.as_mut() {
+            if let Err(p) = result {
+                job.panic.get_or_insert(p);
+            }
+            job.remaining -= 1;
+            if job.remaining == 0 {
+                shared.done_cv.notify_all();
+            }
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the queue; workers exit their loop
+        {
+            let mut st = self.shared.state.lock().expect("exec pool state");
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -157,6 +343,7 @@ mod tests {
     fn zero_worker_pool_runs_inline() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.lane_limit(), 1);
         let hits = AtomicUsize::new(0);
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
             .map(|_| {
@@ -218,6 +405,65 @@ mod tests {
             })
             .collect();
         pool.run_scoped(tasks);
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_lanes_executes_every_lane_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for lanes in 1..=pool.lane_limit() {
+            let hits: Vec<AtomicUsize> = (0..lanes).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_lanes(lanes, &|lane| {
+                hits[lane].fetch_add(1, Ordering::Relaxed);
+            });
+            for (lane, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_lanes_is_one_lane_per_thread() {
+        // All lanes must be live concurrently: each lane waits until every
+        // other lane has arrived, which deadlocks if any thread ran two.
+        let pool = ThreadPool::new(3);
+        let lanes = pool.lane_limit();
+        let arrived = AtomicUsize::new(0);
+        pool.run_lanes(lanes, &|_| {
+            arrived.fetch_add(1, Ordering::AcqRel);
+            let mut spins = 0u32;
+            while arrived.load(Ordering::Acquire) < lanes {
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        assert_eq!(arrived.load(Ordering::Relaxed), lanes);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the lane limit")]
+    fn run_lanes_rejects_oversubscription() {
+        let pool = ThreadPool::new(1);
+        pool.run_lanes(5, &|_| {});
+    }
+
+    #[test]
+    fn run_lanes_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_lanes(3, &|lane| {
+                if lane == 1 {
+                    panic!("lane boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        let ok = AtomicUsize::new(0);
+        pool.run_lanes(3, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
         assert_eq!(ok.load(Ordering::Relaxed), 3);
     }
 }

@@ -97,6 +97,12 @@ impl ShardPlan {
         self.work.iter().sum()
     }
 
+    /// Heaviest shard's work units — the parallel critical path, which is
+    /// what the cost model's sharded time estimate scales by.
+    pub fn max_work(&self) -> u64 {
+        self.work.iter().copied().max().unwrap_or(0)
+    }
+
     /// Heaviest shard's work relative to the ideal equal split (1.0 =
     /// perfectly balanced). A plain equal-row split of a skewed matrix
     /// scores close to `shard_count()`.
@@ -106,7 +112,7 @@ impl ShardPlan {
             return 1.0;
         }
         let mean = total as f64 / self.shard_count() as f64;
-        self.work.iter().copied().max().unwrap_or(0) as f64 / mean
+        self.max_work() as f64 / mean
     }
 
     /// Human-readable balance report: per-shard row ranges and nnz counts.

@@ -13,6 +13,7 @@
 
 use std::ops::Range;
 
+use super::{finish, Epilogue};
 use crate::exec::SyncCell;
 use crate::formats::Cer;
 use crate::formats::index::Idx;
@@ -68,7 +69,7 @@ pub fn cer_matvec(m: &Cer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
     let sum_x = super::correction_sum(w0(m), x);
-    cer_matvec_range_with(m, 0..m.rows(), x, y, sum_x);
+    cer_matvec_range_with(m, 0..m.rows(), x, y, sum_x, None);
 }
 
 /// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
@@ -78,7 +79,24 @@ pub fn cer_matvec_range(m: &Cer, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), rows.len(), "y length");
     let sum_x = super::correction_sum(w0(m), x);
-    cer_matvec_range_with(m, rows, x, y, sum_x);
+    cer_matvec_range_with(m, rows, x, y, sum_x, None);
+}
+
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`cer_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn cer_matvec_range_epi(
+    m: &Cer,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    let sum_x = super::correction_sum(w0(m), x);
+    cer_matvec_range_with(m, rows, x, y, sum_x, Some(epi));
 }
 
 /// Range kernel with the correction `Σx` precomputed by the caller, so
@@ -89,11 +107,13 @@ pub(crate) fn cer_matvec_range_with(
     x: &[f32],
     y: &mut [f32],
     sum_x: f32,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let w = w0(m);
-    with_col_indices!(&m.col_idx, ci => cer_matvec_inner(m, ci, rows, x, y, w, sum_x));
+    with_col_indices!(&m.col_idx, ci => cer_matvec_inner(m, ci, rows, x, y, w, sum_x, epi));
 }
 
+#[allow(clippy::too_many_arguments)]
 fn cer_matvec_inner<I: Idx>(
     m: &Cer,
     col_idx: &[I],
@@ -102,6 +122,7 @@ fn cer_matvec_inner<I: Idx>(
     y: &mut [f32],
     w0: f32,
     sum_x: f32,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let omega = &m.omega;
     let omega_ptr = &m.omega_ptr;
@@ -119,7 +140,7 @@ fn cer_matvec_inner<I: Idx>(
                 }
                 // Empty (padded) run: value Ω[1+j] absent from this row.
             }
-            *out = acc;
+            *out = finish(epi, r, acc);
         }
         return;
     }
@@ -140,7 +161,7 @@ fn cer_matvec_inner<I: Idx>(
             }
         }
         acc += w0 * (sum_x - listed);
-        *out = acc;
+        *out = finish(epi, r, acc);
     }
 }
 
@@ -173,16 +194,18 @@ pub fn cer_matmul_colmajor(m: &Cer, x: &[f32], y: &mut [f32], l: usize) {
     let cells = crate::exec::as_cells(y);
     // SAFETY: `y` is exclusively borrowed and this single call covers all
     // rows — no concurrent writer exists.
-    unsafe { cer_matmul_cells(m, 0..rows, x, cells, l, &col_sums) };
+    unsafe { cer_matmul_cells(m, 0..rows, x, cells, l, &col_sums, None) };
 }
 
-/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
 /// `col_sums` carries the precomputed per-column correction sums (len `l`
 /// when Ω[0] ≠ 0, else empty) shared by every shard.
 ///
 /// # Safety
 /// No other thread may access rows `rows` of `y` during the call (the
 /// exec driver guarantees this via disjoint `ShardPlan` shards).
+#[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn cer_matmul_cells(
     m: &Cer,
     rows: Range<usize>,
@@ -190,6 +213,7 @@ pub(crate) unsafe fn cer_matmul_cells(
     y: &[SyncCell],
     l: usize,
     col_sums: &[f32],
+    epi: Option<&Epilogue<'_>>,
 ) {
     let (m_total, n) = (m.rows(), m.cols());
     debug_assert_eq!(x.len(), n * l);
@@ -211,7 +235,7 @@ pub(crate) unsafe fn cer_matmul_cells(
             } else {
                 [0.0; 4]
             };
-            cer_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4);
+            cer_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4, epi);
             c += 4;
         }
         for c in c..l {
@@ -220,7 +244,7 @@ pub(crate) unsafe fn cer_matmul_cells(
             // column.
             let yc = crate::exec::cells_as_mut(seg);
             let sum_x = if w0 != 0.0 { col_sums[c] } else { 0.0 };
-            cer_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x);
+            cer_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x, epi);
         }
     });
 }
@@ -237,6 +261,7 @@ unsafe fn cer_matmul4_inner<I: Idx>(
     c: usize,
     w0: f32,
     sum_x: [f32; 4],
+    epi: Option<&Epilogue<'_>>,
 ) {
     let m_total = m.rows();
     let omega = &m.omega;
@@ -263,7 +288,7 @@ unsafe fn cer_matmul4_inner<I: Idx>(
             if w0 != 0.0 {
                 v += w0 * (sum_x[lane] - listed[lane]);
             }
-            y[(c + lane) * m_total + r].set(v);
+            y[(c + lane) * m_total + r].set(finish(epi, r, v));
         }
     }
 }
@@ -309,6 +334,34 @@ mod tests {
         let mut y = vec![0.0; 1];
         cer_matvec(&cer, &x, &mut y);
         assert_eq!(y[0], 5.0);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass_both_regimes() {
+        // Both Ω[0] regimes: the epilogue applies after the correction.
+        for m in [
+            paper_example_matrix(),
+            Dense::from_rows(&[vec![2.0, 2.0, 1.0], vec![2.0, 3.0, 2.0]]),
+        ] {
+            let cer = Cer::from_dense(&m);
+            let rows = m.rows();
+            let bias: Vec<f32> = (0..rows).map(|r| 0.25 * r as f32 - 30.0).collect();
+            let x: Vec<f32> = (0..m.cols()).map(|i| i as f32 * 0.7 - 2.0).collect();
+            for relu in [false, true] {
+                let epi = Epilogue { bias: &bias, relu };
+                let mut want = vec![0.0; rows];
+                cer_matvec(&cer, &x, &mut want);
+                for (r, v) in want.iter_mut().enumerate() {
+                    *v += bias[r];
+                    if relu && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                let mut got = vec![0.0; rows];
+                cer_matvec_range_epi(&cer, 0..rows, &x, &mut got, &epi);
+                assert_eq!(got, want, "relu={relu} w0={}", cer.omega[0]);
+            }
+        }
     }
 
     #[test]

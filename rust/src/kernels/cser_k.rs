@@ -7,6 +7,7 @@
 
 use std::ops::Range;
 
+use super::{finish, Epilogue};
 use crate::exec::SyncCell;
 use crate::formats::Cser;
 use crate::formats::index::Idx;
@@ -24,7 +25,7 @@ pub fn cser_matvec(m: &Cser, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
     let sum_x = super::correction_sum(w0(m), x);
-    cser_matvec_range_with(m, 0..m.rows(), x, y, sum_x);
+    cser_matvec_range_with(m, 0..m.rows(), x, y, sum_x, None);
 }
 
 /// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
@@ -34,7 +35,24 @@ pub fn cser_matvec_range(m: &Cser, rows: Range<usize>, x: &[f32], y: &mut [f32])
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), rows.len(), "y length");
     let sum_x = super::correction_sum(w0(m), x);
-    cser_matvec_range_with(m, rows, x, y, sum_x);
+    cser_matvec_range_with(m, rows, x, y, sum_x, None);
+}
+
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`cser_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn cser_matvec_range_epi(
+    m: &Cser,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    let sum_x = super::correction_sum(w0(m), x);
+    cser_matvec_range_with(m, rows, x, y, sum_x, Some(epi));
 }
 
 /// Range kernel with the correction `Σx` precomputed by the caller, so
@@ -45,11 +63,13 @@ pub(crate) fn cser_matvec_range_with(
     x: &[f32],
     y: &mut [f32],
     sum_x: f32,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let w = w0(m);
-    with_col_indices!(&m.col_idx, ci => cser_matvec_inner(m, ci, rows, x, y, w, sum_x));
+    with_col_indices!(&m.col_idx, ci => cser_matvec_inner(m, ci, rows, x, y, w, sum_x, epi));
 }
 
+#[allow(clippy::too_many_arguments)]
 fn cser_matvec_inner<I: Idx>(
     m: &Cser,
     col_idx: &[I],
@@ -58,6 +78,7 @@ fn cser_matvec_inner<I: Idx>(
     y: &mut [f32],
     w0: f32,
     sum_x: f32,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let omega = &m.omega;
     let omega_idx = &m.omega_idx;
@@ -74,7 +95,7 @@ fn cser_matvec_inner<I: Idx>(
                     * omega[omega_idx[slot] as usize];
                 start = end;
             }
-            *out = acc;
+            *out = finish(epi, r, acc);
         }
         return;
     }
@@ -91,7 +112,7 @@ fn cser_matvec_inner<I: Idx>(
             start = end;
         }
         acc += w0 * (sum_x - listed);
-        *out = acc;
+        *out = finish(epi, r, acc);
     }
 }
 
@@ -105,16 +126,18 @@ pub fn cser_matmul_colmajor(m: &Cser, x: &[f32], y: &mut [f32], l: usize) {
     let cells = crate::exec::as_cells(y);
     // SAFETY: `y` is exclusively borrowed and this single call covers all
     // rows — no concurrent writer exists.
-    unsafe { cser_matmul_cells(m, 0..rows, x, cells, l, &col_sums) };
+    unsafe { cser_matmul_cells(m, 0..rows, x, cells, l, &col_sums, None) };
 }
 
-/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
 /// `col_sums` carries the precomputed per-column correction sums (len `l`
 /// when Ω[0] ≠ 0, else empty) shared by every shard.
 ///
 /// # Safety
 /// No other thread may access rows `rows` of `y` during the call (the
 /// exec driver guarantees this via disjoint `ShardPlan` shards).
+#[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn cser_matmul_cells(
     m: &Cser,
     rows: Range<usize>,
@@ -122,6 +145,7 @@ pub(crate) unsafe fn cser_matmul_cells(
     y: &[SyncCell],
     l: usize,
     col_sums: &[f32],
+    epi: Option<&Epilogue<'_>>,
 ) {
     let (m_total, n) = (m.rows(), m.cols());
     debug_assert_eq!(x.len(), n * l);
@@ -143,7 +167,7 @@ pub(crate) unsafe fn cser_matmul_cells(
             } else {
                 [0.0; 4]
             };
-            cser_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4);
+            cser_matmul4_inner(m, ci, rows.clone(), &xs, y, c, w0, sum4, epi);
             c += 4;
         }
         for c in c..l {
@@ -152,7 +176,7 @@ pub(crate) unsafe fn cser_matmul_cells(
             // column.
             let yc = crate::exec::cells_as_mut(seg);
             let sum_x = if w0 != 0.0 { col_sums[c] } else { 0.0 };
-            cser_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x);
+            cser_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, w0, sum_x, epi);
         }
     });
 }
@@ -169,6 +193,7 @@ unsafe fn cser_matmul4_inner<I: Idx>(
     c: usize,
     w0: f32,
     sum_x: [f32; 4],
+    epi: Option<&Epilogue<'_>>,
 ) {
     let m_total = m.rows();
     let omega = &m.omega;
@@ -194,7 +219,7 @@ unsafe fn cser_matmul4_inner<I: Idx>(
             if w0 != 0.0 {
                 v += w0 * (sum_x[lane] - listed[lane]);
             }
-            y[(c + lane) * m_total + r].set(v);
+            y[(c + lane) * m_total + r].set(finish(epi, r, v));
         }
     }
 }
@@ -236,6 +261,33 @@ mod tests {
         let mut y = vec![0.0; 1];
         cser_matvec(&cser, &x, &mut y);
         assert_eq!(y[0], 3.0 + 6.0 + 0.0 + 8.0);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass_both_regimes() {
+        for m in [
+            paper_example_matrix(),
+            Dense::from_rows(&[vec![3.0, 3.0, 0.0, 1.0], vec![3.0, 1.0, 3.0, 3.0]]),
+        ] {
+            let cser = Cser::from_dense(&m);
+            let rows = m.rows();
+            let bias: Vec<f32> = (0..rows).map(|r| 0.5 * r as f32 - 25.0).collect();
+            let x: Vec<f32> = (0..m.cols()).map(|i| i as f32 * 0.4 - 1.0).collect();
+            for relu in [false, true] {
+                let epi = Epilogue { bias: &bias, relu };
+                let mut want = vec![0.0; rows];
+                cser_matvec(&cser, &x, &mut want);
+                for (r, v) in want.iter_mut().enumerate() {
+                    *v += bias[r];
+                    if relu && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                let mut got = vec![0.0; rows];
+                cser_matvec_range_epi(&cser, 0..rows, &x, &mut got, &epi);
+                assert_eq!(got, want, "relu={relu} w0={}", cser.omega[0]);
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Algorithm 2 — CSR dot product: multiply-add over the non-zero entries.
 //! Includes the 4-wide multi-rhs kernel (one index/value stream pass per 4
-//! samples) and the row-range entry points used by the exec plane.
+//! samples), the row-range entry points used by the exec plane, and the
+//! fused [`Epilogue`] (bias + ReLU) applied per output element in-shard.
 
 use std::ops::Range;
 
+use super::{finish, Epilogue};
 use crate::exec::SyncCell;
 use crate::formats::Csr;
 use crate::formats::index::Idx;
@@ -14,7 +16,7 @@ pub fn csr_matvec(m: &Csr, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
     with_col_indices!(&m.col_idx, ci => {
-        csr_matvec_inner(&m.values, ci, &m.row_ptr, 0..m.rows(), x, y)
+        csr_matvec_inner(&m.values, ci, &m.row_ptr, 0..m.rows(), x, y, None)
     });
 }
 
@@ -25,7 +27,25 @@ pub fn csr_matvec_range(m: &Csr, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), rows.len(), "y length");
     with_col_indices!(&m.col_idx, ci => {
-        csr_matvec_inner(&m.values, ci, &m.row_ptr, rows, x, y)
+        csr_matvec_inner(&m.values, ci, &m.row_ptr, rows, x, y, None)
+    });
+}
+
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`csr_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn csr_matvec_range_epi(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.col_idx, ci => {
+        csr_matvec_inner(&m.values, ci, &m.row_ptr, rows, x, y, Some(epi))
     });
 }
 
@@ -36,6 +56,7 @@ fn csr_matvec_inner<I: Idx>(
     rows: Range<usize>,
     x: &[f32],
     y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
 ) {
     for (out, r) in y.iter_mut().zip(rows) {
         let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
@@ -57,7 +78,7 @@ fn csr_matvec_inner<I: Idx>(
         for (v, c) in vch.remainder().iter().zip(cch.remainder()) {
             acc0 += v * x[c.to_usize()];
         }
-        *out = acc0 + acc1;
+        *out = finish(epi, r, acc0 + acc1);
     }
 }
 
@@ -71,10 +92,11 @@ pub fn csr_matmul_colmajor(m: &Csr, x: &[f32], y: &mut [f32], l: usize) {
     let cells = crate::exec::as_cells(y);
     // SAFETY: `y` is exclusively borrowed and this single call covers all
     // rows — no concurrent writer exists.
-    unsafe { csr_matmul_cells(m, 0..m.rows(), x, cells, l) };
+    unsafe { csr_matmul_cells(m, 0..m.rows(), x, cells, l, None) };
 }
 
-/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
 ///
 /// # Safety
 /// No other thread may access rows `rows` of `y` during the call (the
@@ -85,6 +107,7 @@ pub(crate) unsafe fn csr_matmul_cells(
     x: &[f32],
     y: &[SyncCell],
     l: usize,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let (m_total, n) = (m.rows(), m.cols());
     debug_assert_eq!(x.len(), n * l);
@@ -99,7 +122,7 @@ pub(crate) unsafe fn csr_matmul_cells(
                 &x[(c + 2) * n..(c + 3) * n],
                 &x[(c + 3) * n..(c + 4) * n],
             ];
-            csr_matmul4_inner(&m.values, ci, &m.row_ptr, rows.clone(), &xs, y, c, m_total);
+            csr_matmul4_inner(&m.values, ci, &m.row_ptr, rows.clone(), &xs, y, c, m_total, epi);
             c += 4;
         }
         for c in c..l {
@@ -107,7 +130,15 @@ pub(crate) unsafe fn csr_matmul_cells(
             // SAFETY: this shard exclusively owns rows `rows` of every
             // column.
             let yc = crate::exec::cells_as_mut(seg);
-            csr_matvec_inner(&m.values, ci, &m.row_ptr, rows.clone(), &x[c * n..(c + 1) * n], yc);
+            csr_matvec_inner(
+                &m.values,
+                ci,
+                &m.row_ptr,
+                rows.clone(),
+                &x[c * n..(c + 1) * n],
+                yc,
+                epi,
+            );
         }
     });
 }
@@ -124,6 +155,7 @@ unsafe fn csr_matmul4_inner<I: Idx>(
     y: &[SyncCell],
     c: usize,
     m_total: usize,
+    epi: Option<&Epilogue<'_>>,
 ) {
     for r in rows {
         let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
@@ -149,7 +181,7 @@ unsafe fn csr_matmul4_inner<I: Idx>(
             }
         }
         for lane in 0..4 {
-            y[(c + lane) * m_total + r].set(acc0[lane] + acc1[lane]);
+            y[(c + lane) * m_total + r].set(finish(epi, r, acc0[lane] + acc1[lane]));
         }
     }
 }
@@ -190,6 +222,27 @@ mod tests {
         csr_matvec_range(&csr, 0..2, &x, a);
         csr_matvec_range(&csr, 2..5, &x, b);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass() {
+        let csr = Csr::from_dense(&paper_example_matrix());
+        let bias: Vec<f32> = (0..5).map(|r| r as f32 * 0.5 - 40.0).collect();
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        for relu in [false, true] {
+            let epi = Epilogue { bias: &bias, relu };
+            let mut want = vec![0.0; 5];
+            csr_matvec(&csr, &x, &mut want);
+            for (r, v) in want.iter_mut().enumerate() {
+                *v += bias[r];
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut got = vec![0.0; 5];
+            csr_matvec_range_epi(&csr, 0..5, &x, &mut got, &epi);
+            assert_eq!(got, want, "relu={relu}");
+        }
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Algorithm 1 — dense dot product (the standard 3-loop nest), plus the
 //! 4-wide multi-rhs variant and the row-range entry points used by the
-//! exec plane's shards.
+//! exec plane's shards. Every entry point optionally applies a fused
+//! [`Epilogue`] (bias + ReLU) to each output element while the row is
+//! still cache-hot.
 
 use std::ops::Range;
 
+use super::{finish, Epilogue};
 use crate::exec::SyncCell;
 use crate::formats::Dense;
 
@@ -14,7 +17,7 @@ use crate::formats::Dense;
 pub fn dense_matvec(m: &Dense, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), m.rows(), "y length");
-    dense_matvec_rows(m, 0..m.rows(), x, y);
+    dense_matvec_rows(m, 0..m.rows(), x, y, None);
 }
 
 /// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
@@ -24,17 +27,39 @@ pub fn dense_matvec_range(m: &Dense, rows: Range<usize>, x: &[f32], y: &mut [f32
     assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
     assert_eq!(x.len(), m.cols(), "x length");
     assert_eq!(y.len(), rows.len(), "y length");
-    dense_matvec_rows(m, rows, x, y);
+    dense_matvec_rows(m, rows, x, y, None);
 }
 
-fn dense_matvec_rows(m: &Dense, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`dense_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn dense_matvec_range_epi(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    dense_matvec_rows(m, rows, x, y, Some(epi));
+}
+
+pub(crate) fn dense_matvec_rows(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
     for (out, r) in y.iter_mut().zip(rows) {
         let row = m.row(r);
         let mut acc = 0.0f32;
         for (a, b) in row.iter().zip(x) {
             acc += a * b;
         }
-        *out = acc;
+        *out = finish(epi, r, acc);
     }
 }
 
@@ -48,10 +73,11 @@ pub fn dense_matmul_colmajor(m: &Dense, x: &[f32], y: &mut [f32], l: usize) {
     let cells = crate::exec::as_cells(y);
     // SAFETY: `y` is exclusively borrowed and this single call covers all
     // rows — no concurrent writer exists.
-    unsafe { dense_matmul_cells(m, 0..m.rows(), x, cells, l) };
+    unsafe { dense_matmul_cells(m, 0..m.rows(), x, cells, l, None) };
 }
 
-/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view.
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
 ///
 /// # Safety
 /// No other thread may access rows `rows` of `y` during the call (the
@@ -62,6 +88,7 @@ pub(crate) unsafe fn dense_matmul_cells(
     x: &[f32],
     y: &[SyncCell],
     l: usize,
+    epi: Option<&Epilogue<'_>>,
 ) {
     let (m_total, n) = (m.rows(), m.cols());
     debug_assert_eq!(x.len(), n * l);
@@ -83,10 +110,10 @@ pub(crate) unsafe fn dense_matmul_cells(
                 acc[2] += w * x2[i];
                 acc[3] += w * x3[i];
             }
-            y[c * m_total + r].set(acc[0]);
-            y[(c + 1) * m_total + r].set(acc[1]);
-            y[(c + 2) * m_total + r].set(acc[2]);
-            y[(c + 3) * m_total + r].set(acc[3]);
+            y[c * m_total + r].set(finish(epi, r, acc[0]));
+            y[(c + 1) * m_total + r].set(finish(epi, r, acc[1]));
+            y[(c + 2) * m_total + r].set(finish(epi, r, acc[2]));
+            y[(c + 3) * m_total + r].set(finish(epi, r, acc[3]));
         }
         c += 4;
     }
@@ -94,7 +121,7 @@ pub(crate) unsafe fn dense_matmul_cells(
         let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
         // SAFETY: this shard exclusively owns rows `rows` of every column.
         let yc = crate::exec::cells_as_mut(seg);
-        dense_matvec_rows(m, rows.clone(), &x[c * n..(c + 1) * n], yc);
+        dense_matvec_rows(m, rows.clone(), &x[c * n..(c + 1) * n], yc, epi);
     }
 }
 
@@ -141,6 +168,31 @@ mod tests {
         dense_matvec_range(&m, 1..3, &x, b1);
         dense_matvec_range(&m, 3..4, &x, b2);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass() {
+        let m = Dense::from_rows(&[
+            vec![0.1, -0.7, 1.3, 0.0],
+            vec![-2.0, 0.25, -0.5, 1.0],
+            vec![0.3, 0.3, -0.9, 0.7],
+        ]);
+        let bias = vec![0.05f32, -10.0, 0.125];
+        let x = vec![0.5, -1.5, 2.0, 0.25];
+        for relu in [false, true] {
+            let epi = Epilogue { bias: &bias, relu };
+            let mut want = vec![0.0; 3];
+            dense_matvec(&m, &x, &mut want);
+            for (r, v) in want.iter_mut().enumerate() {
+                *v += bias[r];
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut got = vec![0.0; 3];
+            dense_matvec_range_epi(&m, 0..3, &x, &mut got, &epi);
+            assert_eq!(got, want, "relu={relu}");
+        }
     }
 
     #[test]

@@ -23,6 +23,17 @@
 //! because no row's reduction order changes and the Ω[0]-correction sums
 //! are computed once per call and shared, the parallel output is
 //! **bit-identical** to the serial output at every thread count.
+//!
+//! ## Fused epilogue
+//!
+//! Every entry point additionally accepts an [`Epilogue`] — the layer's
+//! bias vector plus a ReLU flag — applied to each output element *inside*
+//! the kernel, while the element is still in registers and its row's
+//! shard is cache-hot. This eliminates the serial `m × batch` post-pass
+//! the engine used to run after every layer product. The fused result is
+//! bit-identical to the unfused one by construction: the epilogue
+//! performs the exact same `acc + bias[r]` add followed by the same
+//! `< 0.0` clamp the post-pass did, in the same order.
 
 pub(crate) mod cer_k;
 pub(crate) mod cser_k;
@@ -30,10 +41,10 @@ mod csr_k;
 mod dense_k;
 pub mod packed;
 
-pub use cer_k::{cer_matmul_colmajor, cer_matvec, cer_matvec_range};
-pub use cser_k::{cser_matmul_colmajor, cser_matvec, cser_matvec_range};
-pub use csr_k::{csr_matmul_colmajor, csr_matvec, csr_matvec_range};
-pub use dense_k::{dense_matmul_colmajor, dense_matvec, dense_matvec_range};
+pub use cer_k::{cer_matmul_colmajor, cer_matvec, cer_matvec_range, cer_matvec_range_epi};
+pub use cser_k::{cser_matmul_colmajor, cser_matvec, cser_matvec_range, cser_matvec_range_epi};
+pub use csr_k::{csr_matmul_colmajor, csr_matvec, csr_matvec_range, csr_matvec_range_epi};
+pub use dense_k::{dense_matmul_colmajor, dense_matvec, dense_matvec_range, dense_matvec_range_epi};
 pub use packed::PackedDense;
 
 use std::ops::Range;
@@ -54,12 +65,67 @@ pub(crate) fn correction_sum(w0: f32, x: &[f32]) -> f32 {
 
 /// Per-rhs-column `Σx` (columns of length `n`, `l` of them), computed once
 /// per matmul call — never per shard or per 4-lane group. Empty when no
-/// correction applies.
+/// correction applies. Delegates to [`correction_col_sums_into`] so the
+/// summation order — which the fused/unfused bit-identity contract hangs
+/// on — exists in exactly one place.
 pub(crate) fn correction_col_sums(w0: f32, x: &[f32], n: usize, l: usize) -> Vec<f32> {
     if w0 != 0.0 {
-        (0..l).map(|c| x[c * n..(c + 1) * n].iter().sum()).collect()
+        let mut out = vec![0.0f32; l];
+        correction_col_sums_into(x, n, l, &mut out);
+        out
     } else {
         Vec::new()
+    }
+}
+
+/// Allocation-free form of the per-column correction sum — the single
+/// definition of the summation order, reused by the pipeline's pre-sized
+/// lane scratch and by [`correction_col_sums`], so the result is
+/// bit-identical wherever it is computed.
+pub(crate) fn correction_col_sums_into(x: &[f32], n: usize, l: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= l);
+    for (c, s) in out.iter_mut().take(l).enumerate() {
+        *s = x[c * n..(c + 1) * n].iter().sum();
+    }
+}
+
+/// A fused per-row output transform — the layer's bias add and optional
+/// ReLU — applied by the kernels while each output element is still in
+/// registers.
+///
+/// Determinism contract: `apply` performs exactly `v + bias[r]` then the
+/// `< 0.0` clamp, matching the engine's historical unfused post-pass
+/// element for element, so fused output is bit-identical to unfused.
+/// `bias.len()` must cover every row the kernel computes.
+#[derive(Clone, Copy, Debug)]
+pub struct Epilogue<'a> {
+    /// Per-output-row bias (length ≥ the matrix's row count).
+    pub bias: &'a [f32],
+    /// Clamp negatives to zero (hidden layers; the last layer passes
+    /// logits through unclamped).
+    pub relu: bool,
+}
+
+impl Epilogue<'_> {
+    /// Finish one output element of global row `r`.
+    #[inline(always)]
+    pub fn apply(&self, r: usize, v: f32) -> f32 {
+        let v = v + self.bias[r];
+        if self.relu && v < 0.0 {
+            0.0
+        } else {
+            v
+        }
+    }
+}
+
+/// Apply an optional epilogue — the single finishing helper every kernel
+/// write site goes through (the branch is loop-invariant and hoisted).
+#[inline(always)]
+pub(crate) fn finish(epi: Option<&Epilogue<'_>>, r: usize, v: f32) -> f32 {
+    match epi {
+        Some(e) => e.apply(r, v),
+        None => v,
     }
 }
 
@@ -151,22 +217,50 @@ impl AnyMatrix {
         }
     }
 
+    /// Shard entry with a fused epilogue: bit-identical to
+    /// [`AnyMatrix::matvec_range`] followed by the bias/ReLU post-pass
+    /// over the same rows.
+    pub fn matvec_range_epi(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &mut [f32],
+        epi: &Epilogue<'_>,
+    ) {
+        match self {
+            AnyMatrix::Dense(m) => dense_k::dense_matvec_range_epi(m, rows, x, y, epi),
+            AnyMatrix::Csr(m) => csr_k::csr_matvec_range_epi(m, rows, x, y, epi),
+            AnyMatrix::Cer(m) => cer_k::cer_matvec_range_epi(m, rows, x, y, epi),
+            AnyMatrix::Cser(m) => cser_k::cser_matvec_range_epi(m, rows, x, y, epi),
+        }
+    }
+
     /// Range dispatch with the Ω[0]-correction `Σx` precomputed by the
     /// caller (ignored by dense/CSR), so every shard of one product shares
     /// the identical sum.
-    fn matvec_range_with(&self, rows: Range<usize>, x: &[f32], y: &mut [f32], sum_x: f32) {
+    fn matvec_range_with(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &mut [f32],
+        sum_x: f32,
+        epi: Option<&Epilogue<'_>>,
+    ) {
         match self {
-            AnyMatrix::Dense(m) => dense_k::dense_matvec_range(m, rows, x, y),
-            AnyMatrix::Csr(m) => csr_k::csr_matvec_range(m, rows, x, y),
-            AnyMatrix::Cer(m) => cer_k::cer_matvec_range_with(m, rows, x, y, sum_x),
-            AnyMatrix::Cser(m) => cser_k::cser_matvec_range_with(m, rows, x, y, sum_x),
+            AnyMatrix::Dense(m) => dense_k::dense_matvec_rows(m, rows, x, y, epi),
+            AnyMatrix::Csr(m) => match epi {
+                Some(e) => csr_k::csr_matvec_range_epi(m, rows, x, y, e),
+                None => csr_k::csr_matvec_range(m, rows, x, y),
+            },
+            AnyMatrix::Cer(m) => cer_k::cer_matvec_range_with(m, rows, x, y, sum_x, epi),
+            AnyMatrix::Cser(m) => cser_k::cser_matvec_range_with(m, rows, x, y, sum_x, epi),
         }
     }
 
     /// The implicit codebook value Ω[0] when this format carries the
     /// decomposition correction (0.0 otherwise — also for dense/CSR,
     /// which store every non-zero explicitly).
-    fn correction_w0(&self) -> f32 {
+    pub(crate) fn correction_w0(&self) -> f32 {
         match self {
             AnyMatrix::Cer(m) => m.omega.first().copied().unwrap_or(0.0),
             AnyMatrix::Cser(m) => m.omega.first().copied().unwrap_or(0.0),
@@ -219,13 +313,26 @@ impl AnyMatrix {
     /// once and shared by all shards. Single-shard plans and worker-less
     /// pools take the serial path unchanged.
     pub fn matvec_sharded(&self, x: &[f32], y: &mut [f32], plan: &ShardPlan, pool: &ThreadPool) {
+        self.matvec_sharded_epi(x, y, plan, pool, None);
+    }
+
+    /// [`AnyMatrix::matvec_sharded`] with a fused bias+ReLU epilogue
+    /// applied inside each shard while its rows are cache-hot.
+    pub fn matvec_sharded_epi(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        plan: &ShardPlan,
+        pool: &ThreadPool,
+        epi: Option<&Epilogue<'_>>,
+    ) {
         assert_eq!(x.len(), self.cols(), "x length");
         assert_eq!(y.len(), self.rows(), "y length");
         assert_eq!(plan.rows(), self.rows(), "plan/matrix row mismatch");
-        if plan.shard_count() <= 1 || pool.workers() == 0 {
-            return self.matvec(x, y);
-        }
         let sum_x = self.rhs_sum(x);
+        if plan.shard_count() <= 1 || pool.workers() == 0 {
+            return self.matvec_range_with(0..self.rows(), x, y, sum_x, epi);
+        }
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
             Vec::with_capacity(plan.shard_count());
         let mut rest: &mut [f32] = y;
@@ -233,7 +340,7 @@ impl AnyMatrix {
             let slab = rest;
             let (mine, tail) = slab.split_at_mut(r.len());
             rest = tail;
-            tasks.push(Box::new(move || self.matvec_range_with(r, x, mine, sum_x)));
+            tasks.push(Box::new(move || self.matvec_range_with(r, x, mine, sum_x, epi)));
         }
         debug_assert!(rest.is_empty());
         pool.run_scoped(tasks);
@@ -280,6 +387,19 @@ impl AnyMatrix {
     /// pass per 4 samples — §Perf iteration 4); dense/CSR outputs are
     /// bit-identical to per-column [`AnyMatrix::matvec`].
     pub fn matmul_colmajor(&self, x: &[f32], y: &mut [f32], l: usize) {
+        self.matmul_colmajor_epi(x, y, l, None);
+    }
+
+    /// [`AnyMatrix::matmul_colmajor`] with a fused bias+ReLU epilogue —
+    /// the engine's serial fused forward step. Bit-identical to the
+    /// unfused product followed by the bias/ReLU post-pass.
+    pub fn matmul_colmajor_epi(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        l: usize,
+        epi: Option<&Epilogue<'_>>,
+    ) {
         let (m, n) = (self.rows(), self.cols());
         assert_eq!(x.len(), n * l, "rhs shape");
         assert_eq!(y.len(), m * l, "out shape");
@@ -287,12 +407,25 @@ impl AnyMatrix {
         let cells = exec::as_cells(y);
         // SAFETY: `y` is exclusively borrowed and this single call covers
         // all rows — no concurrent writer exists.
-        unsafe { self.matmul_cells(0..m, x, cells, l, &sums) };
+        unsafe { self.matmul_cells_epi(0..m, x, cells, l, &sums, epi) };
     }
 
     /// Shard entry: compute rows `rows` of `Y = M·X` into the *full-size*
     /// column-major `y` (`rows() × l`); other rows are left untouched.
     pub fn matmul_colmajor_range(&self, rows: Range<usize>, x: &[f32], y: &mut [f32], l: usize) {
+        self.matmul_colmajor_range_epi(rows, x, y, l, None);
+    }
+
+    /// [`AnyMatrix::matmul_colmajor_range`] with a fused bias+ReLU
+    /// epilogue applied to the computed rows.
+    pub fn matmul_colmajor_range_epi(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &mut [f32],
+        l: usize,
+        epi: Option<&Epilogue<'_>>,
+    ) {
         let (m, n) = (self.rows(), self.cols());
         assert!(rows.start <= rows.end && rows.end <= m, "row range");
         assert_eq!(x.len(), n * l, "rhs shape");
@@ -300,26 +433,30 @@ impl AnyMatrix {
         let sums = self.rhs_col_sums(x, l);
         let cells = exec::as_cells(y);
         // SAFETY: `y` is exclusively borrowed — no concurrent writer.
-        unsafe { self.matmul_cells(rows, x, cells, l, &sums) };
+        unsafe { self.matmul_cells_epi(rows, x, cells, l, &sums, epi) };
     }
 
-    /// Format dispatch for the cell-writing matmul kernels.
+    /// Format dispatch for the cell-writing matmul kernels — the shard
+    /// unit the sharded driver and the forward [`crate::exec::Pipeline`]
+    /// schedule. `col_sums` must hold the per-column correction sums
+    /// (when Ω[0] ≠ 0) computed with [`correction_col_sums`]'s order.
     ///
     /// # Safety
     /// No other thread may access rows `rows` of `y` during the call.
-    unsafe fn matmul_cells(
+    pub(crate) unsafe fn matmul_cells_epi(
         &self,
         rows: Range<usize>,
         x: &[f32],
         y: &[SyncCell],
         l: usize,
         col_sums: &[f32],
+        epi: Option<&Epilogue<'_>>,
     ) {
         match self {
-            AnyMatrix::Dense(m) => dense_k::dense_matmul_cells(m, rows, x, y, l),
-            AnyMatrix::Csr(m) => csr_k::csr_matmul_cells(m, rows, x, y, l),
-            AnyMatrix::Cer(m) => cer_k::cer_matmul_cells(m, rows, x, y, l, col_sums),
-            AnyMatrix::Cser(m) => cser_k::cser_matmul_cells(m, rows, x, y, l, col_sums),
+            AnyMatrix::Dense(m) => dense_k::dense_matmul_cells(m, rows, x, y, l, epi),
+            AnyMatrix::Csr(m) => csr_k::csr_matmul_cells(m, rows, x, y, l, epi),
+            AnyMatrix::Cer(m) => cer_k::cer_matmul_cells(m, rows, x, y, l, col_sums, epi),
+            AnyMatrix::Cser(m) => cser_k::cser_matmul_cells(m, rows, x, y, l, col_sums, epi),
         }
     }
 
@@ -335,12 +472,27 @@ impl AnyMatrix {
         plan: &ShardPlan,
         pool: &ThreadPool,
     ) {
+        self.matmul_colmajor_sharded_epi(x, y, l, plan, pool, None);
+    }
+
+    /// [`AnyMatrix::matmul_colmajor_sharded`] with a fused bias+ReLU
+    /// epilogue applied inside each shard while its rows are cache-hot —
+    /// no serial post-pass remains.
+    pub fn matmul_colmajor_sharded_epi(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        l: usize,
+        plan: &ShardPlan,
+        pool: &ThreadPool,
+        epi: Option<&Epilogue<'_>>,
+    ) {
         let (m, n) = (self.rows(), self.cols());
         assert_eq!(x.len(), n * l, "rhs shape");
         assert_eq!(y.len(), m * l, "out shape");
         assert_eq!(plan.rows(), m, "plan/matrix row mismatch");
         if plan.shard_count() <= 1 || pool.workers() == 0 {
-            return self.matmul_colmajor(x, y, l);
+            return self.matmul_colmajor_epi(x, y, l, epi);
         }
         let sums = self.rhs_col_sums(x, l);
         let sums_ref: &[f32] = &sums;
@@ -350,7 +502,7 @@ impl AnyMatrix {
             .map(|r| {
                 // SAFETY: plan shards are disjoint and covering, so each
                 // task writes a private row range of `y`.
-                Box::new(move || unsafe { self.matmul_cells(r, x, cells, l, sums_ref) })
+                Box::new(move || unsafe { self.matmul_cells_epi(r, x, cells, l, sums_ref, epi) })
                     as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
@@ -488,6 +640,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_across_formats() {
+        // matmul + serial post-pass (the historical engine loop) vs the
+        // in-kernel epilogue — must be assert_eq!-identical for every
+        // format, both Ω[0] regimes, and every batch width incl. the
+        // 4-wide and remainder paths.
+        let mut rng = Rng::new(0xEF1);
+        for mat in [
+            paper_example_matrix(),
+            Dense::from_rows(&[vec![5.0, 5.0, 2.0], vec![5.0, 1.0, 5.0], vec![5.0, 5.0, 5.0]]),
+        ] {
+            let (m, n) = (mat.rows(), mat.cols());
+            let bias: Vec<f32> = (0..m).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            for l in [1usize, 3, 4, 5, 8] {
+                let x: Vec<f32> = (0..n * l).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                for kind in FormatKind::ALL {
+                    let a = AnyMatrix::encode(kind, &mat);
+                    for relu in [false, true] {
+                        let mut want = vec![0.0; m * l];
+                        a.matmul_colmajor(&x, &mut want, l);
+                        for c in 0..l {
+                            for r in 0..m {
+                                let v = &mut want[c * m + r];
+                                *v += bias[r];
+                                if relu && *v < 0.0 {
+                                    *v = 0.0;
+                                }
+                            }
+                        }
+                        let epi = Epilogue { bias: &bias, relu };
+                        let mut got = vec![0.0; m * l];
+                        a.matmul_colmajor_epi(&x, &mut got, l, Some(&epi));
+                        assert_eq!(got, want, "{kind:?} l={l} relu={relu}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_into_matches_allocating_variant() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.7).collect();
+        let want = correction_col_sums(1.0, &x, 4, 3);
+        let mut got = [0.0f32; 3];
+        correction_col_sums_into(&x, 4, 3, &mut got);
+        assert_eq!(&got[..], &want[..]);
     }
 
     #[test]

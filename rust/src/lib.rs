@@ -39,11 +39,16 @@
 //!
 //! * [`formats`] — the four matrix containers and conversions.
 //! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4),
-//!   each with row-range entry points for sharded execution.
+//!   each with row-range entry points for sharded execution and a fused
+//!   [`kernels::Epilogue`] (bias + ReLU applied in-shard, while each
+//!   output row is cache-hot).
 //! * [`exec`] — the multi-core execution plane: a persistent scoped
 //!   thread pool plus per-layer [`exec::ShardPlan`]s that partition rows
-//!   by stored-index (nnz) count; parallel results are bit-identical to
-//!   serial at every thread count (`--threads` / `CER_THREADS` knob).
+//!   by stored-index (nnz) count, and the [`exec::Pipeline`] job type
+//!   that submits a whole forward pass in one dispatch with a
+//!   [`exec::WaveBarrier`] between layers; parallel results are
+//!   bit-identical to serial at every thread count (`--threads` /
+//!   `CER_THREADS` knob).
 //! * [`costmodel`] — op traces, the Table-I energy model, the calibrated
 //!   time model, and the closed-form equations of §IV.
 //! * [`stats`] — entropy statistics, the (H, p₀)-plane synthesizer,
@@ -51,8 +56,10 @@
 //! * [`compress`] — pruning / k-means clustering / the §V-C pipeline.
 //! * [`networks`] — the evaluation model zoo + weight synthesis.
 //! * [`coordinator`] — format auto-selection, the layer engine, and the
-//!   threaded serving loop with dynamic batching; batch matmuls fan out
-//!   across the exec plane when threads are configured.
+//!   threaded serving loop with dynamic batching. The native forward pass
+//!   is fully fused: bias+ReLU run inside the sharded kernels, the layer
+//!   sequence is one pool dispatch, and a double-buffered activation
+//!   arena makes the steady-state path allocation-free per request.
 //! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
 //!   compressed network (selected formats, codebooks, biases, provenance
 //!   manifest, per-section checksums) serialized once and cold-started by

@@ -129,7 +129,10 @@ System commands:
   e2e                        end-to-end inference over the AOT artifacts
                              (XLA backends skip gracefully when the crate
                              is built without the `xla` feature)
-  serve                      demo inference server (batching + metrics)
+  serve                      demo inference server (dynamic batching +
+                             metrics); --threads N fans every batch —
+                             including 1–3 sample remainders — across the
+                             exec pool's fused forward pipeline
   inspect --net <name>       print layer statistics of a synthesized net
   help                       this text
 
@@ -144,7 +147,9 @@ Common flags:
   --threads N       kernel execution threads for pack/e2e/serve engines
                     (0 = all cores; default: CER_THREADS env, else 1 =
                     serial). Parallel output is bit-identical to serial —
-                    rows are sharded by stored-index count per layer.
+                    rows are sharded by stored-index count per layer, the
+                    bias+ReLU epilogue is fused into each shard, and one
+                    forward pass costs one pool dispatch.
 ";
 
 /// `--threads` as an explicit request: a number, or `auto`/`0` for all

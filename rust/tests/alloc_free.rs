@@ -1,0 +1,102 @@
+//! Steady-state allocation accounting for the fused forward path.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after a
+//! warm-up that establishes the activation arena's high-water mark and
+//! the caller buffer's capacity, repeated [`Engine::forward_into`] calls
+//! must perform **zero heap allocations** — serial *and* pipelined. The
+//! pipeline achieves this because `ThreadPool::run_lanes` dispatches by
+//! reference (no boxed closures, no channel nodes) and the per-layer
+//! barrier is two atomics.
+//!
+//! This file deliberately contains a single `#[test]`: the allocation
+//! counter is process-global, and a concurrently running sibling test
+//! would pollute the count. (std's Mutex/Condvar are futex-based on
+//! Linux and allocation-free after initialization, which the warm-up
+//! covers.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cer::coordinator::Engine;
+use cer::formats::{Dense, FormatKind};
+use cer::util::Rng;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; only adds relaxed counting.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn quantized(rows: usize, cols: usize, rng: &mut Rng) -> Dense {
+    let grid = [0.0f32, 0.0, 0.0, 0.5, -0.25, 1.0];
+    Dense::from_vec(rows, cols, (0..rows * cols).map(|_| grid[rng.below(6)]).collect())
+}
+
+#[test]
+fn forward_into_is_allocation_free_after_warmup() {
+    let mut rng = Rng::new(0xA110C);
+    let layers = vec![
+        ("fc0".to_string(), quantized(48, 32, &mut rng), vec![0.01; 48]),
+        ("fc1".to_string(), quantized(24, 48, &mut rng), vec![-0.02; 24]),
+        ("fc2".to_string(), quantized(10, 24, &mut rng), vec![0.0; 10]),
+    ];
+    let batch = 4usize;
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.f32() - 0.5).collect();
+
+    for (threads, format) in [
+        (1usize, FormatKind::Cser),
+        (4, FormatKind::Cser),
+        (4, FormatKind::Dense),
+        (4, FormatKind::Csr),
+        (4, FormatKind::Cer),
+    ] {
+        let mut engine = Engine::native_fixed(layers.clone(), format).with_threads(threads);
+        engine.reserve_batch(batch);
+        let mut out: Vec<f32> = Vec::new();
+        // Warm up: arena high-water mark, `out` capacity, lazy lock/TLS
+        // initialization inside std, and the reference answer.
+        let mut want = Vec::new();
+        for _ in 0..3 {
+            engine.forward_into(&x, batch, &mut out).unwrap();
+            want = out.clone();
+        }
+
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..25 {
+            engine.forward_into(&x, batch, &mut out).unwrap();
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state forward_into allocated ({} allocs / 25 calls) \
+             at threads={threads} format={format:?}",
+            after - before
+        );
+        // And it still computes the right thing.
+        assert_eq!(out, want, "threads={threads} format={format:?}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Fused-forward property suite: the pipelined forward pass (in-shard
+//! bias+ReLU epilogue, one pool dispatch per forward, activation arena)
+//! must be **bit-identical** — asserted with `assert_eq!`, never
+//! tolerances — to the PR-2 unfused path (matmul, then a serial
+//! `m × batch` bias+ReLU post-pass) across every format, every physical
+//! index width (u8/u16/u32 columns), thread counts {1, 2, 4, 7} and batch
+//! sizes {1, 3, 4, 8}; including the last-layer no-ReLU contract and an
+//! all-negative-activation network.
+
+use cer::coordinator::Engine;
+use cer::formats::{Dense, FormatKind, IndexWidth};
+use cer::kernels::AnyMatrix;
+use cer::util::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+const BATCHES: [usize; 4] = [1, 3, 4, 8];
+
+/// Random quantized layer. `implicit_zero` selects the Ω[0] regime: true →
+/// zeros dominate (decomposed hot path), false → 5.0 dominates (the
+/// Ω[0] ≠ 0 correction path in CER/CSER).
+fn sample_matrix(rows: usize, cols: usize, implicit_zero: bool, rng: &mut Rng) -> Dense {
+    let dominant = if implicit_zero { 0.0f32 } else { 5.0f32 };
+    let rare = [1.0f32, -2.0, 0.25, 3.5, -0.75];
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            if rng.f32() < 0.6 {
+                dominant
+            } else {
+                rare[rng.below(rare.len())]
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+fn sample_bias(rows: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..rows).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// The PR-2 unfused forward pass, reimplemented in-test from the public
+/// kernel API (independent of `Engine::forward_reference`): per-layer
+/// unfused matmul, then the serial bias+ReLU post-pass with the epilogue's
+/// exact add order (`acc + bias[r]`, then clamp).
+fn unfused_forward(
+    layers: &[(String, Dense, Vec<f32>)],
+    kind: FormatKind,
+    x: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    let last = layers.len() - 1;
+    let mut cur: Vec<f32> = x.to_vec();
+    for (i, (_, w, bias)) in layers.iter().enumerate() {
+        let enc = AnyMatrix::encode(kind, w);
+        let m = enc.rows();
+        let mut out = vec![0.0f32; m * batch];
+        enc.matmul_colmajor(&cur, &mut out, batch);
+        for s in 0..batch {
+            let col = &mut out[s * m..(s + 1) * m];
+            for (v, b) in col.iter_mut().zip(bias) {
+                *v += b;
+                if i != last && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        cur = out;
+    }
+    cur
+}
+
+fn assert_fused_matches(
+    layers: &[(String, Dense, Vec<f32>)],
+    rng: &mut Rng,
+    label: &str,
+) {
+    let in_dim = layers[0].1.cols();
+    for kind in FormatKind::ALL {
+        for &batch in &BATCHES {
+            let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let want = unfused_forward(layers, kind, &x, batch);
+            for &t in &THREADS {
+                let mut e = Engine::native_fixed(layers.to_vec(), kind).with_threads(t);
+                let got = e.forward(&x, batch).unwrap();
+                assert_eq!(got, want, "{label}: {kind:?} batch={batch} t={t}");
+                // Both paths on one engine agree too (reference path uses
+                // the engine's own sharded drivers).
+                assert_eq!(
+                    e.forward_reference(&x, batch),
+                    want,
+                    "{label}: reference {kind:?} batch={batch} t={t}"
+                );
+                // Repeat on the warm arena: reuse must not drift.
+                assert_eq!(
+                    e.forward(&x, batch).unwrap(),
+                    want,
+                    "{label}: warm {kind:?} batch={batch} t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_bit_identical_u8_indices_both_regimes() {
+    let mut rng = Rng::new(0xF0_5E);
+    for implicit_zero in [true, false] {
+        let layers = vec![
+            (
+                "fc0".to_string(),
+                sample_matrix(23, 37, implicit_zero, &mut rng),
+                sample_bias(23, &mut rng),
+            ),
+            (
+                "fc1".to_string(),
+                sample_matrix(11, 23, implicit_zero, &mut rng),
+                sample_bias(11, &mut rng),
+            ),
+            (
+                "fc2".to_string(),
+                sample_matrix(5, 11, implicit_zero, &mut rng),
+                sample_bias(5, &mut rng),
+            ),
+        ];
+        for (_, w, _) in &layers {
+            if let AnyMatrix::Cer(c) = AnyMatrix::encode(FormatKind::Cer, w) {
+                assert_eq!(c.col_idx.width(), IndexWidth::minimal(w.cols() - 1));
+                assert_eq!(c.omega[0] != 0.0, !implicit_zero, "Ω[0] regime");
+            }
+        }
+        assert_fused_matches(&layers, &mut rng, &format!("u8/iz={implicit_zero}"));
+    }
+}
+
+#[test]
+fn fused_bit_identical_u16_indices() {
+    // 700 columns forces physically u16 column indices in the first layer.
+    let mut rng = Rng::new(0xF16);
+    let layers = vec![
+        (
+            "wide".to_string(),
+            sample_matrix(9, 700, true, &mut rng),
+            sample_bias(9, &mut rng),
+        ),
+        (
+            "head".to_string(),
+            sample_matrix(4, 9, true, &mut rng),
+            sample_bias(4, &mut rng),
+        ),
+    ];
+    if let AnyMatrix::Cser(c) = AnyMatrix::encode(FormatKind::Cser, &layers[0].1) {
+        assert_eq!(c.col_idx.width(), IndexWidth::U16);
+    }
+    assert_fused_matches(&layers, &mut rng, "u16");
+}
+
+#[test]
+fn fused_bit_identical_u32_indices() {
+    // 70_000 columns forces u32 indices; keep rows tiny so the suite
+    // stays fast. Fewer rows than threads also exercises lane idling.
+    let mut rng = Rng::new(0xF32);
+    let layers = vec![
+        (
+            "huge".to_string(),
+            sample_matrix(3, 70_000, true, &mut rng),
+            sample_bias(3, &mut rng),
+        ),
+        (
+            "head".to_string(),
+            sample_matrix(2, 3, true, &mut rng),
+            sample_bias(2, &mut rng),
+        ),
+    ];
+    if let AnyMatrix::Cer(c) = AnyMatrix::encode(FormatKind::Cer, &layers[0].1) {
+        assert_eq!(c.col_idx.width(), IndexWidth::U32);
+    }
+    let in_dim = layers[0].1.cols();
+    // Trim the matrix-product grid for this big shape: two batches.
+    for kind in FormatKind::ALL {
+        for batch in [1usize, 4] {
+            let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.f32() - 0.5).collect();
+            let want = unfused_forward(&layers, kind, &x, batch);
+            for &t in &THREADS {
+                let mut e = Engine::native_fixed(layers.clone(), kind).with_threads(t);
+                assert_eq!(e.forward(&x, batch).unwrap(), want, "{kind:?} b={batch} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn last_layer_logits_are_not_clamped() {
+    // A network whose logits are all negative: the fused epilogue must
+    // skip ReLU on the last layer exactly like the unfused post-pass.
+    let w0 = Dense::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+    let w1 = Dense::from_rows(&[vec![-1.0, -1.0], vec![-2.0, 0.0], vec![0.0, -3.0]]);
+    let layers = vec![
+        ("id".to_string(), w0, vec![0.0, 0.0]),
+        ("neg".to_string(), w1, vec![-0.5, -0.25, -0.125]),
+    ];
+    for kind in FormatKind::ALL {
+        for &t in &THREADS {
+            let mut e = Engine::native_fixed(layers.clone(), kind).with_threads(t);
+            let y = e.forward(&[1.0, 2.0], 1).unwrap();
+            assert_eq!(y, vec![-3.5, -2.25, -6.125], "{kind:?} t={t}");
+            assert!(y.iter().all(|&v| v < 0.0), "logits must stay negative");
+        }
+    }
+}
+
+#[test]
+fn all_negative_hidden_activations_zero_out() {
+    // Every hidden pre-activation is negative → ReLU zeroes the entire
+    // hidden layer → logits equal exactly the last layer's bias.
+    let w0 = Dense::from_rows(&[vec![-1.0, -2.0, -1.0], vec![-3.0, -1.0, -2.0]]);
+    let w1 = Dense::from_rows(&[vec![4.0, 5.0]]);
+    let layers = vec![
+        ("allneg".to_string(), w0, vec![-1.0, -2.0]),
+        ("head".to_string(), w1, vec![0.75]),
+    ];
+    let x = vec![1.0f32, 2.0, 3.0]; // positive inputs, negative weights
+    for kind in FormatKind::ALL {
+        for &batch in &[1usize, 3] {
+            let xs: Vec<f32> = x.iter().cycle().take(batch * 3).copied().collect();
+            for &t in &THREADS {
+                let mut e = Engine::native_fixed(layers.clone(), kind).with_threads(t);
+                let y = e.forward(&xs, batch).unwrap();
+                assert_eq!(y, vec![0.75f32; batch], "{kind:?} batch={batch} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn changing_batch_and_threads_on_one_engine_stays_exact() {
+    // One long-lived engine (the serving scenario): interleave thread and
+    // batch reconfiguration; every answer must stay bit-identical to the
+    // freshly computed unfused reference.
+    let mut rng = Rng::new(0xABCD);
+    let layers = vec![
+        (
+            "fc0".to_string(),
+            sample_matrix(31, 17, true, &mut rng),
+            sample_bias(31, &mut rng),
+        ),
+        (
+            "fc1".to_string(),
+            sample_matrix(13, 31, false, &mut rng),
+            sample_bias(13, &mut rng),
+        ),
+        (
+            "fc2".to_string(),
+            sample_matrix(6, 13, true, &mut rng),
+            sample_bias(6, &mut rng),
+        ),
+    ];
+    let mut e = Engine::native_fixed(layers.clone(), FormatKind::Cser);
+    for (t, batch) in [(4usize, 8usize), (1, 1), (7, 3), (2, 8), (4, 1), (1, 4)] {
+        e.set_threads(t);
+        let x: Vec<f32> = (0..batch * 17).map(|_| rng.f32() - 0.5).collect();
+        let want = unfused_forward(&layers, FormatKind::Cser, &x, batch);
+        assert_eq!(e.forward(&x, batch).unwrap(), want, "t={t} batch={batch}");
+    }
+}
