@@ -11,9 +11,21 @@
 //! path) vs. **unfused** (the retained PR-2 reference: per-call input
 //! copy, per-layer dispatch, serial bias+ReLU post-pass).
 //!
-//! Results are printed and written to `BENCH_dot.json` (an object with a
-//! `"dot"` and a `"forward"` array) so the multi-core perf trajectory has
-//! a baseline.
+//! Section "selection": the thread-aware format selector's evidence
+//! trail. For every (net, format, thread-count) cell it records the cost
+//! model's *predicted* pass time (`TimeModel::sharded_ns` over each
+//! format's own shard plan — exactly what `select_format_in` ranks by)
+//! next to the *measured* pass time from the "dot" section, plus the
+//! model's and the measurement's per-thread-count winners and whether
+//! they agree — the data for auditing where the model mis-ranks. It also
+//! includes the documented `spike-and-slab` matrix
+//! (`cer::stats::synth::spike_and_slab(8, 255, 2)`) whose modeled winner
+//! flips from CSR at 1 thread to dense at 8 — the canonical case where
+//! `--threads` changes the chosen format.
+//!
+//! Results are printed and written to `BENCH_dot.json` (an object with
+//! `"dot"`, `"forward"` and `"selection"` arrays) so the multi-core perf
+//! trajectory has a baseline.
 //!
 //! Run: `cargo bench --bench dot`
 //! CI smoke mode (small shapes, few iterations): `cargo bench --bench dot
@@ -29,11 +41,12 @@
 use std::io::Write as _;
 
 use cer::coordinator::{Engine, Objective};
-use cer::costmodel::{EnergyModel, TimeModel};
+use cer::costmodel::{trace_matvec, EnergyModel, TimeModel};
 use cer::exec::ExecPlane;
 use cer::formats::FormatKind;
 use cer::kernels::AnyMatrix;
 use cer::networks::weights::synthesize_zoo_layers;
+use cer::stats::synth::spike_and_slab;
 use cer::util::bench::{fmt_ns, time_median_ns};
 use cer::util::Rng;
 
@@ -58,6 +71,28 @@ struct FwdRow {
     fused_speedup: f64,
 }
 
+/// One (net, format, thread-count) cell of the selection audit:
+/// model-predicted vs measured whole-pass time.
+struct SelRow {
+    net: String,
+    format: &'static str,
+    threads: usize,
+    predicted_ns: f64,
+    measured_ns: f64,
+}
+
+/// Format with the minimal `f` over `cells` (first wins ties — the same
+/// tie-break as the selector's argmin).
+fn argmin_format(cells: &[&SelRow], f: impl Fn(&SelRow) -> f64) -> &'static str {
+    let mut best = 0usize;
+    for i in 1..cells.len() {
+        if f(cells[i]) < f(cells[best]) {
+            best = i;
+        }
+    }
+    cells[best].format
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let scale: usize = std::env::var("BENCH_DOT_SCALE")
@@ -79,6 +114,8 @@ fn main() {
     let mut rng = Rng::new(0xD07);
     let mut rows: Vec<Row> = Vec::new();
     let mut fwd_rows: Vec<FwdRow> = Vec::new();
+    let mut sel_rows: Vec<SelRow> = Vec::new();
+    let tm = TimeModel::default_model();
     let batch = 8usize;
     for (net, net_scale) in cases {
         let (spec, layers) = synthesize_zoo_layers(net, net_scale, 0xCE5E).expect("zoo net");
@@ -105,6 +142,12 @@ fn main() {
                 .map(|a| (0..a.cols()).map(|_| rng.f32() - 0.5).collect())
                 .collect();
             let mut ys: Vec<Vec<f32>> = encoded.iter().map(|a| vec![0.0; a.rows()]).collect();
+            // Per-layer serial model estimates — the inputs the selector's
+            // sharded projection scales per thread count.
+            let layer_serial_ns: Vec<f64> = encoded
+                .iter()
+                .map(|a| trace_matvec(a).time_ns(&tm))
+                .collect();
 
             let mut base_ns = f64::NAN;
             let mut line = format!("{:<14} {:<6}", spec.name, kind.name());
@@ -138,6 +181,18 @@ fn main() {
                     gflops,
                     speedup_vs_1t: speedup,
                 });
+                let predicted_ns: f64 = layer_serial_ns
+                    .iter()
+                    .zip(&plans)
+                    .map(|(&s, p)| if t > 1 { tm.sharded_ns(s, p) } else { s })
+                    .sum();
+                sel_rows.push(SelRow {
+                    net: spec.name.to_string(),
+                    format: kind.name(),
+                    threads: t,
+                    predicted_ns,
+                    measured_ns: pass_ns,
+                });
             }
             println!("{line}");
             // Acceptance trace: 4-thread CER/CSER scaling on big nets.
@@ -167,7 +222,6 @@ fn main() {
             .max_by_key(|(_, m)| m.rows() * m.cols())
         {
             let plan = AnyMatrix::encode(FormatKind::Cer, biggest).shard_plan(4);
-            let tm = TimeModel::default_model();
             // Nominal 1 ns per stored index keeps the dispatch overhead
             // on a realistic scale relative to the layer's size.
             let serial_ns = plan.total_work() as f64;
@@ -220,6 +274,79 @@ fn main() {
         println!("{line}");
     }
 
+    // Documented selection-flip case: one fully-dense spike row + 7
+    // nearly-empty slab rows. No shard plan can split the spike, so the
+    // sparse formats' parallel critical path stays ~the whole spike row
+    // while dense shards its uniform rows 8 ways: the modeled winner is
+    // CSR at 1 thread and dense at 8 (covered by the selector tests).
+    {
+        let m = spike_and_slab(8, 255, 2);
+        println!("=== spike-and-slab (8x255, slab nnz 2 — selection flip case) ===");
+        for kind in FormatKind::ALL {
+            let enc = AnyMatrix::encode(kind, &m);
+            let x: Vec<f32> = (0..enc.cols()).map(|_| rng.f32() - 0.5).collect();
+            let mut y = vec![0.0f32; enc.rows()];
+            let serial_ns = trace_matvec(&enc).time_ns(&tm);
+            let mut line = format!("{:<14} {:<6}", "spike-and-slab", kind.name());
+            for &t in &THREAD_COUNTS {
+                let plane = ExecPlane::with_threads(t);
+                let plan = enc.shard_plan(t);
+                let measured_ns = time_median_ns(warmup, iters, || {
+                    match plane.pool() {
+                        Some(pool) => enc.matvec_sharded(&x, &mut y, &plan, pool),
+                        None => enc.matvec(&x, &mut y),
+                    }
+                    std::hint::black_box(&y);
+                });
+                let predicted_ns = if t > 1 {
+                    tm.sharded_ns(serial_ns, &plan)
+                } else {
+                    serial_ns
+                };
+                line.push_str(&format!(
+                    "  {t}t {:>9} pred {:>9}",
+                    fmt_ns(measured_ns),
+                    fmt_ns(predicted_ns)
+                ));
+                sel_rows.push(SelRow {
+                    net: "spike-and-slab".to_string(),
+                    format: kind.name(),
+                    threads: t,
+                    predicted_ns,
+                    measured_ns,
+                });
+            }
+            println!("{line}");
+        }
+    }
+
+    // Per-(net, threads) winners: what the model ranks first vs what the
+    // measurement ranks first — printed and recorded so mis-rankings are
+    // visible in the artifact.
+    let sel_nets: Vec<String> = {
+        let mut nets: Vec<String> = Vec::new();
+        for r in &sel_rows {
+            if !nets.contains(&r.net) {
+                nets.push(r.net.clone());
+            }
+        }
+        nets
+    };
+    for net in &sel_nets {
+        let mut line = format!("{net:<14} winner");
+        for &t in &THREAD_COUNTS {
+            let cells: Vec<&SelRow> = sel_rows
+                .iter()
+                .filter(|r| &r.net == net && r.threads == t)
+                .collect();
+            let model = argmin_format(&cells, |r| r.predicted_ns);
+            let measured = argmin_format(&cells, |r| r.measured_ns);
+            let mark = if model == measured { "" } else { "*" };
+            line.push_str(&format!("  {t}t {model}/{measured}{mark}"));
+        }
+        println!("{line}  (model/measured, * = mis-ranked)");
+    }
+
     // Hand-rolled JSON (the offline build has no serde).
     let mut json = String::from("{\n\"dot\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -252,14 +379,50 @@ fn main() {
             if i + 1 < fwd_rows.len() { "," } else { "" },
         ));
     }
-    json.push_str("]\n}\n");
+    json.push_str("],\n\"selection\": [\n");
+    let mut first = true;
+    for net in &sel_nets {
+        for &t in &THREAD_COUNTS {
+            let cells: Vec<&SelRow> = sel_rows
+                .iter()
+                .filter(|r| &r.net == net && r.threads == t)
+                .collect();
+            if cells.is_empty() {
+                continue;
+            }
+            let model_winner = argmin_format(&cells, |r| r.predicted_ns);
+            let measured_winner = argmin_format(&cells, |r| r.measured_ns);
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            json.push_str(&format!("  {{\"net\": \"{net}\", \"threads\": {t}, \"formats\": ["));
+            for (i, r) in cells.iter().enumerate() {
+                json.push_str(&format!(
+                    "{}{{\"format\": \"{}\", \"predicted_ns\": {:.1}, \"measured_ns\": {:.1}}}",
+                    if i > 0 { ", " } else { "" },
+                    r.format,
+                    r.predicted_ns,
+                    r.measured_ns,
+                ));
+            }
+            json.push_str(&format!(
+                "], \"model_winner\": \"{model_winner}\", \
+                 \"measured_winner\": \"{measured_winner}\", \"agree\": {}}}",
+                model_winner == measured_winner,
+            ));
+        }
+    }
+    json.push_str("\n]\n}\n");
     let mut f = std::fs::File::create("BENCH_dot.json").expect("BENCH_dot.json");
     f.write_all(json.as_bytes()).expect("write BENCH_dot.json");
     println!(
-        "wrote BENCH_dot.json ({} dot rows + {} forward rows: {} networks x {:?} threads)",
+        "wrote BENCH_dot.json ({} dot rows + {} forward rows + {} selection cells: \
+         {} networks x {:?} threads)",
         rows.len(),
         fwd_rows.len(),
-        cases.len(),
+        sel_rows.len(),
+        cases.len() + 1,
         THREAD_COUNTS
     );
 }

@@ -41,8 +41,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::selector::{select_format, Objective};
-use crate::costmodel::{EnergyModel, TimeModel};
+use crate::coordinator::selector::{select_format_in, Objective};
+use crate::costmodel::{EnergyModel, ExecContext, TimeModel};
 use crate::exec::{self, ExecPlane, Pipeline, ShardPlan};
 use crate::formats::{Dense, FormatKind};
 use crate::kernels::{AnyMatrix, Epilogue};
@@ -205,17 +205,39 @@ impl Engine {
         }
     }
     /// Build a native engine from quantized layers, auto-selecting each
-    /// layer's format for `objective`.
+    /// layer's format for `objective` under the **serial** cost model.
+    /// Equivalent to [`Engine::native_auto_in`] with 1 thread.
     pub fn native_auto(
         layers: Vec<(String, Dense, Vec<f32>)>,
         energy: &EnergyModel,
         time: &TimeModel,
         objective: Objective,
     ) -> Engine {
+        Engine::native_auto_in(layers, energy, time, objective, 1)
+    }
+
+    /// Build a native engine from quantized layers, auto-selecting each
+    /// layer's format for `objective` **as deployed at `threads` kernel
+    /// lanes**, and configure the exec plane to match.
+    ///
+    /// Selection scores each candidate format's time criterion with
+    /// [`TimeModel::sharded_ns`] over that format's own shard plan at
+    /// `threads`, so a layer whose non-zeros concentrate in a few monster
+    /// rows can come out dense here even though the serial model would
+    /// pick CSR — the representation the engine stores is the one that is
+    /// actually cheapest on the configured parallelism.
+    pub fn native_auto_in(
+        layers: Vec<(String, Dense, Vec<f32>)>,
+        energy: &EnergyModel,
+        time: &TimeModel,
+        objective: Objective,
+        threads: usize,
+    ) -> Engine {
+        let ctx = ExecContext::with_threads(threads);
         let layers = layers
             .into_iter()
             .map(|(name, m, bias)| {
-                let (kind, _) = select_format(&m, energy, time, objective);
+                let (kind, _) = select_format_in(&m, energy, time, objective, ctx);
                 EngineLayer {
                     name,
                     matrix: AnyMatrix::encode(kind, &m),
@@ -223,7 +245,11 @@ impl Engine {
                 }
             })
             .collect();
-        Engine::assemble(layers)
+        let mut engine = Engine::assemble(layers);
+        if ctx.threads > 1 {
+            engine.set_threads(ctx.threads);
+        }
+        engine
     }
 
     /// Build a native engine with an explicit format for every layer.
@@ -239,15 +265,30 @@ impl Engine {
         Engine::assemble(layers)
     }
 
-    /// Build an engine over the e2e artifacts.
-    ///
-    /// `Backend::Native` encodes the quantized weights with auto-selection;
-    /// the XLA backends compile the corresponding HLO artifact and bind the
-    /// weight arguments once.
+    /// Build an engine over the e2e artifacts with serial format
+    /// selection. Equivalent to [`Engine::from_artifacts_in`] at 1 thread.
     pub fn from_artifacts(
         art: &MlpArtifacts,
         backend: Backend,
         objective: Objective,
+    ) -> Result<Engine> {
+        Engine::from_artifacts_in(art, backend, objective, 1)
+    }
+
+    /// Build an engine over the e2e artifacts.
+    ///
+    /// `Backend::Native` encodes the quantized weights with thread-aware
+    /// auto-selection (formats chosen as deployed at `threads` kernel
+    /// lanes, exec plane configured to match — the `--threads` /
+    /// `CER_THREADS` knob of the `repro` CLI and the serving demo resolve
+    /// to this argument); the XLA backends compile the corresponding HLO
+    /// artifact and bind the weight arguments once (`threads` does not
+    /// apply — PJRT owns its own execution).
+    pub fn from_artifacts_in(
+        art: &MlpArtifacts,
+        backend: Backend,
+        objective: Objective,
+        threads: usize,
     ) -> Result<Engine> {
         let named = |quantized: bool| -> Vec<(String, Dense, Vec<f32>)> {
             art.layers
@@ -267,11 +308,12 @@ impl Engine {
                 .collect()
         };
         match backend {
-            Backend::Native => Ok(Engine::native_auto(
+            Backend::Native => Ok(Engine::native_auto_in(
                 named(true),
                 &EnergyModel::table_i(),
                 &TimeModel::default_model(),
                 objective,
+                threads,
             )),
             Backend::XlaDense | Backend::XlaCser => {
                 let mut runtime = XlaRuntime::cpu()?;
@@ -328,8 +370,22 @@ impl Engine {
     /// `threads - 1` workers is (re)built and one nnz-balanced
     /// [`ShardPlan`] per layer is computed here, once — never on the hot
     /// path. Forward results are bit-identical at every thread count.
+    ///
+    /// The stored formats are **not** revisited: a layer selected under a
+    /// different thread count keeps its representation (still exact,
+    /// possibly no longer the modeled-time argmin). Construct with
+    /// [`Engine::native_auto_in`] / [`Engine::from_artifacts_in`] for
+    /// thread-aware selection up front, or call
+    /// [`Engine::reselect_formats`] after changing the count.
     pub fn set_threads(&mut self, threads: usize) {
         self.exec = ExecPlane::with_threads(threads);
+        self.refresh_plans();
+        self.arena.configure(self.exec.threads());
+    }
+
+    /// Recompute the per-layer shard plans for the current plane (after
+    /// the plane or a layer's representation changed).
+    fn refresh_plans(&mut self) {
         self.plans = if self.exec.is_parallel() {
             self.layers
                 .iter()
@@ -338,7 +394,36 @@ impl Engine {
         } else {
             Vec::new()
         };
-        self.arena.configure(self.exec.threads());
+    }
+
+    /// Re-run format selection for every layer against the engine's
+    /// **current** thread count and re-encode the layers whose winner
+    /// changed. Returns the per-layer formats after reselection (same
+    /// order as [`Engine::formats`]).
+    ///
+    /// This is the "re-select on reconfiguration" path: an engine
+    /// cold-started from a pack (or built serially) whose `set_threads`
+    /// count later changes can realign its representations with what the
+    /// plan-aware cost model says is cheapest at that parallelism.
+    /// Decoding goes through the exact lossless `to_dense` round trip, so
+    /// forward results are unchanged regardless of which formats flip.
+    /// Off the hot path: costs one decode + evaluation per layer.
+    pub fn reselect_formats(
+        &mut self,
+        energy: &EnergyModel,
+        time: &TimeModel,
+        objective: Objective,
+    ) -> Vec<FormatKind> {
+        let ctx = ExecContext::with_threads(self.threads());
+        for l in &mut self.layers {
+            let dense = l.matrix.to_dense();
+            let (kind, _) = select_format_in(&dense, energy, time, objective, ctx);
+            if kind != l.matrix.kind() {
+                l.matrix = AnyMatrix::encode(kind, &dense);
+            }
+        }
+        self.refresh_plans();
+        self.formats()
     }
 
     /// Pre-size the activation arena for batches up to `batch`, so even
@@ -350,6 +435,20 @@ impl Engine {
     }
 
     /// Builder form of [`Engine::set_threads`].
+    ///
+    /// ```
+    /// use cer::coordinator::Engine;
+    /// use cer::formats::FormatKind;
+    ///
+    /// let layers = vec![("fc0".to_string(), cer::paper_example_matrix(), vec![0.0; 5])];
+    /// let mut engine = Engine::native_fixed(layers, FormatKind::Cser).with_threads(4);
+    /// assert_eq!(engine.threads(), 4);
+    /// // One nnz-balanced plan per layer; forward output is bit-identical
+    /// // to the serial path at every thread count.
+    /// assert_eq!(engine.shard_plans().len(), 1);
+    /// let y = engine.forward(&vec![1.0; 12], 1).unwrap();
+    /// assert_eq!(y.len(), 5);
+    /// ```
     pub fn with_threads(mut self, threads: usize) -> Engine {
         self.set_threads(threads);
         self
@@ -771,6 +870,37 @@ mod tests {
             assert!((a - b).abs() < 1e-4);
         }
         assert_eq!(auto.formats().len(), 3);
+    }
+
+    #[test]
+    fn thread_aware_auto_engine_reselects_spike_layer() {
+        // A spike-and-slab layer flips from CSR (serial winner) to dense
+        // at 8 threads; a benign layer keeps its format. Both engines
+        // produce identical outputs — representation changes are lossless.
+        let spike = crate::stats::synth::spike_and_slab(8, 255, 2);
+        let layers = vec![("spike".to_string(), spike, vec![0.0; 8])];
+        let (e, t) = (EnergyModel::table_i(), TimeModel::default_model());
+        let mut serial = Engine::native_auto_in(layers.clone(), &e, &t, Objective::Time, 1);
+        let mut at8 = Engine::native_auto_in(layers, &e, &t, Objective::Time, 8);
+        assert_eq!(serial.formats(), vec![FormatKind::Csr]);
+        assert_eq!(at8.formats(), vec![FormatKind::Dense]);
+        assert_eq!(at8.threads(), 8);
+        let x = vec![1.0f32; 255];
+        assert_eq!(
+            serial.forward(&x, 1).unwrap(),
+            at8.forward(&x, 1).unwrap(),
+            "format reselection must not change results"
+        );
+        // reselect_formats realigns a serially-built engine in place.
+        serial.set_threads(8);
+        assert_eq!(serial.formats(), vec![FormatKind::Csr], "set_threads keeps formats");
+        let after = serial.reselect_formats(&e, &t, Objective::Time);
+        assert_eq!(after, vec![FormatKind::Dense]);
+        assert_eq!(serial.shard_plans().len(), 1);
+        assert_eq!(serial.forward(&x, 1).unwrap(), at8.forward(&x, 1).unwrap());
+        // Back at 1 thread, reselection restores the serial winner.
+        serial.set_threads(1);
+        assert_eq!(serial.reselect_formats(&e, &t, Objective::Time), vec![FormatKind::Csr]);
     }
 
     #[test]

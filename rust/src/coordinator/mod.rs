@@ -1,7 +1,10 @@
 //! L3 coordinator: the serving side of the library.
 //!
 //! * [`selector`] — cost-model-driven automatic format selection per layer
-//!   (the deployment decision §IV's analysis enables).
+//!   (the deployment decision §IV's analysis enables). Selection is
+//!   parallelism-aware: [`select_format_in`] ranks each format's *sharded*
+//!   time at the deployment's thread count, so the winner can change
+//!   between 1 and 8 lanes.
 //! * [`engine`] — the inference engine: compressed layers in their selected
 //!   formats, executed either by the native Rust kernels or through the
 //!   AOT XLA artifacts (PJRT).
@@ -29,5 +32,5 @@ pub mod server;
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{Backend, Engine, EngineLayer};
 pub use metrics::Metrics;
-pub use selector::{select_format, Objective};
+pub use selector::{select_format, select_format_in, Objective};
 pub use server::{InferenceServer, ServerConfig};

@@ -3,12 +3,39 @@
 //! objective. This is the paper's Fig. 3/4 analysis turned into a runtime
 //! policy — dense layers in the high-entropy corner stay dense, compressed
 //! layers get CER/CSER, spike-and-slab layers get CSR.
+//!
+//! Selection is **parallelism-aware**: [`select_format_in`] takes an
+//! [`ExecContext`] (the deployment's kernel thread count) and scores the
+//! time criterion with [`TimeModel::sharded_ns`] over each candidate
+//! format's own nnz-balanced [`crate::exec::ShardPlan`]. Storage, ops and
+//! energy are intrinsic to a representation, but wall-clock is a property
+//! of the (representation, machine) pair: a CSR layer whose non-zeros pile
+//! into one monster row shards poorly — its parallel critical path is
+//! still that row — and can lose to dense at 8 threads even though it wins
+//! the serial ranking. [`select_format`] is the 1-thread special case and
+//! ranks bit-identically to the historical serial selector.
 
-use crate::costmodel::{Criterion4, EnergyModel, TimeModel};
+use crate::costmodel::{Criterion4, EnergyModel, ExecContext, TimeModel};
 use crate::formats::{Dense, FormatKind};
 use crate::kernels::AnyMatrix;
 
 /// What the deployment optimizes for.
+///
+/// ```
+/// use cer::coordinator::{select_format, Objective};
+/// use cer::costmodel::{EnergyModel, TimeModel};
+///
+/// let m = cer::paper_example_matrix();
+/// let (energy, time) = (EnergyModel::table_i(), TimeModel::default_model());
+/// // The paper's 5x12 example is low-entropy: a run-length format wins
+/// // the storage argmin, and the returned criteria prove it.
+/// let (kind, crits) = select_format(&m, &energy, &time, Objective::Storage);
+/// use cer::formats::FormatKind;
+/// assert!(matches!(kind, FormatKind::Cer | FormatKind::Cser));
+/// let dense_bits = crits[0].storage_bits; // criteria in FormatKind::ALL order
+/// let winner_bits = crits[FormatKind::ALL.iter().position(|&k| k == kind).unwrap()].storage_bits;
+/// assert!(winner_bits < dense_bits);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Objective {
     /// Minimize modeled energy per inference (the paper's headline metric).
@@ -42,19 +69,75 @@ impl Objective {
     }
 }
 
-/// Evaluate all formats for `m` and return (winner, per-format criteria in
-/// [`FormatKind::ALL`] order).
+/// Index of the dense baseline in [`FormatKind::ALL`] — looked up by kind
+/// rather than assumed to be slot 0, so a reorder of `ALL` cannot silently
+/// corrupt [`Objective::Weighted`] normalization (which divides every
+/// candidate's criteria by the *dense* ones).
+fn dense_index() -> usize {
+    let i = FormatKind::ALL
+        .iter()
+        .position(|&k| k == FormatKind::Dense)
+        .expect("FormatKind::ALL must contain Dense");
+    debug_assert_eq!(
+        i, 0,
+        "callers (harness tables, engine) index the dense baseline at 0; \
+         keep Dense first in FormatKind::ALL or update them"
+    );
+    i
+}
+
+/// Evaluate all formats for `m` under the **serial** context and return
+/// (winner, per-format criteria in [`FormatKind::ALL`] order).
+///
+/// Equivalent to [`select_format_in`] with [`ExecContext::SERIAL`]; the
+/// ranking is bit-identical to the historical thread-unaware selector.
 pub fn select_format(
     m: &Dense,
     energy: &EnergyModel,
     time: &TimeModel,
     objective: Objective,
 ) -> (FormatKind, [Criterion4; 4]) {
+    select_format_in(m, energy, time, objective, ExecContext::SERIAL)
+}
+
+/// Evaluate all formats for `m` as deployed under `ctx` and return
+/// (winner, per-format criteria in [`FormatKind::ALL`] order).
+///
+/// The time criterion of every candidate is computed with
+/// [`TimeModel::sharded_ns`] over that candidate's **own**
+/// [`crate::exec::ShardPlan`] at `ctx.threads`, so the
+/// [`Objective::Time`] (and [`Objective::Weighted`]) argmin is a function
+/// of the thread count. Ties keep the earlier [`FormatKind::ALL`] entry,
+/// exactly like the serial selector.
+///
+/// ```
+/// use cer::coordinator::{select_format_in, Objective};
+/// use cer::costmodel::{EnergyModel, ExecContext, TimeModel};
+/// use cer::stats::synth::spike_and_slab;
+///
+/// let (energy, time) = (EnergyModel::table_i(), TimeModel::default_model());
+/// // One fully-dense spike row + 7 nearly-empty slab rows: serially the
+/// // sparse formats win on time, but no shard plan can split the spike,
+/// // while dense's uniform rows shard 8 ways — the winner flips.
+/// let m = spike_and_slab(8, 255, 2);
+/// let (at1, _) = select_format_in(&m, &energy, &time, Objective::Time, ExecContext::SERIAL);
+/// let (at8, _) = select_format_in(&m, &energy, &time, Objective::Time,
+///                                 ExecContext::with_threads(8));
+/// assert_ne!(at1, at8);
+/// assert_eq!(at8, cer::formats::FormatKind::Dense);
+/// ```
+pub fn select_format_in(
+    m: &Dense,
+    energy: &EnergyModel,
+    time: &TimeModel,
+    objective: Objective,
+    ctx: ExecContext,
+) -> (FormatKind, [Criterion4; 4]) {
     let crits: Vec<Criterion4> = FormatKind::ALL
         .iter()
-        .map(|&k| Criterion4::evaluate(&AnyMatrix::encode(k, m), energy, time))
+        .map(|&k| Criterion4::evaluate_in(&AnyMatrix::encode(k, m), energy, time, ctx))
         .collect();
-    let dense = crits[0];
+    let dense = crits[dense_index()];
     let mut best = 0usize;
     let mut best_score = objective.score(&crits[0], &dense);
     for (i, c) in crits.iter().enumerate().skip(1) {
@@ -73,7 +156,7 @@ pub fn select_format(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stats::synth::PlanePoint;
+    use crate::stats::synth::{spike_and_slab, PlanePoint};
     use crate::util::Rng;
 
     fn models() -> (EnergyModel, TimeModel) {
@@ -134,5 +217,121 @@ mod tests {
         let m = p.sample_matrix(50, 300, &mut Rng::new(4));
         let (kind, _) = select_format(&m, &e, &t, Objective::Weighted([1.0, 0.0, 0.0, 1.0]));
         assert!(matches!(kind, FormatKind::Cer | FormatKind::Cser));
+    }
+
+    /// Regression: `select_format` (= `select_format_in` at 1 thread) must
+    /// reproduce the historical serial ranking bit for bit — same
+    /// criteria from the serial `Criterion4::evaluate`, same
+    /// first-index-wins argmin seeded at slot 0 with the dense baseline
+    /// for `Weighted` normalization.
+    #[test]
+    fn one_thread_selection_is_bit_identical_to_serial_ranking() {
+        let (e, t) = models();
+        let mut rng = Rng::new(7);
+        let objectives = [
+            Objective::Energy,
+            Objective::Time,
+            Objective::Ops,
+            Objective::Storage,
+            Objective::Weighted([0.25, 0.25, 0.25, 0.25]),
+            Objective::Weighted([0.0, 0.0, 1.0, 0.0]),
+        ];
+        let mut cases: Vec<Dense> = vec![spike_and_slab(8, 255, 2)];
+        for (h, p0, k) in [(1.5, 0.6, 32), (3.0, 0.4, 64), (6.9, 0.009, 128)] {
+            let p = PlanePoint::synthesize(h, p0, k).unwrap();
+            cases.push(p.sample_matrix(40, 120, &mut rng));
+        }
+        for m in &cases {
+            // The pre-thread-aware selector, reproduced verbatim.
+            let crits_old: Vec<Criterion4> = FormatKind::ALL
+                .iter()
+                .map(|&k| Criterion4::evaluate(&AnyMatrix::encode(k, m), &e, &t))
+                .collect();
+            for obj in objectives {
+                let dense = crits_old[0];
+                let mut best = 0usize;
+                let mut best_score = obj.score(&crits_old[0], &dense);
+                for (i, c) in crits_old.iter().enumerate().skip(1) {
+                    let s = obj.score(c, &dense);
+                    if s < best_score {
+                        best = i;
+                        best_score = s;
+                    }
+                }
+                let (kind, crits) = select_format(m, &e, &t, obj);
+                assert_eq!(kind, FormatKind::ALL[best], "{obj:?}: winner drifted");
+                for (a, b) in crits.iter().zip(&crits_old) {
+                    assert_eq!(a, b, "{obj:?}: criteria drifted");
+                }
+            }
+        }
+    }
+
+    /// The tentpole property: the time argmin is a function of the thread
+    /// count. On the spike-and-slab matrix the sparse formats win
+    /// serially, but their shard plans are capped by the spike row while
+    /// dense shards its uniform rows 8 ways — the winner flips to dense.
+    #[test]
+    fn time_selection_is_thread_sensitive_on_spike_and_slab() {
+        let (e, t) = models();
+        let m = spike_and_slab(8, 255, 2);
+        let (at1, crits1) = select_format(&m, &e, &t, Objective::Time);
+        let (at8, crits8) =
+            select_format_in(&m, &e, &t, Objective::Time, ExecContext::with_threads(8));
+        assert_ne!(at1, at8, "winner must change with the thread count");
+        assert_eq!(at1, FormatKind::Csr, "serial winner: touch only the nnz");
+        assert_eq!(at8, FormatKind::Dense, "8-thread winner: uniform shards");
+        // The flip is *justified* by the plan-aware estimates: at 8
+        // threads dense's modeled time undercuts every sparse format even
+        // though all of them beat it serially.
+        for i in 1..4 {
+            assert!(crits1[i].time_ns < crits1[0].time_ns, "serial: sparse wins");
+            assert!(crits8[0].time_ns < crits8[i].time_ns, "8t: dense wins");
+        }
+        // Intrinsic criteria are context-independent.
+        for (a, b) in crits1.iter().zip(&crits8) {
+            assert_eq!(a.storage_bits, b.storage_bits);
+            assert_eq!(a.ops, b.ops);
+            assert_eq!(a.energy_pj, b.energy_pj);
+        }
+    }
+
+    /// Sweep the whole thread ladder on the spike matrix: the flip to
+    /// dense happens once the lane count outruns what the spike-capped
+    /// sparse plans can use, and selection is monotone in between (no
+    /// flapping back to a sparse format afterwards).
+    #[test]
+    fn spike_and_slab_flip_point_is_stable() {
+        let (e, t) = models();
+        let m = spike_and_slab(8, 255, 2);
+        let mut winners = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let (k, _) =
+                select_format_in(&m, &e, &t, Objective::Time, ExecContext::with_threads(threads));
+            winners.push(k);
+        }
+        assert_eq!(winners[0], FormatKind::Csr);
+        assert_eq!(*winners.last().unwrap(), FormatKind::Dense);
+        let flip = winners.iter().position(|&k| k == FormatKind::Dense).unwrap();
+        assert!(
+            winners[flip..].iter().all(|&k| k == FormatKind::Dense),
+            "selection must not flap after the flip: {winners:?}"
+        );
+    }
+
+    /// Objectives that ignore time must be thread-invariant.
+    #[test]
+    fn intrinsic_objectives_ignore_threads() {
+        let (e, t) = models();
+        let p = PlanePoint::synthesize(2.5, 0.5, 32).unwrap();
+        let m = p.sample_matrix(60, 200, &mut Rng::new(9));
+        for obj in [Objective::Energy, Objective::Ops, Objective::Storage] {
+            let (at1, _) = select_format(&m, &e, &t, obj);
+            for threads in [2usize, 4, 8, 16] {
+                let (atn, _) =
+                    select_format_in(&m, &e, &t, obj, ExecContext::with_threads(threads));
+                assert_eq!(at1, atn, "{obj:?} must not depend on threads");
+            }
+        }
     }
 }

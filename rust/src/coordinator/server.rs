@@ -33,6 +33,13 @@ pub struct ServerConfig {
     /// cores). The engine stays single-*owner* — one worker thread holds
     /// it — but each batch matmul fans out across the exec pool's
     /// nnz-balanced shards.
+    ///
+    /// Format selection is thread-aware but happens at engine
+    /// *construction*: pass the same resolved count to
+    /// [`Engine::from_artifacts_in`] /
+    /// [`Engine::native_auto_in`][crate::coordinator::Engine::native_auto_in]
+    /// in the builder closure (as `repro serve` does) so the stored
+    /// formats match the parallelism the worker will run them at.
     pub threads: Option<usize>,
 }
 
@@ -139,7 +146,14 @@ where
     let epoch = Instant::now();
     let mut engine = match build() {
         Ok(mut e) => {
-            e.set_threads(crate::exec::resolve_threads(cfg.threads));
+            // Skip the (pool-respawning, plan-recomputing) reconfiguration
+            // when the builder already set the plane up — the thread-aware
+            // construction path (`Engine::from_artifacts_in` with the same
+            // resolved count, as `repro serve` uses) lands here.
+            let threads = crate::exec::resolve_threads(cfg.threads);
+            if e.threads() != threads {
+                e.set_threads(threads);
+            }
             e
         }
         Err(err) => {

@@ -32,3 +32,50 @@ use crate::formats::FormatKind;
 
 /// Re-export for harness ergonomics.
 pub type Format = FormatKind;
+
+/// The execution context a representation is evaluated against: how many
+/// kernel lanes the deployment will actually run.
+///
+/// Storage, ops and energy are intrinsic to a representation, but *time*
+/// is a property of the (representation, machine) pair: with more than one
+/// lane the critical path of a layer product is its heaviest
+/// [`crate::exec::ShardPlan`] shard, not the serial op sum. Evaluating a
+/// format under an `ExecContext` lets the selector rank candidates by what
+/// the hardware will really execute — a CSR layer whose non-zeros pile
+/// into one monster row shards poorly and can lose to dense at 8 threads
+/// even though it wins serially.
+///
+/// ```
+/// use cer::costmodel::ExecContext;
+///
+/// assert_eq!(ExecContext::SERIAL.threads, 1);
+/// assert_eq!(ExecContext::with_threads(8).threads, 8);
+/// // Degenerate requests clamp to the serial context.
+/// assert_eq!(ExecContext::with_threads(0), ExecContext::SERIAL);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecContext {
+    /// Total execution lanes (1 = the serial kernels, matching the
+    /// engine's [`crate::coordinator::Engine::threads`] count).
+    pub threads: usize,
+}
+
+impl ExecContext {
+    /// The 1-thread context: modeled time is the plain serial op sum, so
+    /// every evaluation under `SERIAL` is bit-identical to the historical
+    /// (pre-thread-aware) cost model.
+    pub const SERIAL: ExecContext = ExecContext { threads: 1 };
+
+    /// Context for `threads`-way execution (`0` and `1` both mean serial).
+    pub fn with_threads(threads: usize) -> ExecContext {
+        ExecContext {
+            threads: threads.max(1),
+        }
+    }
+}
+
+impl Default for ExecContext {
+    fn default() -> Self {
+        ExecContext::SERIAL
+    }
+}

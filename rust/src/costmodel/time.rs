@@ -65,10 +65,12 @@ impl TimeModel {
     /// Predicted wall time of one layer product executed across `plan`'s
     /// shards, given the layer's serial estimate.
     ///
-    /// Current consumers: the dot bench's shard-balance debug line and
-    /// the unit test below. Wiring it into [`crate::coordinator`]'s
-    /// format selector (so `--threads` can change the chosen format per
-    /// layer) is a tracked ROADMAP follow-up.
+    /// This is the parallel arm of the cost model: the thread-aware
+    /// format selector ([`crate::coordinator::select_format_in`]) scores
+    /// every candidate format with it over the format's own plan, the
+    /// harness reports the resulting per-layer winners at 1/2/4/8
+    /// threads, and the dot bench records predicted-vs-measured times in
+    /// `BENCH_dot.json`'s `selection` section.
     ///
     /// The parallel critical path is the *heaviest* shard, so the
     /// estimate scales by `plan.max_work() / plan.total_work()` — the
@@ -77,6 +79,23 @@ impl TimeModel {
     /// plan dominated by one dense row predicts (correctly) almost no
     /// speed-up. Single-shard plans and zero-work layers return the
     /// serial estimate unchanged.
+    ///
+    /// ```
+    /// use cer::costmodel::TimeModel;
+    /// use cer::exec::ShardPlan;
+    ///
+    /// let tm = TimeModel::default_model();
+    /// // 16 rows of equal work, 4 shards: near-ideal 4x speed-up.
+    /// let balanced = ShardPlan::uniform(16, 100, 4);
+    /// let par = tm.sharded_ns(1_000_000.0, &balanced);
+    /// assert!(par < 300_000.0);
+    /// // One row carries 900 of 930 work units: the critical path is that
+    /// // row, so the same serial estimate barely speeds up at all.
+    /// let skewed = ShardPlan::from_prefix(&[0, 900, 910, 920, 930], 4);
+    /// assert!(tm.sharded_ns(1_000_000.0, &skewed) > 900_000.0);
+    /// // Single-shard plans return the serial estimate unchanged.
+    /// assert_eq!(tm.sharded_ns(1_000_000.0, &ShardPlan::uniform(16, 100, 1)), 1_000_000.0);
+    /// ```
     pub fn sharded_ns(&self, serial_ns: f64, plan: &ShardPlan) -> f64 {
         let total = plan.total_work();
         if total == 0 || plan.shard_count() <= 1 {

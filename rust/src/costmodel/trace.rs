@@ -24,6 +24,7 @@ use crate::kernels::{AnyMatrix, PackedDense};
 use super::energy::{EnergyModel, MemTier};
 use super::opcount::{OpClass, OpTrace};
 use super::time::TimeModel;
+use super::ExecContext;
 
 /// Tier of the input vector (n × f32).
 fn input_tier(n: usize) -> MemTier {
@@ -210,14 +211,49 @@ pub struct Criterion4 {
 }
 
 impl Criterion4 {
-    /// Evaluate all four criteria for `m`.
+    /// Evaluate all four criteria for `m` under the serial (1-thread)
+    /// execution context. Equivalent to
+    /// [`Criterion4::evaluate_in`]`(m, energy, time, ExecContext::SERIAL)`.
     pub fn evaluate(m: &AnyMatrix, energy: &EnergyModel, time: &TimeModel) -> Criterion4 {
+        Criterion4::evaluate_in(m, energy, time, ExecContext::SERIAL)
+    }
+
+    /// Evaluate all four criteria for `m` as deployed under `ctx`.
+    ///
+    /// Storage, ops and energy are intrinsic to the representation; the
+    /// *time* criterion is execution-dependent: under a multi-thread
+    /// context it is [`TimeModel::sharded_ns`] of the serial estimate over
+    /// the format's **own** nnz-balanced [`crate::exec::ShardPlan`] — the
+    /// critical path the exec plane will actually run, including the
+    /// per-dispatch overhead. Under [`ExecContext::SERIAL`] this is
+    /// bit-identical to the historical serial evaluation.
+    pub fn evaluate_in(
+        m: &AnyMatrix,
+        energy: &EnergyModel,
+        time: &TimeModel,
+        ctx: ExecContext,
+    ) -> Criterion4 {
         let trace = trace_matvec(m);
         Criterion4 {
             storage_bits: m.storage().total_bits(),
             ops: trace.total_ops(),
             time_ns: trace.time_ns(time),
             energy_pj: trace.energy_pj(energy),
+        }
+        .at_context(m, time, ctx)
+    }
+
+    /// Re-project an already-evaluated (serial) criterion set onto an
+    /// execution context: replaces `time_ns` by the plan-aware parallel
+    /// estimate, leaving the intrinsic criteria untouched. The single
+    /// definition the selector, the harness and the dot bench all share.
+    pub fn at_context(&self, m: &AnyMatrix, time: &TimeModel, ctx: ExecContext) -> Criterion4 {
+        if ctx.threads <= 1 {
+            return *self;
+        }
+        Criterion4 {
+            time_ns: time.sharded_ns(self.time_ns, &m.shard_plan(ctx.threads)),
+            ..*self
         }
     }
 

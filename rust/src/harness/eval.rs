@@ -1,6 +1,6 @@
 //! Shared evaluation core of the reproduction harness.
 
-use crate::costmodel::{trace_matvec, Criterion4, DistStats, EnergyModel, TimeModel};
+use crate::costmodel::{trace_matvec, Criterion4, DistStats, EnergyModel, ExecContext, TimeModel};
 use crate::formats::{Dense, FormatKind};
 use crate::kernels::AnyMatrix;
 use crate::networks::weights::{synthesize_quantized_network, TargetStats};
@@ -11,6 +11,11 @@ use crate::util::Rng;
 
 /// Number of benchmarked formats (dense, CSR, CER, CSER).
 pub const NFMT: usize = 4;
+
+/// Thread counts the per-layer format-selection report sweeps — the same
+/// ladder the dot bench measures, so the harness's modeled winners line up
+/// with `BENCH_dot.json`'s `selection` section.
+pub const SEL_THREADS: [usize; 4] = [1, 2, 4, 8];
 
 /// Evaluation configuration.
 #[derive(Clone, Debug)]
@@ -75,6 +80,12 @@ pub struct LayerEval {
     /// storage model accounts for, directly comparable to
     /// `crit[i].storage_bits`.
     pub disk_array_bytes: [u64; NFMT],
+    /// Modeled-time winner per [`SEL_THREADS`] entry: the thread-aware
+    /// selector's `Objective::Time` argmin for this layer as deployed at
+    /// 1/2/4/8 kernel lanes. Index 0 (1 thread) is the historical serial
+    /// ranking; later entries can flip when a layer's nnz balance shards
+    /// poorly.
+    pub time_winner: [FormatKind; SEL_THREADS.len()],
 }
 
 /// Aggregated network totals for one format.
@@ -152,6 +163,11 @@ impl NetworkEval {
                 let mut disk = [0u64; NFMT];
                 let mut disk_arrays = [0u64; NFMT];
                 let mut scratch: Vec<u8> = Vec::new();
+                // Modeled time per (thread count, format) — filled inside
+                // the per-format loop so each encoding can be dropped
+                // before the next is built (at full scale a layer's four
+                // encodings together are several times its dense bytes).
+                let mut sel_time = [[0.0f64; NFMT]; SEL_THREADS.len()];
                 for (i, kind) in FormatKind::ALL.iter().enumerate() {
                     let enc = AnyMatrix::encode(*kind, &m);
                     let trace = trace_matvec(&enc);
@@ -180,6 +196,27 @@ impl NetworkEval {
                         }) / batch as f64;
                         wall[i] = per;
                     }
+                    // Thread-aware selection sweep: re-project this
+                    // format's serial criteria onto every SEL_THREADS
+                    // context (the heaviest-shard estimate over its own
+                    // plan) — the same projection `select_format_in`
+                    // ranks under `Objective::Time`.
+                    for (ti, &threads) in SEL_THREADS.iter().enumerate() {
+                        let ctx = ExecContext::with_threads(threads);
+                        sel_time[ti][i] = crit[i].at_context(&enc, &cfg.time, ctx).time_ns;
+                    }
+                }
+                // Modeled-time argmin per thread count (first index wins
+                // ties, matching the selector).
+                let mut time_winner = [FormatKind::Dense; SEL_THREADS.len()];
+                for (ti, times) in sel_time.iter().enumerate() {
+                    let mut best = 0usize;
+                    for (i, &ns) in times.iter().enumerate().skip(1) {
+                        if ns < times[best] {
+                            best = i;
+                        }
+                    }
+                    time_winner[ti] = FormatKind::ALL[best];
                 }
                 LayerEval {
                     name,
@@ -191,6 +228,7 @@ impl NetworkEval {
                     wall_ns: wall,
                     disk_bytes: disk,
                     disk_array_bytes: disk_arrays,
+                    time_winner,
                 }
             })
             .collect();
@@ -288,6 +326,29 @@ mod tests {
                 "format {i}: disk {disk} vs model {model}"
             );
         }
+    }
+
+    #[test]
+    fn time_winners_are_thread_aware_and_match_the_selector() {
+        use crate::coordinator::{select_format, select_format_in, Objective};
+        // The spike matrix's mode is already 0, so the eval's Appendix A.1
+        // decomposition leaves it bit-identical and the harness winners
+        // must equal the selector's on the raw matrix.
+        let m = crate::stats::synth::spike_and_slab(8, 255, 2);
+        let cfg = EvalConfig::fast(1);
+        let ev = NetworkEval::run_matrices("spike", vec![("l0".into(), 1, m.clone())], &cfg);
+        let w = ev.layers[0].time_winner;
+        let (at1, _) = select_format(&m, &cfg.energy, &cfg.time, Objective::Time);
+        let (at8, _) = select_format_in(
+            &m,
+            &cfg.energy,
+            &cfg.time,
+            Objective::Time,
+            ExecContext::with_threads(8),
+        );
+        assert_eq!(w[0], at1, "1-thread winner must match the serial selector");
+        assert_eq!(w[3], at8, "8-thread winner must match the thread-aware selector");
+        assert_ne!(w[0], w[3], "the spike layer's winner must flip with threads");
     }
 
     #[test]

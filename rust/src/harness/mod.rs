@@ -14,4 +14,4 @@ pub mod eval;
 pub mod figures;
 pub mod tables;
 
-pub use eval::{EvalConfig, LayerEval, NetworkEval, Totals, NFMT};
+pub use eval::{EvalConfig, LayerEval, NetworkEval, Totals, NFMT, SEL_THREADS};

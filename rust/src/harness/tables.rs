@@ -11,7 +11,7 @@ use crate::compress::pipeline::CompressionPipeline;
 use crate::costmodel::{trace_matvec, EnergyModel, MemTier};
 use crate::costmodel::opcount::BaseOp;
 use crate::costmodel::trace::trace_packed;
-use crate::harness::eval::{EvalConfig, NetworkEval, Totals, NFMT};
+use crate::harness::eval::{EvalConfig, NetworkEval, Totals, NFMT, SEL_THREADS};
 use crate::kernels::{AnyMatrix, PackedDense};
 use crate::networks::weights::{synthesize_float_layer, TargetStats};
 use crate::networks::zoo::NetworkSpec;
@@ -78,6 +78,59 @@ fn gains_row(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64) -> [f64; NFMT]
     ]
 }
 
+/// Per-layer modeled-time winner at the [`SEL_THREADS`] ladder — the
+/// thread-aware selection report appended to Table II (and written to
+/// `table2_selection.csv`). A `flip` marker highlights layers whose winner
+/// at some thread count differs from the serial one: those are exactly
+/// the layers where nnz skew caps the sparse formats' shard plans and a
+/// uniformly-shardable representation overtakes them.
+pub fn selection_by_threads(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
+    // Header labels track SEL_THREADS = [1, 2, 4, 8].
+    debug_assert_eq!(SEL_THREADS, [1, 2, 4, 8]);
+    let mut t = TextTable::new(&["layer", "shape", "@1t", "@2t", "@4t", "@8t", "flip"]);
+    let mut csv = out_dir
+        .map(|d| {
+            CsvWriter::create(
+                d.join("table2_selection.csv"),
+                &["net", "layer", "rows", "cols", "t1", "t2", "t4", "t8", "flips"],
+            )
+        })
+        .transpose()?;
+    for ev in evals {
+        for l in &ev.layers {
+            let w = l.time_winner;
+            let flip = w.iter().any(|&k| k != w[0]);
+            let flip_cell = if flip { "<-" } else { "" };
+            t.row(vec![
+                format!("{}/{}", ev.net, l.name),
+                format!("{}x{}", l.rows, l.cols),
+                w[0].name().to_string(),
+                w[1].name().to_string(),
+                w[2].name().to_string(),
+                w[3].name().to_string(),
+                flip_cell.to_string(),
+            ]);
+            if let Some(wtr) = csv.as_mut() {
+                wtr.row(&[
+                    ev.net.clone(),
+                    l.name.clone(),
+                    format!("{}", l.rows),
+                    format!("{}", l.cols),
+                    w[0].name().to_string(),
+                    w[1].name().to_string(),
+                    w[2].name().to_string(),
+                    w[3].name().to_string(),
+                    format!("{}", flip),
+                ])?;
+            }
+        }
+    }
+    if let Some(w) = csv {
+        w.finish()?;
+    }
+    Ok(t.render())
+}
+
 /// Table II — storage gains of the §V-B networks.
 ///
 /// Beyond the paper's analytic gains, the table reports the *measured*
@@ -85,6 +138,9 @@ fn gains_row(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64) -> [f64; NFMT]
 /// bytes, via the same codecs `repro pack` uses) next to the analytic
 /// model, flagging any >5% divergence with `!` — the model and the bytes
 /// on disk must agree.
+///
+/// The render ends with the thread-aware [`selection_by_threads`] report:
+/// the per-layer modeled-time winner at 1/2/4/8 kernel lanes.
 pub fn table2(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<String> {
     let mut t = TextTable::new(&[
         "Storage",
@@ -162,7 +218,10 @@ pub fn table2(evals: &[NetworkEval], out_dir: Option<&Path>) -> io::Result<Strin
     if let Some(w) = csv {
         w.finish()?;
     }
-    Ok(t.render())
+    let mut out = t.render();
+    out.push_str("\nformat selection vs threads (modeled-time argmin per layer):\n");
+    out.push_str(&selection_by_threads(evals, out_dir)?);
+    Ok(out)
 }
 
 /// Table III / Table VI — #ops, modeled time, modeled energy and measured
@@ -543,6 +602,20 @@ mod tests {
                 ev.net
             );
         }
+    }
+
+    #[test]
+    fn table2_includes_thread_selection_report() {
+        let m = crate::stats::synth::spike_and_slab(8, 255, 2);
+        let cfg = EvalConfig::fast(1);
+        let ev = NetworkEval::run_matrices("spike-net", vec![("spike".into(), 1, m)], &cfg);
+        let t2 = table2(std::slice::from_ref(&ev), None).unwrap();
+        assert!(t2.contains("format selection vs threads"));
+        assert!(t2.contains("@8t"));
+        assert!(
+            t2.contains("<-"),
+            "the spike layer's winner flips with threads and must be flagged:\n{t2}"
+        );
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! through the native Rust kernels or through AOT-compiled XLA artifacts
 //! produced by the build-time JAX/Pallas layer.
 //!
+//! **Start with `docs/ARCHITECTURE.md`** (repository root) for the
+//! paper-section → module map (formats ↔ §III, cost model ↔ §IV, selector ↔
+//! Fig. 3/4), the data-flow walkthrough of a request (batcher → engine →
+//! pipeline → sharded fused kernels), and where — and at which thread
+//! count — format selection happens.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -56,10 +62,14 @@
 //! * [`compress`] — pruning / k-means clustering / the §V-C pipeline.
 //! * [`networks`] — the evaluation model zoo + weight synthesis.
 //! * [`coordinator`] — format auto-selection, the layer engine, and the
-//!   threaded serving loop with dynamic batching. The native forward pass
-//!   is fully fused: bias+ReLU run inside the sharded kernels, the layer
-//!   sequence is one pool dispatch, and a double-buffered activation
-//!   arena makes the steady-state path allocation-free per request.
+//!   threaded serving loop with dynamic batching. Selection is
+//!   **parallelism-aware**: [`coordinator::select_format_in`] ranks each
+//!   candidate's time as its heaviest-shard critical path at the
+//!   deployment's thread count, so `--threads` can change the chosen
+//!   format per layer. The native forward pass is fully fused: bias+ReLU
+//!   run inside the sharded kernels, the layer sequence is one pool
+//!   dispatch, and a double-buffered activation arena makes the
+//!   steady-state path allocation-free per request.
 //! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
 //!   compressed network (selected formats, codebooks, biases, provenance
 //!   manifest, per-section checksums) serialized once and cold-started by

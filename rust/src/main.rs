@@ -116,7 +116,11 @@ Artifact commands (.cerpack — the on-disk format for compressed networks):
                              formats) and serialize it to --out (default
                              <name>.cerpack); add --objective
                              energy|time|ops|storage (default energy),
-                             --scale N for shrunken quick runs
+                             --scale N for shrunken quick runs. Selection is
+                             thread-aware: with --threads N the time
+                             criterion is each format's sharded critical
+                             path at N lanes, so the packed formats can
+                             differ between --threads 1 and --threads 8
   inspect <file.cerpack>     verify checksums, dump header + manifest, and
                              compare measured on-disk bytes per layer with
                              the analytic StorageBreakdown bits and the
@@ -149,7 +153,12 @@ Common flags:
                     serial). Parallel output is bit-identical to serial —
                     rows are sharded by stored-index count per layer, the
                     bias+ReLU epilogue is fused into each shard, and one
-                    forward pass costs one pool dispatch.
+                    forward pass costs one pool dispatch. Format
+                    auto-selection evaluates the time criterion at this
+                    count (see docs/ARCHITECTURE.md).
+  --objective O     deployment argmin for pack/e2e/serve format selection:
+                    energy|time|ops|storage (default energy); `time`
+                    interacts with --threads
 ";
 
 /// `--threads` as an explicit request: a number, or `auto`/`0` for all
@@ -161,6 +170,23 @@ fn threads_flag(a: &Args) -> Option<usize> {
     } else {
         v.parse().ok()
     }
+}
+
+/// `--objective` (shared by pack/e2e/serve): the deployment argmin the
+/// format selector runs under. Time-sensitive objectives interact with
+/// `--threads` — selection scores each format's sharded critical path at
+/// the configured lane count.
+fn objective_flag(a: &Args) -> anyhow::Result<(cer::coordinator::Objective, String)> {
+    use cer::coordinator::Objective;
+    let s = a.get_str("objective", "energy");
+    let obj = match s.as_str() {
+        "energy" => Objective::Energy,
+        "time" => Objective::Time,
+        "ops" => Objective::Ops,
+        "storage" => Objective::Storage,
+        other => anyhow::bail!("unknown objective '{other}' (energy|time|ops|storage)"),
+    };
+    Ok((obj, s))
 }
 
 fn main() -> ExitCode {
@@ -424,7 +450,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
 /// operating point, auto-select each layer's format) and serialize it to a
 /// `.cerpack` artifact, then prove the cold-start path by reloading it.
 fn cmd_pack(a: &Args) -> anyhow::Result<()> {
-    use cer::coordinator::{Engine, Objective};
+    use cer::coordinator::Engine;
     use cer::formats::FormatKind;
     use cer::networks::weights::synthesize_zoo_layers;
     use cer::util::human_bytes;
@@ -436,14 +462,8 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
         a.get_str("net", "densenet")
     };
     let cfg = eval_config(a);
-    let objective_str = a.get_str("objective", "energy");
-    let objective = match objective_str.as_str() {
-        "energy" => Objective::Energy,
-        "time" => Objective::Time,
-        "ops" => Objective::Ops,
-        "storage" => Objective::Storage,
-        other => anyhow::bail!("unknown objective '{other}' (energy|time|ops|storage)"),
-    };
+    let (objective, objective_str) = objective_flag(a)?;
+    let threads = cer::exec::resolve_threads(threads_flag(a));
 
     eprintln!(
         "synthesizing {net} at scale {} (seed {}) ...",
@@ -451,9 +471,9 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
     );
     let (spec, layers) = synthesize_zoo_layers(&net, cfg.scale, cfg.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?;
-    eprintln!("selecting formats (argmin {objective_str}, modeled) ...");
+    eprintln!("selecting formats (argmin {objective_str}, modeled at {threads} thread(s)) ...");
     let t0 = Instant::now();
-    let engine = Engine::native_auto(layers, &cfg.energy, &cfg.time, objective);
+    let engine = Engine::native_auto_in(layers, &cfg.energy, &cfg.time, objective, threads);
     let build_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let out = a.get_str("out", &format!("{}.cerpack", net.to_lowercase()));
@@ -493,11 +513,12 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
     );
     println!("  compress+select {build_ms:.0} ms, serialize {save_ms:.1} ms");
 
-    // Cold-start proof: reload from disk and run one forward pass.
+    // Cold-start proof: reload from disk and run one forward pass. The
+    // pack already stores the thread-aware winners, so the cold engine
+    // only configures its plane — no reselection needed.
     let t0 = Instant::now();
     let mut cold = Engine::from_pack(&path)?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let threads = cer::exec::resolve_threads(threads_flag(a));
     if threads > 1 {
         cold.set_threads(threads);
         println!("  exec plane: {threads} threads, nnz-balanced shards per layer");
@@ -643,7 +664,7 @@ fn cmd_pack_demo() -> anyhow::Result<()> {
 /// The e2e driver shared by `repro e2e` (also available as
 /// `examples/e2e_inference.rs`).
 fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
-    use cer::coordinator::{Backend, Engine, Objective};
+    use cer::coordinator::{Backend, Engine};
     use cer::runtime::MlpArtifacts;
 
     let art = MlpArtifacts::load(artifacts)?;
@@ -655,11 +676,15 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
         art.accuracy_quant
     );
     let n_batches = a.get("batches", usize::MAX);
+    let (objective, _) = objective_flag(a)?;
+    let threads = cer::exec::resolve_threads(threads_flag(a));
     for backend in [Backend::Native, Backend::XlaDense, Backend::XlaCser] {
         // XLA backends are unavailable when built without the `xla`
         // feature (or when PJRT fails) — report and keep going. Native
-        // failures are real errors and still abort the command.
-        let mut engine = match Engine::from_artifacts(&art, backend, Objective::Energy) {
+        // failures are real errors and still abort the command. The
+        // native engine selects its formats against the configured
+        // thread count (and runs its exec plane at it).
+        let mut engine = match Engine::from_artifacts_in(&art, backend, objective, threads) {
             Ok(e) => e,
             Err(e) if backend != Backend::Native => {
                 println!("{backend:?}: skipped ({e})");
@@ -667,9 +692,6 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
             }
             Err(e) => return Err(e),
         };
-        if backend == Backend::Native {
-            engine.set_threads(cer::exec::resolve_threads(threads_flag(a)));
-        }
         let t0 = std::time::Instant::now();
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -703,12 +725,13 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
 }
 
 fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
-    use cer::coordinator::{Backend, Engine, InferenceServer, Objective, ServerConfig};
+    use cer::coordinator::{Backend, Engine, InferenceServer, ServerConfig};
     use cer::coordinator::batcher::BatcherConfig;
     use cer::runtime::MlpArtifacts;
 
     let art = MlpArtifacts::load(artifacts)?;
     let requests = a.get("requests", 512usize);
+    let (objective, objective_str) = objective_flag(a)?;
     let threads = cer::exec::resolve_threads(threads_flag(a));
     let cfg = ServerConfig {
         batcher: BatcherConfig {
@@ -718,11 +741,14 @@ fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
         threads: Some(threads),
     };
     if threads > 1 {
-        println!("engine exec plane: {threads} threads (nnz-balanced row shards)");
+        println!(
+            "engine exec plane: {threads} threads (nnz-balanced row shards, formats \
+             selected for argmin {objective_str} at {threads} thread(s))"
+        );
     }
     let art_clone = art.clone();
     let srv = InferenceServer::spawn(
-        move || Engine::from_artifacts(&art_clone, Backend::Native, Objective::Energy),
+        move || Engine::from_artifacts_in(&art_clone, Backend::Native, objective, threads),
         cfg,
     );
     println!("serving {requests} requests through the dynamic batcher ...");

@@ -16,4 +16,4 @@ pub mod synth;
 pub use decompose::Decomposed;
 pub use entropy::{entropy_bits, matrix_entropy, max_entropy, min_entropy};
 pub use quantize::UniformQuantizer;
-pub use synth::PlanePoint;
+pub use synth::{spike_and_slab, PlanePoint};

@@ -131,6 +131,56 @@ impl PlanePoint {
     }
 }
 
+/// Deterministic **spike-and-slab** matrix: row 0 is fully dense (the
+/// spike), every other row carries exactly `slab_nnz` non-zeros, and all
+/// stored values are distinct — the worst case for run-length formats
+/// (every CER/CSER run holds a single element) *and* for row sharding
+/// (one monster row dominates every sparse format's nnz-balanced
+/// [`crate::exec::ShardPlan`], capping the parallel speed-up at the
+/// spike's share of the work).
+///
+/// This is the documented matrix where thread-aware format selection
+/// flips: serially CSR wins the modeled-time argmin (it touches only the
+/// stored indices), but at 8 threads its critical path is still the full
+/// spike row while dense shards its uniform rows 8 ways — the dot bench
+/// records the flip in `BENCH_dot.json`'s `selection` section and the
+/// selector tests assert it.
+///
+/// ```
+/// use cer::stats::synth::spike_and_slab;
+///
+/// let m = spike_and_slab(8, 255, 2);
+/// assert_eq!((m.rows(), m.cols()), (8, 255));
+/// // The spike: row 0 has no zeros at all.
+/// assert!(m.data()[..255].iter().all(|&v| v != 0.0));
+/// // The slab: each remaining row stores exactly two elements.
+/// let nnz: usize = m.data()[255..].iter().filter(|&&v| v != 0.0).count();
+/// assert_eq!(nnz, 7 * 2);
+/// ```
+pub fn spike_and_slab(rows: usize, cols: usize, slab_nnz: usize) -> Dense {
+    assert!(rows >= 2 && cols >= 2, "need a spike row and a slab");
+    let slab_nnz = slab_nnz.clamp(1, cols);
+    let mut data = vec![0.0f32; rows * cols];
+    // Distinct non-zero values: k/2 + 1 for k = 0, 1, 2, ... — exactly
+    // representable in f32 far beyond any practical matrix size.
+    let mut next = 0.0f32;
+    let mut fresh = || {
+        next += 0.5;
+        next + 0.5
+    };
+    for c in 0..cols {
+        data[c] = fresh();
+    }
+    for r in 1..rows {
+        for j in 0..slab_nnz {
+            // Spread the slab's columns evenly, staggered per row.
+            let c = (j * cols / slab_nnz + r) % cols;
+            data[r * cols + c] = fresh();
+        }
+    }
+    Dense::from_vec(rows, cols, data)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

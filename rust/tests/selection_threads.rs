@@ -1,0 +1,159 @@
+//! Thread-aware format selection, end to end: the `ExecContext` plumbing
+//! from the cost model through `select_format_in` into the engine.
+//!
+//! * The 1-thread context is the historical serial cost model:
+//!   `select_format` and `select_format_in(SERIAL)` agree bit for bit,
+//!   and only the time criterion ever moves with the thread count.
+//! * The documented spike-and-slab matrix flips its modeled-time winner
+//!   (CSR serially → dense at 8 threads), and engines built via
+//!   `native_auto_in` at different thread counts store different formats
+//!   while producing identical forward results.
+//! * Randomized property sweep: across the (H, p0) plane, time at any
+//!   thread count never exceeds the serial estimate plus the dispatch
+//!   overhead, and intrinsic criteria never move.
+
+use cer::coordinator::{select_format, select_format_in, Engine, Objective};
+use cer::costmodel::{Criterion4, EnergyModel, ExecContext, TimeModel};
+use cer::formats::FormatKind;
+use cer::kernels::AnyMatrix;
+use cer::stats::synth::{spike_and_slab, PlanePoint};
+use cer::util::Rng;
+
+fn models() -> (EnergyModel, TimeModel) {
+    (EnergyModel::table_i(), TimeModel::default_model())
+}
+
+#[test]
+fn serial_context_reproduces_select_format_exactly() {
+    let (e, t) = models();
+    let mut rng = Rng::new(0x5E1);
+    for (h, p0, k) in [(1.5, 0.6, 32), (3.0, 0.4, 64), (5.5, 0.1, 128)] {
+        let p = PlanePoint::synthesize(h, p0, k).unwrap();
+        let m = p.sample_matrix(30, 90, &mut rng);
+        for obj in [
+            Objective::Energy,
+            Objective::Time,
+            Objective::Ops,
+            Objective::Storage,
+            Objective::Weighted([0.4, 0.1, 0.3, 0.2]),
+        ] {
+            let (k1, c1) = select_format(&m, &e, &t, obj);
+            let (k2, c2) = select_format_in(&m, &e, &t, obj, ExecContext::SERIAL);
+            assert_eq!(k1, k2);
+            assert_eq!(c1, c2);
+        }
+    }
+}
+
+#[test]
+fn only_the_time_criterion_moves_with_threads() {
+    let (e, t) = models();
+    let mut rng = Rng::new(0x5E2);
+    let p = PlanePoint::synthesize(2.5, 0.5, 32).unwrap();
+    let m = p.sample_matrix(40, 120, &mut rng);
+    for kind in FormatKind::ALL {
+        let enc = AnyMatrix::encode(kind, &m);
+        let serial = Criterion4::evaluate(&enc, &e, &t);
+        for threads in [2usize, 3, 4, 8, 16] {
+            let ctx = ExecContext::with_threads(threads);
+            let par = Criterion4::evaluate_in(&enc, &e, &t, ctx);
+            assert_eq!(par.storage_bits, serial.storage_bits);
+            assert_eq!(par.ops, serial.ops);
+            assert_eq!(par.energy_pj, serial.energy_pj);
+            // The heaviest-shard fraction is <= 1, so the parallel
+            // estimate is bounded by serial + the dispatch overhead, and
+            // it cannot beat an ideal equal split of the serial work.
+            assert!(
+                par.time_ns <= serial.time_ns + TimeModel::DISPATCH_OVERHEAD_NS + 1e-9,
+                "{kind:?}@{threads}: {} > serial {}",
+                par.time_ns,
+                serial.time_ns
+            );
+            assert!(
+                par.time_ns >= serial.time_ns / threads as f64,
+                "{kind:?}@{threads}: below the ideal split"
+            );
+            // at_context on the serial criteria is the same projection.
+            assert_eq!(par, serial.at_context(&enc, &t, ctx));
+        }
+    }
+}
+
+#[test]
+fn spike_and_slab_engines_differ_by_thread_count_but_agree_numerically() {
+    let (e, t) = models();
+    let spike = spike_and_slab(8, 255, 2);
+    let layers = vec![("spike".to_string(), spike, vec![0.25f32; 8])];
+    let mut serial = Engine::native_auto_in(layers.clone(), &e, &t, Objective::Time, 1);
+    let mut wide = Engine::native_auto_in(layers, &e, &t, Objective::Time, 8);
+    assert_eq!(serial.formats(), vec![FormatKind::Csr]);
+    assert_eq!(wide.formats(), vec![FormatKind::Dense]);
+    assert_eq!(serial.threads(), 1);
+    assert_eq!(wide.threads(), 8);
+    let mut rng = Rng::new(0x5E3);
+    for batch in [1usize, 3, 5] {
+        let x: Vec<f32> = (0..batch * 255).map(|_| rng.f32() - 0.5).collect();
+        let a = serial.forward(&x, batch).unwrap();
+        let b = wide.forward(&x, batch).unwrap();
+        assert_eq!(a.len(), batch * 8);
+        for (va, vb) in a.iter().zip(&b) {
+            assert!((va - vb).abs() < 1e-4, "{va} vs {vb}");
+        }
+    }
+}
+
+#[test]
+fn reselect_formats_tracks_the_plane_configuration() {
+    let (e, t) = models();
+    let spike = spike_and_slab(8, 255, 2);
+    let layers = vec![("spike".to_string(), spike, vec![0.0f32; 8])];
+    let mut engine = Engine::native_auto(layers, &e, &t, Objective::Time);
+    assert_eq!(engine.formats(), vec![FormatKind::Csr]);
+    engine.set_threads(8);
+    // set_threads alone never rewrites representations.
+    assert_eq!(engine.formats(), vec![FormatKind::Csr]);
+    assert_eq!(engine.reselect_formats(&e, &t, Objective::Time), vec![FormatKind::Dense]);
+    // The refreshed plans cover the re-encoded layer.
+    assert_eq!(engine.shard_plans().len(), 1);
+    assert_eq!(engine.shard_plans()[0].rows(), 8);
+    // Intrinsic objectives are thread-invariant: reselecting for storage
+    // at 8 threads picks the same format as at 1.
+    let storage8 = engine.reselect_formats(&e, &t, Objective::Storage);
+    engine.set_threads(1);
+    assert_eq!(engine.reselect_formats(&e, &t, Objective::Storage), storage8);
+}
+
+/// The (H, p0)-plane sweep: at every point the 1-thread winner equals the
+/// serial selector's, and wherever the 8-thread winner differs the flip
+/// is justified — the 8-thread modeled time of the new winner really is
+/// smaller than the old winner's.
+#[test]
+fn plane_sweep_flips_are_always_justified() {
+    let (e, t) = models();
+    let mut rng = Rng::new(0x5E4);
+    let mut flips = 0usize;
+    let mut cases: Vec<cer::formats::Dense> = vec![spike_and_slab(8, 255, 2)];
+    for (h, p0, k) in [
+        (1.0, 0.7, 16),
+        (2.0, 0.55, 32),
+        (3.5, 0.3, 64),
+        (5.0, 0.15, 128),
+    ] {
+        let p = PlanePoint::synthesize(h, p0, k).unwrap();
+        cases.push(p.sample_matrix(24, 96, &mut rng));
+    }
+    for m in &cases {
+        let (at1, _) = select_format(m, &e, &t, Objective::Time);
+        let (at8, crits8) =
+            select_format_in(m, &e, &t, Objective::Time, ExecContext::with_threads(8));
+        let idx = |k: FormatKind| FormatKind::ALL.iter().position(|&f| f == k).unwrap();
+        assert!(
+            crits8[idx(at8)].time_ns <= crits8[idx(at1)].time_ns + 1e-9,
+            "8-thread winner must not lose to the serial winner at 8 threads"
+        );
+        if at1 != at8 {
+            flips += 1;
+        }
+    }
+    assert!(flips >= 1, "the spike-and-slab case must flip");
+}
