@@ -1,8 +1,16 @@
 //! `.cerpack` artifact benchmarks: serialized size per zoo network and the
-//! cold-start path (read + decode + engine build) that production serving
-//! depends on. Results are printed and also written to `BENCH_pack.json`
-//! in the working directory to start the perf trajectory for the artifact
-//! subsystem.
+//! cold-start path that production serving depends on. Results are
+//! printed and also written to `BENCH_pack.json` (an object with `"packs"`
+//! and `"cold_start"` arrays) to extend the perf trajectory for the
+//! artifact subsystem.
+//!
+//! The `cold_start` section compares the two readers head to head per
+//! network: **owned** (`Engine::from_pack` — read, checksum, decode every
+//! array into heap storage) vs **mmap** (`Engine::from_pack_mmap` — map
+//! the file, checksum once, view the bulk arrays in place), each measured
+//! to engine-built and to **time-to-first-inference** (load + one
+//! batch-1 forward), alongside the measured bytes each path copies onto
+//! the heap ([`Engine::storage_residency`]).
 //!
 //! Run: `cargo bench --bench pack`
 //!
@@ -29,6 +37,18 @@ struct Row {
     save_ns: f64,
 }
 
+/// Owned vs mmap cold start, per network.
+struct ColdRow {
+    net: String,
+    owned_ns: f64,
+    mmap_ns: f64,
+    owned_first_infer_ns: f64,
+    mmap_first_infer_ns: f64,
+    bytes_copied_owned: u64,
+    bytes_copied_mmap: u64,
+    mapped_bytes: u64,
+}
+
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = xs.len();
@@ -47,6 +67,7 @@ fn main() {
     let energy = EnergyModel::table_i();
     let time = TimeModel::default_model();
     let mut rows: Vec<Row> = Vec::new();
+    let mut cold_rows: Vec<ColdRow> = Vec::new();
 
     // Small nets at full scale, large §V-B nets at `scale`.
     let cases: [(&str, usize); 6] = [
@@ -86,7 +107,62 @@ fn main() {
             load_samples.push(t0.elapsed().as_nanos() as f64);
             std::hint::black_box(e.storage_bits());
         }
+
+        // Owned vs mmap cold start, to engine-built and to first
+        // inference, plus the measured heap-copy footprint of each path.
+        let in_dim = engine.in_dim();
+        let x = vec![0.1f32; in_dim];
+        let mut owned_samples = Vec::new();
+        let mut owned_first = Vec::new();
+        let mut bytes_copied_owned = 0u64;
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            let mut e = Engine::from_pack(&path).expect("owned cold start");
+            owned_samples.push(t0.elapsed().as_nanos() as f64);
+            let y = e.forward(&x, 1).expect("forward");
+            owned_first.push(t0.elapsed().as_nanos() as f64);
+            bytes_copied_owned = e.storage_residency().owned_bytes;
+            std::hint::black_box(y);
+        }
+        let mut mmap_samples = Vec::new();
+        let mut mmap_first = Vec::new();
+        let mut bytes_copied_mmap = 0u64;
+        let mut mapped_bytes = 0u64;
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            let mut e = Engine::from_pack_mmap(&path).expect("mmap cold start");
+            mmap_samples.push(t0.elapsed().as_nanos() as f64);
+            let y = e.forward(&x, 1).expect("forward");
+            mmap_first.push(t0.elapsed().as_nanos() as f64);
+            let res = e.storage_residency();
+            bytes_copied_mmap = res.owned_bytes;
+            mapped_bytes = res.mapped_bytes;
+            std::hint::black_box(y);
+        }
         std::fs::remove_file(&path).ok();
+        let cold = ColdRow {
+            net: spec_used.name.to_string(),
+            owned_ns: median(owned_samples),
+            mmap_ns: median(mmap_samples),
+            owned_first_infer_ns: median(owned_first),
+            mmap_first_infer_ns: median(mmap_first),
+            bytes_copied_owned,
+            bytes_copied_mmap,
+            mapped_bytes,
+        };
+        println!(
+            "{:<14}   cold start: owned {:>10} ({} copied)  mmap {:>10} ({} copied, {} mapped)  \
+             first-infer {:>10} vs {:>10}",
+            cold.net,
+            fmt_ns(cold.owned_ns),
+            human_bytes(cold.bytes_copied_owned as f64),
+            fmt_ns(cold.mmap_ns),
+            human_bytes(cold.bytes_copied_mmap as f64),
+            human_bytes(cold.mapped_bytes as f64),
+            fmt_ns(cold.owned_first_infer_ns),
+            fmt_ns(cold.mmap_first_infer_ns),
+        );
+        cold_rows.push(cold);
 
         let dense_bytes: u64 = spec_used.layers.iter().map(|l| l.params() * 4).sum();
         let row = Row {
@@ -111,8 +187,11 @@ fn main() {
         rows.push(row);
     }
 
-    // Hand-rolled JSON (the offline build has no serde).
-    let mut json = String::from("[\n");
+    // Hand-rolled JSON (the offline build has no serde). An object with
+    // a "packs" array (the historical per-network rows) and a
+    // "cold_start" array (owned vs mmap readers) — the shape
+    // `repro bench-gate` tracks against ci/baselines/BENCH_pack.json.
+    let mut json = String::from("{\n\"packs\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "  {{\"net\": \"{}\", \"layers\": {}, \"dense_bytes\": {}, \
@@ -130,8 +209,30 @@ fn main() {
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
-    json.push_str("]\n");
+    json.push_str("],\n\"cold_start\": [\n");
+    for (i, r) in cold_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"owned_ms\": {:.3}, \"mmap_ms\": {:.3}, \
+             \"owned_first_infer_ms\": {:.3}, \"mmap_first_infer_ms\": {:.3}, \
+             \"bytes_copied_owned\": {}, \"bytes_copied_mmap\": {}, \
+             \"mapped_bytes\": {}}}{}\n",
+            r.net,
+            r.owned_ns / 1e6,
+            r.mmap_ns / 1e6,
+            r.owned_first_infer_ns / 1e6,
+            r.mmap_first_infer_ns / 1e6,
+            r.bytes_copied_owned,
+            r.bytes_copied_mmap,
+            r.mapped_bytes,
+            if i + 1 < cold_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("]\n}\n");
     let mut f = std::fs::File::create("BENCH_pack.json").expect("BENCH_pack.json");
     f.write_all(json.as_bytes()).expect("write BENCH_pack.json");
-    println!("wrote BENCH_pack.json ({} networks)", rows.len());
+    println!(
+        "wrote BENCH_pack.json ({} networks, {} cold-start rows)",
+        rows.len(),
+        cold_rows.len()
+    );
 }

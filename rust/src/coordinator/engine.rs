@@ -38,14 +38,16 @@
 //! fused-vs-unfused benchmark (`cargo bench --bench dot`).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format_in, Objective};
 use crate::costmodel::{EnergyModel, ExecContext, TimeModel};
 use crate::exec::{self, ExecPlane, Pipeline, ShardPlan};
-use crate::formats::{Dense, FormatKind};
+use crate::formats::{Dense, FormatKind, Storage, StorageResidency};
 use crate::kernels::{AnyMatrix, Epilogue};
+use crate::pack::map::PackMap;
 use crate::pack::{self, LayerView, Manifest, Pack};
 use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
 
@@ -60,12 +62,15 @@ pub enum Backend {
     XlaDense,
 }
 
-/// One layer of the engine.
+/// One layer of the engine. Matrix arrays and bias are
+/// [`Storage`]-backed: owned when the layer was encoded in-process or
+/// loaded through the copying reader, zero-copy views into a shared
+/// [`PackMap`] after an [`Engine::from_pack_mmap`] cold start.
 #[derive(Clone, Debug)]
 pub struct EngineLayer {
     pub name: String,
     pub matrix: AnyMatrix,
-    pub bias: Vec<f32>,
+    pub bias: Storage<f32>,
 }
 
 /// Derive a (codes, omega) pair from a quantized dense matrix with omega
@@ -174,6 +179,11 @@ pub struct Engine {
     /// One nnz-balanced plan per layer, computed once when the plane is
     /// configured (empty when serial).
     plans: Vec<ShardPlan>,
+    /// The shared pack mapping this engine's layers view into (mmap cold
+    /// start only; `None` for owned engines). Held for sharing and
+    /// introspection — the per-array `Arc` clones inside [`Storage`]
+    /// already keep the mapping alive.
+    map: Option<Arc<PackMap>>,
 }
 
 impl Engine {
@@ -202,6 +212,7 @@ impl Engine {
             pipeline: Pipeline::new(),
             exec: ExecPlane::serial(),
             plans: Vec::new(),
+            map: None,
         }
     }
     /// Build a native engine from quantized layers, auto-selecting each
@@ -241,7 +252,7 @@ impl Engine {
                 EngineLayer {
                     name,
                     matrix: AnyMatrix::encode(kind, &m),
-                    bias,
+                    bias: bias.into(),
                 }
             })
             .collect();
@@ -259,7 +270,7 @@ impl Engine {
             .map(|(name, m, bias)| EngineLayer {
                 name,
                 matrix: AnyMatrix::encode(kind, &m),
-                bias,
+                bias: bias.into(),
             })
             .collect();
         Engine::assemble(layers)
@@ -345,7 +356,7 @@ impl Engine {
                         .map(|(name, m, bias)| EngineLayer {
                             name,
                             matrix: AnyMatrix::Dense(m),
-                            bias,
+                            bias: bias.into(),
                         })
                         .collect(),
                 );
@@ -691,7 +702,7 @@ impl Engine {
             }
             for s in 0..batch {
                 let col = &mut out[s * m..(s + 1) * m];
-                for (v, b) in col.iter_mut().zip(&layer.bias) {
+                for (v, b) in col.iter_mut().zip(layer.bias.iter()) {
                     *v += b;
                     if i != last && *v < 0.0 {
                         *v = 0.0;
@@ -728,7 +739,7 @@ impl Engine {
             rationale,
             self.layers
                 .iter()
-                .map(|l| (l.name.clone(), l.matrix.clone(), l.bias.clone()))
+                .map(|l| (l.name.clone(), l.matrix.clone(), l.bias.to_vec()))
                 .collect(),
         )
     }
@@ -760,10 +771,43 @@ impl Engine {
 
     /// Cold-start a native engine from a `.cerpack` artifact: layers come
     /// back in their stored (already-selected) formats — no pruning,
-    /// clustering, re-encoding or format selection runs.
+    /// clustering, re-encoding or format selection runs. This is the
+    /// **copying** reader: every array is decoded into owned heap
+    /// storage. See [`Engine::from_pack_mmap`] for the zero-copy path.
     pub fn from_pack(path: &Path) -> Result<Engine> {
         let pack = Pack::read(path).with_context(|| format!("loading {}", path.display()))?;
         Ok(Engine::from_pack_data(pack))
+    }
+
+    /// Zero-copy cold start: map the `.cerpack` (`mmap(2)` where
+    /// available, aligned heap read otherwise) and build the engine over
+    /// typed views into the mapping — no per-array heap copy for values,
+    /// codebooks, column indices, biases, or 32-bit-wide pointer arrays
+    /// (narrower pointer arrays are widened, an O(rows) copy). Output is
+    /// bit-identical to [`Engine::from_pack`]: the kernels run the same
+    /// bytes either way.
+    ///
+    /// The mapping is shared: call [`Engine::from_pack_map`] with
+    /// [`Engine::pack_map`]'s `Arc` to stand up further engines (serving
+    /// workers) over the same physical copy of the weights.
+    ///
+    /// Standard mmap contract: the pack file must not be rewritten in
+    /// place while mapped — replace packs by writing a new file and
+    /// renaming it over the old path (see [`crate::pack::map`]).
+    pub fn from_pack_mmap(path: &Path) -> Result<Engine> {
+        let map = PackMap::open(path).with_context(|| format!("mapping {}", path.display()))?;
+        Engine::from_pack_map(&map)
+    }
+
+    /// Cold-start a native engine over an already-mapped pack. Decodes
+    /// the structure again (headers and narrow pointer arrays — cheap)
+    /// but every bulk array is a view into `map`, so N engines built
+    /// from one map share one physical copy of the weights.
+    pub fn from_pack_map(map: &Arc<PackMap>) -> Result<Engine> {
+        let pack = Pack::from_map(map).context("decoding mapped cerpack")?;
+        let mut engine = Engine::from_pack_data(pack);
+        engine.map = Some(map.clone());
+        Ok(engine)
     }
 
     /// Build a native engine from an already-decoded [`Pack`].
@@ -778,6 +822,26 @@ impl Engine {
                 })
                 .collect(),
         )
+    }
+
+    /// The shared pack mapping backing this engine's layers (`None` for
+    /// engines with owned storage).
+    pub fn pack_map(&self) -> Option<&Arc<PackMap>> {
+        self.map.as_ref()
+    }
+
+    /// Where the engine's weight bytes live: owned heap storage vs
+    /// zero-copy views into a mapped pack, summed over every layer's
+    /// matrix arrays and bias. The measured "bytes copied at cold start"
+    /// figure — an mmap cold start reports (almost) everything mapped,
+    /// an owned cold start everything owned.
+    pub fn storage_residency(&self) -> StorageResidency {
+        let mut r = StorageResidency::default();
+        for l in &self.layers {
+            r.merge(l.matrix.residency());
+            r.add(&l.bias);
+        }
+        r
     }
 
     /// Total storage of the engine's weight matrices (bits).
@@ -1024,6 +1088,57 @@ mod tests {
         let a = original.forward(&x, batch).unwrap();
         let b = cold.forward(&x, batch).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mmap_cold_start_bit_identical_and_shares_one_map() {
+        let layers = tiny_layers(17);
+        let mut original = Engine::native_auto(
+            layers,
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Energy,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "cer-engine-mmap-test-{}.cerpack",
+            std::process::id()
+        ));
+        original.save_pack(&path, "tiny-net", "argmin energy (modeled)").unwrap();
+
+        let mut owned = Engine::from_pack(&path).unwrap();
+        let mut mapped = Engine::from_pack_mmap(&path).unwrap();
+        // A second worker engine over the *same* mapping: one physical
+        // copy of the weights, shared by refcount.
+        let mut worker = Engine::from_pack_map(mapped.pack_map().expect("map")).unwrap();
+        std::fs::remove_file(&path).ok(); // unlink is fine: the map holds the pages
+
+        assert!(owned.pack_map().is_none());
+        assert!(std::sync::Arc::ptr_eq(
+            mapped.pack_map().unwrap(),
+            worker.pack_map().unwrap()
+        ));
+        // Residency: the owned reader copies everything; the mapped
+        // reader views the bulk arrays in place.
+        let owned_res = owned.storage_residency();
+        let mapped_res = mapped.storage_residency();
+        assert_eq!(owned_res.mapped_bytes, 0);
+        assert!(owned_res.owned_bytes > 0);
+        assert!(
+            mapped_res.mapped_bytes > mapped_res.owned_bytes,
+            "mapped engine must hold the bulk of its bytes as views ({mapped_res:?})"
+        );
+        assert_eq!(owned_res.total_bytes(), mapped_res.total_bytes());
+
+        // Same kernels over the same bytes: outputs are bit-exact, at 1
+        // and at 4 threads (shard plans run over mapped arrays too).
+        let mut rng = Rng::new(33);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+        let want = original.forward(&x, batch).unwrap();
+        assert_eq!(owned.forward(&x, batch).unwrap(), want);
+        assert_eq!(mapped.forward(&x, batch).unwrap(), want);
+        worker.set_threads(4);
+        assert_eq!(worker.forward(&x, batch).unwrap(), want);
     }
 
     #[test]

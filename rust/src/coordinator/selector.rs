@@ -73,12 +73,19 @@ impl Objective {
 /// rather than assumed to be slot 0, so a reorder of `ALL` cannot silently
 /// corrupt [`Objective::Weighted`] normalization (which divides every
 /// candidate's criteria by the *dense* ones).
+///
+/// The position check is a *hard* assertion (not `debug_assert`): several
+/// callers — the harness tables, the engine, the bench's selection audit —
+/// index the dense baseline at slot 0 of the returned criteria array, so a
+/// reordered `ALL` in a release build would silently mis-normalize every
+/// `Weighted` score. Failing loudly at the first selection is the correct
+/// behavior until those callers look the slot up by kind too.
 fn dense_index() -> usize {
     let i = FormatKind::ALL
         .iter()
         .position(|&k| k == FormatKind::Dense)
         .expect("FormatKind::ALL must contain Dense");
-    debug_assert_eq!(
+    assert_eq!(
         i, 0,
         "callers (harness tables, engine) index the dense baseline at 0; \
          keep Dense first in FormatKind::ALL or update them"

@@ -12,6 +12,7 @@
 //! cuts), so a warm server runs the whole submit→forward→reply cycle
 //! without allocating anything but the per-request reply vectors.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -131,6 +132,143 @@ impl Drop for InferenceServer {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+    }
+}
+
+/// N inference workers round-robining requests — the multi-worker server
+/// mode (`repro serve --workers N`).
+///
+/// Each worker is a full [`InferenceServer`]: its own thread, engine,
+/// batcher and metrics. The intended deployment builds every engine over
+/// one shared pack mapping
+/// ([`Engine::from_pack_map`](crate::coordinator::Engine::from_pack_map)
+/// with one `Arc<PackMap>`), so N workers × M kernel threads serve from a
+/// **single physical copy** of the weights — engines share immutable
+/// layer storage by refcount, and per-worker state (activation arenas,
+/// scratch, batchers) stays private. Submission picks the next worker
+/// with an atomic counter; total throughput scales with workers while
+/// each worker's dynamic batcher keeps its own latency contract.
+pub struct WorkerSet {
+    workers: Vec<InferenceServer>,
+    next: AtomicUsize,
+}
+
+impl WorkerSet {
+    /// Spawn `workers` engines (at least 1). `build` runs once per worker
+    /// — inside that worker's thread — receiving the worker index; share
+    /// an `Arc<PackMap>` in the closure to serve one mapped pack from
+    /// every worker.
+    pub fn spawn<F>(workers: usize, cfg: ServerConfig, build: F) -> WorkerSet
+    where
+        F: Fn(usize) -> Result<Engine> + Send + Sync + 'static,
+    {
+        let build = Arc::new(build);
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let b = build.clone();
+                InferenceServer::spawn(move || b(i), cfg)
+            })
+            .collect();
+        WorkerSet {
+            workers,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit one sample to the next worker (round-robin); returns the
+    /// logits receiver.
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<Result<Vec<f32>>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[i].submit(x)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)
+            .recv()
+            .map_err(|_| anyhow!("server worker terminated"))?
+    }
+
+    /// Metrics of worker `i`.
+    pub fn worker_metrics(&self, i: usize) -> &Metrics {
+        self.workers[i].metrics()
+    }
+
+    /// Completed requests summed over all workers.
+    pub fn completed_total(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|w| w.metrics().completed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Stop every worker, flushing queued requests first.
+    pub fn shutdown(self) {
+        for w in self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+/// Multiple packs behind one submission surface: each named pack gets its
+/// own [`WorkerSet`], and requests are routed by pack name (`repro serve
+/// a.cerpack b.cerpack` routes by file stem). Unknown names are an error,
+/// not a panic.
+#[derive(Default)]
+pub struct PackRouter {
+    routes: Vec<(String, WorkerSet)>,
+}
+
+impl PackRouter {
+    pub fn new() -> PackRouter {
+        PackRouter::default()
+    }
+
+    /// Register `workers` under `name`. Re-using a name replaces nothing —
+    /// routes are looked up first-match — so callers should keep names
+    /// unique (the CLI errors on duplicate stems).
+    pub fn add(&mut self, name: impl Into<String>, workers: WorkerSet) {
+        self.routes.push((name.into(), workers));
+    }
+
+    /// Registered pack names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.routes.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The worker set serving `name`.
+    pub fn route(&self, name: &str) -> Option<&WorkerSet> {
+        self.routes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, w)| w)
+    }
+
+    /// Submit one sample to the named pack's next worker.
+    pub fn submit(&self, name: &str, x: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        let ws = self
+            .route(name)
+            .ok_or_else(|| anyhow!("no pack '{name}' is being served"))?;
+        Ok(ws.submit(x))
+    }
+
+    /// Convenience: submit to the named pack and wait.
+    pub fn infer_blocking(&self, name: &str, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(name, x)?
+            .recv()
+            .map_err(|_| anyhow!("server worker terminated"))?
+    }
+
+    /// Stop every pack's workers.
+    pub fn shutdown(self) {
+        for (_, ws) in self.routes {
+            ws.shutdown();
         }
     }
 }
@@ -392,6 +530,71 @@ mod tests {
             assert_eq!(got, want);
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn worker_set_round_robins_and_aggregates() {
+        let ws = WorkerSet::spawn(3, ServerConfig::default(), |_i| identity_engine());
+        assert_eq!(ws.workers(), 3);
+        let rxs: Vec<_> = (0..12)
+            .map(|i| ws.submit(vec![i as f32, 0.0, 0.0]))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap()[0], i as f32);
+        }
+        assert_eq!(ws.completed_total(), 12);
+        // Round-robin: every worker saw exactly a third of the traffic.
+        for i in 0..3 {
+            assert_eq!(
+                ws.worker_metrics(i)
+                    .completed
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                4,
+                "worker {i} share"
+            );
+        }
+        ws.shutdown();
+    }
+
+    #[test]
+    fn worker_set_spawn_clamps_to_one() {
+        let ws = WorkerSet::spawn(0, ServerConfig::default(), |_| identity_engine());
+        assert_eq!(ws.workers(), 1);
+        assert_eq!(ws.infer_blocking(vec![2.0, 0.0, 1.0]).unwrap(), vec![2.0, 0.0, 1.0]);
+        ws.shutdown();
+    }
+
+    #[test]
+    fn pack_router_routes_by_name_and_rejects_unknown() {
+        let mut router = PackRouter::new();
+        router.add(
+            "id",
+            WorkerSet::spawn(2, ServerConfig::default(), |_| identity_engine()),
+        );
+        // A second "network": negates its input.
+        let neg_engine = || -> Result<Engine> {
+            let mut w = Dense::zeros(3, 3);
+            for i in 0..3 {
+                w.set(i, i, -1.0);
+            }
+            Ok(Engine::native_fixed(
+                vec![("neg".into(), w, vec![0.0; 3])],
+                FormatKind::Dense,
+            ))
+        };
+        router.add("neg", WorkerSet::spawn(1, ServerConfig::default(), move |_| neg_engine()));
+        assert_eq!(router.names(), vec!["id", "neg"]);
+        assert_eq!(
+            router.infer_blocking("id", vec![1.0, 2.0, 3.0]).unwrap(),
+            vec![1.0, 2.0, 3.0]
+        );
+        assert_eq!(
+            router.infer_blocking("neg", vec![1.0, 2.0, 3.0]).unwrap(),
+            vec![-1.0, -2.0, -3.0]
+        );
+        let err = router.infer_blocking("nope", vec![1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("no pack 'nope'"));
+        router.shutdown();
     }
 
     #[test]

@@ -14,22 +14,26 @@
 //! elements cost nothing.
 
 use super::codebook::{frequency_codebook, rank_lookup, value_key};
+use super::storage::Storage;
 use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 
-/// CER matrix.
+/// CER matrix. All arrays are [`Storage`]-backed — owned after
+/// conversion, zero-copy views into the mapped pack after a
+/// `Pack::from_map` cold start (pointer arrays are widened into owned
+/// storage when their accounted on-disk width is narrower than 32 bits).
 #[derive(Clone, Debug)]
 pub struct Cer {
     rows: usize,
     cols: usize,
     /// Distinct values, frequency-major. `omega[0]` is the implicit value.
-    pub omega: Vec<f32>,
+    pub omega: Storage<f32>,
     /// Concatenated column-index runs.
     pub col_idx: ColIndices,
     /// Run boundaries into `col_idx`; `omega_ptr[0] == 0`, length = runs+1.
-    pub omega_ptr: Vec<u32>,
+    pub omega_ptr: Storage<u32>,
     /// `row_ptr[r]..row_ptr[r+1]` selects the run *slots* of row `r`
     /// (indices into `omega_ptr`); length = rows+1.
-    pub row_ptr: Vec<u32>,
+    pub row_ptr: Storage<u32>,
     /// Total number of empty (padded) runs across the matrix (Σ k̃_r).
     padded_runs: u64,
 }
@@ -87,10 +91,10 @@ impl Cer {
         Cer {
             rows,
             cols,
-            omega: codebook.into_iter().map(|(v, _)| v).collect(),
+            omega: codebook.into_iter().map(|(v, _)| v).collect::<Vec<_>>().into(),
             col_idx: ColIndices::pack(&col_idx, cols),
-            omega_ptr,
-            row_ptr,
+            omega_ptr: omega_ptr.into(),
+            row_ptr: row_ptr.into(),
             padded_runs,
         }
     }
@@ -188,11 +192,20 @@ impl Cer {
     }
 
     /// Inverse of [`Cer::encode_into`]; `buf` must be exactly one payload.
-    /// Validates the run structure (monotone pointers, per-row run counts
-    /// within the codebook, in-range column indices).
+    /// Decodes into owned storage.
     pub fn decode_from(buf: &[u8]) -> Result<Cer, crate::pack::PackError> {
+        Cer::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Cer::decode_from`] with an explicit loader (zero-copy when
+    /// mapped). Validates the run structure (monotone pointers, per-row
+    /// run counts within the codebook, in-range column indices).
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Cer, crate::pack::PackError> {
         use crate::formats::csr::validate_row_ptr;
-        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        use crate::pack::wire::Cursor;
         use crate::pack::PackError;
         let mut cur = Cursor::new(buf);
         let rows = cur.u32_len("cer rows")?;
@@ -225,12 +238,12 @@ impl Cer {
         let ci_w = IndexWidth::from_tag(cur.u8()?)
             .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
         cur.align(4)?;
-        let omega = cur.f32_array(k)?;
+        let omega = src.typed::<f32>(&mut cur, k, "cer codebook")?;
         cur.align(op_w.bytes())?;
-        let omega_ptr = read_u32s_at_width(&mut cur, op_count, op_w)?;
+        let omega_ptr = src.u32s_at_width(&mut cur, op_count, op_w, "cer OmegaPtr")?;
         validate_row_ptr(&omega_ptr, nnz, "cer Omega")?;
         cur.align(rp_w.bytes())?;
-        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        let row_ptr = src.u32s_at_width(&mut cur, rp_count, rp_w, "cer rowPtr")?;
         validate_row_ptr(&row_ptr, total_runs, "cer row")?;
         // Each row's run count indexes omega[1 + j]: must stay within K.
         if row_ptr
@@ -240,7 +253,7 @@ impl Cer {
             return Err(PackError::malformed("cer row has more runs than codebook values"));
         }
         cur.align(ci_w.bytes())?;
-        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        let col_idx = src.col_indices(&mut cur, ci_w, nnz, cols)?;
         if cur.remaining() != 0 {
             return Err(PackError::malformed("trailing bytes in cer payload"));
         }

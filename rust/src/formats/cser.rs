@@ -9,9 +9,13 @@
 use std::collections::HashMap;
 
 use super::codebook::{frequency_codebook, rank_lookup, value_key};
+use super::storage::Storage;
 use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 
-/// CSER matrix.
+/// CSER matrix. All arrays are [`Storage`]-backed — owned after
+/// conversion, zero-copy views into the mapped pack after a
+/// `Pack::from_map` cold start (pointer/ΩI arrays are widened into owned
+/// storage when their accounted on-disk width is narrower than 32 bits).
 #[derive(Clone, Debug)]
 pub struct Cser {
     rows: usize,
@@ -20,15 +24,15 @@ pub struct Cser {
     /// the rest are sorted ascending (the ordering is immaterial, §III-A —
     /// ascending keeps the representation canonical; the paper's example
     /// likewise lists Ω = [0, 2, 3, 4]).
-    pub omega: Vec<f32>,
+    pub omega: Storage<f32>,
     /// Concatenated column-index runs.
     pub col_idx: ColIndices,
     /// Codebook index of each run (into `omega`, always ≥ 1).
-    pub omega_idx: Vec<u32>,
+    pub omega_idx: Storage<u32>,
     /// Run boundaries into `col_idx`; `omega_ptr[0] == 0`, length = runs+1.
-    pub omega_ptr: Vec<u32>,
+    pub omega_ptr: Storage<u32>,
     /// `row_ptr[r]..row_ptr[r+1]` selects the run slots of row `r`.
-    pub row_ptr: Vec<u32>,
+    pub row_ptr: Storage<u32>,
 }
 
 impl Cser {
@@ -100,11 +104,11 @@ impl Cser {
         Cser {
             rows,
             cols,
-            omega,
+            omega: omega.into(),
             col_idx: ColIndices::pack(&col_idx, cols),
-            omega_idx,
-            omega_ptr,
-            row_ptr,
+            omega_idx: omega_idx.into(),
+            omega_ptr: omega_ptr.into(),
+            row_ptr: row_ptr.into(),
         }
     }
 
@@ -198,11 +202,20 @@ impl Cser {
     }
 
     /// Inverse of [`Cser::encode_into`]; `buf` must be exactly one
-    /// payload. Validates run structure and that every ΩI entry names a
-    /// non-implicit codebook value.
+    /// payload. Decodes into owned storage.
     pub fn decode_from(buf: &[u8]) -> Result<Cser, crate::pack::PackError> {
+        Cser::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Cser::decode_from`] with an explicit loader (zero-copy when
+    /// mapped). Validates run structure and that every ΩI entry names a
+    /// non-implicit codebook value.
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Cser, crate::pack::PackError> {
         use crate::formats::csr::validate_row_ptr;
-        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        use crate::pack::wire::Cursor;
         use crate::pack::PackError;
         let mut cur = Cursor::new(buf);
         let rows = cur.u32_len("cser rows")?;
@@ -236,20 +249,20 @@ impl Cser {
         let ci_w = IndexWidth::from_tag(cur.u8()?)
             .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
         cur.align(4)?;
-        let omega = cur.f32_array(k)?;
+        let omega = src.typed::<f32>(&mut cur, k, "cser codebook")?;
         cur.align(op_w.bytes())?;
-        let omega_ptr = read_u32s_at_width(&mut cur, op_count, op_w)?;
+        let omega_ptr = src.u32s_at_width(&mut cur, op_count, op_w, "cser OmegaPtr")?;
         validate_row_ptr(&omega_ptr, nnz, "cser Omega")?;
         cur.align(rp_w.bytes())?;
-        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        let row_ptr = src.u32s_at_width(&mut cur, rp_count, rp_w, "cser rowPtr")?;
         validate_row_ptr(&row_ptr, total_runs, "cser row")?;
         cur.align(oi_w.bytes())?;
-        let omega_idx = read_u32s_at_width(&mut cur, total_runs, oi_w)?;
+        let omega_idx = src.u32s_at_width(&mut cur, total_runs, oi_w, "cser OmegaI")?;
         if omega_idx.iter().any(|&i| i == 0 || i as usize >= k) {
             return Err(PackError::malformed("cser OmegaI entry out of range"));
         }
         cur.align(ci_w.bytes())?;
-        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        let col_idx = src.col_indices(&mut cur, ci_w, nnz, cols)?;
         if cur.remaining() != 0 {
             return Err(PackError::malformed("trailing bytes in cser payload"));
         }

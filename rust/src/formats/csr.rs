@@ -3,19 +3,24 @@
 //! Stores the non-zero values in row-major order (`values`), their column
 //! indices (`col_idx`) and row pointers into those arrays (`row_ptr`).
 
+use super::storage::Storage;
 use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 
-/// CSR matrix with minimal-width column indices.
+/// CSR matrix with minimal-width column indices. All arrays are
+/// [`Storage`]-backed: owned after conversion, zero-copy views into the
+/// mapped pack after a `Pack::from_map` cold start (`row_ptr` is widened
+/// into owned storage when its accounted on-disk width is narrower than
+/// 32 bits — an O(rows) copy, never O(nnz)).
 #[derive(Clone, Debug)]
 pub struct Csr {
     rows: usize,
     cols: usize,
     /// Non-zero values in row-major scan order (the paper's `W`).
-    pub values: Vec<f32>,
+    pub values: Storage<f32>,
     /// Column index of each value.
     pub col_idx: ColIndices,
     /// `row_ptr[r]..row_ptr[r+1]` indexes `values`/`col_idx` for row `r`.
-    pub row_ptr: Vec<u32>,
+    pub row_ptr: Storage<u32>,
 }
 
 impl Csr {
@@ -50,9 +55,9 @@ impl Csr {
         Csr {
             rows,
             cols,
-            values,
+            values: values.into(),
             col_idx: ColIndices::pack(&cols_v, cols),
-            row_ptr,
+            row_ptr: row_ptr.into(),
         }
     }
 
@@ -101,10 +106,20 @@ impl Csr {
     }
 
     /// Inverse of [`Csr::encode_into`]; `buf` must be exactly one payload.
-    /// Structure is validated (monotone rowPtr ending at nnz, in-range
-    /// column indices) so corrupted input fails instead of mis-decoding.
+    /// Decodes into owned storage.
     pub fn decode_from(buf: &[u8]) -> Result<Csr, crate::pack::PackError> {
-        use crate::pack::wire::{read_u32s_at_width, Cursor};
+        Csr::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Csr::decode_from`] with an explicit loader (zero-copy when
+    /// mapped). Structure is validated (monotone rowPtr ending at nnz,
+    /// in-range column indices) so corrupted input fails instead of
+    /// mis-decoding.
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Csr, crate::pack::PackError> {
+        use crate::pack::wire::Cursor;
         use crate::pack::PackError;
         let mut cur = Cursor::new(buf);
         let rows = cur.u32_len("csr rows")?;
@@ -121,12 +136,12 @@ impl Csr {
             .checked_add(1)
             .ok_or_else(|| PackError::malformed("csr row count overflow"))?;
         cur.align(4)?;
-        let values = cur.f32_array(nnz)?;
+        let values = src.typed::<f32>(&mut cur, nnz, "csr values")?;
         cur.align(rp_w.bytes())?;
-        let row_ptr = read_u32s_at_width(&mut cur, rp_count, rp_w)?;
+        let row_ptr = src.u32s_at_width(&mut cur, rp_count, rp_w, "csr rowPtr")?;
         validate_row_ptr(&row_ptr, nnz, "csr")?;
         cur.align(ci_w.bytes())?;
-        let col_idx = ColIndices::decode_from(ci_w, nnz, cols, &mut cur)?;
+        let col_idx = src.col_indices(&mut cur, ci_w, nnz, cols)?;
         if cur.remaining() != 0 {
             return Err(PackError::malformed("trailing bytes in csr payload"));
         }

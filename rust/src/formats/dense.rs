@@ -1,14 +1,17 @@
 //! Dense row-major matrix — the paper's baseline representation and the
 //! interchange type all other formats convert from/to.
 
+use super::storage::Storage;
 use super::{MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
 
-/// Row-major dense f32 matrix.
+/// Row-major dense f32 matrix. The element array is a [`Storage`]: owned
+/// in the common case, a zero-copy view into a mapped `.cerpack` after a
+/// cold start through [`crate::pack::Pack::from_map`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct Dense {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: Storage<f32>,
 }
 
 impl Dense {
@@ -29,14 +32,18 @@ impl Dense {
         Dense {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: vec![0.0; rows * cols].into(),
         }
     }
 
     /// From a row-major buffer (length must be `rows*cols`).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense {
         assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
-        Dense { rows, cols, data }
+        Dense {
+            rows,
+            cols,
+            data: data.into(),
+        }
     }
 
     /// From per-row slices (all rows must have equal length).
@@ -51,7 +58,7 @@ impl Dense {
         Dense {
             rows: rows.len(),
             cols,
-            data,
+            data: data.into(),
         }
     }
 
@@ -64,7 +71,8 @@ impl Dense {
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
-        self.data[r * self.cols + c] = v;
+        let idx = r * self.cols + c;
+        self.data.make_mut()[idx] = v;
     }
 
     #[inline]
@@ -76,13 +84,21 @@ impl Dense {
         &self.data
     }
 
+    /// Mutable element access. On a mapped matrix this promotes the
+    /// element array to an owned copy first (copy-on-write) — the mapped
+    /// pack itself is immutable.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.make_mut()
     }
 
-    /// Consume into the raw row-major buffer.
+    /// The underlying storage (for residency accounting).
+    pub fn data_storage(&self) -> &Storage<f32> {
+        &self.data
+    }
+
+    /// Consume into the raw row-major buffer (copies when mapped).
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        self.data.into_vec()
     }
 
     /// Number of non-zero elements.
@@ -90,12 +106,12 @@ impl Dense {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }
 
-    /// Map every element (returns a new matrix).
+    /// Map every element (returns a new, owned matrix).
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Dense {
         Dense {
             rows: self.rows,
             cols: self.cols,
-            data: self.data.iter().map(|&v| f(v)).collect(),
+            data: self.data.iter().map(|&v| f(v)).collect::<Vec<_>>().into(),
         }
     }
 
@@ -115,8 +131,19 @@ impl Dense {
     }
 
     /// Inverse of [`Dense::encode_into`]; `buf` must be exactly one
-    /// payload.
+    /// payload. Decodes into owned storage.
     pub fn decode_from(buf: &[u8]) -> Result<Dense, crate::pack::PackError> {
+        Dense::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Dense::decode_from`] with an explicit [`ArrayLoader`]: a mapped
+    /// loader yields the element array as a zero-copy view into the pack.
+    ///
+    /// [`ArrayLoader`]: crate::pack::wire::ArrayLoader
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Dense, crate::pack::PackError> {
         use crate::pack::{wire::Cursor, PackError};
         let mut cur = Cursor::new(buf);
         let rows = cur.u32_len("dense rows")?;
@@ -124,7 +151,7 @@ impl Dense {
         let n = rows
             .checked_mul(cols)
             .ok_or_else(|| PackError::malformed("dense element count overflow"))?;
-        let data = cur.f32_array(n)?;
+        let data = src.typed::<f32>(&mut cur, n, "dense data")?;
         if cur.remaining() != 0 {
             return Err(PackError::malformed("trailing bytes in dense payload"));
         }

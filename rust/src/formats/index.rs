@@ -11,6 +11,8 @@
 //! what enters the storage/energy model, exactly as in the paper's
 //! analytical accounting.
 
+use super::storage::Storage;
+
 /// One of the three admissible index bit-widths.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum IndexWidth {
@@ -96,12 +98,15 @@ impl_idx!(u8, 8);
 impl_idx!(u16, 16);
 impl_idx!(u32, 32);
 
-/// A column-index array physically stored at its minimal width.
+/// A column-index array physically stored at its minimal width. The
+/// elements live in a [`Storage`] — owned after `from_dense` conversion,
+/// a zero-copy view into the mapped pack after a `Pack::from_map` cold
+/// start.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ColIndices {
-    U8(Vec<u8>),
-    U16(Vec<u16>),
-    U32(Vec<u32>),
+    U8(Storage<u8>),
+    U16(Storage<u16>),
+    U32(Storage<u32>),
 }
 
 impl ColIndices {
@@ -113,9 +118,15 @@ impl ColIndices {
     /// property of the matrix dimension.
     pub fn pack(indices: &[usize], n_cols: usize) -> ColIndices {
         match IndexWidth::minimal(n_cols.saturating_sub(1)) {
-            IndexWidth::U8 => ColIndices::U8(indices.iter().map(|&i| i as u8).collect()),
-            IndexWidth::U16 => ColIndices::U16(indices.iter().map(|&i| i as u16).collect()),
-            IndexWidth::U32 => ColIndices::U32(indices.iter().map(|&i| i as u32).collect()),
+            IndexWidth::U8 => {
+                ColIndices::U8(indices.iter().map(|&i| i as u8).collect::<Vec<_>>().into())
+            }
+            IndexWidth::U16 => {
+                ColIndices::U16(indices.iter().map(|&i| i as u16).collect::<Vec<_>>().into())
+            }
+            IndexWidth::U32 => {
+                ColIndices::U32(indices.iter().map(|&i| i as u32).collect::<Vec<_>>().into())
+            }
         }
     }
 
@@ -168,79 +179,69 @@ impl ColIndices {
             ColIndices::U8(v) => out.extend_from_slice(v),
             ColIndices::U16(v) => {
                 out.reserve(v.len() * 2);
-                for &x in v {
+                for &x in v.iter() {
                     out.extend_from_slice(&x.to_le_bytes());
                 }
             }
             ColIndices::U32(v) => {
                 out.reserve(v.len() * 4);
-                for &x in v {
+                for &x in v.iter() {
                     out.extend_from_slice(&x.to_le_bytes());
                 }
             }
         }
     }
 
-    /// Decode `count` elements stored at `width`, validating every index
-    /// against `n_cols` so corrupted payloads cannot produce out-of-range
-    /// column accesses.
+    /// Whether the index array is a zero-copy view into a mapped pack.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            ColIndices::U8(v) => v.is_mapped(),
+            ColIndices::U16(v) => v.is_mapped(),
+            ColIndices::U32(v) => v.is_mapped(),
+        }
+    }
+
+    /// Byte footprint of the element array (both backings).
+    pub fn byte_len(&self) -> u64 {
+        match self {
+            ColIndices::U8(v) => v.byte_len(),
+            ColIndices::U16(v) => v.byte_len(),
+            ColIndices::U32(v) => v.byte_len(),
+        }
+    }
+
+    /// Decode `count` elements stored at `width` out of `cur` into owned
+    /// storage, validating every index against `n_cols`. (The zero-copy
+    /// path is [`crate::pack::wire::ArrayLoader::col_indices`].)
     pub fn decode_from(
         width: IndexWidth,
         count: usize,
         n_cols: usize,
         cur: &mut crate::pack::wire::Cursor,
     ) -> Result<ColIndices, crate::pack::PackError> {
-        use crate::pack::PackError;
-        let out = match width {
-            IndexWidth::U8 => ColIndices::U8(cur.take(count)?.to_vec()),
-            IndexWidth::U16 => {
-                let bytes = cur.take(
-                    count
-                        .checked_mul(2)
-                        .ok_or_else(|| PackError::malformed("colI size overflow"))?,
-                )?;
-                ColIndices::U16(
-                    bytes
-                        .chunks_exact(2)
-                        .map(|b| u16::from_le_bytes([b[0], b[1]]))
-                        .collect(),
-                )
-            }
-            IndexWidth::U32 => {
-                let bytes = cur.take(
-                    count
-                        .checked_mul(4)
-                        .ok_or_else(|| PackError::malformed("colI size overflow"))?,
-                )?;
-                ColIndices::U32(
-                    bytes
-                        .chunks_exact(4)
-                        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                        .collect(),
-                )
-            }
-        };
-        for i in 0..out.len() {
-            if out.get(i) >= n_cols {
-                return Err(PackError::malformed(format!(
-                    "column index {} out of range (cols = {n_cols})",
-                    out.get(i)
-                )));
-            }
-        }
-        Ok(out)
+        crate::pack::wire::ArrayLoader::owned().col_indices(cur, width, count, n_cols)
     }
 }
 
 /// Dispatch a generic block over the physical index type of a
-/// [`ColIndices`]. `$slice` binds to the typed `&[T]` slice.
+/// [`ColIndices`]. `$slice` binds to the typed `&[T]` slice (whatever the
+/// backing — owned or mapped — the kernels see a plain slice).
 #[macro_export]
 macro_rules! with_col_indices {
     ($ci:expr, $slice:ident => $body:expr) => {
         match $ci {
-            $crate::formats::ColIndices::U8($slice) => $body,
-            $crate::formats::ColIndices::U16($slice) => $body,
-            $crate::formats::ColIndices::U32($slice) => $body,
+            $crate::formats::ColIndices::U8(__cer_ci_storage) => {
+                let $slice = __cer_ci_storage.as_slice();
+                $body
+            }
+            $crate::formats::ColIndices::U16(__cer_ci_storage) => {
+                let $slice = __cer_ci_storage.as_slice();
+                $body
+            }
+            $crate::formats::ColIndices::U32(__cer_ci_storage) => {
+                let $slice = __cer_ci_storage.as_slice();
+                $body
+            }
         }
     };
 }

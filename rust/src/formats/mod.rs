@@ -13,6 +13,11 @@
 //! Storage accounting follows §V: matrix element values are f32
 //! (`VALUE_BITS` = 32) and index/pointer arrays are accounted at their
 //! minimal width out of {8, 16, 32} bits.
+//!
+//! Every bulk array of every format lives in a [`Storage<T>`] — owned by
+//! the representation, or a zero-copy view into a reference-counted
+//! mapped `.cerpack` ([`crate::pack::map::PackMap`]). Kernels and the
+//! cost model see `&[T]` either way (see [`storage`]).
 
 pub mod cer;
 pub mod codebook;
@@ -20,12 +25,14 @@ pub mod cser;
 pub mod csr;
 pub mod dense;
 pub mod index;
+pub mod storage;
 
 pub use cer::Cer;
 pub use cser::Cser;
 pub use csr::Csr;
 pub use dense::Dense;
 pub use index::{ColIndices, Idx, IndexWidth};
+pub use storage::{Pod, Storage, StorageResidency};
 
 /// Bit-width of a stored matrix element value (single-precision float, §V).
 pub const VALUE_BITS: u32 = 32;

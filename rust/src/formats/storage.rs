@@ -1,0 +1,389 @@
+//! The storage layer under every matrix representation.
+//!
+//! A [`Storage<T>`] is an array of plain-old-data elements that is either
+//! **owned** (a `Vec<T>`, the result of `from_dense` conversion or of a
+//! copying decode) or **mapped** (a typed, alignment-checked view into a
+//! reference-counted [`PackMap`](crate::pack::map::PackMap) holding a
+//! `.cerpack` file image). Kernels, shard plans and the selector only ever
+//! see `&[T]` through `Deref`, so the execution path is identical — and
+//! bit-identical — for both variants; the difference is purely where the
+//! bytes live and who else shares them.
+//!
+//! Mapped views are produced by the zero-copy pack reader
+//! ([`crate::pack::Pack::from_map`]): array payloads are little-endian and
+//! written at their natural alignment, so on little-endian hosts they are
+//! reinterpreted in place (no per-array heap copy); big-endian hosts and
+//! narrower-than-`u32` pointer arrays transparently fall back to owned
+//! decoding. Mutation goes through [`Storage::make_mut`], which promotes a
+//! mapped view to an owned copy first (copy-on-write) — the map itself is
+//! immutable, always.
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::pack::map::PackMap;
+use crate::pack::PackError;
+
+/// Element types that may be reinterpreted directly from little-endian
+/// pack bytes: every bit pattern is a valid value and the in-memory layout
+/// on a little-endian host equals the wire layout.
+///
+/// # Safety
+/// Implementors must be inhabited for every bit pattern, have no padding,
+/// and have `align_of::<Self>() == size_of::<Self>()` ≤ 8.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {
+    /// Decode a little-endian byte run (`bytes.len()` must be a multiple
+    /// of `size_of::<Self>()`) — the copying fallback used where a mapped
+    /// view cannot be taken.
+    fn parse_le(bytes: &[u8]) -> Vec<Self>;
+}
+
+// SAFETY: u8/u16/u32/f32 are inhabited for all bit patterns, padding-free,
+// and size == align.
+unsafe impl Pod for u8 {
+    fn parse_le(bytes: &[u8]) -> Vec<u8> {
+        bytes.to_vec()
+    }
+}
+unsafe impl Pod for u16 {
+    fn parse_le(bytes: &[u8]) -> Vec<u16> {
+        bytes
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]))
+            .collect()
+    }
+}
+unsafe impl Pod for u32 {
+    fn parse_le(bytes: &[u8]) -> Vec<u32> {
+        bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+}
+unsafe impl Pod for f32 {
+    fn parse_le(bytes: &[u8]) -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+}
+
+/// A typed view into a [`PackMap`]: `len` elements of `T` starting at
+/// byte `offset` of the map. Construction checks bounds and alignment;
+/// the `Arc` keeps the mapping alive for as long as the view exists.
+pub struct MappedSlice<T: Pod> {
+    map: Arc<PackMap>,
+    offset: usize,
+    len: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Pod> MappedSlice<T> {
+    fn as_slice(&self) -> &[T] {
+        // SAFETY: construction verified that `offset .. offset + len*size`
+        // lies inside the map and that the base address is aligned for T;
+        // the bytes outlive `self` via the Arc and T: Pod makes every bit
+        // pattern valid. No code in this process writes the backing;
+        // external writers are excluded by the mapped-file operational
+        // invariant (see `crate::pack::map` docs: served packs are
+        // replaced by rename, never rewritten in place).
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.bytes().as_ptr().add(self.offset) as *const T,
+                self.len,
+            )
+        }
+    }
+}
+
+impl<T: Pod> Clone for MappedSlice<T> {
+    fn clone(&self) -> Self {
+        MappedSlice {
+            map: self.map.clone(),
+            offset: self.offset,
+            len: self.len,
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+/// An element array that is either owned or a zero-copy view into a
+/// shared mapped pack. Dereferences to `&[T]` — the representation every
+/// kernel and model runs over, regardless of backing.
+#[derive(Clone)]
+pub enum Storage<T: Pod> {
+    /// Heap-owned elements (construction, conversion, copying decode).
+    Owned(Vec<T>),
+    /// Borrow-by-refcount view into an immutable [`PackMap`].
+    Mapped(MappedSlice<T>),
+}
+
+impl<T: Pod> Storage<T> {
+    /// Owned storage over `v`.
+    pub fn owned(v: Vec<T>) -> Storage<T> {
+        Storage::Owned(v)
+    }
+
+    /// Zero-copy view of `len` elements at byte `offset` of `map`.
+    /// Fails (never UB) on out-of-bounds or misaligned geometry — the
+    /// error a corrupted or hand-crafted pack surfaces as.
+    pub(crate) fn mapped(
+        map: Arc<PackMap>,
+        offset: usize,
+        len: usize,
+    ) -> Result<Storage<T>, PackError> {
+        let size = std::mem::size_of::<T>();
+        let byte_len = len
+            .checked_mul(size)
+            .ok_or_else(|| PackError::malformed("mapped array size overflow"))?;
+        let end = offset
+            .checked_add(byte_len)
+            .ok_or_else(|| PackError::malformed("mapped array offset overflow"))?;
+        if end > map.len() {
+            return Err(PackError::Truncated);
+        }
+        let addr = map.bytes().as_ptr() as usize + offset;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return Err(PackError::malformed(format!(
+                "mapped array at byte offset {offset} is not {}-byte aligned",
+                std::mem::align_of::<T>()
+            )));
+        }
+        Ok(Storage::Mapped(MappedSlice {
+            map,
+            offset,
+            len,
+            _marker: std::marker::PhantomData,
+        }))
+    }
+
+    /// The elements, whatever the backing.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Whether this array is a view into a mapped pack (false = owned).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Storage::Mapped(_))
+    }
+
+    /// Byte footprint of the elements (identical for both backings; what
+    /// the residency accounting sums).
+    pub fn byte_len(&self) -> u64 {
+        self.as_slice().len() as u64 * std::mem::size_of::<T>() as u64
+    }
+
+    /// Mutable access, promoting a mapped view to an owned copy first
+    /// (copy-on-write; the map is never written through).
+    pub fn make_mut(&mut self) -> &mut Vec<T> {
+        if let Storage::Mapped(m) = self {
+            let copy = m.as_slice().to_vec();
+            *self = Storage::Owned(copy);
+        }
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(_) => unreachable!("promoted above"),
+        }
+    }
+
+    /// Consume into an owned `Vec` (copies when mapped).
+    pub fn into_vec(self) -> Vec<T> {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(m) => m.as_slice().to_vec(),
+        }
+    }
+}
+
+/// Byte accounting of where arrays physically live: owned heap storage
+/// vs zero-copy views into a mapped pack. Summed per matrix by
+/// [`crate::kernels::AnyMatrix::residency`] and per engine by
+/// [`Engine::storage_residency`](crate::coordinator::Engine::storage_residency) —
+/// the measured "bytes copied at cold start" number the pack benchmark
+/// and the zero-copy tests report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StorageResidency {
+    /// Bytes held in owned (heap-copied) storage.
+    pub owned_bytes: u64,
+    /// Bytes viewed zero-copy out of a mapped pack.
+    pub mapped_bytes: u64,
+}
+
+impl StorageResidency {
+    /// Account one storage array.
+    pub fn add<T: Pod>(&mut self, s: &Storage<T>) {
+        if s.is_mapped() {
+            self.mapped_bytes += s.byte_len();
+        } else {
+            self.owned_bytes += s.byte_len();
+        }
+    }
+
+    /// Account a column-index array at its physical width.
+    pub fn add_col_indices(&mut self, ci: &crate::formats::ColIndices) {
+        if ci.is_mapped() {
+            self.mapped_bytes += ci.byte_len();
+        } else {
+            self.owned_bytes += ci.byte_len();
+        }
+    }
+
+    /// Merge another accounting into this one.
+    pub fn merge(&mut self, other: StorageResidency) {
+        self.owned_bytes += other.owned_bytes;
+        self.mapped_bytes += other.mapped_bytes;
+    }
+
+    /// Total bytes across both backings.
+    pub fn total_bytes(&self) -> u64 {
+        self.owned_bytes + self.mapped_bytes
+    }
+}
+
+impl<T: Pod> Deref for Storage<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Storage<T> {
+        Storage::Owned(v)
+    }
+}
+
+impl<T: Pod> Default for Storage<T> {
+    fn default() -> Storage<T> {
+        Storage::Owned(Vec::new())
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Print like the Vec the field used to be, with the backing noted
+        // only for mapped views.
+        if self.is_mapped() {
+            write!(f, "mapped:")?;
+        }
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Storage<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + Eq> Eq for Storage<T> {}
+
+impl<T: Pod + PartialEq> PartialEq<Vec<T>> for Storage<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Storage<T>> for Vec<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq, const N: usize> PartialEq<[T; N]> for Storage<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_storage_behaves_like_a_vec() {
+        let s: Storage<u32> = vec![3u32, 1, 4, 1, 5].into();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[2], 4);
+        assert_eq!(&s[1..3], &[1, 4]);
+        assert_eq!(s.iter().sum::<u32>(), 14);
+        assert!(!s.is_mapped());
+        assert_eq!(s.byte_len(), 20);
+        assert_eq!(s, vec![3u32, 1, 4, 1, 5]);
+    }
+
+    #[test]
+    fn mapped_view_reads_in_place_and_cow_copies() {
+        // A map whose bytes are the LE encoding of known u32s/f32s.
+        let mut bytes = Vec::new();
+        for v in [7u32, 8, 9, 10] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [1.5f32, -2.25] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = PackMap::from_bytes(&bytes);
+        let ints: Storage<u32> = Storage::mapped(map.clone(), 0, 4).unwrap();
+        let floats: Storage<f32> = Storage::mapped(map.clone(), 16, 2).unwrap();
+        assert!(ints.is_mapped() && floats.is_mapped());
+        assert_eq!(ints, vec![7u32, 8, 9, 10]);
+        assert_eq!(floats, vec![1.5f32, -2.25]);
+        // The view points into the map, not at a copy.
+        assert_eq!(ints.as_slice().as_ptr() as usize, map.bytes().as_ptr() as usize);
+
+        // Copy-on-write: mutation promotes to owned; the map is untouched.
+        let mut cow = ints.clone();
+        cow.make_mut()[0] = 99;
+        assert!(!cow.is_mapped());
+        assert_eq!(cow[0], 99);
+        assert_eq!(ints[0], 7, "original view unchanged");
+        assert_eq!(map.bytes()[0], 7, "map bytes immutable");
+    }
+
+    #[test]
+    fn mapped_view_geometry_is_checked() {
+        let map = PackMap::from_bytes(&[0u8; 16]);
+        // Out of bounds.
+        assert!(matches!(
+            Storage::<u32>::mapped(map.clone(), 8, 3),
+            Err(PackError::Truncated)
+        ));
+        // Misaligned (map base is 8-aligned, offset 2 is not 4-aligned).
+        assert!(matches!(
+            Storage::<u32>::mapped(map.clone(), 2, 1),
+            Err(PackError::Malformed(_))
+        ));
+        // u16 at offset 2 is fine.
+        assert!(Storage::<u16>::mapped(map.clone(), 2, 3).is_ok());
+        // Length overflow must not wrap.
+        assert!(Storage::<u32>::mapped(map, 0, usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn parse_le_matches_per_element_decoding() {
+        let bytes: Vec<u8> = vec![0x01, 0x02, 0x03, 0x04, 0xFF, 0xFF, 0x00, 0x80];
+        assert_eq!(u8::parse_le(&bytes).len(), 8);
+        assert_eq!(u16::parse_le(&bytes), vec![0x0201, 0x0403, 0xFFFF, 0x8000]);
+        assert_eq!(u32::parse_le(&bytes), vec![0x0403_0201, 0x8000_FFFF]);
+        assert_eq!(f32::parse_le(&1.0f32.to_le_bytes().to_vec()), vec![1.0]);
+    }
+
+    #[test]
+    fn equality_ignores_backing() {
+        let bytes: Vec<u8> = [5u32, 6, 7].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let map = PackMap::from_bytes(&bytes);
+        let mapped: Storage<u32> = Storage::mapped(map, 0, 3).unwrap();
+        let owned: Storage<u32> = vec![5u32, 6, 7].into();
+        assert_eq!(mapped, owned);
+        assert_eq!(owned, mapped);
+        assert_eq!(mapped.into_vec(), vec![5, 6, 7]);
+    }
+}

@@ -50,7 +50,9 @@ pub use packed::PackedDense;
 use std::ops::Range;
 
 use crate::exec::{self, ShardPlan, SyncCell, ThreadPool};
-use crate::formats::{Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown};
+use crate::formats::{
+    Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown, StorageResidency,
+};
 
 /// `Σx` for the Ω[0]-decomposition correction — the single definition all
 /// kernels and drivers share, so every shard of one product (and the
@@ -364,8 +366,21 @@ impl AnyMatrix {
     }
 
     /// Inverse of [`AnyMatrix::encode_into`]; `buf` must be exactly one
-    /// payload.
+    /// payload. Decodes into owned storage.
     pub fn decode_from(buf: &[u8]) -> Result<AnyMatrix, crate::pack::PackError> {
+        AnyMatrix::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`AnyMatrix::decode_from`] with an explicit loader: a mapped
+    /// loader yields every bulk array as a zero-copy [`Storage`] view
+    /// into the pack (pointer arrays stored narrower than 32 bits are
+    /// widened into owned storage — an O(rows) copy, never O(nnz)).
+    ///
+    /// [`Storage`]: crate::formats::Storage
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<AnyMatrix, crate::pack::PackError> {
         use crate::pack::PackError;
         if buf.len() < 4 {
             return Err(PackError::Truncated);
@@ -373,12 +388,44 @@ impl AnyMatrix {
         let kind = FormatKind::from_tag(buf[0])
             .ok_or_else(|| PackError::Malformed(format!("unknown format tag {}", buf[0])))?;
         let body = &buf[4..];
+        let src = src.advanced(4);
         Ok(match kind {
-            FormatKind::Dense => AnyMatrix::Dense(Dense::decode_from(body)?),
-            FormatKind::Csr => AnyMatrix::Csr(Csr::decode_from(body)?),
-            FormatKind::Cer => AnyMatrix::Cer(Cer::decode_from(body)?),
-            FormatKind::Cser => AnyMatrix::Cser(Cser::decode_from(body)?),
+            FormatKind::Dense => AnyMatrix::Dense(Dense::decode_from_source(body, src)?),
+            FormatKind::Csr => AnyMatrix::Csr(Csr::decode_from_source(body, src)?),
+            FormatKind::Cer => AnyMatrix::Cer(Cer::decode_from_source(body, src)?),
+            FormatKind::Cser => AnyMatrix::Cser(Cser::decode_from_source(body, src)?),
         })
+    }
+
+    /// Where this matrix's arrays physically live: bytes held in owned
+    /// heap storage vs bytes viewed zero-copy out of a mapped pack. An
+    /// engine cold-started through the owned reader reports everything
+    /// under `owned_bytes`; through the mmap reader, everything except
+    /// narrow-width pointer arrays under `mapped_bytes`.
+    pub fn residency(&self) -> StorageResidency {
+        let mut r = StorageResidency::default();
+        match self {
+            AnyMatrix::Dense(m) => r.add(m.data_storage()),
+            AnyMatrix::Csr(m) => {
+                r.add(&m.values);
+                r.add_col_indices(&m.col_idx);
+                r.add(&m.row_ptr);
+            }
+            AnyMatrix::Cer(m) => {
+                r.add(&m.omega);
+                r.add_col_indices(&m.col_idx);
+                r.add(&m.omega_ptr);
+                r.add(&m.row_ptr);
+            }
+            AnyMatrix::Cser(m) => {
+                r.add(&m.omega);
+                r.add_col_indices(&m.col_idx);
+                r.add(&m.omega_idx);
+                r.add(&m.omega_ptr);
+                r.add(&m.row_ptr);
+            }
+        }
+        r
     }
 
     /// `Y = M·X` with `X` column-major (`n × l`), `Y` column-major (`m × l`).

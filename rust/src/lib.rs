@@ -43,7 +43,10 @@
 //!
 //! ## Modules
 //!
-//! * [`formats`] — the four matrix containers and conversions.
+//! * [`formats`] — the four matrix containers and conversions. Every
+//!   bulk array lives in a [`formats::Storage`]: owned, or a zero-copy
+//!   view into a reference-counted mapped `.cerpack`
+//!   ([`pack::map::PackMap`]) — kernels see `&[T]` either way.
 //! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4),
 //!   each with row-range entry points for sharded execution and a fused
 //!   [`kernels::Epilogue`] (bias + ReLU applied in-shard, while each
@@ -69,11 +72,17 @@
 //!   format per layer. The native forward pass is fully fused: bias+ReLU
 //!   run inside the sharded kernels, the layer sequence is one pool
 //!   dispatch, and a double-buffered activation arena makes the
-//!   steady-state path allocation-free per request.
+//!   steady-state path allocation-free per request. A
+//!   [`coordinator::WorkerSet`] round-robins N such engines — all
+//!   sharing one mapped pack — and a [`coordinator::PackRouter`] serves
+//!   multiple packs behind one submission surface.
 //! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
 //!   compressed network (selected formats, codebooks, biases, provenance
 //!   manifest, per-section checksums) serialized once and cold-started by
-//!   [`coordinator::Engine::from_pack`] without re-running compression.
+//!   [`coordinator::Engine::from_pack`] (copying reader) or
+//!   [`coordinator::Engine::from_pack_mmap`] (zero-copy: `mmap(2)` via
+//!   [`pack::map::PackMap`], arrays viewed in place with no per-array
+//!   heap copy, N engines per mapping) without re-running compression.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts (stubbed
 //!   unless built with the `xla` feature).
 //! * [`harness`] — regenerates every table and figure of the paper.

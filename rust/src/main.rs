@@ -137,6 +137,20 @@ System commands:
                              metrics); --threads N fans every batch —
                              including 1–3 sample remainders — across the
                              exec pool's fused forward pipeline
+  serve <a.cerpack> [b...]   serve packed networks through the zero-copy
+                             mmap cold start: each pack is mapped once and
+                             --workers N engines share that one mapping
+                             (requests round-robin across workers; multiple
+                             packs are routed per request by file stem);
+                             --verify checks every reply bit-for-bit
+                             against the owned-storage reader
+  bench-gate                 diff --fresh BENCH_*.json against a committed
+                             --baseline; exits non-zero when any tracked
+                             metric (…_ms/…_ns lower-better; gflops,
+                             speedups, compression_ratio higher-better)
+                             regresses more than --max-regress-pct
+                             (default 25); an empty baseline = seeding
+                             pass; --update rewrites the baseline
   inspect --net <name>       print layer statistics of a synthesized net
   help                       this text
 
@@ -159,6 +173,11 @@ Common flags:
   --objective O     deployment argmin for pack/e2e/serve format selection:
                     energy|time|ops|storage (default energy); `time`
                     interacts with --threads
+  --workers N       server engines per pack for `serve <pack>` (default 1);
+                    all N share one mapped copy of the weights
+  --requests N      demo request count for the serve commands
+  --verify          (serve <pack>) assert every reply equals the
+                    owned-storage cold-start path bit-for-bit
 ";
 
 /// `--threads` as an explicit request: a number, or `auto`/`0` for all
@@ -209,10 +228,11 @@ fn main() -> ExitCode {
 }
 
 fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
-    // Only `inspect` takes a bare argument (the .cerpack path); anywhere
-    // else a stray positional is a mistyped flag — fail loudly rather
-    // than silently running with defaults.
-    if !a.positional.is_empty() && cmd != "inspect" {
+    // Only `inspect` (the .cerpack path) and `serve` (one or more packs
+    // to serve) take bare arguments; anywhere else a stray positional is
+    // a mistyped flag — fail loudly rather than silently running with
+    // defaults.
+    if !a.positional.is_empty() && !matches!(cmd, "inspect" | "serve") {
         anyhow::bail!(
             "unexpected argument '{}' — flags are `--key value` (run `repro help`)",
             a.positional[0]
@@ -397,10 +417,14 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             let dir = PathBuf::from(a.get_str("artifacts", "artifacts"));
             run_e2e(&dir, a)?;
         }
+        "serve" if !a.positional.is_empty() => {
+            run_serve_packs(&a.positional, a)?;
+        }
         "serve" => {
             let dir = PathBuf::from(a.get_str("artifacts", "artifacts"));
             run_serve_demo(&dir, a)?;
         }
+        "bench-gate" => cmd_bench_gate(a)?,
         "all" => {
             let mut cfg = eval_config(a);
             cfg.disk = true; // the shared eval feeds table2's disk columns
@@ -721,6 +745,208 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
             engine.storage_bits() as f64 / 8.0 / 1024.0,
         );
     }
+    Ok(())
+}
+
+/// `repro serve a.cerpack [b.cerpack ...]` — serve one or more packed
+/// networks through the zero-copy cold-start path: each pack is mapped
+/// once (`Arc<PackMap>`), `--workers N` engines per pack share that one
+/// mapping (N engines × M kernel threads, round-robined), and demo
+/// traffic is routed per request by pack name. With `--verify`, every
+/// reply is checked bit-for-bit against an owned-storage engine loaded
+/// through the copying reader — the acceptance check that the mmap path
+/// changes *where* bytes live, never *what* the kernels compute.
+fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
+    use cer::coordinator::batcher::BatcherConfig;
+    use cer::coordinator::{Engine, PackRouter, ServerConfig, WorkerSet};
+    use cer::pack::map::PackMap;
+    use cer::util::{human_bytes, Rng};
+
+    let workers = a.get("workers", 1usize).max(1);
+    let requests = a.get("requests", 128usize);
+    let verify = a.has("verify");
+    let threads = cer::exec::resolve_threads(threads_flag(a));
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: a.get("max-batch", 32usize),
+            max_delay_us: a.get("max-delay-us", 2_000u64),
+        },
+        threads: Some(threads),
+    };
+
+    let mut router = PackRouter::new();
+    // Owned-path reference engines for --verify, plus per-pack input dims.
+    let mut reference: Vec<(String, cer::coordinator::Engine)> = Vec::new();
+    let mut dims: Vec<(String, usize)> = Vec::new();
+    for p in packs {
+        let path = Path::new(p);
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(p)
+            .to_string();
+        anyhow::ensure!(
+            !dims.iter().any(|(n, _)| n == &name),
+            "duplicate pack name '{name}' — serve distinctly named packs"
+        );
+        let map = PackMap::open(path)
+            .map_err(|e| anyhow::anyhow!("mapping {}: {e}", path.display()))?;
+        // One probe engine up front: input dim, residency report, and an
+        // early error instead of a failed first request.
+        let probe = Engine::from_pack_map(&map)?;
+        let res = probe.storage_residency();
+        println!(
+            "{name}: {} on disk ({}), {workers} worker(s) x {threads} thread(s) — \
+             {} mapped / {} owned per engine",
+            human_bytes(map.len() as f64),
+            if map.is_mmap() { "mmap" } else { "heap-mapped" },
+            human_bytes(res.mapped_bytes as f64),
+            human_bytes(res.owned_bytes as f64),
+        );
+        dims.push((name.clone(), probe.in_dim()));
+        if verify {
+            reference.push((name.clone(), Engine::from_pack(path)?));
+        }
+        drop(probe);
+        let map_for_workers = map.clone();
+        router.add(
+            name,
+            WorkerSet::spawn(workers, cfg, move |_i| {
+                Engine::from_pack_map(&map_for_workers)
+            }),
+        );
+    }
+
+    println!(
+        "serving {} pack(s) [{}], {requests} request(s), routed per request ...",
+        dims.len(),
+        router.names().join(", ")
+    );
+    // (pack index, input, reply receiver) per in-flight request.
+    type Pending = (usize, Vec<f32>, std::sync::mpsc::Receiver<anyhow::Result<Vec<f32>>>);
+    let mut rng = Rng::new(a.get("seed", 0xCE5Eu64));
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<Pending> = Vec::new();
+    for i in 0..requests {
+        let (name, in_dim) = &dims[i % dims.len()];
+        let x: Vec<f32> = (0..*in_dim).map(|_| rng.f32() - 0.5).collect();
+        let rx = router.submit(name, x.clone())?;
+        pending.push((i % dims.len(), x, rx));
+    }
+    let mut verified = 0usize;
+    for (pack_idx, x, rx) in pending {
+        let got = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker terminated"))??;
+        if verify {
+            let (_, engine) = &mut reference[pack_idx];
+            let want = engine.forward(&x, 1)?;
+            anyhow::ensure!(
+                got == want,
+                "mmap-served reply diverges from the owned-storage path (pack '{}')",
+                dims[pack_idx].0
+            );
+            verified += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    for (name, _) in &dims {
+        let ws = router.route(name).expect("registered");
+        let mut per_worker = Vec::new();
+        for w in 0..ws.workers() {
+            per_worker.push(
+                ws.worker_metrics(w)
+                    .completed
+                    .load(std::sync::atomic::Ordering::Relaxed)
+                    .to_string(),
+            );
+        }
+        println!(
+            "  {name}: {} completed (per worker: {})",
+            ws.completed_total(),
+            per_worker.join("/")
+        );
+    }
+    println!(
+        "done: {:.1} req/s{}",
+        requests as f64 / dt.as_secs_f64(),
+        if verify {
+            format!(", {verified}/{requests} replies verified bit-identical to the owned path")
+        } else {
+            String::new()
+        }
+    );
+    router.shutdown();
+    Ok(())
+}
+
+/// `repro bench-gate --fresh BENCH_x.json --baseline ci/baselines/BENCH_x.json`
+/// — diff a fresh bench artifact against the committed baseline and fail
+/// (non-zero exit) on any tracked metric regressing beyond
+/// `--max-regress-pct` (default 25). An empty `{}` baseline makes this a
+/// seeding pass; `--update` writes the fresh artifact over the baseline
+/// (for maintainers recording a new trajectory point).
+fn cmd_bench_gate(a: &Args) -> anyhow::Result<()> {
+    use cer::util::benchgate::gate;
+    use cer::util::json;
+
+    let fresh_path = a.get_str("fresh", "");
+    let baseline_path = a.get_str("baseline", "");
+    anyhow::ensure!(
+        !fresh_path.is_empty() && !baseline_path.is_empty(),
+        "usage: repro bench-gate --fresh <new.json> --baseline <committed.json> \
+         [--max-regress-pct 25] [--update]"
+    );
+    let max_regress = a.get("max-regress-pct", 25.0f64);
+    let fresh_text = std::fs::read_to_string(&fresh_path)
+        .map_err(|e| anyhow::anyhow!("reading {fresh_path}: {e}"))?;
+    let fresh = json::parse(&fresh_text)
+        .map_err(|e| anyhow::anyhow!("parsing {fresh_path}: {e}"))?;
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            println!("baseline {baseline_path} absent — treating as empty (seeding run)");
+            json::Json::Obj(Vec::new())
+        }
+        Err(e) => return Err(anyhow::anyhow!("reading {baseline_path}: {e}")),
+    };
+
+    let report = gate(&baseline, &fresh, max_regress);
+    print!("{}", report.render(40));
+    if report.seeding {
+        println!(
+            "seed the trajectory: commit {fresh_path} as {baseline_path} \
+             (or re-run with --update)"
+        );
+    } else {
+        println!(
+            "bench-gate: {} tracked metric(s) compared at ±{max_regress}% threshold",
+            report.compared.len()
+        );
+    }
+    let failures: Vec<String> = report.failures().map(|c| c.key.clone()).collect();
+    if a.has("update") {
+        // Never bake a regressed run into the baseline: --update applies
+        // only when the gate passes (a deliberate reset goes through
+        // editing the baseline, with the regression visible in review).
+        if failures.is_empty() {
+            if let Some(dir) = Path::new(&baseline_path).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            std::fs::copy(&fresh_path, &baseline_path)
+                .map_err(|e| anyhow::anyhow!("updating {baseline_path}: {e}"))?;
+            println!("updated baseline {baseline_path}");
+        } else {
+            println!("--update skipped: the gate failed, baseline left unchanged");
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "bench regression >{max_regress}% in {} metric(s): {}",
+        failures.len(),
+        failures.join(", ")
+    );
     Ok(())
 }
 

@@ -1,0 +1,262 @@
+//! Shared, immutable pack storage: one mapping of a `.cerpack` file that
+//! any number of engines can hold views into.
+//!
+//! [`PackMap`] owns the bytes of exactly one pack, obtained either from
+//! `mmap(2)` (`PROT_READ`/`MAP_PRIVATE`, on 64-bit unix hosts) or from a
+//! portable read into an 8-byte-aligned heap buffer. Both backings present
+//! the same immutable `&[u8]`, and both guarantee at least 8-byte base
+//! alignment — the alignment the `.cerpack` writer gives every section —
+//! so typed array views ([`crate::formats::Storage`]) can be taken
+//! directly over the mapped bytes without copying.
+//!
+//! The map is reference-counted (`Arc<PackMap>`): every mapped array holds
+//! a clone, so the bytes outlive any engine, worker, or shard plan that
+//! reads them, and N serving workers cold-started from the same map share
+//! one physical copy of the weights.
+//!
+//! # Operational invariant: the mapped file must not change underneath us
+//!
+//! `MAP_PRIVATE` protects the mapping from *this* process's writes, but on
+//! most systems the pages are shared with the page cache until first
+//! write: another process rewriting the pack file **in place** can change
+//! mapped bytes *after* load-time validation ran (and truncating the file
+//! can raise `SIGBUS` on access). The decode path validates every index
+//! and pointer once, at load, and the kernels then rely on those
+//! invariants with unchecked accesses — so the standard mmap contract
+//! applies: treat a served `.cerpack` as immutable while mapped. Replace
+//! packs by writing a new file and renaming it over the old path (the
+//! rename leaves existing mappings on the old inode, which stays valid
+//! until the last `Arc` drops); never rewrite a served pack in place. The
+//! heap backing has no such exposure — it is a private copy.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::PackError;
+
+/// One mapped (or heap-loaded) `.cerpack` file image.
+pub struct PackMap {
+    backing: Backing,
+}
+
+enum Backing {
+    /// `mmap(2)` region, unmapped on drop. Pages are read-only
+    /// (`PROT_READ`), so the bytes can never change underneath a view.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap { ptr: *mut u8, len: usize },
+    /// 8-byte-aligned heap copy (portable fallback, and the
+    /// [`PackMap::from_bytes`] constructor). `len` is the valid byte
+    /// count; the `Vec<u64>` backing guarantees the base alignment.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// SAFETY: no &self method writes the backing bytes (the mapping is
+// PROT_READ, the heap buffer is never mutated) and the raw mmap pointer
+// is released only in Drop, which requires exclusive ownership. External
+// mutation of the mapped *file* is excluded by the module-level
+// operational invariant (packs are replaced by rename, never rewritten
+// in place while mapped).
+unsafe impl Send for PackMap {}
+unsafe impl Sync for PackMap {}
+
+/// Raw `mmap(2)` bindings. Declared directly (the offline build has no
+/// `libc` crate); the constants hold on every 64-bit unix this crate
+/// targets (Linux and macOS both define `PROT_READ = 1`,
+/// `MAP_PRIVATE = 2`). 32-bit hosts take the heap fallback — `off_t`
+/// width varies there and the address-space win is marginal anyway.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod ffi {
+    use std::os::raw::{c_int, c_void};
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+impl PackMap {
+    /// Map `path` for shared zero-copy reading. Uses `mmap(2)` where
+    /// available and falls back to an aligned heap read everywhere else
+    /// (or when the mapping syscall fails); the choice is observable via
+    /// [`PackMap::is_mmap`] but never changes behavior.
+    pub fn open(path: &Path) -> Result<Arc<PackMap>, PackError> {
+        let mut file = File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| PackError::malformed("pack file exceeds the address space"))?;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            if len > 0 {
+                if let Some(backing) = Self::try_mmap(&file, len) {
+                    return Ok(Arc::new(PackMap { backing }));
+                }
+            }
+        }
+        Ok(Arc::new(PackMap {
+            backing: heap_from_reader(&mut file, len)?,
+        }))
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn try_mmap(file: &File, len: usize) -> Option<Backing> {
+        use std::os::unix::io::AsRawFd;
+        // SAFETY: a fresh read-only private mapping of `len` bytes over a
+        // file we hold open; the fd can be closed after mmap returns (the
+        // mapping keeps its own reference).
+        let ptr = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ,
+                ffi::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return None; // MAP_FAILED: fall back to the heap read
+        }
+        Some(Backing::Mmap {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    /// Copy `bytes` into an aligned heap-backed map — the in-memory
+    /// constructor used by tests and by callers that already hold a pack
+    /// image. Exercises the exact same view machinery as a real mapping.
+    pub fn from_bytes(bytes: &[u8]) -> Arc<PackMap> {
+        let mut reader = bytes;
+        let backing = heap_from_reader(&mut reader, bytes.len())
+            .expect("reading from an in-memory slice of exactly `len` bytes cannot fail");
+        Arc::new(PackMap { backing })
+    }
+
+    /// The mapped file image.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: the mapping covers `len` readable bytes for the
+            // lifetime of `self`.
+            Backing::Mmap { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Heap { buf, len } => {
+                // SAFETY: `buf` holds at least `len` initialized bytes.
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// Byte length of the image.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap { len, .. } => *len,
+            Backing::Heap { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the backing is a real `mmap(2)` region (false = aligned
+    /// heap copy). Informational — views behave identically.
+    pub fn is_mmap(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap { .. } => true,
+            Backing::Heap { .. } => false,
+        }
+    }
+}
+
+fn heap_from_reader(r: &mut impl Read, len: usize) -> Result<Backing, PackError> {
+    let mut buf = vec![0u64; len.div_ceil(8)];
+    // SAFETY: u64 -> u8 reinterpretation for writing; fully initialized.
+    let dst = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+    r.read_exact(dst)?;
+    Ok(Backing::Heap { buf, len })
+}
+
+impl Drop for PackMap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mmap { ptr, len } = &self.backing {
+            // SAFETY: exclusively owned mapping, unmapped exactly once.
+            unsafe {
+                ffi::munmap(*ptr as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PackMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackMap")
+            .field("len", &self.len())
+            .field("mmap", &self.is_mmap())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_bytes_roundtrips_and_is_aligned() {
+        for n in [0usize, 1, 7, 8, 9, 4096, 4097] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 31) as u8).collect();
+            let map = PackMap::from_bytes(&data);
+            assert_eq!(map.bytes(), &data[..]);
+            assert_eq!(map.len(), n);
+            assert!(!map.is_mmap());
+            assert_eq!(map.bytes().as_ptr() as usize % 8, 0, "base alignment");
+        }
+    }
+
+    #[test]
+    fn open_maps_a_real_file() {
+        let path = std::env::temp_dir().join(format!("cer-packmap-{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = PackMap::open(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(map.bytes(), &data[..]);
+        assert_eq!(map.bytes().as_ptr() as usize % 8, 0, "base alignment");
+        // Two independent handles can coexist; Arc sharing is the normal
+        // mode (one map, many engines).
+        let second = map.clone();
+        assert!(std::sync::Arc::ptr_eq(&map, &second));
+    }
+
+    #[test]
+    fn open_missing_file_is_io_error() {
+        let r = PackMap::open(Path::new("/nonexistent/cer-nope.cerpack"));
+        assert!(matches!(r, Err(PackError::Io(_))));
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_bytes() {
+        let path = std::env::temp_dir().join(format!("cer-packmap-empty-{}", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        let map = PackMap::open(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(map.is_empty());
+        assert_eq!(map.bytes(), b"");
+    }
+}

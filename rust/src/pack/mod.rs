@@ -9,6 +9,15 @@
 //! without re-running pruning, clustering, encoding or format selection
 //! (the engine cold-start path, [`crate::coordinator::Engine::from_pack`]).
 //!
+//! Two readers share the wire format and every validation rule:
+//! [`Pack::from_bytes`] copies each array into owned storage, while
+//! [`Pack::from_map`] (and [`Pack::open_mapped`] /
+//! [`crate::coordinator::Engine::from_pack_mmap`]) decodes over a shared
+//! [`map::PackMap`] and hands back zero-copy [`crate::formats::Storage`]
+//! views — the arrays are already written little-endian at their natural
+//! alignment, so no per-array heap copy is made and any number of
+//! engines can serve from one reference-counted mapping.
+//!
 //! # Wire layout (version 1, all integers little-endian)
 //!
 //! ```text
@@ -64,17 +73,20 @@
 //! paths are bounds-checked and validate structural invariants (monotone
 //! pointer arrays, in-range column indices and codebook references).
 
+pub mod map;
 pub mod wire;
 
 use std::fmt;
 use std::fs;
 use std::io;
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::formats::FormatKind;
+use crate::formats::{FormatKind, Storage};
 use crate::kernels::AnyMatrix;
 use crate::util::crc32::crc32;
-use wire::{put_f32_array, put_f64, put_string, put_u16, put_u32, put_u64, Cursor};
+use map::PackMap;
+use wire::{put_f32_array, put_f64, put_string, put_u16, put_u32, put_u64, ArrayLoader, Cursor};
 
 /// File magic, 8 bytes.
 pub const MAGIC: [u8; 8] = *b"CERPACK\0";
@@ -247,12 +259,14 @@ impl Manifest {
     }
 }
 
-/// One layer as stored: name, encoded matrix, bias.
+/// One layer as stored: name, encoded matrix, bias. Matrix arrays and
+/// bias are [`Storage`]-backed: owned when decoded from bytes, zero-copy
+/// views when the pack was opened through [`Pack::from_map`].
 #[derive(Clone, Debug)]
 pub struct PackLayer {
     pub name: String,
     pub matrix: AnyMatrix,
-    pub bias: Vec<f32>,
+    pub bias: Storage<f32>,
 }
 
 impl PackLayer {
@@ -396,7 +410,11 @@ impl Pack {
     ) -> Pack {
         let pack_layers: Vec<PackLayer> = layers
             .into_iter()
-            .map(|(name, matrix, bias)| PackLayer { name, matrix, bias })
+            .map(|(name, matrix, bias)| PackLayer {
+                name,
+                matrix,
+                bias: bias.into(),
+            })
             .collect();
         let views: Vec<LayerView<'_>> = pack_layers.iter().map(PackLayer::view).collect();
         let manifest = build_manifest(network, rationale, &views);
@@ -425,52 +443,88 @@ impl Pack {
         Self::from_bytes(&fs::read(path)?)
     }
 
-    /// Decode a `.cerpack` from memory (checksums verified).
+    /// Decode a `.cerpack` from memory (checksums verified). Every array
+    /// is decoded into owned storage — the historical copying reader.
     pub fn from_bytes(buf: &[u8]) -> Result<Pack, PackError> {
         let (manifest, layer_slices) = parse_container(buf)?;
-        if layer_slices.len() != manifest.layers.len() {
-            return Err(PackError::malformed(format!(
-                "{} layer sections but manifest lists {} layers",
-                layer_slices.len(),
-                manifest.layers.len()
-            )));
-        }
-        let mut layers: Vec<PackLayer> = Vec::with_capacity(layer_slices.len());
-        for (i, sec) in layer_slices.iter().enumerate() {
-            let layer = decode_layer_section(sec).map_err(|e| annotate_layer(e, i))?;
-            let prov = &manifest.layers[i];
-            if layer.matrix.rows() != prov.rows as usize
-                || layer.matrix.cols() != prov.cols as usize
-                || layer.matrix.kind() != prov.format
-            {
-                return Err(PackError::malformed(format!(
-                    "layer {i}: payload shape/format disagrees with manifest"
-                )));
-            }
-            // Engine invariants, so a checksum-valid but inconsistent file
-            // errors here instead of panicking inside forward():
-            // bias per output row, and consecutive layers must chain.
-            if layer.bias.len() != layer.matrix.rows() {
-                return Err(PackError::malformed(format!(
-                    "layer {i}: bias length {} does not match {} rows",
-                    layer.bias.len(),
-                    layer.matrix.rows()
-                )));
-            }
-            if let Some(prev) = layers.last() {
-                if layer.matrix.cols() != prev.matrix.rows() {
-                    return Err(PackError::malformed(format!(
-                        "layer {i}: input dim {} does not chain with previous output dim {}",
-                        layer.matrix.cols(),
-                        prev.matrix.rows()
-                    )));
-                }
-            }
-            layers.push(layer);
-        }
-        Ok(Pack { manifest, layers })
+        assemble_pack(manifest, &layer_slices, None)
     }
 
+    /// Decode a `.cerpack` from a shared [`PackMap`] (checksums verified
+    /// once, over the mapped bytes). Bulk arrays — values, codebooks,
+    /// column indices, biases, and every pointer array whose accounted
+    /// width is 32-bit — come back as zero-copy views into `map`; each
+    /// view holds an `Arc` clone, so the mapping outlives the pack and
+    /// can back any number of engines at once.
+    pub fn from_map(map: &Arc<PackMap>) -> Result<Pack, PackError> {
+        let (manifest, layer_slices) = parse_container(map.bytes())?;
+        assemble_pack(manifest, &layer_slices, Some(map))
+    }
+
+    /// Open `path` through the shared storage layer (`mmap(2)` where
+    /// available, aligned heap read otherwise) and decode it zero-copy.
+    /// Returns the map alongside the pack so callers can share it with
+    /// further engines ([`crate::coordinator::Engine::from_pack_map`]).
+    pub fn open_mapped(path: &Path) -> Result<(Arc<PackMap>, Pack), PackError> {
+        let map = PackMap::open(path)?;
+        let pack = Pack::from_map(&map)?;
+        Ok((map, pack))
+    }
+}
+
+/// Decode and cross-validate the layer sections against the manifest.
+/// With `map`, arrays are loaded as zero-copy views; without, as owned
+/// copies — identical validation either way.
+fn assemble_pack(
+    manifest: Manifest,
+    layer_slices: &[(usize, &[u8])],
+    map: Option<&Arc<PackMap>>,
+) -> Result<Pack, PackError> {
+    if layer_slices.len() != manifest.layers.len() {
+        return Err(PackError::malformed(format!(
+            "{} layer sections but manifest lists {} layers",
+            layer_slices.len(),
+            manifest.layers.len()
+        )));
+    }
+    let mut layers: Vec<PackLayer> = Vec::with_capacity(layer_slices.len());
+    for (i, &(off, sec)) in layer_slices.iter().enumerate() {
+        let src = match map {
+            Some(m) => ArrayLoader::mapped(m, off),
+            None => ArrayLoader::owned(),
+        };
+        let layer = decode_layer_section(sec, src).map_err(|e| annotate_layer(e, i))?;
+        let prov = &manifest.layers[i];
+        if layer.matrix.rows() != prov.rows as usize
+            || layer.matrix.cols() != prov.cols as usize
+            || layer.matrix.kind() != prov.format
+        {
+            return Err(PackError::malformed(format!(
+                "layer {i}: payload shape/format disagrees with manifest"
+            )));
+        }
+        // Engine invariants, so a checksum-valid but inconsistent file
+        // errors here instead of panicking inside forward():
+        // bias per output row, and consecutive layers must chain.
+        if layer.bias.len() != layer.matrix.rows() {
+            return Err(PackError::malformed(format!(
+                "layer {i}: bias length {} does not match {} rows",
+                layer.bias.len(),
+                layer.matrix.rows()
+            )));
+        }
+        if let Some(prev) = layers.last() {
+            if layer.matrix.cols() != prev.matrix.rows() {
+                return Err(PackError::malformed(format!(
+                    "layer {i}: input dim {} does not chain with previous output dim {}",
+                    layer.matrix.cols(),
+                    prev.matrix.rows()
+                )));
+            }
+        }
+        layers.push(layer);
+    }
+    Ok(Pack { manifest, layers })
 }
 
 /// (K, p₀, entropy H) of a matrix's element distribution, computed from
@@ -499,7 +553,7 @@ fn element_stats(matrix: &AnyMatrix) -> (usize, f64, f64) {
             if n > nnz {
                 *counts.entry(value_key(0.0)).or_insert(0) += n - nnz;
             }
-            for &v in &m.values {
+            for &v in m.values.iter() {
                 *counts.entry(value_key(v)).or_insert(0) += 1;
             }
         }
@@ -545,8 +599,12 @@ fn annotate_layer(e: PackError, i: usize) -> PackError {
 }
 
 /// Validate header + section table + CRCs; return the parsed manifest and
-/// the raw layer section slices in file order.
-fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<&[u8]>), PackError> {
+/// the raw layer sections — (absolute byte offset, bytes) — in file
+/// order. Section offsets must be 8-byte aligned (the writer always
+/// aligns them; the zero-copy reader depends on it for every array's
+/// natural alignment, so a misaligned offset is rejected as corruption by
+/// both readers).
+fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackError> {
     if buf.len() < HEADER_BYTES {
         return if buf.len() >= 8 && buf[..8] != MAGIC {
             Err(PackError::BadMagic)
@@ -587,6 +645,11 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<&[u8]>), PackError> {
         let crc = cur.u32()?;
         let off = cur.u64()?;
         let len = cur.u64()?;
+        if off % 8 != 0 {
+            return Err(PackError::malformed(format!(
+                "section {i} offset {off} is not 8-byte aligned"
+            )));
+        }
         let end = off.checked_add(len).ok_or(PackError::Truncated)?;
         if end > buf.len() as u64 {
             return Err(PackError::Truncated);
@@ -606,7 +669,7 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<&[u8]>), PackError> {
                 }
                 manifest = Some(decode_manifest(sec)?);
             }
-            SECTION_LAYER => layer_slices.push(sec),
+            SECTION_LAYER => layer_slices.push((off as usize, sec)),
             other => {
                 return Err(PackError::malformed(format!(
                     "unknown section kind {other}"
@@ -687,18 +750,19 @@ fn decode_manifest(buf: &[u8]) -> Result<Manifest, PackError> {
     })
 }
 
-fn decode_layer_section(buf: &[u8]) -> Result<PackLayer, PackError> {
+fn decode_layer_section(buf: &[u8], src: ArrayLoader<'_>) -> Result<PackLayer, PackError> {
     let mut cur = Cursor::new(buf);
     let name = cur.string()?;
     cur.align(4)?;
     let bias_len = cur.u32_len("bias length")?;
-    let bias = cur.f32_array(bias_len)?;
+    let bias = src.typed::<f32>(&mut cur, bias_len, "bias")?;
     let payload_len = cur.u64_len("payload length")?;
+    let payload_pos = cur.pos();
     let payload = cur.take(payload_len)?;
     if cur.remaining() != 0 {
         return Err(PackError::malformed("trailing bytes after layer payload"));
     }
-    let matrix = AnyMatrix::decode_from(payload)?;
+    let matrix = AnyMatrix::decode_from_source(payload, src.advanced(payload_pos))?;
     Ok(PackLayer { name, matrix, bias })
 }
 

@@ -8,8 +8,12 @@
 //! naturally aligned at its element size whenever the enclosing section is
 //! 8-byte aligned in the file.
 
+use std::sync::Arc;
+
 use super::PackError;
-use crate::formats::IndexWidth;
+use super::map::PackMap;
+use crate::formats::storage::{Pod, Storage};
+use crate::formats::{ColIndices, IndexWidth};
 
 /// Bounds-checked read cursor over a byte slice. Every `take` past the end
 /// fails with [`PackError::Truncated`] — corrupted lengths can never cause
@@ -242,6 +246,111 @@ pub fn read_u32s_at_width(
         IndexWidth::U8 => cur.u8_array_widened(count),
         IndexWidth::U16 => cur.u16_array_widened(count),
         IndexWidth::U32 => cur.u32_array(count),
+    }
+}
+
+/// How a decoder materializes bulk arrays: by copying out of the cursor
+/// (the historical owned path) or as zero-copy [`Storage`] views into a
+/// shared [`PackMap`].
+///
+/// The loader pairs with a [`Cursor`] over a sub-slice of the map: `base`
+/// is the byte offset of that sub-slice's first byte within the map, so
+/// `base + cur.pos()` addresses the array start absolutely. Views are
+/// taken only on little-endian hosts (the wire format is little-endian);
+/// big-endian hosts transparently decode owned copies through the same
+/// call sites.
+#[derive(Clone, Copy)]
+pub struct ArrayLoader<'a> {
+    map: Option<(&'a Arc<PackMap>, usize)>,
+}
+
+impl<'a> ArrayLoader<'a> {
+    /// Copying loader — every array is decoded into owned storage.
+    pub fn owned() -> ArrayLoader<'static> {
+        ArrayLoader { map: None }
+    }
+
+    /// Zero-copy loader over `map`; `base` is the absolute byte offset of
+    /// the paired cursor's buffer within the map.
+    pub fn mapped(map: &'a Arc<PackMap>, base: usize) -> ArrayLoader<'a> {
+        ArrayLoader {
+            map: Some((map, base)),
+        }
+    }
+
+    /// The same loader shifted `delta` bytes forward — for decoders that
+    /// hand a sub-slice of their buffer to a nested decoder.
+    pub fn advanced(self, delta: usize) -> ArrayLoader<'a> {
+        ArrayLoader {
+            map: self.map.map(|(m, base)| (m, base + delta)),
+        }
+    }
+
+    /// Load `count` elements of `T` from the cursor: a mapped view when
+    /// possible, an owned little-endian decode otherwise. Always advances
+    /// the cursor past the array; bounds and alignment failures are
+    /// errors, never UB.
+    pub fn typed<T: Pod>(
+        &self,
+        cur: &mut Cursor<'_>,
+        count: usize,
+        what: &str,
+    ) -> Result<Storage<T>, PackError> {
+        let byte_len = count
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| PackError::malformed(format!("{what} size overflow")))?;
+        let pos = cur.pos();
+        let bytes = cur.take(byte_len)?;
+        match self.map {
+            Some((map, base)) if cfg!(target_endian = "little") => {
+                Storage::mapped(map.clone(), base + pos, count)
+            }
+            _ => Ok(T::parse_le(bytes).into()),
+        }
+    }
+
+    /// Load a pointer array stored at `width`, widened to `u32` in memory.
+    /// Zero-copy only when the stored width already is 32-bit; narrower
+    /// widths are widened into owned storage (an O(count) copy of the
+    /// pointer array — never of the O(nnz) bulk arrays).
+    pub fn u32s_at_width(
+        &self,
+        cur: &mut Cursor<'_>,
+        count: usize,
+        width: IndexWidth,
+        what: &str,
+    ) -> Result<Storage<u32>, PackError> {
+        match width {
+            IndexWidth::U32 => self.typed::<u32>(cur, count, what),
+            IndexWidth::U16 => Ok(cur.u16_array_widened(count)?.into()),
+            IndexWidth::U8 => Ok(cur.u8_array_widened(count)?.into()),
+        }
+    }
+
+    /// Load a column-index array at its physical width, validating every
+    /// index against `n_cols` so corrupted payloads cannot produce
+    /// out-of-range column accesses.
+    pub fn col_indices(
+        &self,
+        cur: &mut Cursor<'_>,
+        width: IndexWidth,
+        count: usize,
+        n_cols: usize,
+    ) -> Result<ColIndices, PackError> {
+        let out = match width {
+            IndexWidth::U8 => ColIndices::U8(self.typed::<u8>(cur, count, "colI")?),
+            IndexWidth::U16 => ColIndices::U16(self.typed::<u16>(cur, count, "colI")?),
+            IndexWidth::U32 => ColIndices::U32(self.typed::<u32>(cur, count, "colI")?),
+        };
+        for i in 0..out.len() {
+            if out.get(i) >= n_cols {
+                return Err(PackError::malformed(format!(
+                    "column index {} out of range (cols = {n_cols})",
+                    out.get(i)
+                )));
+            }
+        }
+        Ok(out)
     }
 }
 

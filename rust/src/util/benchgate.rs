@@ -1,0 +1,340 @@
+//! Bench-regression gate: compare a freshly generated bench artifact
+//! (`BENCH_pack.json` / `BENCH_dot.json`) against a committed baseline and
+//! fail on regressions beyond a threshold.
+//!
+//! Metrics are extracted by walking the JSON tree: array elements are
+//! labeled by their identity fields (`net`, `format`, `threads`, `batch`,
+//! `layer`) so a metric's key is stable across runs even if row order
+//! changes — e.g. `packs[net=lenet5].cold_start_ms`. A metric is
+//! **tracked** when its key name says which direction is better:
+//!
+//! * lower-is-better — names ending in `_ms` or `_ns`;
+//! * higher-is-better — `gflops_equiv`, `speedup_vs_1t`, `fused_speedup`,
+//!   `compression_ratio`.
+//!
+//! The regression percentage is always oriented so that positive = worse;
+//! anything above the threshold (CI default 25%, generous to runner
+//! noise) fails the gate. Metrics present on only one side are reported
+//! but never fail the gate (benches grow sections over time), and a
+//! baseline with **no tracked metrics** (the committed empty `{}`
+//! placeholder) turns the run into a *seeding* pass: the gate succeeds
+//! and tells the maintainer to commit the fresh file as the baseline.
+
+use super::json::Json;
+
+/// One tracked scalar extracted from a bench artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// Stable path, e.g. `dot[net=lenet5,format=CSR,threads=4].pass_ns`.
+    pub key: String,
+    pub value: f64,
+    pub higher_is_better: bool,
+}
+
+/// Direction of a metric name, if tracked.
+fn tracked(name: &str) -> Option<bool> {
+    const HIGHER: [&str; 4] = [
+        "gflops_equiv",
+        "speedup_vs_1t",
+        "fused_speedup",
+        "compression_ratio",
+    ];
+    if HIGHER.contains(&name) {
+        Some(true)
+    } else if name.ends_with("_ms") || name.ends_with("_ns") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Identity fields used to label array elements stably across runs.
+const IDENTITY_KEYS: [&str; 5] = ["net", "format", "threads", "batch", "layer"];
+
+fn identity_label(obj: &Json) -> Option<String> {
+    let mut parts = Vec::new();
+    for key in IDENTITY_KEYS {
+        if let Some(v) = obj.get(key) {
+            match v {
+                Json::Str(s) => parts.push(format!("{key}={s}")),
+                Json::Num(n) => parts.push(format!("{key}={n}")),
+                _ => {}
+            }
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join(","))
+    }
+}
+
+/// Extract every tracked metric from a bench artifact.
+pub fn extract_metrics(doc: &Json) -> Vec<Metric> {
+    let mut out = Vec::new();
+    walk(doc, "", &mut out);
+    out
+}
+
+fn walk(v: &Json, path: &str, out: &mut Vec<Metric>) {
+    match v {
+        Json::Obj(pairs) => {
+            for (key, val) in pairs {
+                match val {
+                    Json::Num(n) => {
+                        if let Some(higher) = tracked(key) {
+                            let full = if path.is_empty() {
+                                key.clone()
+                            } else {
+                                format!("{path}.{key}")
+                            };
+                            out.push(Metric {
+                                key: full,
+                                value: *n,
+                                higher_is_better: higher,
+                            });
+                        }
+                    }
+                    _ => {
+                        let sub = if path.is_empty() {
+                            key.clone()
+                        } else {
+                            format!("{path}.{key}")
+                        };
+                        walk(val, &sub, out);
+                    }
+                }
+            }
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let label = identity_label(item).unwrap_or_else(|| i.to_string());
+                walk(item, &format!("{path}[{label}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// One baseline-vs-fresh comparison.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub key: String,
+    pub baseline: f64,
+    pub fresh: f64,
+    /// Regression percentage, oriented positive = worse.
+    pub regress_pct: f64,
+    pub failed: bool,
+}
+
+/// Outcome of gating one artifact pair.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// All paired metrics, worst first.
+    pub compared: Vec<Comparison>,
+    /// Keys only in the fresh artifact (new coverage — informational).
+    pub only_fresh: Vec<String>,
+    /// Keys only in the baseline (dropped coverage — informational).
+    pub only_baseline: Vec<String>,
+    /// True when the baseline held no tracked metrics at all: the gate
+    /// passes and the fresh artifact should be committed as the seed.
+    pub seeding: bool,
+}
+
+impl GateReport {
+    pub fn failures(&self) -> impl Iterator<Item = &Comparison> {
+        self.compared.iter().filter(|c| c.failed)
+    }
+
+    pub fn passed(&self) -> bool {
+        self.compared.iter().all(|c| !c.failed)
+    }
+
+    /// Human-readable summary table (worst regressions first).
+    pub fn render(&self, max_rows: usize) -> String {
+        let mut out = String::new();
+        if self.seeding {
+            out.push_str(
+                "baseline holds no tracked metrics — seeding run (commit the fresh \
+                 artifact as the new baseline)\n",
+            );
+            return out;
+        }
+        for c in self.compared.iter().take(max_rows) {
+            out.push_str(&format!(
+                "{} {:<72} base {:>12.3}  fresh {:>12.3}  {:+7.1}%\n",
+                if c.failed { "FAIL" } else { "  ok" },
+                c.key,
+                c.baseline,
+                c.fresh,
+                c.regress_pct,
+            ));
+        }
+        if self.compared.len() > max_rows {
+            out.push_str(&format!(
+                "  ... {} more tracked metrics\n",
+                self.compared.len() - max_rows
+            ));
+        }
+        if !self.only_fresh.is_empty() {
+            out.push_str(&format!(
+                "  {} new metric(s) not in the baseline (not gated)\n",
+                self.only_fresh.len()
+            ));
+        }
+        if !self.only_baseline.is_empty() {
+            out.push_str(&format!(
+                "  {} baseline metric(s) missing from the fresh run (not gated)\n",
+                self.only_baseline.len()
+            ));
+        }
+        out
+    }
+}
+
+/// Gate `fresh` against `baseline`: any tracked metric regressing more
+/// than `max_regress_pct` percent fails.
+pub fn gate(baseline: &Json, fresh: &Json, max_regress_pct: f64) -> GateReport {
+    let base_metrics = extract_metrics(baseline);
+    let fresh_metrics = extract_metrics(fresh);
+    let mut report = GateReport::default();
+    if base_metrics.is_empty() {
+        report.seeding = true;
+        return report;
+    }
+    for bm in &base_metrics {
+        match fresh_metrics.iter().find(|fm| fm.key == bm.key) {
+            None => report.only_baseline.push(bm.key.clone()),
+            Some(fm) => {
+                // Zero/negative readings carry no ratio information
+                // (timer resolution floor) — compare only positives.
+                if bm.value <= 0.0 || fm.value <= 0.0 {
+                    continue;
+                }
+                let regress_pct = if bm.higher_is_better {
+                    (bm.value / fm.value - 1.0) * 100.0
+                } else {
+                    (fm.value / bm.value - 1.0) * 100.0
+                };
+                report.compared.push(Comparison {
+                    key: bm.key.clone(),
+                    baseline: bm.value,
+                    fresh: fm.value,
+                    regress_pct,
+                    failed: regress_pct > max_regress_pct,
+                });
+            }
+        }
+    }
+    for fm in &fresh_metrics {
+        if !base_metrics.iter().any(|bm| bm.key == fm.key) {
+            report.only_fresh.push(fm.key.clone());
+        }
+    }
+    report
+        .compared
+        .sort_by(|a, b| b.regress_pct.partial_cmp(&a.regress_pct).unwrap());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn doc(s: &str) -> Json {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn extracts_labeled_tracked_metrics() {
+        let v = doc(
+            r#"{"dot": [
+                {"net": "lenet5", "format": "CSR", "threads": 4,
+                 "pass_ns": 100.0, "gflops_equiv": 2.0, "params": 5}
+            ],
+            "top_ms": 7.0}"#,
+        );
+        let m = extract_metrics(&v);
+        let keys: Vec<&str> = m.iter().map(|x| x.key.as_str()).collect();
+        assert!(keys.contains(&"dot[net=lenet5,format=CSR,threads=4].pass_ns"));
+        assert!(keys.contains(&"dot[net=lenet5,format=CSR,threads=4].gflops_equiv"));
+        assert!(keys.contains(&"top_ms"));
+        // `params` and `threads` are identity/info, not tracked metrics.
+        assert!(!keys.iter().any(|k| k.ends_with(".params")));
+        assert!(!m.iter().find(|x| x.key == "top_ms").unwrap().higher_is_better);
+    }
+
+    #[test]
+    fn labels_are_order_independent() {
+        let a = doc(r#"{"dot": [{"net": "a", "pass_ns": 1.0}, {"net": "b", "pass_ns": 2.0}]}"#);
+        let b = doc(r#"{"dot": [{"net": "b", "pass_ns": 2.0}, {"net": "a", "pass_ns": 1.0}]}"#);
+        let r = gate(&a, &b, 25.0);
+        assert!(r.passed(), "{:?}", r.compared);
+        assert_eq!(r.compared.len(), 2);
+        assert!(r.compared.iter().all(|c| c.regress_pct.abs() < 1e-9));
+    }
+
+    #[test]
+    fn threshold_separates_noise_from_regression() {
+        // +20% stays under the 25% gate, +30% trips it.
+        let base = doc(r#"{"cold_start_ms": 10.0, "save_ms": 10.0}"#);
+        let fresh = doc(r#"{"cold_start_ms": 12.0, "save_ms": 13.0}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(!r.passed());
+        let failed: Vec<&str> = r.failures().map(|c| c.key.as_str()).collect();
+        assert_eq!(failed, vec!["save_ms"]);
+    }
+
+    #[test]
+    fn fails_beyond_threshold_and_orients_higher_better() {
+        let base = doc(r#"{"cold_start_ms": 10.0, "compression_ratio": 4.0}"#);
+        // cold start 60% slower, compression ratio halved (=100% worse).
+        let fresh = doc(r#"{"cold_start_ms": 16.0, "compression_ratio": 2.0}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(!r.passed());
+        let failed: Vec<&str> = r.failures().map(|c| c.key.as_str()).collect();
+        assert!(failed.contains(&"cold_start_ms"));
+        assert!(failed.contains(&"compression_ratio"));
+        // Worst regression sorts first.
+        assert_eq!(r.compared[0].key, "compression_ratio");
+        assert!((r.compared[0].regress_pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvements_and_small_noise_pass() {
+        let base = doc(r#"{"pass_ns": 100.0, "gflops_equiv": 2.0}"#);
+        let fresh = doc(r#"{"pass_ns": 80.0, "gflops_equiv": 2.4}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(r.passed());
+        assert!(r.compared.iter().all(|c| c.regress_pct < 0.0));
+    }
+
+    #[test]
+    fn empty_baseline_is_a_seeding_pass() {
+        let base = doc("{}");
+        let fresh = doc(r#"{"cold_start_ms": 1.0}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(r.seeding && r.passed());
+        assert!(r.render(10).contains("seeding"));
+    }
+
+    #[test]
+    fn one_sided_metrics_are_informational() {
+        let base = doc(r#"{"a_ms": 1.0, "gone_ms": 2.0}"#);
+        let fresh = doc(r#"{"a_ms": 1.0, "new_ms": 3.0}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(r.passed());
+        assert_eq!(r.only_baseline, vec!["gone_ms"]);
+        assert_eq!(r.only_fresh, vec!["new_ms"]);
+    }
+
+    #[test]
+    fn zero_readings_are_skipped() {
+        let base = doc(r#"{"pass_ns": 0.0}"#);
+        let fresh = doc(r#"{"pass_ns": 50.0}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(r.passed());
+        assert!(r.compared.is_empty());
+    }
+}

@@ -9,8 +9,10 @@
 
 pub mod alias;
 pub mod bench;
+pub mod benchgate;
 pub mod crc32;
 pub mod csv;
+pub mod json;
 pub mod rng;
 pub mod table;
 

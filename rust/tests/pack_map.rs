@@ -1,0 +1,411 @@
+//! Shared-storage (`PackMap` / zero-copy reader) integration tests.
+//!
+//! Properties under test:
+//!
+//! * **Equivalence** — an engine cold-started through the mapped reader
+//!   ([`Engine::from_pack_mmap`] / [`Pack::from_map`]) is bit-identical in
+//!   output to the owned reader ([`Engine::from_pack`]) for every format,
+//!   both Ω\[0\] regimes, every index width, serial and sharded.
+//! * **Sharing** — N engines over one `Arc<PackMap>` view the same
+//!   physical bytes (pointer equality), and a [`WorkerSet`] serves from
+//!   them concurrently.
+//! * **Adversarial robustness** — truncated files, CRC-corrupted bytes,
+//!   and misaligned section offsets yield `Err`, never UB or a panic, for
+//!   both the mmap and the heap-fallback readers.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cer::coordinator::{Engine, PackRouter, ServerConfig, WorkerSet};
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::AnyMatrix;
+use cer::pack::map::PackMap;
+use cer::pack::{Pack, PackError};
+use cer::util::Rng;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "cer-packmap-test-{}-{tag}.cerpack",
+        std::process::id()
+    ))
+}
+
+/// A quantized random matrix; `implicit_zero` controls the Ω[0] regime
+/// (false → the most frequent element is non-zero, exercising the
+/// decomposition-correction kernels over mapped arrays).
+fn sample_matrix(rng: &mut Rng, rows: usize, cols: usize, implicit_zero: bool) -> Dense {
+    let values: [f32; 4] = if implicit_zero {
+        [0.0, 0.5, -0.25, 1.0]
+    } else {
+        [2.0, 0.5, -0.25, 1.0]
+    };
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            if rng.f64() < 0.55 {
+                values[0]
+            } else {
+                values[1 + rng.below(3)]
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+/// A 4-layer pack using every format once (chained dims), with biases.
+fn four_format_pack(implicit_zero: bool) -> Pack {
+    let mut rng = Rng::new(if implicit_zero { 0x11AA } else { 0x22BB });
+    let dims = [(20usize, 30usize), (12, 20), (9, 12), (5, 9)];
+    let kinds = [
+        FormatKind::Dense,
+        FormatKind::Csr,
+        FormatKind::Cer,
+        FormatKind::Cser,
+    ];
+    let layers = dims
+        .iter()
+        .zip(kinds)
+        .enumerate()
+        .map(|(i, (&(m, n), kind))| {
+            (
+                format!("fc{i}"),
+                AnyMatrix::encode(kind, &sample_matrix(&mut rng, m, n, implicit_zero)),
+                (0..m).map(|r| r as f32 * 0.05 - 0.3).collect::<Vec<f32>>(),
+            )
+        })
+        .collect();
+    Pack::from_layers("map-test-net", "fixed (test)", layers)
+}
+
+#[test]
+fn mapped_reader_bit_identical_to_owned_across_formats_and_regimes() {
+    for implicit_zero in [true, false] {
+        let pack = four_format_pack(implicit_zero);
+        let (bytes, _) = pack.to_bytes();
+        let path = tmp_path(&format!("equiv-{implicit_zero}"));
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut owned = Engine::from_pack(&path).unwrap();
+        let mut mapped = Engine::from_pack_mmap(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(owned.formats(), mapped.formats());
+        assert_eq!(owned.storage_bits(), mapped.storage_bits());
+
+        let mut rng = Rng::new(0x3C3C);
+        for batch in [1usize, 3, 4, 8] {
+            let x: Vec<f32> = (0..batch * owned.in_dim()).map(|_| rng.f32() - 0.5).collect();
+            let want = owned.forward(&x, batch).unwrap();
+            assert_eq!(
+                mapped.forward(&x, batch).unwrap(),
+                want,
+                "implicit_zero={implicit_zero} batch={batch}"
+            );
+        }
+        // Sharded execution over mapped arrays: plans partition mapped
+        // row pointers exactly like owned ones.
+        mapped.set_threads(4);
+        owned.set_threads(4);
+        let x: Vec<f32> = (0..2 * owned.in_dim()).map(|_| rng.f32() - 0.5).collect();
+        assert_eq!(
+            mapped.forward(&x, 2).unwrap(),
+            owned.forward(&x, 2).unwrap(),
+            "implicit_zero={implicit_zero} @4 threads"
+        );
+    }
+}
+
+#[test]
+fn mapped_reader_handles_every_index_width() {
+    // Shapes forcing u8 / u16 / u32 column-index widths (and, for the
+    // 2x70_000 case, >255 nnz pointer values).
+    let mut rng = Rng::new(0x9ACC);
+    for &(rows, cols) in &[(7usize, 40usize), (3, 300), (2, 70_000)] {
+        for kind in FormatKind::ALL {
+            let m = sample_matrix(&mut rng, rows, cols, true);
+            let pack = Pack::from_layers(
+                "width-net",
+                "fixed (test)",
+                vec![(
+                    "l0".to_string(),
+                    AnyMatrix::encode(kind, &m),
+                    vec![0.0; rows],
+                )],
+            );
+            let (bytes, _) = pack.to_bytes();
+            let map = PackMap::from_bytes(&bytes);
+            let back = Pack::from_map(&map).unwrap_or_else(|e| {
+                panic!("{kind:?} {rows}x{cols}: {e}");
+            });
+            assert_eq!(back.layers[0].matrix.to_dense(), m, "{kind:?} {rows}x{cols}");
+            // Bulk arrays came back as views, not copies.
+            let res = back.layers[0].matrix.residency();
+            assert!(
+                res.mapped_bytes > 0,
+                "{kind:?} {rows}x{cols}: expected mapped arrays, got {res:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engines_on_one_map_share_physical_bytes() {
+    let pack = four_format_pack(true);
+    let (bytes, _) = pack.to_bytes();
+    let path = tmp_path("share");
+    std::fs::write(&path, &bytes).unwrap();
+
+    let (map, _) = Pack::open_mapped(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let a = Engine::from_pack_map(&map).unwrap();
+    let b = Engine::from_pack_map(&map).unwrap();
+    assert!(Arc::ptr_eq(a.pack_map().unwrap(), b.pack_map().unwrap()));
+
+    // The CSR layer's value array: same address in both engines — one
+    // physical copy of the weights, two handles.
+    let ptr_of = |e: &Engine| -> usize {
+        match &e.layers[1].matrix {
+            AnyMatrix::Csr(m) => {
+                assert!(m.values.is_mapped(), "values must be views");
+                m.values.as_slice().as_ptr() as usize
+            }
+            other => panic!("layer 1 should be CSR, got {:?}", other.kind()),
+        }
+    };
+    assert_eq!(ptr_of(&a), ptr_of(&b));
+    // And the address lies inside the map's image.
+    let base = map.bytes().as_ptr() as usize;
+    assert!(ptr_of(&a) >= base && ptr_of(&a) < base + map.len());
+}
+
+#[test]
+fn worker_set_serves_one_mapped_pack_bit_identically() {
+    let pack = four_format_pack(false);
+    let (bytes, _) = pack.to_bytes();
+    let path = tmp_path("workers");
+    std::fs::write(&path, &bytes).unwrap();
+
+    let (map, _) = Pack::open_mapped(&path).unwrap();
+    let mut owned = Engine::from_pack(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let map_for_workers = map.clone();
+    let ws = WorkerSet::spawn(3, ServerConfig::default(), move |_i| {
+        Engine::from_pack_map(&map_for_workers)
+    });
+    let mut rng = Rng::new(0xF00D);
+    let xs: Vec<Vec<f32>> = (0..9)
+        .map(|_| (0..owned.in_dim()).map(|_| rng.f32() - 0.5).collect())
+        .collect();
+    let rxs: Vec<_> = xs.iter().map(|x| ws.submit(x.clone())).collect();
+    for (x, rx) in xs.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        let want = owned.forward(x, 1).unwrap();
+        assert_eq!(got, want, "mapped worker reply must equal the owned path");
+    }
+    assert_eq!(ws.completed_total(), 9);
+    ws.shutdown();
+    // The workers are gone; the map handle here is the survivor — and
+    // still readable (views kept it alive throughout).
+    assert!(!map.is_empty());
+}
+
+#[test]
+fn pack_router_serves_two_mapped_packs() {
+    let make = |seed: u64, rows: usize, cols: usize| {
+        let mut rng = Rng::new(seed);
+        Pack::from_layers(
+            "routed",
+            "fixed (test)",
+            vec![(
+                "l0".to_string(),
+                AnyMatrix::encode(FormatKind::Cser, &sample_matrix(&mut rng, rows, cols, true)),
+                vec![0.1; rows],
+            )],
+        )
+    };
+    let pack_a = make(1, 6, 10);
+    let pack_b = make(2, 4, 7);
+    let path_a = tmp_path("route-a");
+    let path_b = tmp_path("route-b");
+    std::fs::write(&path_a, pack_a.to_bytes().0).unwrap();
+    std::fs::write(&path_b, pack_b.to_bytes().0).unwrap();
+
+    let (map_a, _) = Pack::open_mapped(&path_a).unwrap();
+    let (map_b, _) = Pack::open_mapped(&path_b).unwrap();
+    let mut ref_a = Engine::from_pack(&path_a).unwrap();
+    let mut ref_b = Engine::from_pack(&path_b).unwrap();
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+
+    let mut router = PackRouter::new();
+    let m = map_a.clone();
+    router.add(
+        "a",
+        WorkerSet::spawn(2, ServerConfig::default(), move |_| Engine::from_pack_map(&m)),
+    );
+    let m = map_b.clone();
+    router.add(
+        "b",
+        WorkerSet::spawn(1, ServerConfig::default(), move |_| Engine::from_pack_map(&m)),
+    );
+
+    let xa = vec![0.25f32; 10];
+    let xb = vec![-0.5f32; 7];
+    assert_eq!(
+        router.infer_blocking("a", xa.clone()).unwrap(),
+        ref_a.forward(&xa, 1).unwrap()
+    );
+    assert_eq!(
+        router.infer_blocking("b", xb.clone()).unwrap(),
+        ref_b.forward(&xb, 1).unwrap()
+    );
+    assert!(router.infer_blocking("c", vec![0.0]).is_err());
+    router.shutdown();
+}
+
+#[test]
+fn reselection_on_a_mapped_engine_stays_correct() {
+    use cer::coordinator::Objective;
+    use cer::costmodel::{EnergyModel, TimeModel};
+
+    let pack = four_format_pack(true);
+    let (bytes, _) = pack.to_bytes();
+    let map = PackMap::from_bytes(&bytes);
+    let mut e = Engine::from_pack_map(&map).unwrap();
+    let x = vec![0.3f32; e.in_dim()];
+    let want = e.forward(&x, 1).unwrap();
+    // Re-encoding decodes mapped storage losslessly and replaces it with
+    // owned arrays where the winner changed — results must not move.
+    e.set_threads(2);
+    e.reselect_formats(
+        &EnergyModel::table_i(),
+        &TimeModel::default_model(),
+        Objective::Time,
+    );
+    assert_eq!(e.forward(&x, 1).unwrap(), want);
+}
+
+// ---------------------------------------------------------------------
+// Adversarial suite: corrupted containers must fail cleanly everywhere.
+// ---------------------------------------------------------------------
+
+fn sample_bytes() -> Vec<u8> {
+    four_format_pack(true).to_bytes().0
+}
+
+#[test]
+fn truncated_packs_fail_cleanly_in_the_mapped_reader() {
+    let bytes = sample_bytes();
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(11).collect();
+    cuts.extend([0, 1, 8, 15, 16, bytes.len() - 1]);
+    for cut in cuts {
+        let map = PackMap::from_bytes(&bytes[..cut]);
+        assert!(
+            Pack::from_map(&map).is_err(),
+            "prefix of {cut} bytes decoded successfully via the mapped reader"
+        );
+    }
+    // And through a real file + mmap.
+    let path = tmp_path("trunc");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(Pack::open_mapped(&path).is_err());
+    assert!(Engine::from_pack_mmap(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn flipped_bytes_are_checksum_errors_in_the_mapped_reader() {
+    let bytes = sample_bytes();
+    let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    for s in 0..n_sections {
+        let entry = 16 + s * 24;
+        let off = u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[entry + 16..entry + 24].try_into().unwrap()) as usize;
+        for pos in [off, off + len / 2, off + len - 1] {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x20;
+            let map = PackMap::from_bytes(&corrupt);
+            match Pack::from_map(&map) {
+                Err(PackError::ChecksumMismatch { section }) => assert_eq!(section, s),
+                other => panic!("flip at {pos}: expected checksum error, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Rebuild a valid pack image with every section shifted 4 bytes forward
+/// (offsets become 8k+4 — misaligned). Section bytes and CRCs stay
+/// valid, so only the alignment check can reject it.
+fn misaligned_image(bytes: &[u8]) -> Vec<u8> {
+    let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let mut entries = Vec::new();
+    for s in 0..n_sections {
+        let e = 16 + s * 24;
+        entries.push((
+            u32::from_le_bytes(bytes[e..e + 4].try_into().unwrap()),
+            u32::from_le_bytes(bytes[e + 4..e + 8].try_into().unwrap()),
+            u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()),
+            u64::from_le_bytes(bytes[e + 16..e + 24].try_into().unwrap()),
+        ));
+    }
+    let mut out = bytes[..16].to_vec();
+    for &(kind, crc, off, len) in &entries {
+        out.extend_from_slice(&kind.to_le_bytes());
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(off + 4).to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+    }
+    let mut max_end = out.len() as u64;
+    for &(_, _, off, len) in &entries {
+        let new_off = (off + 4) as usize;
+        if out.len() < new_off {
+            out.resize(new_off, 0);
+        }
+        out.extend_from_slice(&bytes[off as usize..(off + len) as usize]);
+        max_end = max_end.max(off + 4 + len);
+    }
+    out.resize(((max_end + 7) & !7) as usize, 0);
+    out
+}
+
+#[test]
+fn misaligned_section_offsets_are_rejected_not_undefined_behavior() {
+    let bytes = sample_bytes();
+    let crafted = misaligned_image(&bytes);
+    // Both readers reject the geometry before touching any array.
+    assert!(
+        matches!(Pack::from_bytes(&crafted), Err(PackError::Malformed(_))),
+        "owned reader must reject misaligned sections"
+    );
+    let map = PackMap::from_bytes(&crafted);
+    assert!(
+        matches!(Pack::from_map(&map), Err(PackError::Malformed(_))),
+        "mapped reader must reject misaligned sections"
+    );
+}
+
+#[test]
+fn bad_magic_and_version_fail_in_the_mapped_reader() {
+    let mut bytes = sample_bytes();
+    bytes[0] ^= 0xFF;
+    let map = PackMap::from_bytes(&bytes);
+    assert!(matches!(Pack::from_map(&map), Err(PackError::BadMagic)));
+
+    let mut bytes = sample_bytes();
+    bytes[8] = 0x7F;
+    let map = PackMap::from_bytes(&bytes);
+    assert!(matches!(
+        Pack::from_map(&map),
+        Err(PackError::UnsupportedVersion(_))
+    ));
+}
+
+#[test]
+fn mapped_pack_reencodes_byte_identically() {
+    // A mapped pack is a first-class Pack: serializing it reproduces the
+    // file image bit for bit (views encode like owned arrays).
+    let bytes = sample_bytes();
+    let map = PackMap::from_bytes(&bytes);
+    let pack = Pack::from_map(&map).unwrap();
+    let (bytes2, _) = pack.to_bytes();
+    assert_eq!(bytes, bytes2);
+}

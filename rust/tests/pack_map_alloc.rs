@@ -1,0 +1,163 @@
+//! Heap accounting for the zero-copy cold start.
+//!
+//! A byte-counting `#[global_allocator]` wraps the system allocator;
+//! [`Engine::from_pack_mmap`] over a pack whose stored widths all admit
+//! mapped views (f32 values, u16 column indices, u32 row pointers, f32
+//! biases) must allocate only engine scaffolding — names, layer vectors,
+//! the manifest — and **no per-array heap copy**: allocated bytes stay a
+//! small constant far below the array payload, and the engine's
+//! [`storage_residency`](cer::coordinator::Engine::storage_residency)
+//! reports zero owned array bytes. The owned reader over the same file
+//! allocates more than the full array payload (the contrast baseline).
+//!
+//! This file deliberately contains a single `#[test]`: the allocation
+//! counter is process-global, and a concurrently running sibling test
+//! would pollute the byte counts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cer::coordinator::Engine;
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::AnyMatrix;
+use cer::pack::Pack;
+
+static BYTES: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; only adds relaxed counting.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// 300×300 with a deterministic ~86% density: nnz = 77 143 > 65 535, so
+/// the CSR rowPtr's accounted (and stored) width is u32 — mappable — and
+/// the colI width for 300 columns is u16 — mappable at its native width.
+fn big_csr_matrix() -> Dense {
+    let (rows, cols) = (300usize, 300usize);
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|i| {
+            if i % 7 == 0 {
+                0.0
+            } else {
+                0.25 + (i % 5) as f32 * 0.5
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+#[test]
+fn from_pack_mmap_performs_no_per_array_heap_copy() {
+    // Layer 0: big CSR (values f32 + colI u16 + rowPtr u32, all mapped).
+    // Layer 1: dense 200×300 (one f32 array, mapped). Biases: f32, mapped.
+    let csr_m = big_csr_matrix();
+    let dense_m = Dense::from_vec(
+        200,
+        300,
+        (0..200 * 300).map(|i| (i % 11) as f32 * 0.1 - 0.5).collect(),
+    );
+    let pack = Pack::from_layers(
+        "alloc-net",
+        "fixed (test)",
+        vec![
+            (
+                "fc0".to_string(),
+                AnyMatrix::encode(FormatKind::Csr, &csr_m),
+                vec![0.01; 300],
+            ),
+            (
+                "fc1".to_string(),
+                AnyMatrix::encode(FormatKind::Dense, &dense_m),
+                vec![-0.02; 200],
+            ),
+        ],
+    );
+    let (bytes, manifest) = pack.to_bytes();
+    let array_bytes: u64 = manifest.total_array_bytes() + (300 + 200) * 4;
+    assert!(
+        array_bytes > 600_000,
+        "test payload must dwarf scaffolding ({array_bytes} B)"
+    );
+    let path = std::env::temp_dir().join(format!(
+        "cer-packmap-alloc-{}.cerpack",
+        std::process::id()
+    ));
+    std::fs::write(&path, &bytes).unwrap();
+
+    // Warm-up: lazy std initialization (locks, TLS) off the books, and
+    // confirm the mapping mode we are about to assert on.
+    let warm = Engine::from_pack_mmap(&path).expect("warm-up cold start");
+    let real_mmap = warm.pack_map().expect("map").is_mmap();
+    drop(warm);
+
+    let before = BYTES.load(Ordering::SeqCst);
+    let mut mapped = Engine::from_pack_mmap(&path).expect("mmap cold start");
+    let mapped_alloc = BYTES.load(Ordering::SeqCst) - before;
+
+    // Every array admits a view here: zero owned array bytes.
+    let res = mapped.storage_residency();
+    assert_eq!(
+        res.owned_bytes, 0,
+        "every array of this pack is mappable; residency {res:?}"
+    );
+    assert_eq!(res.mapped_bytes, array_bytes);
+
+    if real_mmap {
+        // Scaffolding only: names, manifest strings, layer vec. The
+        // bound is generous (64 KB) yet ~10x below the smallest array.
+        assert!(
+            mapped_alloc < 65_536,
+            "mmap cold start allocated {mapped_alloc} B — a per-array copy slipped in \
+             (arrays total {array_bytes} B)"
+        );
+    } else {
+        // Portable fallback: one aligned heap image of the file, still
+        // no per-array copies on top of it.
+        assert!(
+            (mapped_alloc as u64) < bytes.len() as u64 + 65_536,
+            "fallback cold start allocated {mapped_alloc} B over a {} B file",
+            bytes.len()
+        );
+    }
+
+    // Contrast: the owned reader must copy at least the full array
+    // payload (plus the read buffer).
+    let before = BYTES.load(Ordering::SeqCst);
+    let mut owned = Engine::from_pack(&path).expect("owned cold start");
+    let owned_alloc = BYTES.load(Ordering::SeqCst) - before;
+    assert!(
+        owned_alloc as u64 > array_bytes,
+        "owned cold start allocated only {owned_alloc} B for {array_bytes} B of arrays"
+    );
+    assert_eq!(owned.storage_residency().mapped_bytes, 0);
+    std::fs::remove_file(&path).ok();
+
+    // Same bytes, same kernels: bit-identical output.
+    let x: Vec<f32> = (0..300).map(|i| (i as f32) * 0.01 - 1.5).collect();
+    assert_eq!(
+        mapped.forward(&x, 1).unwrap(),
+        owned.forward(&x, 1).unwrap()
+    );
+}
