@@ -181,6 +181,87 @@ mod tests {
         assert!(b.is_empty());
     }
 
+    #[test]
+    fn pop_batch_into_on_empty_queue_is_a_no_op_that_clears() {
+        let mut b: Batcher<()> = Batcher::new(cfg(4, 100));
+        // The reused buffer may hold a stale previous batch — an empty
+        // poll must still clear it, not leave ghosts for the caller.
+        let mut out = vec![Pending {
+            id: 99,
+            payload: (),
+            enqueued_us: 0,
+        }];
+        assert!(!b.pop_batch_into(1_000_000, &mut out));
+        assert!(out.is_empty(), "stale entries must not survive an empty poll");
+        assert_eq!(b.next_deadline_us(), None);
+        // Repeated polls on empty stay false at any time.
+        assert!(!b.pop_batch_into(u64::MAX, &mut out));
+        assert!(b.pop_batch(0).is_none());
+    }
+
+    #[test]
+    fn deadline_cut_with_queue_smaller_than_max_batch() {
+        // The 1–3 sample remainder path: max_batch far above queue depth,
+        // flush driven purely by the deadline.
+        for n in 1..=3usize {
+            let mut b = Batcher::new(cfg(32, 200));
+            for i in 0..n {
+                b.push(i as u64, (), 10);
+            }
+            assert!(!b.ready(209));
+            let mut out = Vec::new();
+            assert!(!b.pop_batch_into(209, &mut out), "fired before deadline");
+            assert!(b.pop_batch_into(210, &mut out), "deadline flush missed");
+            assert_eq!(out.len(), n, "batch must be the whole short queue");
+            assert_eq!(
+                out.iter().map(|p| p.id).collect::<Vec<_>>(),
+                (0..n as u64).collect::<Vec<_>>()
+            );
+            assert!(b.is_empty(), "nothing may linger after a short cut");
+        }
+    }
+
+    #[test]
+    fn drain_all_into_under_concurrent_push_loses_nothing() {
+        use std::sync::{Arc, Mutex};
+
+        // The shutdown path drains while submitters may still be pushing
+        // (the server holds the same mutex the workers cut batches under):
+        // every id pushed before the final drain must come out exactly
+        // once, in FIFO order.
+        const N: u64 = 5_000;
+        let shared = Arc::new(Mutex::new(Batcher::new(cfg(8, 1_000))));
+        let pusher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                for id in 0..N {
+                    shared.lock().unwrap().push(id, (), id);
+                    if id % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        let mut seen: Vec<u64> = Vec::new();
+        let mut buf: Vec<Pending<()>> = Vec::new();
+        while seen.len() < N as usize {
+            {
+                let mut b = shared.lock().unwrap();
+                b.drain_all_into(&mut buf);
+            }
+            seen.extend(buf.iter().map(|p| p.id));
+            std::thread::yield_now();
+        }
+        pusher.join().unwrap();
+        {
+            let mut b = shared.lock().unwrap();
+            b.drain_all_into(&mut buf);
+            seen.extend(buf.iter().map(|p| p.id));
+            assert!(b.is_empty());
+        }
+        assert_eq!(seen, (0..N).collect::<Vec<_>>(), "loss or reorder across drains");
+    }
+
     /// Property test (in-tree randomized harness — proptest substitute):
     /// over random interleavings of pushes and polls,
     /// 1. batches preserve FIFO order globally,

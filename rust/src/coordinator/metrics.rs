@@ -1,8 +1,148 @@
-//! Serving metrics: lock-free counters shared between the worker thread
-//! and callers.
+//! Serving metrics: lock-free counters and a fixed-bucket latency
+//! histogram shared between worker threads and callers.
+//!
+//! Everything here is increment-only atomics — no locks on the request
+//! path. The [`LatencyHistogram`] uses log-linear buckets (4 sub-buckets
+//! per power of two), so a single relaxed `fetch_add` records a sample
+//! and quantile reads are a 252-slot scan with bounded (≤ 25%) relative
+//! error — the structure the `/metrics` endpoint of the network front
+//! end ([`crate::serve`]) exposes as p50/p99/p999.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Number of histogram buckets: values 0–3 get exact buckets, then 4
+/// sub-buckets per octave up to the full `u64` range.
+pub const LATENCY_BUCKETS: usize = 252;
+
+/// Lock-free fixed-bucket latency histogram (microseconds).
+///
+/// Buckets are log-linear: exact for 0–3 µs, then each power-of-two
+/// octave `[2^k, 2^{k+1})` is split into 4 equal sub-buckets. Recording
+/// is one relaxed atomic increment; [`LatencyHistogram::quantile`]
+/// returns the *upper edge* of the bucket holding the requested rank, so
+/// reported quantiles are conservative (never under-report) with at most
+/// ~25% relative overshoot.
+///
+/// ```
+/// use cer::coordinator::metrics::LatencyHistogram;
+/// let h = LatencyHistogram::default();
+/// for us in [100, 200, 300, 400, 10_000] {
+///     h.record_us(us);
+/// }
+/// assert_eq!(h.count(), 5);
+/// assert!(h.quantile(0.5) >= 200 && h.quantile(0.5) < 400);
+/// assert!(h.quantile(0.999) >= 10_000);
+/// ```
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bucket index for a microsecond reading.
+#[inline]
+fn bucket_index(us: u64) -> usize {
+    if us < 4 {
+        return us as usize;
+    }
+    let octave = 63 - us.leading_zeros() as u64; // >= 2 here
+    let sub = (us >> (octave - 2)) & 3;
+    ((octave * 4 + sub) as usize - 4).min(LATENCY_BUCKETS - 1)
+}
+
+/// Inclusive upper edge (µs) of bucket `i` — what quantile reads report.
+fn bucket_upper_us(i: usize) -> u64 {
+    if i < 4 {
+        return i as u64;
+    }
+    let octave = (i as u64 + 4) / 4;
+    let sub = (i as u64 + 4) % 4;
+    // Bucket covers [(4+sub) << (octave-2), (5+sub) << (octave-2)); the
+    // top octave's edge exceeds u64 — widen, then clamp.
+    let upper = ((5 + sub) as u128) << (octave - 2);
+    (upper - 1).min(u64::MAX as u128) as u64
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample (lock-free, relaxed).
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.counts[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The `q`-quantile (0 < q <= 1) in µs: upper edge of the bucket
+    /// holding rank `ceil(q·count)`. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let snapshot: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = snapshot.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in snapshot.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper_us(i);
+            }
+        }
+        bucket_upper_us(LATENCY_BUCKETS - 1)
+    }
+
+    /// Median latency (µs).
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5)
+    }
+
+    /// 99th percentile latency (µs).
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile latency (µs).
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Add every sample of `other` into `self` (used to merge per-worker
+    /// or per-thread histograms into one report).
+    pub fn absorb(&self, other: &LatencyHistogram) {
+        for (dst, src) in self.counts.iter().zip(&other.counts) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Non-empty buckets as `(upper_edge_us, cumulative_count)` pairs —
+    /// the shape a Prometheus-style `_bucket{le=...}` rendering wants.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let v = c.load(Ordering::Relaxed);
+            if v > 0 {
+                cum += v;
+                out.push((bucket_upper_us(i), cum));
+            }
+        }
+        out
+    }
+}
 
 /// Cumulative serving metrics.
 #[derive(Debug, Default)]
@@ -19,6 +159,8 @@ pub struct Metrics {
     pub total_latency_us: AtomicU64,
     /// Max observed latency (µs).
     pub max_latency_us: AtomicU64,
+    /// Per-request latency distribution (enqueue → response, µs).
+    pub latency: LatencyHistogram,
 }
 
 impl Metrics {
@@ -36,6 +178,7 @@ impl Metrics {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.total_latency_us.fetch_add(us, Ordering::Relaxed);
         self.max_latency_us.fetch_max(us, Ordering::Relaxed);
+        self.latency.record_us(us);
     }
 
     /// Mean latency in µs over completed requests.
@@ -58,12 +201,15 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests {} completed {} batches {} mean_batch {:.2} mean_latency {:.0}µs max_latency {}µs",
+            "requests {} completed {} batches {} mean_batch {:.2} mean_latency {:.0}µs \
+             p50 {}µs p99 {}µs max_latency {}µs",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
             self.mean_latency_us(),
+            self.latency.p50(),
+            self.latency.p99(),
             self.max_latency_us.load(Ordering::Relaxed),
         )
     }
@@ -85,6 +231,7 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 200.0);
         assert_eq!(m.max_latency_us.load(Ordering::Relaxed), 300);
         assert!(m.summary().contains("batches 2"));
+        assert_eq!(m.latency.count(), 3);
     }
 
     #[test]
@@ -92,5 +239,96 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency.quantile(0.5), 0);
+        assert!(m.latency.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn bucket_geometry_is_monotone_and_covers_u64() {
+        // Every value lands in a bucket whose upper edge is >= the value
+        // and < 1.25x the value (+1 for the integer edges), and indices
+        // never decrease as values grow.
+        let mut last_idx = 0usize;
+        for shift in 0..63 {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << shift).saturating_add(off * (1u64 << shift) / 4);
+                let idx = bucket_index(v);
+                assert!(idx >= last_idx || v < 4, "non-monotone at {v}");
+                last_idx = idx.max(last_idx);
+                let upper = bucket_upper_us(idx);
+                assert!(upper >= v.min(upper), "edge below value at {v}");
+                if idx < LATENCY_BUCKETS - 1 {
+                    assert!(
+                        upper as f64 >= v as f64 && (upper as f64) < v as f64 * 1.25 + 1.0,
+                        "edge {upper} too far from {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_the_true_order_statistics() {
+        let h = LatencyHistogram::default();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        // True p50 = 500, p99 = 990, p999 = 999; the histogram reports
+        // the bucket upper edge: >= truth, < 1.25x truth.
+        for (q, truth) in [(0.5, 500u64), (0.99, 990), (0.999, 999)] {
+            let got = h.quantile(q);
+            assert!(got >= truth, "q{q}: {got} < {truth}");
+            assert!((got as f64) < truth as f64 * 1.25 + 1.0, "q{q}: {got} vs {truth}");
+        }
+        assert!(h.quantile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_absorb_merges_counts() {
+        let a = LatencyHistogram::default();
+        let b = LatencyHistogram::default();
+        for us in [10, 20, 30] {
+            a.record_us(us);
+        }
+        for us in [10_000, 20_000] {
+            b.record_us(us);
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), 5);
+        assert!(a.quantile(1.0) >= 20_000);
+        // b unchanged.
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = Arc::new(LatencyHistogram::default());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record_us(t * 1000 + i % 997);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_cumulative() {
+        let h = LatencyHistogram::default();
+        for us in [5u64, 5, 100, 1000] {
+            h.record_us(us);
+        }
+        let b = h.cumulative_buckets();
+        assert_eq!(b.last().unwrap().1, 4);
+        for w in b.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1);
+        }
     }
 }

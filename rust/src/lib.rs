@@ -85,6 +85,13 @@
 //!   heap copy, N engines per mapping) without re-running compression.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts (stubbed
 //!   unless built with the `xla` feature).
+//! * [`serve`] — the dependency-free TCP/HTTP network front end over the
+//!   coordinator's worker plane: minimal HTTP/1.1 (`POST /v1/infer`,
+//!   `GET /healthz`, `GET /metrics`), bounded admission with
+//!   `429 + Retry-After` backpressure, per-request deadlines (504),
+//!   graceful SIGTERM drain, live pack hot-reload via
+//!   [`serve::HotRouter`], and the closed/open-loop (Poisson) load
+//!   generator behind `repro loadgen` that emits `BENCH_serve.json`.
 //! * [`harness`] — regenerates every table and figure of the paper.
 
 pub mod compress;
@@ -97,6 +104,7 @@ pub mod kernels;
 pub mod networks;
 pub mod pack;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;
 

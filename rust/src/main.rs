@@ -144,15 +144,46 @@ System commands:
                              packs are routed per request by file stem);
                              --verify checks every reply bit-for-bit
                              against the owned-storage reader
+  serve-net <a.cerpack> ...  network front end over the same worker plane:
+                             HTTP/1.1 on --addr (default 127.0.0.1:8080;
+                             port 0 = ephemeral, --port-file FILE writes
+                             the bound address). POST /v1/infer with
+                             {\"input\":[...],\"pack\":...,\"deadline_ms\":...},
+                             GET /healthz, GET /metrics (p50/p99/p999),
+                             POST /admin/{reload,drain,shutdown}. Bounded
+                             admission: --max-inflight N full => 429 +
+                             Retry-After; expired --deadline-ms => 504
+                             before a worker is touched; SIGTERM stops
+                             accepting, finishes in-flight work, exits 0
+  loadgen                    drive a running serve-net and emit
+                             BENCH_serve.json: closed-loop --concurrency
+                             list and open-loop Poisson --rates list
+                             (coordinated-omission-free latency), each
+                             step --duration-ms; reports throughput,
+                             p50/p99/p999, and the knee point. --smoke
+                             self-hosts a loopback server and asserts
+                             replies bit-identical to the in-process
+                             path; --verify-pack <f.cerpack> does the
+                             same against a live server
+  reload <name> <f.cerpack>  hot-swap the pack behind a serve-net route
+                             (--addr): atomic under traffic, in-flight
+                             requests finish on the old weights
   bench-gate                 diff --fresh BENCH_*.json against a committed
                              --baseline; exits non-zero when any tracked
-                             metric (…_ms/…_ns lower-better; gflops,
-                             speedups, compression_ratio higher-better)
-                             regresses more than --max-regress-pct
-                             (default 25); an empty baseline = seeding
-                             pass; --update rewrites the baseline
+                             metric (…_ms/…_ns/…_us lower-better; gflops,
+                             speedups, compression_ratio, throughput_rps
+                             higher-better) regresses more than
+                             --max-regress-pct (default 25); an empty
+                             baseline prints SEEDING (no baseline) per
+                             metric and exits 2 (gating inert) so CI logs
+                             can't mistake it for a pass; --update
+                             rewrites the baseline
   inspect --net <name>       print layer statistics of a synthesized net
   help                       this text
+
+Exit codes: 0 = success; 1 = any error (bad flags, bind/pack failure,
+bench regression), reported as one line on stderr; 2 = bench-gate ran
+against an empty baseline (seeding — gating inert).
 
 Common flags:
   --seed N          RNG seed (default 0xCE5E)
@@ -208,31 +239,35 @@ fn objective_flag(a: &Args) -> anyhow::Result<(cer::coordinator::Objective, Stri
     Ok((obj, s))
 }
 
+/// Exit protocol: 0 = success, 1 = any error (bad flags, bind failure,
+/// missing pack, regression), 2 = bench-gate ran in seeding mode (no
+/// baseline — gating inert). Every subcommand error funnels through the
+/// single `Err` arm here: one line on stderr, nonzero exit, no panics.
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
     let args = match Args::parse(&argv[1.min(argv.len())..]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n\n{HELP}");
+            eprintln!("repro: {e}\n\n{HELP}");
             return ExitCode::FAILURE;
         }
     };
     match run(cmd, &args) {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(code) => code,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("repro {cmd}: {e:#}");
             ExitCode::FAILURE
         }
     }
 }
 
-fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
-    // Only `inspect` (the .cerpack path) and `serve` (one or more packs
-    // to serve) take bare arguments; anywhere else a stray positional is
-    // a mistyped flag — fail loudly rather than silently running with
-    // defaults.
-    if !a.positional.is_empty() && !matches!(cmd, "inspect" | "serve") {
+fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
+    // Only `inspect` (the .cerpack path), `serve`/`serve-net` (packs to
+    // serve), and `reload` (route name + pack) take bare arguments;
+    // anywhere else a stray positional is a mistyped flag — fail loudly
+    // rather than silently running with defaults.
+    if !a.positional.is_empty() && !matches!(cmd, "inspect" | "serve" | "serve-net" | "reload") {
         anyhow::bail!(
             "unexpected argument '{}' — flags are `--key value` (run `repro help`)",
             a.positional[0]
@@ -424,7 +459,17 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             let dir = PathBuf::from(a.get_str("artifacts", "artifacts"));
             run_serve_demo(&dir, a)?;
         }
-        "bench-gate" => cmd_bench_gate(a)?,
+        "serve-net" if !a.positional.is_empty() => cmd_serve_net(&a.positional, a)?,
+        "serve-net" => anyhow::bail!(
+            "usage: repro serve-net <a.cerpack> [b.cerpack ...] [--addr 127.0.0.1:8080] \
+             [--workers N] [--max-inflight N] [--deadline-ms N] [--port-file FILE]"
+        ),
+        "loadgen" => cmd_loadgen(a)?,
+        "reload" if a.positional.len() == 2 => cmd_reload(&a.positional[0], &a.positional[1], a)?,
+        "reload" => anyhow::bail!(
+            "usage: repro reload <route-name> <file.cerpack> [--addr 127.0.0.1:8080]"
+        ),
+        "bench-gate" => return cmd_bench_gate(a),
         "all" => {
             let mut cfg = eval_config(a);
             cfg.disk = true; // the shared eval feeds table2's disk columns
@@ -448,13 +493,13 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
                 "table5", "table6", "alexnet", "packed-dense", "figure1", "figure4", "figure5",
             ] {
                 println!("\n===== {c} =====");
-                run(c, a)?;
+                let _ = run(c, a)?;
             }
             for net in ["densenet", "resnet152", "vgg16"] {
                 println!("\n===== breakdown {net} =====");
                 let mut flags = a.flags.clone();
                 flags.insert("net".into(), net.into());
-                run(
+                let _ = run(
                     "breakdown",
                     &Args {
                         flags,
@@ -467,7 +512,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<()> {
             anyhow::bail!("unknown command '{other}' — run `repro help`");
         }
     }
-    Ok(())
+    Ok(ExitCode::SUCCESS)
 }
 
 /// `repro pack` — compress a zoo network (synthesize at its Table-IV/V
@@ -883,10 +928,14 @@ fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
 /// `repro bench-gate --fresh BENCH_x.json --baseline ci/baselines/BENCH_x.json`
 /// — diff a fresh bench artifact against the committed baseline and fail
 /// (non-zero exit) on any tracked metric regressing beyond
-/// `--max-regress-pct` (default 25). An empty `{}` baseline makes this a
-/// seeding pass; `--update` writes the fresh artifact over the baseline
-/// (for maintainers recording a new trajectory point).
-fn cmd_bench_gate(a: &Args) -> anyhow::Result<()> {
+/// `--max-regress-pct` (default 25). An empty `{}` (or absent) baseline
+/// makes this a **seeding** run: gating is inert, every would-be-gated
+/// metric is announced with a loud `SEEDING (no baseline)` line, and the
+/// process exits with the distinct code **2** (pass = 0, regression or
+/// error = 1) so CI logs can't mistake an unarmed gate for a green one.
+/// `--update` writes the fresh artifact over the baseline (for
+/// maintainers recording a new trajectory point).
+fn cmd_bench_gate(a: &Args) -> anyhow::Result<ExitCode> {
     use cer::util::benchgate::gate;
     use cer::util::json;
 
@@ -913,30 +962,44 @@ fn cmd_bench_gate(a: &Args) -> anyhow::Result<()> {
     };
 
     let report = gate(&baseline, &fresh, max_regress);
-    print!("{}", report.render(40));
+    let update_baseline = || -> anyhow::Result<()> {
+        if let Some(dir) = Path::new(&baseline_path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::copy(&fresh_path, &baseline_path)
+            .map_err(|e| anyhow::anyhow!("updating {baseline_path}: {e}"))?;
+        println!("updated baseline {baseline_path}");
+        Ok(())
+    };
     if report.seeding {
+        for key in &report.only_fresh {
+            println!("SEEDING (no baseline): {key}");
+        }
         println!(
-            "seed the trajectory: commit {fresh_path} as {baseline_path} \
-             (or re-run with --update)"
+            "bench-gate: gating is INERT — {} tracked metric(s) have no baseline to \
+             compare against; commit {fresh_path} as {baseline_path} (or re-run with \
+             --update) to arm the gate",
+            report.only_fresh.len()
         );
-    } else {
-        println!(
-            "bench-gate: {} tracked metric(s) compared at ±{max_regress}% threshold",
-            report.compared.len()
-        );
+        if a.has("update") {
+            update_baseline()?;
+        }
+        // Distinct exit code: not a pass (nothing was gated), not a
+        // failure (nothing regressed). CI treats 2 as "inert, proceed".
+        return Ok(ExitCode::from(2));
     }
+    print!("{}", report.render(40));
+    println!(
+        "bench-gate: {} tracked metric(s) compared at ±{max_regress}% threshold",
+        report.compared.len()
+    );
     let failures: Vec<String> = report.failures().map(|c| c.key.clone()).collect();
     if a.has("update") {
         // Never bake a regressed run into the baseline: --update applies
         // only when the gate passes (a deliberate reset goes through
         // editing the baseline, with the regression visible in review).
         if failures.is_empty() {
-            if let Some(dir) = Path::new(&baseline_path).parent() {
-                std::fs::create_dir_all(dir).ok();
-            }
-            std::fs::copy(&fresh_path, &baseline_path)
-                .map_err(|e| anyhow::anyhow!("updating {baseline_path}: {e}"))?;
-            println!("updated baseline {baseline_path}");
+            update_baseline()?;
         } else {
             println!("--update skipped: the gate failed, baseline left unchanged");
         }
@@ -946,6 +1009,185 @@ fn cmd_bench_gate(a: &Args) -> anyhow::Result<()> {
         "bench regression >{max_regress}% in {} metric(s): {}",
         failures.len(),
         failures.join(", ")
+    );
+    Ok(ExitCode::SUCCESS)
+}
+
+/// `repro serve-net a.cerpack [b.cerpack ...]` — the network front end:
+/// put an HTTP/1.1 socket in front of the mmap-shared worker plane.
+/// Requests hit bounded admission (429 + Retry-After when full) and
+/// per-request deadlines (504 before a worker is touched); SIGTERM (or
+/// `POST /admin/shutdown`) stops accepting, answers everything in
+/// flight, and exits 0. `POST /admin/reload` hot-swaps a route's pack
+/// under traffic.
+fn cmd_serve_net(packs: &[String], a: &Args) -> anyhow::Result<()> {
+    use cer::coordinator::ServerConfig;
+    use cer::coordinator::batcher::BatcherConfig;
+    use cer::serve::{
+        install_term_handler, serve, termination_requested, HotRouter, ServeOptions, ServeState,
+    };
+    use std::time::Duration;
+
+    let addr = a.get_str("addr", "127.0.0.1:8080");
+    let workers = a.get("workers", 1usize).max(1);
+    let threads = cer::exec::resolve_threads(threads_flag(a));
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: a.get("max-batch", 32usize),
+            max_delay_us: a.get("max-delay-us", 2_000u64),
+        },
+        threads: Some(threads),
+    };
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        max_inflight: a.get("max-inflight", defaults.max_inflight),
+        default_deadline_ms: a.get("deadline-ms", defaults.default_deadline_ms),
+        max_body_bytes: a.get("max-body-bytes", defaults.max_body_bytes),
+    };
+    let router = HotRouter::new(cfg, workers);
+    for p in packs {
+        let path = Path::new(p);
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(p.as_str())
+            .to_string();
+        router.add_pack(&name, path)?;
+        let ep = router.endpoint(&name).expect("just added");
+        println!(
+            "route \"{name}\": in_dim {} -> out_dim {} ({workers} worker(s) x {threads} \
+             thread(s)) from {}",
+            ep.in_dim,
+            ep.out_dim,
+            path.display()
+        );
+    }
+    install_term_handler();
+    let state = ServeState::new(router, opts);
+    let handle = serve(&addr, state).map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+    println!(
+        "listening on http://{} — POST /v1/infer, GET /healthz, GET /metrics, \
+         POST /admin/{{reload,drain,shutdown}}; SIGTERM drains",
+        handle.addr()
+    );
+    // CI binds port 0 and reads the resolved address from --port-file.
+    let port_file = a.get_str("port-file", "");
+    if !port_file.is_empty() {
+        std::fs::write(&port_file, handle.addr().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {port_file}: {e}"))?;
+    }
+    loop {
+        if termination_requested() {
+            eprintln!("repro serve-net: termination signal — draining");
+            break;
+        }
+        if handle.shutdown_requested() {
+            eprintln!("repro serve-net: admin shutdown — draining");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let drain = Duration::from_secs(a.get("drain-timeout-s", 30u64));
+    anyhow::ensure!(
+        handle.shutdown(drain),
+        "drain timed out after {drain:?} with requests still in flight"
+    );
+    println!("drained cleanly");
+    Ok(())
+}
+
+/// `repro loadgen` — drive a running `serve-net` with closed-loop
+/// (`--concurrency` list) and open-loop Poisson (`--rates` list) steps,
+/// and write the `BENCH_serve.json` artifact (throughput + p50/p99/p999
+/// per step, knee point). `--smoke` self-hosts a loopback server over a
+/// synthesized pack and verifies replies bit-identical to the in-process
+/// path — the CI entry point.
+fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
+    use cer::serve::loadgen::{self, LoadgenConfig};
+
+    fn list<T: std::str::FromStr>(s: &str) -> Vec<T> {
+        s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
+    }
+
+    let out = PathBuf::from(a.get_str("out", "BENCH_serve.json"));
+    let seed = a.get("seed", 42u64);
+    if a.has("smoke") {
+        let summary = loadgen::smoke(&out, seed)?;
+        println!("{summary}");
+        return Ok(());
+    }
+    let defaults = LoadgenConfig::default();
+    let cfg = LoadgenConfig {
+        addr: a.get_str("addr", &defaults.addr),
+        concurrency: list(&a.get_str("concurrency", "4")),
+        rates: list(&a.get_str("rates", "200,400,800")),
+        duration_ms: a.get("duration-ms", defaults.duration_ms),
+        conns: a.get("conns", defaults.conns),
+        deadline_ms: a.get("deadline-ms", defaults.deadline_ms),
+        seed,
+    };
+    let mode = a.get_str("mode", "both");
+    let cfg = match mode.as_str() {
+        "both" => cfg,
+        "closed" => LoadgenConfig {
+            rates: Vec::new(),
+            ..cfg
+        },
+        "open" => LoadgenConfig {
+            concurrency: Vec::new(),
+            ..cfg
+        },
+        other => anyhow::bail!("unknown --mode '{other}' (closed|open|both)"),
+    };
+    anyhow::ensure!(
+        !(cfg.rates.is_empty() && cfg.concurrency.is_empty()),
+        "nothing to run: --rates and --concurrency are both empty"
+    );
+    let verify = a.get_str("verify-pack", "");
+    let verify_path = (!verify.is_empty()).then(|| PathBuf::from(&verify));
+    let summary = loadgen::run(&cfg, &out, verify_path.as_deref())?;
+    println!("{summary}");
+    Ok(())
+}
+
+/// `repro reload <route> <file.cerpack>` — ask a running `serve-net` to
+///// hot-swap the pack behind a route. The swap is atomic under traffic:
+/// in-flight requests finish on the old weights, the old mapping drops
+/// after they drain.
+fn cmd_reload(name: &str, pack: &str, a: &Args) -> anyhow::Result<()> {
+    use cer::serve::http::{json_escape, HttpClient, Request};
+    use std::time::Duration;
+
+    let addr = a.get_str("addr", "127.0.0.1:8080");
+    // The server opens the path itself — send it absolute so a client
+    // launched from another directory still names the same file.
+    let path = std::fs::canonicalize(pack)
+        .map_err(|e| anyhow::anyhow!("resolving {pack}: {e}"))?;
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(10))
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    let body = format!(
+        "{{\"name\":\"{}\",\"path\":\"{}\"}}",
+        json_escape(name),
+        json_escape(&path.display().to_string())
+    );
+    let resp = client
+        .request(&Request::new("POST", "/admin/reload").json(body))
+        .map_err(|e| anyhow::anyhow!("reload request: {e}"))?;
+    anyhow::ensure!(
+        resp.status == 200,
+        "reload failed ({}): {}",
+        resp.status,
+        resp.body_str()
+    );
+    let doc = cer::util::json::parse(&resp.body_str())
+        .map_err(|e| anyhow::anyhow!("reload reply: {e}"))?;
+    let generation = doc
+        .get("generation")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("reload reply missing generation"))?;
+    println!(
+        "route \"{name}\" now serving {} (generation {generation})",
+        path.display()
     );
     Ok(())
 }

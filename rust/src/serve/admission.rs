@@ -1,0 +1,139 @@
+//! Bounded admission control for the network front end.
+//!
+//! A fixed budget of in-flight requests is enforced with one atomic
+//! counter: [`Admission::try_acquire`] either hands back an RAII
+//! [`Permit`] or fails immediately, so a saturated server answers
+//! **429 + Retry-After** in microseconds instead of queueing unboundedly
+//! and timing everyone out. The permit is released on drop, whatever
+//! path the request takes (reply, deadline expiry, panic unwind).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared in-flight budget.
+#[derive(Debug)]
+pub struct Admission {
+    capacity: usize,
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(capacity: usize) -> Arc<Admission> {
+        Arc::new(Admission {
+            capacity: capacity.max(1),
+            inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// Try to take one in-flight slot. `None` means the budget is
+    /// exhausted — reply 429 and move on; never blocks.
+    pub fn try_acquire(self: &Arc<Admission>) -> Option<Permit> {
+        let took = self
+            .inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                (cur < self.capacity).then_some(cur + 1)
+            })
+            .is_ok();
+        if took {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            Some(Permit {
+                admission: Arc::clone(self),
+            })
+        } else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Configured budget.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently holding a permit.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Total permits granted since start.
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Total immediate rejections (429s) since start.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII in-flight slot; dropping it releases the budget.
+#[derive(Debug)]
+pub struct Permit {
+    admission: Arc<Admission>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.admission.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_enforced_and_released() {
+        let a = Admission::new(2);
+        let p1 = a.try_acquire().unwrap();
+        let _p2 = a.try_acquire().unwrap();
+        assert!(a.try_acquire().is_none(), "third permit over capacity 2");
+        assert_eq!(a.inflight(), 2);
+        assert_eq!(a.rejected_total(), 1);
+        drop(p1);
+        assert_eq!(a.inflight(), 1);
+        assert!(a.try_acquire().is_some());
+        assert_eq!(a.admitted_total(), 3);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let a = Admission::new(0);
+        assert_eq!(a.capacity(), 1);
+        let _p = a.try_acquire().unwrap();
+        assert!(a.try_acquire().is_none());
+    }
+
+    #[test]
+    fn concurrent_acquire_never_overshoots() {
+        let a = Admission::new(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let a = Arc::clone(&a);
+            let peak = Arc::clone(&peak);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..5000 {
+                    if let Some(p) = a.try_acquire() {
+                        peak.fetch_max(a.inflight(), Ordering::Relaxed);
+                        drop(p);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(a.inflight(), 0);
+        assert!(peak.load(Ordering::Relaxed) <= 8);
+        assert_eq!(
+            a.admitted_total() + a.rejected_total(),
+            20_000,
+            "every attempt accounted"
+        );
+    }
+}

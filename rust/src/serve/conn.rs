@@ -1,0 +1,557 @@
+//! Per-connection request handling: parse → dispatch → respond.
+//!
+//! Each accepted TCP connection is served by one thread running
+//! [`handle_conn`] (connections are keep-alive, so a thread amortizes
+//! over many requests). The dispatch path is deliberately ordered so
+//! every overload answer is cheap: drain check → JSON parse → route
+//! lookup → dimension check → deadline check → admission permit →
+//! submit. A request that will not be served (503/400/404/504/429)
+//! never touches a worker thread.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::serve::admission::Admission;
+use crate::serve::http::{
+    self, json_escape, json_f32_array, read_request, write_response, HttpError, Request, Response,
+};
+use crate::serve::reload::HotRouter;
+use crate::util::json::{self, Json};
+
+/// Tunables for the serving front end.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// In-flight request budget — beyond it, 429.
+    pub max_inflight: usize,
+    /// Deadline applied when a request does not carry `deadline_ms`.
+    pub default_deadline_ms: u64,
+    /// Request body cap — beyond it, 413.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_inflight: 256,
+            default_deadline_ms: 1_000,
+            max_body_bytes: 4 << 20,
+        }
+    }
+}
+
+/// Response counters + infer latency distribution for `/metrics`.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub code_200: AtomicU64,
+    pub code_400: AtomicU64,
+    pub code_404: AtomicU64,
+    pub code_405: AtomicU64,
+    pub code_413: AtomicU64,
+    pub code_429: AtomicU64,
+    pub code_500: AtomicU64,
+    pub code_503: AtomicU64,
+    pub code_504: AtomicU64,
+    pub code_other: AtomicU64,
+    /// Wall latency of `/v1/infer` requests, parse-done → response-ready.
+    pub infer_latency: LatencyHistogram,
+    /// Connections accepted since start.
+    pub connections_total: AtomicU64,
+}
+
+impl ServeMetrics {
+    fn counter(&self, code: u16) -> &AtomicU64 {
+        match code {
+            200 => &self.code_200,
+            400 => &self.code_400,
+            404 => &self.code_404,
+            405 => &self.code_405,
+            413 => &self.code_413,
+            429 => &self.code_429,
+            500 => &self.code_500,
+            503 => &self.code_503,
+            504 => &self.code_504,
+            _ => &self.code_other,
+        }
+    }
+
+    pub fn count_response(&self, code: u16) {
+        self.counter(code).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn responses(&self, code: u16) -> u64 {
+        self.counter(code).load(Ordering::Relaxed)
+    }
+
+    fn code_rows(&self) -> Vec<(u16, u64)> {
+        [200u16, 400, 404, 405, 413, 429, 500, 503, 504]
+            .iter()
+            .map(|&c| (c, self.responses(c)))
+            .filter(|(_, n)| *n > 0)
+            .collect()
+    }
+}
+
+/// Everything a connection thread needs, shared across the server.
+pub struct ServeState {
+    pub router: HotRouter,
+    pub admission: Arc<Admission>,
+    pub metrics: ServeMetrics,
+    pub opts: ServeOptions,
+    /// Set on SIGTERM / `POST /admin/drain`: refuse new inference work,
+    /// finish what is in flight.
+    pub draining: AtomicBool,
+    /// Set by `POST /admin/shutdown`: the accept loop exits after drain.
+    pub shutdown_requested: AtomicBool,
+}
+
+impl ServeState {
+    pub fn new(router: HotRouter, opts: ServeOptions) -> Arc<ServeState> {
+        Arc::new(ServeState {
+            router,
+            admission: Admission::new(opts.max_inflight),
+            metrics: ServeMetrics::default(),
+            opts,
+            draining: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+        })
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+}
+
+fn err_body(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", json_escape(msg))
+}
+
+/// Serve one connection until close/EOF/drain. `stop` is the listener's
+/// shutdown flag — polled between requests so idle keep-alive
+/// connections release their threads promptly.
+pub fn handle_conn(stream: TcpStream, state: &Arc<ServeState>, stop: &AtomicBool) {
+    state.metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader, state.opts.max_body_bytes) {
+            Ok(r) => r,
+            Err(HttpError::Eof) => return,
+            Err(HttpError::IdleTimeout) => {
+                // Quiet keep-alive connection: close when the server is
+                // going away, otherwise wait for the next request.
+                if stop.load(Ordering::Acquire) || state.draining() {
+                    return;
+                }
+                continue;
+            }
+            Err(HttpError::BodyTooLarge { limit }) => {
+                let resp = Response::json(
+                    413,
+                    err_body(&format!("request body exceeds {limit} bytes")),
+                );
+                state.metrics.count_response(413);
+                let _ = write_response(&mut writer, &resp, false);
+                return;
+            }
+            Err(HttpError::Malformed(m)) => {
+                let resp = Response::json(400, err_body(&m));
+                state.metrics.count_response(400);
+                let _ = write_response(&mut writer, &resp, false);
+                return;
+            }
+            Err(HttpError::Io(_)) => return,
+        };
+        let close = req.close;
+        let resp = dispatch(state, &req);
+        state.metrics.count_response(resp.status);
+        let keep_alive = !close && !state.draining();
+        if write_response(&mut writer, &resp, keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Route a parsed request. Pure request → response; all I/O stays in
+/// [`handle_conn`].
+pub fn dispatch(state: &Arc<ServeState>, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, healthz_json(state)),
+        ("GET", "/metrics") => Response::text(200, &render_metrics(state)),
+        ("POST", "/v1/infer") => infer(state, req),
+        ("POST", "/admin/reload") => admin_reload(state, req),
+        ("POST", "/admin/drain") => {
+            state.begin_drain();
+            Response::json(200, "{\"status\":\"draining\"}".to_string())
+        }
+        ("POST", "/admin/shutdown") => {
+            state.begin_drain();
+            state.shutdown_requested.store(true, Ordering::Release);
+            Response::json(200, "{\"status\":\"shutting-down\"}".to_string())
+        }
+        (m, p) if p == "/healthz" || p == "/metrics" || p == "/v1/infer" || p.starts_with("/admin/") => {
+            Response::json(405, err_body(&format!("method {m} not allowed on {p}")))
+        }
+        (_, p) => Response::json(404, err_body(&format!("no such path {p}"))),
+    }
+}
+
+/// The inference path. Ordering matters: every rejection is decided
+/// before a worker or permit is touched, except the post-admission
+/// deadline wait itself.
+fn infer(state: &Arc<ServeState>, req: &Request) -> Response {
+    let t0 = Instant::now();
+    if state.draining() {
+        return Response::json(503, err_body("server is draining"))
+            .with_header("retry-after", "1");
+    }
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return Response::json(400, err_body("body is not UTF-8")),
+    };
+    let doc = match json::parse(body) {
+        Ok(d) => d,
+        Err(e) => return Response::json(400, err_body(&format!("bad JSON: {e}"))),
+    };
+    let mut input = Vec::new();
+    match doc.get("input") {
+        Some(Json::Arr(items)) => {
+            input.reserve(items.len());
+            for v in items {
+                match v.as_f64() {
+                    Some(x) => input.push(x as f32),
+                    None => {
+                        return Response::json(400, err_body("input must be an array of numbers"))
+                    }
+                }
+            }
+        }
+        _ => return Response::json(400, err_body("missing \"input\" array")),
+    }
+
+    // Resolve the route: explicit `pack`, else the sole registered one.
+    let endpoint = match doc.get("pack").and_then(|p| p.as_str()) {
+        Some(name) => match state.router.endpoint(name) {
+            Some(e) => e,
+            None => {
+                return Response::json(
+                    404,
+                    err_body(&format!(
+                        "unknown pack {name:?} (known: {})",
+                        state.router.names().join(", ")
+                    )),
+                )
+            }
+        },
+        None => {
+            let all = state.router.endpoints();
+            match all.len() {
+                1 => all.into_iter().next().unwrap(),
+                0 => return Response::json(503, err_body("no packs registered")),
+                _ => {
+                    return Response::json(
+                        400,
+                        err_body(&format!(
+                            "multiple packs served — pass \"pack\" (known: {})",
+                            state.router.names().join(", ")
+                        )),
+                    )
+                }
+            }
+        }
+    };
+    if input.len() != endpoint.in_dim {
+        return Response::json(
+            400,
+            err_body(&format!(
+                "input has {} values, pack {:?} expects {}",
+                input.len(),
+                endpoint.name,
+                endpoint.in_dim
+            )),
+        );
+    }
+
+    let deadline_ms = doc
+        .get("deadline_ms")
+        .and_then(|v| v.as_f64())
+        .map(|v| v.max(0.0) as u64)
+        .unwrap_or(state.opts.default_deadline_ms);
+    let deadline = t0 + Duration::from_millis(deadline_ms);
+    let now = Instant::now();
+    if now >= deadline {
+        // Already expired (e.g. deadline_ms=0): reject without ever
+        // submitting, so no worker sees the request.
+        return Response::json(504, err_body("deadline expired before dispatch"));
+    }
+
+    let _permit = match state.admission.try_acquire() {
+        Some(p) => p,
+        None => {
+            return Response::json(429, err_body("server at capacity"))
+                .with_header("retry-after", "1")
+        }
+    };
+    let rx = endpoint.workers.submit(input);
+    let resp = match rx.recv_timeout(deadline - now) {
+        Ok(Ok(output)) => {
+            let body = format!(
+                "{{\"pack\":\"{}\",\"generation\":{},\"output\":{}}}",
+                json_escape(&endpoint.name),
+                endpoint.generation,
+                json_f32_array(&output)
+            );
+            Response::json(200, body)
+        }
+        Ok(Err(e)) => {
+            let msg = format!("{e:#}");
+            // The worker rejects dimension mismatches; anything else is
+            // an internal failure.
+            if msg.contains("input") || msg.contains("dim") {
+                Response::json(400, err_body(&msg))
+            } else {
+                Response::json(500, err_body(&msg))
+            }
+        }
+        Err(_) => Response::json(504, err_body(&format!("deadline of {deadline_ms}ms expired"))),
+    };
+    state
+        .metrics
+        .infer_latency
+        .record_us(t0.elapsed().as_micros() as u64);
+    resp
+}
+
+fn admin_reload(state: &Arc<ServeState>, req: &Request) -> Response {
+    let body = String::from_utf8_lossy(&req.body);
+    let doc = match json::parse(&body) {
+        Ok(d) => d,
+        Err(e) => return Response::json(400, err_body(&format!("bad JSON: {e}"))),
+    };
+    let (name, path) = match (
+        doc.get("name").and_then(|v| v.as_str()),
+        doc.get("path").and_then(|v| v.as_str()),
+    ) {
+        (Some(n), Some(p)) => (n, p),
+        _ => return Response::json(400, err_body("need \"name\" and \"path\"")),
+    };
+    match state.router.reload(name, std::path::Path::new(path)) {
+        Ok(generation) => Response::json(
+            200,
+            format!(
+                "{{\"pack\":\"{}\",\"generation\":{generation}}}",
+                json_escape(name)
+            ),
+        ),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("unknown route") {
+                Response::json(404, err_body(&msg))
+            } else {
+                Response::json(400, err_body(&msg))
+            }
+        }
+    }
+}
+
+fn healthz_json(state: &Arc<ServeState>) -> String {
+    let mut out = String::from("{\"status\":\"");
+    out.push_str(if state.draining() { "draining" } else { "ok" });
+    out.push_str("\",\"inflight\":");
+    out.push_str(&state.admission.inflight().to_string());
+    out.push_str(",\"packs\":[");
+    for (i, ep) in state.router.endpoints().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"in_dim\":{},\"out_dim\":{},\"generation\":{},\"source\":\"{}\"}}",
+            json_escape(&ep.name),
+            ep.in_dim,
+            ep.out_dim,
+            ep.generation,
+            json_escape(&ep.source.display().to_string()),
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Prometheus-style text exposition: front-end counters, the infer
+/// latency distribution, and per-pack worker-side aggregates.
+fn render_metrics(state: &Arc<ServeState>) -> String {
+    let m = &state.metrics;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "serve_connections_total {}\n",
+        m.connections_total.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!("serve_inflight {}\n", state.admission.inflight()));
+    out.push_str(&format!(
+        "serve_admission_capacity {}\n",
+        state.admission.capacity()
+    ));
+    out.push_str(&format!(
+        "serve_admitted_total {}\n",
+        state.admission.admitted_total()
+    ));
+    out.push_str(&format!(
+        "serve_rejected_total {}\n",
+        state.admission.rejected_total()
+    ));
+    for (code, n) in m.code_rows() {
+        out.push_str(&format!("serve_responses_total{{code=\"{code}\"}} {n}\n"));
+    }
+    for (q, v) in [
+        ("0.5", m.infer_latency.p50()),
+        ("0.99", m.infer_latency.p99()),
+        ("0.999", m.infer_latency.p999()),
+    ] {
+        out.push_str(&format!("serve_infer_latency_us{{quantile=\"{q}\"}} {v}\n"));
+    }
+    out.push_str(&format!(
+        "serve_infer_latency_us_count {}\n",
+        m.infer_latency.count()
+    ));
+    for ep in state.router.endpoints() {
+        let label = format!(
+            "pack=\"{}\",generation=\"{}\"",
+            json_escape(&ep.name),
+            ep.generation
+        );
+        out.push_str(&format!(
+            "pack_completed_total{{{label}}} {}\n",
+            ep.workers.completed_total()
+        ));
+        // Merge the per-worker queue→reply histograms for this pack.
+        let merged = LatencyHistogram::default();
+        for w in 0..ep.workers.workers() {
+            merged.absorb(&ep.workers.worker_metrics(w).latency);
+        }
+        for (q, v) in [("0.5", merged.p50()), ("0.99", merged.p99())] {
+            out.push_str(&format!(
+                "pack_queue_latency_us{{{label},quantile=\"{q}\"}} {v}\n"
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::server::ServerConfig;
+    use crate::formats::{Dense, FormatKind};
+    use crate::coordinator::engine::Engine;
+    use crate::util::rng::Rng;
+
+    fn test_state() -> Arc<ServeState> {
+        let dir = std::env::temp_dir().join(format!("conn-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("conn.cerpack");
+        let mut rng = Rng::new(11);
+        let d = Dense::from_vec(4, 6, (0..24).map(|_| rng.f32() - 0.5).collect());
+        let e = Engine::native_fixed(vec![("fc".to_string(), d, vec![0.0; 4])], FormatKind::Csr);
+        e.save_pack(&path, "conn", "test").unwrap();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay_us: 50,
+            },
+            threads: Some(1),
+        };
+        let router = HotRouter::new(cfg, 1);
+        router.add_pack("conn", &path).unwrap();
+        ServeState::new(router, ServeOptions::default())
+    }
+
+    fn post_infer(state: &Arc<ServeState>, body: &str) -> Response {
+        let req = Request::new("POST", "/v1/infer").json(body.to_string());
+        dispatch(state, &req)
+    }
+
+    #[test]
+    fn dispatch_table_and_infer_flow() {
+        let state = test_state();
+        assert_eq!(dispatch(&state, &Request::new("GET", "/healthz")).status, 200);
+        assert_eq!(dispatch(&state, &Request::new("GET", "/nope")).status, 404);
+        assert_eq!(dispatch(&state, &Request::new("DELETE", "/v1/infer")).status, 405);
+
+        let ok = post_infer(&state, "{\"input\":[1,2,3,4,5,6]}");
+        assert_eq!(ok.status, 200, "{}", ok.body_str());
+        let doc = json::parse(&ok.body_str()).unwrap();
+        assert_eq!(doc.get("output").unwrap().items().len(), 4);
+        assert_eq!(doc.get("pack").unwrap().as_str(), Some("conn"));
+
+        assert_eq!(post_infer(&state, "not json").status, 400);
+        assert_eq!(post_infer(&state, "{\"input\":[1,2]}").status, 400);
+        assert_eq!(post_infer(&state, "{\"input\":[1,\"x\"]}").status, 400);
+        assert_eq!(post_infer(&state, "{}").status, 400);
+        assert_eq!(
+            post_infer(&state, "{\"input\":[1,2,3,4,5,6],\"pack\":\"ghost\"}").status,
+            404
+        );
+        // Expired deadline: 504 before any worker involvement.
+        let admitted_before = state.admission.admitted_total();
+        assert_eq!(
+            post_infer(&state, "{\"input\":[1,2,3,4,5,6],\"deadline_ms\":0}").status,
+            504
+        );
+        assert_eq!(state.admission.admitted_total(), admitted_before);
+
+        assert!(state.metrics.responses(200) >= 1);
+        assert!(state.metrics.responses(400) >= 4);
+        assert_eq!(state.metrics.infer_latency.count(), 1);
+        state.router.shutdown();
+    }
+
+    #[test]
+    fn draining_rejects_infer_but_health_stays_up() {
+        let state = test_state();
+        state.begin_drain();
+        assert_eq!(post_infer(&state, "{\"input\":[1,2,3,4,5,6]}").status, 503);
+        let health = dispatch(&state, &Request::new("GET", "/healthz"));
+        assert_eq!(health.status, 200);
+        assert!(health.body_str().contains("draining"));
+        state.router.shutdown();
+    }
+
+    #[test]
+    fn metrics_exposition_contains_quantiles_and_codes() {
+        let state = test_state();
+        for _ in 0..3 {
+            assert_eq!(post_infer(&state, "{\"input\":[0,0,0,0,0,0]}").status, 200);
+        }
+        let m = dispatch(&state, &Request::new("GET", "/metrics"));
+        state.metrics.count_response(m.status);
+        let text = m.body_str().into_owned();
+        assert!(text.contains("serve_responses_total{code=\"200\"} 3"), "{text}");
+        assert!(text.contains("serve_infer_latency_us{quantile=\"0.999\"}"));
+        assert!(text.contains("pack_completed_total{pack=\"conn\",generation=\"0\"} 3"));
+        state.router.shutdown();
+    }
+
+    #[test]
+    fn admin_reload_validates_and_404s_unknown_route() {
+        let state = test_state();
+        let bad = Request::new("POST", "/admin/reload").json("{\"name\":\"x\"}".to_string());
+        assert_eq!(dispatch(&state, &bad).status, 400);
+        let unknown = Request::new("POST", "/admin/reload")
+            .json("{\"name\":\"ghost\",\"path\":\"/tmp/x.cerpack\"}".to_string());
+        assert_eq!(dispatch(&state, &unknown).status, 404);
+        state.router.shutdown();
+    }
+}

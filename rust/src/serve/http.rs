@@ -1,0 +1,519 @@
+//! Minimal HTTP/1.1 — just enough protocol for the serving front end and
+//! its load generator, with zero dependencies.
+//!
+//! Scope: request/status line + headers + `Content-Length` bodies,
+//! keep-alive by default (HTTP/1.1 semantics, `Connection: close`
+//! honored both ways). Deliberately **not** implemented: chunked
+//! transfer encoding, pipelining, TLS, HTTP/2 — inference requests are
+//! small JSON bodies and the same codec serves both directions
+//! (listener and [`crate::serve::loadgen`] client), so the two ends can
+//! never disagree about framing.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Hard cap on accumulated header bytes per message (anti-abuse).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Errors from the HTTP codec, split so the server can map them to the
+/// right status code (413 vs 400) instead of closing blind.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before a request line — the peer closed a keep-alive
+    /// connection between requests.
+    Eof,
+    /// The socket read timed out with no bytes consumed (idle keep-alive
+    /// connection) — safe to poll again or close.
+    IdleTimeout,
+    /// Body larger than the configured cap (→ 413).
+    BodyTooLarge { limit: usize },
+    /// Anything that violates the grammar (→ 400 / close).
+    Malformed(String),
+    Io(io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Eof => write!(f, "connection closed"),
+            HttpError::IdleTimeout => write!(f, "idle timeout"),
+            HttpError::BodyTooLarge { limit } => {
+                write!(f, "request body exceeds {limit} bytes")
+            }
+            HttpError::Malformed(m) => write!(f, "malformed HTTP message: {m}"),
+            HttpError::Io(e) => write!(f, "http i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+fn malformed(m: impl Into<String>) -> HttpError {
+    HttpError::Malformed(m.into())
+}
+
+/// A parsed request (server side) or a request to send (client side).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Peer asked to close after this exchange (HTTP/1.0 without
+    /// keep-alive, or an explicit `Connection: close`).
+    pub close: bool,
+}
+
+impl Request {
+    pub fn new(method: &str, path: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+            close: false,
+        }
+    }
+
+    /// Attach a JSON body (sets `Content-Type`).
+    pub fn json(mut self, body: String) -> Request {
+        self.headers
+            .push(("content-type".to_string(), "application/json".to_string()));
+        self.body = body.into_bytes();
+        self
+    }
+
+    /// First header value under `name`, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response to send (server side) or a parsed response (client side).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".to_string(), "application/json".to_string())],
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".to_string(), "text/plain; charset=utf-8".to_string())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Add a header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// First header value under `name`, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy — bodies we emit are always UTF-8).
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Read one line (terminated by `\n`), enforcing the running header-byte
+/// budget. Distinguishes idle timeouts (no bytes consumed) from
+/// mid-message truncation.
+fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<String, HttpError> {
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => {
+            return Err(if line.is_empty() {
+                HttpError::Eof
+            } else {
+                malformed("truncated line")
+            })
+        }
+        Ok(_) => {}
+        Err(e)
+            if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut =>
+        {
+            // A read timeout with nothing buffered is a quiet keep-alive
+            // connection; with partial bytes it is an unrecoverable
+            // mid-message stall (framing is lost either way we'd retry).
+            return Err(if line.is_empty() {
+                HttpError::IdleTimeout
+            } else {
+                malformed("read timed out mid-line")
+            });
+        }
+        Err(e) => return Err(HttpError::Io(e)),
+    }
+    *budget = budget
+        .checked_sub(line.len())
+        .ok_or_else(|| malformed(format!("headers exceed {MAX_HEADER_BYTES} bytes")))?;
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Parse `k: v` header lines until the blank separator; returns the
+/// lowercased-name pairs and whether `Connection: close` was present.
+fn read_headers(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+) -> Result<(Vec<(String, String)>, bool), HttpError> {
+    let mut headers = Vec::new();
+    let mut close = false;
+    loop {
+        let line = match read_line(r, budget) {
+            Ok(l) => l,
+            Err(HttpError::Eof) => return Err(malformed("eof inside headers")),
+            Err(HttpError::IdleTimeout) => return Err(malformed("timeout inside headers")),
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            return Ok((headers, close));
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| malformed(format!("header without ':': {line:?}")))?;
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "connection" && v.eq_ignore_ascii_case("close") {
+            close = true;
+        }
+        headers.push((k, v));
+    }
+}
+
+fn read_body(
+    r: &mut impl BufRead,
+    headers: &[(String, String)],
+    max_body: usize,
+) -> Result<Vec<u8>, HttpError> {
+    let len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| {
+            v.parse::<usize>()
+                .map_err(|_| malformed(format!("bad content-length {v:?}")))
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if len > max_body {
+        return Err(HttpError::BodyTooLarge { limit: max_body });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|_| malformed("body shorter than content-length"))?;
+    Ok(body)
+}
+
+/// Server side: read one request off a (buffered) connection.
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<Request, HttpError> {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_line(r, &mut budget)?;
+    let mut parts = line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(malformed(format!("bad request line {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("unsupported version {version:?}")));
+    }
+    let http10 = version == "HTTP/1.0";
+    let (headers, mut close) = read_headers(r, &mut budget)?;
+    if http10 {
+        // 1.0 closes unless keep-alive was requested explicitly.
+        close = !headers
+            .iter()
+            .any(|(k, v)| k == "connection" && v.eq_ignore_ascii_case("keep-alive"));
+    }
+    let body = read_body(r, &headers, max_body)?;
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+        close,
+    })
+}
+
+/// Server side: serialize a response. `keep_alive = false` adds
+/// `Connection: close` (the caller then closes the stream).
+pub fn write_response(
+    w: &mut impl Write,
+    resp: &Response,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-length: {}\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.body.len()
+    );
+    for (k, v) in &resp.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    if !keep_alive {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+/// Client side: serialize a request.
+pub fn write_request(w: &mut impl Write, req: &Request) -> io::Result<()> {
+    let mut head = format!(
+        "{} {} HTTP/1.1\r\ncontent-length: {}\r\n",
+        req.method,
+        req.path,
+        req.body.len()
+    );
+    for (k, v) in &req.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&req.body)?;
+    w.flush()
+}
+
+/// Client side: read one response.
+pub fn read_response(r: &mut impl BufRead, max_body: usize) -> Result<Response, HttpError> {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_line(r, &mut budget)?;
+    let mut parts = line.split_ascii_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| malformed(format!("bad status in {line:?}")))?,
+        _ => return Err(malformed(format!("bad status line {line:?}"))),
+    };
+    let (headers, _) = read_headers(r, &mut budget)?;
+    let body = read_body(r, &headers, max_body)?;
+    Ok(Response {
+        status,
+        headers,
+        body,
+    })
+}
+
+/// A keep-alive HTTP client over one TCP connection — what the load
+/// generator and `repro reload` drive requests through.
+pub struct HttpClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// Response-body cap for the client (metrics dumps stay well under this).
+const CLIENT_MAX_BODY: usize = 8 * 1024 * 1024;
+
+impl HttpClient {
+    /// Connect with a connect/read/write timeout.
+    pub fn connect(addr: &str, timeout: Duration) -> io::Result<HttpClient> {
+        let sockaddr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "unresolvable address"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Adjust the read timeout (e.g. to a per-request deadline + slack).
+    pub fn set_read_timeout(&mut self, t: Duration) -> io::Result<()> {
+        self.writer.set_read_timeout(Some(t))
+    }
+
+    /// One request/response exchange on the persistent connection.
+    pub fn request(&mut self, req: &Request) -> Result<Response, HttpError> {
+        write_request(&mut self.writer, req)?;
+        read_response(&mut self.reader, CLIENT_MAX_BODY)
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an `f32` slice as a JSON array using shortest-round-trip float
+/// formatting — parsing the text back (f64 parse, cast to f32) recovers
+/// each value **bit-exactly**, which is what lets the loopback tests
+/// compare socket replies against the in-process path with `==`.
+pub fn json_f32_array(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 8 + 2);
+    out.push('[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        debug_assert!(x.is_finite(), "non-finite logit cannot be JSON-encoded");
+        out.push_str(&format!("{x}"));
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request::new("POST", "/v1/infer").json("{\"input\":[1,2]}".to_string());
+        let mut wire = Vec::new();
+        write_request(&mut wire, &req).unwrap();
+        let got = read_request(&mut Cursor::new(&wire), 1 << 20).unwrap();
+        assert_eq!(got.method, "POST");
+        assert_eq!(got.path, "/v1/infer");
+        assert_eq!(got.body, req.body);
+        assert_eq!(got.header("content-type"), Some("application/json"));
+        assert!(!got.close);
+    }
+
+    #[test]
+    fn response_roundtrip_and_close_header() {
+        let resp = Response::json(429, "{\"error\":\"backpressure\"}".to_string())
+            .with_header("retry-after", "1");
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp, false).unwrap();
+        let got = read_response(&mut Cursor::new(&wire), 1 << 20).unwrap();
+        assert_eq!(got.status, 429);
+        assert_eq!(got.header("retry-after"), Some("1"));
+        assert_eq!(got.header("connection"), Some("close"));
+        assert_eq!(got.body, resp.body);
+    }
+
+    #[test]
+    fn connection_close_and_http10_semantics() {
+        let wire = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let got = read_request(&mut Cursor::new(&wire[..]), 1024).unwrap();
+        assert!(got.close);
+        let wire = b"GET /healthz HTTP/1.0\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&wire[..]), 1024).unwrap().close);
+        let wire = b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        assert!(!read_request(&mut Cursor::new(&wire[..]), 1024).unwrap().close);
+    }
+
+    #[test]
+    fn eof_before_request_is_clean() {
+        assert!(matches!(
+            read_request(&mut Cursor::new(b"" as &[u8]), 1024),
+            Err(HttpError::Eof)
+        ));
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_limit() {
+        let wire = b"POST /v1/infer HTTP/1.1\r\ncontent-length: 100\r\n\r\n";
+        match read_request(&mut Cursor::new(&wire[..]), 10) {
+            Err(HttpError::BodyTooLarge { limit: 10 }) => {}
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_messages_are_typed_errors() {
+        for wire in [
+            &b"NOT-HTTP\r\n\r\n"[..],
+            &b"GET /x HTTP/2.0\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\ncontent-length: 5\r\n\r\nab"[..],
+        ] {
+            assert!(
+                matches!(read_request(&mut Cursor::new(wire), 1024), Err(HttpError::Malformed(_))),
+                "accepted: {:?}",
+                String::from_utf8_lossy(wire)
+            );
+        }
+    }
+
+    #[test]
+    fn f32_array_roundtrips_bit_exactly() {
+        use crate::util::json;
+        let xs = [0.1f32, -3.75, 1.0e-20, 123456.78, f32::MIN_POSITIVE, 0.0];
+        let text = json_f32_array(&xs);
+        let doc = json::parse(&text).unwrap();
+        let back: Vec<f32> = doc.items().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn json_escape_covers_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

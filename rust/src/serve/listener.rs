@@ -1,0 +1,267 @@
+//! TCP accept loop and lifecycle: bind → accept → thread-per-connection,
+//! with graceful drain on SIGTERM or admin request.
+//!
+//! The listener socket is nonblocking and the accept loop polls a stop
+//! flag between attempts, so "stop accepting" takes effect within
+//! milliseconds without needing epoll or self-pipes. Shutdown order is
+//! the invariant that makes drain graceful:
+//!
+//! 1. stop accepting (new connections get RST once the socket closes);
+//! 2. wait for the admission gauge to reach zero — every in-flight
+//!    request has been answered;
+//! 3. drop the route table, which flushes worker batchers and joins
+//!    worker threads ([`crate::coordinator::server::InferenceServer`]'s
+//!    drop path).
+//!
+//! Signal handling is a raw `signal(2)` FFI binding (no libc crate):
+//! the handler only stores into a static `AtomicBool`, which the serve
+//! loop polls — the async-signal-safe minimum.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::serve::conn::{handle_conn, ServeState};
+
+/// How long the accept loop sleeps when there is nothing to accept.
+const ACCEPT_IDLE: Duration = Duration::from_millis(2);
+
+/// A running server: bound address plus the handles needed to stop it.
+pub struct ServeHandle {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<thread::JoinHandle<()>>,
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+/// accepting. Returns once the socket is listening.
+pub fn serve(addr: &str, state: Arc<ServeState>) -> io::Result<ServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        thread::Builder::new()
+            .name("cer-serve-accept".to_string())
+            .spawn(move || accept_loop(listener, state, stop))
+            .expect("spawn accept loop")
+    };
+    Ok(ServeHandle {
+        addr: local,
+        state,
+        stop,
+        acceptor: Some(acceptor),
+    })
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServeState>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The connection socket is blocking with a short read
+                // timeout; handle_conn polls `stop` between requests.
+                let _ = stream.set_nonblocking(false);
+                let state = Arc::clone(&state);
+                let stop = Arc::clone(&stop);
+                let _ = thread::Builder::new()
+                    .name("cer-serve-conn".to_string())
+                    .spawn(move || handle_conn(stream, &state, &stop));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_IDLE),
+            Err(_) => thread::sleep(ACCEPT_IDLE),
+        }
+    }
+}
+
+impl ServeHandle {
+    /// The actually bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared server state (metrics, admission, router).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Stop admitting new inference requests; health/metrics stay up.
+    pub fn begin_drain(&self) {
+        self.state.begin_drain();
+    }
+
+    /// True once an admin `/admin/shutdown` request has been served.
+    pub fn shutdown_requested(&self) -> bool {
+        self.state.shutdown_requested.load(Ordering::Acquire)
+    }
+
+    /// Graceful shutdown: stop accepting, wait (up to `timeout`) for all
+    /// in-flight requests to be answered, then drain the worker plane.
+    /// Returns `true` when everything finished inside the timeout.
+    pub fn shutdown(mut self, timeout: Duration) -> bool {
+        self.begin_drain();
+        self.stop.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let deadline = Instant::now() + timeout;
+        let mut clean = true;
+        while self.state.admission.inflight() > 0 {
+            if Instant::now() >= deadline {
+                clean = false;
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        // Flush batchers and join worker threads. Connection threads
+        // notice `stop` within their 250ms read timeout and exit on
+        // their own; they hold no endpoint references while idle.
+        self.state.router.shutdown();
+        clean
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sig {
+    use std::os::raw::c_int;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static TERM: AtomicBool = AtomicBool::new(false);
+
+    type SigHandler = extern "C" fn(c_int);
+
+    extern "C" {
+        /// POSIX `signal(2)` — bound directly to avoid a libc dep. The
+        /// return value (previous handler) is deliberately opaque.
+        fn signal(signum: c_int, handler: SigHandler) -> usize;
+    }
+
+    extern "C" fn on_term(_sig: c_int) {
+        // Only an atomic store: the async-signal-safe whitelist.
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+    }
+}
+
+/// Arm the SIGTERM/SIGINT → drain flag. Safe to call more than once.
+pub fn install_term_handler() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+/// True once SIGTERM or SIGINT has been delivered (always false on
+/// non-unix, where only admin-endpoint shutdown is available).
+pub fn termination_requested() -> bool {
+    #[cfg(unix)]
+    {
+        sig::TERM.load(std::sync::atomic::Ordering::SeqCst)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::engine::Engine;
+    use crate::coordinator::server::ServerConfig;
+    use crate::formats::{Dense, FormatKind};
+    use crate::serve::conn::ServeOptions;
+    use crate::serve::http::{HttpClient, Request};
+    use crate::serve::reload::HotRouter;
+    use crate::util::rng::Rng;
+
+    fn spawn_server() -> (ServeHandle, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("listener-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("listener.cerpack");
+        let mut rng = Rng::new(5);
+        let d = Dense::from_vec(3, 5, (0..15).map(|_| rng.f32() - 0.5).collect());
+        let e = Engine::native_fixed(vec![("fc".to_string(), d, vec![0.0; 3])], FormatKind::Cser);
+        e.save_pack(&path, "net", "test").unwrap();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay_us: 100,
+            },
+            threads: Some(1),
+        };
+        let router = HotRouter::new(cfg, 1);
+        router.add_pack("net", &path).unwrap();
+        let state = ServeState::new(router, ServeOptions::default());
+        let handle = serve("127.0.0.1:0", state).unwrap();
+        (handle, path)
+    }
+
+    #[test]
+    fn accepts_requests_and_shuts_down_cleanly() {
+        let (handle, path) = spawn_server();
+        let addr = handle.addr().to_string();
+        let mut client = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+        let health = client
+            .request(&Request::new("GET", "/healthz"))
+            .unwrap();
+        assert_eq!(health.status, 200);
+        assert!(health.body_str().contains("\"net\""));
+        let infer = client
+            .request(
+                &Request::new("POST", "/v1/infer").json("{\"input\":[1,0,1,0,1]}".to_string()),
+            )
+            .unwrap();
+        assert_eq!(infer.status, 200, "{}", infer.body_str());
+        assert!(handle.shutdown(Duration::from_secs(5)), "drain timed out");
+        // Socket must be gone.
+        assert!(HttpClient::connect(&addr, Duration::from_millis(300)).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn keep_alive_connection_survives_multiple_requests() {
+        let (handle, path) = spawn_server();
+        let mut client =
+            HttpClient::connect(&handle.addr().to_string(), Duration::from_secs(2)).unwrap();
+        let mut bodies = Vec::new();
+        for _ in 0..5 {
+            let r = client
+                .request(
+                    &Request::new("POST", "/v1/infer")
+                        .json("{\"input\":[0.5,0.5,0.5,0.5,0.5]}".to_string()),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200);
+            bodies.push(r.body_str().into_owned());
+        }
+        assert!(bodies.windows(2).all(|w| w[0] == w[1]), "nondeterministic replies");
+        assert!(handle.shutdown(Duration::from_secs(5)));
+        let _ = std::fs::remove_file(&path);
+    }
+}

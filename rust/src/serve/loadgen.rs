@@ -1,0 +1,677 @@
+//! Load generator for the network front end: closed-loop and open-loop
+//! (Poisson) modes, emitting `BENCH_serve.json`.
+//!
+//! The two modes answer different questions. **Closed-loop** (N clients,
+//! each fire-and-wait) measures peak sustainable throughput — but its
+//! latency numbers self-throttle under overload. **Open-loop** draws
+//! inter-arrival gaps from an exponential distribution at a fixed
+//! offered rate and measures each request's latency from its *scheduled*
+//! arrival time, not from when a client thread got around to sending it
+//! — the standard fix for coordinated omission, so queueing delay under
+//! overload is charged to the server, not hidden by the client.
+//!
+//! Sweeping offered rates produces the throughput-vs-p99 curve; the
+//! *knee* is the highest rate the server still absorbs (achieved ≥ 90%
+//! of offered, p99 within 5× of the lightly-loaded baseline).
+
+use std::path::Path;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::serve::http::{json_f32_array, HttpClient, Request};
+use crate::util::json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One load-generation run (possibly several steps).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Closed-loop client counts to sweep (one step each).
+    pub concurrency: Vec<usize>,
+    /// Open-loop offered rates (requests/s) to sweep (one step each).
+    pub rates: Vec<f64>,
+    /// Duration of each step.
+    pub duration_ms: u64,
+    /// Connections (worker threads) for open-loop steps.
+    pub conns: usize,
+    /// Deadline attached to every request.
+    pub deadline_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            concurrency: vec![4],
+            rates: vec![200.0, 400.0, 800.0],
+            duration_ms: 2_000,
+            conns: 4,
+            deadline_ms: 1_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Counters + latency distribution for one worker or one merged step.
+#[derive(Default)]
+struct StepStats {
+    requests: u64,
+    ok: u64,
+    rejected_429: u64,
+    timeout_504: u64,
+    errors: u64,
+    latency_sum_us: u64,
+    hist: LatencyHistogram,
+}
+
+impl StepStats {
+    fn record(&mut self, status: u16, us: u64) {
+        self.requests += 1;
+        match status {
+            200 => {
+                self.ok += 1;
+                self.latency_sum_us += us;
+                self.hist.record_us(us);
+            }
+            429 => self.rejected_429 += 1,
+            504 => self.timeout_504 += 1,
+            _ => self.errors += 1,
+        }
+    }
+
+    fn absorb(&mut self, other: &StepStats) {
+        self.requests += other.requests;
+        self.ok += other.ok;
+        self.rejected_429 += other.rejected_429;
+        self.timeout_504 += other.timeout_504;
+        self.errors += other.errors;
+        self.latency_sum_us += other.latency_sum_us;
+        self.hist.absorb(&other.hist);
+    }
+}
+
+/// One measured step of the sweep.
+pub struct StepResult {
+    pub mode: &'static str,
+    pub concurrency: usize,
+    /// Offered rate (open-loop); 0 for closed-loop.
+    pub rate: f64,
+    pub requests: u64,
+    pub ok: u64,
+    pub rejected_429: u64,
+    pub timeout_504: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    pub mean_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl StepResult {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / self.elapsed_s
+    }
+
+    fn from_stats(
+        mode: &'static str,
+        concurrency: usize,
+        rate: f64,
+        stats: &StepStats,
+        elapsed_s: f64,
+    ) -> StepResult {
+        StepResult {
+            mode,
+            concurrency,
+            rate,
+            requests: stats.requests,
+            ok: stats.ok,
+            rejected_429: stats.rejected_429,
+            timeout_504: stats.timeout_504,
+            errors: stats.errors,
+            elapsed_s,
+            mean_us: if stats.ok == 0 {
+                0
+            } else {
+                stats.latency_sum_us / stats.ok
+            },
+            p50_us: stats.hist.p50(),
+            p99_us: stats.hist.p99(),
+            p999_us: stats.hist.p999(),
+        }
+    }
+}
+
+/// Ask `/healthz` which pack is served and what input size it expects.
+pub fn discover(addr: &str) -> Result<(String, usize)> {
+    let mut client = HttpClient::connect(addr, Duration::from_secs(3))
+        .with_context(|| format!("connecting to {addr}"))?;
+    let health = client
+        .request(&Request::new("GET", "/healthz"))
+        .map_err(|e| anyhow!("healthz: {e}"))?;
+    if health.status != 200 {
+        bail!("healthz returned {}", health.status);
+    }
+    let doc = json::parse(&health.body_str()).map_err(|e| anyhow!("healthz body: {e}"))?;
+    let pack = doc
+        .get("packs")
+        .map(|p| p.items())
+        .and_then(|items| items.first())
+        .ok_or_else(|| anyhow!("server has no packs registered"))?;
+    let name = pack
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("healthz pack missing name"))?
+        .to_string();
+    let in_dim = pack
+        .get("in_dim")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("healthz pack missing in_dim"))? as usize;
+    Ok((name, in_dim))
+}
+
+/// Deterministic request body for (pack, in_dim, seed).
+fn request_body(pack: &str, in_dim: usize, deadline_ms: u64, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let input: Vec<f32> = (0..in_dim).map(|_| rng.f32() - 0.5).collect();
+    format!(
+        "{{\"pack\":\"{pack}\",\"deadline_ms\":{deadline_ms},\"input\":{}}}",
+        json_f32_array(&input)
+    )
+}
+
+fn infer_request(body: &str) -> Request {
+    Request::new("POST", "/v1/infer").json(body.to_string())
+}
+
+fn client_timeout(deadline_ms: u64) -> Duration {
+    Duration::from_millis(deadline_ms) + Duration::from_secs(2)
+}
+
+/// Closed loop: `concurrency` clients, each sending back-to-back until
+/// the step ends.
+pub fn closed_step(
+    addr: &str,
+    body: &str,
+    concurrency: usize,
+    duration: Duration,
+    deadline_ms: u64,
+) -> StepResult {
+    let start = Instant::now();
+    let end = start + duration;
+    let mut joins = Vec::new();
+    for _ in 0..concurrency.max(1) {
+        let addr = addr.to_string();
+        let req = infer_request(body);
+        joins.push(thread::spawn(move || {
+            let mut stats = StepStats::default();
+            let mut client = HttpClient::connect(&addr, client_timeout(deadline_ms)).ok();
+            while Instant::now() < end {
+                let Some(c) = client.as_mut() else {
+                    stats.errors += 1;
+                    client = HttpClient::connect(&addr, client_timeout(deadline_ms)).ok();
+                    thread::sleep(Duration::from_millis(10));
+                    continue;
+                };
+                let t = Instant::now();
+                match c.request(&req) {
+                    Ok(resp) => stats.record(resp.status, t.elapsed().as_micros() as u64),
+                    Err(_) => {
+                        stats.errors += 1;
+                        stats.requests += 1;
+                        client = None;
+                    }
+                }
+            }
+            stats
+        }));
+    }
+    let mut merged = StepStats::default();
+    for j in joins {
+        if let Ok(s) = j.join() {
+            merged.absorb(&s);
+        }
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    StepResult::from_stats("closed", concurrency, 0.0, &merged, elapsed_s)
+}
+
+/// Open loop: a generator schedules Poisson arrivals; `conns` workers
+/// send them, measuring latency from the scheduled instant.
+pub fn open_step(
+    addr: &str,
+    body: &str,
+    rate: f64,
+    conns: usize,
+    duration: Duration,
+    deadline_ms: u64,
+    seed: u64,
+) -> StepResult {
+    let start = Instant::now();
+    let end = start + duration;
+    // Backlog bound: under overload the generator blocks here instead of
+    // allocating unboundedly; workers still charge lateness to latency.
+    let (tx, rx) = sync_channel::<Instant>(1024);
+    let generator = thread::spawn(move || {
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut t = Instant::now();
+        loop {
+            // Exponential inter-arrival gap with mean 1/rate.
+            let gap = -(1.0 - rng.f64()).ln() / rate.max(1e-9);
+            t += Duration::from_secs_f64(gap);
+            if t >= end || tx.send(t).is_err() {
+                break;
+            }
+        }
+    });
+    let rx = Arc::new(Mutex::new(rx));
+    let mut joins = Vec::new();
+    for _ in 0..conns.max(1) {
+        let addr = addr.to_string();
+        let req = infer_request(body);
+        let rx: Arc<Mutex<Receiver<Instant>>> = Arc::clone(&rx);
+        joins.push(thread::spawn(move || {
+            let mut stats = StepStats::default();
+            let mut client = HttpClient::connect(&addr, client_timeout(deadline_ms)).ok();
+            loop {
+                let scheduled = {
+                    let guard = rx.lock().unwrap();
+                    match guard.recv() {
+                        Ok(t) => t,
+                        Err(_) => break,
+                    }
+                };
+                let now = Instant::now();
+                if scheduled > now {
+                    thread::sleep(scheduled - now);
+                }
+                let Some(c) = client.as_mut() else {
+                    stats.requests += 1;
+                    stats.errors += 1;
+                    client = HttpClient::connect(&addr, client_timeout(deadline_ms)).ok();
+                    continue;
+                };
+                match c.request(&req) {
+                    // Coordinated-omission-free: latency from the
+                    // *scheduled* arrival, so time spent queued behind a
+                    // slow server counts against the server.
+                    Ok(resp) => {
+                        stats.record(resp.status, scheduled.elapsed().as_micros() as u64)
+                    }
+                    Err(_) => {
+                        stats.requests += 1;
+                        stats.errors += 1;
+                        client = None;
+                    }
+                }
+            }
+            stats
+        }));
+    }
+    let _ = generator.join();
+    let mut merged = StepStats::default();
+    for j in joins {
+        if let Ok(s) = j.join() {
+            merged.absorb(&s);
+        }
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    StepResult::from_stats("open", conns, rate, &merged, elapsed_s)
+}
+
+/// Verify the socket path end-to-end: `count` deterministic inputs must
+/// come back **bit-identical** to running the pack in-process.
+pub fn verify_against_pack(
+    addr: &str,
+    pack_path: &Path,
+    pack_name: &str,
+    deadline_ms: u64,
+    count: usize,
+    seed: u64,
+) -> Result<()> {
+    use crate::coordinator::engine::Engine;
+    let mut engine = Engine::from_pack(pack_path)
+        .with_context(|| format!("loading reference pack {}", pack_path.display()))?;
+    let in_dim = engine.in_dim();
+    let mut client = HttpClient::connect(addr, client_timeout(deadline_ms))?;
+    let mut rng = Rng::new(seed);
+    for i in 0..count {
+        let input: Vec<f32> = (0..in_dim).map(|_| rng.f32() - 0.5).collect();
+        let body = format!(
+            "{{\"pack\":\"{pack_name}\",\"deadline_ms\":{deadline_ms},\"input\":{}}}",
+            json_f32_array(&input)
+        );
+        let resp = client
+            .request(&infer_request(&body))
+            .map_err(|e| anyhow!("request {i}: {e}"))?;
+        if resp.status != 200 {
+            bail!("request {i}: status {} body {}", resp.status, resp.body_str());
+        }
+        let doc = json::parse(&resp.body_str()).map_err(|e| anyhow!("reply {i}: {e}"))?;
+        let got: Vec<f32> = doc
+            .get("output")
+            .ok_or_else(|| anyhow!("reply {i} missing output"))?
+            .items()
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Option<_>>()
+            .ok_or_else(|| anyhow!("reply {i}: non-numeric output"))?;
+        let want = engine.forward(&input, 1)?;
+        if got.len() != want.len()
+            || got
+                .iter()
+                .zip(&want)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            bail!(
+                "request {i}: socket reply diverges from in-process forward\n  got  {got:?}\n  want {want:?}"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Render results as the `BENCH_serve.json` document.
+pub fn render_json(cfg: &LoadgenConfig, steps: &[StepResult]) -> String {
+    let mut out = String::from("{\n\"config\": {");
+    out.push_str(&format!(
+        "\"duration_ms\": {}, \"deadline_ms\": {}, \"conns\": {}, \"seed\": {}",
+        cfg.duration_ms, cfg.deadline_ms, cfg.conns, cfg.seed
+    ));
+    out.push_str("},\n\"serve\": [\n");
+    for (i, s) in steps.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "  {{\"mode\": \"{}\", \"concurrency\": {}, \"rate\": {}, \"requests\": {}, \
+             \"ok\": {}, \"errors\": {}, \"rejected_429\": {}, \"timeout_504\": {}, \
+             \"throughput_rps\": {}, \"mean_us\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"p999_us\": {}}}",
+            s.mode,
+            s.concurrency,
+            fmt_f64(s.rate),
+            s.requests,
+            s.ok,
+            s.errors,
+            s.rejected_429,
+            s.timeout_504,
+            fmt_f64((s.throughput_rps() * 1000.0).round() / 1000.0),
+            s.mean_us,
+            s.p50_us,
+            s.p99_us,
+            s.p999_us,
+        ));
+    }
+    out.push_str("\n],\n");
+    match knee(steps) {
+        Some(k) => out.push_str(&format!(
+            "\"knee\": {{\"mode\": \"{}\", \"offered_rate\": {}, \"throughput_rps\": {}, \
+             \"p99_us\": {}}}\n",
+            k.mode,
+            fmt_f64(k.rate),
+            fmt_f64((k.throughput_rps() * 1000.0).round() / 1000.0),
+            k.p99_us
+        )),
+        None => out.push_str("\"knee\": null\n"),
+    }
+    out.push('}');
+    out
+}
+
+/// The knee of the throughput/latency curve: the highest offered rate
+/// the server absorbs (≥ 90% achieved, p99 ≤ 5× the lightest step's).
+/// Falls back to the max-throughput closed step when no open-loop step
+/// qualifies.
+pub fn knee(steps: &[StepResult]) -> Option<&StepResult> {
+    let open: Vec<&StepResult> = steps.iter().filter(|s| s.mode == "open" && s.ok > 0).collect();
+    let baseline_p99 = open.iter().map(|s| s.p99_us).min().unwrap_or(0);
+    let absorbed = open
+        .iter()
+        .filter(|s| {
+            s.throughput_rps() >= 0.9 * s.rate && s.p99_us <= baseline_p99.saturating_mul(5).max(1)
+        })
+        .max_by(|a, b| a.rate.partial_cmp(&b.rate).unwrap());
+    absorbed.copied().or_else(|| {
+        steps
+            .iter()
+            .filter(|s| s.mode == "closed" && s.ok > 0)
+            .max_by(|a, b| {
+                a.throughput_rps()
+                    .partial_cmp(&b.throughput_rps())
+                    .unwrap()
+            })
+    })
+}
+
+/// One-line human rendering of a step.
+pub fn describe(s: &StepResult) -> String {
+    format!(
+        "{:>6} {} {:>8.1} rps  ok {:>7}  429 {:>5}  504 {:>5}  err {:>4}  p50 {:>7}µs  p99 {:>7}µs  p999 {:>7}µs",
+        s.mode,
+        if s.mode == "open" {
+            format!("rate {:>7.0}", s.rate)
+        } else {
+            format!("conc {:>7}", s.concurrency)
+        },
+        s.throughput_rps(),
+        s.ok,
+        s.rejected_429,
+        s.timeout_504,
+        s.errors,
+        s.p50_us,
+        s.p99_us,
+        s.p999_us,
+    )
+}
+
+/// Run the configured sweep against a live server and write the bench
+/// artifact. Returns the human-readable summary.
+pub fn run(cfg: &LoadgenConfig, out_path: &Path, verify_pack: Option<&Path>) -> Result<String> {
+    let (pack, in_dim) = discover(&cfg.addr)?;
+    let body = request_body(&pack, in_dim, cfg.deadline_ms, cfg.seed);
+    let mut summary = format!(
+        "target {} pack {pack:?} in_dim {in_dim}, {}ms/step\n",
+        cfg.addr, cfg.duration_ms
+    );
+    if let Some(ref_pack) = verify_pack {
+        verify_against_pack(&cfg.addr, ref_pack, &pack, cfg.deadline_ms, 16, cfg.seed)?;
+        summary.push_str("verify: 16/16 socket replies bit-identical to in-process forward\n");
+    }
+    let duration = Duration::from_millis(cfg.duration_ms);
+    let mut steps = Vec::new();
+    for &c in &cfg.concurrency {
+        let s = closed_step(&cfg.addr, &body, c, duration, cfg.deadline_ms);
+        summary.push_str(&describe(&s));
+        summary.push('\n');
+        steps.push(s);
+    }
+    for (i, &rate) in cfg.rates.iter().enumerate() {
+        let s = open_step(
+            &cfg.addr,
+            &body,
+            rate,
+            cfg.conns,
+            duration,
+            cfg.deadline_ms,
+            cfg.seed.wrapping_add(i as u64),
+        );
+        summary.push_str(&describe(&s));
+        summary.push('\n');
+        steps.push(s);
+    }
+    if steps.iter().all(|s| s.ok == 0) {
+        bail!("no request succeeded — is the server healthy?\n{summary}");
+    }
+    if let Some(k) = knee(&steps) {
+        summary.push_str(&format!(
+            "knee: {} @ {:.1} rps (p99 {}µs)\n",
+            k.mode,
+            k.throughput_rps(),
+            k.p99_us
+        ));
+    }
+    std::fs::write(out_path, render_json(cfg, &steps))
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    summary.push_str(&format!("wrote {}", out_path.display()));
+    Ok(summary)
+}
+
+/// Self-hosted smoke run: spin up a loopback server over a synthesized
+/// pack, drive one closed and one open step, verify bit-exactness, and
+/// emit `BENCH_serve.json`. This is what CI calls.
+pub fn smoke(out_path: &Path, seed: u64) -> Result<String> {
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::engine::Engine;
+    use crate::coordinator::server::ServerConfig;
+    use crate::formats::{Dense, FormatKind};
+    use crate::serve::conn::{ServeOptions, ServeState};
+    use crate::serve::listener::serve;
+    use crate::serve::reload::HotRouter;
+
+    let dir = std::env::temp_dir().join(format!("cer-loadgen-smoke-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let pack_path = dir.join("smoke.cerpack");
+    let mut rng = Rng::new(seed);
+    let mut mk = |rows: usize, cols: usize| {
+        Dense::from_vec(rows, cols, (0..rows * cols).map(|_| rng.f32() - 0.5).collect())
+    };
+    let layers = vec![
+        ("fc0".to_string(), mk(32, 64), vec![0.05; 32]),
+        ("fc1".to_string(), mk(10, 32), vec![0.0; 10]),
+    ];
+    let engine = Engine::native_fixed(layers, FormatKind::Cser);
+    engine
+        .save_pack(&pack_path, "smoke-mlp", "loadgen smoke")
+        .context("saving smoke pack")?;
+
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_delay_us: 200,
+        },
+        threads: Some(1),
+    };
+    let router = HotRouter::new(cfg, 2);
+    router.add_pack("smoke-mlp", &pack_path)?;
+    let state = ServeState::new(router, ServeOptions::default());
+    let handle = serve("127.0.0.1:0", state).map_err(|e| anyhow!("bind: {e}"))?;
+
+    let lg = LoadgenConfig {
+        addr: handle.addr().to_string(),
+        concurrency: vec![2],
+        rates: vec![150.0],
+        duration_ms: 300,
+        conns: 2,
+        deadline_ms: 1_000,
+        seed,
+    };
+    let result = run(&lg, out_path, Some(&pack_path));
+    let drained = handle.shutdown(Duration::from_secs(10));
+    let _ = std::fs::remove_file(&pack_path);
+    let mut summary = result?;
+    if !drained {
+        bail!("smoke server failed to drain");
+    }
+    summary.push_str("\nsmoke server drained cleanly");
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knee_prefers_highest_absorbed_open_rate() {
+        let mk = |mode: &'static str, rate: f64, ok: u64, elapsed: f64, p99: u64| StepResult {
+            mode,
+            concurrency: 2,
+            rate,
+            requests: ok,
+            ok,
+            rejected_429: 0,
+            timeout_504: 0,
+            errors: 0,
+            elapsed_s: elapsed,
+            mean_us: p99 / 2,
+            p50_us: p99 / 2,
+            p99_us: p99,
+            p999_us: p99 * 2,
+        };
+        let steps = vec![
+            mk("closed", 0.0, 5000, 1.0, 900),
+            mk("open", 100.0, 100, 1.0, 1000),   // absorbed
+            mk("open", 400.0, 395, 1.0, 1800),   // absorbed (98%, p99 < 5x)
+            mk("open", 1600.0, 700, 1.0, 90000), // saturated
+        ];
+        let k = knee(&steps).unwrap();
+        assert_eq!((k.mode, k.rate), ("open", 400.0));
+
+        // No qualifying open step → max-throughput closed step.
+        let steps = vec![
+            mk("closed", 0.0, 2000, 1.0, 500),
+            mk("closed", 0.0, 6000, 1.0, 700),
+            mk("open", 9999.0, 10, 1.0, 500_000),
+        ];
+        let k = knee(&steps).unwrap();
+        assert_eq!((k.mode, k.ok), ("closed", 6000));
+
+        assert!(knee(&[]).is_none());
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_carries_tracked_fields() {
+        let cfg = LoadgenConfig::default();
+        let steps = vec![StepResult {
+            mode: "open",
+            concurrency: 4,
+            rate: 200.0,
+            requests: 400,
+            ok: 398,
+            rejected_429: 1,
+            timeout_504: 1,
+            errors: 0,
+            elapsed_s: 2.0,
+            mean_us: 800,
+            p50_us: 700,
+            p99_us: 2500,
+            p999_us: 4000,
+        }];
+        let text = render_json(&cfg, &steps);
+        let doc = json::parse(&text).expect("BENCH_serve.json must parse");
+        let row = &doc.get("serve").unwrap().items()[0];
+        assert_eq!(row.get("mode").unwrap().as_str(), Some("open"));
+        assert_eq!(row.get("throughput_rps").unwrap().as_f64(), Some(199.0));
+        for key in ["p50_us", "p99_us", "p999_us", "mean_us"] {
+            assert!(row.get(key).unwrap().as_f64().is_some(), "missing {key}");
+        }
+        assert!(doc.get("knee").unwrap().get("p99_us").is_some());
+    }
+
+    #[test]
+    fn deterministic_request_body() {
+        let a = request_body("m", 8, 100, 7);
+        let b = request_body("m", 8, 100, 7);
+        assert_eq!(a, b);
+        let doc = json::parse(&a).unwrap();
+        assert_eq!(doc.get("input").unwrap().items().len(), 8);
+        assert_eq!(doc.get("deadline_ms").unwrap().as_f64(), Some(100.0));
+    }
+}

@@ -1,0 +1,48 @@
+//! `cer-serve`: a dependency-free TCP/HTTP front end over the
+//! batcher/worker plane.
+//!
+//! The serving plane built in [`crate::coordinator`] — [`InferenceServer`]
+//! workers behind a dynamic [`Batcher`], routed per pack — only spoke
+//! in-process function calls. This module puts a socket in front of it
+//! without adding a single external crate:
+//!
+//! * [`http`] — minimal HTTP/1.1 codec (both directions, so server and
+//!   load generator share one framing implementation);
+//! * [`admission`] — a bounded in-flight budget answered with
+//!   `429 + Retry-After` instead of unbounded queueing;
+//! * [`reload`] — [`HotRouter`], the route table whose per-name
+//!   [`Arc`]-swap gives live pack hot-reload under traffic;
+//! * [`conn`] — per-connection dispatch: `POST /v1/infer` (JSON),
+//!   `GET /healthz`, `GET /metrics`, and the `/admin/*` plane, with
+//!   per-request deadlines (`504` before a worker is ever touched);
+//! * [`listener`] — nonblocking accept loop, SIGTERM → graceful drain
+//!   (stop accepting, answer in-flight, flush workers, exit 0);
+//! * [`loadgen`] — closed-loop and open-loop Poisson load generation
+//!   with coordinated-omission-free latency, emitting
+//!   `BENCH_serve.json` (throughput-vs-p99 sweep + knee point).
+//!
+//! Request lifecycle: socket → [`conn::handle_conn`] → admission permit
+//! → [`HotRouter::endpoint`] → `WorkerSet::submit` → batcher → worker →
+//! response. Everything that can reject a request (drain, parse error,
+//! unknown pack, wrong dimension, expired deadline, full admission)
+//! happens before `submit`, so overload answers cost microseconds and
+//! never occupy a worker.
+//!
+//! [`InferenceServer`]: crate::coordinator::server::InferenceServer
+//! [`Batcher`]: crate::coordinator::batcher::Batcher
+//! [`HotRouter`]: reload::HotRouter
+//! [`HotRouter::endpoint`]: reload::HotRouter::endpoint
+//! [`Arc`]: std::sync::Arc
+
+pub mod admission;
+pub mod conn;
+pub mod http;
+pub mod listener;
+pub mod loadgen;
+pub mod reload;
+
+pub use admission::Admission;
+pub use conn::{ServeOptions, ServeState};
+pub use listener::{install_term_handler, serve, termination_requested, ServeHandle};
+pub use loadgen::LoadgenConfig;
+pub use reload::{HotRouter, PackEndpoint};

@@ -1,0 +1,242 @@
+//! Live pack hot-reload: atomically swap the model behind a route name
+//! while requests are in flight.
+//!
+//! A [`HotRouter`] maps route names to [`PackEndpoint`]s, each owning a
+//! [`WorkerSet`] built over one shared [`Arc<PackMap>`]. Reload builds
+//! the replacement endpoint **outside** the lock (mmap, parse, spawn
+//! workers, probe dims), then swaps the `Arc` under a brief write lock.
+//! Requests that resolved the old endpoint before the swap keep their
+//! own `Arc` clone and finish against the old workers; when the last
+//! clone drops, `WorkerSet`'s drop path flushes in-flight batches and
+//! joins the worker threads, and only then is the old `Arc<PackMap>`
+//! (and its mmap) released — there is no instant at which a request can
+//! observe half-swapped state.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::server::{ServerConfig, WorkerSet};
+use crate::pack::map::PackMap;
+use anyhow::{anyhow, Context, Result};
+
+/// One serveable model: a named pack and the workers executing it.
+pub struct PackEndpoint {
+    pub name: String,
+    pub workers: WorkerSet,
+    /// The storage every worker's engine shares (kept here so tests can
+    /// observe its release via a `Weak`).
+    pub map: Arc<PackMap>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Monotonic per-route version, bumped by each successful reload.
+    pub generation: u64,
+    /// Path the pack was loaded from (reported on /healthz).
+    pub source: PathBuf,
+}
+
+/// Route table with atomic per-name endpoint swap.
+pub struct HotRouter {
+    routes: RwLock<Vec<Arc<PackEndpoint>>>,
+    cfg: ServerConfig,
+    workers_per_pack: usize,
+}
+
+impl HotRouter {
+    pub fn new(cfg: ServerConfig, workers_per_pack: usize) -> HotRouter {
+        HotRouter {
+            routes: RwLock::new(Vec::new()),
+            cfg,
+            workers_per_pack: workers_per_pack.max(1),
+        }
+    }
+
+    /// Build an endpoint from a `.cerpack` file: one shared mmap, one
+    /// engine per worker, dims probed from a scratch engine.
+    fn build_endpoint(&self, name: &str, path: &Path, generation: u64) -> Result<PackEndpoint> {
+        let map = PackMap::open(path)
+            .with_context(|| format!("opening pack {}", path.display()))?;
+        let probe = Engine::from_pack_map(&map)
+            .with_context(|| format!("parsing pack {}", path.display()))?;
+        let (in_dim, out_dim) = (probe.in_dim(), probe.out_dim());
+        drop(probe);
+        let build_map = Arc::clone(&map);
+        let workers = WorkerSet::spawn(self.workers_per_pack, self.cfg, move |_| {
+            Engine::from_pack_map(&build_map)
+        });
+        Ok(PackEndpoint {
+            name: name.to_string(),
+            workers,
+            map,
+            in_dim,
+            out_dim,
+            generation,
+            source: path.to_path_buf(),
+        })
+    }
+
+    /// Register a new route (errors if the name already exists — use
+    /// [`HotRouter::reload`] to replace).
+    pub fn add_pack(&self, name: &str, path: &Path) -> Result<()> {
+        let endpoint = Arc::new(self.build_endpoint(name, path, 0)?);
+        let mut routes = self.routes.write().unwrap();
+        if routes.iter().any(|e| e.name == name) {
+            return Err(anyhow!("route {name:?} already registered"));
+        }
+        routes.push(endpoint);
+        Ok(())
+    }
+
+    /// Resolve a route to its current endpoint. The returned `Arc` pins
+    /// the endpoint (workers + storage) for the caller's lifetime, so a
+    /// concurrent reload cannot pull it out from under an in-flight
+    /// request.
+    pub fn endpoint(&self, name: &str) -> Option<Arc<PackEndpoint>> {
+        self.routes
+            .read()
+            .unwrap()
+            .iter()
+            .find(|e| e.name == name)
+            .cloned()
+    }
+
+    /// All current endpoints (healthz / metrics snapshot).
+    pub fn endpoints(&self) -> Vec<Arc<PackEndpoint>> {
+        self.routes.read().unwrap().clone()
+    }
+
+    /// Registered route names.
+    pub fn names(&self) -> Vec<String> {
+        self.routes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|e| e.name.clone())
+            .collect()
+    }
+
+    /// Atomically replace the pack behind `name` with `path`. All the
+    /// expensive, fallible work happens before the write lock; the swap
+    /// itself is one pointer store. Returns the new generation.
+    pub fn reload(&self, name: &str, path: &Path) -> Result<u64> {
+        let current = self.endpoint(name).ok_or_else(|| {
+            anyhow!(
+                "unknown route {name:?} (known: {})",
+                self.names().join(", ")
+            )
+        })?;
+        let generation = current.generation + 1;
+        drop(current);
+        let fresh = Arc::new(self.build_endpoint(name, path, generation)?);
+        let mut routes = self.routes.write().unwrap();
+        let slot = routes
+            .iter_mut()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("route {name:?} disappeared during reload"))?;
+        *slot = fresh;
+        Ok(generation)
+        // The displaced Arc<PackEndpoint> drops here if no request holds
+        // it; otherwise when the last in-flight holder finishes.
+    }
+
+    /// Drain every route: swap the table empty, then drop (= flush and
+    /// join) each endpoint this thread holds the last reference to.
+    pub fn shutdown(&self) {
+        let drained: Vec<Arc<PackEndpoint>> = {
+            let mut routes = self.routes.write().unwrap();
+            std::mem::take(&mut *routes)
+        };
+        drop(drained);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::formats::{Dense, FormatKind};
+    use crate::util::rng::Rng;
+    use std::sync::Weak;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let mut rng = Rng::new(seed);
+        let d = Dense::from_vec(8, 12, (0..8 * 12).map(|_| rng.f32() - 0.5).collect());
+        let bias = (0..8).map(|_| rng.f32()).collect();
+        Engine::native_fixed(vec![("fc".to_string(), d, bias)], FormatKind::Csr)
+    }
+
+    fn write_pack(dir: &Path, name: &str, seed: u64) -> PathBuf {
+        let path = dir.join(format!("{name}.cerpack"));
+        tiny_engine(seed).save_pack(&path, name, "test").unwrap();
+        path
+    }
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay_us: 50,
+            },
+            threads: Some(1),
+        }
+    }
+
+    #[test]
+    fn add_route_resolve_and_infer() {
+        let dir = std::env::temp_dir().join(format!("hotrouter-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_pack(&dir, "add-a", 7);
+        let router = HotRouter::new(cfg(), 1);
+        router.add_pack("a", &p).unwrap();
+        assert!(router.add_pack("a", &p).is_err(), "duplicate name");
+        let ep = router.endpoint("a").unwrap();
+        assert_eq!((ep.in_dim, ep.out_dim, ep.generation), (12, 8, 0));
+        let y = ep.workers.infer_blocking(vec![0.5; 12]).unwrap();
+        assert_eq!(y.len(), 8);
+        assert!(router.endpoint("nope").is_none());
+        router.shutdown();
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn reload_swaps_weights_and_releases_old_map() {
+        let dir = std::env::temp_dir().join(format!("hotrouter-{}-r", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = write_pack(&dir, "reload-1", 1);
+        let p2 = write_pack(&dir, "reload-2", 2);
+        let router = HotRouter::new(cfg(), 1);
+        router.add_pack("m", &p1).unwrap();
+        let x = vec![1.0f32; 12];
+        let old_y = router.endpoint("m").unwrap().workers.infer_blocking(x.clone()).unwrap();
+        let weak: Weak<PackMap> = Arc::downgrade(&router.endpoint("m").unwrap().map);
+
+        assert!(router.reload("missing", &p2).is_err());
+        let generation = router.reload("m", &p2).unwrap();
+        assert_eq!(generation, 1);
+        let new_y = router.endpoint("m").unwrap().workers.infer_blocking(x).unwrap();
+        assert_ne!(old_y, new_y, "different seeds must give different outputs");
+        assert_eq!(router.endpoint("m").unwrap().generation, 1);
+
+        // Old endpoint had no remaining holders: its WorkerSet drained
+        // and the old storage is gone.
+        assert!(weak.upgrade().is_none(), "old Arc<PackMap> still alive");
+        router.shutdown();
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn failed_reload_leaves_route_serving() {
+        let dir = std::env::temp_dir().join(format!("hotrouter-{}-f", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_pack(&dir, "keep", 3);
+        let router = HotRouter::new(cfg(), 1);
+        router.add_pack("m", &p).unwrap();
+        assert!(router.reload("m", Path::new("/nonexistent.cerpack")).is_err());
+        let ep = router.endpoint("m").unwrap();
+        assert_eq!(ep.generation, 0, "failed reload must not bump generation");
+        assert!(ep.workers.infer_blocking(vec![0.0; 12]).is_ok());
+        router.shutdown();
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,16 +1,17 @@
 //! Bench-regression gate: compare a freshly generated bench artifact
-//! (`BENCH_pack.json` / `BENCH_dot.json`) against a committed baseline and
-//! fail on regressions beyond a threshold.
+//! (`BENCH_pack.json` / `BENCH_dot.json` / `BENCH_serve.json`) against a
+//! committed baseline and fail on regressions beyond a threshold.
 //!
 //! Metrics are extracted by walking the JSON tree: array elements are
 //! labeled by their identity fields (`net`, `format`, `threads`, `batch`,
-//! `layer`) so a metric's key is stable across runs even if row order
-//! changes — e.g. `packs[net=lenet5].cold_start_ms`. A metric is
-//! **tracked** when its key name says which direction is better:
+//! `layer`, `mode`, `concurrency`, `rate`) so a metric's key is stable
+//! across runs even if row order changes — e.g.
+//! `packs[net=lenet5].cold_start_ms`. A metric is **tracked** when its
+//! key name says which direction is better:
 //!
-//! * lower-is-better — names ending in `_ms` or `_ns`;
+//! * lower-is-better — names ending in `_ms`, `_ns` or `_us`;
 //! * higher-is-better — `gflops_equiv`, `speedup_vs_1t`, `fused_speedup`,
-//!   `compression_ratio`.
+//!   `compression_ratio`, `throughput_rps`.
 //!
 //! The regression percentage is always oriented so that positive = worse;
 //! anything above the threshold (CI default 25%, generous to runner
@@ -33,15 +34,16 @@ pub struct Metric {
 
 /// Direction of a metric name, if tracked.
 fn tracked(name: &str) -> Option<bool> {
-    const HIGHER: [&str; 4] = [
+    const HIGHER: [&str; 5] = [
         "gflops_equiv",
         "speedup_vs_1t",
         "fused_speedup",
         "compression_ratio",
+        "throughput_rps",
     ];
     if HIGHER.contains(&name) {
         Some(true)
-    } else if name.ends_with("_ms") || name.ends_with("_ns") {
+    } else if name.ends_with("_ms") || name.ends_with("_ns") || name.ends_with("_us") {
         Some(false)
     } else {
         None
@@ -49,7 +51,18 @@ fn tracked(name: &str) -> Option<bool> {
 }
 
 /// Identity fields used to label array elements stably across runs.
-const IDENTITY_KEYS: [&str; 5] = ["net", "format", "threads", "batch", "layer"];
+/// `mode`/`concurrency`/`rate` label the serving sweep rows of
+/// `BENCH_serve.json` (closed-loop vs open-loop steps).
+const IDENTITY_KEYS: [&str; 8] = [
+    "net",
+    "format",
+    "threads",
+    "batch",
+    "layer",
+    "mode",
+    "concurrency",
+    "rate",
+];
 
 fn identity_label(obj: &Json) -> Option<String> {
     let mut parts = Vec::new();
@@ -200,6 +213,9 @@ pub fn gate(baseline: &Json, fresh: &Json, max_regress_pct: f64) -> GateReport {
     let mut report = GateReport::default();
     if base_metrics.is_empty() {
         report.seeding = true;
+        // Surface what *would* be gated so callers can print a loud
+        // per-metric SEEDING warning instead of passing vacuously.
+        report.only_fresh = fresh_metrics.iter().map(|m| m.key.clone()).collect();
         return report;
     }
     for bm in &base_metrics {
@@ -317,6 +333,38 @@ mod tests {
         let r = gate(&base, &fresh, 25.0);
         assert!(r.seeding && r.passed());
         assert!(r.render(10).contains("seeding"));
+        // The would-be-gated metrics are surfaced so the caller can warn
+        // per metric instead of passing silently.
+        assert_eq!(r.only_fresh, vec!["cold_start_ms"]);
+    }
+
+    #[test]
+    fn serve_sweep_rows_are_tracked_with_identity_labels() {
+        let v = doc(
+            r#"{"serve": [
+                {"mode": "open", "concurrency": 4, "rate": 400,
+                 "throughput_rps": 390.0, "p99_us": 2500.0, "requests": 800}
+            ]}"#,
+        );
+        let m = extract_metrics(&v);
+        let tp = m
+            .iter()
+            .find(|x| x.key == "serve[mode=open,concurrency=4,rate=400].throughput_rps")
+            .expect("throughput tracked");
+        assert!(tp.higher_is_better);
+        let p99 = m
+            .iter()
+            .find(|x| x.key == "serve[mode=open,concurrency=4,rate=400].p99_us")
+            .expect("p99 tracked");
+        assert!(!p99.higher_is_better);
+        // Counters with no direction suffix stay untracked.
+        assert!(!m.iter().any(|x| x.key.ends_with(".requests")));
+
+        // Orientation end-to-end: throughput drop + p99 rise both fail.
+        let base = doc(r#"{"serve": [{"mode": "open", "rate": 400, "throughput_rps": 400.0, "p99_us": 1000.0}]}"#);
+        let fresh = doc(r#"{"serve": [{"mode": "open", "rate": 400, "throughput_rps": 200.0, "p99_us": 2000.0}]}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert_eq!(r.failures().count(), 2);
     }
 
     #[test]

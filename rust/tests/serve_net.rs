@@ -1,0 +1,410 @@
+//! End-to-end loopback tests for the `cer-serve` network front end:
+//! real TCP sockets against a real worker plane, proving the PR's
+//! acceptance invariants:
+//!
+//! (a) socket replies are **bit-identical** to the in-process engine;
+//! (b) a full admission queue answers `429 + Retry-After` without
+//!     blocking the listener (health stays up);
+//! (c) an already-expired deadline answers `504` without the request
+//!     ever being admitted or reaching a worker;
+//! (d) hot-reload under fire never serves a torn read — every reply is
+//!     exactly the old weights' output or the new weights' output — and
+//!     the displaced `Arc<PackMap>` is released once drained;
+//! (e) drain/SIGTERM finishes in-flight work and exits cleanly
+//!     (in-process via `ServeHandle::shutdown`, and for real via a
+//!     `repro serve-net` subprocess killed with SIGTERM).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Weak};
+use std::time::{Duration, Instant};
+
+use cer::coordinator::batcher::BatcherConfig;
+use cer::coordinator::engine::Engine;
+use cer::coordinator::server::ServerConfig;
+use cer::formats::{Dense, FormatKind};
+use cer::pack::map::PackMap;
+use cer::serve::http::{json_f32_array, HttpClient, Request};
+use cer::serve::{serve, HotRouter, ServeHandle, ServeOptions, ServeState};
+use cer::util::json;
+use cer::util::Rng;
+
+const IN_DIM: usize = 6;
+const OUT_DIM: usize = 4;
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve-net-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_pack(dir: &Path, file: &str, seed: u64) -> PathBuf {
+    let path = dir.join(format!("{file}.cerpack"));
+    let mut rng = Rng::new(seed);
+    let d = Dense::from_vec(
+        OUT_DIM,
+        IN_DIM,
+        (0..OUT_DIM * IN_DIM).map(|_| rng.f32() - 0.5).collect(),
+    );
+    let bias = (0..OUT_DIM).map(|_| rng.f32() - 0.5).collect();
+    let e = Engine::native_fixed(vec![("fc".to_string(), d, bias)], FormatKind::Cser);
+    e.save_pack(&path, file, "serve-net test").unwrap();
+    path
+}
+
+fn server_cfg(max_batch: usize, max_delay_us: u64) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_delay_us,
+        },
+        threads: Some(1),
+    }
+}
+
+fn spawn(pack: &Path, name: &str, workers: usize, opts: ServeOptions, cfg: ServerConfig) -> ServeHandle {
+    let router = HotRouter::new(cfg, workers);
+    router.add_pack(name, pack).unwrap();
+    serve("127.0.0.1:0", ServeState::new(router, opts)).unwrap()
+}
+
+fn infer_req(input: &[f32]) -> Request {
+    Request::new("POST", "/v1/infer").json(format!("{{\"input\":{}}}", json_f32_array(input)))
+}
+
+/// Parse a 200 reply's `output` array into f32 bit patterns.
+fn output_bits(body: &str) -> Vec<u32> {
+    let doc = json::parse(body).unwrap_or_else(|e| panic!("bad reply {body:?}: {e}"));
+    doc.get("output")
+        .unwrap_or_else(|| panic!("no output in {body:?}"))
+        .items()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn socket_replies_are_bit_identical_to_in_process_engine() {
+    let dir = scratch_dir("exact");
+    let pack = write_pack(&dir, "exact", 42);
+    let mut reference = Engine::from_pack(&pack).unwrap();
+    let handle = spawn(
+        &pack,
+        "exact",
+        2,
+        ServeOptions::default(),
+        server_cfg(8, 100),
+    );
+    let mut client = HttpClient::connect(&handle.addr().to_string(), Duration::from_secs(2)).unwrap();
+
+    let mut rng = Rng::new(7);
+    for trial in 0..16 {
+        let x: Vec<f32> = (0..IN_DIM).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        // The wire uses shortest-roundtrip decimal, so the server parses
+        // back exactly the f32s the reference sees.
+        let want = bits(&reference.forward(&x, 1).unwrap());
+        let resp = client.request(&infer_req(&x)).unwrap();
+        assert_eq!(resp.status, 200, "trial {trial}: {}", resp.body_str());
+        assert_eq!(
+            output_bits(&resp.body_str()),
+            want,
+            "trial {trial}: socket output differs from in-process bits"
+        );
+    }
+    assert!(handle.shutdown(Duration::from_secs(5)));
+    let _ = std::fs::remove_file(&pack);
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn full_admission_answers_429_without_blocking_listener() {
+    let dir = scratch_dir("admit");
+    let pack = write_pack(&dir, "admit", 9);
+    // One in-flight slot, and a batcher that parks the first request for
+    // ~400ms (big batch, long delay) so the slot is provably occupied.
+    let opts = ServeOptions {
+        max_inflight: 1,
+        default_deadline_ms: 5_000,
+        ..ServeOptions::default()
+    };
+    let handle = spawn(&pack, "admit", 1, opts, server_cfg(64, 400_000));
+    let addr = handle.addr().to_string();
+    let state = Arc::clone(handle.state());
+
+    let parked = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+            c.set_read_timeout(Duration::from_secs(10)).unwrap();
+            c.request(&infer_req(&[0.5; IN_DIM])).unwrap().status
+        })
+    };
+    // Wait until the parked request actually holds the only permit.
+    let t0 = Instant::now();
+    while state.admission.inflight() != 1 {
+        assert!(t0.elapsed() < Duration::from_secs(2), "request never admitted");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut c2 = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+    let rejected = c2.request(&infer_req(&[0.25; IN_DIM])).unwrap();
+    assert_eq!(rejected.status, 429, "{}", rejected.body_str());
+    assert_eq!(rejected.header("retry-after"), Some("1"));
+
+    // The listener is not wedged: health and metrics answer immediately
+    // while the slot is still held.
+    assert_eq!(state.admission.inflight(), 1);
+    let health = c2.request(&Request::new("GET", "/healthz")).unwrap();
+    assert_eq!(health.status, 200);
+    let metrics = c2.request(&Request::new("GET", "/metrics")).unwrap();
+    assert!(metrics.body_str().contains("serve_rejected_total 1"));
+
+    assert_eq!(parked.join().unwrap(), 200, "parked request must complete");
+    assert!(state.admission.rejected_total() >= 1);
+    assert!(handle.shutdown(Duration::from_secs(5)));
+    let _ = std::fs::remove_file(&pack);
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn expired_deadline_is_504_and_never_reaches_a_worker() {
+    let dir = scratch_dir("deadline");
+    let pack = write_pack(&dir, "deadline", 17);
+    let handle = spawn(
+        &pack,
+        "deadline",
+        1,
+        ServeOptions::default(),
+        server_cfg(8, 100),
+    );
+    let state = Arc::clone(handle.state());
+    let mut client = HttpClient::connect(&handle.addr().to_string(), Duration::from_secs(2)).unwrap();
+
+    let admitted_before = state.admission.admitted_total();
+    let completed_before = state.router.endpoint("deadline").unwrap().workers.completed_total();
+    let req = Request::new("POST", "/v1/infer").json(format!(
+        "{{\"input\":{},\"deadline_ms\":0}}",
+        json_f32_array(&[1.0; IN_DIM])
+    ));
+    let resp = client.request(&req).unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body_str());
+    // Rejected pre-admission: no permit taken, no batch cut for it.
+    assert_eq!(state.admission.admitted_total(), admitted_before);
+    assert_eq!(
+        state.router.endpoint("deadline").unwrap().workers.completed_total(),
+        completed_before
+    );
+
+    // The same connection still serves real work afterwards.
+    let ok = client.request(&infer_req(&[1.0; IN_DIM])).unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.body_str());
+    assert!(handle.shutdown(Duration::from_secs(5)));
+    let _ = std::fs::remove_file(&pack);
+}
+
+// ---------------------------------------------------------------- (d)
+
+#[test]
+fn hot_reload_under_fire_serves_only_whole_generations() {
+    let dir = scratch_dir("reload");
+    let old_pack = write_pack(&dir, "gen-old", 1);
+    let new_pack = write_pack(&dir, "gen-new", 2);
+    let x = [0.75f32, -0.5, 0.25, 1.0, -1.0, 0.125];
+    let want_old = bits(&Engine::from_pack(&old_pack).unwrap().forward(&x, 1).unwrap());
+    let want_new = bits(&Engine::from_pack(&new_pack).unwrap().forward(&x, 1).unwrap());
+    assert_ne!(want_old, want_new, "seeds must give distinguishable packs");
+
+    let router = HotRouter::new(server_cfg(4, 200), 2);
+    router.add_pack("m", &old_pack).unwrap();
+    let handle = serve("127.0.0.1:0", ServeState::new(router, ServeOptions::default())).unwrap();
+    let addr = handle.addr().to_string();
+    let state = Arc::clone(handle.state());
+    let weak_old: Weak<PackMap> = {
+        let ep = state.router.endpoint("m").unwrap();
+        Arc::downgrade(&ep.map)
+        // `ep` drops here — the test must not keep the old endpoint alive.
+    };
+
+    // Hammer the fixed input from several connections while reloading.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammers: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+                let x = [0.75f32, -0.5, 0.25, 1.0, -1.0, 0.125];
+                let mut seen = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    let r = c.request(&infer_req(&x)).unwrap();
+                    assert_eq!(r.status, 200, "{}", r.body_str());
+                    seen.push(output_bits(&r.body_str()));
+                }
+                seen
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(100));
+    let mut admin = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+    let reload = admin
+        .request(&Request::new("POST", "/admin/reload").json(format!(
+            "{{\"name\":\"m\",\"path\":\"{}\"}}",
+            new_pack.display()
+        )))
+        .unwrap();
+    assert_eq!(reload.status, 200, "{}", reload.body_str());
+    assert!(reload.body_str().contains("\"generation\":1"));
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::Release);
+
+    let mut saw_old = 0usize;
+    let mut saw_new = 0usize;
+    for h in hammers {
+        for reply in h.join().unwrap() {
+            if reply == want_old {
+                saw_old += 1;
+            } else if reply == want_new {
+                saw_new += 1;
+            } else {
+                panic!("torn reply: neither old nor new generation bits: {reply:?}");
+            }
+        }
+    }
+    assert!(saw_old > 0, "no pre-reload traffic observed");
+    // A request after the reload ack must see the new weights (the
+    // hammers themselves may or may not have raced past the swap, so
+    // `saw_new` is informational only).
+    let _ = saw_new;
+    let after = admin.request(&infer_req(&x)).unwrap();
+    assert_eq!(output_bits(&after.body_str()), want_new);
+
+    // Once nothing holds the old endpoint, its workers drain and the old
+    // mapping is released.
+    let t0 = Instant::now();
+    while weak_old.upgrade().is_some() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "old Arc<PackMap> still alive after reload + drain"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(handle.shutdown(Duration::from_secs(5)));
+    let _ = std::fs::remove_file(&old_pack);
+    let _ = std::fs::remove_file(&new_pack);
+}
+
+// ---------------------------------------------------------------- (e)
+
+#[test]
+fn drain_finishes_inflight_and_shutdown_is_clean() {
+    let dir = scratch_dir("drain");
+    let pack = write_pack(&dir, "drain", 23);
+    let handle = spawn(
+        &pack,
+        "drain",
+        1,
+        ServeOptions::default(),
+        server_cfg(8, 100),
+    );
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+    assert_eq!(client.request(&infer_req(&[0.5; IN_DIM])).unwrap().status, 200);
+
+    let drain = client.request(&Request::new("POST", "/admin/drain")).unwrap();
+    assert_eq!(drain.status, 200);
+    // Draining: inference refused with backoff, health still reports.
+    let refused = client.request(&infer_req(&[0.5; IN_DIM])).unwrap();
+    assert_eq!(refused.status, 503);
+    assert_eq!(refused.header("retry-after"), Some("1"));
+    drop(client);
+    let mut probe = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+    let health = probe.request(&Request::new("GET", "/healthz")).unwrap();
+    assert_eq!(health.status, 200);
+    assert!(health.body_str().contains("\"draining\""));
+
+    assert!(handle.shutdown(Duration::from_secs(5)), "drain not clean");
+    assert!(HttpClient::connect(&addr, Duration::from_millis(300)).is_err());
+    let _ = std::fs::remove_file(&pack);
+}
+
+/// The real thing: a `repro serve-net` subprocess, killed with SIGTERM
+/// mid-life, must drain and exit 0.
+#[cfg(unix)]
+#[test]
+fn sigterm_subprocess_drains_and_exits_zero() {
+    use std::process::{Command, Stdio};
+
+    let dir = scratch_dir("sigterm");
+    let pack = write_pack(&dir, "sigterm", 31);
+    let port_file = dir.join("port");
+    let _ = std::fs::remove_file(&port_file);
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve-net",
+            pack.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--port-file",
+            port_file.to_str().unwrap(),
+            "--workers",
+            "1",
+            "--drain-timeout-s",
+            "10",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn repro serve-net");
+
+    // Wait for the server to publish its ephemeral port.
+    let t0 = Instant::now();
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if !s.trim().is_empty() {
+                break s.trim().to_string();
+            }
+        }
+        if t0.elapsed() > Duration::from_secs(20) {
+            let _ = child.kill();
+            panic!("serve-net never wrote its port file");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(2)).unwrap();
+    assert_eq!(
+        client.request(&Request::new("GET", "/healthz")).unwrap().status,
+        200
+    );
+    assert_eq!(client.request(&infer_req(&[1.0; IN_DIM])).unwrap().status, 200);
+
+    let killed = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("run kill");
+    assert!(killed.success(), "kill -TERM failed");
+
+    let t0 = Instant::now();
+    let status = loop {
+        if let Some(s) = child.try_wait().expect("try_wait") {
+            break s;
+        }
+        if t0.elapsed() > Duration::from_secs(15) {
+            let _ = child.kill();
+            panic!("serve-net did not exit after SIGTERM");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+    let _ = std::fs::remove_file(&pack);
+}
