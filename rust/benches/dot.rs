@@ -23,9 +23,15 @@
 //! flips from CSR at 1 thread to dense at 8 — the canonical case where
 //! `--threads` changes the chosen format.
 //!
+//! Section "kernels": scalar vs SIMD backend throughput (GFLOP-equiv)
+//! for the formats with vectorized paths (dense, CSR) on a small and a
+//! large net at 1/2/4/8 threads — the measured answer to "what did the
+//! SIMD microkernels buy on this host". The SIMD rows use the same
+//! granular shard plans the engine uses under `--kernel simd`.
+//!
 //! Results are printed and written to `BENCH_dot.json` (an object with
-//! `"dot"`, `"forward"` and `"selection"` arrays) so the multi-core perf
-//! trajectory has a baseline.
+//! `"dot"`, `"forward"`, `"selection"` and `"kernels"` arrays) so the
+//! multi-core perf trajectory has a baseline.
 //!
 //! Run: `cargo bench --bench dot`
 //! CI smoke mode (small shapes, few iterations): `cargo bench --bench dot
@@ -44,7 +50,7 @@ use cer::coordinator::{Engine, Objective};
 use cer::costmodel::{trace_matvec, EnergyModel, TimeModel};
 use cer::exec::ExecPlane;
 use cer::formats::FormatKind;
-use cer::kernels::AnyMatrix;
+use cer::kernels::{AnyMatrix, KernelBackend};
 use cer::networks::weights::synthesize_zoo_layers;
 use cer::stats::synth::spike_and_slab;
 use cer::util::bench::{fmt_ns, time_median_ns};
@@ -80,6 +86,22 @@ struct SelRow {
     predicted_ns: f64,
     measured_ns: f64,
 }
+
+/// One (net, format, backend, thread-count) cell of the kernel-backend
+/// comparison.
+struct KernelRow {
+    net: String,
+    format: &'static str,
+    backend: &'static str,
+    threads: usize,
+    pass_ns: f64,
+    gflops: f64,
+}
+
+/// Per-shard work floor the engine applies under the SIMD backend
+/// (mirrors `Engine::MIN_SIMD_SHARD_WORK`): tiny shards starve the
+/// vector lanes, so the plans collapse instead.
+const MIN_SIMD_SHARD_WORK: u64 = 4096;
 
 /// Format with the minimal `f` over `cells` (first wins ties — the same
 /// tie-break as the selector's argmin).
@@ -320,6 +342,95 @@ fn main() {
         }
     }
 
+    // Kernel-backend comparison: scalar reference vs SIMD on the formats
+    // with vectorized paths, one small and one large net. Scalar rows use
+    // the plain nnz-balanced plans; SIMD rows use the granular plans the
+    // engine switches to under `--kernel simd`.
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+    let kernel_cases: [(&str, usize); 2] = [("lenet-300-100", 1), ("vgg16", scale)];
+    let backends: &[KernelBackend] = if KernelBackend::simd_supported() {
+        &[KernelBackend::Scalar, KernelBackend::Simd]
+    } else {
+        &[KernelBackend::Scalar]
+    };
+    for (net, net_scale) in kernel_cases {
+        let (spec, layers) = synthesize_zoo_layers(net, net_scale, 0xCE5E).expect("zoo net");
+        for kind in [FormatKind::Dense, FormatKind::Csr] {
+            let encoded: Vec<AnyMatrix> = layers
+                .iter()
+                .map(|(_, m, _)| AnyMatrix::encode(kind, m))
+                .collect();
+            let flops: f64 = encoded
+                .iter()
+                .map(|a| 2.0 * a.rows() as f64 * a.cols() as f64)
+                .sum();
+            let xs: Vec<Vec<f32>> = encoded
+                .iter()
+                .map(|a| (0..a.cols()).map(|_| rng.f32() - 0.5).collect())
+                .collect();
+            let mut ys: Vec<Vec<f32>> = encoded.iter().map(|a| vec![0.0; a.rows()]).collect();
+            for &backend in backends {
+                let mut line = format!("{:<14} {:<6} {:<6}", spec.name, kind.name(), backend);
+                for &t in &THREAD_COUNTS {
+                    let plane = ExecPlane::with_threads(t);
+                    let plans: Vec<_> = encoded
+                        .iter()
+                        .map(|a| match backend {
+                            KernelBackend::Scalar => a.shard_plan(t),
+                            KernelBackend::Simd => a.shard_plan_granular(t, MIN_SIMD_SHARD_WORK),
+                        })
+                        .collect();
+                    let pass_ns = time_median_ns(warmup, iters, || {
+                        for (i, a) in encoded.iter().enumerate() {
+                            match plane.pool() {
+                                Some(pool) => a.matvec_sharded_backend(
+                                    backend, &xs[i], &mut ys[i], &plans[i], pool,
+                                ),
+                                None => a.matvec_backend(backend, &xs[i], &mut ys[i]),
+                            }
+                        }
+                        std::hint::black_box(&ys);
+                    });
+                    let gflops = flops / pass_ns;
+                    line.push_str(&format!(
+                        "  {t}t {:>10} ({gflops:>6.2} GF/s)",
+                        fmt_ns(pass_ns)
+                    ));
+                    kernel_rows.push(KernelRow {
+                        net: spec.name.to_string(),
+                        format: kind.name(),
+                        backend: backend.name(),
+                        threads: t,
+                        pass_ns,
+                        gflops,
+                    });
+                }
+                println!("{line}");
+            }
+            // Per-format SIMD-over-scalar summary at each thread count.
+            if backends.len() == 2 {
+                let mut line = format!("{:<14} {:<6} simd/scalar", spec.name, kind.name());
+                for &t in &THREAD_COUNTS {
+                    let find = |b: &str| {
+                        kernel_rows
+                            .iter()
+                            .rev()
+                            .find(|r| {
+                                r.net == spec.name
+                                    && r.format == kind.name()
+                                    && r.backend == b
+                                    && r.threads == t
+                            })
+                            .map(|r| r.pass_ns)
+                            .unwrap_or(f64::NAN)
+                    };
+                    line.push_str(&format!("  {t}t x{:.2}", find("scalar") / find("simd")));
+                }
+                println!("{line}");
+            }
+        }
+    }
+
     // Per-(net, threads) winners: what the model ranks first vs what the
     // measurement ranks first — printed and recorded so mis-rankings are
     // visible in the artifact.
@@ -413,15 +524,30 @@ fn main() {
             ));
         }
     }
-    json.push_str("\n]\n}\n");
+    json.push_str("\n],\n\"kernels\": [\n");
+    for (i, r) in kernel_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"format\": \"{}\", \"backend\": \"{}\", \
+             \"threads\": {}, \"pass_ns\": {:.1}, \"gflops_equiv\": {:.4}}}{}\n",
+            r.net,
+            r.format,
+            r.backend,
+            r.threads,
+            r.pass_ns,
+            r.gflops,
+            if i + 1 < kernel_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("]\n}\n");
     let mut f = std::fs::File::create("BENCH_dot.json").expect("BENCH_dot.json");
     f.write_all(json.as_bytes()).expect("write BENCH_dot.json");
     println!(
-        "wrote BENCH_dot.json ({} dot rows + {} forward rows + {} selection cells: \
-         {} networks x {:?} threads)",
+        "wrote BENCH_dot.json ({} dot rows + {} forward rows + {} selection cells \
+         + {} kernel-backend rows: {} networks x {:?} threads)",
         rows.len(),
         fwd_rows.len(),
         sel_rows.len(),
+        kernel_rows.len(),
         cases.len() + 1,
         THREAD_COUNTS
     );

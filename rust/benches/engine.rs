@@ -68,7 +68,7 @@ fn main() {
                     max_batch,
                     max_delay_us: 500,
                 },
-                threads: None,
+                ..ServerConfig::default()
             },
         );
         let n = 4000usize;

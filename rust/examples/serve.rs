@@ -25,7 +25,8 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             max_delay_us,
         },
-        threads: None, // CER_THREADS env still applies
+        // CER_THREADS env still applies; kernel backend stays scalar.
+        ..ServerConfig::default()
     };
     let art_engine = art.clone();
     let srv = InferenceServer::spawn(

@@ -64,6 +64,13 @@ impl<T> Batcher<T> {
         });
     }
 
+    /// Enqueue tick (µs) of the oldest queued request, or None if empty —
+    /// `now - oldest_enqueued_us` is the queue-age gauge the serving
+    /// metrics sample.
+    pub fn oldest_enqueued_us(&self) -> Option<u64> {
+        self.queue.front().map(|p| p.enqueued_us)
+    }
+
     /// Deadline of the oldest request (µs tick at which a flush is due),
     /// or None if empty.
     pub fn next_deadline_us(&self) -> Option<u64> {

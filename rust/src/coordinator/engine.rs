@@ -46,7 +46,7 @@ use crate::coordinator::selector::{select_format_in, Objective};
 use crate::costmodel::{EnergyModel, ExecContext, TimeModel};
 use crate::exec::{self, ExecPlane, Pipeline, ShardPlan};
 use crate::formats::{Dense, FormatKind, Storage, StorageResidency};
-use crate::kernels::{AnyMatrix, Epilogue};
+use crate::kernels::{AnyMatrix, Epilogue, KernelBackend};
 use crate::pack::map::PackMap;
 use crate::pack::{self, LayerView, Manifest, Pack};
 use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
@@ -176,6 +176,11 @@ pub struct Engine {
     pipeline: Pipeline,
     /// Multi-core execution plane (serial unless [`Engine::set_threads`]).
     exec: ExecPlane,
+    /// Kernel backend for the native forward path. Scalar (the
+    /// bit-exactness reference) unless explicitly switched with
+    /// [`Engine::set_kernel_backend`] — constructors never consult the
+    /// environment, so library users always get the reference numerics.
+    kernel: KernelBackend,
     /// One nnz-balanced plan per layer, computed once when the plane is
     /// configured (empty when serial).
     plans: Vec<ShardPlan>,
@@ -211,6 +216,7 @@ impl Engine {
             ref_scratch: Vec::new(),
             pipeline: Pipeline::new(),
             exec: ExecPlane::serial(),
+            kernel: KernelBackend::Scalar,
             plans: Vec::new(),
             map: None,
         }
@@ -394,17 +400,53 @@ impl Engine {
         self.arena.configure(self.exec.threads());
     }
 
+    /// Minimum per-shard work (stored indices) when the SIMD backend is
+    /// active: a shard whose rows cannot even fill a handful of 8/16-wide
+    /// tiles pays pool dispatch for no vector throughput, so small layers
+    /// collapse to fewer shards. Scalar plans are untouched — their
+    /// sharding (and therefore the bit-identity surface) is unchanged.
+    const MIN_SIMD_SHARD_WORK: u64 = 4096;
+
     /// Recompute the per-layer shard plans for the current plane (after
-    /// the plane or a layer's representation changed).
+    /// the plane, a layer's representation, or the kernel backend
+    /// changed).
     fn refresh_plans(&mut self) {
         self.plans = if self.exec.is_parallel() {
+            let threads = self.exec.threads();
             self.layers
                 .iter()
-                .map(|l| l.matrix.shard_plan(self.exec.threads()))
+                .map(|l| match self.kernel {
+                    KernelBackend::Scalar => l.matrix.shard_plan(threads),
+                    KernelBackend::Simd => l
+                        .matrix
+                        .shard_plan_granular(threads, Self::MIN_SIMD_SHARD_WORK),
+                })
                 .collect()
         } else {
             Vec::new()
         };
+    }
+
+    /// Switch the native kernel backend. [`KernelBackend::Scalar`] is the
+    /// default and the bit-exactness reference; [`KernelBackend::Simd`]
+    /// opts into the vectorized dense/CSR paths, whose float sums are
+    /// reassociated (results match scalar within the documented relative
+    /// tolerance, not bit-for-bit — see `tests/simd_differential.rs`).
+    /// Re-plans shards at SIMD tile granularity; off the hot path.
+    pub fn set_kernel_backend(&mut self, kernel: KernelBackend) {
+        self.kernel = kernel;
+        self.refresh_plans();
+    }
+
+    /// Builder form of [`Engine::set_kernel_backend`].
+    pub fn with_kernel_backend(mut self, kernel: KernelBackend) -> Engine {
+        self.set_kernel_backend(kernel);
+        self
+    }
+
+    /// The active native kernel backend.
+    pub fn kernel_backend(&self) -> KernelBackend {
+        self.kernel
     }
 
     /// Re-run format selection for every layer against the engine's
@@ -553,13 +595,17 @@ impl Engine {
     /// the logits slice borrowed from the arena.
     ///
     /// Bit-identical to [`Engine::forward_reference`] at every thread
-    /// count; allocation-free after warm-up.
+    /// count under the default scalar backend; allocation-free after
+    /// warm-up. With [`KernelBackend::Simd`] the per-row sums are
+    /// vectorized (tolerance-equal, not bit-equal — see
+    /// `tests/simd_differential.rs`).
     fn forward_native(&mut self, x: &[f32], batch: usize) -> &[f32] {
         // Row-major (batch × n) ≡ column-major (n × batch): no transposes.
         let last = self.layers.len() - 1;
         self.arena.ensure(batch);
         let layers = &self.layers;
         let plans = &self.plans;
+        let kernel = self.kernel;
         let batch_cap = self.arena.batch_cap;
         let [buf_a, buf_b] = &mut self.arena.bufs;
         match (self.exec.pool(), plans.is_empty()) {
@@ -616,7 +662,8 @@ impl Engine {
                     while shard < plan.shard_count() {
                         // SAFETY: plan shards are disjoint row ranges.
                         unsafe {
-                            layer.matrix.matmul_cells_epi(
+                            layer.matrix.matmul_cells_epi_with(
+                                kernel,
                                 plan.shard(shard),
                                 src,
                                 &dst_cells[..m * batch],
@@ -665,9 +712,15 @@ impl Engine {
                     // SAFETY: `dst` is exclusively borrowed and this
                     // single call covers all rows — no concurrent writer.
                     unsafe {
-                        layer
-                            .matrix
-                            .matmul_cells_epi(0..m, src, cells, batch, col_sums, Some(&epi))
+                        layer.matrix.matmul_cells_epi_with(
+                            kernel,
+                            0..m,
+                            src,
+                            cells,
+                            batch,
+                            col_sums,
+                            Some(&epi),
+                        )
                     };
                     prev_rows = m;
                 }
@@ -915,6 +968,41 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "{kind:?}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn kernel_backend_defaults_to_scalar_and_simd_stays_in_tolerance() {
+        let layers = tiny_layers(7);
+        let mut rng = Rng::new(8);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32() - 0.5).collect();
+        for kind in [FormatKind::Dense, FormatKind::Csr] {
+            let mut scalar = Engine::native_fixed(layers.clone(), kind);
+            assert_eq!(scalar.kernel_backend(), KernelBackend::Scalar);
+            let want = scalar.forward(&x, batch).unwrap().to_vec();
+            let mut simd = Engine::native_fixed(layers.clone(), kind)
+                .with_kernel_backend(KernelBackend::Simd);
+            assert_eq!(simd.kernel_backend(), KernelBackend::Simd);
+            let got = simd.forward(&x, batch).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-5 + 1e-4 * w.abs(),
+                    "{kind:?}: {g} vs {w}"
+                );
+            }
+        }
+        // Tiny layers collapse to fewer shards at SIMD tile granularity;
+        // the scalar plans are untouched by the backend switch.
+        let mut e = Engine::native_fixed(layers, FormatKind::Dense).with_threads(4);
+        let scalar_shards: Vec<usize> =
+            e.shard_plans().iter().map(|p| p.shard_count()).collect();
+        e.set_kernel_backend(KernelBackend::Simd);
+        for p in e.shard_plans() {
+            assert_eq!(p.shard_count(), 1, "96-weight layers can't fill a tile");
+        }
+        e.set_kernel_backend(KernelBackend::Scalar);
+        let back: Vec<usize> = e.shard_plans().iter().map(|p| p.shard_count()).collect();
+        assert_eq!(back, scalar_shards);
     }
 
     #[test]

@@ -161,6 +161,13 @@ pub struct Metrics {
     pub max_latency_us: AtomicU64,
     /// Per-request latency distribution (enqueue → response, µs).
     pub latency: LatencyHistogram,
+    /// Batcher queue depth at the last sample (requests waiting).
+    pub queue_depth: AtomicU64,
+    /// Deepest queue ever sampled.
+    pub queue_depth_peak: AtomicU64,
+    /// Age (µs) of the oldest queued request at the last sample — how
+    /// long work sits before a batch picks it up.
+    pub queue_age_us: AtomicU64,
 }
 
 impl Metrics {
@@ -179,6 +186,16 @@ impl Metrics {
         self.total_latency_us.fetch_add(us, Ordering::Relaxed);
         self.max_latency_us.fetch_max(us, Ordering::Relaxed);
         self.latency.record_us(us);
+    }
+
+    /// Sample the batcher queue: current depth (gauge), peak depth
+    /// (high-water mark) and the oldest queued request's age in µs.
+    /// Called by the serving workers after every push and drain, so the
+    /// gauges track occupancy without any queue-side locking.
+    pub fn record_queue(&self, depth: u64, age_us: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+        self.queue_age_us.store(age_us, Ordering::Relaxed);
     }
 
     /// Mean latency in µs over completed requests.
@@ -232,6 +249,22 @@ mod tests {
         assert_eq!(m.max_latency_us.load(Ordering::Relaxed), 300);
         assert!(m.summary().contains("batches 2"));
         assert_eq!(m.latency.count(), 3);
+    }
+
+    #[test]
+    fn queue_gauges_track_depth_peak_and_age() {
+        let m = Metrics::default();
+        m.record_queue(3, 150);
+        m.record_queue(7, 900);
+        m.record_queue(2, 40);
+        // Depth and age are last-sample gauges; the peak is sticky.
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 2);
+        assert_eq!(m.queue_age_us.load(Ordering::Relaxed), 40);
+        assert_eq!(m.queue_depth_peak.load(Ordering::Relaxed), 7);
+        // An empty sample zeroes the gauges but not the peak.
+        m.record_queue(0, 0);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(m.queue_depth_peak.load(Ordering::Relaxed), 7);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::kernels::KernelBackend;
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug, Default)]
@@ -42,6 +43,12 @@ pub struct ServerConfig {
     /// in the builder closure (as `repro serve` does) so the stored
     /// formats match the parallelism the worker will run them at.
     pub threads: Option<usize>,
+    /// Native kernel backend for the worker's engine. Defaults to
+    /// [`KernelBackend::Scalar`] — the bit-exactness reference; `repro
+    /// serve --kernel simd` (or `CER_KERNEL=simd`, resolved by the CLI,
+    /// never by the library) opts into the vectorized paths, which are
+    /// tolerance-equal rather than bit-identical.
+    pub kernel: KernelBackend,
 }
 
 /// One in-flight request.
@@ -292,6 +299,9 @@ where
             if e.threads() != threads {
                 e.set_threads(threads);
             }
+            if e.kernel_backend() != cfg.kernel {
+                e.set_kernel_backend(cfg.kernel);
+            }
             e
         }
         Err(err) => {
@@ -343,15 +353,28 @@ where
             }
             None => {}
         }
+        sample_queue(&batcher, &metrics, now_us(epoch));
         while batcher.pop_batch_into(now_us(epoch), &mut batch) {
             run_batch(&mut engine, &batch, &metrics, &mut scratch);
         }
+        sample_queue(&batcher, &metrics, now_us(epoch));
     }
     // Drain on shutdown.
     batcher.drain_all_into(&mut batch);
     if !batch.is_empty() {
         run_batch(&mut engine, &batch, &metrics, &mut scratch);
     }
+}
+
+/// Sample the batcher occupancy gauges: depth (and its peak) plus the
+/// age of the oldest queued request. Taken after every enqueue and after
+/// the drain loop, so `/metrics` shows both how full the queue gets and
+/// how long work sits before a batch picks it up.
+fn sample_queue(batcher: &Batcher<Request>, metrics: &Metrics, now_us: u64) {
+    let age = batcher
+        .oldest_enqueued_us()
+        .map_or(0, |t| now_us.saturating_sub(t));
+    metrics.record_queue(batcher.len() as u64, age);
 }
 
 /// Input-assembly and logits buffers reused across every batch the worker
@@ -449,7 +472,7 @@ mod tests {
                 max_batch: 8,
                 max_delay_us: 3_000,
             },
-            threads: None,
+            ..ServerConfig::default()
         };
         let srv = InferenceServer::spawn(identity_engine, cfg);
         let rxs: Vec<_> = (0..20)
@@ -466,6 +489,16 @@ mod tests {
             20
         );
         assert!(srv.metrics().mean_batch() >= 1.0);
+        // The worker sampled the queue gauges: the peak is sticky and was
+        // recorded while requests were still queued. (The live depth gauge
+        // races with the worker's post-drain sample, so only the monotone
+        // peak is asserted here.)
+        assert!(
+            srv.metrics()
+                .queue_depth_peak
+                .load(std::sync::atomic::Ordering::Relaxed)
+                >= 1
+        );
         srv.shutdown();
     }
 
@@ -479,6 +512,7 @@ mod tests {
                 max_delay_us: 1_000,
             },
             threads: Some(3),
+            ..ServerConfig::default()
         };
         let srv = InferenceServer::spawn(identity_engine, cfg);
         let rxs: Vec<_> = (0..16)
@@ -514,6 +548,7 @@ mod tests {
                 max_delay_us: 500,
             },
             threads: Some(4),
+            ..ServerConfig::default()
         };
         let srv = InferenceServer::spawn(
             move || Ok(Engine::native_fixed(mk_layers(), FormatKind::Cser)),
@@ -625,7 +660,7 @@ mod tests {
                 max_batch: 1000,
                 max_delay_us: 60_000_000, // would wait a minute
             },
-            threads: None,
+            ..ServerConfig::default()
         };
         let srv = InferenceServer::spawn(identity_engine, cfg);
         let rx = srv.submit(vec![7.0, 0.0, 0.0]);

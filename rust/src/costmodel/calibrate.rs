@@ -1,0 +1,535 @@
+//! Measured cost-model calibration (`repro calibrate`).
+//!
+//! The static [`TimeModel::default_model`] constants are deliberate
+//! guesses chosen for determinism; on a real host the trace-derived
+//! serial estimate is off by a per-format factor (branchy CSR traversal
+//! vs. streaming dense rows) and the pool dispatch overhead depends on
+//! the OS and core count, not a hard-coded 2 µs. This module measures
+//! both on the host and fits them:
+//!
+//! * per (format, backend): a cache-ruined micro-benchmark of the matvec
+//!   kernel at two layer sizes, then a two-point linear fit of measured
+//!   wall time against the model's serial estimate — slope
+//!   ([`BackendFit::scale`], consumed by [`TimeModel::scale_for`]) and
+//!   intercept ([`BackendFit::intercept_ns`], recorded for inspection).
+//! * once per host: the pool dispatch overhead, from the gap between a
+//!   2-way sharded product and its critical-path fraction of the serial
+//!   product ([`Calibration::dispatch_overhead_ns`], consumed by
+//!   [`TimeModel::sharded_ns`]).
+//!
+//! The result round-trips through `calibration.json` (read back with the
+//! vendored [`crate::util::json`] parser) so a calibration can be done
+//! once per machine and replayed into any later `repro` run with
+//! `--calibration FILE`. Missing fields fall back to the uncalibrated
+//! defaults, so a partial or hand-edited file degrades gracefully;
+//! structurally invalid documents are rejected with a parse error.
+//!
+//! Calibration changes *predictions only*: kernels, numerics and the
+//! bit-identity contract are untouched, and with no calibration applied
+//! every ranking is bit-identical to the historical constants.
+
+use std::time::Instant;
+
+use super::time::TimeModel;
+use super::trace::trace_matvec;
+use crate::exec::ExecPlane;
+use crate::formats::{Dense, FormatKind};
+use crate::kernels::{AnyMatrix, KernelBackend};
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+
+/// Evict the working set from cache between timed repetitions, so each
+/// measurement sees cold-ish memory instead of the previous rep's warm
+/// lines (the slope fit otherwise under-reports the memory-bound
+/// formats). Streams an 8 MB buffer — larger than any L2 and most L3
+/// slices worth of the matrices being timed.
+pub fn ruin_cache() {
+    let v: Vec<i32> = (0..2_000_000).collect();
+    std::hint::black_box(v.iter().map(|&x| x as i64).sum::<i64>());
+}
+
+/// Fitted measured-vs-modeled line for one kernel backend, one entry per
+/// format in [`FormatKind::ALL`] order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendFit {
+    /// Backend the fit was measured with.
+    pub backend: KernelBackend,
+    /// Slope: measured wall time per modeled ns (1.0 = the static model
+    /// is exact). Feeds [`TimeModel::format_scale`].
+    pub scale: [f64; 4],
+    /// Intercept (ns): fixed per-call cost the linear model attributes to
+    /// the kernel. Recorded for inspection; not applied to the model.
+    pub intercept_ns: [f64; 4],
+}
+
+/// A host calibration: fitted per-format slopes per backend plus the
+/// measured pool dispatch overhead. Serialized as `calibration.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Measured per-dispatch pool overhead (ns); replaces the guessed
+    /// [`TimeModel::DISPATCH_OVERHEAD_NS`] in [`TimeModel::sharded_ns`].
+    pub dispatch_overhead_ns: f64,
+    /// One fit per calibrated backend.
+    pub fits: Vec<BackendFit>,
+}
+
+impl Default for Calibration {
+    /// The identity calibration: guessed dispatch constant, no fits —
+    /// applying it reproduces the uncalibrated model exactly.
+    fn default() -> Self {
+        Calibration {
+            dispatch_overhead_ns: TimeModel::DISPATCH_OVERHEAD_NS,
+            fits: Vec::new(),
+        }
+    }
+}
+
+impl Calibration {
+    /// The fit measured with `backend`, if present.
+    pub fn fit_for(&self, backend: KernelBackend) -> Option<&BackendFit> {
+        self.fits.iter().find(|f| f.backend == backend)
+    }
+
+    /// Produce a [`TimeModel`] with this calibration's constants folded
+    /// in: the measured dispatch overhead always applies; the per-format
+    /// scales apply when a fit for `backend` exists (otherwise they stay
+    /// at the bit-exact 1.0 defaults).
+    pub fn apply(&self, base: &TimeModel, backend: KernelBackend) -> TimeModel {
+        let mut m = base.clone();
+        m.dispatch_overhead_ns = self.dispatch_overhead_ns;
+        if let Some(fit) = self.fit_for(backend) {
+            m.format_scale = fit.scale;
+        }
+        m
+    }
+
+    /// Hand-emitted JSON document (the repo has no serde; f64 `Display`
+    /// prints the shortest exact round-trip form, so
+    /// [`Calibration::parse_str`] recovers the values bit-identically).
+    pub fn to_json_string(&self) -> String {
+        let arr = |v: &[f64; 4]| {
+            v.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!(
+            "  \"dispatch_overhead_ns\": {},\n",
+            self.dispatch_overhead_ns
+        ));
+        s.push_str("  \"fits\": [\n");
+        for (i, f) in self.fits.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"backend\": \"{}\", \"scale\": [{}], \"intercept_ns\": [{}]}}{}\n",
+                f.backend.name(),
+                arr(&f.scale),
+                arr(&f.intercept_ns),
+                if i + 1 < self.fits.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Decode a parsed JSON document. The document must be an object;
+    /// within it, missing fields take the uncalibrated defaults
+    /// (dispatch overhead = the guessed constant, scale 1.0, intercept
+    /// 0.0) while present-but-malformed fields are rejected.
+    pub fn from_json(v: &Json) -> Result<Calibration, String> {
+        if !matches!(v, Json::Obj(_)) {
+            return Err("calibration document must be a JSON object".to_string());
+        }
+        let dispatch_overhead_ns = match v.get("dispatch_overhead_ns") {
+            None => TimeModel::DISPATCH_OVERHEAD_NS,
+            Some(j) => j
+                .as_f64()
+                .ok_or_else(|| "dispatch_overhead_ns must be a number".to_string())?,
+        };
+        let mut fits = Vec::new();
+        if let Some(list) = v.get("fits") {
+            if !matches!(list, Json::Arr(_)) {
+                return Err("fits must be an array".to_string());
+            }
+            for (i, f) in list.items().iter().enumerate() {
+                if !matches!(f, Json::Obj(_)) {
+                    return Err(format!("fits[{i}] must be an object"));
+                }
+                let backend = f
+                    .get("backend")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("fits[{i}] needs a string \"backend\""))?;
+                let backend = KernelBackend::parse(backend)
+                    .map_err(|e| format!("fits[{i}]: {e}"))?;
+                let scale = array4(f.get("scale"), 1.0, &format!("fits[{i}].scale"))?;
+                let intercept_ns =
+                    array4(f.get("intercept_ns"), 0.0, &format!("fits[{i}].intercept_ns"))?;
+                fits.push(BackendFit {
+                    backend,
+                    scale,
+                    intercept_ns,
+                });
+            }
+        }
+        Ok(Calibration {
+            dispatch_overhead_ns,
+            fits,
+        })
+    }
+
+    /// Parse a `calibration.json` document from text.
+    pub fn parse_str(s: &str) -> Result<Calibration, String> {
+        Calibration::from_json(&json::parse(s)?)
+    }
+}
+
+/// `[f64; 4]` field decode: absent → all-`default`; shorter arrays pad
+/// with `default`; non-array or non-numeric elements are errors.
+fn array4(v: Option<&Json>, default: f64, what: &str) -> Result<[f64; 4], String> {
+    let mut out = [default; 4];
+    let Some(v) = v else {
+        return Ok(out);
+    };
+    if !matches!(v, Json::Arr(_)) {
+        return Err(format!("{what} must be an array"));
+    }
+    let items = v.items();
+    for (i, slot) in out.iter_mut().enumerate() {
+        if let Some(j) = items.get(i) {
+            *slot = j
+                .as_f64()
+                .ok_or_else(|| format!("{what}[{i}] must be a number"))?;
+        }
+    }
+    Ok(out)
+}
+
+/// One measured point, reported into `BENCH_calibration.json`.
+#[derive(Clone, Debug)]
+pub struct CalRow {
+    pub format: FormatKind,
+    pub backend: KernelBackend,
+    /// Layer shape, e.g. `"256x768"` — part of the row's bench-gate
+    /// identity so the two fit points track separately.
+    pub case: String,
+    /// Best-of-R cache-ruined wall time of one matvec (ns).
+    pub measured_ns: f64,
+    /// The static model's serial estimate for the same product (ns).
+    pub modeled_ns: f64,
+}
+
+/// Render calibration rows as the `calibration` section of
+/// `BENCH_calibration.json` (same hand-emitted shape as the other bench
+/// artifacts, gate-comparable via the `_ns` suffix convention).
+pub fn bench_json(rows: &[CalRow]) -> String {
+    let mut s = String::from("{\n\"calibration\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"format\": \"{}\", \"backend\": \"{}\", \"case\": \"{}\", \
+             \"measured_ns\": {:.1}, \"modeled_ns\": {:.1}}}{}\n",
+            r.format.name(),
+            r.backend.name(),
+            r.case,
+            r.measured_ns,
+            r.modeled_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+/// Slope clamp: a fit outside this range means the measurement (or the
+/// model) is broken; clamping keeps a bad host from poisoning rankings
+/// with absurd scales.
+const SCALE_CLAMP: (f64, f64) = (1e-3, 1e3);
+/// Dispatch-overhead clamp (ns): below ~50 ns is timer noise, above 1 ms
+/// means the pool measurement caught a scheduler hiccup.
+const OVERHEAD_CLAMP: (f64, f64) = (50.0, 1_000_000.0);
+
+/// Quantized synthetic layer: ~1/4 implicit zeros, six distinct non-zero
+/// levels — low-entropy enough that every format (incl. CER/CSER) gets a
+/// realistic encoding to time.
+fn synth_layer(rows: usize, cols: usize, seed: u64) -> Dense {
+    let mut rng = Rng::new(seed);
+    const LEVELS: [f32; 8] = [0.0, 0.0, 0.5, -0.5, 1.0, -1.0, 1.5, 2.0];
+    let data = (0..rows * cols)
+        .map(|_| LEVELS[rng.below(LEVELS.len())])
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+/// Best-of-`reps` wall time of `f`, ruining the cache before each rep.
+fn min_ns_ruined(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        ruin_cache();
+        let t = Instant::now();
+        f();
+        best = best.min((t.elapsed().as_nanos() as f64).max(1.0));
+    }
+    best
+}
+
+/// Run the host calibration: per (format ∈ [`FormatKind::ALL`], backend)
+/// micro-benchmarks at two layer sizes, a two-point linear fit of
+/// measured against modeled time, and one dispatch-overhead measurement.
+/// `smoke` shrinks sizes and repetitions for CI (the fit is then noisy —
+/// fine for exercising the pipeline, not for real rankings).
+pub fn run_calibration(smoke: bool, backends: &[KernelBackend]) -> (Calibration, Vec<CalRow>) {
+    let (small, large) = if smoke {
+        ((24usize, 64usize), (48usize, 96usize))
+    } else {
+        ((96, 256), (256, 768))
+    };
+    let reps = if smoke { 4 } else { 32 };
+    let base = TimeModel::default_model();
+
+    let mut fits = Vec::new();
+    let mut rows_out = Vec::new();
+    for &backend in backends {
+        let mut scale = [1.0f64; 4];
+        let mut intercept_ns = [0.0f64; 4];
+        for (fi, &kind) in FormatKind::ALL.iter().enumerate() {
+            let mut meas = [0.0f64; 2];
+            let mut model = [0.0f64; 2];
+            for (si, &(r, c)) in [small, large].iter().enumerate() {
+                let dense = synth_layer(r, c, fi as u64 * 7 + si as u64 + 1);
+                let m = AnyMatrix::encode(kind, &dense);
+                let x: Vec<f32> = (0..c).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect();
+                let mut y = vec![0.0f32; r];
+                meas[si] = min_ns_ruined(reps, || m.matvec_backend(backend, &x, &mut y));
+                std::hint::black_box(&y);
+                model[si] = trace_matvec(&m).time_ns(&base);
+                rows_out.push(CalRow {
+                    format: kind,
+                    backend,
+                    case: format!("{r}x{c}"),
+                    measured_ns: meas[si],
+                    modeled_ns: model[si],
+                });
+            }
+            // Two-point fit. Degenerate spread (modeled points collapse)
+            // falls back to the large point's plain ratio.
+            let dm = model[1] - model[0];
+            let slope = if dm.abs() < 1e-6 {
+                meas[1] / model[1].max(1e-9)
+            } else {
+                (meas[1] - meas[0]) / dm
+            };
+            scale[fi] = slope.clamp(SCALE_CLAMP.0, SCALE_CLAMP.1);
+            intercept_ns[fi] = (meas[0] - scale[fi] * model[0]).max(0.0);
+        }
+        fits.push(BackendFit {
+            backend,
+            scale,
+            intercept_ns,
+        });
+    }
+
+    // Dispatch overhead: 2-way sharded minus the critical-path fraction
+    // of serial, on a dense layer whose plan splits near-evenly.
+    let dense = synth_layer(large.0, large.1, 99);
+    let m = AnyMatrix::encode(FormatKind::Dense, &dense);
+    let x: Vec<f32> = (0..large.1).map(|i| (i % 5) as f32 * 0.5 - 1.0).collect();
+    let mut y = vec![0.0f32; large.0];
+    let serial = min_ns_ruined(reps, || m.matvec_backend(KernelBackend::Scalar, &x, &mut y));
+    let plan = m.shard_plan(2);
+    let plane = ExecPlane::with_threads(2);
+    let sharded = match plane.pool() {
+        Some(pool) => min_ns_ruined(reps, || {
+            m.matvec_sharded_backend(KernelBackend::Scalar, &x, &mut y, &plan, pool)
+        }),
+        None => serial,
+    };
+    std::hint::black_box(&y);
+    let frac = plan.max_work() as f64 / (plan.total_work().max(1)) as f64;
+    let dispatch_overhead_ns =
+        (sharded - serial * frac).clamp(OVERHEAD_CLAMP.0, OVERHEAD_CLAMP.1);
+
+    (
+        Calibration {
+            dispatch_overhead_ns,
+            fits,
+        },
+        rows_out,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{select_format_in, Objective};
+    use crate::costmodel::{Criterion4, EnergyModel, ExecContext};
+    use crate::stats::synth::spike_and_slab;
+
+    fn sample() -> Calibration {
+        Calibration {
+            dispatch_overhead_ns: 812.5,
+            fits: vec![
+                BackendFit {
+                    backend: KernelBackend::Scalar,
+                    scale: [1.25, 0.75, 2.0, 3.5],
+                    intercept_ns: [10.0, 0.0, 4.5, 0.25],
+                },
+                BackendFit {
+                    backend: KernelBackend::Simd,
+                    scale: [0.5, 0.25, 2.0, 3.5],
+                    intercept_ns: [0.0; 4],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_identically() {
+        let cal = sample();
+        let text = cal.to_json_string();
+        let back = Calibration::parse_str(&text).expect("own emission must parse");
+        // f64 Display is shortest-round-trip, so equality is exact.
+        assert_eq!(back, cal);
+        // An empty calibration round-trips too.
+        let empty = Calibration::default();
+        assert_eq!(
+            Calibration::parse_str(&empty.to_json_string()).unwrap(),
+            empty
+        );
+    }
+
+    #[test]
+    fn missing_fields_take_uncalibrated_defaults() {
+        let cal = Calibration::parse_str("{}").unwrap();
+        assert_eq!(cal.dispatch_overhead_ns, TimeModel::DISPATCH_OVERHEAD_NS);
+        assert!(cal.fits.is_empty());
+        // A fit with only the backend key: unit scales, zero intercepts.
+        let cal =
+            Calibration::parse_str(r#"{"fits": [{"backend": "simd"}]}"#).unwrap();
+        assert_eq!(cal.fits.len(), 1);
+        assert_eq!(cal.fits[0].backend, KernelBackend::Simd);
+        assert_eq!(cal.fits[0].scale, [1.0; 4]);
+        assert_eq!(cal.fits[0].intercept_ns, [0.0; 4]);
+        // Short arrays pad with the default.
+        let cal = Calibration::parse_str(
+            r#"{"fits": [{"backend": "scalar", "scale": [2.0, 3.0]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cal.fits[0].scale, [2.0, 3.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn garbage_documents_are_rejected() {
+        for bad in [
+            "",                                        // not JSON
+            "[1, 2]",                                  // not an object
+            "\"calibration\"",                         // not an object
+            r#"{"dispatch_overhead_ns": "fast"}"#,     // wrong type
+            r#"{"fits": 3}"#,                          // fits not an array
+            r#"{"fits": [7]}"#,                        // fit not an object
+            r#"{"fits": [{"scale": [1.0]}]}"#,         // fit missing backend
+            r#"{"fits": [{"backend": "cuda"}]}"#,      // unknown backend
+            r#"{"fits": [{"backend": "simd", "scale": 1.0}]}"#, // scale not array
+            r#"{"fits": [{"backend": "simd", "scale": ["x"]}]}"#, // non-numeric
+        ] {
+            assert!(Calibration::parse_str(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn apply_folds_constants_into_the_time_model() {
+        let cal = sample();
+        let base = TimeModel::default_model();
+        let fitted = cal.apply(&base, KernelBackend::Simd);
+        assert_eq!(fitted.dispatch_overhead_ns, 812.5);
+        assert_eq!(fitted.format_scale, [0.5, 0.25, 2.0, 3.5]);
+        // Kernel latencies are untouched — only the calibration fields move.
+        assert_eq!(fitted.add, base.add);
+        assert_eq!(fitted.rw, base.rw);
+        // No fit for the backend: scales stay at the bit-exact defaults,
+        // the measured overhead still applies.
+        let mut only_scalar = cal.clone();
+        only_scalar.fits.truncate(1);
+        let fitted = only_scalar.apply(&base, KernelBackend::Simd);
+        assert_eq!(fitted.format_scale, [1.0; 4]);
+        assert_eq!(fitted.dispatch_overhead_ns, 812.5);
+        // The default (identity) calibration reproduces the base model.
+        let id = Calibration::default().apply(&base, KernelBackend::Scalar);
+        assert_eq!(id.format_scale, base.format_scale);
+        assert_eq!(id.dispatch_overhead_ns, base.dispatch_overhead_ns);
+    }
+
+    /// Acceptance contract: the selector consumes fitted constants, and
+    /// its predicted winner agrees with the argmin computed directly
+    /// from the measured (synthetic) timings.
+    #[test]
+    fn selector_agrees_with_synthetic_measured_timings() {
+        let energy = EnergyModel::table_i();
+        let base = TimeModel::default_model();
+        let m = spike_and_slab(8, 255, 2);
+        // Under the uncalibrated model a sparse format wins on time.
+        let (before, crits_base) =
+            select_format_in(&m, &energy, &base, Objective::Time, ExecContext::SERIAL);
+        assert_ne!(before, FormatKind::Dense);
+
+        // Synthetic host measurement: every sparse kernel runs 100x
+        // slower than modeled; dense is exactly as modeled.
+        let mut scale = [100.0f64; 4];
+        scale[0] = 1.0; // Dense is slot 0 in FormatKind::ALL
+        let cal = Calibration {
+            dispatch_overhead_ns: 500.0,
+            fits: vec![BackendFit {
+                backend: KernelBackend::Scalar,
+                scale,
+                intercept_ns: [0.0; 4],
+            }],
+        };
+        let fitted = cal.apply(&base, KernelBackend::Scalar);
+        let (after, crits_fit) =
+            select_format_in(&m, &energy, &fitted, Objective::Time, ExecContext::SERIAL);
+
+        // Each fitted criterion is exactly the base criterion times its
+        // fitted slope (serial context: no sharding term).
+        for (i, (b, f)) in crits_base.iter().zip(crits_fit.iter()).enumerate() {
+            assert_eq!(f.time_ns, b.time_ns * scale[i], "format slot {i}");
+        }
+        // Agreement: the selector's winner is the argmin of the
+        // synthetic measured timings, computed here by hand.
+        let manual = FormatKind::ALL[argmin_time(&crits_fit)];
+        assert_eq!(after, manual);
+        assert_eq!(after, FormatKind::Dense, "the 100x penalty must flip the winner");
+    }
+
+    fn argmin_time(crits: &[Criterion4; 4]) -> usize {
+        let mut best = 0;
+        for i in 1..crits.len() {
+            if crits[i].time_ns < crits[best].time_ns {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn smoke_calibration_produces_sane_fits_and_rows() {
+        let (cal, rows) =
+            run_calibration(true, &[KernelBackend::Scalar]);
+        assert_eq!(cal.fits.len(), 1);
+        let fit = &cal.fits[0];
+        assert_eq!(fit.backend, KernelBackend::Scalar);
+        for (s, i) in fit.scale.iter().zip(fit.intercept_ns.iter()) {
+            assert!(s.is_finite() && (SCALE_CLAMP.0..=SCALE_CLAMP.1).contains(s));
+            assert!(i.is_finite() && *i >= 0.0);
+        }
+        assert!(
+            (OVERHEAD_CLAMP.0..=OVERHEAD_CLAMP.1).contains(&cal.dispatch_overhead_ns)
+        );
+        // 4 formats x 2 sizes x 1 backend.
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|r| r.measured_ns > 0.0 && r.modeled_ns > 0.0));
+        // The bench artifact is valid JSON with one row per measurement.
+        let doc = crate::util::json::parse(&bench_json(&rows)).expect("bench artifact parses");
+        assert_eq!(doc.get("calibration").unwrap().items().len(), 8);
+        // And the calibration artifact round-trips.
+        assert_eq!(Calibration::parse_str(&cal.to_json_string()).unwrap(), cal);
+    }
+}

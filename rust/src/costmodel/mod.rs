@@ -15,14 +15,20 @@
 //!   determinism + on-host calibration).
 //! * [`analytic`] — the closed-form storage/energy equations (1)–(12) and
 //!   the Theorem 1/2 / Corollary 2.1 bounds.
+//! * [`calibrate`] — `repro calibrate`: cache-ruined per-kernel
+//!   micro-benchmarks fitting measured-vs-modeled slopes per (format,
+//!   backend) plus the pool dispatch overhead, round-tripped through
+//!   `calibration.json`.
 
 pub mod analytic;
+pub mod calibrate;
 pub mod energy;
 pub mod opcount;
 pub mod time;
 pub mod trace;
 
 pub use analytic::DistStats;
+pub use calibrate::{run_calibration, BackendFit, CalRow, Calibration};
 pub use energy::{EnergyModel, MemTier};
 pub use opcount::{BaseOp, OpClass, OpTrace};
 pub use time::TimeModel;

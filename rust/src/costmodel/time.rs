@@ -24,6 +24,7 @@ use std::time::Instant;
 use super::energy::MemTier;
 use super::opcount::BaseOp;
 use crate::exec::ShardPlan;
+use crate::formats::FormatKind;
 
 /// Time model: ns per elementary operation.
 #[derive(Clone, Debug)]
@@ -34,6 +35,15 @@ pub struct TimeModel {
     pub mul: f64,
     /// read/write by tier (ns).
     pub rw: [f64; 4],
+    /// Per-dispatch pool overhead (ns) used by [`TimeModel::sharded_ns`].
+    /// Defaults to the guessed [`TimeModel::DISPATCH_OVERHEAD_NS`];
+    /// `repro calibrate` replaces it with a measured value.
+    pub dispatch_overhead_ns: f64,
+    /// Measured-vs-modeled wall-time ratio per format, indexed in
+    /// [`FormatKind::ALL`] order (see [`TimeModel::scale_for`]). All 1.0
+    /// (a bit-exact no-op on the time criterion) until calibration fits
+    /// real slopes for the host.
+    pub format_scale: [f64; 4],
 }
 
 impl TimeModel {
@@ -44,7 +54,21 @@ impl TimeModel {
             add: 0.25,
             mul: 0.3,
             rw: [0.5, 2.0, 6.0, 20.0],
+            dispatch_overhead_ns: Self::DISPATCH_OVERHEAD_NS,
+            format_scale: [1.0; 4],
         }
+    }
+
+    /// Calibrated slope for `kind`: the factor the selector multiplies
+    /// the trace-derived serial estimate by. Exactly 1.0 in the
+    /// uncalibrated model, so default-model rankings are bit-identical to
+    /// the historical ones.
+    pub fn scale_for(&self, kind: FormatKind) -> f64 {
+        let i = FormatKind::ALL
+            .iter()
+            .position(|&k| k == kind)
+            .expect("FormatKind::ALL covers every kind");
+        self.format_scale[i]
     }
 
     /// Cost in ns of one `op` on operands in tier `tier`.
@@ -101,7 +125,7 @@ impl TimeModel {
         if total == 0 || plan.shard_count() <= 1 {
             return serial_ns;
         }
-        serial_ns * (plan.max_work() as f64 / total as f64) + Self::DISPATCH_OVERHEAD_NS
+        serial_ns * (plan.max_work() as f64 / total as f64) + self.dispatch_overhead_ns
     }
 
     /// Measure per-op latencies on the host. Best-effort (subject to
@@ -116,7 +140,12 @@ impl TimeModel {
             time_streaming_loads(512 * 1024),
             time_streaming_loads(8 * 1024 * 1024),
         ];
-        TimeModel { add, mul, rw }
+        TimeModel {
+            add,
+            mul,
+            rw,
+            ..TimeModel::default_model()
+        }
     }
 }
 
@@ -208,6 +237,41 @@ mod tests {
         // Degenerate plans fall back to the serial estimate.
         assert_eq!(m.sharded_ns(serial, &ShardPlan::uniform(8, 1, 1)), serial);
         assert_eq!(m.sharded_ns(serial, &ShardPlan::from_prefix(&[0, 0, 0], 2)), serial);
+    }
+
+    /// Satellite contract: when no calibration has been applied, the
+    /// model must be bit-identical to the historical hard-coded one —
+    /// same dispatch constant, unit format scales, same serial estimate
+    /// at 1 thread.
+    #[test]
+    fn uncalibrated_model_is_bit_identical_to_historical_constants() {
+        let m = TimeModel::default_model();
+        assert_eq!(m.dispatch_overhead_ns, TimeModel::DISPATCH_OVERHEAD_NS);
+        for kind in FormatKind::ALL {
+            assert_eq!(m.scale_for(kind), 1.0);
+        }
+        // 1-thread (single-shard) estimates pass through untouched.
+        let serial = 123_456.789f64;
+        assert_eq!(m.sharded_ns(serial, &ShardPlan::uniform(64, 7, 1)), serial);
+        // Multi-shard estimates reproduce the historical formula exactly.
+        let plan = ShardPlan::uniform(16, 100, 4);
+        let want = serial * (plan.max_work() as f64 / plan.total_work() as f64)
+            + TimeModel::DISPATCH_OVERHEAD_NS;
+        assert_eq!(m.sharded_ns(serial, &plan), want);
+    }
+
+    /// A calibrated overhead flows through `sharded_ns` in place of the
+    /// hard-coded constant.
+    #[test]
+    fn calibrated_overhead_replaces_the_constant() {
+        let mut m = TimeModel::default_model();
+        m.dispatch_overhead_ns = 350.0;
+        let plan = ShardPlan::uniform(16, 100, 4);
+        let serial = 1_000_000.0;
+        let want = serial * 0.25 + 350.0;
+        assert!((m.sharded_ns(serial, &plan) - want).abs() < 1e-9);
+        // Degenerate plans still bypass the overhead entirely.
+        assert_eq!(m.sharded_ns(serial, &ShardPlan::uniform(8, 1, 1)), serial);
     }
 
     #[test]

@@ -60,6 +60,26 @@ impl ShardPlan {
         ShardPlan { bounds, work }
     }
 
+    /// [`ShardPlan::from_prefix`] with a minimum-work floor per shard:
+    /// the shard count is capped at `total_work / min_shard_work` (at
+    /// least 1), so a small layer is split across fewer lanes — or run
+    /// serially — instead of being diced into shards too small to fill a
+    /// kernel tile. `min_shard_work == 0` disables the floor and is
+    /// exactly [`ShardPlan::from_prefix`].
+    pub fn from_prefix_granular(prefix: &[u64], shards: usize, min_shard_work: u64) -> ShardPlan {
+        assert!(
+            !prefix.is_empty() && prefix[0] == 0,
+            "prefix sums must start at 0"
+        );
+        let total = *prefix.last().expect("prefix non-empty");
+        let cap = if min_shard_work == 0 {
+            shards
+        } else {
+            ((total / min_shard_work) as usize).max(1)
+        };
+        ShardPlan::from_prefix(prefix, shards.min(cap))
+    }
+
     /// Plan for uniform per-row cost (dense layouts: every row costs
     /// `cost_per_row` = cols).
     pub fn uniform(rows: usize, cost_per_row: u64, shards: usize) -> ShardPlan {
@@ -202,6 +222,25 @@ mod tests {
         let plan = ShardPlan::from_prefix(&prefix, 7);
         check_invariants(&plan, 2, 7, &prefix);
         assert_eq!(plan.shard_count(), 2);
+    }
+
+    #[test]
+    fn granular_floor_caps_shard_count() {
+        // 16 rows × 10 work each = 160 total.
+        let prefix: Vec<u64> = (0..=16u64).map(|r| r * 10).collect();
+        // Floor 50 → at most 3 shards even when 8 are requested.
+        let plan = ShardPlan::from_prefix_granular(&prefix, 8, 50);
+        assert_eq!(plan.shard_count(), 3);
+        check_invariants(&plan, 16, 3, &prefix);
+        // Floor larger than the total work → serial.
+        assert_eq!(ShardPlan::from_prefix_granular(&prefix, 8, 1000).shard_count(), 1);
+        // Zero floor → identical to the plain plan.
+        assert_eq!(
+            ShardPlan::from_prefix_granular(&prefix, 8, 0),
+            ShardPlan::from_prefix(&prefix, 8)
+        );
+        // A generous floor never *adds* shards past the request.
+        assert_eq!(ShardPlan::from_prefix_granular(&prefix, 2, 1).shard_count(), 2);
     }
 
     #[test]

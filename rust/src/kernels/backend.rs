@@ -1,0 +1,152 @@
+//! Kernel backend selection: scalar reference vs. SIMD.
+//!
+//! The scalar kernels in `dense_k`/`csr_k`/`cer_k`/`cser_k` are the
+//! *bit-exactness reference*: their per-row reduction order is frozen and
+//! every bit-identity contract in the repo (parallel == serial, fused ==
+//! unfused, pack round-trip `--verify`) is stated against them. The SIMD
+//! kernels in [`super::simd`] reassociate the per-row float sums (W-wide
+//! partial accumulators), so they are *opt-in only* and are checked by a
+//! tolerance-based differential suite (`tests/simd_differential.rs`)
+//! rather than by bit comparison.
+//!
+//! Policy, stated once:
+//!
+//! * [`KernelBackend::Scalar`] is the default everywhere — engine
+//!   construction, `--verify`, and every existing test path. Nothing
+//!   selects SIMD implicitly; even with `CER_KERNEL=simd` exported, only
+//!   the CLI front end consults the environment (via [`KernelBackend::from_env`]),
+//!   never the library.
+//! * [`KernelBackend::Simd`] must be requested explicitly (`--kernel simd`
+//!   or `--kernel auto` on a machine with vector units). Cer/Cser kernels
+//!   have no SIMD variant yet and silently fall back to scalar per layer.
+//!
+//! The choice is made **once at engine build** and stored in the engine;
+//! the hot loop dispatches on a plain enum match (no trait objects, no
+//! per-call feature detection — `is_x86_feature_detected!` caches, but we
+//! don't even pay the cached-load on the request path).
+
+/// Environment variable consulted by the CLI (only) to pick a default
+/// backend when `--kernel` is not given. Accepts the same values as the
+/// flag: `scalar`, `simd`, `auto`.
+pub const KERNEL_ENV: &str = "CER_KERNEL";
+
+/// Which inner-loop implementation the engine dispatches to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// The frozen-reduction-order reference kernels. Default.
+    #[default]
+    Scalar,
+    /// Vectorized dense/CSR kernels (AVX2/SSE2 on x86_64, NEON on
+    /// aarch64). Reassociates float sums; tolerance-tested, never the
+    /// default.
+    Simd,
+}
+
+impl KernelBackend {
+    /// `true` when this build target has a SIMD implementation at all.
+    ///
+    /// SSE2 is part of the x86_64 baseline and NEON is part of the
+    /// aarch64 baseline, so on those targets the answer is statically
+    /// `true`; AVX2 upgrades are detected at runtime inside the kernels
+    /// themselves. Every other architecture answers `false` and
+    /// [`KernelBackend::detect`] falls back to [`KernelBackend::Scalar`].
+    pub fn simd_supported() -> bool {
+        cfg!(any(target_arch = "x86_64", target_arch = "aarch64"))
+    }
+
+    /// The best backend for this host: [`KernelBackend::Simd`] when the
+    /// target has vector kernels, [`KernelBackend::Scalar`] otherwise.
+    /// This is what `--kernel auto` resolves to.
+    pub fn detect() -> KernelBackend {
+        if Self::simd_supported() {
+            KernelBackend::Simd
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+
+    /// Parse a `--kernel` / `CER_KERNEL` value. `auto` resolves through
+    /// [`KernelBackend::detect`] at parse time so the stored backend is
+    /// always concrete.
+    pub fn parse(s: &str) -> Result<KernelBackend, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            "auto" => Ok(KernelBackend::detect()),
+            other => Err(format!(
+                "unknown kernel backend {other:?} (expected scalar, simd, or auto)"
+            )),
+        }
+    }
+
+    /// Resolve the backend from [`KERNEL_ENV`], defaulting to scalar when
+    /// the variable is unset. A set-but-invalid value is an error — a
+    /// typo'd `CER_KERNEL=smid` silently running scalar would defeat the
+    /// point of the explicit policy.
+    pub fn from_env() -> Result<KernelBackend, String> {
+        match std::env::var(KERNEL_ENV) {
+            Ok(v) => Self::parse(&v).map_err(|e| format!("{KERNEL_ENV}: {e}")),
+            Err(_) => Ok(KernelBackend::Scalar),
+        }
+    }
+
+    /// Stable lowercase name (what benches and `calibration.json` record).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_three_documented_values() {
+        assert_eq!(KernelBackend::parse("scalar").unwrap(), KernelBackend::Scalar);
+        assert_eq!(KernelBackend::parse("simd").unwrap(), KernelBackend::Simd);
+        assert_eq!(KernelBackend::parse(" SIMD ").unwrap(), KernelBackend::Simd);
+        // `auto` resolves to whatever detect() says on this host; the
+        // invariant is that it parses and is concrete.
+        let auto = KernelBackend::parse("auto").unwrap();
+        assert_eq!(auto, KernelBackend::detect());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "smid", "avx2", "scalar,simd"] {
+            assert!(KernelBackend::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn detect_falls_back_to_scalar_without_vector_units() {
+        // On targets with no SIMD kernels detect() must answer Scalar;
+        // on x86_64/aarch64 it must answer Simd. Both sides of the
+        // contract are asserted so the test is meaningful everywhere.
+        if KernelBackend::simd_supported() {
+            assert_eq!(KernelBackend::detect(), KernelBackend::Simd);
+        } else {
+            assert_eq!(KernelBackend::detect(), KernelBackend::Scalar);
+        }
+        assert_eq!(
+            KernelBackend::simd_supported(),
+            cfg!(any(target_arch = "x86_64", target_arch = "aarch64"))
+        );
+    }
+
+    #[test]
+    fn default_is_scalar() {
+        assert_eq!(KernelBackend::default(), KernelBackend::Scalar);
+        assert_eq!(KernelBackend::Scalar.name(), "scalar");
+        assert_eq!(KernelBackend::Simd.to_string(), "simd");
+    }
+}

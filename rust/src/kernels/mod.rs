@@ -35,12 +35,15 @@
 //! performs the exact same `acc + bias[r]` add followed by the same
 //! `< 0.0` clamp the post-pass did, in the same order.
 
+pub mod backend;
 pub(crate) mod cer_k;
 pub(crate) mod cser_k;
 mod csr_k;
 mod dense_k;
 pub mod packed;
+pub(crate) mod simd;
 
+pub use backend::KernelBackend;
 pub use cer_k::{cer_matmul_colmajor, cer_matvec, cer_matvec_range, cer_matvec_range_epi};
 pub use cser_k::{cser_matmul_colmajor, cser_matvec, cser_matvec_range, cser_matvec_range_epi};
 pub use csr_k::{csr_matmul_colmajor, csr_matvec, csr_matvec_range, csr_matvec_range_epi};
@@ -259,6 +262,79 @@ impl AnyMatrix {
         }
     }
 
+    /// `y = M·x` through an explicit [`KernelBackend`].
+    ///
+    /// [`KernelBackend::Scalar`] is bit-identical to [`AnyMatrix::matvec`]
+    /// (it *is* that code path). [`KernelBackend::Simd`] runs the
+    /// vectorized dense/CSR kernels — numerically close but reassociated,
+    /// see [`crate::kernels::backend`] — and falls back to the scalar
+    /// kernels for CER/CSER, which have no SIMD variant.
+    pub fn matvec_backend(&self, backend: KernelBackend, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols(), "x length");
+        assert_eq!(y.len(), self.rows(), "y length");
+        let sum_x = self.rhs_sum(x);
+        self.matvec_range_with_backend(backend, 0..self.rows(), x, y, sum_x, None);
+    }
+
+    /// Backend-aware form of [`AnyMatrix::matvec_range_with`]: SIMD for
+    /// dense/CSR, the unchanged scalar path for everything else (and for
+    /// [`KernelBackend::Scalar`], where it is byte-for-byte the same
+    /// dispatch).
+    fn matvec_range_with_backend(
+        &self,
+        backend: KernelBackend,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &mut [f32],
+        sum_x: f32,
+        epi: Option<&Epilogue<'_>>,
+    ) {
+        match (backend, self) {
+            (KernelBackend::Simd, AnyMatrix::Dense(m)) => {
+                simd::dense_matvec_rows_simd(m, rows, x, y, epi)
+            }
+            (KernelBackend::Simd, AnyMatrix::Csr(m)) => {
+                simd::csr_matvec_rows_simd(m, rows, x, y, epi)
+            }
+            _ => self.matvec_range_with(rows, x, y, sum_x, epi),
+        }
+    }
+
+    /// Parallel `y = M·x` through an explicit [`KernelBackend`] — the
+    /// sharded driver [`AnyMatrix::matvec_sharded`] with the kernel
+    /// dispatch of [`AnyMatrix::matvec_backend`]. With
+    /// [`KernelBackend::Scalar`] this is bit-identical to
+    /// [`AnyMatrix::matvec_sharded`].
+    pub fn matvec_sharded_backend(
+        &self,
+        backend: KernelBackend,
+        x: &[f32],
+        y: &mut [f32],
+        plan: &ShardPlan,
+        pool: &ThreadPool,
+    ) {
+        assert_eq!(x.len(), self.cols(), "x length");
+        assert_eq!(y.len(), self.rows(), "y length");
+        assert_eq!(plan.rows(), self.rows(), "plan/matrix row mismatch");
+        let sum_x = self.rhs_sum(x);
+        if plan.shard_count() <= 1 || pool.workers() == 0 {
+            return self.matvec_range_with_backend(backend, 0..self.rows(), x, y, sum_x, None);
+        }
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(plan.shard_count());
+        let mut rest: &mut [f32] = y;
+        for r in plan.shards() {
+            let slab = rest;
+            let (mine, tail) = slab.split_at_mut(r.len());
+            rest = tail;
+            tasks.push(Box::new(move || {
+                self.matvec_range_with_backend(backend, r, x, mine, sum_x, None)
+            }));
+        }
+        debug_assert!(rest.is_empty());
+        pool.run_scoped(tasks);
+    }
+
     /// The implicit codebook value Ω[0] when this format carries the
     /// decomposition correction (0.0 otherwise — also for dense/CSR,
     /// which store every non-zero explicitly).
@@ -307,6 +383,15 @@ impl AnyMatrix {
     /// Computed once per layer and reused for every product.
     pub fn shard_plan(&self, shards: usize) -> ShardPlan {
         ShardPlan::from_prefix(&self.work_prefix(), shards)
+    }
+
+    /// [`AnyMatrix::shard_plan`] with a minimum-work floor per shard —
+    /// the tile-aware granularity the SIMD backend wants: a shard so
+    /// small that its rows never fill a vector tile pays dispatch
+    /// overhead for no vector throughput, so tiny layers collapse to
+    /// fewer (possibly one) shards instead.
+    pub fn shard_plan_granular(&self, shards: usize, min_shard_work: u64) -> ShardPlan {
+        ShardPlan::from_prefix_granular(&self.work_prefix(), shards, min_shard_work)
     }
 
     /// Parallel `y = M·x` over `plan`'s shards. Bit-identical to
@@ -504,6 +589,37 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => csr_k::csr_matmul_cells(m, rows, x, y, l, epi),
             AnyMatrix::Cer(m) => cer_k::cer_matmul_cells(m, rows, x, y, l, col_sums, epi),
             AnyMatrix::Cser(m) => cser_k::cser_matmul_cells(m, rows, x, y, l, col_sums, epi),
+        }
+    }
+
+    /// [`AnyMatrix::matmul_cells_epi`] through an explicit
+    /// [`KernelBackend`]: with [`KernelBackend::Simd`], dense and CSR
+    /// layers run the wide-tile vectorized kernels; CER/CSER (no SIMD
+    /// variant) and [`KernelBackend::Scalar`] take the unchanged scalar
+    /// dispatch, so a scalar-backend engine is byte-for-byte the
+    /// historical code path.
+    ///
+    /// # Safety
+    /// No other thread may access rows `rows` of `y` during the call.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn matmul_cells_epi_with(
+        &self,
+        backend: KernelBackend,
+        rows: Range<usize>,
+        x: &[f32],
+        y: &[SyncCell],
+        l: usize,
+        col_sums: &[f32],
+        epi: Option<&Epilogue<'_>>,
+    ) {
+        match (backend, self) {
+            (KernelBackend::Simd, AnyMatrix::Dense(m)) => {
+                simd::dense_matmul_cells_simd(m, rows, x, y, l, epi)
+            }
+            (KernelBackend::Simd, AnyMatrix::Csr(m)) => {
+                simd::csr_matmul_cells_simd(m, rows, x, y, l, epi)
+            }
+            _ => self.matmul_cells_epi(rows, x, y, l, col_sums, epi),
         }
     }
 
@@ -735,6 +851,36 @@ mod tests {
         let mut got = [0.0f32; 3];
         correction_col_sums_into(&x, 4, 3, &mut got);
         assert_eq!(&got[..], &want[..]);
+    }
+
+    #[test]
+    fn scalar_backend_is_bit_identical_to_default_path() {
+        // matvec_backend(Scalar) must be the same code path as matvec —
+        // assert_eq!, not tolerance, across every format.
+        let m = paper_example_matrix();
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) * 0.5 - 2.0).collect();
+        for kind in FormatKind::ALL {
+            let a = AnyMatrix::encode(kind, &m);
+            let mut want = vec![0.0; 5];
+            a.matvec(&x, &mut want);
+            let mut got = vec![0.0; 5];
+            a.matvec_backend(KernelBackend::Scalar, &x, &mut got);
+            assert_eq!(got, want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn granular_plan_collapses_small_layers() {
+        // A 5×12 layer at a 4096-work floor cannot fill even one shard:
+        // the granular plan must be serial while the plain plan shards.
+        let a = AnyMatrix::encode(FormatKind::Dense, &paper_example_matrix());
+        assert!(a.shard_plan(4).shard_count() > 1);
+        assert_eq!(a.shard_plan_granular(4, 4096).shard_count(), 1);
+        // A zero floor is the plain plan.
+        assert_eq!(
+            a.shard_plan_granular(4, 0).shard_count(),
+            a.shard_plan(4).shard_count()
+        );
     }
 
     #[test]

@@ -1,0 +1,765 @@
+//! Vectorized dense/CSR kernels — the opt-in [`super::KernelBackend::Simd`]
+//! paths.
+//!
+//! These kernels compute the same products as `dense_k`/`csr_k` but
+//! accumulate each row in W-wide partial sums (W = 8 on AVX2, 4 on
+//! SSE2/NEON) that are reduced horizontally at the end of the row. That
+//! **reassociates the float additions**, so outputs are *numerically
+//! close* to the scalar reference (relative error on the order of one ulp
+//! per reassociated add) but not bit-identical. Consequently:
+//!
+//! * nothing in the crate calls these kernels unless the engine was
+//!   explicitly given [`super::KernelBackend::Simd`];
+//! * correctness is asserted by the tolerance-based differential suite
+//!   (`tests/simd_differential.rs` and the in-module tests below), never
+//!   by `assert_eq!` against the scalar path.
+//!
+//! The multi-rhs matmul tiles are widened from the scalar kernels' 4
+//! columns to 8 and 16: the dense kernel streams each weight row once per
+//! 16 (then 8) rhs columns with a vector dot per column-octet, and the CSR
+//! kernel reuses each row's value/index stream across an 8-column tile.
+//! Remainder columns fall through to the vectorized matvec per column.
+//!
+//! ISA selection: SSE2 is part of the x86_64 baseline and NEON part of
+//! the aarch64 baseline, so those paths need no runtime check; AVX2 is
+//! detected once per kernel call via `is_x86_feature_detected!` (cached
+//! by std) and hoisted out of the row loops. On targets with neither
+//! vector ISA every entry point here delegates to the scalar kernels, so
+//! `KernelBackend::Simd` degrades to correct (and bit-identical) scalar
+//! execution rather than failing.
+
+use std::ops::Range;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::finish;
+use super::Epilogue;
+use crate::exec::SyncCell;
+use crate::formats::{Csr, Dense};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::with_col_indices;
+
+/// Element width of a typed column-index slice — lets the `u8`/`u16`/`u32`
+/// arms of [`with_col_indices!`] share one monomorphic gather kernel via a
+/// `(*const u8, idx_bytes)` pair instead of a generic parameter (generics
+/// and `#[target_feature]` don't mix).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn elem_size<T>(_s: &[T]) -> usize {
+    std::mem::size_of::<T>()
+}
+
+/// Byte-pointer view of a typed index slice (companion of [`elem_size`];
+/// generic so the `u8` arm of the macro doesn't cast a pointer to its own
+/// type).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn slice_ptr_bytes<T>(s: &[T]) -> *const u8 {
+    s.as_ptr() as *const u8
+}
+
+/// Decode the `i`-th column index from a raw index array of `idx_bytes`-
+/// wide elements.
+///
+/// # Safety
+/// `base` must point to at least `(i + 1) * idx_bytes` readable bytes.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn load_idx(base: *const u8, idx_bytes: usize, i: usize) -> usize {
+    match idx_bytes {
+        1 => *base.add(i) as usize,
+        2 => (base.add(i * 2) as *const u16).read_unaligned() as usize,
+        _ => (base.add(i * 4) as *const u32).read_unaligned() as usize,
+    }
+}
+
+/// `true` when the preferred (wider) ISA variant is available: AVX2 on
+/// x86_64. On aarch64 NEON is the only variant, so the flag is inert.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn fast_isa() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn fast_isa() -> bool {
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Per-ISA dot primitives. Each returns one (or eight) f32 dot products with
+// W-wide reassociated accumulation; drivers below are ISA-agnostic.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 (checked by the caller via `fast_isa`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(row: &[f32], x: &[f32]) -> f32 {
+        let n = row.len().min(x.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_add_ps(
+                acc0,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(i)),
+                    _mm256_loadu_ps(x.as_ptr().add(i)),
+                ),
+            );
+            acc1 = _mm256_add_ps(
+                acc1,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(i + 8)),
+                    _mm256_loadu_ps(x.as_ptr().add(i + 8)),
+                ),
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_add_ps(
+                acc0,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(i)),
+                    _mm256_loadu_ps(x.as_ptr().add(i)),
+                ),
+            );
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+        let mut s: f32 = lanes.iter().sum();
+        while i < n {
+            s += row[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86_64 baseline; only the raw loads are unsafe
+    /// and stay within `row`/`x` bounds.
+    pub(super) unsafe fn dot_sse2(row: &[f32], x: &[f32]) -> f32 {
+        let n = row.len().min(x.len());
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = _mm_add_ps(
+                acc0,
+                _mm_mul_ps(_mm_loadu_ps(row.as_ptr().add(i)), _mm_loadu_ps(x.as_ptr().add(i))),
+            );
+            acc1 = _mm_add_ps(
+                acc1,
+                _mm_mul_ps(
+                    _mm_loadu_ps(row.as_ptr().add(i + 4)),
+                    _mm_loadu_ps(x.as_ptr().add(i + 4)),
+                ),
+            );
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = _mm_add_ps(
+                acc0,
+                _mm_mul_ps(_mm_loadu_ps(row.as_ptr().add(i)), _mm_loadu_ps(x.as_ptr().add(i))),
+            );
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), _mm_add_ps(acc0, acc1));
+        let mut s: f32 = lanes.iter().sum();
+        while i < n {
+            s += row[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// One weight row against eight rhs columns.
+    ///
+    /// # Safety
+    /// Requires AVX2; every `xs[k]` must be at least `row.len()` long.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot8_avx2(row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+        let n = row.len();
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(row.as_ptr().add(i));
+            for (acc_k, xk) in acc.iter_mut().zip(xs.iter()) {
+                *acc_k = _mm256_add_ps(*acc_k, _mm256_mul_ps(a, _mm256_loadu_ps(xk.as_ptr().add(i))));
+            }
+            i += 8;
+        }
+        let mut out = [0.0f32; 8];
+        for ((o, acc_k), xk) in out.iter_mut().zip(acc.iter()).zip(xs.iter()) {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), *acc_k);
+            let mut s: f32 = lanes.iter().sum();
+            let mut j = i;
+            while j < n {
+                s += row[j] * xk[j];
+                j += 1;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    /// # Safety
+    /// Every `xs[k]` must be at least `row.len()` long.
+    pub(super) unsafe fn dot8_sse2(row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+        let n = row.len();
+        let mut acc = [_mm_setzero_ps(); 8];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let a = _mm_loadu_ps(row.as_ptr().add(i));
+            for (acc_k, xk) in acc.iter_mut().zip(xs.iter()) {
+                *acc_k = _mm_add_ps(*acc_k, _mm_mul_ps(a, _mm_loadu_ps(xk.as_ptr().add(i))));
+            }
+            i += 4;
+        }
+        let mut out = [0.0f32; 8];
+        for ((o, acc_k), xk) in out.iter_mut().zip(acc.iter()).zip(xs.iter()) {
+            let mut lanes = [0.0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), *acc_k);
+            let mut s: f32 = lanes.iter().sum();
+            let mut j = i;
+            while j < n {
+                s += row[j] * xk[j];
+                j += 1;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    /// Sparse dot: values `vals` (global index offset `start` into the
+    /// column array) against gathered `x` entries, 8 at a time.
+    ///
+    /// # Safety
+    /// Requires AVX2; `cols` must hold at least `start + vals.len()`
+    /// indices of width `idx_bytes`, each `< x.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn csr_dot_avx2(
+        vals: &[f32],
+        cols: *const u8,
+        idx_bytes: usize,
+        start: usize,
+        x: &[f32],
+    ) -> f32 {
+        let n = vals.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut gather = [0.0f32; 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            for (k, g) in gather.iter_mut().enumerate() {
+                *g = *x.get_unchecked(super::load_idx(cols, idx_bytes, start + i + k));
+            }
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(_mm256_loadu_ps(vals.as_ptr().add(i)), _mm256_loadu_ps(gather.as_ptr())),
+            );
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s: f32 = lanes.iter().sum();
+        while i < n {
+            s += vals[i] * x[super::load_idx(cols, idx_bytes, start + i)];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Same index contract as [`csr_dot_avx2`]; SSE2 is baseline.
+    pub(super) unsafe fn csr_dot_sse2(
+        vals: &[f32],
+        cols: *const u8,
+        idx_bytes: usize,
+        start: usize,
+        x: &[f32],
+    ) -> f32 {
+        let n = vals.len();
+        let mut acc = _mm_setzero_ps();
+        let mut gather = [0.0f32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            for (k, g) in gather.iter_mut().enumerate() {
+                *g = *x.get_unchecked(super::load_idx(cols, idx_bytes, start + i + k));
+            }
+            acc = _mm_add_ps(
+                acc,
+                _mm_mul_ps(_mm_loadu_ps(vals.as_ptr().add(i)), _mm_loadu_ps(gather.as_ptr())),
+            );
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s: f32 = lanes.iter().sum();
+        while i < n {
+            s += vals[i] * x[super::load_idx(cols, idx_bytes, start + i)];
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is part of the aarch64 baseline; only the raw loads are unsafe
+    /// and stay within `row`/`x` bounds.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(row: &[f32], x: &[f32]) -> f32 {
+        let n = row.len().min(x.len());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vaddq_f32(
+                acc0,
+                vmulq_f32(vld1q_f32(row.as_ptr().add(i)), vld1q_f32(x.as_ptr().add(i))),
+            );
+            acc1 = vaddq_f32(
+                acc1,
+                vmulq_f32(vld1q_f32(row.as_ptr().add(i + 4)), vld1q_f32(x.as_ptr().add(i + 4))),
+            );
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vaddq_f32(
+                acc0,
+                vmulq_f32(vld1q_f32(row.as_ptr().add(i)), vld1q_f32(x.as_ptr().add(i))),
+            );
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += row[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Every `xs[k]` must be at least `row.len()` long.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot8_neon(row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+        let n = row.len();
+        let mut acc = [vdupq_n_f32(0.0); 8];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let a = vld1q_f32(row.as_ptr().add(i));
+            for (acc_k, xk) in acc.iter_mut().zip(xs.iter()) {
+                *acc_k = vaddq_f32(*acc_k, vmulq_f32(a, vld1q_f32(xk.as_ptr().add(i))));
+            }
+            i += 4;
+        }
+        let mut out = [0.0f32; 8];
+        for ((o, acc_k), xk) in out.iter_mut().zip(acc.iter()).zip(xs.iter()) {
+            let mut s = vaddvq_f32(*acc_k);
+            let mut j = i;
+            while j < n {
+                s += row[j] * xk[j];
+                j += 1;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    /// # Safety
+    /// `cols` must hold at least `start + vals.len()` indices of width
+    /// `idx_bytes`, each `< x.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn csr_dot_neon(
+        vals: &[f32],
+        cols: *const u8,
+        idx_bytes: usize,
+        start: usize,
+        x: &[f32],
+    ) -> f32 {
+        let n = vals.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut gather = [0.0f32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            for (k, g) in gather.iter_mut().enumerate() {
+                *g = *x.get_unchecked(super::load_idx(cols, idx_bytes, start + i + k));
+            }
+            acc = vaddq_f32(
+                acc,
+                vmulq_f32(vld1q_f32(vals.as_ptr().add(i)), vld1q_f32(gather.as_ptr())),
+            );
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += vals[i] * x[super::load_idx(cols, idx_bytes, start + i)];
+            i += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ISA-agnostic dispatch shims (one branch per *row*, on a flag hoisted out
+// of the kernel loops by the drivers).
+// ---------------------------------------------------------------------------
+
+/// # Safety
+/// `x.len() >= row.len()` is not required (the shorter length wins), but
+/// on x86_64 `fast` must only be true when AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn row_dot(fast: bool, row: &[f32], x: &[f32]) -> f32 {
+    if fast {
+        x86::dot_avx2(row, x)
+    } else {
+        x86::dot_sse2(row, x)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+unsafe fn row_dot(_fast: bool, row: &[f32], x: &[f32]) -> f32 {
+    neon::dot_neon(row, x)
+}
+
+/// # Safety
+/// Every `xs[k].len() >= row.len()`; `fast` as in [`row_dot`].
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn row_dot8(fast: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+    if fast {
+        x86::dot8_avx2(row, xs)
+    } else {
+        x86::dot8_sse2(row, xs)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+unsafe fn row_dot8(_fast: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+    neon::dot8_neon(row, xs)
+}
+
+/// # Safety
+/// `cols` must hold `start + vals.len()` indices of width `idx_bytes`,
+/// each `< x.len()`; `fast` as in [`row_dot`].
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn csr_dot(fast: bool, vals: &[f32], cols: *const u8, idx_bytes: usize, start: usize, x: &[f32]) -> f32 {
+    if fast {
+        x86::csr_dot_avx2(vals, cols, idx_bytes, start, x)
+    } else {
+        x86::csr_dot_sse2(vals, cols, idx_bytes, start, x)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+unsafe fn csr_dot(_fast: bool, vals: &[f32], cols: *const u8, idx_bytes: usize, start: usize, x: &[f32]) -> f32 {
+    neon::csr_dot_neon(vals, cols, idx_bytes, start, x)
+}
+
+// ---------------------------------------------------------------------------
+// Drivers — the entry points `AnyMatrix` dispatches to for
+// `KernelBackend::Simd`. Signatures mirror the scalar kernels exactly.
+// ---------------------------------------------------------------------------
+
+/// Vectorized counterpart of `dense_k::dense_matvec_rows` (tolerance
+/// contract, not bit-identity).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(crate) fn dense_matvec_rows_simd(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    let fast = fast_isa();
+    for (out, r) in y.iter_mut().zip(rows) {
+        // SAFETY: vector loads stay within row/x bounds (shorter length
+        // wins inside the primitive); `fast` implies AVX2 on x86_64.
+        let acc = unsafe { row_dot(fast, m.row(r), x) };
+        *out = finish(epi, r, acc);
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) fn dense_matvec_rows_simd(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    super::dense_k::dense_matvec_rows(m, rows, x, y, epi);
+}
+
+/// Vectorized counterpart of `csr_k`'s row-range matvec.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(crate) fn csr_matvec_rows_simd(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    let fast = fast_isa();
+    let values: &[f32] = &m.values;
+    let row_ptr: &[u32] = &m.row_ptr;
+    with_col_indices!(&m.col_idx, ci => {
+        let cols_base = slice_ptr_bytes(ci);
+        let idx_bytes = elem_size(ci);
+        for (out, r) in y.iter_mut().zip(rows) {
+            let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            // SAFETY: CSR construction guarantees every column index is
+            // `< cols == x.len()` and `e <= values.len() == ci.len()`.
+            let acc = unsafe { csr_dot(fast, &values[s..e], cols_base, idx_bytes, s, x) };
+            *out = finish(epi, r, acc);
+        }
+    });
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) fn csr_matvec_rows_simd(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    match epi {
+        Some(e) => super::csr_k::csr_matvec_range_epi(m, rows, x, y, e),
+        None => super::csr_k::csr_matvec_range(m, rows, x, y),
+    }
+}
+
+/// Vectorized counterpart of `dense_k::dense_matmul_cells` with the tile
+/// widened from 4 to 16/8 rhs columns.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (same
+/// contract as the scalar kernel).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(crate) unsafe fn dense_matmul_cells_simd(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let fast = fast_isa();
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    let mut c = 0usize;
+    while c + 16 <= l {
+        let lo: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + k) * n..(c + k + 1) * n]);
+        let hi: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + 8 + k) * n..(c + 8 + k + 1) * n]);
+        for r in rows.clone() {
+            let row = m.row(r);
+            let a = row_dot8(fast, row, &lo);
+            let b = row_dot8(fast, row, &hi);
+            for (k, v) in a.iter().enumerate() {
+                y[(c + k) * m_total + r].set(finish(epi, r, *v));
+            }
+            for (k, v) in b.iter().enumerate() {
+                y[(c + 8 + k) * m_total + r].set(finish(epi, r, *v));
+            }
+        }
+        c += 16;
+    }
+    while c + 8 <= l {
+        let xs: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + k) * n..(c + k + 1) * n]);
+        for r in rows.clone() {
+            let out = row_dot8(fast, m.row(r), &xs);
+            for (k, v) in out.iter().enumerate() {
+                y[(c + k) * m_total + r].set(finish(epi, r, *v));
+            }
+        }
+        c += 8;
+    }
+    for c in c..l {
+        let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+        // SAFETY: this shard exclusively owns rows `rows` of every column.
+        let yc = crate::exec::cells_as_mut(seg);
+        dense_matvec_rows_simd(m, rows.clone(), &x[c * n..(c + 1) * n], yc, epi);
+    }
+}
+
+/// # Safety
+/// Same contract as `dense_k::dense_matmul_cells`.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) unsafe fn dense_matmul_cells_simd(
+    m: &Dense,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    super::dense_k::dense_matmul_cells(m, rows, x, y, l, epi);
+}
+
+/// Vectorized counterpart of `csr_k::csr_matmul_cells` with the tile
+/// widened from 4 to 8 rhs columns (one value/index stream pass per 8
+/// samples, each column's dot vectorized along the non-zeros).
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(crate) unsafe fn csr_matmul_cells_simd(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let fast = fast_isa();
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    let values: &[f32] = &m.values;
+    let row_ptr: &[u32] = &m.row_ptr;
+    with_col_indices!(&m.col_idx, ci => {
+        let cols_base = slice_ptr_bytes(ci);
+        let idx_bytes = elem_size(ci);
+        let mut c = 0usize;
+        while c + 8 <= l {
+            let xs: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + k) * n..(c + k + 1) * n]);
+            for r in rows.clone() {
+                let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                let vals = &values[s..e];
+                for (k, xk) in xs.iter().enumerate() {
+                    let acc = csr_dot(fast, vals, cols_base, idx_bytes, s, xk);
+                    y[(c + k) * m_total + r].set(finish(epi, r, acc));
+                }
+            }
+            c += 8;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            csr_matvec_rows_simd(m, rows.clone(), &x[c * n..(c + 1) * n], yc, epi);
+        }
+    });
+}
+
+/// # Safety
+/// Same contract as `csr_k::csr_matmul_cells`.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) unsafe fn csr_matmul_cells_simd(
+    m: &Csr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    super::csr_k::csr_matmul_cells(m, rows, x, y, l, epi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{csr_matvec, dense_matvec};
+    use crate::util::Rng;
+
+    fn assert_close(got: &[f32], want: &[f32]) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-5 + 1e-4 * w.abs();
+            assert!((g - w).abs() <= tol, "idx {i}: {g} vs {w}");
+        }
+    }
+
+    fn random_dense(rows: usize, cols: usize, seed: u64) -> Dense {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    0.0
+                } else {
+                    rng.f32() * 2.0 - 1.0
+                }
+            })
+            .collect();
+        Dense::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn dense_matvec_matches_scalar_within_tolerance() {
+        for cols in [1usize, 3, 7, 8, 17, 64, 100] {
+            let m = random_dense(9, cols, 0x51D + cols as u64);
+            let x: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.17 - 1.2).collect();
+            let mut want = vec![0.0; 9];
+            dense_matvec(&m, &x, &mut want);
+            let mut got = vec![0.0; 9];
+            dense_matvec_rows_simd(&m, 0..9, &x, &mut got, None);
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn csr_matvec_matches_scalar_within_tolerance() {
+        for cols in [5usize, 40, 300] {
+            let m = random_dense(11, cols, 0xC5A + cols as u64);
+            let csr = Csr::from_dense(&m);
+            let x: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.05 - 0.7).collect();
+            let mut want = vec![0.0; 11];
+            csr_matvec(&csr, &x, &mut want);
+            let mut got = vec![0.0; 11];
+            csr_matvec_rows_simd(&csr, 0..11, &x, &mut got, None);
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn wide_tiles_match_per_column_matvec() {
+        let m = random_dense(6, 33, 0x71E);
+        let csr = Csr::from_dense(&m);
+        for l in [1usize, 7, 8, 9, 16, 17, 24] {
+            let mut rng = Rng::new(l as u64 + 1);
+            let x: Vec<f32> = (0..33 * l).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let bias: Vec<f32> = (0..6).map(|r| r as f32 * 0.25 - 0.5).collect();
+            for relu in [false, true] {
+                let epi = Epilogue { bias: &bias, relu };
+                let mut dense_got = vec![0.0; 6 * l];
+                let cells = crate::exec::as_cells(&mut dense_got);
+                // SAFETY: exclusively borrowed output, single caller.
+                unsafe { dense_matmul_cells_simd(&m, 0..6, &x, cells, l, Some(&epi)) };
+                let mut csr_got = vec![0.0; 6 * l];
+                let cells = crate::exec::as_cells(&mut csr_got);
+                // SAFETY: exclusively borrowed output, single caller.
+                unsafe { csr_matmul_cells_simd(&csr, 0..6, &x, cells, l, Some(&epi)) };
+                for c in 0..l {
+                    let mut want = vec![0.0; 6];
+                    dense_matvec(&m, &x[c * 33..(c + 1) * 33], &mut want);
+                    for (r, v) in want.iter_mut().enumerate() {
+                        *v += bias[r];
+                        if relu && *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    assert_close(&dense_got[c * 6..(c + 1) * 6], &want);
+                    assert_close(&csr_got[c * 6..(c + 1) * 6], &want);
+                }
+            }
+        }
+    }
+}

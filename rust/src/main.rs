@@ -65,7 +65,7 @@ impl Args {
     }
 }
 
-fn eval_config(a: &Args) -> EvalConfig {
+fn eval_config(a: &Args) -> anyhow::Result<EvalConfig> {
     let mut cfg = EvalConfig {
         seed: a.get("seed", 0xCE5Eu64),
         scale: a.get("scale", 1usize),
@@ -82,7 +82,22 @@ fn eval_config(a: &Args) -> EvalConfig {
             cfg.time.add, cfg.time.mul, cfg.time.rw
         );
     }
-    cfg
+    let cal_path = a.get_str("calibration", "");
+    if !cal_path.is_empty() {
+        let text = std::fs::read_to_string(&cal_path)
+            .map_err(|e| anyhow::anyhow!("reading {cal_path}: {e}"))?;
+        let cal = cer::costmodel::Calibration::parse_str(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {cal_path}: {e}"))?;
+        // The fit for the backend the engines will actually run (see
+        // --kernel); absent fits leave the analytic scales at 1.0.
+        let backend = kernel_flag(a)?;
+        cfg.time = cal.apply(&cfg.time, backend);
+        eprintln!(
+            "applied {cal_path} ({backend} fit): format scales {:?}, dispatch {:.0} ns",
+            cfg.time.format_scale, cfg.time.dispatch_overhead_ns
+        );
+    }
+    Ok(cfg)
 }
 
 fn out_dir(a: &Args) -> PathBuf {
@@ -178,6 +193,16 @@ System commands:
                              metric and exits 2 (gating inert) so CI logs
                              can't mistake it for a pass; --update
                              rewrites the baseline
+  calibrate                  micro-benchmark the matvec kernels (cache-
+                             ruined, best-of-N) and fit measured
+                             per-(format, backend) time-model scales +
+                             intercepts and the pool dispatch overhead;
+                             writes --out (default calibration.json,
+                             consumed via --calibration) and --bench-out
+                             (default BENCH_calibration.json, tracked by
+                             the CI bench gate). --smoke shrinks sizes
+                             for CI; --kernel scalar|simd|auto|all picks
+                             the backends to fit (default all supported)
   inspect --net <name>       print layer statistics of a synthesized net
   help                       this text
 
@@ -209,6 +234,16 @@ Common flags:
   --requests N      demo request count for the serve commands
   --verify          (serve <pack>) assert every reply equals the
                     owned-storage cold-start path bit-for-bit
+  --kernel K        inner-loop implementation for e2e/serve engines:
+                    scalar (default — frozen reduction order, the repo's
+                    bit-exactness reference), simd (AVX2/SSE2 on x86_64,
+                    NEON on aarch64; reassociated sums, tolerance-tested,
+                    never implicit), auto (simd when the target has
+                    vector kernels). Falls back to the CER_KERNEL env
+                    var, then scalar. `serve --verify` forces scalar
+  --calibration F   apply fitted time-model constants from a
+                    `repro calibrate` output file to modeled tables and
+                    format selection (the fit for the --kernel backend)
 ";
 
 /// `--threads` as an explicit request: a number, or `auto`/`0` for all
@@ -219,6 +254,20 @@ fn threads_flag(a: &Args) -> Option<usize> {
         Some(0)
     } else {
         v.parse().ok()
+    }
+}
+
+/// `--kernel {scalar,simd,auto}` (shared by e2e/serve/calibrate and the
+/// `--calibration` flag): which inner-loop implementation engines built
+/// by this command dispatch to. Absent flag falls back to the
+/// `CER_KERNEL` env var, then to scalar — the frozen-reduction-order
+/// bit-exactness reference. Only this front end ever reads the env var;
+/// library constructors always start scalar.
+fn kernel_flag(a: &Args) -> anyhow::Result<cer::kernels::KernelBackend> {
+    use cer::kernels::KernelBackend;
+    match a.flags.get("kernel") {
+        Some(v) => KernelBackend::parse(v).map_err(|e| anyhow::anyhow!("--kernel: {e}")),
+        None => KernelBackend::from_env().map_err(|e| anyhow::anyhow!(e)),
     }
 }
 
@@ -277,7 +326,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
         "help" | "--help" | "-h" => print!("{HELP}"),
         "table1" => print!("{}", tables::table1()),
         "table2" | "table3" | "table4" => {
-            let mut cfg = eval_config(a);
+            let mut cfg = eval_config(a)?;
             // Only table2 prints the measured disk columns.
             cfg.disk = cmd == "table2";
             eprintln!(
@@ -293,7 +342,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             }
         }
         "table5" | "table6" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             eprintln!("running §V-C compression pipelines (scale {}) ...", cfg.scale);
             let evals = tables::eval_retrained_networks(&cfg);
             let dir = out_dir(a);
@@ -304,7 +353,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             }
         }
         "alexnet" => {
-            let mut cfg = eval_config(a);
+            let mut cfg = eval_config(a)?;
             cfg.disk = true; // the storage table below reports disk columns
             eprintln!("running Deep-Compression AlexNet pipeline ...");
             let ev = tables::eval_alexnet_dc(&cfg);
@@ -325,7 +374,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             println!("stats: p0 {p0:.2}  H {h:.2}  kbar {kbar:.2}  n {n:.2}");
         }
         "packed-dense" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let (modeled, wall) = tables::packed_dense_experiment(&cfg);
             println!("packed-dense vs dense matvec (VGG16-shaped, 7-bit codes):");
             println!("  modeled time delta:   {modeled:+.1}%");
@@ -346,7 +395,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             println!("CSVs: figure1_pmf.csv, figure1_top15.csv");
         }
         "figure4" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let grid = a.get("grid", 24usize);
             let samples = a.get("samples", 10usize);
             let (m, n) = (a.get("rows", 100usize), a.get("cols", 100usize));
@@ -368,7 +417,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             println!("CSV: figure4.csv");
         }
         "figure5" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let samples = a.get("samples", 20usize);
             let cols: Vec<usize> = vec![32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384];
             eprintln!("column sweep at H=4, p0=0.55, m=100, {samples} samples ...");
@@ -396,13 +445,13 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             println!("CSV: figure5.csv");
         }
         "figure10" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let evals = tables::eval_vb_networks(&cfg);
             figures::figure10(&evals, &out_dir(a))?;
             println!("CSV: figure10.csv, figure10_boundary.csv");
         }
         "breakdown" => {
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let net = a.get_str("net", "densenet");
             let mats = figures::synthesize_vb_matrices(&net, cfg.seed, cfg.scale);
             let ev = NetworkEval::run_matrices(
@@ -430,7 +479,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
                      directly after `inspect`"
                 );
             }
-            let cfg = eval_config(a);
+            let cfg = eval_config(a)?;
             let net = a.get_str("net", "densenet");
             let spec = NetworkSpec::by_name(&net)
                 .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?;
@@ -470,8 +519,9 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
             "usage: repro reload <route-name> <file.cerpack> [--addr 127.0.0.1:8080]"
         ),
         "bench-gate" => return cmd_bench_gate(a),
+        "calibrate" => cmd_calibrate(a)?,
         "all" => {
-            let mut cfg = eval_config(a);
+            let mut cfg = eval_config(a)?;
             cfg.disk = true; // the shared eval feeds table2's disk columns
             let dir = out_dir(a);
             println!("\n===== table1 =====");
@@ -530,7 +580,7 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
     } else {
         a.get_str("net", "densenet")
     };
-    let cfg = eval_config(a);
+    let cfg = eval_config(a)?;
     let (objective, objective_str) = objective_flag(a)?;
     let threads = cer::exec::resolve_threads(threads_flag(a));
 
@@ -747,6 +797,10 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
     let n_batches = a.get("batches", usize::MAX);
     let (objective, _) = objective_flag(a)?;
     let threads = cer::exec::resolve_threads(threads_flag(a));
+    let kernel = kernel_flag(a)?;
+    if kernel != cer::kernels::KernelBackend::Scalar {
+        println!("native kernel backend: {kernel} (scalar stays the bit-exactness reference)");
+    }
     for backend in [Backend::Native, Backend::XlaDense, Backend::XlaCser] {
         // XLA backends are unavailable when built without the `xla`
         // feature (or when PJRT fails) — report and keep going. Native
@@ -761,6 +815,9 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
             }
             Err(e) => return Err(e),
         };
+        if backend == Backend::Native {
+            engine.set_kernel_backend(kernel);
+        }
         let t0 = std::time::Instant::now();
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -811,12 +868,20 @@ fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
     let requests = a.get("requests", 128usize);
     let verify = a.has("verify");
     let threads = cer::exec::resolve_threads(threads_flag(a));
+    // --verify promises bit-identity to the owned-storage path, which only
+    // the scalar reference kernels provide — force them and say so.
+    let mut kernel = kernel_flag(a)?;
+    if verify && kernel != cer::kernels::KernelBackend::Scalar {
+        eprintln!("serve: --verify forces the scalar kernel backend (bit-identity reference)");
+        kernel = cer::kernels::KernelBackend::Scalar;
+    }
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch: a.get("max-batch", 32usize),
             max_delay_us: a.get("max-delay-us", 2_000u64),
         },
         threads: Some(threads),
+        kernel,
     };
 
     let mut router = PackRouter::new();
@@ -1013,6 +1078,75 @@ fn cmd_bench_gate(a: &Args) -> anyhow::Result<ExitCode> {
     Ok(ExitCode::SUCCESS)
 }
 
+/// `repro calibrate` — run the cache-ruined per-kernel micro-benchmarks,
+/// fit per-(format, backend) time-model scale/intercept constants plus
+/// the measured pool dispatch overhead, and write them to `--out`
+/// (default calibration.json; feed back through `--calibration`) and the
+/// raw measured-vs-modeled rows to `--bench-out` (default
+/// BENCH_calibration.json, tracked by the CI bench gate).
+fn cmd_calibrate(a: &Args) -> anyhow::Result<()> {
+    use cer::costmodel::calibrate::bench_json;
+    use cer::costmodel::run_calibration;
+    use cer::formats::FormatKind;
+    use cer::kernels::KernelBackend;
+
+    let smoke = a.has("smoke");
+    let spec = a.get_str("kernel", "all");
+    let backends: Vec<KernelBackend> = if spec == "all" {
+        let mut b = vec![KernelBackend::Scalar];
+        if KernelBackend::simd_supported() {
+            b.push(KernelBackend::Simd);
+        }
+        b
+    } else {
+        vec![KernelBackend::parse(&spec).map_err(|e| anyhow::anyhow!("--kernel: {e}"))?]
+    };
+    eprintln!(
+        "calibrating {} ({} sizes, cache-ruined best-of-N) ...",
+        backends.iter().map(|b| b.name()).collect::<Vec<_>>().join(" + "),
+        if smoke { "smoke" } else { "full" }
+    );
+    let t0 = std::time::Instant::now();
+    let (cal, rows) = run_calibration(smoke, &backends);
+    let secs = t0.elapsed().as_secs_f64();
+
+    let out = a.get_str("out", "calibration.json");
+    std::fs::write(&out, cal.to_json_string())
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    let bench_out = a.get_str("bench-out", "BENCH_calibration.json");
+    std::fs::write(&bench_out, bench_json(&rows))
+        .map_err(|e| anyhow::anyhow!("writing {bench_out}: {e}"))?;
+
+    println!(
+        "calibrated {} point(s) in {secs:.1}s: dispatch overhead {:.0} ns",
+        rows.len(),
+        cal.dispatch_overhead_ns
+    );
+    for fit in &cal.fits {
+        let per_fmt: Vec<String> = FormatKind::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                format!("{} x{:.2}+{:.0}ns", k.name(), fit.scale[i], fit.intercept_ns[i])
+            })
+            .collect();
+        println!("  {:<6} {}", fit.backend.name(), per_fmt.join("  "));
+        // How well the fitted line explains the points it was fit on —
+        // a large error here means the two sizes straddle a cache cliff.
+        let mut worst = 0.0f64;
+        for r in rows.iter().filter(|r| r.backend == fit.backend) {
+            let i = FormatKind::ALL.iter().position(|k| *k == r.format).unwrap_or(0);
+            let predicted = fit.scale[i] * r.modeled_ns + fit.intercept_ns[i];
+            if r.measured_ns > 0.0 {
+                worst = worst.max((predicted - r.measured_ns).abs() / r.measured_ns);
+            }
+        }
+        println!("         worst fitted-vs-measured error {:.1}%", worst * 100.0);
+    }
+    println!("wrote {out} (apply with --calibration) and {bench_out}");
+    Ok(())
+}
+
 /// `repro serve-net a.cerpack [b.cerpack ...]` — the network front end:
 /// put an HTTP/1.1 socket in front of the mmap-shared worker plane.
 /// Requests hit bounded admission (429 + Retry-After when full) and
@@ -1031,12 +1165,14 @@ fn cmd_serve_net(packs: &[String], a: &Args) -> anyhow::Result<()> {
     let addr = a.get_str("addr", "127.0.0.1:8080");
     let workers = a.get("workers", 1usize).max(1);
     let threads = cer::exec::resolve_threads(threads_flag(a));
+    let kernel = kernel_flag(a)?;
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch: a.get("max-batch", 32usize),
             max_delay_us: a.get("max-delay-us", 2_000u64),
         },
         threads: Some(threads),
+        kernel,
     };
     let defaults = ServeOptions::default();
     let opts = ServeOptions {
@@ -1056,7 +1192,7 @@ fn cmd_serve_net(packs: &[String], a: &Args) -> anyhow::Result<()> {
         let ep = router.endpoint(&name).expect("just added");
         println!(
             "route \"{name}\": in_dim {} -> out_dim {} ({workers} worker(s) x {threads} \
-             thread(s)) from {}",
+             thread(s), {kernel} kernels) from {}",
             ep.in_dim,
             ep.out_dim,
             path.display()
@@ -1207,6 +1343,7 @@ fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
             max_delay_us: a.get("max-delay-us", 2_000u64),
         },
         threads: Some(threads),
+        kernel: kernel_flag(a)?,
     };
     if threads > 1 {
         println!(

@@ -445,6 +445,19 @@ fn render_metrics(state: &Arc<ServeState>) -> String {
                 "pack_queue_latency_us{{{label},quantile=\"{q}\"}} {v}\n"
             ));
         }
+        // Batcher occupancy: live depth summed over workers, the deepest
+        // queue any worker ever sampled, and the worst current oldest-
+        // request age — how long work sits before a batch picks it up.
+        let (mut depth, mut peak, mut age) = (0u64, 0u64, 0u64);
+        for w in 0..ep.workers.workers() {
+            let wm = ep.workers.worker_metrics(w);
+            depth += wm.queue_depth.load(Ordering::Relaxed);
+            peak = peak.max(wm.queue_depth_peak.load(Ordering::Relaxed));
+            age = age.max(wm.queue_age_us.load(Ordering::Relaxed));
+        }
+        out.push_str(&format!("pack_queue_depth{{{label}}} {depth}\n"));
+        out.push_str(&format!("pack_queue_depth_peak{{{label}}} {peak}\n"));
+        out.push_str(&format!("pack_queue_age_us{{{label}}} {age}\n"));
     }
     out
 }
@@ -472,6 +485,7 @@ mod tests {
                 max_delay_us: 50,
             },
             threads: Some(1),
+            ..ServerConfig::default()
         };
         let router = HotRouter::new(cfg, 1);
         router.add_pack("conn", &path).unwrap();
@@ -541,6 +555,17 @@ mod tests {
         assert!(text.contains("serve_responses_total{code=\"200\"} 3"), "{text}");
         assert!(text.contains("serve_infer_latency_us{quantile=\"0.999\"}"));
         assert!(text.contains("pack_completed_total{pack=\"conn\",generation=\"0\"} 3"));
+        // Batcher occupancy gauges render per pack; after 3 served
+        // requests the sticky peak is at least 1.
+        assert!(text.contains("pack_queue_depth{pack=\"conn\",generation=\"0\"}"), "{text}");
+        assert!(text.contains("pack_queue_age_us{pack=\"conn\",generation=\"0\"}"));
+        let peak = text
+            .lines()
+            .find(|l| l.starts_with("pack_queue_depth_peak{pack=\"conn\""))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse::<u64>().ok())
+            .expect("peak gauge rendered");
+        assert!(peak >= 1, "{text}");
         state.router.shutdown();
     }
 

@@ -214,6 +214,7 @@ mod tests {
                 max_delay_us: 100,
             },
             threads: Some(1),
+            ..ServerConfig::default()
         };
         let router = HotRouter::new(cfg, 1);
         router.add_pack("net", &path).unwrap();

@@ -568,6 +568,7 @@ pub fn smoke(out_path: &Path, seed: u64) -> Result<String> {
             max_delay_us: 200,
         },
         threads: Some(1),
+        ..ServerConfig::default()
     };
     let router = HotRouter::new(cfg, 2);
     router.add_pack("smoke-mlp", &pack_path)?;

@@ -178,6 +178,7 @@ mod tests {
                 max_delay_us: 50,
             },
             threads: Some(1),
+            ..ServerConfig::default()
         }
     }
 

@@ -1,10 +1,12 @@
 //! Bench-regression gate: compare a freshly generated bench artifact
-//! (`BENCH_pack.json` / `BENCH_dot.json` / `BENCH_serve.json`) against a
-//! committed baseline and fail on regressions beyond a threshold.
+//! (`BENCH_pack.json` / `BENCH_dot.json` / `BENCH_serve.json` /
+//! `BENCH_calibration.json`) against a committed baseline and fail on
+//! regressions beyond a threshold.
 //!
 //! Metrics are extracted by walking the JSON tree: array elements are
-//! labeled by their identity fields (`net`, `format`, `threads`, `batch`,
-//! `layer`, `mode`, `concurrency`, `rate`) so a metric's key is stable
+//! labeled by their identity fields (`net`, `format`, `backend`,
+//! `threads`, `batch`, `layer`, `mode`, `concurrency`, `rate`, `case`)
+//! so a metric's key is stable
 //! across runs even if row order changes — e.g.
 //! `packs[net=lenet5].cold_start_ms`. A metric is **tracked** when its
 //! key name says which direction is better:
@@ -52,16 +54,20 @@ fn tracked(name: &str) -> Option<bool> {
 
 /// Identity fields used to label array elements stably across runs.
 /// `mode`/`concurrency`/`rate` label the serving sweep rows of
-/// `BENCH_serve.json` (closed-loop vs open-loop steps).
-const IDENTITY_KEYS: [&str; 8] = [
+/// `BENCH_serve.json` (closed-loop vs open-loop steps); `backend` labels
+/// the kernel-backend rows of `BENCH_dot.json` and `case` (the `RxC`
+/// measurement shape) the `BENCH_calibration.json` rows.
+const IDENTITY_KEYS: [&str; 10] = [
     "net",
     "format",
+    "backend",
     "threads",
     "batch",
     "layer",
     "mode",
     "concurrency",
     "rate",
+    "case",
 ];
 
 fn identity_label(obj: &Json) -> Option<String> {
@@ -365,6 +371,30 @@ mod tests {
         let fresh = doc(r#"{"serve": [{"mode": "open", "rate": 400, "throughput_rps": 200.0, "p99_us": 2000.0}]}"#);
         let r = gate(&base, &fresh, 25.0);
         assert_eq!(r.failures().count(), 2);
+    }
+
+    #[test]
+    fn kernel_and_calibration_rows_get_backend_and_case_labels() {
+        let v = doc(
+            r#"{"kernels": [
+                {"net": "lenet5", "format": "dense", "backend": "simd",
+                 "threads": 4, "pass_ns": 50.0, "gflops_equiv": 4.0}
+            ],
+            "calibration": [
+                {"format": "CSR", "backend": "scalar", "case": "96x256",
+                 "measured_ns": 1200.0, "modeled_ns": 1100.0}
+            ]}"#,
+        );
+        let m = extract_metrics(&v);
+        let keys: Vec<&str> = m.iter().map(|x| x.key.as_str()).collect();
+        // Scalar and SIMD rows of the same (net, format, threads) cell
+        // must not collide — `backend` is part of the label.
+        assert!(keys.contains(&"kernels[net=lenet5,format=dense,backend=simd,threads=4].pass_ns"));
+        assert!(
+            keys.contains(&"kernels[net=lenet5,format=dense,backend=simd,threads=4].gflops_equiv")
+        );
+        assert!(keys.contains(&"calibration[format=CSR,backend=scalar,case=96x256].measured_ns"));
+        assert!(keys.contains(&"calibration[format=CSR,backend=scalar,case=96x256].modeled_ns"));
     }
 
     #[test]

@@ -59,6 +59,7 @@ fn server_cfg(max_batch: usize, max_delay_us: u64) -> ServerConfig {
             max_delay_us,
         },
         threads: Some(1),
+        ..ServerConfig::default()
     }
 }
 

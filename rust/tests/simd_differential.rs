@@ -1,0 +1,172 @@
+//! Differential suite for the SIMD kernel backend.
+//!
+//! The scalar kernels are the repo's bit-exactness reference: their
+//! per-row reduction order is frozen and every bit-identity contract
+//! (parallel == serial, fused == unfused, pack `--verify`) is stated
+//! against them. The SIMD kernels reassociate the per-row float sums
+//! into W-wide partial accumulators, so they are checked here against
+//! the scalar results under an explicit tolerance instead:
+//!
+//!     |simd - scalar| <= 1e-5 + 1e-4 * |scalar|
+//!
+//! (absolute floor for near-cancelling rows, relative term for large
+//! magnitudes — documented in docs/ARCHITECTURE.md). The suite sweeps
+//! format x CSR-index-width x thread-count x batch-size with the
+//! bias+ReLU epilogue engaged, and additionally pins the *scalar*
+//! backend of the dispatch layer bit-identical to the plain kernels,
+//! so backend dispatch itself can never drift the reference.
+
+use cer::coordinator::Engine;
+use cer::exec::ExecPlane;
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::{AnyMatrix, KernelBackend};
+use cer::util::Rng;
+
+/// Per-element tolerance around the scalar reference value.
+fn tol(reference: f32) -> f32 {
+    1e-5 + 1e-4 * reference.abs()
+}
+
+fn assert_close(scalar: &[f32], simd: &[f32], what: &str) {
+    assert_eq!(scalar.len(), simd.len(), "{what}: output length");
+    for (i, (&s, &v)) in scalar.iter().zip(simd).enumerate() {
+        assert!(
+            (s - v).abs() <= tol(s),
+            "{what}: element {i} beyond tolerance: scalar {s}, simd {v}"
+        );
+    }
+}
+
+/// A quantized random matrix: values drawn from a small centered
+/// codebook (what the CER/CSER encoders expect) with roughly
+/// `zero_in_16/16` of the entries exactly zero.
+fn quantized(rows: usize, cols: usize, zero_in_16: usize, seed: u64) -> Dense {
+    const LEVELS: [f32; 8] = [0.5, -0.5, 1.0, -1.0, 1.5, -1.5, 2.0, 0.25];
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; rows * cols];
+    for v in data.iter_mut() {
+        if rng.below(16) >= zero_in_16 {
+            *v = LEVELS[rng.below(LEVELS.len())];
+        }
+    }
+    Dense::from_vec(rows, cols, data)
+}
+
+fn random_x(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32() - 0.5).collect()
+}
+
+#[test]
+fn matvec_simd_matches_scalar_across_formats_and_index_widths() {
+    // Column counts straddle the CSR column-index storage widths: 200
+    // stores u8 indices, 700 u16, and the 70k-column skinny case u32.
+    let shapes = [(64usize, 200usize), (48, 700), (2, 70_000)];
+    for (si, &(rows, cols)) in shapes.iter().enumerate() {
+        let m = quantized(rows, cols, 11, 0xD1F0 + si as u64);
+        let x = random_x(cols, 0x5EED + si as u64);
+        for kind in FormatKind::ALL {
+            let a = AnyMatrix::encode(kind, &m);
+            let mut reference = vec![0.0f32; rows];
+            a.matvec(&x, &mut reference);
+
+            let mut simd = vec![0.0f32; rows];
+            a.matvec_backend(KernelBackend::Simd, &x, &mut simd);
+            assert_close(
+                &reference,
+                &simd,
+                &format!("{} {rows}x{cols} matvec", kind.name()),
+            );
+
+            // The Scalar backend of the dispatch layer must be the very
+            // same code path as the plain kernels — bit-identical, not
+            // merely close. (Cer/Cser have no SIMD variant and fall
+            // back to scalar, so for them even the Simd request is
+            // bit-identical; the tolerance check above still applies.)
+            let mut scalar = vec![0.0f32; rows];
+            a.matvec_backend(KernelBackend::Scalar, &x, &mut scalar);
+            assert_eq!(
+                reference,
+                scalar,
+                "{} {rows}x{cols}: scalar backend drifted from the reference",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_simd_matvec_stays_in_tolerance() {
+    let (rows, cols) = (96usize, 300usize);
+    let m = quantized(rows, cols, 10, 7);
+    let x = random_x(cols, 8);
+    for kind in FormatKind::ALL {
+        let a = AnyMatrix::encode(kind, &m);
+        let mut reference = vec![0.0f32; rows];
+        a.matvec(&x, &mut reference);
+        for threads in [2usize, 4] {
+            let plane = ExecPlane::with_threads(threads);
+            let pool = plane.pool().expect("parallel plane has a pool");
+            // The granular plan is what the engine uses under SIMD:
+            // shards below the per-shard work floor collapse so vector
+            // lanes are not starved by 3-row shards.
+            let plan = a.shard_plan_granular(plane.threads(), 1024);
+            let mut y = vec![0.0f32; rows];
+            a.matvec_sharded_backend(KernelBackend::Simd, &x, &mut y, &plan, pool);
+            assert_close(
+                &reference,
+                &y,
+                &format!("{} sharded x{threads}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_forward_simd_matches_scalar_across_threads_and_batches() {
+    let (in_dim, hidden, out_dim) = (120usize, 33usize, 9usize);
+    let w1 = quantized(hidden, in_dim, 10, 21);
+    let w2 = quantized(out_dim, hidden, 8, 22);
+    let b1: Vec<f32> = (0..hidden).map(|i| i as f32 * 0.01 - 0.1).collect();
+    let b2: Vec<f32> = (0..out_dim).map(|i| i as f32 * 0.02 - 0.05).collect();
+    let make = |kind| {
+        Engine::native_fixed(
+            vec![
+                ("fc1".to_string(), w1.clone(), b1.clone()),
+                ("fc2".to_string(), w2.clone(), b2.clone()),
+            ],
+            kind,
+        )
+    };
+    for kind in FormatKind::ALL {
+        let mut scalar_engine = make(kind);
+        let mut simd_engine = make(kind).with_kernel_backend(KernelBackend::Simd);
+        assert_eq!(
+            scalar_engine.kernel_backend(),
+            KernelBackend::Scalar,
+            "engines must default to the scalar reference"
+        );
+        for threads in [1usize, 2, 4] {
+            scalar_engine.set_threads(threads);
+            simd_engine.set_threads(threads);
+            assert_eq!(
+                simd_engine.kernel_backend(),
+                KernelBackend::Simd,
+                "set_threads must not reset the kernel backend"
+            );
+            // Batch sizes around the multi-rhs tile widths: 1 (matvec
+            // path), odd remainders, and full 8/16-column tiles. The
+            // fused bias+ReLU epilogue is active on the hidden layer.
+            for batch in [1usize, 3, 4, 5, 8, 9, 16, 17] {
+                let x = random_x(batch * in_dim, 31 * threads as u64 + batch as u64);
+                let want = scalar_engine.forward(&x, batch).unwrap();
+                let got = simd_engine.forward(&x, batch).unwrap();
+                assert_close(
+                    &want,
+                    &got,
+                    &format!("{} forward t{threads} b{batch}", kind.name()),
+                );
+            }
+        }
+    }
+}
