@@ -29,9 +29,17 @@
 //! SIMD microkernels buy on this host". The SIMD rows use the same
 //! granular shard plans the engine uses under `--kernel simd`.
 //!
+//! Section "stealing": static shard plans vs intra-layer work stealing
+//! on a scaled-up spike-and-slab net (CSR) with one lane deliberately
+//! straggling for a full wave — the dynamic imbalance stealing exists
+//! to absorb. Static plans serialize the straggler's entire shard
+//! behind the stall; with stealing the other lanes drain its pooled
+//! tail chunks, so only the small owned head waits. `stealing_speedup`
+//! is tracked higher-is-better by the bench gate.
+//!
 //! Results are printed and written to `BENCH_dot.json` (an object with
-//! `"dot"`, `"forward"`, `"selection"` and `"kernels"` arrays) so the
-//! multi-core perf trajectory has a baseline.
+//! `"dot"`, `"forward"`, `"selection"`, `"kernels"` and `"stealing"`
+//! arrays) so the multi-core perf trajectory has a baseline.
 //!
 //! Run: `cargo bench --bench dot`
 //! CI smoke mode (small shapes, few iterations): `cargo bench --bench dot
@@ -96,6 +104,16 @@ struct KernelRow {
     threads: usize,
     pass_ns: f64,
     gflops: f64,
+}
+
+/// One (net, thread-count) cell of the static-vs-stealing comparison
+/// under an injected one-wave straggler on lane 0.
+struct StealRow {
+    net: String,
+    threads: usize,
+    static_ns: f64,
+    stealing_ns: f64,
+    stealing_speedup: f64,
 }
 
 /// Per-shard work floor the engine applies under the SIMD backend
@@ -431,6 +449,69 @@ fn main() {
         }
     }
 
+    // Stealing section: the straggler is injected with
+    // `set_lane_delay_for_tests` so the comparison is deterministic (OS
+    // noise produces the same imbalance, just not reproducibly). The
+    // stall is sized to one undelayed wave: long enough that the other
+    // lanes finish their own shards and start claiming, short enough
+    // that the stolen remainder — not the sleep — dominates the gap. At
+    // 2 threads the single healthy lane must absorb nearly the whole
+    // layer, so stealing only breaks even; the win shows from 4 threads
+    // up, which is the acceptance shape.
+    let mut steal_rows: Vec<StealRow> = Vec::new();
+    {
+        let (srows, scols, slab) = if smoke {
+            (2048usize, 1024usize, 128usize)
+        } else {
+            (4096, 1024, 256)
+        };
+        let m = spike_and_slab(srows, scols, slab);
+        let layers = vec![("spike".to_string(), m, vec![0.0f32; srows])];
+        let x: Vec<f32> = (0..scols).map(|_| rng.f32() - 0.5).collect();
+        let mut out: Vec<f32> = Vec::new();
+        println!(
+            "=== stealing (spike-and-slab {srows}x{scols}, slab nnz {slab}, CSR, \
+             lane-0 straggler) ==="
+        );
+        for &t in &[2usize, 4, 8] {
+            let mut eng = Engine::native_fixed(layers.clone(), FormatKind::Csr).with_threads(t);
+            eng.reserve_batch(1);
+            // Undelayed wave time sizes the stall; the 100us floor keeps
+            // sleep granularity from drowning the signal on small runs.
+            let wave_ns = time_median_ns(warmup, iters, || {
+                eng.forward_into(&x, 1, &mut out).expect("forward");
+                std::hint::black_box(&out);
+            });
+            let delay = std::time::Duration::from_nanos(wave_ns.max(100_000.0) as u64);
+            eng.set_lane_delay_for_tests(Some((0, delay)));
+            let stealing_ns = time_median_ns(warmup, iters, || {
+                eng.forward_into(&x, 1, &mut out).expect("forward");
+                std::hint::black_box(&out);
+            });
+            let stolen = eng.steals_total();
+            eng.set_stealing(false);
+            let static_ns = time_median_ns(warmup, iters, || {
+                eng.forward_into(&x, 1, &mut out).expect("forward");
+                std::hint::black_box(&out);
+            });
+            let stealing_speedup = static_ns / stealing_ns;
+            println!(
+                "{:<14} {t}t  static {:>10}  stealing {:>10}  (x{stealing_speedup:.2}, \
+                 {stolen} chunks stolen)",
+                "spike-slab",
+                fmt_ns(static_ns),
+                fmt_ns(stealing_ns),
+            );
+            steal_rows.push(StealRow {
+                net: "spike-slab".to_string(),
+                threads: t,
+                static_ns,
+                stealing_ns,
+                stealing_speedup,
+            });
+        }
+    }
+
     // Per-(net, threads) winners: what the model ranks first vs what the
     // measurement ranks first — printed and recorded so mis-rankings are
     // visible in the artifact.
@@ -538,16 +619,30 @@ fn main() {
             if i + 1 < kernel_rows.len() { "," } else { "" },
         ));
     }
+    json.push_str("],\n\"stealing\": [\n");
+    for (i, r) in steal_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"threads\": {}, \"static_ns\": {:.1}, \
+             \"stealing_ns\": {:.1}, \"stealing_speedup\": {:.4}}}{}\n",
+            r.net,
+            r.threads,
+            r.static_ns,
+            r.stealing_ns,
+            r.stealing_speedup,
+            if i + 1 < steal_rows.len() { "," } else { "" },
+        ));
+    }
     json.push_str("]\n}\n");
     let mut f = std::fs::File::create("BENCH_dot.json").expect("BENCH_dot.json");
     f.write_all(json.as_bytes()).expect("write BENCH_dot.json");
     println!(
         "wrote BENCH_dot.json ({} dot rows + {} forward rows + {} selection cells \
-         + {} kernel-backend rows: {} networks x {:?} threads)",
+         + {} kernel-backend rows + {} stealing rows: {} networks x {:?} threads)",
         rows.len(),
         fwd_rows.len(),
         sel_rows.len(),
         kernel_rows.len(),
+        steal_rows.len(),
         cases.len() + 1,
         THREAD_COUNTS
     );

@@ -38,13 +38,15 @@
 //! fused-vs-unfused benchmark (`cargo bench --bench dot`).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format_in, Objective};
 use crate::costmodel::{EnergyModel, ExecContext, TimeModel};
-use crate::exec::{self, ExecPlane, Pipeline, ShardPlan};
+use crate::exec::{self, ExecPlane, Pipeline, ReplanState, ShardPlan, StealPlan};
 use crate::formats::{Dense, FormatKind, Storage, StorageResidency};
 use crate::kernels::{AnyMatrix, Epilogue, KernelBackend};
 use crate::pack::map::PackMap;
@@ -184,6 +186,33 @@ pub struct Engine {
     /// One nnz-balanced plan per layer, computed once when the plane is
     /// configured (empty when serial).
     plans: Vec<ShardPlan>,
+    /// Per-layer static work prefix sums (parallel only), computed once
+    /// alongside `plans` and reused for steal-chunking and timing-driven
+    /// re-sharding — never on the hot path.
+    prefixes: Vec<Vec<u64>>,
+    /// Chunked steal view of each plan (parallel only, parallels `plans`).
+    steal_plans: Vec<StealPlan>,
+    /// Intra-layer work stealing on the parallel path (default on;
+    /// [`Engine::set_stealing`] turns it off for static-plan comparison).
+    steal: bool,
+    /// Per-layer pooled-chunk cursors, reset before every forward. Layer
+    /// `i`'s cursor is only touched during pipeline step `i` (the wave
+    /// barrier separates steps), so one cursor per layer suffices.
+    cursors: Vec<AtomicUsize>,
+    /// Cumulative stolen-chunk count per lane (a claim of a chunk whose
+    /// owning shard belongs to another lane).
+    steal_counts: Vec<AtomicU64>,
+    /// Elapsed nanos of the most recent wave, per (layer, lane) —
+    /// `layer * lanes + lane`. Written lock-free by the step closure,
+    /// read by the caller thread after the barrier.
+    wave_ns: Vec<AtomicU64>,
+    /// Timing-driven re-sharding (opt-in via
+    /// [`Engine::set_adaptive_replan`]; `None` keeps the steady-state
+    /// path allocation-free).
+    replan: Option<ReplanState>,
+    /// Test-only injected straggler: `(lane, delay)` slept at the top of
+    /// every pipeline step on that lane.
+    lane_delay: Option<(usize, std::time::Duration)>,
     /// The shared pack mapping this engine's layers view into (mmap cold
     /// start only; `None` for owned engines). Held for sharing and
     /// introspection — the per-array `Arc` clones inside [`Storage`]
@@ -218,6 +247,14 @@ impl Engine {
             exec: ExecPlane::serial(),
             kernel: KernelBackend::Scalar,
             plans: Vec::new(),
+            prefixes: Vec::new(),
+            steal_plans: Vec::new(),
+            steal: true,
+            cursors: Vec::new(),
+            steal_counts: Vec::new(),
+            wave_ns: Vec::new(),
+            replan: None,
+            lane_delay: None,
             map: None,
         }
     }
@@ -407,24 +444,176 @@ impl Engine {
     /// sharding (and therefore the bit-identity surface) is unchanged.
     const MIN_SIMD_SHARD_WORK: u64 = 4096;
 
+    /// Pooled steal-chunk size (stored indices). Half the SIMD shard
+    /// floor: big enough that a chunk amortizes its `fetch_add`, small
+    /// enough that a straggler's remainder drains in several claims.
+    const STEAL_CHUNK_WORK: u64 = 2048;
+
+    /// Waves between adaptive-replan imbalance checks, and the
+    /// `max_lane_ns / mean_lane_ns` ratio above which a check rebuilds
+    /// the plans.
+    const REPLAN_PERIOD: u64 = 64;
+    const REPLAN_IMBALANCE: f64 = 1.15;
+
     /// Recompute the per-layer shard plans for the current plane (after
     /// the plane, a layer's representation, or the kernel backend
-    /// changed).
+    /// changed), plus everything that hangs off them: work prefixes,
+    /// steal-chunk views, cursors, counters, timing slots, and the
+    /// (lane-count-sized) replan state. All preallocation happens here —
+    /// the forward path only resets cursors.
     fn refresh_plans(&mut self) {
-        self.plans = if self.exec.is_parallel() {
+        if self.exec.is_parallel() {
             let threads = self.exec.threads();
-            self.layers
+            self.prefixes = self.layers.iter().map(|l| l.matrix.work_prefix()).collect();
+            self.plans = self
+                .prefixes
                 .iter()
-                .map(|l| match self.kernel {
-                    KernelBackend::Scalar => l.matrix.shard_plan(threads),
-                    KernelBackend::Simd => l
-                        .matrix
-                        .shard_plan_granular(threads, Self::MIN_SIMD_SHARD_WORK),
+                .map(|prefix| match self.kernel {
+                    KernelBackend::Scalar => ShardPlan::from_prefix(prefix, threads),
+                    KernelBackend::Simd => ShardPlan::from_prefix_granular(
+                        prefix,
+                        threads,
+                        Self::MIN_SIMD_SHARD_WORK,
+                    ),
                 })
-                .collect()
+                .collect();
+            if self.replan.is_some() {
+                self.replan = Some(ReplanState::new(
+                    self.layers.len(),
+                    threads,
+                    Self::REPLAN_PERIOD,
+                    Self::REPLAN_IMBALANCE,
+                ));
+            }
+            self.rebuild_steal_plans();
         } else {
-            Vec::new()
+            self.plans = Vec::new();
+            self.prefixes = Vec::new();
+            self.steal_plans = Vec::new();
+            self.cursors = Vec::new();
+            self.steal_counts = Vec::new();
+            self.wave_ns = Vec::new();
+        }
+    }
+
+    /// Rebuild the chunked steal views (and, when sizes changed, the
+    /// cursor/counter/timing arrays) from the current `plans`/`prefixes`.
+    /// Called from [`Engine::refresh_plans`] and after an adaptive
+    /// reshard — never on the hot path. Steal counters are preserved
+    /// across reshards at a fixed lane count (they are cumulative).
+    fn rebuild_steal_plans(&mut self) {
+        let lanes = self.exec.threads();
+        self.steal_plans = self
+            .plans
+            .iter()
+            .zip(&self.prefixes)
+            .map(|(plan, prefix)| StealPlan::from_plan(plan, prefix, Self::STEAL_CHUNK_WORK))
+            .collect();
+        if self.cursors.len() != self.plans.len() {
+            self.cursors = (0..self.plans.len()).map(|_| AtomicUsize::new(0)).collect();
+        }
+        if self.steal_counts.len() != lanes {
+            self.steal_counts = (0..lanes).map(|_| AtomicU64::new(0)).collect();
+        }
+        if self.wave_ns.len() != self.plans.len() * lanes {
+            self.wave_ns = (0..self.plans.len() * lanes)
+                .map(|_| AtomicU64::new(0))
+                .collect();
+        }
+    }
+
+    /// Enable/disable intra-layer work stealing on the parallel path.
+    /// Default on. Stealing never changes numerics (chunks are claimed
+    /// exactly once and every row keeps its serial reduction order), so
+    /// this is purely a scheduling knob — the benches compare static vs
+    /// stealing plans through it.
+    pub fn set_stealing(&mut self, on: bool) {
+        self.steal = on;
+    }
+
+    /// Whether intra-layer work stealing is active on the parallel path.
+    pub fn stealing(&self) -> bool {
+        self.steal
+    }
+
+    /// Opt into timing-driven re-sharding: every `REPLAN_PERIOD` (64)
+    /// waves, if the observed per-lane time imbalance exceeds the
+    /// threshold, shard plans are rebuilt from the
+    /// EWMA of lane times instead of static nnz (see
+    /// [`crate::exec::ReplanState`]). Off by default because the rebuild
+    /// allocates — the default forward path stays zero-alloc.
+    pub fn set_adaptive_replan(&mut self, on: bool) {
+        self.replan = if on && self.exec.is_parallel() {
+            Some(ReplanState::new(
+                self.layers.len(),
+                self.exec.threads(),
+                Self::REPLAN_PERIOD,
+                Self::REPLAN_IMBALANCE,
+            ))
+        } else {
+            None
         };
+    }
+
+    /// Cumulative stolen chunks across all lanes (a steal = a lane
+    /// claiming a pooled chunk whose owning shard belongs statically to
+    /// another lane). 0 when serial or when stealing never kicked in.
+    pub fn steals_total(&self) -> u64 {
+        self.steal_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Cumulative stolen chunks per lane (diagnostics; allocates).
+    pub fn lane_steals(&self) -> Vec<u64> {
+        self.steal_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Waves whose plans were rebuilt by adaptive re-sharding (0 unless
+    /// [`Engine::set_adaptive_replan`] is on).
+    pub fn waves_replanned(&self) -> u64 {
+        self.replan.as_ref().map_or(0, |r| r.replans())
+    }
+
+    /// `max_lane_ns / mean_lane_ns` over the most recent forward's
+    /// per-lane totals (1.0 = perfectly balanced, or serial/no data).
+    /// Allocation-free.
+    pub fn last_wave_imbalance(&self) -> f64 {
+        let lanes = self.exec.threads();
+        let layers = self.plans.len();
+        if lanes < 2 || self.wave_ns.len() != layers * lanes {
+            return 1.0;
+        }
+        let (mut max, mut sum, mut n) = (0u64, 0u64, 0usize);
+        for lane in 0..lanes {
+            let mut t = 0u64;
+            for layer in 0..layers {
+                t += self.wave_ns[layer * lanes + lane].load(Ordering::Relaxed);
+            }
+            if t > 0 {
+                max = max.max(t);
+                sum += t;
+                n += 1;
+            }
+        }
+        if n < 2 || sum == 0 {
+            1.0
+        } else {
+            max as f64 / (sum as f64 / n as f64)
+        }
+    }
+
+    /// Test-only straggler injection: sleep `delay` at the top of every
+    /// pipeline step executed by `lane`. `None` clears. Used by the
+    /// straggler-injection suite to prove stolen-chunk output stays
+    /// bit-identical; not part of the public API surface.
+    #[doc(hidden)]
+    pub fn set_lane_delay_for_tests(&mut self, delay: Option<(usize, std::time::Duration)>) {
+        self.lane_delay = delay;
     }
 
     /// Switch the native kernel backend. [`KernelBackend::Scalar`] is the
@@ -611,13 +800,33 @@ impl Engine {
         match (self.exec.pool(), plans.is_empty()) {
             (Some(pool), false) => {
                 // Shared cell views: within a layer, lanes write disjoint
-                // plan shards; across layers, the pipeline barrier retires
-                // all writers before any reader.
+                // row ranges (owned heads + exactly-once-claimed chunks);
+                // across layers, the pipeline barrier retires all writers
+                // before any reader.
                 let cells_a = exec::as_cells(buf_a);
                 let cells_b = exec::as_cells(buf_b);
                 let sums_cells = exec::as_cells(&mut self.arena.sums);
                 let lanes = self.exec.threads();
+                let steal = self.steal;
+                let steal_plans = &self.steal_plans;
+                let cursors = &self.cursors;
+                let steal_counts = &self.steal_counts;
+                let wave_ns = &self.wave_ns;
+                let delay = self.lane_delay;
+                // Reset every layer's chunk cursor up front: layer i's
+                // cursor is only touched during step i (the wave barrier
+                // orders steps), so one pass of relaxed stores suffices
+                // and the hot path allocates nothing.
+                for c in cursors {
+                    c.store(0, Ordering::Relaxed);
+                }
                 let step = |i: usize, lane: usize| {
+                    let t0 = Instant::now();
+                    if let Some((dl, dur)) = delay {
+                        if lane == dl {
+                            std::thread::sleep(dur); // test-only straggler
+                        }
+                    }
                     let layer = &layers[i];
                     let plan = &plans[i];
                     let (m, n) = (layer.matrix.rows(), layer.matrix.cols());
@@ -637,43 +846,110 @@ impl Engine {
                         bias: &layer.bias,
                         relu: i != last,
                     };
-                    if lane >= plan.shard_count() {
-                        return; // idle lane (fewer shards than lanes)
-                    }
-                    // Ω[0]-correction column sums, once per (layer, lane)
-                    // into the lane's private scratch. Lanes with a shard
+                    // Ω[0]-correction column sums, computed lazily on this
+                    // lane's first executed range into the lane's private
+                    // scratch — a lane with no owned shard can still steal
+                    // a chunk and need them, while a lane that ends up
+                    // with nothing skips them entirely. Executing lanes
                     // compute them redundantly rather than paying a second
                     // barrier per layer; the summation order is identical
                     // to correction_col_sums, so every copy is bit-equal
                     // (and the regime is rare — decomposed matrices, the
                     // paper's recommended deployment, skip this entirely).
-                    let col_sums: &[f32] = if layer.matrix.correction_w0() != 0.0 {
+                    let needs_sums = layer.matrix.correction_w0() != 0.0;
+                    let sums_for_lane = || {
                         let seg = &sums_cells[lane * batch_cap..lane * batch_cap + batch];
                         // SAFETY: each lane owns its private segment.
                         let seg = unsafe { exec::cells_as_mut(seg) };
                         crate::kernels::correction_col_sums_into(src, n, batch, seg);
-                        seg
-                    } else {
-                        &[]
+                        &*seg
                     };
-                    // Stride over shards so correctness never depends on
-                    // lanes == shard_count.
-                    let mut shard = lane;
-                    while shard < plan.shard_count() {
-                        // SAFETY: plan shards are disjoint row ranges.
-                        unsafe {
-                            layer.matrix.matmul_cells_epi_with(
-                                kernel,
-                                plan.shard(shard),
-                                src,
-                                &dst_cells[..m * batch],
-                                batch,
-                                col_sums,
-                                Some(&epi),
-                            )
-                        };
-                        shard += lanes;
+                    let mut col_sums: &[f32] = &[];
+                    let mut sums_ready = !needs_sums;
+                    let dst = &dst_cells[..m * batch];
+                    if steal {
+                        let sp = &steal_plans[i];
+                        // Owned heads first (strided, like static shards):
+                        // every lane starts immediately on its own
+                        // cache-warm rows, no cursor traffic.
+                        let mut s = lane;
+                        while s < sp.head_count() {
+                            let head = sp.head(s);
+                            if !head.is_empty() {
+                                if !sums_ready {
+                                    col_sums = sums_for_lane();
+                                    sums_ready = true;
+                                }
+                                // SAFETY: heads are disjoint row ranges.
+                                unsafe {
+                                    layer.matrix.matmul_cells_epi_with(
+                                        kernel, head, src, dst, batch, col_sums,
+                                        Some(&epi),
+                                    )
+                                };
+                            }
+                            s += lanes;
+                        }
+                        // Then drain the pooled tail chunks: one atomic
+                        // claim per chunk, exactly-once by construction,
+                        // so a fast lane absorbs a straggler's remainder.
+                        // Rows keep their serial reduction order whichever
+                        // lane computes them — output stays bit-identical.
+                        let cursor = &cursors[i];
+                        loop {
+                            let c = cursor.fetch_add(1, Ordering::Relaxed);
+                            if c >= sp.chunk_count() {
+                                break;
+                            }
+                            if sp.chunk_owner(c) % lanes != lane {
+                                steal_counts[lane].fetch_add(1, Ordering::Relaxed);
+                            }
+                            if !sums_ready {
+                                col_sums = sums_for_lane();
+                                sums_ready = true;
+                            }
+                            // SAFETY: chunks are disjoint row ranges and
+                            // the monotone cursor hands each out once.
+                            unsafe {
+                                layer.matrix.matmul_cells_epi_with(
+                                    kernel,
+                                    sp.chunk(c),
+                                    src,
+                                    dst,
+                                    batch,
+                                    col_sums,
+                                    Some(&epi),
+                                )
+                            };
+                        }
+                    } else {
+                        // Static plan: stride over shards so correctness
+                        // never depends on lanes == shard_count.
+                        let mut shard = lane;
+                        while shard < plan.shard_count() {
+                            if !sums_ready {
+                                col_sums = sums_for_lane();
+                                sums_ready = true;
+                            }
+                            // SAFETY: plan shards are disjoint row ranges.
+                            unsafe {
+                                layer.matrix.matmul_cells_epi_with(
+                                    kernel,
+                                    plan.shard(shard),
+                                    src,
+                                    dst,
+                                    batch,
+                                    col_sums,
+                                    Some(&epi),
+                                )
+                            };
+                            shard += lanes;
+                        }
                     }
+                    // Lock-free per-(layer, lane) wave timing — feeds the
+                    // lane-imbalance gauge and the adaptive replanner.
+                    wave_ns[i * lanes + lane]
+                        .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 };
                 // The shard stride and per-lane sums indexing inside
                 // `step` assume the pipeline runs exactly `lanes` lanes;
@@ -681,6 +957,7 @@ impl Engine {
                 // two must agree or strided shards would never execute.
                 debug_assert_eq!(lanes, pool.lane_limit(), "stride/lane-count invariant");
                 self.pipeline.run(Some(pool), lanes, layers.len(), &step);
+                self.after_wave();
             }
             _ => {
                 // Serial fused loop: same arena ping-pong, same epilogue,
@@ -728,6 +1005,45 @@ impl Engine {
         }
         let out_dim = self.layers[last].matrix.rows();
         &self.arena.bufs[last % 2][..out_dim * batch]
+    }
+
+    /// Fold the wave's per-(layer, lane) timings into the adaptive
+    /// replanner and rebuild the plans when a replan period elapses with
+    /// the imbalance over threshold. Runs on the caller thread after the
+    /// barrier (no synchronization needed beyond the relaxed loads); a
+    /// no-op — and allocation-free — unless adaptive replan is on.
+    fn after_wave(&mut self) {
+        let lanes = self.exec.threads();
+        let layers = self.plans.len();
+        let Some(replan) = self.replan.as_mut() else {
+            return;
+        };
+        for layer in 0..layers {
+            for lane in 0..lanes {
+                let ns = self.wave_ns[layer * lanes + lane].load(Ordering::Relaxed);
+                if ns > 0 {
+                    replan.observe_wave(layer, lane, ns);
+                }
+            }
+        }
+        if !replan.end_wave() {
+            return;
+        }
+        // Rebuild every layer's plan from the observed lane rates; layers
+        // with nothing to rebalance keep their current plan. Re-sharding
+        // only moves rows between lanes — numerics are untouched.
+        let new_plans: Vec<ShardPlan> = self
+            .plans
+            .iter()
+            .zip(&self.prefixes)
+            .enumerate()
+            .map(|(layer, (plan, prefix))| {
+                replan.reshard(layer, prefix, plan).unwrap_or_else(|| plan.clone())
+            })
+            .collect();
+        replan.note_replan();
+        self.plans = new_plans;
+        self.rebuild_steal_plans();
     }
 
     /// The PR-2 *unfused* forward pass, retained verbatim — including its
@@ -1233,5 +1549,79 @@ mod tests {
     fn from_pack_missing_file_errors() {
         let e = Engine::from_pack(Path::new("/nonexistent/nope.cerpack")).unwrap_err();
         assert!(format!("{e:#}").contains("nope.cerpack"));
+    }
+
+    /// A layer big enough that every shard gets pooled tail chunks
+    /// (64 × 512 dense = 32768 work units ≫ lanes × 2 × STEAL_CHUNK_WORK).
+    fn wide_layers(seed: u64) -> Vec<(String, Dense, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        let grid = [-0.4f32, -0.2, 0.0, 0.2, 0.4];
+        let data = (0..64 * 512).map(|_| grid[rng.below(5)]).collect();
+        vec![("wide".into(), Dense::from_vec(64, 512, data), vec![0.05; 64])]
+    }
+
+    #[test]
+    fn stealing_bit_identical_and_counts_steals_under_straggler() {
+        let layers = wide_layers(41);
+        let mut rng = Rng::new(42);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * 512).map(|_| rng.f32() - 0.5).collect();
+        for kind in [FormatKind::Dense, FormatKind::Csr, FormatKind::Cser] {
+            let mut serial = Engine::native_fixed(layers.clone(), kind);
+            let want = serial.forward(&x, batch).unwrap();
+            let mut par = Engine::native_fixed(layers.clone(), kind).with_threads(4);
+            assert!(par.stealing(), "stealing defaults on");
+            assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} stealing");
+            // Static plans (stealing off) are the same rows, same order.
+            par.set_stealing(false);
+            assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} static");
+            par.set_stealing(true);
+            // Straggle lane 1: the other lanes must drain its chunks and
+            // the output must not move by a single bit.
+            par.set_lane_delay_for_tests(Some((1, std::time::Duration::from_millis(2))));
+            assert_eq!(par.forward(&x, batch).unwrap(), want, "{kind:?} straggler");
+            assert!(
+                par.steals_total() > 0,
+                "{kind:?}: a 2ms straggler must get its chunks stolen"
+            );
+            assert_eq!(par.lane_steals().len(), 4);
+        }
+    }
+
+    #[test]
+    fn serial_engine_reports_no_adaptive_state() {
+        let mut e = Engine::native_fixed(wide_layers(43), FormatKind::Dense);
+        let x = vec![0.1f32; 512];
+        e.forward(&x, 1).unwrap();
+        assert_eq!(e.steals_total(), 0);
+        assert_eq!(e.waves_replanned(), 0);
+        assert_eq!(e.last_wave_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn adaptive_replan_rebuilds_plans_and_stays_bit_identical() {
+        let layers = wide_layers(47);
+        let mut rng = Rng::new(48);
+        let x: Vec<f32> = (0..512).map(|_| rng.f32() - 0.5).collect();
+        let mut serial = Engine::native_fixed(layers.clone(), FormatKind::Dense);
+        let want = serial.forward(&x, 1).unwrap();
+        let mut par = Engine::native_fixed(layers, FormatKind::Dense).with_threads(4);
+        par.set_adaptive_replan(true);
+        // Lane 0 runs consistently slow; after a replan period the plans
+        // must rebuild (lane 0's shard shrinks) with identical output.
+        par.set_lane_delay_for_tests(Some((0, std::time::Duration::from_micros(200))));
+        let static_rows = par.shard_plans()[0].shard(0).len();
+        for wave in 0..Engine::REPLAN_PERIOD {
+            assert_eq!(par.forward(&x, 1).unwrap(), want, "wave {wave}");
+        }
+        assert!(par.waves_replanned() >= 1, "replan must have fired");
+        assert!(
+            par.shard_plans()[0].shard(0).len() < static_rows,
+            "slow lane 0 must end up with fewer rows than the static {static_rows}"
+        );
+        assert!(par.last_wave_imbalance() > 1.0);
+        // And the rebuilt plans keep producing bit-identical output.
+        par.set_lane_delay_for_tests(None);
+        assert_eq!(par.forward(&x, 1).unwrap(), want);
     }
 }

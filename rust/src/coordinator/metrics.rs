@@ -168,6 +168,16 @@ pub struct Metrics {
     /// Age (µs) of the oldest queued request at the last sample — how
     /// long work sits before a batch picks it up.
     pub queue_age_us: AtomicU64,
+    /// Cumulative stolen chunks across the worker engine's lanes (a fast
+    /// lane draining a straggler's pooled chunk). Snapshot of the
+    /// engine's own counter — see [`Metrics::record_exec`].
+    pub steals_total: AtomicU64,
+    /// Waves whose shard plans were rebuilt by timing-driven re-sharding.
+    pub waves_replanned: AtomicU64,
+    /// Lane-time imbalance of the most recent forward,
+    /// `max_lane_ns / mean_lane_ns`, in milli-units (1000 = perfectly
+    /// balanced). A gauge.
+    pub lane_imbalance_milli: AtomicU64,
 }
 
 impl Metrics {
@@ -196,6 +206,17 @@ impl Metrics {
         self.queue_depth.store(depth, Ordering::Relaxed);
         self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
         self.queue_age_us.store(age_us, Ordering::Relaxed);
+    }
+
+    /// Snapshot the execution plane's adaptive counters after a batch:
+    /// cumulative steals and replanned waves (the engine owns the
+    /// authoritative counts — `store` keeps them monotone without a
+    /// read-modify-write) plus the last-wave lane-imbalance gauge.
+    pub fn record_exec(&self, steals: u64, replans: u64, imbalance: f64) {
+        self.steals_total.store(steals, Ordering::Relaxed);
+        self.waves_replanned.store(replans, Ordering::Relaxed);
+        self.lane_imbalance_milli
+            .store((imbalance * 1000.0) as u64, Ordering::Relaxed);
     }
 
     /// Mean latency in µs over completed requests.
@@ -265,6 +286,19 @@ mod tests {
         m.record_queue(0, 0);
         assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
         assert_eq!(m.queue_depth_peak.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn exec_snapshot_counters_and_gauge() {
+        let m = Metrics::default();
+        m.record_exec(12, 1, 1.5);
+        assert_eq!(m.steals_total.load(Ordering::Relaxed), 12);
+        assert_eq!(m.waves_replanned.load(Ordering::Relaxed), 1);
+        assert_eq!(m.lane_imbalance_milli.load(Ordering::Relaxed), 1500);
+        // Snapshot semantics: a later (larger) snapshot replaces.
+        m.record_exec(40, 2, 1.0);
+        assert_eq!(m.steals_total.load(Ordering::Relaxed), 40);
+        assert_eq!(m.lane_imbalance_milli.load(Ordering::Relaxed), 1000);
     }
 
     #[test]

@@ -33,4 +33,6 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{Backend, Engine, EngineLayer};
 pub use metrics::Metrics;
 pub use selector::{select_format, select_format_in, Objective};
-pub use server::{InferenceServer, PackRouter, ServerConfig, WorkerSet};
+pub use server::{
+    InferenceServer, PackRouter, ReplanReport, ReplanRequest, ServerConfig, WorkerSet,
+};

@@ -23,6 +23,9 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::selector::Objective;
+use crate::costmodel::{run_calibration, EnergyModel, TimeModel};
+use crate::formats::FormatKind;
 use crate::kernels::KernelBackend;
 
 /// Server configuration.
@@ -58,8 +61,46 @@ struct Request {
     enqueued: Instant,
 }
 
+/// A live re-planning request: reconfigure the worker engine's execution
+/// plane and re-run thread-aware format selection, without a restart.
+/// The request rides the worker's normal message queue, so it executes
+/// between batches — never concurrently with a forward.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplanRequest {
+    /// New kernel thread count (same semantics as
+    /// [`ServerConfig::threads`]: `Some(0)` = all cores); `None` keeps
+    /// the current plane. This is how a thread reconfiguration triggers
+    /// reselection — the replan message *is* the runtime signal.
+    pub threads: Option<usize>,
+    /// Re-run the measured calibration micro-benches (smoke profile — a
+    /// few ms on a quiet worker) and hot-swap the selector's
+    /// [`TimeModel`] with the fitted constants before reselecting.
+    pub calibrate: bool,
+    /// Objective to reselect formats under; `None` = modeled time (the
+    /// criterion that actually moves with the thread count).
+    pub objective: Option<Objective>,
+}
+
+/// What one worker's replan did.
+#[derive(Clone, Debug)]
+pub struct ReplanReport {
+    /// Execution lanes after the replan.
+    pub threads: usize,
+    /// Whether a fresh calibration was measured and applied.
+    pub calibrated: bool,
+    /// Per-layer formats before and after reselection.
+    pub before: Vec<FormatKind>,
+    pub after: Vec<FormatKind>,
+    /// Layers whose format changed.
+    pub flipped: usize,
+}
+
 enum Msg {
     Infer(Request),
+    Replan {
+        req: ReplanRequest,
+        reply: Sender<ReplanReport>,
+    },
     Shutdown,
 }
 
@@ -118,6 +159,26 @@ impl InferenceServer {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Re-plan the worker's engine live: optionally reconfigure the
+    /// thread count and re-measure calibration, then re-run thread-aware
+    /// format selection. Blocks until the worker (which processes the
+    /// request in queue order, between batches) reports back. In-flight
+    /// and queued requests are unaffected — reselection is lossless, so
+    /// replies before and after a replan are bit-identical for a given
+    /// representation, and tolerance-equal across a format flip.
+    pub fn replan(&self, req: ReplanRequest) -> Result<ReplanReport> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Replan {
+                req,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("server worker terminated"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker terminated"))
     }
 
     /// Declared input dim (0 if unknown — informational only).
@@ -205,6 +266,14 @@ impl WorkerSet {
     /// Metrics of worker `i`.
     pub fn worker_metrics(&self, i: usize) -> &Metrics {
         self.workers[i].metrics()
+    }
+
+    /// Re-plan every worker in turn (see [`InferenceServer::replan`]);
+    /// returns one report per worker. Sequential on purpose: at most one
+    /// worker is quiesced for calibration at a time, so the set keeps
+    /// serving throughout.
+    pub fn replan(&self, req: ReplanRequest) -> Result<Vec<ReplanReport>> {
+        self.workers.iter().map(|w| w.replan(req)).collect()
     }
 
     /// Completed requests summed over all workers.
@@ -312,6 +381,9 @@ where
                     Msg::Infer(req) => {
                         let _ = req.resp.send(Err(anyhow!(msg.clone())));
                     }
+                    // Dropping the reply sender surfaces the hangup to
+                    // the replan caller as an error.
+                    Msg::Replan { .. } => {}
                     Msg::Shutdown => break,
                 }
             }
@@ -351,6 +423,16 @@ where
                 batcher.push(next_id, req, now_us(epoch));
                 next_id += 1;
             }
+            Some(Msg::Replan { req, reply }) => {
+                // Flush anything already queued first so no request spans
+                // the reconfiguration, then re-plan between batches.
+                batcher.drain_all_into(&mut batch);
+                if !batch.is_empty() {
+                    run_batch(&mut engine, &batch, &metrics, &mut scratch);
+                }
+                let _ = reply.send(apply_replan(&mut engine, req));
+                engine.reserve_batch(cfg.batcher.max_batch.max(1));
+            }
             None => {}
         }
         sample_queue(&batcher, &metrics, now_us(epoch));
@@ -363,6 +445,40 @@ where
     batcher.drain_all_into(&mut batch);
     if !batch.is_empty() {
         run_batch(&mut engine, &batch, &metrics, &mut scratch);
+    }
+}
+
+/// Apply a [`ReplanRequest`] to the worker's engine: thread
+/// reconfiguration, optional measured re-calibration (smoke profile —
+/// cache-ruining micro-benches on this thread, which the flushed queue
+/// has left quiet), then thread-aware format reselection. Reselection
+/// decodes through the lossless `to_dense` round trip, so numerics are
+/// unchanged for every layer that keeps its format, and tolerance-equal
+/// for flipped ones.
+fn apply_replan(engine: &mut Engine, req: ReplanRequest) -> ReplanReport {
+    let before = engine.formats();
+    if let Some(t) = req.threads {
+        let t = crate::exec::resolve_threads(Some(t));
+        if engine.threads() != t {
+            engine.set_threads(t);
+        }
+    }
+    let backend = engine.kernel_backend();
+    let time = if req.calibrate {
+        let (cal, _) = run_calibration(true, &[backend]);
+        cal.apply(&TimeModel::default_model(), backend)
+    } else {
+        TimeModel::default_model()
+    };
+    let objective = req.objective.unwrap_or(Objective::Time);
+    let after = engine.reselect_formats(&EnergyModel::table_i(), &time, objective);
+    let flipped = before.iter().zip(&after).filter(|(b, a)| b != a).count();
+    ReplanReport {
+        threads: engine.threads(),
+        calibrated: req.calibrate,
+        before,
+        after,
+        flipped,
     }
 }
 
@@ -438,6 +554,13 @@ fn run_batch(
         }
         idx += exec_batch;
     }
+    // Snapshot the execution plane's adaptive counters (steals, replans,
+    // last-wave lane imbalance) — the `/metrics` rows ride on these.
+    metrics.record_exec(
+        engine.steals_total(),
+        engine.waves_replanned(),
+        engine.last_wave_imbalance(),
+    );
 }
 
 #[cfg(test)]
@@ -651,6 +774,70 @@ mod tests {
         let err = srv.infer_blocking(vec![1.0]).unwrap_err();
         assert!(format!("{err:#}").contains("boom"));
         srv.shutdown();
+    }
+
+    #[test]
+    fn replan_flips_spike_layer_on_thread_reconfiguration() {
+        // A spike-and-slab layer picked CSR at 1 thread (Objective::Time,
+        // default model); replanning to 8 threads must flip it to dense,
+        // and replanning back must restore CSR — with replies unchanged
+        // throughout (reselection is lossless; spike weights are exact).
+        let build = || {
+            let spike = crate::stats::synth::spike_and_slab(8, 255, 2);
+            Ok(Engine::native_auto_in(
+                vec![("spike".to_string(), spike, vec![0.0; 8])],
+                &EnergyModel::table_i(),
+                &TimeModel::default_model(),
+                Objective::Time,
+                1,
+            ))
+        };
+        let srv = InferenceServer::spawn(build, ServerConfig::default());
+        let x = vec![1.0f32; 255];
+        let before = srv.infer_blocking(x.clone()).unwrap();
+        let report = srv
+            .replan(ReplanRequest {
+                threads: Some(8),
+                ..ReplanRequest::default()
+            })
+            .unwrap();
+        assert_eq!(report.threads, 8);
+        assert_eq!(report.before, vec![FormatKind::Csr]);
+        assert_eq!(report.after, vec![FormatKind::Dense]);
+        assert_eq!(report.flipped, 1);
+        assert!(!report.calibrated);
+        assert_eq!(srv.infer_blocking(x.clone()).unwrap(), before);
+        // Back to 1 thread: the serial winner returns.
+        let back = srv
+            .replan(ReplanRequest {
+                threads: Some(1),
+                ..ReplanRequest::default()
+            })
+            .unwrap();
+        assert_eq!(back.after, vec![FormatKind::Csr]);
+        assert_eq!(back.flipped, 1);
+        assert_eq!(srv.infer_blocking(x).unwrap(), before);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn worker_set_replan_reports_every_worker() {
+        let ws = WorkerSet::spawn(2, ServerConfig::default(), |_| identity_engine());
+        let reports = ws
+            .replan(ReplanRequest {
+                threads: Some(2),
+                ..ReplanRequest::default()
+            })
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.threads, 2);
+            assert_eq!(r.before.len(), 1);
+            assert_eq!(r.after.len(), 1);
+        }
+        // Still serving after the replan.
+        assert_eq!(ws.infer_blocking(vec![1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
+        ws.shutdown();
     }
 
     #[test]

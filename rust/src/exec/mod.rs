@@ -22,14 +22,26 @@
 //! shared by all shards — so parallel output is bit-identical to serial
 //! output at every thread count. `--threads 1` (or an absent pool) takes
 //! today's serial code path unchanged.
+//!
+//! **Adaptive execution** extends the plane without weakening that
+//! guarantee: [`StealPlan`] splits each shard's tail into fixed-work
+//! chunks pooled behind a per-layer atomic cursor, so a fast lane drains a
+//! straggler's remainder instead of idling at the barrier (claims are
+//! exactly-once and rows keep their serial reduction order, so stolen
+//! output is still bit-identical), and [`ReplanState`] rebuilds
+//! [`ShardPlan`]s from an EWMA of observed per-lane wave times so plans
+//! track the host instead of static nnz counts (see the `replan` module
+//! docs for why resharding can't change numerics either).
 
 mod pipeline;
 mod pool;
+mod replan;
 mod shard;
 
 pub use pipeline::{Pipeline, WaveBarrier};
 pub use pool::ThreadPool;
-pub use shard::ShardPlan;
+pub use replan::ReplanState;
+pub use shard::{ShardPlan, StealPlan};
 
 use std::cell::UnsafeCell;
 use std::sync::Arc;

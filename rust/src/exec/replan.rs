@@ -1,0 +1,303 @@
+//! Timing-driven re-sharding: rebuild [`ShardPlan`]s from observed lane
+//! times instead of static nnz counts.
+//!
+//! The engine's static plans balance *work units* (stored entries) across
+//! lanes, which is only a proxy for time: SIMD kernels, cache behaviour,
+//! and host noise all shift the balance point. [`ReplanState`] keeps a
+//! per-(layer, lane) EWMA of elapsed wave nanoseconds — fed from the
+//! lock-free per-wave slots the engine records during `Pipeline::run` —
+//! and, every `period` waves, reports whether the worst layer's lane
+//! imbalance exceeds a threshold. When it does, [`ReplanState::reshard`]
+//! scales each row's static work by its owning lane's observed ns-per-unit
+//! rate and re-partitions the scaled prefix at the same shard count, so a
+//! lane that ran slow (thermal throttle, noisy neighbour, NUMA distance)
+//! is handed proportionally fewer rows on the next plan.
+//!
+//! Re-sharding never touches numerics: a [`ShardPlan`] only decides *which
+//! lane* computes each row, and every row keeps its serial reduction
+//! order, so output stays bit-identical to serial under any plan (see the
+//! module docs on [`crate::exec`]). The rebuild allocates, which is why
+//! adaptive re-planning is **opt-in** (`Engine::set_adaptive_replan`) —
+//! the default steady-state path stays zero-alloc.
+
+use super::shard::ShardPlan;
+
+/// EWMA smoothing factor for per-wave lane times. Small enough to ride
+/// out one-off scheduler hiccups, large enough to track a genuine host
+/// change within a few replan periods.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Per-layer, per-lane wave-timing state driving periodic re-sharding.
+#[derive(Clone, Debug)]
+pub struct ReplanState {
+    layers: usize,
+    lanes: usize,
+    /// EWMA of wave nanos, indexed `layer * lanes + lane`; 0.0 = no data.
+    ewma: Vec<f64>,
+    waves: u64,
+    period: u64,
+    threshold: f64,
+    replans: u64,
+}
+
+impl ReplanState {
+    /// `period` = waves between imbalance checks; `threshold` = the
+    /// `max_lane_ns / mean_lane_ns` ratio above which a check requests a
+    /// rebuild. A threshold of 1.0 rebuilds on any measurable skew.
+    pub fn new(layers: usize, lanes: usize, period: u64, threshold: f64) -> ReplanState {
+        ReplanState {
+            layers,
+            lanes: lanes.max(1),
+            ewma: vec![0.0; layers * lanes.max(1)],
+            waves: 0,
+            period: period.max(1),
+            threshold,
+            replans: 0,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Fold one lane's elapsed nanos for one layer of one wave into the
+    /// EWMA. First observation seeds the average directly.
+    pub fn observe_wave(&mut self, layer: usize, lane: usize, ns: u64) {
+        debug_assert!(layer < self.layers && lane < self.lanes);
+        let slot = &mut self.ewma[layer * self.lanes + lane];
+        if *slot == 0.0 {
+            *slot = ns as f64;
+        } else {
+            *slot = EWMA_ALPHA * ns as f64 + (1.0 - EWMA_ALPHA) * *slot;
+        }
+    }
+
+    /// Close out one wave. Returns `true` when a replan period has elapsed
+    /// *and* the worst layer's imbalance exceeds the threshold — the
+    /// caller should then [`reshard`](Self::reshard) each layer.
+    pub fn end_wave(&mut self) -> bool {
+        self.waves += 1;
+        self.waves % self.period == 0 && self.worst_imbalance() > self.threshold
+    }
+
+    pub fn waves(&self) -> u64 {
+        self.waves
+    }
+
+    /// `max_lane_ns / mean_lane_ns` for one layer over lanes with data;
+    /// 1.0 (perfectly balanced) until at least two lanes have reported.
+    pub fn imbalance(&self, layer: usize) -> f64 {
+        let row = &self.ewma[layer * self.lanes..(layer + 1) * self.lanes];
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for &ns in row {
+            if ns > 0.0 {
+                max = max.max(ns);
+                sum += ns;
+                n += 1;
+            }
+        }
+        if n < 2 || sum <= 0.0 {
+            return 1.0;
+        }
+        max / (sum / n as f64)
+    }
+
+    /// Worst [`imbalance`](Self::imbalance) across all layers.
+    pub fn worst_imbalance(&self) -> f64 {
+        (0..self.layers).map(|l| self.imbalance(l)).fold(1.0, f64::max)
+    }
+
+    /// Number of reshards the caller has recorded via
+    /// [`note_replan`](Self::note_replan).
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    pub fn note_replan(&mut self) {
+        self.replans += 1;
+    }
+
+    /// Rebuild one layer's plan from observed lane rates.
+    ///
+    /// Each static shard `s` is executed (head-first) by lane
+    /// `s % lanes`; that lane's observed ns divided by its total static
+    /// work gives an ns-per-unit rate. Every row's static work is scaled
+    /// by its owning lane's rate (normalized so the fastest lane scales
+    /// by ~1024, keeping the u64 prefix well-conditioned), and the scaled
+    /// prefix is re-partitioned at the same shard count — slow lanes get
+    /// fewer rows. Returns `None` when there is nothing to rebalance
+    /// (no timing data, zero work, or a serial plan).
+    pub fn reshard(&self, layer: usize, prefix: &[u64], plan: &ShardPlan) -> Option<ShardPlan> {
+        debug_assert_eq!(prefix.len(), plan.rows() + 1);
+        if plan.rows() == 0 || plan.shard_count() < 2 || plan.total_work() == 0 {
+            return None;
+        }
+        // Per-lane static work and observed rate.
+        let mut lane_work = vec![0u64; self.lanes];
+        for s in 0..plan.shard_count() {
+            lane_work[s % self.lanes] += plan.work(s);
+        }
+        let row_ewma = &self.ewma[layer * self.lanes..(layer + 1) * self.lanes];
+        let mut rates = vec![0.0f64; self.lanes];
+        let mut min_rate = f64::INFINITY;
+        for lane in 0..self.lanes {
+            if lane_work[lane] > 0 && row_ewma[lane] > 0.0 {
+                rates[lane] = row_ewma[lane] / lane_work[lane] as f64;
+                min_rate = min_rate.min(rates[lane]);
+            }
+        }
+        if !min_rate.is_finite() {
+            return None; // no lane has both work and timing data
+        }
+        for r in rates.iter_mut() {
+            // Lanes without data assume the fastest observed rate.
+            *r = if *r > 0.0 { *r / min_rate } else { 1.0 };
+        }
+        // Scale each row's work by its owning lane's relative rate.
+        let mut scaled = Vec::with_capacity(prefix.len());
+        scaled.push(0u64);
+        let mut shard_idx = 0usize;
+        for r in 0..plan.rows() {
+            while shard_idx + 1 < plan.shard_count() && r >= plan.shard(shard_idx).end {
+                shard_idx += 1;
+            }
+            let rate = rates[shard_idx % self.lanes];
+            let w = prefix[r + 1] - prefix[r];
+            let s = (w as f64 * rate * 1024.0) as u64;
+            scaled.push(scaled[r] + s.max(u64::from(w > 0)));
+        }
+        Some(ShardPlan::from_prefix(&scaled, plan.shard_count()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_prefix(rows: usize, per_row: u64) -> Vec<u64> {
+        (0..=rows as u64).map(|r| r * per_row).collect()
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let mut st = ReplanState::new(1, 4, 8, 1.15);
+        assert_eq!(st.imbalance(0), 1.0); // no data yet
+        for (lane, ns) in [(0, 100u64), (1, 100), (2, 100), (3, 300)] {
+            st.observe_wave(0, lane, ns);
+        }
+        // mean = 150, max = 300 → 2.0
+        assert!((st.imbalance(0) - 2.0).abs() < 1e-9);
+        assert!((st.worst_imbalance() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_smooths_one_off_spikes() {
+        let mut st = ReplanState::new(1, 2, 8, 1.15);
+        st.observe_wave(0, 0, 100);
+        st.observe_wave(0, 0, 1000); // single spike
+        let v = st.ewma[0];
+        assert!(v > 100.0 && v < 400.0, "spike over-weighted: {v}");
+    }
+
+    #[test]
+    fn end_wave_fires_on_period_and_threshold() {
+        let mut st = ReplanState::new(1, 2, 4, 1.15);
+        st.observe_wave(0, 0, 100);
+        st.observe_wave(0, 1, 500);
+        // Only every 4th wave may fire.
+        assert!(!st.end_wave());
+        assert!(!st.end_wave());
+        assert!(!st.end_wave());
+        assert!(st.end_wave());
+        // Balanced lanes never fire even on the period boundary.
+        let mut bal = ReplanState::new(1, 2, 1, 1.15);
+        bal.observe_wave(0, 0, 100);
+        bal.observe_wave(0, 1, 101);
+        assert!(!bal.end_wave());
+    }
+
+    #[test]
+    fn reshard_covers_all_rows_exactly_once() {
+        let prefix = uniform_prefix(64, 7);
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        let mut st = ReplanState::new(1, 4, 1, 1.0);
+        for (lane, ns) in [(0, 900u64), (1, 300), (2, 300), (3, 300)] {
+            st.observe_wave(0, lane, ns);
+        }
+        let new = st.reshard(0, &prefix, &plan).expect("should rebuild");
+        assert_eq!(new.rows(), plan.rows());
+        assert_eq!(new.shard_count(), plan.shard_count());
+        let mut covered = 0usize;
+        let mut next = 0usize;
+        for s in 0..new.shard_count() {
+            let r = new.shard(s);
+            assert_eq!(r.start, next, "shards must stay contiguous");
+            next = r.end;
+            covered += r.len();
+        }
+        assert_eq!(covered, 64);
+    }
+
+    #[test]
+    fn slow_lane_gets_fewer_rows() {
+        let prefix = uniform_prefix(64, 7);
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        let mut st = ReplanState::new(1, 4, 1, 1.0);
+        // Lane 0 observed 3x slower than the rest.
+        for (lane, ns) in [(0, 900u64), (1, 300), (2, 300), (3, 300)] {
+            st.observe_wave(0, lane, ns);
+        }
+        let new = st.reshard(0, &prefix, &plan).unwrap();
+        assert!(
+            new.shard(0).len() < plan.shard(0).len(),
+            "slow lane kept {} rows of static {}",
+            new.shard(0).len(),
+            plan.shard(0).len()
+        );
+    }
+
+    #[test]
+    fn reshard_without_data_or_parallelism_is_none() {
+        let prefix = uniform_prefix(16, 3);
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        let st = ReplanState::new(1, 4, 1, 1.0);
+        assert!(st.reshard(0, &prefix, &plan).is_none(), "no timing data");
+        let serial = ShardPlan::from_prefix(&prefix, 1);
+        let mut st2 = ReplanState::new(1, 1, 1, 1.0);
+        st2.observe_wave(0, 0, 100);
+        assert!(st2.reshard(0, &prefix, &serial).is_none(), "serial plan");
+        let empty = ShardPlan::from_prefix(&[0], 4);
+        assert!(st.reshard(0, &[0], &empty).is_none(), "zero rows");
+    }
+
+    #[test]
+    fn balanced_timings_reproduce_static_split() {
+        let prefix = uniform_prefix(40, 5);
+        let plan = ShardPlan::from_prefix(&prefix, 4);
+        let mut st = ReplanState::new(1, 4, 1, 1.0);
+        for lane in 0..4 {
+            st.observe_wave(0, lane, 250);
+        }
+        let new = st.reshard(0, &prefix, &plan).unwrap();
+        for s in 0..plan.shard_count() {
+            assert_eq!(new.shard(s), plan.shard(s), "shard {s} moved under balanced timing");
+        }
+    }
+
+    #[test]
+    fn note_replan_counts() {
+        let mut st = ReplanState::new(2, 2, 8, 1.15);
+        assert_eq!(st.replans(), 0);
+        st.note_replan();
+        st.note_replan();
+        assert_eq!(st.replans(), 2);
+        assert_eq!(st.layers(), 2);
+        assert_eq!(st.lanes(), 2);
+    }
+}

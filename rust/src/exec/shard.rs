@@ -152,6 +152,128 @@ impl ShardPlan {
     }
 }
 
+/// Chunked view of a [`ShardPlan`] for intra-layer work stealing.
+///
+/// Each shard keeps a small owned *head* (its first ~`chunk_work` work
+/// units, claimed statically by the shard's lane with no synchronization,
+/// so every lane starts on cache-warm rows immediately); the remaining
+/// rows — each shard's *tail* — are split into fixed-work chunks and
+/// pooled, in ascending row order, behind a single per-layer atomic
+/// cursor. Lanes claim pooled chunks one `fetch_add` at a time, so a fast
+/// lane drains a straggler's remainder instead of idling at the wave
+/// barrier.
+///
+/// **Bit-identity survives stealing**: heads and chunks are disjoint,
+/// covering row ranges, and the kernels run the exact serial inner loop
+/// over whatever range they are handed — a row's reduction order depends
+/// only on the row itself (plus the shared Ω\[0\]-correction column sums,
+/// which have a single summation-order definition). Exactly-once claiming
+/// via the monotone cursor is therefore all that is needed for parallel
+/// output to stay bit-identical to serial, regardless of which lane ends
+/// up computing which chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StealPlan {
+    /// Owned head row range per source shard; `heads.len()` equals the
+    /// source plan's shard count.
+    heads: Vec<Range<usize>>,
+    /// Pooled tail chunks in ascending row order, claimed through an
+    /// external per-layer cursor.
+    chunks: Vec<Range<usize>>,
+    /// `owners[i]` = index of the shard chunk `i` was carved from (for
+    /// steal accounting: a claim by any other lane is a steal).
+    owners: Vec<usize>,
+    rows: usize,
+}
+
+impl StealPlan {
+    /// Carve `plan` into owned heads + pooled fixed-work tail chunks.
+    ///
+    /// `prefix` is the same per-row work prefix the plan was built from
+    /// (`prefix.len() == plan.rows() + 1`). Every head and chunk holds at
+    /// least one row and at least `chunk_work` work units (except a
+    /// shard's last chunk, which takes the remainder); a shard whose work
+    /// fits in two chunks is left whole as its head, so tiny layers never
+    /// pay cursor traffic.
+    pub fn from_plan(plan: &ShardPlan, prefix: &[u64], chunk_work: u64) -> StealPlan {
+        assert_eq!(
+            prefix.len(),
+            plan.rows() + 1,
+            "prefix must cover the plan's rows"
+        );
+        let chunk_work = chunk_work.max(1);
+        let mut heads = Vec::with_capacity(plan.shard_count());
+        let mut chunks = Vec::new();
+        let mut owners = Vec::new();
+        for (s, range) in plan.shards().enumerate() {
+            if range.is_empty() || plan.work(s) <= 2 * chunk_work {
+                heads.push(range);
+                continue;
+            }
+            // Head: rows until the first `chunk_work` units are covered.
+            let base = prefix[range.start];
+            let mut head_end = range.start + 1;
+            while head_end < range.end && prefix[head_end] - base < chunk_work {
+                head_end += 1;
+            }
+            heads.push(range.start..head_end);
+            // Tail: fixed-work chunks (zero-work rows fold into whichever
+            // chunk they follow).
+            let mut lo = head_end;
+            while lo < range.end {
+                let target = prefix[lo] + chunk_work;
+                let mut hi = lo + 1;
+                while hi < range.end && prefix[hi] < target {
+                    hi += 1;
+                }
+                chunks.push(lo..hi);
+                owners.push(s);
+                lo = hi;
+            }
+        }
+        StealPlan {
+            heads,
+            chunks,
+            owners,
+            rows: plan.rows(),
+        }
+    }
+
+    /// Total rows covered (heads + chunks partition `0..rows`).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of owned heads (= the source plan's shard count).
+    pub fn head_count(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Owned head row range of shard `s`.
+    pub fn head(&self, s: usize) -> Range<usize> {
+        self.heads[s].clone()
+    }
+
+    /// Number of pooled tail chunks.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Row range of pooled chunk `i`.
+    pub fn chunk(&self, i: usize) -> Range<usize> {
+        self.chunks[i].clone()
+    }
+
+    /// The shard chunk `i` was carved from.
+    pub fn chunk_owner(&self, i: usize) -> usize {
+        self.owners[i]
+    }
+
+    /// Iterate over the pooled chunk ranges, in ascending row order.
+    pub fn chunks(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        self.chunks.iter().cloned()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +379,111 @@ mod tests {
         let prefix = vec![0u64; 9]; // 8 rows, no stored indices at all
         let plan = ShardPlan::from_prefix(&prefix, 4);
         check_invariants(&plan, 8, 4, &prefix);
+    }
+
+    /// Heads + chunks must partition `0..rows` exactly once, in ascending
+    /// row order within each shard — the exactly-once surface the atomic
+    /// cursor claims over.
+    fn check_steal_invariants(sp: &StealPlan, plan: &ShardPlan, prefix: &[u64], chunk_work: u64) {
+        assert_eq!(sp.rows(), plan.rows());
+        assert_eq!(sp.head_count(), plan.shard_count());
+        // Reassemble: per shard, head then its chunks must tile the shard.
+        for s in 0..plan.shard_count() {
+            let shard = plan.shard(s);
+            let head = sp.head(s);
+            assert_eq!(head.start, shard.start, "head starts its shard");
+            assert!(head.end <= shard.end, "head inside its shard");
+            if !shard.is_empty() {
+                assert!(!head.is_empty(), "non-empty shard needs a non-empty head");
+            }
+            let mut covered = head.end;
+            for i in 0..sp.chunk_count() {
+                if sp.chunk_owner(i) != s {
+                    continue;
+                }
+                let c = sp.chunk(i);
+                assert_eq!(c.start, covered, "chunks contiguous after the head");
+                assert!(!c.is_empty(), "chunk {i} empty");
+                assert!(c.end <= shard.end, "chunk {i} escapes its shard");
+                covered = c.end;
+            }
+            assert_eq!(covered, shard.end, "shard {s} not fully covered");
+        }
+        // Monotone cursor order: pooled chunks ascend globally.
+        let mut last = 0usize;
+        for c in sp.chunks() {
+            assert!(c.start >= last, "chunks must ascend");
+            last = c.end;
+        }
+        // Every chunk except a shard's last carries >= chunk_work units.
+        for i in 0..sp.chunk_count() {
+            let c = sp.chunk(i);
+            let is_last_of_shard = c.end == plan.shard(sp.chunk_owner(i)).end;
+            if !is_last_of_shard {
+                assert!(
+                    prefix[c.end] - prefix[c.start] >= chunk_work,
+                    "undersized interior chunk {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steal_plan_partitions_uniform_and_skewed() {
+        let chunk = 8u64;
+        for (rows, heavy) in [(64usize, false), (40, true), (3, false), (1, false)] {
+            let prefix: Vec<u64> = if heavy {
+                // Row 0 carries half the work.
+                let mut p = vec![0u64, 100];
+                for r in 1..=rows as u64 {
+                    p.push(100 + r * 3);
+                }
+                p
+            } else {
+                (0..=rows as u64).map(|r| r * 5).collect()
+            };
+            for shards in [1usize, 2, 4, 7] {
+                let plan = ShardPlan::from_prefix(&prefix, shards);
+                let sp = StealPlan::from_plan(&plan, &prefix, chunk);
+                check_steal_invariants(&sp, &plan, &prefix, chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_shards_stay_whole_heads() {
+        // 4 rows x 3 work < 2 x chunk_work: no pooled chunks at all.
+        let prefix: Vec<u64> = (0..=4u64).map(|r| r * 3).collect();
+        let plan = ShardPlan::from_prefix(&prefix, 2);
+        let sp = StealPlan::from_plan(&plan, &prefix, 64);
+        assert_eq!(sp.chunk_count(), 0);
+        for s in 0..plan.shard_count() {
+            assert_eq!(sp.head(s), plan.shard(s));
+        }
+    }
+
+    #[test]
+    fn zero_work_rows_fold_into_tail_chunks() {
+        // 16 rows: work only on rows 0..4, the rest implicit-only.
+        let mut prefix = vec![0u64];
+        for r in 0..16u64 {
+            prefix.push(prefix[r as usize] + if r < 4 { 50 } else { 0 });
+        }
+        let plan = ShardPlan::from_prefix(&prefix, 2);
+        let sp = StealPlan::from_plan(&plan, &prefix, 25);
+        check_steal_invariants(&sp, &plan, &prefix, 25);
+        let covered: usize = (0..sp.head_count()).map(|s| sp.head(s).len()).sum::<usize>()
+            + sp.chunks().map(|c| c.len()).sum::<usize>();
+        assert_eq!(covered, 16);
+    }
+
+    #[test]
+    fn zero_rows_steal_plan_is_empty() {
+        let plan = ShardPlan::from_prefix(&[0], 4);
+        let sp = StealPlan::from_plan(&plan, &[0], 16);
+        assert_eq!(sp.rows(), 0);
+        assert_eq!(sp.chunk_count(), 0);
+        assert_eq!(sp.head_count(), 1);
+        assert!(sp.head(0).is_empty());
     }
 }

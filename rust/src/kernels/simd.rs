@@ -21,12 +21,14 @@
 //! Remainder columns fall through to the vectorized matvec per column.
 //!
 //! ISA selection: SSE2 is part of the x86_64 baseline and NEON part of
-//! the aarch64 baseline, so those paths need no runtime check; AVX2 is
-//! detected once per kernel call via `is_x86_feature_detected!` (cached
-//! by std) and hoisted out of the row loops. On targets with neither
-//! vector ISA every entry point here delegates to the scalar kernels, so
-//! `KernelBackend::Simd` degrades to correct (and bit-identical) scalar
-//! execution rather than failing.
+//! the aarch64 baseline, so those paths need no runtime check; AVX2 and
+//! FMA are detected once per kernel call via `is_x86_feature_detected!`
+//! (cached by std) and hoisted out of the row loops. When FMA is present
+//! the dense matvec/tile kernels use `_mm256_fmadd_ps` variants — one
+//! rounding per accumulate, still within the tolerance contract. On
+//! targets with neither vector ISA every entry point here delegates to
+//! the scalar kernels, so `KernelBackend::Simd` degrades to correct (and
+//! bit-identical) scalar execution rather than failing.
 
 use std::ops::Range;
 
@@ -82,6 +84,23 @@ fn fast_isa() -> bool {
 #[inline]
 fn fast_isa() -> bool {
     true
+}
+
+/// `true` when the fused multiply-add dense variants are usable: AVX2 +
+/// FMA on x86_64 (both checked — FMA without AVX2 exists on no shipped
+/// CPU, but the `target_feature` pairing requires both). On aarch64 the
+/// flag is inert: the NEON paths are not fused, keeping one numeric
+/// behavior per target.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn fma_isa() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn fma_isa() -> bool {
+    false
 }
 
 // ---------------------------------------------------------------------------
@@ -177,6 +196,50 @@ mod x86 {
         s
     }
 
+    /// Fused multiply-add variant of [`dot_avx2`]: one rounding per
+    /// accumulate instead of two, same W-wide reassociation. Still under
+    /// the tolerance contract — fusing changes low-order bits relative
+    /// to both the scalar path and the mul+add AVX2 path.
+    ///
+    /// # Safety
+    /// Requires AVX2 **and** FMA (checked by the caller via `fma_isa`).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot_avx2_fma(row: &[f32], x: &[f32]) -> f32 {
+        let n = row.len().min(x.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(row.as_ptr().add(i)),
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(row.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(x.as_ptr().add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(row.as_ptr().add(i)),
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+        let mut s: f32 = lanes.iter().sum();
+        while i < n {
+            s += row[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
     /// One weight row against eight rhs columns.
     ///
     /// # Safety
@@ -190,6 +253,39 @@ mod x86 {
             let a = _mm256_loadu_ps(row.as_ptr().add(i));
             for (acc_k, xk) in acc.iter_mut().zip(xs.iter()) {
                 *acc_k = _mm256_add_ps(*acc_k, _mm256_mul_ps(a, _mm256_loadu_ps(xk.as_ptr().add(i))));
+            }
+            i += 8;
+        }
+        let mut out = [0.0f32; 8];
+        for ((o, acc_k), xk) in out.iter_mut().zip(acc.iter()).zip(xs.iter()) {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), *acc_k);
+            let mut s: f32 = lanes.iter().sum();
+            let mut j = i;
+            while j < n {
+                s += row[j] * xk[j];
+                j += 1;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    /// Fused multiply-add variant of [`dot8_avx2`] (see
+    /// [`dot_avx2_fma`] for the numeric contract).
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA; every `xs[k]` must be at least `row.len()`
+    /// long.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot8_avx2_fma(row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+        let n = row.len();
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(row.as_ptr().add(i));
+            for (acc_k, xk) in acc.iter_mut().zip(xs.iter()) {
+                *acc_k = _mm256_fmadd_ps(a, _mm256_loadu_ps(xk.as_ptr().add(i)), *acc_k);
             }
             i += 8;
         }
@@ -415,11 +511,14 @@ mod neon {
 
 /// # Safety
 /// `x.len() >= row.len()` is not required (the shorter length wins), but
-/// on x86_64 `fast` must only be true when AVX2 is available.
+/// on x86_64 `fast` must only be true when AVX2 is available and `fma`
+/// only when AVX2+FMA are.
 #[cfg(target_arch = "x86_64")]
 #[inline]
-unsafe fn row_dot(fast: bool, row: &[f32], x: &[f32]) -> f32 {
-    if fast {
+unsafe fn row_dot(fast: bool, fma: bool, row: &[f32], x: &[f32]) -> f32 {
+    if fma {
+        x86::dot_avx2_fma(row, x)
+    } else if fast {
         x86::dot_avx2(row, x)
     } else {
         x86::dot_sse2(row, x)
@@ -428,16 +527,18 @@ unsafe fn row_dot(fast: bool, row: &[f32], x: &[f32]) -> f32 {
 
 #[cfg(target_arch = "aarch64")]
 #[inline]
-unsafe fn row_dot(_fast: bool, row: &[f32], x: &[f32]) -> f32 {
+unsafe fn row_dot(_fast: bool, _fma: bool, row: &[f32], x: &[f32]) -> f32 {
     neon::dot_neon(row, x)
 }
 
 /// # Safety
-/// Every `xs[k].len() >= row.len()`; `fast` as in [`row_dot`].
+/// Every `xs[k].len() >= row.len()`; `fast`/`fma` as in [`row_dot`].
 #[cfg(target_arch = "x86_64")]
 #[inline]
-unsafe fn row_dot8(fast: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
-    if fast {
+unsafe fn row_dot8(fast: bool, fma: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+    if fma {
+        x86::dot8_avx2_fma(row, xs)
+    } else if fast {
         x86::dot8_avx2(row, xs)
     } else {
         x86::dot8_sse2(row, xs)
@@ -446,7 +547,7 @@ unsafe fn row_dot8(fast: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
 
 #[cfg(target_arch = "aarch64")]
 #[inline]
-unsafe fn row_dot8(_fast: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
+unsafe fn row_dot8(_fast: bool, _fma: bool, row: &[f32], xs: &[&[f32]; 8]) -> [f32; 8] {
     neon::dot8_neon(row, xs)
 }
 
@@ -484,11 +585,12 @@ pub(crate) fn dense_matvec_rows_simd(
     y: &mut [f32],
     epi: Option<&Epilogue<'_>>,
 ) {
-    let fast = fast_isa();
+    let (fast, fma) = (fast_isa(), fma_isa());
     for (out, r) in y.iter_mut().zip(rows) {
         // SAFETY: vector loads stay within row/x bounds (shorter length
-        // wins inside the primitive); `fast` implies AVX2 on x86_64.
-        let acc = unsafe { row_dot(fast, m.row(r), x) };
+        // wins inside the primitive); `fast`/`fma` imply the checked ISA
+        // on x86_64.
+        let acc = unsafe { row_dot(fast, fma, m.row(r), x) };
         *out = finish(epi, r, acc);
     }
 }
@@ -558,7 +660,7 @@ pub(crate) unsafe fn dense_matmul_cells_simd(
     l: usize,
     epi: Option<&Epilogue<'_>>,
 ) {
-    let fast = fast_isa();
+    let (fast, fma) = (fast_isa(), fma_isa());
     let (m_total, n) = (m.rows(), m.cols());
     debug_assert_eq!(x.len(), n * l);
     debug_assert_eq!(y.len(), m_total * l);
@@ -569,8 +671,8 @@ pub(crate) unsafe fn dense_matmul_cells_simd(
         let hi: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + 8 + k) * n..(c + 8 + k + 1) * n]);
         for r in rows.clone() {
             let row = m.row(r);
-            let a = row_dot8(fast, row, &lo);
-            let b = row_dot8(fast, row, &hi);
+            let a = row_dot8(fast, fma, row, &lo);
+            let b = row_dot8(fast, fma, row, &hi);
             for (k, v) in a.iter().enumerate() {
                 y[(c + k) * m_total + r].set(finish(epi, r, *v));
             }
@@ -583,7 +685,7 @@ pub(crate) unsafe fn dense_matmul_cells_simd(
     while c + 8 <= l {
         let xs: [&[f32]; 8] = std::array::from_fn(|k| &x[(c + k) * n..(c + k + 1) * n]);
         for r in rows.clone() {
-            let out = row_dot8(fast, m.row(r), &xs);
+            let out = row_dot8(fast, fma, m.row(r), &xs);
             for (k, v) in out.iter().enumerate() {
                 y[(c + k) * m_total + r].set(finish(epi, r, *v));
             }

@@ -55,9 +55,16 @@
 //!   thread pool plus per-layer [`exec::ShardPlan`]s that partition rows
 //!   by stored-index (nnz) count, and the [`exec::Pipeline`] job type
 //!   that submits a whole forward pass in one dispatch with a
-//!   [`exec::WaveBarrier`] between layers; parallel results are
-//!   bit-identical to serial at every thread count (`--threads` /
-//!   `CER_THREADS` knob).
+//!   [`exec::WaveBarrier`] between layers. The plans are adaptive:
+//!   [`exec::StealPlan`] carves each shard into an owned head plus
+//!   pooled fixed-work tail chunks claimed through a per-layer atomic
+//!   cursor (intra-layer work stealing, on by default), and
+//!   [`exec::ReplanState`] re-partitions from observed per-lane wave
+//!   times (opt-in timing-driven re-sharding). Because plans only decide
+//!   *which lane* computes a row — never its reduction order — parallel
+//!   results are bit-identical to serial at every thread count, with or
+//!   without stealing, under any replan (`--threads` / `CER_THREADS`
+//!   knob).
 //! * [`costmodel`] — op traces, the Table-I energy model, the calibrated
 //!   time model, and the closed-form equations of §IV.
 //! * [`stats`] — entropy statistics, the (H, p₀)-plane synthesizer,
@@ -87,11 +94,15 @@
 //!   unless built with the `xla` feature).
 //! * [`serve`] — the dependency-free TCP/HTTP network front end over the
 //!   coordinator's worker plane: minimal HTTP/1.1 (`POST /v1/infer`,
-//!   `GET /healthz`, `GET /metrics`), bounded admission with
-//!   `429 + Retry-After` backpressure, per-request deadlines (504),
-//!   graceful SIGTERM drain, live pack hot-reload via
-//!   [`serve::HotRouter`], and the closed/open-loop (Poisson) load
-//!   generator behind `repro loadgen` that emits `BENCH_serve.json`.
+//!   `GET /healthz`, `GET /metrics` with steal/replan/imbalance gauges),
+//!   bounded admission with `429 + Retry-After` backpressure,
+//!   per-request deadlines (504), graceful SIGTERM drain, live pack
+//!   hot-reload via [`serve::HotRouter`], live re-planning
+//!   (`POST /admin/replan`: re-run format selection at a new thread
+//!   count, optionally re-calibrating the time model on the quiesced
+//!   worker), and the closed-loop / open-loop Poisson / recorded-trace
+//!   load generator behind `repro loadgen` that emits
+//!   `BENCH_serve.json`.
 //! * [`harness`] — regenerates every table and figure of the paper.
 
 pub mod compress;

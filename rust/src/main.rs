@@ -164,8 +164,9 @@ System commands:
                              port 0 = ephemeral, --port-file FILE writes
                              the bound address). POST /v1/infer with
                              {\"input\":[...],\"pack\":...,\"deadline_ms\":...},
-                             GET /healthz, GET /metrics (p50/p99/p999),
-                             POST /admin/{reload,drain,shutdown}. Bounded
+                             GET /healthz, GET /metrics (p50/p99/p999 +
+                             steal/replan/imbalance gauges),
+                             POST /admin/{reload,replan,drain,shutdown}. Bounded
                              admission: --max-inflight N full => 429 +
                              Retry-After; expired --deadline-ms => 504
                              before a worker is touched; SIGTERM stops
@@ -175,14 +176,26 @@ System commands:
                              list and open-loop Poisson --rates list
                              (coordinated-omission-free latency), each
                              step --duration-ms; reports throughput,
-                             p50/p99/p999, and the knee point. --smoke
-                             self-hosts a loopback server and asserts
-                             replies bit-identical to the in-process
-                             path; --verify-pack <f.cerpack> does the
-                             same against a live server
+                             p50/p99/p999, and the knee point. --trace
+                             FILE replays recorded arrival offsets (one
+                             per line, seconds; # comments) instead of
+                             the synthetic sweeps, still open-loop.
+                             --smoke self-hosts a loopback server and
+                             asserts replies bit-identical to the
+                             in-process path; --verify-pack <f.cerpack>
+                             does the same against a live server
   reload <name> <f.cerpack>  hot-swap the pack behind a serve-net route
                              (--addr): atomic under traffic, in-flight
                              requests finish on the old weights
+  replan                     live re-planning on a running serve-net
+                             (--addr): --threads N reconfigures each
+                             worker's exec plane, --calibrate re-fits the
+                             time model on the quiesced worker, then
+                             formats are re-selected (--objective,
+                             default time) per layer. --name R picks one
+                             route (default all); --expect-flip exits
+                             non-zero when no layer changed format.
+                             Weights and generations are untouched
   bench-gate                 diff --fresh BENCH_*.json against a committed
                              --baseline; exits non-zero when any tracked
                              metric (…_ms/…_ns/…_us lower-better; gflops,
@@ -518,6 +531,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
         "reload" => anyhow::bail!(
             "usage: repro reload <route-name> <file.cerpack> [--addr 127.0.0.1:8080]"
         ),
+        "replan" => cmd_replan(a)?,
         "bench-gate" => return cmd_bench_gate(a),
         "calibrate" => cmd_calibrate(a)?,
         "all" => {
@@ -1203,7 +1217,7 @@ fn cmd_serve_net(packs: &[String], a: &Args) -> anyhow::Result<()> {
     let handle = serve(&addr, state).map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
     println!(
         "listening on http://{} — POST /v1/infer, GET /healthz, GET /metrics, \
-         POST /admin/{{reload,drain,shutdown}}; SIGTERM drains",
+         POST /admin/{{reload,replan,drain,shutdown}}; SIGTERM drains",
         handle.addr()
     );
     // CI binds port 0 and reads the resolved address from --port-file.
@@ -1253,6 +1267,7 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let defaults = LoadgenConfig::default();
+    let trace = a.get_str("trace", "");
     let cfg = LoadgenConfig {
         addr: a.get_str("addr", &defaults.addr),
         concurrency: list(&a.get_str("concurrency", "4")),
@@ -1261,6 +1276,7 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
         conns: a.get("conns", defaults.conns),
         deadline_ms: a.get("deadline-ms", defaults.deadline_ms),
         seed,
+        trace: (!trace.is_empty()).then(|| PathBuf::from(&trace)),
     };
     let mode = a.get_str("mode", "both");
     let cfg = match mode.as_str() {
@@ -1276,8 +1292,8 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown --mode '{other}' (closed|open|both)"),
     };
     anyhow::ensure!(
-        !(cfg.rates.is_empty() && cfg.concurrency.is_empty()),
-        "nothing to run: --rates and --concurrency are both empty"
+        cfg.trace.is_some() || !(cfg.rates.is_empty() && cfg.concurrency.is_empty()),
+        "nothing to run: --rates and --concurrency are both empty (and no --trace)"
     );
     let verify = a.get_str("verify-pack", "");
     let verify_path = (!verify.is_empty()).then(|| PathBuf::from(&verify));
@@ -1325,6 +1341,95 @@ fn cmd_reload(name: &str, pack: &str, a: &Args) -> anyhow::Result<()> {
         "route \"{name}\" now serving {} (generation {generation})",
         path.display()
     );
+    Ok(())
+}
+
+/// `repro replan` — ask a running `serve-net` to re-plan its engines
+/// live: reconfigure the exec plane's thread count, optionally re-run
+/// the smoke time-model calibration on each quiesced worker, and re-run
+/// thread-aware format selection. Weights, routes and generations are
+/// untouched; only the execution plane and per-layer format choices
+/// move. `--expect-flip` exits non-zero when no layer changed format —
+/// CI uses it to assert the reconfiguration was observable.
+fn cmd_replan(a: &Args) -> anyhow::Result<()> {
+    use cer::serve::http::{json_escape, HttpClient, Request};
+    use std::time::Duration;
+
+    let addr = a.get_str("addr", "127.0.0.1:8080");
+    let mut fields = Vec::new();
+    let name = a.get_str("name", "");
+    if !name.is_empty() {
+        fields.push(format!("\"name\":\"{}\"", json_escape(&name)));
+    }
+    if let Some(t) = threads_flag(a) {
+        fields.push(format!("\"threads\":{t}"));
+    }
+    if a.has("calibrate") {
+        fields.push("\"calibrate\":true".to_string());
+    }
+    if a.has("objective") {
+        let (_, s) = objective_flag(a)?;
+        fields.push(format!("\"objective\":\"{s}\""));
+    }
+    let body = format!("{{{}}}", fields.join(","));
+    // Calibration runs micro-benches per worker before the reply comes
+    // back — give the request a generous client-side timeout.
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(120))
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    let resp = client
+        .request(&Request::new("POST", "/admin/replan").json(body))
+        .map_err(|e| anyhow::anyhow!("replan request: {e}"))?;
+    anyhow::ensure!(
+        resp.status == 200,
+        "replan failed ({}): {}",
+        resp.status,
+        resp.body_str()
+    );
+    let doc = cer::util::json::parse(&resp.body_str())
+        .map_err(|e| anyhow::anyhow!("replan reply: {e}"))?;
+    let flipped = doc
+        .get("flipped")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("replan reply missing flipped count"))? as u64;
+    for pack in doc
+        .get("packs")
+        .map(|p| p.items())
+        .unwrap_or_default()
+    {
+        let pname = pack.get("pack").and_then(|v| v.as_str()).unwrap_or("?");
+        let workers = pack.get("workers").map(|w| w.items()).unwrap_or_default();
+        let threads = workers
+            .first()
+            .and_then(|w| w.get("threads"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as usize;
+        let fmt = |key: &str| -> String {
+            workers
+                .first()
+                .and_then(|w| w.get(key))
+                .map(|arr| {
+                    arr.items()
+                        .iter()
+                        .filter_map(|v| v.as_str())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                })
+                .unwrap_or_default()
+        };
+        println!(
+            "route \"{pname}\": {} worker(s) now at {threads} thread(s), formats [{}] -> [{}]",
+            workers.len(),
+            fmt("before"),
+            fmt("after"),
+        );
+    }
+    println!("{flipped} layer format flip(s) across all workers");
+    if a.has("expect-flip") {
+        anyhow::ensure!(
+            flipped > 0,
+            "--expect-flip: re-planning changed no layer's format"
+        );
+    }
     Ok(())
 }
 

@@ -140,6 +140,27 @@ pub fn synthesize_zoo_layers(
     scale: usize,
     seed: u64,
 ) -> Option<(NetworkSpec, Vec<(String, Dense, Vec<f32>)>)> {
+    // "spike-slab" is a deterministic diagnostic net, not a zoo member
+    // (deliberately absent from `NetworkSpec::all()` so it never enters
+    // the paper-table evaluations): one fc layer whose row-0 spike and
+    // sparse slab rows make the format argmin flip between CSR at one
+    // thread and dense at many — the fixture CI's serve-smoke uses to
+    // drive `/admin/replan` to an observable decision change.
+    if net.eq_ignore_ascii_case("spike-slab") {
+        let spec = NetworkSpec {
+            name: "spike-slab",
+            layers: vec![LayerSpec {
+                name: "spike".to_string(),
+                kind: crate::networks::zoo::LayerKind::Fc,
+                rows: 8,
+                cols: 255,
+                patches: 1,
+            }],
+        };
+        let m = crate::stats::synth::spike_and_slab(8, 255, 2);
+        let layers = vec![("spike".to_string(), m, vec![0.0; 8])];
+        return Some((spec, layers));
+    }
     let spec_used = NetworkSpec::by_name(net)?.scaled(scale);
     let target = TargetStats::table_iv(net)
         .or_else(|| TargetStats::retrained(net))
@@ -246,6 +267,23 @@ mod tests {
         let t = TargetStats::retrained("lenet5").unwrap();
         assert!((t.p0 - 0.981).abs() < 1e-9);
         assert!(t.entropy < 0.35, "H = {}", t.entropy);
+    }
+
+    #[test]
+    fn spike_slab_zoo_net_is_deterministic_and_off_registry() {
+        let (spec, layers) = synthesize_zoo_layers("spike-slab", 1, 1).unwrap();
+        assert_eq!(spec.name, "spike-slab");
+        assert_eq!(layers.len(), 1);
+        let (name, m, bias) = &layers[0];
+        assert_eq!(name, "spike");
+        assert_eq!((m.rows(), m.cols()), (8, 255));
+        assert_eq!(bias.len(), 8);
+        // Seed and scale are ignored: the fixture is fully deterministic.
+        let (_, again) = synthesize_zoo_layers("SPIKE-SLAB", 4, 99).unwrap();
+        assert_eq!(m.data(), again[0].1.data());
+        // Not a zoo member — the paper-table evaluations never see it.
+        assert!(NetworkSpec::by_name("spike-slab").is_none());
+        assert!(NetworkSpec::all().iter().all(|n| n.name != "spike-slab"));
     }
 
     #[test]

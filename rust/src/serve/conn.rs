@@ -192,6 +192,7 @@ pub fn dispatch(state: &Arc<ServeState>, req: &Request) -> Response {
         ("GET", "/metrics") => Response::text(200, &render_metrics(state)),
         ("POST", "/v1/infer") => infer(state, req),
         ("POST", "/admin/reload") => admin_reload(state, req),
+        ("POST", "/admin/replan") => admin_replan(state, req),
         ("POST", "/admin/drain") => {
             state.begin_drain();
             Response::json(200, "{\"status\":\"draining\"}".to_string())
@@ -366,6 +367,109 @@ fn admin_reload(state: &Arc<ServeState>, req: &Request) -> Response {
     }
 }
 
+/// `POST /admin/replan` — live re-planning without touching weights.
+/// Body fields are all optional: `name` picks one route (default: every
+/// route), `threads` reconfigures the exec plane (`0` = all cores),
+/// `calibrate` re-measures the time model on the quiesced worker, and
+/// `objective` overrides the reselection argmin (default `time`).
+fn admin_replan(state: &Arc<ServeState>, req: &Request) -> Response {
+    use crate::coordinator::selector::Objective;
+    use crate::coordinator::server::ReplanRequest;
+
+    let body = String::from_utf8_lossy(&req.body);
+    let doc = if body.trim().is_empty() {
+        Json::Obj(Vec::new())
+    } else {
+        match json::parse(&body) {
+            Ok(d) => d,
+            Err(e) => return Response::json(400, err_body(&format!("bad JSON: {e}"))),
+        }
+    };
+    let mut plan = ReplanRequest::default();
+    if let Some(t) = doc.get("threads").and_then(|v| v.as_f64()) {
+        if !(0.0..=256.0).contains(&t) || t.fract() != 0.0 {
+            return Response::json(400, err_body("\"threads\" must be an integer in 0..=256"));
+        }
+        plan.threads = Some(t as usize);
+    }
+    if let Some(Json::Bool(b)) = doc.get("calibrate") {
+        plan.calibrate = *b;
+    }
+    if let Some(s) = doc.get("objective").and_then(|v| v.as_str()) {
+        plan.objective = Some(match s {
+            "energy" => Objective::Energy,
+            "time" => Objective::Time,
+            "ops" => Objective::Ops,
+            "storage" => Objective::Storage,
+            other => {
+                return Response::json(
+                    400,
+                    err_body(&format!(
+                        "unknown objective '{other}' (energy|time|ops|storage)"
+                    )),
+                )
+            }
+        });
+    }
+    let names: Vec<String> = match doc.get("name").and_then(|v| v.as_str()) {
+        Some(n) => vec![n.to_string()],
+        None => state.router.names(),
+    };
+    if names.is_empty() {
+        return Response::json(503, err_body("no packs registered"));
+    }
+
+    let mut flipped_total = 0usize;
+    let mut packs = String::new();
+    for (i, name) in names.iter().enumerate() {
+        let reports = match state.router.replan(name, plan) {
+            Ok(r) => r,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let code = if msg.contains("unknown route") { 404 } else { 500 };
+                return Response::json(code, err_body(&msg));
+            }
+        };
+        if i > 0 {
+            packs.push(',');
+        }
+        packs.push_str(&format!("{{\"pack\":\"{}\",\"workers\":[", json_escape(name)));
+        for (w, r) in reports.iter().enumerate() {
+            flipped_total += r.flipped;
+            if w > 0 {
+                packs.push(',');
+            }
+            packs.push_str(&format!(
+                "{{\"threads\":{},\"calibrated\":{},\"flipped\":{},\"before\":{},\"after\":{}}}",
+                r.threads,
+                r.calibrated,
+                r.flipped,
+                format_names(&r.before),
+                format_names(&r.after),
+            ));
+        }
+        packs.push_str("]}");
+    }
+    Response::json(
+        200,
+        format!("{{\"flipped\":{flipped_total},\"packs\":[{packs}]}}"),
+    )
+}
+
+fn format_names(kinds: &[crate::formats::FormatKind]) -> String {
+    let mut out = String::from("[");
+    for (i, k) in kinds.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        out.push_str(k.name());
+        out.push('"');
+    }
+    out.push(']');
+    out
+}
+
 fn healthz_json(state: &Arc<ServeState>) -> String {
     let mut out = String::from("{\"status\":\"");
     out.push_str(if state.draining() { "draining" } else { "ok" });
@@ -458,6 +562,20 @@ fn render_metrics(state: &Arc<ServeState>) -> String {
         out.push_str(&format!("pack_queue_depth{{{label}}} {depth}\n"));
         out.push_str(&format!("pack_queue_depth_peak{{{label}}} {peak}\n"));
         out.push_str(&format!("pack_queue_age_us{{{label}}} {age}\n"));
+        // Adaptive execution: cumulative stolen-chunk claims and plan
+        // rebuilds summed over workers, plus the worst lane-imbalance
+        // snapshot (milli-ratio of max to mean lane time; 1000 = a
+        // perfectly balanced wave, 0 = serial engine / no waves yet).
+        let (mut steals, mut replans, mut imb) = (0u64, 0u64, 0u64);
+        for w in 0..ep.workers.workers() {
+            let wm = ep.workers.worker_metrics(w);
+            steals += wm.steals_total.load(Ordering::Relaxed);
+            replans += wm.waves_replanned.load(Ordering::Relaxed);
+            imb = imb.max(wm.lane_imbalance_milli.load(Ordering::Relaxed));
+        }
+        out.push_str(&format!("pack_steals_total{{{label}}} {steals}\n"));
+        out.push_str(&format!("pack_waves_replanned_total{{{label}}} {replans}\n"));
+        out.push_str(&format!("pack_lane_imbalance_milli{{{label}}} {imb}\n"));
     }
     out
 }
@@ -566,6 +684,46 @@ mod tests {
             .and_then(|v| v.parse::<u64>().ok())
             .expect("peak gauge rendered");
         assert!(peak >= 1, "{text}");
+        state.router.shutdown();
+    }
+
+    #[test]
+    fn admin_replan_reports_formats_and_validates() {
+        let state = test_state();
+        // Empty object = default replan (argmin time, current threads)
+        // across every registered pack.
+        let resp = dispatch(
+            &state,
+            &Request::new("POST", "/admin/replan").json("{}".to_string()),
+        );
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let doc = json::parse(&resp.body_str()).unwrap();
+        assert!(doc.get("flipped").unwrap().as_f64().is_some());
+        let packs = doc.get("packs").unwrap().items();
+        assert_eq!(packs.len(), 1);
+        assert_eq!(packs[0].get("pack").unwrap().as_str(), Some("conn"));
+        let workers = packs[0].get("workers").unwrap().items();
+        assert_eq!(workers.len(), 1);
+        assert_eq!(workers[0].get("threads").unwrap().as_f64(), Some(1.0));
+        assert_eq!(workers[0].get("before").unwrap().items().len(), 1);
+        assert_eq!(workers[0].get("after").unwrap().items().len(), 1);
+        // The route keeps serving after the replan.
+        assert_eq!(post_infer(&state, "{\"input\":[1,2,3,4,5,6]}").status, 200);
+        // Validation: unknown route, bad objective, bad thread count.
+        let unknown =
+            Request::new("POST", "/admin/replan").json("{\"name\":\"ghost\"}".to_string());
+        assert_eq!(dispatch(&state, &unknown).status, 404);
+        let bad =
+            Request::new("POST", "/admin/replan").json("{\"objective\":\"vibes\"}".to_string());
+        assert_eq!(dispatch(&state, &bad).status, 400);
+        let neg = Request::new("POST", "/admin/replan").json("{\"threads\":1.5}".to_string());
+        assert_eq!(dispatch(&state, &neg).status, 400);
+        // The adaptive-execution rows render on /metrics.
+        let m = dispatch(&state, &Request::new("GET", "/metrics"));
+        let text = m.body_str().into_owned();
+        assert!(text.contains("pack_steals_total{pack=\"conn\""), "{text}");
+        assert!(text.contains("pack_waves_replanned_total{pack=\"conn\""));
+        assert!(text.contains("pack_lane_imbalance_milli{pack=\"conn\""));
         state.router.shutdown();
     }
 

@@ -42,6 +42,9 @@ pub struct LoadgenConfig {
     /// Deadline attached to every request.
     pub deadline_ms: u64,
     pub seed: u64,
+    /// Arrival-trace file to replay instead of the synthetic sweeps: one
+    /// offset per line, seconds from step start.
+    pub trace: Option<std::path::PathBuf>,
 }
 
 impl Default for LoadgenConfig {
@@ -54,6 +57,7 @@ impl Default for LoadgenConfig {
             conns: 4,
             deadline_ms: 1_000,
             seed: 42,
+            trace: None,
         }
     }
 }
@@ -245,34 +249,12 @@ pub fn closed_step(
     StepResult::from_stats("closed", concurrency, 0.0, &merged, elapsed_s)
 }
 
-/// Open loop: a generator schedules Poisson arrivals; `conns` workers
-/// send them, measuring latency from the scheduled instant.
-pub fn open_step(
-    addr: &str,
-    body: &str,
-    rate: f64,
-    conns: usize,
-    duration: Duration,
-    deadline_ms: u64,
-    seed: u64,
-) -> StepResult {
-    let start = Instant::now();
-    let end = start + duration;
-    // Backlog bound: under overload the generator blocks here instead of
-    // allocating unboundedly; workers still charge lateness to latency.
-    let (tx, rx) = sync_channel::<Instant>(1024);
-    let generator = thread::spawn(move || {
-        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
-        let mut t = Instant::now();
-        loop {
-            // Exponential inter-arrival gap with mean 1/rate.
-            let gap = -(1.0 - rng.f64()).ln() / rate.max(1e-9);
-            t += Duration::from_secs_f64(gap);
-            if t >= end || tx.send(t).is_err() {
-                break;
-            }
-        }
-    });
+/// Worker pool shared by the open-loop modes (Poisson and trace
+/// replay): `conns` threads pull scheduled instants off the channel,
+/// sleep until each, and charge latency from the *scheduled* arrival —
+/// coordinated-omission-free, so time spent queued behind a slow server
+/// counts against the server, not the client.
+fn drive_scheduled(addr: &str, body: &str, rx: Receiver<Instant>, conns: usize, deadline_ms: u64) -> StepStats {
     let rx = Arc::new(Mutex::new(rx));
     let mut joins = Vec::new();
     for _ in 0..conns.max(1) {
@@ -301,9 +283,6 @@ pub fn open_step(
                     continue;
                 };
                 match c.request(&req) {
-                    // Coordinated-omission-free: latency from the
-                    // *scheduled* arrival, so time spent queued behind a
-                    // slow server counts against the server.
                     Ok(resp) => {
                         stats.record(resp.status, scheduled.elapsed().as_micros() as u64)
                     }
@@ -317,15 +296,114 @@ pub fn open_step(
             stats
         }));
     }
-    let _ = generator.join();
     let mut merged = StepStats::default();
     for j in joins {
         if let Ok(s) = j.join() {
             merged.absorb(&s);
         }
     }
+    merged
+}
+
+/// Open loop: a generator schedules Poisson arrivals; `conns` workers
+/// send them, measuring latency from the scheduled instant.
+pub fn open_step(
+    addr: &str,
+    body: &str,
+    rate: f64,
+    conns: usize,
+    duration: Duration,
+    deadline_ms: u64,
+    seed: u64,
+) -> StepResult {
+    let start = Instant::now();
+    let end = start + duration;
+    // Backlog bound: under overload the generator blocks here instead of
+    // allocating unboundedly; workers still charge lateness to latency.
+    let (tx, rx) = sync_channel::<Instant>(1024);
+    let generator = thread::spawn(move || {
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut t = Instant::now();
+        loop {
+            // Exponential inter-arrival gap with mean 1/rate.
+            let gap = -(1.0 - rng.f64()).ln() / rate.max(1e-9);
+            t += Duration::from_secs_f64(gap);
+            if t >= end || tx.send(t).is_err() {
+                break;
+            }
+        }
+    });
+    let merged = drive_scheduled(addr, body, rx, conns, deadline_ms);
+    let _ = generator.join();
     let elapsed_s = start.elapsed().as_secs_f64();
     StepResult::from_stats("open", conns, rate, &merged, elapsed_s)
+}
+
+/// Trace replay: arrivals at recorded offsets (seconds from step start)
+/// instead of a synthetic distribution, so a production burst pattern
+/// can be driven against the server verbatim. Scheduling is open-loop —
+/// a slow server cannot postpone the next recorded arrival, and each
+/// request's latency is measured from its recorded instant.
+pub fn trace_step(
+    addr: &str,
+    body: &str,
+    offsets: &[f64],
+    conns: usize,
+    deadline_ms: u64,
+) -> StepResult {
+    let start = Instant::now();
+    let span = offsets.iter().copied().fold(0.0f64, f64::max);
+    // Effective offered rate over the trace span, reported in the
+    // bench row so trace steps compare against swept open-loop ones.
+    let rate = if span > 0.0 {
+        offsets.len() as f64 / span
+    } else {
+        0.0
+    };
+    let sched: Vec<f64> = offsets.to_vec();
+    let (tx, rx) = sync_channel::<Instant>(1024);
+    let generator = thread::spawn(move || {
+        for off in sched {
+            if tx.send(start + Duration::from_secs_f64(off)).is_err() {
+                break;
+            }
+        }
+    });
+    let merged = drive_scheduled(addr, body, rx, conns, deadline_ms);
+    let _ = generator.join();
+    let elapsed_s = start.elapsed().as_secs_f64();
+    StepResult::from_stats("trace", conns, rate, &merged, elapsed_s)
+}
+
+/// Parse an arrival trace: one offset per line (seconds from step
+/// start, f64), `#` comments and blank lines skipped. Offsets must be
+/// finite and non-negative; recorded order is preserved.
+pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
+    let mut offsets = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v: f64 = line
+            .parse()
+            .map_err(|_| anyhow!("trace line {}: not a number: {line:?}", lineno + 1))?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("trace line {}: offset must be finite and >= 0, got {v}", lineno + 1);
+        }
+        offsets.push(v);
+    }
+    if offsets.is_empty() {
+        bail!("trace contains no arrivals");
+    }
+    Ok(offsets)
+}
+
+/// Read and parse an arrival-trace file (see [`parse_trace`]).
+pub fn load_trace(path: &Path) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {}", path.display()))
 }
 
 /// Verify the socket path end-to-end: `count` deterministic inputs must
@@ -466,10 +544,12 @@ pub fn describe(s: &StepResult) -> String {
     format!(
         "{:>6} {} {:>8.1} rps  ok {:>7}  429 {:>5}  504 {:>5}  err {:>4}  p50 {:>7}µs  p99 {:>7}µs  p999 {:>7}µs",
         s.mode,
-        if s.mode == "open" {
-            format!("rate {:>7.0}", s.rate)
-        } else {
+        if s.mode == "closed" {
             format!("conc {:>7}", s.concurrency)
+        } else {
+            // Open and trace steps both carry an offered rate (for
+            // traces: arrivals over the recorded span).
+            format!("rate {:>7.0}", s.rate)
         },
         s.throughput_rps(),
         s.ok,
@@ -497,25 +577,40 @@ pub fn run(cfg: &LoadgenConfig, out_path: &Path, verify_pack: Option<&Path>) -> 
     }
     let duration = Duration::from_millis(cfg.duration_ms);
     let mut steps = Vec::new();
-    for &c in &cfg.concurrency {
-        let s = closed_step(&cfg.addr, &body, c, duration, cfg.deadline_ms);
+    if let Some(trace_path) = &cfg.trace {
+        // Trace replay supersedes the synthetic sweeps: the recorded
+        // arrival pattern is the whole workload.
+        let offsets = load_trace(trace_path)?;
+        summary.push_str(&format!(
+            "replaying {} arrivals from {}\n",
+            offsets.len(),
+            trace_path.display()
+        ));
+        let s = trace_step(&cfg.addr, &body, &offsets, cfg.conns, cfg.deadline_ms);
         summary.push_str(&describe(&s));
         summary.push('\n');
         steps.push(s);
-    }
-    for (i, &rate) in cfg.rates.iter().enumerate() {
-        let s = open_step(
-            &cfg.addr,
-            &body,
-            rate,
-            cfg.conns,
-            duration,
-            cfg.deadline_ms,
-            cfg.seed.wrapping_add(i as u64),
-        );
-        summary.push_str(&describe(&s));
-        summary.push('\n');
-        steps.push(s);
+    } else {
+        for &c in &cfg.concurrency {
+            let s = closed_step(&cfg.addr, &body, c, duration, cfg.deadline_ms);
+            summary.push_str(&describe(&s));
+            summary.push('\n');
+            steps.push(s);
+        }
+        for (i, &rate) in cfg.rates.iter().enumerate() {
+            let s = open_step(
+                &cfg.addr,
+                &body,
+                rate,
+                cfg.conns,
+                duration,
+                cfg.deadline_ms,
+                cfg.seed.wrapping_add(i as u64),
+            );
+            summary.push_str(&describe(&s));
+            summary.push('\n');
+            steps.push(s);
+        }
     }
     if steps.iter().all(|s| s.ok == 0) {
         bail!("no request succeeded — is the server healthy?\n{summary}");
@@ -583,6 +678,7 @@ pub fn smoke(out_path: &Path, seed: u64) -> Result<String> {
         conns: 2,
         deadline_ms: 1_000,
         seed,
+        trace: None,
     };
     let result = run(&lg, out_path, Some(&pack_path));
     let drained = handle.shutdown(Duration::from_secs(10));
@@ -664,6 +760,19 @@ mod tests {
             assert!(row.get(key).unwrap().as_f64().is_some(), "missing {key}");
         }
         assert!(doc.get("knee").unwrap().get("p99_us").is_some());
+    }
+
+    #[test]
+    fn trace_parsing_accepts_comments_and_rejects_junk() {
+        let text = "# recorded 2026-08-01\n0.0\n0.010\n\n0.025\n  0.5  \n";
+        let offsets = parse_trace(text).unwrap();
+        assert_eq!(offsets, vec![0.0, 0.010, 0.025, 0.5]);
+
+        assert!(parse_trace("").is_err(), "empty trace");
+        assert!(parse_trace("# only comments\n").is_err());
+        assert!(parse_trace("0.1\nnope\n").is_err(), "junk line");
+        assert!(parse_trace("-0.5\n").is_err(), "negative offset");
+        assert!(parse_trace("inf\n").is_err(), "non-finite offset");
     }
 
     #[test]

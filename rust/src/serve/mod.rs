@@ -13,13 +13,14 @@
 //! * [`reload`] — [`HotRouter`], the route table whose per-name
 //!   [`Arc`]-swap gives live pack hot-reload under traffic;
 //! * [`conn`] — per-connection dispatch: `POST /v1/infer` (JSON),
-//!   `GET /healthz`, `GET /metrics`, and the `/admin/*` plane, with
-//!   per-request deadlines (`504` before a worker is ever touched);
+//!   `GET /healthz`, `GET /metrics`, and the `/admin/*` plane
+//!   (`reload`, `replan`, `drain`, `shutdown`), with per-request
+//!   deadlines (`504` before a worker is ever touched);
 //! * [`listener`] — nonblocking accept loop, SIGTERM → graceful drain
 //!   (stop accepting, answer in-flight, flush workers, exit 0);
-//! * [`loadgen`] — closed-loop and open-loop Poisson load generation
-//!   with coordinated-omission-free latency, emitting
-//!   `BENCH_serve.json` (throughput-vs-p99 sweep + knee point).
+//! * [`loadgen`] — closed-loop, open-loop Poisson, and recorded-trace
+//!   replay load generation with coordinated-omission-free latency,
+//!   emitting `BENCH_serve.json` (throughput-vs-p99 sweep + knee point).
 //!
 //! Request lifecycle: socket → [`conn::handle_conn`] → admission permit
 //! → [`HotRouter::endpoint`] → `WorkerSet::submit` → batcher → worker →

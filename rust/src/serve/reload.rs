@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::engine::Engine;
-use crate::coordinator::server::{ServerConfig, WorkerSet};
+use crate::coordinator::server::{ReplanReport, ReplanRequest, ServerConfig, WorkerSet};
 use crate::pack::map::PackMap;
 use anyhow::{anyhow, Context, Result};
 
@@ -113,6 +113,21 @@ impl HotRouter {
             .iter()
             .map(|e| e.name.clone())
             .collect()
+    }
+
+    /// Live re-planning for one route: forwards the request to every
+    /// worker of the named endpoint (see
+    /// [`WorkerSet::replan`](crate::coordinator::WorkerSet::replan)).
+    /// Unlike [`HotRouter::reload`] this keeps the same pack and workers
+    /// — only the engines' execution plane and format choices move.
+    pub fn replan(&self, name: &str, req: ReplanRequest) -> Result<Vec<ReplanReport>> {
+        let ep = self.endpoint(name).ok_or_else(|| {
+            anyhow!(
+                "unknown route {name:?} (known: {})",
+                self.names().join(", ")
+            )
+        })?;
+        ep.workers.replan(req)
     }
 
     /// Atomically replace the pack behind `name` with `path`. All the
@@ -224,6 +239,39 @@ mod tests {
         router.shutdown();
         let _ = std::fs::remove_file(&p1);
         let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn replan_keeps_route_serving_and_reports_workers() {
+        let dir = std::env::temp_dir().join(format!("hotrouter-{}-p", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_pack(&dir, "replan", 5);
+        let router = HotRouter::new(cfg(), 2);
+        router.add_pack("m", &p).unwrap();
+        let x = vec![0.25f32; 12];
+        let before = router.endpoint("m").unwrap().workers.infer_blocking(x.clone()).unwrap();
+        let reports = router
+            .replan(
+                "m",
+                ReplanRequest {
+                    threads: Some(2),
+                    ..ReplanRequest::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(reports.len(), 2, "one report per worker");
+        for r in &reports {
+            assert_eq!(r.threads, 2);
+        }
+        // Same pack, same generation, same workers — and replies do not
+        // move: the tiny layer is fully dense, so CSR and dense run the
+        // identical per-row add sequence whichever way selection lands.
+        let ep = router.endpoint("m").unwrap();
+        assert_eq!(ep.generation, 0, "replan must not bump the generation");
+        assert_eq!(ep.workers.infer_blocking(x).unwrap(), before);
+        assert!(router.replan("nope", ReplanRequest::default()).is_err());
+        router.shutdown();
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!
 //! * lower-is-better — names ending in `_ms`, `_ns` or `_us`;
 //! * higher-is-better — `gflops_equiv`, `speedup_vs_1t`, `fused_speedup`,
-//!   `compression_ratio`, `throughput_rps`.
+//!   `compression_ratio`, `throughput_rps`, `stealing_speedup`.
 //!
 //! The regression percentage is always oriented so that positive = worse;
 //! anything above the threshold (CI default 25%, generous to runner
@@ -36,12 +36,13 @@ pub struct Metric {
 
 /// Direction of a metric name, if tracked.
 fn tracked(name: &str) -> Option<bool> {
-    const HIGHER: [&str; 5] = [
+    const HIGHER: [&str; 6] = [
         "gflops_equiv",
         "speedup_vs_1t",
         "fused_speedup",
         "compression_ratio",
         "throughput_rps",
+        "stealing_speedup",
     ];
     if HIGHER.contains(&name) {
         Some(true)
@@ -330,6 +331,19 @@ mod tests {
         let r = gate(&base, &fresh, 25.0);
         assert!(r.passed());
         assert!(r.compared.iter().all(|c| c.regress_pct < 0.0));
+    }
+
+    #[test]
+    fn stealing_speedup_is_tracked_higher_is_better() {
+        // A halved stealing speedup is a 100% regression and must fail.
+        let base = doc(r#"{"stealing": [{"net": "spike-slab", "threads": 4, "stealing_speedup": 1.4}]}"#);
+        let fresh = doc(r#"{"stealing": [{"net": "spike-slab", "threads": 4, "stealing_speedup": 0.7}]}"#);
+        let r = gate(&base, &fresh, 25.0);
+        assert!(!r.passed());
+        assert_eq!(
+            r.failures().next().unwrap().key,
+            "stealing[net=spike-slab,threads=4].stealing_speedup"
+        );
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Straggler-injection suite for the adaptive execution plane.
+//!
+//! Work stealing only earns its place if a straggling lane changes *when*
+//! rows are computed but never *what* they compute: every row keeps its
+//! serial inner-loop reduction order whichever lane claims it, so output
+//! must stay **bit-identical** (asserted with `assert_eq!`, never
+//! tolerances) to the serial engine — for every format, thread counts
+//! {2, 4, 7}, both Ω[0] regimes, with and without an injected straggler,
+//! and across timing-driven re-shards. The suite also checks the
+//! exactly-once surface the chunk cursor claims over (heads + pooled
+//! chunks tile the rows, chunks ascend globally) at integration level,
+//! and that a panicking lane still poisons the scope without killing the
+//! pool.
+//!
+//! `STEAL_STRESS_ITERS` (default 2) scales the number of seeded rounds —
+//! CI's stealing-stress step runs many more than the local default.
+
+use std::time::Duration;
+
+use cer::coordinator::Engine;
+use cer::exec::{ReplanState, ShardPlan, StealPlan, ThreadPool};
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::AnyMatrix;
+use cer::util::Rng;
+
+const THREADS: [usize; 3] = [2, 4, 7];
+
+/// Chunk sizing used by the engine (`Engine::STEAL_CHUNK_WORK`).
+const STEAL_CHUNK_WORK: u64 = 2048;
+
+fn stress_iters() -> u64 {
+    std::env::var("STEAL_STRESS_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// Random low-entropy matrix. `implicit_zero` selects the Ω[0] regime:
+/// true → zeros dominate (decomposed hot path), false → 5.0 dominates
+/// (the Ω[0] ≠ 0 correction path in CER/CSER).
+fn sample_matrix(rows: usize, cols: usize, implicit_zero: bool, rng: &mut Rng) -> Dense {
+    let dominant = if implicit_zero { 0.0f32 } else { 5.0f32 };
+    let rare = [1.0f32, -2.0, 0.25, 3.5, -0.75];
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            if rng.f32() < 0.6 {
+                dominant
+            } else {
+                rare[rng.below(rare.len())]
+            }
+        })
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+/// Two-layer net: a wide first layer (128×256, big enough that its dense
+/// shards grow pooled tail chunks at every tested thread count) feeding a
+/// small head layer, so the pipeline crosses a layer barrier with live
+/// per-layer cursors.
+fn two_layer_net(implicit_zero: bool, rng: &mut Rng) -> Vec<(String, Dense, Vec<f32>)> {
+    let l0 = sample_matrix(128, 256, implicit_zero, rng);
+    let l1 = sample_matrix(33, 128, implicit_zero, rng);
+    let b0: Vec<f32> = (0..128).map(|_| rng.f32() - 0.5).collect();
+    let b1: Vec<f32> = (0..33).map(|_| rng.f32() - 0.5).collect();
+    vec![("wide".to_string(), l0, b0), ("head".to_string(), l1, b1)]
+}
+
+#[test]
+fn stealing_bit_identical_under_straggler_across_formats_threads_regimes() {
+    let batch = 2;
+    for iter in 0..stress_iters() {
+        let mut rng = Rng::new(0x57EA1 + iter);
+        for implicit_zero in [true, false] {
+            let layers = two_layer_net(implicit_zero, &mut rng);
+            let x: Vec<f32> = (0..batch * 256).map(|_| rng.f32() - 0.5).collect();
+            for kind in FormatKind::ALL {
+                let mut serial = Engine::native_fixed(layers.clone(), kind);
+                let want = serial.forward(&x, batch).unwrap();
+                for t in THREADS {
+                    let mut eng = Engine::native_fixed(layers.clone(), kind).with_threads(t);
+                    let tag =
+                        format!("{kind:?} implicit_zero={implicit_zero} t={t} iter={iter}");
+                    assert_eq!(eng.forward(&x, batch).unwrap(), want, "{tag} no straggler");
+                    // Straggle the first and the last lane in turn: the
+                    // healthy lanes must drain the straggler's pooled
+                    // chunks without moving the output by a single bit.
+                    for lane in [0, t - 1] {
+                        eng.set_lane_delay_for_tests(Some((lane, Duration::from_millis(2))));
+                        assert_eq!(
+                            eng.forward(&x, batch).unwrap(),
+                            want,
+                            "{tag} straggler lane {lane}"
+                        );
+                    }
+                    // The wide dense layer (32768 work units) has pooled
+                    // chunks at ≥4 lanes, and a 2ms stall dwarfs the
+                    // healthy lanes' compute — chunks must get stolen.
+                    if matches!(kind, FormatKind::Dense) && t >= 4 {
+                        assert!(
+                            eng.steals_total() > 0,
+                            "{tag}: straggler's chunks were never stolen"
+                        );
+                    }
+                    // Recovery: clearing the delay keeps outputs exact.
+                    eng.set_lane_delay_for_tests(None);
+                    assert_eq!(eng.forward(&x, batch).unwrap(), want, "{tag} recovered");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_replan_under_straggler_stays_bit_identical_and_fires() {
+    let mut rng = Rng::new(0xAD0);
+    let layers = two_layer_net(true, &mut rng);
+    let x: Vec<f32> = (0..256).map(|_| rng.f32() - 0.5).collect();
+    let mut serial = Engine::native_fixed(layers.clone(), FormatKind::Csr);
+    let want = serial.forward(&x, 1).unwrap();
+
+    let mut eng = Engine::native_fixed(layers, FormatKind::Csr).with_threads(4);
+    eng.set_adaptive_replan(true);
+    // A persistent 200µs stall on lane 1 (vs µs-scale compute) keeps the
+    // observed imbalance far above the replan threshold, so the periodic
+    // check must fire at least twice in 130 waves (period 64) — and the
+    // resharded plans, which hand the slow lane fewer rows, must keep
+    // every wave's output bit-identical to serial.
+    eng.set_lane_delay_for_tests(Some((1, Duration::from_micros(200))));
+    for wave in 0..130 {
+        assert_eq!(eng.forward(&x, 1).unwrap(), want, "wave {wave}");
+    }
+    assert!(
+        eng.waves_replanned() > 0,
+        "a persistent straggler must trigger timing-driven re-sharding \
+         (imbalance {:.2})",
+        eng.last_wave_imbalance()
+    );
+    assert!(eng.last_wave_imbalance() >= 1.0);
+
+    // Back to a healthy host: still exact after the plans moved.
+    eng.set_lane_delay_for_tests(None);
+    assert_eq!(eng.forward(&x, 1).unwrap(), want, "after recovery");
+}
+
+/// Heads + pooled chunks must tile `0..rows` exactly once, heads must
+/// start their shards, chunks must sit inside their owner's shard and
+/// ascend globally — the surface the per-layer atomic cursor claims over.
+fn check_exactly_once(sp: &StealPlan, plan: &ShardPlan, tag: &str) {
+    assert_eq!(sp.rows(), plan.rows(), "{tag}");
+    assert_eq!(sp.head_count(), plan.shard_count(), "{tag}");
+    let mut covered = vec![0u32; plan.rows()];
+    for s in 0..sp.head_count() {
+        let head = sp.head(s);
+        let shard = plan.shard(s);
+        assert_eq!(head.start, shard.start, "{tag}: head {s} must start its shard");
+        assert!(head.end <= shard.end, "{tag}: head {s} escapes its shard");
+        for r in head {
+            covered[r] += 1;
+        }
+    }
+    let mut last = 0usize;
+    for i in 0..sp.chunk_count() {
+        let c = sp.chunk(i);
+        assert!(c.start >= last, "{tag}: pooled chunks must ascend (cursor order)");
+        last = c.end;
+        let owner = plan.shard(sp.chunk_owner(i));
+        assert!(
+            owner.start <= c.start && c.end <= owner.end,
+            "{tag}: chunk {i} outside its owner's shard"
+        );
+        for r in c {
+            covered[r] += 1;
+        }
+    }
+    for (r, &n) in covered.iter().enumerate() {
+        assert_eq!(n, 1, "{tag}: row {r} covered {n} times (must be exactly once)");
+    }
+}
+
+#[test]
+fn steal_and_reshard_plans_cover_rows_exactly_once() {
+    let mut rng = Rng::new(0xC0FE);
+    for (rows, cols) in [(37usize, 41usize), (64, 120), (128, 1024), (3, 70_000)] {
+        for implicit_zero in [true, false] {
+            let m = sample_matrix(rows, cols, implicit_zero, &mut rng);
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                let prefix = enc.work_prefix();
+                for t in THREADS {
+                    let tag = format!("{kind:?} {rows}x{cols} t={t}");
+                    let plan = enc.shard_plan(t);
+                    let sp = StealPlan::from_plan(&plan, &prefix, STEAL_CHUNK_WORK);
+                    check_exactly_once(&sp, &plan, &tag);
+                    // A timing-driven reshard (lane rates 1x..~5x apart)
+                    // must hand back a plan with the same exactly-once
+                    // surface when re-chunked over the true work prefix.
+                    let mut st = ReplanState::new(1, t, 1, 1.0);
+                    for lane in 0..t {
+                        st.observe_wave(0, lane, 100 + 400 * lane as u64);
+                    }
+                    if let Some(new) = st.reshard(0, &prefix, &plan) {
+                        assert_eq!(new.rows(), plan.rows(), "{tag} reshard rows");
+                        assert_eq!(
+                            new.shard_count(),
+                            plan.shard_count(),
+                            "{tag} reshard shard count"
+                        );
+                        let sp2 = StealPlan::from_plan(&new, &prefix, STEAL_CHUNK_WORK);
+                        check_exactly_once(&sp2, &new, &format!("{tag} resharded"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_survives_panicking_lane_and_stays_exact() {
+    // A lane that dies mid-wave must poison the scope (the panic reaches
+    // the dispatcher), not the pool: the same pool must keep producing
+    // bit-exact sharded products afterwards.
+    let mut rng = Rng::new(0xB00);
+    let m = sample_matrix(48, 96, false, &mut rng);
+    let enc = AnyMatrix::encode(FormatKind::Cer, &m);
+    let plan = enc.shard_plan(4);
+    let pool = ThreadPool::new(3);
+    let x: Vec<f32> = (0..96).map(|_| rng.f32() - 0.5).collect();
+    let mut want = vec![0.0f32; 48];
+    enc.matvec(&x, &mut want);
+
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+            Box::new(|| panic!("injected lane panic")),
+            Box::new(|| {}),
+        ];
+        pool.run_scoped(tasks);
+    }));
+    assert!(r.is_err(), "a panicking lane must fail the scope");
+
+    let mut got = vec![0.0f32; 48];
+    enc.matvec_sharded(&x, &mut got, &plan, &pool);
+    assert_eq!(got, want, "pool must stay usable and exact after a poisoned scope");
+}
