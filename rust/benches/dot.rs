@@ -18,10 +18,12 @@
 //! next to the *measured* pass time from the "dot" section, plus the
 //! model's and the measurement's per-thread-count winners and whether
 //! they agree — the data for auditing where the model mis-ranks. It also
-//! includes the documented `spike-and-slab` matrix
-//! (`cer::stats::synth::spike_and_slab(8, 255, 2)`) whose modeled winner
+//! includes the three documented synth selection regimes: `spike-and-slab`
+//! (`cer::stats::synth::spike_and_slab(8, 255, 2)`, whose modeled winner
 //! flips from CSR at 1 thread to dense at 8 — the canonical case where
-//! `--threads` changes the chosen format.
+//! `--threads` changes the chosen format), `block-structured` (dense 4x4
+//! tiles — the BSR regime), and `ternary` ({-a, 0, +a} entries — the TNN
+//! regime).
 //!
 //! Section "kernels": scalar vs SIMD backend throughput (GFLOP-equiv)
 //! for the formats with vectorized paths (dense, CSR) on a small and a
@@ -60,7 +62,8 @@ use cer::exec::ExecPlane;
 use cer::formats::FormatKind;
 use cer::kernels::{AnyMatrix, KernelBackend};
 use cer::networks::weights::synthesize_zoo_layers;
-use cer::stats::synth::spike_and_slab;
+use cer::formats::Dense;
+use cer::stats::synth::{block_structured, spike_and_slab, ternary};
 use cer::util::bench::{fmt_ns, time_median_ns};
 use cer::util::Rng;
 
@@ -314,49 +317,67 @@ fn main() {
         println!("{line}");
     }
 
-    // Documented selection-flip case: one fully-dense spike row + 7
-    // nearly-empty slab rows. No shard plan can split the spike, so the
-    // sparse formats' parallel critical path stays ~the whole spike row
-    // while dense shards its uniform rows 8 ways: the modeled winner is
-    // CSR at 1 thread and dense at 8 (covered by the selector tests).
+    // Documented selection-regime cases, each a matrix one format was
+    // built for:
+    //   * spike-and-slab — one fully-dense spike row + 7 nearly-empty
+    //     slab rows. No shard plan can split the spike, so the sparse
+    //     formats' parallel critical path stays ~the whole spike row
+    //     while dense shards its uniform rows 8 ways: the modeled winner
+    //     is CSR at 1 thread and dense at 8.
+    //   * block-structured — dense 4x4 tiles; BSR amortizes one
+    //     block-column index per tile and flips the time winner off CSR.
+    //   * ternary — {-a, 0, +a} entries; TNN's sign-partitioned segments
+    //     spend one multiply per row and take the serial time argmin.
+    // All three flips are pinned by the selector tests; here each format
+    // gets measured next to its model prediction on every regime.
     {
-        let m = spike_and_slab(8, 255, 2);
-        println!("=== spike-and-slab (8x255, slab nnz 2 — selection flip case) ===");
-        for kind in FormatKind::ALL {
-            let enc = AnyMatrix::encode(kind, &m);
-            let x: Vec<f32> = (0..enc.cols()).map(|_| rng.f32() - 0.5).collect();
-            let mut y = vec![0.0f32; enc.rows()];
-            let serial_ns = trace_matvec(&enc).time_ns(&tm);
-            let mut line = format!("{:<14} {:<6}", "spike-and-slab", kind.name());
-            for &t in &THREAD_COUNTS {
-                let plane = ExecPlane::with_threads(t);
-                let plan = enc.shard_plan(t);
-                let measured_ns = time_median_ns(warmup, iters, || {
-                    match plane.pool() {
-                        Some(pool) => enc.matvec_sharded(&x, &mut y, &plan, pool),
-                        None => enc.matvec(&x, &mut y),
-                    }
-                    std::hint::black_box(&y);
-                });
-                let predicted_ns = if t > 1 {
-                    tm.sharded_ns(serial_ns, &plan)
-                } else {
-                    serial_ns
-                };
-                line.push_str(&format!(
-                    "  {t}t {:>9} pred {:>9}",
-                    fmt_ns(measured_ns),
-                    fmt_ns(predicted_ns)
-                ));
-                sel_rows.push(SelRow {
-                    net: "spike-and-slab".to_string(),
-                    format: kind.name(),
-                    threads: t,
-                    predicted_ns,
-                    measured_ns,
-                });
+        let synth_cases: [(&str, Dense); 3] = [
+            ("spike-and-slab", spike_and_slab(8, 255, 2)),
+            ("block-structured", block_structured(64, 128, 8)),
+            ("ternary", ternary(64, 128)),
+        ];
+        for (name, m) in synth_cases {
+            println!(
+                "=== {name} ({}x{} — selection regime) ===",
+                m.rows(),
+                m.cols()
+            );
+            for kind in FormatKind::ALL {
+                let enc = AnyMatrix::encode(kind, &m);
+                let x: Vec<f32> = (0..enc.cols()).map(|_| rng.f32() - 0.5).collect();
+                let mut y = vec![0.0f32; enc.rows()];
+                let serial_ns = trace_matvec(&enc).time_ns(&tm);
+                let mut line = format!("{:<16} {:<6}", name, kind.name());
+                for &t in &THREAD_COUNTS {
+                    let plane = ExecPlane::with_threads(t);
+                    let plan = enc.shard_plan(t);
+                    let measured_ns = time_median_ns(warmup, iters, || {
+                        match plane.pool() {
+                            Some(pool) => enc.matvec_sharded(&x, &mut y, &plan, pool),
+                            None => enc.matvec(&x, &mut y),
+                        }
+                        std::hint::black_box(&y);
+                    });
+                    let predicted_ns = if t > 1 {
+                        tm.sharded_ns(serial_ns, &plan)
+                    } else {
+                        serial_ns
+                    };
+                    line.push_str(&format!(
+                        "  {t}t {:>9} pred {:>9}",
+                        fmt_ns(measured_ns),
+                        fmt_ns(predicted_ns)
+                    ));
+                    sel_rows.push(SelRow {
+                        net: name.to_string(),
+                        format: kind.name(),
+                        threads: t,
+                        predicted_ns,
+                        measured_ns,
+                    });
+                }
+                println!("{line}");
             }
-            println!("{line}");
         }
     }
 
@@ -643,7 +664,7 @@ fn main() {
         sel_rows.len(),
         kernel_rows.len(),
         steal_rows.len(),
-        cases.len() + 1,
+        cases.len() + 3, // zoo nets + the three synth selection regimes
         THREAD_COUNTS
     );
 }

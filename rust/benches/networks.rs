@@ -1,5 +1,5 @@
 //! Network-level benchmarks (Tables II–IV): representative full-size layers
-//! of each §V-B network, all four formats, real kernel wall-clock.
+//! of each §V-B network, the whole format family, real kernel wall-clock.
 //!
 //! Run: `cargo bench --bench networks`
 

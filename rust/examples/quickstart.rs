@@ -1,4 +1,4 @@
-//! Quickstart: encode a matrix in all four formats, compare the paper's
+//! Quickstart: encode a matrix in every format of the family, compare the paper's
 //! four criteria, and run the dot product.
 //!
 //! ```sh

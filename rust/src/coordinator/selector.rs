@@ -1,8 +1,9 @@
-//! Automatic format selection: evaluate all four representations of a
-//! layer under the cost model and pick the argmin for the deployment
-//! objective. This is the paper's Fig. 3/4 analysis turned into a runtime
-//! policy — dense layers in the high-entropy corner stay dense, compressed
-//! layers get CER/CSER, spike-and-slab layers get CSR.
+//! Automatic format selection: evaluate every representation in
+//! [`FormatKind::ALL`] under the cost model and pick the argmin for the
+//! deployment objective. This is the paper's Fig. 3/4 analysis turned into
+//! a runtime policy — dense layers in the high-entropy corner stay dense,
+//! compressed layers get CER/CSER, spike-and-slab layers get CSR,
+//! block-structured layers get BSR and ternary layers get TNN.
 //!
 //! Selection is **parallelism-aware**: [`select_format_in`] takes an
 //! [`ExecContext`] (the deployment's kernel thread count) and scores the
@@ -103,7 +104,7 @@ pub fn select_format(
     energy: &EnergyModel,
     time: &TimeModel,
     objective: Objective,
-) -> (FormatKind, [Criterion4; 4]) {
+) -> (FormatKind, [Criterion4; FormatKind::COUNT]) {
     select_format_in(m, energy, time, objective, ExecContext::SERIAL)
 }
 
@@ -139,7 +140,7 @@ pub fn select_format_in(
     time: &TimeModel,
     objective: Objective,
     ctx: ExecContext,
-) -> (FormatKind, [Criterion4; 4]) {
+) -> (FormatKind, [Criterion4; FormatKind::COUNT]) {
     let crits: Vec<Criterion4> = FormatKind::ALL
         .iter()
         .map(|&k| Criterion4::evaluate_in(&AnyMatrix::encode(k, m), energy, time, ctx))
@@ -154,10 +155,7 @@ pub fn select_format_in(
             best_score = s;
         }
     }
-    (
-        FormatKind::ALL[best],
-        [crits[0], crits[1], crits[2], crits[3]],
-    )
+    (FormatKind::ALL[best], std::array::from_fn(|i| crits[i]))
 }
 
 #[cfg(test)]
@@ -291,7 +289,7 @@ mod tests {
         // The flip is *justified* by the plan-aware estimates: at 8
         // threads dense's modeled time undercuts every sparse format even
         // though all of them beat it serially.
-        for i in 1..4 {
+        for i in 1..FormatKind::COUNT {
             assert!(crits1[i].time_ns < crits1[0].time_ns, "serial: sparse wins");
             assert!(crits8[0].time_ns < crits8[i].time_ns, "8t: dense wins");
         }

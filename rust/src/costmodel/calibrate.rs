@@ -56,10 +56,10 @@ pub struct BackendFit {
     pub backend: KernelBackend,
     /// Slope: measured wall time per modeled ns (1.0 = the static model
     /// is exact). Feeds [`TimeModel::format_scale`].
-    pub scale: [f64; 4],
+    pub scale: [f64; FormatKind::COUNT],
     /// Intercept (ns): fixed per-call cost the linear model attributes to
     /// the kernel. Recorded for inspection; not applied to the model.
-    pub intercept_ns: [f64; 4],
+    pub intercept_ns: [f64; FormatKind::COUNT],
 }
 
 /// A host calibration: fitted per-format slopes per backend plus the
@@ -107,7 +107,7 @@ impl Calibration {
     /// prints the shortest exact round-trip form, so
     /// [`Calibration::parse_str`] recovers the values bit-identically).
     pub fn to_json_string(&self) -> String {
-        let arr = |v: &[f64; 4]| {
+        let arr = |v: &[f64; FormatKind::COUNT]| {
             v.iter()
                 .map(|x| x.to_string())
                 .collect::<Vec<_>>()
@@ -162,9 +162,9 @@ impl Calibration {
                     .ok_or_else(|| format!("fits[{i}] needs a string \"backend\""))?;
                 let backend = KernelBackend::parse(backend)
                     .map_err(|e| format!("fits[{i}]: {e}"))?;
-                let scale = array4(f.get("scale"), 1.0, &format!("fits[{i}].scale"))?;
+                let scale = format_array(f.get("scale"), 1.0, &format!("fits[{i}].scale"))?;
                 let intercept_ns =
-                    array4(f.get("intercept_ns"), 0.0, &format!("fits[{i}].intercept_ns"))?;
+                    format_array(f.get("intercept_ns"), 0.0, &format!("fits[{i}].intercept_ns"))?;
                 fits.push(BackendFit {
                     backend,
                     scale,
@@ -184,10 +184,16 @@ impl Calibration {
     }
 }
 
-/// `[f64; 4]` field decode: absent → all-`default`; shorter arrays pad
-/// with `default`; non-array or non-numeric elements are errors.
-fn array4(v: Option<&Json>, default: f64, what: &str) -> Result<[f64; 4], String> {
-    let mut out = [default; 4];
+/// Per-format array field decode (one slot per [`FormatKind::ALL`]
+/// entry): absent → all-`default`; shorter arrays pad with `default`, so
+/// files written before a format existed still load; non-array or
+/// non-numeric elements are errors.
+fn format_array(
+    v: Option<&Json>,
+    default: f64,
+    what: &str,
+) -> Result<[f64; FormatKind::COUNT], String> {
+    let mut out = [default; FormatKind::COUNT];
     let Some(v) = v else {
         return Ok(out);
     };
@@ -289,8 +295,8 @@ pub fn run_calibration(smoke: bool, backends: &[KernelBackend]) -> (Calibration,
     let mut fits = Vec::new();
     let mut rows_out = Vec::new();
     for &backend in backends {
-        let mut scale = [1.0f64; 4];
-        let mut intercept_ns = [0.0f64; 4];
+        let mut scale = [1.0f64; FormatKind::COUNT];
+        let mut intercept_ns = [0.0f64; FormatKind::COUNT];
         for (fi, &kind) in FormatKind::ALL.iter().enumerate() {
             let mut meas = [0.0f64; 2];
             let mut model = [0.0f64; 2];
@@ -370,13 +376,13 @@ mod tests {
             fits: vec![
                 BackendFit {
                     backend: KernelBackend::Scalar,
-                    scale: [1.25, 0.75, 2.0, 3.5],
-                    intercept_ns: [10.0, 0.0, 4.5, 0.25],
+                    scale: [1.25, 0.75, 2.0, 3.5, 1.5, 0.9],
+                    intercept_ns: [10.0, 0.0, 4.5, 0.25, 1.0, 2.5],
                 },
                 BackendFit {
                     backend: KernelBackend::Simd,
-                    scale: [0.5, 0.25, 2.0, 3.5],
-                    intercept_ns: [0.0; 4],
+                    scale: [0.5, 0.25, 2.0, 3.5, 1.5, 0.9],
+                    intercept_ns: [0.0; FormatKind::COUNT],
                 },
             ],
         }
@@ -407,14 +413,15 @@ mod tests {
             Calibration::parse_str(r#"{"fits": [{"backend": "simd"}]}"#).unwrap();
         assert_eq!(cal.fits.len(), 1);
         assert_eq!(cal.fits[0].backend, KernelBackend::Simd);
-        assert_eq!(cal.fits[0].scale, [1.0; 4]);
-        assert_eq!(cal.fits[0].intercept_ns, [0.0; 4]);
-        // Short arrays pad with the default.
+        assert_eq!(cal.fits[0].scale, [1.0; FormatKind::COUNT]);
+        assert_eq!(cal.fits[0].intercept_ns, [0.0; FormatKind::COUNT]);
+        // Short arrays pad with the default — pre-BSR/TNN files load with
+        // unit scales for the formats they predate.
         let cal = Calibration::parse_str(
             r#"{"fits": [{"backend": "scalar", "scale": [2.0, 3.0]}]}"#,
         )
         .unwrap();
-        assert_eq!(cal.fits[0].scale, [2.0, 3.0, 1.0, 1.0]);
+        assert_eq!(cal.fits[0].scale, [2.0, 3.0, 1.0, 1.0, 1.0, 1.0]);
     }
 
     #[test]
@@ -441,7 +448,7 @@ mod tests {
         let base = TimeModel::default_model();
         let fitted = cal.apply(&base, KernelBackend::Simd);
         assert_eq!(fitted.dispatch_overhead_ns, 812.5);
-        assert_eq!(fitted.format_scale, [0.5, 0.25, 2.0, 3.5]);
+        assert_eq!(fitted.format_scale, [0.5, 0.25, 2.0, 3.5, 1.5, 0.9]);
         // Kernel latencies are untouched — only the calibration fields move.
         assert_eq!(fitted.add, base.add);
         assert_eq!(fitted.rw, base.rw);
@@ -450,7 +457,7 @@ mod tests {
         let mut only_scalar = cal.clone();
         only_scalar.fits.truncate(1);
         let fitted = only_scalar.apply(&base, KernelBackend::Simd);
-        assert_eq!(fitted.format_scale, [1.0; 4]);
+        assert_eq!(fitted.format_scale, [1.0; FormatKind::COUNT]);
         assert_eq!(fitted.dispatch_overhead_ns, 812.5);
         // The default (identity) calibration reproduces the base model.
         let id = Calibration::default().apply(&base, KernelBackend::Scalar);
@@ -473,14 +480,14 @@ mod tests {
 
         // Synthetic host measurement: every sparse kernel runs 100x
         // slower than modeled; dense is exactly as modeled.
-        let mut scale = [100.0f64; 4];
+        let mut scale = [100.0f64; FormatKind::COUNT];
         scale[0] = 1.0; // Dense is slot 0 in FormatKind::ALL
         let cal = Calibration {
             dispatch_overhead_ns: 500.0,
             fits: vec![BackendFit {
                 backend: KernelBackend::Scalar,
                 scale,
-                intercept_ns: [0.0; 4],
+                intercept_ns: [0.0; FormatKind::COUNT],
             }],
         };
         let fitted = cal.apply(&base, KernelBackend::Scalar);
@@ -499,7 +506,7 @@ mod tests {
         assert_eq!(after, FormatKind::Dense, "the 100x penalty must flip the winner");
     }
 
-    fn argmin_time(crits: &[Criterion4; 4]) -> usize {
+    fn argmin_time(crits: &[Criterion4; FormatKind::COUNT]) -> usize {
         let mut best = 0;
         for i in 1..crits.len() {
             if crits[i].time_ns < crits[best].time_ns {
@@ -523,12 +530,15 @@ mod tests {
         assert!(
             (OVERHEAD_CLAMP.0..=OVERHEAD_CLAMP.1).contains(&cal.dispatch_overhead_ns)
         );
-        // 4 formats x 2 sizes x 1 backend.
-        assert_eq!(rows.len(), 8);
+        // Every format x 2 sizes x 1 backend.
+        assert_eq!(rows.len(), FormatKind::COUNT * 2);
         assert!(rows.iter().all(|r| r.measured_ns > 0.0 && r.modeled_ns > 0.0));
         // The bench artifact is valid JSON with one row per measurement.
         let doc = crate::util::json::parse(&bench_json(&rows)).expect("bench artifact parses");
-        assert_eq!(doc.get("calibration").unwrap().items().len(), 8);
+        assert_eq!(
+            doc.get("calibration").unwrap().items().len(),
+            FormatKind::COUNT * 2
+        );
         // And the calibration artifact round-trips.
         assert_eq!(Calibration::parse_str(&cal.to_json_string()).unwrap(), cal);
     }

@@ -43,7 +43,7 @@ pub struct TimeModel {
     /// [`FormatKind::ALL`] order (see [`TimeModel::scale_for`]). All 1.0
     /// (a bit-exact no-op on the time criterion) until calibration fits
     /// real slopes for the host.
-    pub format_scale: [f64; 4],
+    pub format_scale: [f64; FormatKind::COUNT],
 }
 
 impl TimeModel {
@@ -55,7 +55,7 @@ impl TimeModel {
             mul: 0.3,
             rw: [0.5, 2.0, 6.0, 20.0],
             dispatch_overhead_ns: Self::DISPATCH_OVERHEAD_NS,
-            format_scale: [1.0; 4],
+            format_scale: [1.0; FormatKind::COUNT],
         }
     }
 

@@ -11,6 +11,13 @@
 //!   *non-empty* run; per listed element: colI + input load, one add
 //!   (totalling nnz_r − 1 adds); 1 write.
 //! * **CSER**: as CER plus one ΩI load per run (all runs non-empty).
+//! * **BSR**: 2 blockRowPtr loads; one blockColI load per tile of the
+//!   row's block row; per in-bounds tile-row element: value + input load,
+//!   one mul; elems_r − 1 adds; 1 write. Zero-padded edge cells beyond the
+//!   matrix are stored but never loaded.
+//! * **TNN**: 2 rowPtr loads; slots_r+1 segPtr loads; one split load, one
+//!   magnitude load + one mul per *non-empty* slot; per listed element:
+//!   colI + input load, one add (totalling nnz_r − 1 adds); 1 write.
 //! * **packed dense** (§V-B side note): per element: code load + codebook
 //!   load + input load, mul; n−1 adds; 1 write — the decode penalty.
 //!
@@ -18,7 +25,7 @@
 //! the paper does for Table I ("we calculated the total size of the array
 //! where a particular number is entailed").
 
-use crate::formats::{Cer, Cser, Csr, Dense, MatrixFormat, VALUE_BITS};
+use crate::formats::{Bsr, Cer, Cser, Csr, Dense, MatrixFormat, Tnn, VALUE_BITS};
 use crate::kernels::{AnyMatrix, PackedDense};
 
 use super::energy::{EnergyModel, MemTier};
@@ -43,6 +50,8 @@ pub fn trace_matvec(m: &AnyMatrix) -> OpTrace {
         AnyMatrix::Csr(c) => trace_csr(c),
         AnyMatrix::Cer(c) => trace_cer(c),
         AnyMatrix::Cser(c) => trace_cser(c),
+        AnyMatrix::Bsr(b) => trace_bsr(b),
+        AnyMatrix::Tnn(c) => trace_tnn(c),
     }
 }
 
@@ -179,6 +188,88 @@ pub fn trace_cser(c: &Cser) -> OpTrace {
         t.record(OpClass::Add, 32, in_tier, (n - 1) as u64 + m as u64);
         t.record(OpClass::Mul, 32, omega_tier, 1);
     }
+    t
+}
+
+/// BSR (block-tile multiply-add).
+pub fn trace_bsr(b: &Bsr) -> OpTrace {
+    let (m, n) = (b.rows(), b.cols());
+    let mut t = OpTrace::new();
+    let vals_tier = MemTier::for_bytes(b.values.len() as u64 * 4);
+    let bcol_bits = b.block_col.width().bits();
+    let bcol_tier = MemTier::for_bytes(b.block_col.bits() / 8);
+    let bptr_w = b.block_row_ptr_width();
+    let bptr_tier = MemTier::for_bytes(b.block_row_ptr.len() as u64 * bptr_w.bytes() as u64);
+    let in_tier = input_tier(n);
+    let (br_h, bc_w) = b.block_shape();
+
+    t.record(OpClass::LoadPtr, bptr_w.bits(), bptr_tier, 2 * m as u64);
+    let (mut idx_loads, mut elems, mut adds) = (0u64, 0u64, 0u64);
+    for br in 0..b.block_rows() {
+        let (s, e) = b.block_range(br);
+        // Each matrix row of this block row walks the same tiles; only
+        // the in-bounds prefix of each tile row is loaded.
+        let row_elems: u64 = (s..e)
+            .map(|i| bc_w.min(n - b.block_col.get(i) * bc_w) as u64)
+            .sum();
+        let rl = br_h.min(m - br * br_h) as u64;
+        idx_loads += (e - s) as u64 * rl;
+        elems += row_elems * rl;
+        adds += row_elems.saturating_sub(1) * rl;
+    }
+    t.record(OpClass::LoadColIdx, bcol_bits, bcol_tier, idx_loads);
+    t.record(OpClass::LoadWeight, VALUE_BITS, vals_tier, elems);
+    t.record(OpClass::LoadInput, 32, in_tier, elems);
+    t.record(OpClass::Mul, 32, vals_tier, elems);
+    t.record(OpClass::Add, 32, vals_tier, adds);
+    t.record(OpClass::Write, 32, output_tier(m), m as u64);
+    t
+}
+
+/// TNN (sign-segment reduction).
+pub fn trace_tnn(c: &Tnn) -> OpTrace {
+    let (m, n) = (c.rows(), c.cols());
+    let mut t = OpTrace::new();
+    let omega_tier = MemTier::for_bytes(c.mags.len() as u64 * 4);
+    let coli_tier = MemTier::for_bytes(c.col_idx.bits() / 8);
+    let coli_bits = c.col_idx.width().bits();
+    let sptr_w = c.seg_ptr_width();
+    let sptr_tier = MemTier::for_bytes(c.seg_ptr.len() as u64 * sptr_w.bytes() as u64);
+    let rptr_w = c.row_ptr_width();
+    let rptr_tier = MemTier::for_bytes(c.row_ptr.len() as u64 * rptr_w.bytes() as u64);
+    let split_w = c.split_width();
+    let split_tier = MemTier::for_bytes(c.split.len() as u64 * split_w.bytes() as u64);
+    let in_tier = input_tier(n);
+
+    t.record(OpClass::LoadPtr, rptr_w.bits(), rptr_tier, 2 * m as u64);
+    let (mut sptr_loads, mut nonempty, mut adds) = (0u64, 0u64, 0u64);
+    for r in 0..m {
+        let (s, e) = c.row_slots(r);
+        let slots_r = (e - s) as u64;
+        if slots_r == 0 {
+            continue;
+        }
+        sptr_loads += slots_r + 1;
+        let mut nnz_r = 0u64;
+        for slot in s..e {
+            let len = (c.seg_ptr[slot + 1] - c.seg_ptr[slot]) as u64;
+            if len > 0 {
+                nonempty += 1;
+                nnz_r += len;
+            }
+            // Empty (padded) slot: neither split nor magnitude is loaded.
+        }
+        adds += nnz_r.saturating_sub(1);
+    }
+    let nnz = c.nnz() as u64;
+    t.record(OpClass::LoadPtr, sptr_w.bits(), sptr_tier, sptr_loads);
+    t.record(OpClass::LoadPtr, split_w.bits(), split_tier, nonempty);
+    t.record(OpClass::LoadWeight, VALUE_BITS, omega_tier, nonempty);
+    t.record(OpClass::LoadColIdx, coli_bits, coli_tier, nnz);
+    t.record(OpClass::LoadInput, 32, in_tier, nnz);
+    t.record(OpClass::Mul, 32, omega_tier, nonempty);
+    t.record(OpClass::Add, 32, in_tier, adds);
+    t.record(OpClass::Write, 32, output_tier(m), m as u64);
     t
 }
 
@@ -369,6 +460,81 @@ mod tests {
         assert!(cer.ops < csr.ops && csr.ops < dense.ops);
         assert!(cer.energy_pj < dense.energy_pj);
         assert!(cer.storage_bits < csr.storage_bits);
+    }
+
+    #[test]
+    fn bsr_trace_counts() {
+        // 8x8, two active 4x4 tiles on the diagonal (all interior, cw = 4).
+        let mut m = crate::formats::Dense::zeros(8, 8);
+        for i in 0..4 {
+            for j in 0..4 {
+                m.set(i, j, 1.0 + (i * 4 + j) as f32);
+                m.set(4 + i, 4 + j, 17.0 + (i * 4 + j) as f32);
+            }
+        }
+        let b = crate::formats::Bsr::from_dense_with(&m, 4, 4);
+        let t = trace_bsr(&b);
+        // Per row: 1 tile × 4 elements; 8 rows.
+        assert_eq!(t.ops_of(OpClass::LoadPtr), 16);
+        assert_eq!(t.ops_of(OpClass::LoadColIdx), 8);
+        assert_eq!(t.ops_of(OpClass::LoadWeight), 32);
+        assert_eq!(t.ops_of(OpClass::LoadInput), 32);
+        assert_eq!(t.ops_of(OpClass::Mul), 32);
+        assert_eq!(t.ops_of(OpClass::Add), 24);
+        assert_eq!(t.ops_of(OpClass::Write), 8);
+    }
+
+    #[test]
+    fn bsr_trace_skips_padded_edge_cells() {
+        // 3x3 with one nonzero in the ragged corner tile: the tile stores
+        // 4 cells but the kernel only loads the 1 in-bounds one.
+        let mut m = crate::formats::Dense::zeros(3, 3);
+        m.set(2, 2, 1.0);
+        let b = crate::formats::Bsr::from_dense_with(&m, 2, 2);
+        let t = trace_bsr(&b);
+        assert_eq!(t.ops_of(OpClass::LoadWeight), 1);
+        assert_eq!(t.ops_of(OpClass::Mul), 1);
+    }
+
+    #[test]
+    fn tnn_trace_counts() {
+        // Rows with 1 slot (3 cols), 1 slot (1 col), none, 2 slots — all
+        // slots non-empty; nnz = 6.
+        let m = crate::formats::Dense::from_rows(&[
+            vec![0.5, -0.5, 0.0, 0.5],
+            vec![0.0, -0.5, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![2.0, 0.0, 0.5, 0.0],
+        ]);
+        let c = crate::formats::Tnn::from_dense(&m);
+        let t = trace_tnn(&c);
+        // rowPtr 2·4; segPtr Σ(slots_r+1) = 2+2+3 = 7; split/Ω/mul once
+        // per non-empty slot = 4; adds = (3-1)+(1-1)+(2-1) = 3.
+        assert_eq!(t.ops_of(OpClass::LoadPtr), 8 + 7 + 4);
+        assert_eq!(t.ops_of(OpClass::LoadWeight), 4);
+        assert_eq!(t.ops_of(OpClass::LoadColIdx), 6);
+        assert_eq!(t.ops_of(OpClass::LoadInput), 6);
+        assert_eq!(t.ops_of(OpClass::Mul), 4);
+        assert_eq!(t.ops_of(OpClass::Add), 3);
+        assert_eq!(t.ops_of(OpClass::Write), 4);
+    }
+
+    #[test]
+    fn tnn_spends_one_multiply_per_row_on_pure_ternary() {
+        // 6x10 pure ternary: one multiply per non-empty row vs nnz for CSR.
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|r| {
+                (0..10)
+                    .map(|c| if (c + r) % 3 == 0 { 0.25 } else { -0.25 })
+                    .collect()
+            })
+            .collect();
+        let m = crate::formats::Dense::from_rows(&rows);
+        let tnn = crate::formats::Tnn::from_dense(&m);
+        let csr = crate::formats::Csr::from_dense(&m);
+        assert_eq!(trace_tnn(&tnn).ops_of(OpClass::Mul), 6);
+        assert_eq!(trace_csr(&csr).ops_of(OpClass::Mul), 60);
+        assert!(trace_tnn(&tnn).total_ops() < trace_csr(&csr).total_ops());
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Block Sparse Rows (BSR) — structured-sparsity member of the format
+//! family (SNIPPETS exemplar: spmm_pim's `Bsr<R,C>`).
+//!
+//! The matrix is tiled into R×C blocks; only blocks containing at least
+//! one non-zero are stored, as dense row-major tiles. Index cost is paid
+//! **per block** (one block-column index per R×C elements) instead of per
+//! element, so block-structured sparsity — where CSR pays a full-width
+//! column index for every non-zero — compresses toward the dense-tile
+//! bound. Edge tiles that overhang the matrix are zero-padded; the padded
+//! cells are genuinely stored (and accounted), but kernels only touch the
+//! in-bounds prefix of each tile row.
+//!
+//! The block shape is a runtime property chosen per matrix:
+//! [`Bsr::from_dense`] tries a small candidate set and keeps the shape
+//! with the smallest accounted storage (first candidate wins ties, so the
+//! choice is deterministic).
+
+use super::storage::Storage;
+use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// Block shapes tried by [`Bsr::from_dense`], in tie-break order.
+pub const BLOCK_CANDIDATES: [(usize, usize); 3] = [(4, 4), (8, 8), (2, 2)];
+
+/// BSR matrix. All arrays are [`Storage`]-backed — owned after
+/// conversion, zero-copy views into the mapped pack after a
+/// `Pack::from_map` cold start.
+#[derive(Clone, Debug)]
+pub struct Bsr {
+    rows: usize,
+    cols: usize,
+    /// Block height (R).
+    block_r: usize,
+    /// Block width (C).
+    block_c: usize,
+    /// Stored tiles, R×C each, row-major within the tile, tiles in
+    /// (block row, block column) order.
+    pub values: Storage<f32>,
+    /// Block-column index of each stored tile.
+    pub block_col: ColIndices,
+    /// Tile boundaries per block row; length = block_rows + 1.
+    pub block_row_ptr: Storage<u32>,
+}
+
+impl Bsr {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Block shape (R, C).
+    #[inline]
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.block_r, self.block_c)
+    }
+
+    /// Number of stored tiles.
+    #[inline]
+    pub fn nblocks(&self) -> usize {
+        self.block_col.len()
+    }
+
+    /// Number of block rows (⌈rows / R⌉).
+    #[inline]
+    pub fn block_rows(&self) -> usize {
+        self.rows.div_ceil(self.block_r)
+    }
+
+    /// Number of block columns (⌈cols / C⌉).
+    #[inline]
+    pub fn block_cols(&self) -> usize {
+        self.cols.div_ceil(self.block_c)
+    }
+
+    /// Tile slots of block row `br`.
+    #[inline]
+    pub fn block_range(&self, br: usize) -> (usize, usize) {
+        (
+            self.block_row_ptr[br] as usize,
+            self.block_row_ptr[br + 1] as usize,
+        )
+    }
+
+    /// In-bounds width of the tile in block column `bc` (edge tiles are
+    /// narrower than C).
+    #[inline]
+    pub fn block_width(&self, bc: usize) -> usize {
+        self.block_c.min(self.cols - bc * self.block_c)
+    }
+
+    /// Accounted width of the blockRowPtr array (values up to nblocks).
+    pub fn block_row_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.nblocks())
+    }
+
+    /// Convert from dense with an explicit block shape, O(N).
+    pub fn from_dense_with(m: &Dense, block_r: usize, block_c: usize) -> Bsr {
+        assert!(block_r >= 1 && block_c >= 1, "block shape must be positive");
+        let (rows, cols) = (m.rows(), m.cols());
+        let block_rows = rows.div_ceil(block_r);
+        let block_cols = cols.div_ceil(block_c);
+        let mut values: Vec<f32> = Vec::new();
+        let mut block_col: Vec<usize> = Vec::new();
+        let mut ptr: Vec<u32> = vec![0];
+        for br in 0..block_rows {
+            let r0 = br * block_r;
+            let rl = block_r.min(rows - r0);
+            for bc in 0..block_cols {
+                let c0 = bc * block_c;
+                let cl = block_c.min(cols - c0);
+                let any = (0..rl).any(|i| m.row(r0 + i)[c0..c0 + cl].iter().any(|&v| v != 0.0));
+                if !any {
+                    continue;
+                }
+                for i in 0..block_r {
+                    for j in 0..block_c {
+                        values.push(if i < rl && j < cl {
+                            m.row(r0 + i)[c0 + j]
+                        } else {
+                            0.0
+                        });
+                    }
+                }
+                block_col.push(bc);
+            }
+            ptr.push(block_col.len() as u32);
+        }
+        Bsr {
+            rows,
+            cols,
+            block_r,
+            block_c,
+            values: values.into(),
+            block_col: ColIndices::pack(&block_col, block_cols),
+            block_row_ptr: ptr.into(),
+        }
+    }
+
+    /// Convert from dense, picking the [`BLOCK_CANDIDATES`] shape with the
+    /// smallest accounted storage (first candidate wins ties).
+    pub fn from_dense(m: &Dense) -> Bsr {
+        let mut best: Option<Bsr> = None;
+        for (r, c) in BLOCK_CANDIDATES {
+            let cand = Bsr::from_dense_with(m, r, c);
+            let bits = cand.storage().total_bits();
+            if best
+                .as_ref()
+                .map(|b| bits < b.storage().total_bits())
+                .unwrap_or(true)
+            {
+                best = Some(cand);
+            }
+        }
+        best.expect("BLOCK_CANDIDATES is non-empty")
+    }
+
+    /// `.cerpack` section codec. Header (dims, block shape, tile count,
+    /// width tags), then the arrays — f32 tiles, blockRowPtr and blockColI
+    /// at their accounted minimal widths, each padded to natural
+    /// alignment. Array bytes equal [`MatrixFormat::storage`] exactly.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{pad_rel, put_f32_array, put_u32, put_u32s_at_width, put_u64};
+        let base = out.len();
+        let bp_w = self.block_row_ptr_width();
+        let bc_w = self.block_col.width();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u32(out, self.block_r as u32);
+        put_u32(out, self.block_c as u32);
+        put_u64(out, self.nblocks() as u64);
+        out.push(bp_w.tag());
+        out.push(bc_w.tag());
+        pad_rel(out, base, 4);
+        let mut arrays = 0usize;
+        let mark = out.len();
+        put_f32_array(out, &self.values);
+        arrays += out.len() - mark;
+        pad_rel(out, base, bp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.block_row_ptr, bp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, bc_w.bytes());
+        let mark = out.len();
+        self.block_col.encode_into(out);
+        arrays += out.len() - mark;
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays,
+        }
+    }
+
+    /// Inverse of [`Bsr::encode_into`]; `buf` must be exactly one payload.
+    /// Decodes into owned storage.
+    pub fn decode_from(buf: &[u8]) -> Result<Bsr, crate::pack::PackError> {
+        Bsr::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Bsr::decode_from`] with an explicit loader (zero-copy when
+    /// mapped). Validates the block structure (positive block shape,
+    /// tile count within the grid, monotone pointers, in-range block
+    /// columns).
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Bsr, crate::pack::PackError> {
+        use crate::formats::csr::validate_row_ptr;
+        use crate::pack::wire::Cursor;
+        use crate::pack::PackError;
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("bsr rows")?;
+        let cols = cur.u32_len("bsr cols")?;
+        let block_r = cur.u32_len("bsr block height")?;
+        let block_c = cur.u32_len("bsr block width")?;
+        let nblocks = cur.u64_len("bsr tile count")?;
+        if block_r == 0 || block_c == 0 {
+            return Err(PackError::malformed("bsr block shape must be positive"));
+        }
+        let block_rows = rows.div_ceil(block_r);
+        let block_cols = cols.div_ceil(block_c);
+        if nblocks > u32::MAX as usize
+            || nblocks as u64 > block_rows as u64 * block_cols as u64
+        {
+            return Err(PackError::malformed("bsr tile count out of range"));
+        }
+        let vals_count = nblocks
+            .checked_mul(block_r)
+            .and_then(|v| v.checked_mul(block_c))
+            .ok_or_else(|| PackError::malformed("bsr tile volume overflow"))?;
+        let bp_count = block_rows
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("bsr block row count overflow"))?;
+        let bp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad blockRowPtr width tag"))?;
+        let bc_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad blockColI width tag"))?;
+        cur.align(4)?;
+        let values = src.typed::<f32>(&mut cur, vals_count, "bsr tiles")?;
+        cur.align(bp_w.bytes())?;
+        let block_row_ptr = src.u32s_at_width(&mut cur, bp_count, bp_w, "bsr blockRowPtr")?;
+        validate_row_ptr(&block_row_ptr, nblocks, "bsr block row")?;
+        cur.align(bc_w.bytes())?;
+        let block_col = src.col_indices(&mut cur, bc_w, nblocks, block_cols)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in bsr payload"));
+        }
+        Ok(Bsr {
+            rows,
+            cols,
+            block_r,
+            block_c,
+            values,
+            block_col,
+            block_row_ptr,
+        })
+    }
+}
+
+impl MatrixFormat for Bsr {
+    fn name(&self) -> &'static str {
+        "BSR"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        for br in 0..self.block_rows() {
+            let r0 = br * self.block_r;
+            let rl = self.block_r.min(self.rows - r0);
+            let (s, e) = self.block_range(br);
+            for idx in s..e {
+                let bc = self.block_col.get(idx);
+                let c0 = bc * self.block_c;
+                let cl = self.block_width(bc);
+                let base = idx * self.block_r * self.block_c;
+                for i in 0..rl {
+                    for j in 0..cl {
+                        out.set(r0 + i, c0 + j, self.values[base + i * self.block_c + j]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "blocks",
+                    entries: self.values.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "blockColI",
+                    entries: self.block_col.len() as u64,
+                    bits_per_entry: self.block_col.width().bits(),
+                },
+                StoragePart {
+                    name: "blockRowPtr",
+                    entries: self.block_row_ptr.len() as u64,
+                    bits_per_entry: self.block_row_ptr_width().bits(),
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn roundtrip_paper_example_all_candidate_shapes() {
+        let m = paper_example_matrix();
+        for (r, c) in BLOCK_CANDIDATES {
+            let b = Bsr::from_dense_with(&m, r, c);
+            assert_eq!(b.to_dense(), m, "block shape {r}x{c}");
+        }
+        assert_eq!(Bsr::from_dense(&m).to_dense(), m);
+    }
+
+    #[test]
+    fn aligned_blocks_store_exactly_the_active_tiles() {
+        // 8x8 matrix with two active 4x4 tiles on the diagonal.
+        let mut m = Dense::zeros(8, 8);
+        for i in 0..4 {
+            for j in 0..4 {
+                m.set(i, j, 1.0 + (i * 4 + j) as f32);
+                m.set(4 + i, 4 + j, 17.0 + (i * 4 + j) as f32);
+            }
+        }
+        let b = Bsr::from_dense_with(&m, 4, 4);
+        assert_eq!(b.nblocks(), 2);
+        assert_eq!(b.values.len(), 32);
+        assert_eq!(b.block_col.to_vec(), vec![0, 1]);
+        assert_eq!(b.block_row_ptr, vec![0, 1, 2]);
+        assert_eq!(b.to_dense(), m);
+    }
+
+    #[test]
+    fn misaligned_edges_are_zero_padded_but_lossless() {
+        // 5x7 with nonzeros touching the ragged right/bottom edges.
+        let mut m = Dense::zeros(5, 7);
+        m.set(4, 6, 3.5);
+        m.set(0, 0, -1.0);
+        let b = Bsr::from_dense_with(&m, 4, 4);
+        assert_eq!(b.block_rows(), 2);
+        assert_eq!(b.block_cols(), 2);
+        assert_eq!(b.nblocks(), 2);
+        // Tiles are stored at full R*C volume even at the edges.
+        assert_eq!(b.values.len(), 32);
+        assert_eq!(b.block_width(1), 3);
+        assert_eq!(b.to_dense(), m);
+    }
+
+    #[test]
+    fn all_zero_matrix_stores_no_tiles() {
+        let m = Dense::zeros(6, 9);
+        let b = Bsr::from_dense(&m);
+        assert_eq!(b.nblocks(), 0);
+        assert_eq!(b.values.len(), 0);
+        assert_eq!(b.to_dense(), m);
+    }
+
+    #[test]
+    fn shape_choice_minimizes_storage_deterministically() {
+        // A matrix of full 4x4 tiles: (4,4) stores exactly the nnz and must
+        // beat (2,2) (same values, 4x the index entries) and (8,8) (half-
+        // empty tiles).
+        let mut m = Dense::zeros(16, 16);
+        for t in 0..4 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    m.set(t * 4 + i, t * 4 + j, (1 + t * 16 + i * 4 + j) as f32);
+                }
+            }
+        }
+        let b = Bsr::from_dense(&m);
+        assert_eq!(b.block_shape(), (4, 4));
+        assert_eq!(b.values.len(), 64);
+        for (r, c) in BLOCK_CANDIDATES {
+            let cand = Bsr::from_dense_with(&m, r, c);
+            assert!(
+                b.storage().total_bits() <= cand.storage().total_bits(),
+                "{r}x{c} beat the chosen shape"
+            );
+        }
+    }
+
+    #[test]
+    fn storage_accounts_padded_tile_cells() {
+        let mut m = Dense::zeros(3, 3);
+        m.set(2, 2, 1.0);
+        let b = Bsr::from_dense_with(&m, 2, 2);
+        // Tile (1,1) is stored at full 2x2 volume although only one cell is
+        // in bounds.
+        let s = b.storage();
+        assert_eq!(s.part_bits("blocks"), 4 * 32);
+        assert_eq!(b.to_dense(), m);
+    }
+}

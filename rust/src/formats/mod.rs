@@ -1,4 +1,5 @@
-//! The four matrix representations of the paper (§III):
+//! The matrix representations of the format competition. The paper's four
+//! (§III):
 //!
 //! * [`Dense`] — row-major array (baseline).
 //! * [`Csr`] — Compressed Sparse Row (baseline; spike-and-slab prior).
@@ -6,6 +7,14 @@
 //!   shared per-row frequency ordering).
 //! * [`Cser`] — Compressed Shared Elements Row (contribution; low-entropy
 //!   prior, per-row orderings independent).
+//!
+//! plus two low-entropy regimes the paper's family leaves uncovered:
+//!
+//! * [`Bsr`] — Block Sparse Rows (structured sparsity: dense tiles pay one
+//!   block-column index per R×C elements instead of one per element).
+//! * [`Tnn`] — ternary/binary rows (K ≤ 3 extreme: per-row sign-partitioned
+//!   column segments share one magnitude, so values are implicit in
+//!   {−α, 0, +α} and a row costs one multiply per distinct magnitude).
 //!
 //! All formats are lossless: `format.to_dense()` reproduces the source
 //! matrix bit-exactly. Conversion from dense is O(N) (§V, side note).
@@ -19,6 +28,7 @@
 //! mapped `.cerpack` ([`crate::pack::map::PackMap`]). Kernels and the
 //! cost model see `&[T]` either way (see [`storage`]).
 
+pub mod bsr;
 pub mod cer;
 pub mod codebook;
 pub mod cser;
@@ -26,11 +36,14 @@ pub mod csr;
 pub mod dense;
 pub mod index;
 pub mod storage;
+pub mod tnn;
 
+pub use bsr::Bsr;
 pub use cer::Cer;
 pub use cser::Cser;
 pub use csr::Csr;
 pub use dense::Dense;
+pub use tnn::Tnn;
 pub use index::{ColIndices, Idx, IndexWidth};
 pub use storage::{Pod, Storage, StorageResidency};
 
@@ -85,7 +98,7 @@ impl StorageBreakdown {
     }
 }
 
-/// Common interface over the four representations.
+/// Common interface over the representations.
 pub trait MatrixFormat {
     /// Format name as used in the paper's tables.
     fn name(&self) -> &'static str;
@@ -97,22 +110,34 @@ pub trait MatrixFormat {
     fn storage(&self) -> StorageBreakdown;
 }
 
-/// Which of the four formats — used by the cost model, selector and engine.
+/// Which format — used by the cost model, selector and engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FormatKind {
     Dense,
     Csr,
     Cer,
     Cser,
+    Bsr,
+    Tnn,
 }
 
 impl FormatKind {
-    pub const ALL: [FormatKind; 4] = [
+    /// Every format, dense first (several callers index the dense
+    /// baseline at slot 0 — see `coordinator::selector::dense_index`).
+    /// New formats are appended so historical indices and wire tags stay
+    /// stable.
+    pub const ALL: [FormatKind; 6] = [
         FormatKind::Dense,
         FormatKind::Csr,
         FormatKind::Cer,
         FormatKind::Cser,
+        FormatKind::Bsr,
+        FormatKind::Tnn,
     ];
+
+    /// Number of formats in the competition (`ALL.len()`), the width of
+    /// every per-format array in the cost model and harness.
+    pub const COUNT: usize = Self::ALL.len();
 
     pub fn name(self) -> &'static str {
         match self {
@@ -120,6 +145,8 @@ impl FormatKind {
             FormatKind::Csr => "CSR",
             FormatKind::Cer => "CER",
             FormatKind::Cser => "CSER",
+            FormatKind::Bsr => "BSR",
+            FormatKind::Tnn => "TNN",
         }
     }
 
@@ -130,6 +157,8 @@ impl FormatKind {
             FormatKind::Csr => 1,
             FormatKind::Cer => 2,
             FormatKind::Cser => 3,
+            FormatKind::Bsr => 4,
+            FormatKind::Tnn => 5,
         }
     }
 
@@ -140,6 +169,8 @@ impl FormatKind {
             1 => Some(FormatKind::Csr),
             2 => Some(FormatKind::Cer),
             3 => Some(FormatKind::Cser),
+            4 => Some(FormatKind::Bsr),
+            5 => Some(FormatKind::Tnn),
             _ => None,
         }
     }
@@ -159,7 +190,11 @@ impl std::str::FromStr for FormatKind {
             "csr" => Ok(FormatKind::Csr),
             "cer" => Ok(FormatKind::Cer),
             "cser" => Ok(FormatKind::Cser),
-            other => Err(format!("unknown format '{other}' (dense|csr|cer|cser)")),
+            "bsr" => Ok(FormatKind::Bsr),
+            "tnn" => Ok(FormatKind::Tnn),
+            other => Err(format!(
+                "unknown format '{other}' (dense|csr|cer|cser|bsr|tnn)"
+            )),
         }
     }
 }

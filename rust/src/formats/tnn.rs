@@ -1,0 +1,480 @@
+//! Ternary rows (TNN) — the K ≤ 3 extreme of the format family
+//! (PAPERS exemplar: RSR's precomputed sign-segment reduction,
+//! arXiv 2411.06360).
+//!
+//! Values are implicit in {−α, 0, +α} (more generally ±mags[j] for a tiny
+//! magnitude codebook): per row and per distinct magnitude one **slot**
+//! stores the columns carrying that magnitude, positives first then
+//! negatives, with a `split` entry recording where the sign flips. The
+//! dot product then needs ONE multiply per (row, magnitude) —
+//! `α · (Σ x[pos] − Σ x[neg])` — instead of one per non-zero, and no
+//! per-element value storage at all.
+//!
+//! Like CER, slots are laid out rank-major without per-slot magnitude
+//! indices: row `r` stores slots for ranks `0..=last_present(r)`, so a
+//! rank gap inside a row costs one empty (padded) slot while trailing
+//! ranks cost nothing. Magnitudes are frequency-major (count descending,
+//! ties by ascending magnitude, mirroring
+//! [`super::codebook::frequency_codebook`]) so the dominant magnitude
+//! pads least.
+
+use std::collections::HashMap;
+
+use super::codebook::value_key;
+use super::storage::Storage;
+use super::{ColIndices, Dense, IndexWidth, MatrixFormat, StorageBreakdown, StoragePart, VALUE_BITS};
+
+/// TNN matrix. All arrays are [`Storage`]-backed — owned after
+/// conversion, zero-copy views into the mapped pack after a
+/// `Pack::from_map` cold start.
+#[derive(Clone, Debug)]
+pub struct Tnn {
+    rows: usize,
+    cols: usize,
+    /// Distinct non-zero magnitudes, frequency-major (the codebook Ω
+    /// without the implicit zero and without signs).
+    pub mags: Storage<f32>,
+    /// Column indices, slot-major; within a slot the positive columns
+    /// (ascending) then the negative columns (ascending).
+    pub col_idx: ColIndices,
+    /// Number of positive columns of each slot (the sign split point).
+    pub split: Storage<u32>,
+    /// `seg_ptr[s]..seg_ptr[s+1]` indexes `col_idx` for slot `s`.
+    pub seg_ptr: Storage<u32>,
+    /// `row_ptr[r]..row_ptr[r+1]` indexes slots for row `r`; the slot at
+    /// offset `j` within a row carries magnitude `mags[j]`.
+    pub row_ptr: Storage<u32>,
+    /// Empty slots emitted to bridge rank gaps inside rows.
+    padded_slots: u64,
+}
+
+impl Tnn {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored (non-zero) elements.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Number of distinct non-zero magnitudes (1 for a pure ternary
+    /// matrix).
+    #[inline]
+    pub fn magnitudes(&self) -> usize {
+        self.mags.len()
+    }
+
+    /// Total slot count over all rows, padding included.
+    #[inline]
+    pub fn total_slots(&self) -> usize {
+        self.split.len()
+    }
+
+    /// Empty slots emitted to bridge rank gaps inside rows.
+    #[inline]
+    pub fn padded_slots(&self) -> u64 {
+        self.padded_slots
+    }
+
+    /// Slots of row `r`.
+    #[inline]
+    pub fn row_slots(&self, r: usize) -> (usize, usize) {
+        (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize)
+    }
+
+    /// Column range of slot `s`.
+    #[inline]
+    pub fn slot_range(&self, s: usize) -> (usize, usize) {
+        (self.seg_ptr[s] as usize, self.seg_ptr[s + 1] as usize)
+    }
+
+    /// Accounted width of the segment-pointer array (values up to nnz).
+    pub fn seg_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.nnz())
+    }
+
+    /// Accounted width of the row-pointer array (values up to the slot
+    /// count).
+    pub fn row_ptr_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.total_slots())
+    }
+
+    /// Accounted width of the split array (a split is bounded by the slot
+    /// length, hence by both the column count and nnz).
+    pub fn split_width(&self) -> IndexWidth {
+        IndexWidth::minimal(self.cols.min(self.nnz()))
+    }
+
+    /// Convert from dense, O(N). Works for any matrix (the magnitude
+    /// codebook simply grows); it pays off when the codebook is tiny.
+    pub fn from_dense(m: &Dense) -> Tnn {
+        let (rows, cols) = (m.rows(), m.cols());
+        // Frequency-major magnitude codebook over the non-zeros.
+        let mut counts: HashMap<u32, (f32, usize)> = HashMap::new();
+        for &v in m.data() {
+            if v != 0.0 {
+                let a = v.abs();
+                counts.entry(value_key(a)).or_insert((a, 0)).1 += 1;
+            }
+        }
+        let mut cb: Vec<(f32, usize)> = counts.into_values().collect();
+        cb.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.partial_cmp(&b.0).expect("no NaN")));
+        let ranks: HashMap<u32, u32> = cb
+            .iter()
+            .enumerate()
+            .map(|(i, &(v, _))| (value_key(v), i as u32))
+            .collect();
+        let j_count = cb.len();
+
+        let mut col_idx: Vec<usize> = Vec::new();
+        let mut split: Vec<u32> = Vec::new();
+        let mut seg_ptr: Vec<u32> = vec![0];
+        let mut row_ptr: Vec<u32> = vec![0];
+        let mut padded_slots = 0u64;
+        let mut pos: Vec<Vec<usize>> = vec![Vec::new(); j_count];
+        let mut neg: Vec<Vec<usize>> = vec![Vec::new(); j_count];
+        for r in 0..rows {
+            for b in pos.iter_mut().chain(neg.iter_mut()) {
+                b.clear();
+            }
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    let j = ranks[&value_key(v.abs())] as usize;
+                    if v > 0.0 {
+                        pos[j].push(c);
+                    } else {
+                        neg[j].push(c);
+                    }
+                }
+            }
+            let last = (0..j_count)
+                .rev()
+                .find(|&j| !pos[j].is_empty() || !neg[j].is_empty());
+            if let Some(last) = last {
+                for j in 0..=last {
+                    if pos[j].is_empty() && neg[j].is_empty() {
+                        padded_slots += 1;
+                    }
+                    col_idx.extend_from_slice(&pos[j]);
+                    split.push(pos[j].len() as u32);
+                    col_idx.extend_from_slice(&neg[j]);
+                    seg_ptr.push(col_idx.len() as u32);
+                }
+            }
+            row_ptr.push((seg_ptr.len() - 1) as u32);
+        }
+        Tnn {
+            rows,
+            cols,
+            mags: cb.iter().map(|&(v, _)| v).collect::<Vec<_>>().into(),
+            col_idx: ColIndices::pack(&col_idx, cols),
+            split: split.into(),
+            seg_ptr: seg_ptr.into(),
+            row_ptr: row_ptr.into(),
+            padded_slots,
+        }
+    }
+
+    /// `.cerpack` section codec. Header (dims, magnitude count, nnz, slot
+    /// counts, width tags), then the arrays — f32 magnitudes, segPtr /
+    /// rowPtr / split at their accounted minimal widths, colI — each
+    /// padded to natural alignment. Array bytes equal
+    /// [`MatrixFormat::storage`] exactly.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::pack::Emitted {
+        use crate::pack::wire::{pad_rel, put_f32_array, put_u32, put_u32s_at_width, put_u64};
+        let base = out.len();
+        let sp_w = self.seg_ptr_width();
+        let rp_w = self.row_ptr_width();
+        let sl_w = self.split_width();
+        let ci_w = self.col_idx.width();
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u32(out, self.magnitudes() as u32);
+        put_u64(out, self.nnz() as u64);
+        put_u64(out, self.total_slots() as u64);
+        put_u64(out, self.padded_slots);
+        out.push(sp_w.tag());
+        out.push(rp_w.tag());
+        out.push(sl_w.tag());
+        out.push(ci_w.tag());
+        pad_rel(out, base, 4);
+        let mut arrays = 0usize;
+        let mark = out.len();
+        put_f32_array(out, &self.mags);
+        arrays += out.len() - mark;
+        pad_rel(out, base, sp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.seg_ptr, sp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, rp_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.row_ptr, rp_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, sl_w.bytes());
+        let mark = out.len();
+        put_u32s_at_width(out, &self.split, sl_w);
+        arrays += out.len() - mark;
+        pad_rel(out, base, ci_w.bytes());
+        let mark = out.len();
+        self.col_idx.encode_into(out);
+        arrays += out.len() - mark;
+        crate::pack::Emitted {
+            total: out.len() - base,
+            arrays,
+        }
+    }
+
+    /// Inverse of [`Tnn::encode_into`]; `buf` must be exactly one payload.
+    /// Decodes into owned storage.
+    pub fn decode_from(buf: &[u8]) -> Result<Tnn, crate::pack::PackError> {
+        Tnn::decode_from_source(buf, crate::pack::wire::ArrayLoader::owned())
+    }
+
+    /// [`Tnn::decode_from`] with an explicit loader (zero-copy when
+    /// mapped). Validates the slot structure: monotone pointers, per-row
+    /// slot counts bounded by the codebook, splits within their slots,
+    /// positive finite magnitudes, and a padding count that matches the
+    /// recounted empty slots.
+    pub(crate) fn decode_from_source(
+        buf: &[u8],
+        src: crate::pack::wire::ArrayLoader<'_>,
+    ) -> Result<Tnn, crate::pack::PackError> {
+        use crate::formats::csr::validate_row_ptr;
+        use crate::pack::wire::Cursor;
+        use crate::pack::PackError;
+        let mut cur = Cursor::new(buf);
+        let rows = cur.u32_len("tnn rows")?;
+        let cols = cur.u32_len("tnn cols")?;
+        let j_count = cur.u32_len("tnn magnitude count")?;
+        let nnz = cur.u64_len("tnn nnz")?;
+        let total_slots = cur.u64_len("tnn slot count")?;
+        let padded_slots = cur.u64_len("tnn padded slots")?;
+        if nnz > u32::MAX as usize || nnz as u64 > rows as u64 * cols as u64 {
+            return Err(PackError::malformed("tnn nnz out of range"));
+        }
+        if j_count > nnz {
+            return Err(PackError::malformed("tnn more magnitudes than non-zeros"));
+        }
+        if total_slots > u32::MAX as usize || padded_slots > total_slots as u64 {
+            return Err(PackError::malformed("tnn slot count out of range"));
+        }
+        let sp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad segPtr width tag"))?;
+        let rp_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad rowPtr width tag"))?;
+        let sl_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad split width tag"))?;
+        let ci_w = IndexWidth::from_tag(cur.u8()?)
+            .ok_or_else(|| PackError::malformed("bad colI width tag"))?;
+        let sp_count = total_slots
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("tnn slot count overflow"))?;
+        let rp_count = rows
+            .checked_add(1)
+            .ok_or_else(|| PackError::malformed("tnn row count overflow"))?;
+        cur.align(4)?;
+        let mags = src.typed::<f32>(&mut cur, j_count, "tnn magnitudes")?;
+        if mags.iter().any(|&v| !(v > 0.0) || !v.is_finite()) {
+            return Err(PackError::malformed("tnn magnitudes must be positive and finite"));
+        }
+        cur.align(sp_w.bytes())?;
+        let seg_ptr = src.u32s_at_width(&mut cur, sp_count, sp_w, "tnn segPtr")?;
+        validate_row_ptr(&seg_ptr, nnz, "tnn segment")?;
+        cur.align(rp_w.bytes())?;
+        let row_ptr = src.u32s_at_width(&mut cur, rp_count, rp_w, "tnn rowPtr")?;
+        validate_row_ptr(&row_ptr, total_slots, "tnn row")?;
+        if row_ptr.windows(2).any(|w| (w[1] - w[0]) as usize > j_count) {
+            return Err(PackError::malformed("tnn row has more slots than magnitudes"));
+        }
+        cur.align(sl_w.bytes())?;
+        let split = src.u32s_at_width(&mut cur, total_slots, sl_w, "tnn split")?;
+        if (0..total_slots).any(|s| split[s] > seg_ptr[s + 1] - seg_ptr[s]) {
+            return Err(PackError::malformed("tnn split outside its slot"));
+        }
+        let empties = (0..total_slots)
+            .filter(|&s| seg_ptr[s] == seg_ptr[s + 1])
+            .count() as u64;
+        if padded_slots != empties {
+            return Err(PackError::malformed("tnn padded slot count mismatch"));
+        }
+        cur.align(ci_w.bytes())?;
+        let col_idx = src.col_indices(&mut cur, ci_w, nnz, cols)?;
+        if cur.remaining() != 0 {
+            return Err(PackError::malformed("trailing bytes in tnn payload"));
+        }
+        Ok(Tnn {
+            rows,
+            cols,
+            mags,
+            col_idx,
+            split,
+            seg_ptr,
+            row_ptr,
+            padded_slots,
+        })
+    }
+}
+
+impl MatrixFormat for Tnn {
+    fn name(&self) -> &'static str {
+        "TNN"
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (ss, se) = self.row_slots(r);
+            for s in ss..se {
+                let mag = self.mags[s - ss];
+                let (cs, ce) = self.slot_range(s);
+                let sp = cs + self.split[s] as usize;
+                for i in cs..sp {
+                    out.set(r, self.col_idx.get(i), mag);
+                }
+                for i in sp..ce {
+                    out.set(r, self.col_idx.get(i), -mag);
+                }
+            }
+        }
+        out
+    }
+
+    fn storage(&self) -> StorageBreakdown {
+        StorageBreakdown {
+            parts: vec![
+                StoragePart {
+                    name: "Omega",
+                    entries: self.mags.len() as u64,
+                    bits_per_entry: VALUE_BITS,
+                },
+                StoragePart {
+                    name: "colI",
+                    entries: self.col_idx.len() as u64,
+                    bits_per_entry: self.col_idx.width().bits(),
+                },
+                StoragePart {
+                    name: "split",
+                    entries: self.split.len() as u64,
+                    bits_per_entry: self.split_width().bits(),
+                },
+                StoragePart {
+                    name: "segPtr",
+                    entries: self.seg_ptr.len() as u64,
+                    bits_per_entry: self.seg_ptr_width().bits(),
+                },
+                StoragePart {
+                    name: "rowPtr",
+                    entries: self.row_ptr.len() as u64,
+                    bits_per_entry: self.row_ptr_width().bits(),
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn ternary_exact_arrays() {
+        // 0.5 appears 5 times (rank 0), 2.0 once (rank 1).
+        let m = Dense::from_rows(&[
+            vec![0.5, -0.5, 0.0, 0.5],
+            vec![0.0, -0.5, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![2.0, 0.0, 0.5, 0.0],
+        ]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.mags, vec![0.5, 2.0]);
+        assert_eq!(t.col_idx.to_vec(), vec![0, 3, 1, 1, 2, 0]);
+        assert_eq!(t.split, vec![2, 0, 1, 1]);
+        assert_eq!(t.seg_ptr, vec![0, 3, 4, 5, 6]);
+        assert_eq!(t.row_ptr, vec![0, 1, 2, 2, 4]);
+        assert_eq!(t.padded_slots(), 0);
+        assert_eq!(t.to_dense(), m);
+    }
+
+    #[test]
+    fn rank_gaps_cost_one_padded_slot_trailing_ranks_cost_nothing() {
+        // Row 1 carries only the rank-1 magnitude, so its rank-0 slot is
+        // padded; row 0 carries only rank 0 and pays nothing for rank 1.
+        let m = Dense::from_rows(&[vec![0.5, 0.5, 0.0], vec![0.0, 0.0, 2.0]]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.mags, vec![0.5, 2.0]);
+        assert_eq!(t.split, vec![2, 0, 1]);
+        assert_eq!(t.seg_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(t.row_ptr, vec![0, 1, 3]);
+        assert_eq!(t.padded_slots(), 1);
+        assert_eq!(t.to_dense(), m);
+    }
+
+    #[test]
+    fn single_sign_rows_roundtrip() {
+        let m = Dense::from_rows(&[
+            vec![-1.0, 0.0, -1.0, -1.0],
+            vec![1.0, 1.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0, 0.0],
+        ]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.magnitudes(), 1);
+        assert_eq!(t.split, vec![0, 2, 0]);
+        assert_eq!(t.to_dense(), m);
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = Dense::zeros(4, 7);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.nnz(), 0);
+        assert_eq!(t.magnitudes(), 0);
+        assert_eq!(t.total_slots(), 0);
+        assert_eq!(t.to_dense(), m);
+    }
+
+    #[test]
+    fn magnitudes_are_frequency_major_with_value_tiebreak() {
+        // 3.0 appears twice (as +3 and -3): rank 0 despite being larger.
+        let m = Dense::from_rows(&[vec![3.0, -3.0, 1.0]]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.mags, vec![3.0, 1.0]);
+        // Equal counts: ascending magnitude.
+        let m = Dense::from_rows(&[vec![2.0, -1.0]]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.mags, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn negative_zero_is_the_zero_element() {
+        let m = Dense::from_rows(&[vec![-0.0, 0.5]]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.nnz(), 1);
+        assert_eq!(t.to_dense(), m);
+    }
+
+    #[test]
+    fn non_ternary_matrices_still_roundtrip() {
+        // TNN is lossless for any matrix; the codebook just grows.
+        let m = paper_example_matrix();
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.to_dense(), m);
+        assert_eq!(t.nnz(), 28);
+    }
+}

@@ -9,8 +9,9 @@ use crate::stats::decompose::Decomposed;
 use crate::util::bench::time_median_ns;
 use crate::util::Rng;
 
-/// Number of benchmarked formats (dense, CSR, CER, CSER).
-pub const NFMT: usize = 4;
+/// Number of benchmarked formats — every entry of [`FormatKind::ALL`]
+/// (dense, CSR, CER, CSER, BSR, TNN).
+pub const NFMT: usize = FormatKind::COUNT;
 
 /// Thread counts the per-layer format-selection report sweeps — the same
 /// ladder the dot bench measures, so the harness's modeled winners line up

@@ -109,7 +109,8 @@ pub fn figure4(
                     }
                 }
             }
-            // Winner per criterion, folded to {0: dense, 1: csr, 2: cer|cser}.
+            // Winner per criterion, folded to {0: dense, 1: csr,
+            // 2: proposed (cer|cser|bsr|tnn)}.
             let mut row = vec![format!("{h:.4}"), format!("{p0:.4}")];
             for ci in 0..4 {
                 let mut best = 0usize;
@@ -207,7 +208,10 @@ pub fn breakdown(
         out_dir.join(format!("breakdown_{tag}_storage.csv")),
         &["format", "part", "bits"],
     )?;
-    let part_names = ["Omega", "colI", "OmegaI", "OmegaPtr", "rowPtr", "codes"];
+    let part_names = [
+        "Omega", "colI", "OmegaI", "OmegaPtr", "rowPtr", "codes", "blocks", "blockColI",
+        "blockRowPtr", "split", "segPtr",
+    ];
     for kind in FormatKind::ALL {
         let mut totals: std::collections::BTreeMap<&str, u64> = Default::default();
         for (_, _, m) in matrices {

@@ -70,12 +70,7 @@ pub fn eval_vb_networks(cfg: &EvalConfig) -> Vec<NetworkEval> {
 
 fn gains_row(totals: &[Totals; NFMT], f: impl Fn(&Totals) -> f64) -> [f64; NFMT] {
     let base = f(&totals[0]);
-    [
-        1.0,
-        base / f(&totals[1]),
-        base / f(&totals[2]),
-        base / f(&totals[3]),
-    ]
+    std::array::from_fn(|i| if i == 0 { 1.0 } else { base / f(&totals[i]) })
 }
 
 /// Per-layer modeled-time winner at the [`SEL_THREADS`] ladder — the

@@ -1,0 +1,271 @@
+//! BSR dot product: per output row, walk the tiles of its block row and
+//! multiply-add the in-bounds prefix of one tile row against the
+//! corresponding input slice. One block-column index load covers R×C
+//! elements; the per-element stream is a contiguous tile row (no gather),
+//! which is what makes block sparsity cheap to index.
+//!
+//! Includes the 4-wide multi-rhs kernel (one tile-stream pass per 4
+//! samples), the row-range entry points used by the exec plane, and the
+//! fused [`Epilogue`]. Every row keeps a single accumulator walked in
+//! block order, so shard boundaries never change any row's reduction
+//! order — parallel output is bit-identical to serial.
+
+use std::ops::Range;
+
+use super::{finish, Epilogue};
+use crate::exec::SyncCell;
+use crate::formats::index::Idx;
+use crate::formats::Bsr;
+use crate::with_col_indices;
+
+/// `y = M·x` over the BSR representation.
+pub fn bsr_matvec(m: &Bsr, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), m.rows(), "y length");
+    with_col_indices!(&m.block_col, ci => bsr_matvec_inner(m, ci, 0..m.rows(), x, y, None));
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Bit-identical to [`bsr_matvec`] over the same rows.
+pub fn bsr_matvec_range(m: &Bsr, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.block_col, ci => bsr_matvec_inner(m, ci, rows, x, y, None));
+}
+
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`bsr_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn bsr_matvec_range_epi(
+    m: &Bsr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.block_col, ci => bsr_matvec_inner(m, ci, rows, x, y, Some(epi)));
+}
+
+fn bsr_matvec_inner<I: Idx>(
+    m: &Bsr,
+    block_col: &[I],
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    let (br_h, bc_w) = m.block_shape();
+    let tile = br_h * bc_w;
+    let values = &m.values;
+    let n = m.cols();
+    for (out, r) in y.iter_mut().zip(rows) {
+        let (s, e) = m.block_range(r / br_h);
+        let lr = r % br_h;
+        let mut acc = 0.0f32;
+        for idx in s..e {
+            let c0 = block_col[idx].to_usize() * bc_w;
+            let cw = bc_w.min(n - c0);
+            let row_base = idx * tile + lr * bc_w;
+            // Contiguous tile row × contiguous input slice: the zipped
+            // slices elide every bounds check.
+            for (v, xv) in values[row_base..row_base + cw].iter().zip(&x[c0..c0 + cw]) {
+                acc += v * xv;
+            }
+        }
+        *out = finish(epi, r, acc);
+    }
+}
+
+/// `Y = M·X` with `X` column-major (`n × l`): four rhs columns per pass so
+/// every tile is streamed once per 4 samples. Each output column is
+/// bit-identical to [`bsr_matvec`] on that column.
+pub fn bsr_matmul_colmajor(m: &Bsr, x: &[f32], y: &mut [f32], l: usize) {
+    assert_eq!(x.len(), m.cols() * l, "rhs shape");
+    assert_eq!(y.len(), m.rows() * l, "out shape");
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { bsr_matmul_cells(m, 0..m.rows(), x, cells, l, None) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn bsr_matmul_cells(
+    m: &Bsr,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    with_col_indices!(&m.block_col, ci => {
+        let mut c = 0usize;
+        while c + 4 <= l {
+            let xs: [&[f32]; 4] = [
+                &x[c * n..(c + 1) * n],
+                &x[(c + 1) * n..(c + 2) * n],
+                &x[(c + 2) * n..(c + 3) * n],
+                &x[(c + 3) * n..(c + 4) * n],
+            ];
+            bsr_matmul4_inner(m, ci, rows.clone(), &xs, y, c, epi);
+            c += 4;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            bsr_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, epi);
+        }
+    });
+}
+
+/// # Safety
+/// Same contract as [`bsr_matmul_cells`].
+unsafe fn bsr_matmul4_inner<I: Idx>(
+    m: &Bsr,
+    block_col: &[I],
+    rows: Range<usize>,
+    xs: &[&[f32]; 4],
+    y: &[SyncCell],
+    c: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let (br_h, bc_w) = m.block_shape();
+    let tile = br_h * bc_w;
+    let values = &m.values;
+    let m_total = m.rows();
+    let n = m.cols();
+    for r in rows {
+        let (s, e) = m.block_range(r / br_h);
+        let lr = r % br_h;
+        // Mirror bsr_matvec_inner's single accumulator per lane so every
+        // output column stays bit-identical to the scalar kernel.
+        let mut acc = [0.0f32; 4];
+        for idx in s..e {
+            let c0 = block_col[idx].to_usize() * bc_w;
+            let cw = bc_w.min(n - c0);
+            let row_base = idx * tile + lr * bc_w;
+            for (j, v) in values[row_base..row_base + cw].iter().enumerate() {
+                let i = c0 + j;
+                debug_assert!(i < xs[0].len());
+                for lane in 0..4 {
+                    acc[lane] += v * *xs[lane].get_unchecked(i);
+                }
+            }
+        }
+        for lane in 0..4 {
+            y[(c + lane) * m_total + r].set(finish(epi, r, acc[lane]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Dense, MatrixFormat};
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn matches_dense_oracle_on_paper_example() {
+        let m = paper_example_matrix();
+        let x: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        let mut want = vec![0.0; 5];
+        for (r, w) in want.iter_mut().enumerate() {
+            *w = m.row(r).iter().zip(&x).map(|(a, b)| a * b).sum();
+        }
+        for (br, bc) in crate::formats::bsr::BLOCK_CANDIDATES {
+            let b = Bsr::from_dense_with(&m, br, bc);
+            let mut y = vec![0.0; 5];
+            bsr_matvec(&b, &x, &mut y);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{br}x{bc}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_tiles_only_touch_in_bounds_input() {
+        // 3x5 with a nonzero in the ragged last tile; x is exactly 5 long,
+        // so any out-of-bounds tile-row read would panic.
+        let mut m = Dense::zeros(3, 5);
+        m.set(2, 4, 2.0);
+        m.set(0, 1, -1.0);
+        let b = Bsr::from_dense_with(&m, 2, 2);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y = vec![0.0; 3];
+        bsr_matvec(&b, &x, &mut y);
+        assert_eq!(y, vec![-2.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let b = Bsr::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let mut want = vec![0.0; 5];
+        bsr_matvec(&b, &x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, c) = got.split_at_mut(2);
+        bsr_matvec_range(&b, 0..2, &x, a);
+        bsr_matvec_range(&b, 2..5, &x, c);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass() {
+        let b = Bsr::from_dense(&paper_example_matrix());
+        let bias: Vec<f32> = (0..5).map(|r| r as f32 * 0.5 - 40.0).collect();
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        for relu in [false, true] {
+            let epi = Epilogue { bias: &bias, relu };
+            let mut want = vec![0.0; 5];
+            bsr_matvec(&b, &x, &mut want);
+            for (r, v) in want.iter_mut().enumerate() {
+                *v += bias[r];
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut got = vec![0.0; 5];
+            bsr_matvec_range_epi(&b, 0..5, &x, &mut got, &epi);
+            assert_eq!(got, want, "relu={relu}");
+        }
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_per_column_matvec() {
+        let b = Bsr::from_dense(&paper_example_matrix());
+        for l in [1usize, 4, 5, 9] {
+            let x: Vec<f32> = (0..12 * l).map(|i| (i as f32) * 0.21 - 1.3).collect();
+            let mut got = vec![0.0; 5 * l];
+            bsr_matmul_colmajor(&b, &x, &mut got, l);
+            for c in 0..l {
+                let mut want = vec![0.0; 5];
+                bsr_matvec(&b, &x[c * 12..(c + 1) * 12], &mut want);
+                assert_eq!(&got[c * 5..(c + 1) * 5], &want[..], "column {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_block_rows_produce_zero() {
+        let mut m = Dense::zeros(6, 4);
+        m.set(5, 0, 3.0);
+        let b = Bsr::from_dense_with(&m, 2, 2);
+        let mut y = vec![9.0; 6];
+        bsr_matvec(&b, &[2.0, 0.0, 0.0, 0.0], &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 0.0, 0.0, 6.0]);
+    }
+}

@@ -1,6 +1,7 @@
-//! Dot-product algorithms for the four representations — the paper's
-//! Appendix Algorithms 1 (dense), 2 (CSR), 3 (CER) and 4 (CSER) — plus the
-//! bit-packed dense variant used by the §V-B side experiment.
+//! Dot-product algorithms for the format family — the paper's Appendix
+//! Algorithms 1 (dense), 2 (CSR), 3 (CER) and 4 (CSER), the block-tile
+//! BSR and sign-segment TNN kernels, plus the bit-packed dense variant
+//! used by the §V-B side experiment.
 //!
 //! All kernels compute `y = M · x` (matrix–vector) or `Y = M · X`
 //! (matrix–matrix, rhs column-major). CER/CSER kernels implement the
@@ -36,25 +37,29 @@
 //! `< 0.0` clamp the post-pass did, in the same order.
 
 pub mod backend;
+mod bsr_k;
 pub(crate) mod cer_k;
 pub(crate) mod cser_k;
 mod csr_k;
 mod dense_k;
 pub mod packed;
 pub(crate) mod simd;
+mod tnn_k;
 
 pub use backend::KernelBackend;
+pub use bsr_k::{bsr_matmul_colmajor, bsr_matvec, bsr_matvec_range, bsr_matvec_range_epi};
 pub use cer_k::{cer_matmul_colmajor, cer_matvec, cer_matvec_range, cer_matvec_range_epi};
 pub use cser_k::{cser_matmul_colmajor, cser_matvec, cser_matvec_range, cser_matvec_range_epi};
 pub use csr_k::{csr_matmul_colmajor, csr_matvec, csr_matvec_range, csr_matvec_range_epi};
 pub use dense_k::{dense_matmul_colmajor, dense_matvec, dense_matvec_range, dense_matvec_range_epi};
 pub use packed::PackedDense;
+pub use tnn_k::{tnn_matmul_colmajor, tnn_matvec, tnn_matvec_range, tnn_matvec_range_epi};
 
 use std::ops::Range;
 
 use crate::exec::{self, ShardPlan, SyncCell, ThreadPool};
 use crate::formats::{
-    Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown, StorageResidency,
+    Bsr, Cer, Cser, Csr, Dense, FormatKind, MatrixFormat, StorageBreakdown, StorageResidency, Tnn,
 };
 
 /// `Σx` for the Ω[0]-decomposition correction — the single definition all
@@ -142,6 +147,8 @@ pub enum AnyMatrix {
     Csr(Csr),
     Cer(Cer),
     Cser(Cser),
+    Bsr(Bsr),
+    Tnn(Tnn),
 }
 
 impl AnyMatrix {
@@ -152,6 +159,8 @@ impl AnyMatrix {
             FormatKind::Csr => AnyMatrix::Csr(Csr::from_dense(m)),
             FormatKind::Cer => AnyMatrix::Cer(Cer::from_dense(m)),
             FormatKind::Cser => AnyMatrix::Cser(Cser::from_dense(m)),
+            FormatKind::Bsr => AnyMatrix::Bsr(Bsr::from_dense(m)),
+            FormatKind::Tnn => AnyMatrix::Tnn(Tnn::from_dense(m)),
         }
     }
 
@@ -161,6 +170,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(_) => FormatKind::Csr,
             AnyMatrix::Cer(_) => FormatKind::Cer,
             AnyMatrix::Cser(_) => FormatKind::Cser,
+            AnyMatrix::Bsr(_) => FormatKind::Bsr,
+            AnyMatrix::Tnn(_) => FormatKind::Tnn,
         }
     }
 
@@ -170,6 +181,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => m.rows(),
             AnyMatrix::Cer(m) => m.rows(),
             AnyMatrix::Cser(m) => m.rows(),
+            AnyMatrix::Bsr(m) => m.rows(),
+            AnyMatrix::Tnn(m) => m.rows(),
         }
     }
 
@@ -179,6 +192,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => m.cols(),
             AnyMatrix::Cer(m) => m.cols(),
             AnyMatrix::Cser(m) => m.cols(),
+            AnyMatrix::Bsr(m) => m.cols(),
+            AnyMatrix::Tnn(m) => m.cols(),
         }
     }
 
@@ -188,6 +203,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => m.storage(),
             AnyMatrix::Cer(m) => m.storage(),
             AnyMatrix::Cser(m) => m.storage(),
+            AnyMatrix::Bsr(m) => m.storage(),
+            AnyMatrix::Tnn(m) => m.storage(),
         }
     }
 
@@ -197,6 +214,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => m.to_dense(),
             AnyMatrix::Cer(m) => m.to_dense(),
             AnyMatrix::Cser(m) => m.to_dense(),
+            AnyMatrix::Bsr(m) => m.to_dense(),
+            AnyMatrix::Tnn(m) => m.to_dense(),
         }
     }
 
@@ -207,6 +226,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => csr_matvec(m, x, y),
             AnyMatrix::Cer(m) => cer_matvec(m, x, y),
             AnyMatrix::Cser(m) => cser_matvec(m, x, y),
+            AnyMatrix::Bsr(m) => bsr_matvec(m, x, y),
+            AnyMatrix::Tnn(m) => tnn_matvec(m, x, y),
         }
     }
 
@@ -219,6 +240,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => csr_matvec_range(m, rows, x, y),
             AnyMatrix::Cer(m) => cer_matvec_range(m, rows, x, y),
             AnyMatrix::Cser(m) => cser_matvec_range(m, rows, x, y),
+            AnyMatrix::Bsr(m) => bsr_matvec_range(m, rows, x, y),
+            AnyMatrix::Tnn(m) => tnn_matvec_range(m, rows, x, y),
         }
     }
 
@@ -237,6 +260,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => csr_k::csr_matvec_range_epi(m, rows, x, y, epi),
             AnyMatrix::Cer(m) => cer_k::cer_matvec_range_epi(m, rows, x, y, epi),
             AnyMatrix::Cser(m) => cser_k::cser_matvec_range_epi(m, rows, x, y, epi),
+            AnyMatrix::Bsr(m) => bsr_k::bsr_matvec_range_epi(m, rows, x, y, epi),
+            AnyMatrix::Tnn(m) => tnn_k::tnn_matvec_range_epi(m, rows, x, y, epi),
         }
     }
 
@@ -259,6 +284,14 @@ impl AnyMatrix {
             },
             AnyMatrix::Cer(m) => cer_k::cer_matvec_range_with(m, rows, x, y, sum_x, epi),
             AnyMatrix::Cser(m) => cser_k::cser_matvec_range_with(m, rows, x, y, sum_x, epi),
+            AnyMatrix::Bsr(m) => match epi {
+                Some(e) => bsr_k::bsr_matvec_range_epi(m, rows, x, y, e),
+                None => bsr_k::bsr_matvec_range(m, rows, x, y),
+            },
+            AnyMatrix::Tnn(m) => match epi {
+                Some(e) => tnn_k::tnn_matvec_range_epi(m, rows, x, y, e),
+                None => tnn_k::tnn_matvec_range(m, rows, x, y),
+            },
         }
     }
 
@@ -376,6 +409,31 @@ impl AnyMatrix {
                 .iter()
                 .map(|&s| m.omega_ptr[s as usize] as u64)
                 .collect(),
+            AnyMatrix::Bsr(m) => {
+                // Every row of a block row streams the same tiles: its
+                // work is the summed in-bounds width of those tiles.
+                let (br_h, bc_w) = m.block_shape();
+                let mut prefix = Vec::with_capacity(m.rows() + 1);
+                prefix.push(0u64);
+                let mut acc = 0u64;
+                for br in 0..m.block_rows() {
+                    let (s, e) = m.block_range(br);
+                    let row_work: u64 = (s..e)
+                        .map(|i| bc_w.min(m.cols() - m.block_col.get(i) * bc_w) as u64)
+                        .sum();
+                    let rl = br_h.min(m.rows() - br * br_h);
+                    for _ in 0..rl {
+                        acc += row_work;
+                        prefix.push(acc);
+                    }
+                }
+                prefix
+            }
+            AnyMatrix::Tnn(m) => m
+                .row_ptr
+                .iter()
+                .map(|&s| m.seg_ptr[s as usize] as u64)
+                .collect(),
         }
     }
 
@@ -445,6 +503,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => m.encode_into(out),
             AnyMatrix::Cer(m) => m.encode_into(out),
             AnyMatrix::Cser(m) => m.encode_into(out),
+            AnyMatrix::Bsr(m) => m.encode_into(out),
+            AnyMatrix::Tnn(m) => m.encode_into(out),
         };
         emitted.total = out.len() - base;
         emitted
@@ -479,6 +539,8 @@ impl AnyMatrix {
             FormatKind::Csr => AnyMatrix::Csr(Csr::decode_from_source(body, src)?),
             FormatKind::Cer => AnyMatrix::Cer(Cer::decode_from_source(body, src)?),
             FormatKind::Cser => AnyMatrix::Cser(Cser::decode_from_source(body, src)?),
+            FormatKind::Bsr => AnyMatrix::Bsr(Bsr::decode_from_source(body, src)?),
+            FormatKind::Tnn => AnyMatrix::Tnn(Tnn::decode_from_source(body, src)?),
         })
     }
 
@@ -507,6 +569,18 @@ impl AnyMatrix {
                 r.add_col_indices(&m.col_idx);
                 r.add(&m.omega_idx);
                 r.add(&m.omega_ptr);
+                r.add(&m.row_ptr);
+            }
+            AnyMatrix::Bsr(m) => {
+                r.add(&m.values);
+                r.add_col_indices(&m.block_col);
+                r.add(&m.block_row_ptr);
+            }
+            AnyMatrix::Tnn(m) => {
+                r.add(&m.mags);
+                r.add_col_indices(&m.col_idx);
+                r.add(&m.split);
+                r.add(&m.seg_ptr);
                 r.add(&m.row_ptr);
             }
         }
@@ -589,6 +663,8 @@ impl AnyMatrix {
             AnyMatrix::Csr(m) => csr_k::csr_matmul_cells(m, rows, x, y, l, epi),
             AnyMatrix::Cer(m) => cer_k::cer_matmul_cells(m, rows, x, y, l, col_sums, epi),
             AnyMatrix::Cser(m) => cser_k::cser_matmul_cells(m, rows, x, y, l, col_sums, epi),
+            AnyMatrix::Bsr(m) => bsr_k::bsr_matmul_cells(m, rows, x, y, l, epi),
+            AnyMatrix::Tnn(m) => tnn_k::tnn_matmul_cells(m, rows, x, y, l, epi),
         }
     }
 

@@ -1,0 +1,272 @@
+//! TNN dot product — the RSR-style precomputed sign-segment reduction.
+//!
+//! Per row and per magnitude slot: gather-sum the positive columns,
+//! gather-sum the negative columns, multiply their difference ONCE by the
+//! slot's magnitude — `acc += mags[j] · (Σ x[pos] − Σ x[neg])`. A pure
+//! ternary matrix thus spends one multiply per row. Padded (empty) slots
+//! advance the rank without touching the split or magnitude arrays.
+//!
+//! Includes the 4-wide multi-rhs kernel (one index-stream pass per 4
+//! samples), the row-range entry points used by the exec plane, and the
+//! fused [`Epilogue`]. Each row's slots are walked in rank order with a
+//! single accumulator, so shard boundaries never change any row's
+//! reduction order — parallel output is bit-identical to serial.
+
+use std::ops::Range;
+
+use super::cer_k::{gather_sum, gather_sum4};
+use super::{finish, Epilogue};
+use crate::exec::SyncCell;
+use crate::formats::index::Idx;
+use crate::formats::Tnn;
+use crate::with_col_indices;
+
+/// `y = M·x` over the TNN representation.
+pub fn tnn_matvec(m: &Tnn, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), m.rows(), "y length");
+    with_col_indices!(&m.col_idx, ci => tnn_matvec_inner(m, ci, 0..m.rows(), x, y, None));
+}
+
+/// Shard entry: compute rows `rows` of `y = M·x` into `y` (one slot per
+/// row of the range). Bit-identical to [`tnn_matvec`] over the same rows.
+pub fn tnn_matvec_range(m: &Tnn, rows: Range<usize>, x: &[f32], y: &mut [f32]) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.col_idx, ci => tnn_matvec_inner(m, ci, rows, x, y, None));
+}
+
+/// Shard entry with a fused epilogue: bit-identical to
+/// [`tnn_matvec_range`] followed by `v = acc + bias[r]` and the ReLU
+/// clamp per element (same add order as the unfused post-pass).
+pub fn tnn_matvec_range_epi(
+    m: &Tnn,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: &Epilogue<'_>,
+) {
+    assert!(rows.start <= rows.end && rows.end <= m.rows(), "row range");
+    assert_eq!(x.len(), m.cols(), "x length");
+    assert_eq!(y.len(), rows.len(), "y length");
+    with_col_indices!(&m.col_idx, ci => tnn_matvec_inner(m, ci, rows, x, y, Some(epi)));
+}
+
+fn tnn_matvec_inner<I: Idx>(
+    m: &Tnn,
+    col_idx: &[I],
+    rows: Range<usize>,
+    x: &[f32],
+    y: &mut [f32],
+    epi: Option<&Epilogue<'_>>,
+) {
+    let mags = &m.mags;
+    let seg_ptr = &m.seg_ptr;
+    let split = &m.split;
+    for (out, r) in y.iter_mut().zip(rows) {
+        let (ss, se) = m.row_slots(r);
+        let mut acc = 0.0f32;
+        for s in ss..se {
+            let (cs, ce) = (seg_ptr[s] as usize, seg_ptr[s + 1] as usize);
+            if cs == ce {
+                continue; // padded slot: magnitude absent from this row
+            }
+            let sp = cs + split[s] as usize;
+            let diff = gather_sum(&col_idx[cs..sp], x) - gather_sum(&col_idx[sp..ce], x);
+            acc += mags[s - ss] * diff;
+        }
+        *out = finish(epi, r, acc);
+    }
+}
+
+/// `Y = M·X` over TNN with `X` column-major (n × l): processes four rhs
+/// columns per pass so every column index is loaded once per 4 samples.
+pub fn tnn_matmul_colmajor(m: &Tnn, x: &[f32], y: &mut [f32], l: usize) {
+    assert_eq!(x.len(), m.cols() * l, "rhs shape");
+    assert_eq!(y.len(), m.rows() * l, "out shape");
+    let cells = crate::exec::as_cells(y);
+    // SAFETY: `y` is exclusively borrowed and this single call covers all
+    // rows — no concurrent writer exists.
+    unsafe { tnn_matmul_cells(m, 0..m.rows(), x, cells, l, None) };
+}
+
+/// Compute rows `rows` of `Y = M·X` into the shared full-size cell view,
+/// applying the fused epilogue (if any) to each output element.
+///
+/// # Safety
+/// No other thread may access rows `rows` of `y` during the call (the
+/// exec driver guarantees this via disjoint `ShardPlan` shards).
+pub(crate) unsafe fn tnn_matmul_cells(
+    m: &Tnn,
+    rows: Range<usize>,
+    x: &[f32],
+    y: &[SyncCell],
+    l: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let (m_total, n) = (m.rows(), m.cols());
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(y.len(), m_total * l);
+    debug_assert!(rows.end <= m_total);
+    with_col_indices!(&m.col_idx, ci => {
+        let mut c = 0usize;
+        while c + 4 <= l {
+            let xs: [&[f32]; 4] = [
+                &x[c * n..(c + 1) * n],
+                &x[(c + 1) * n..(c + 2) * n],
+                &x[(c + 2) * n..(c + 3) * n],
+                &x[(c + 3) * n..(c + 4) * n],
+            ];
+            tnn_matmul4_inner(m, ci, rows.clone(), &xs, y, c, epi);
+            c += 4;
+        }
+        for c in c..l {
+            let seg = &y[c * m_total + rows.start..c * m_total + rows.end];
+            // SAFETY: this shard exclusively owns rows `rows` of every
+            // column.
+            let yc = crate::exec::cells_as_mut(seg);
+            tnn_matvec_inner(m, ci, rows.clone(), &x[c * n..(c + 1) * n], yc, epi);
+        }
+    });
+}
+
+/// # Safety
+/// Same contract as [`tnn_matmul_cells`].
+unsafe fn tnn_matmul4_inner<I: Idx>(
+    m: &Tnn,
+    col_idx: &[I],
+    rows: Range<usize>,
+    xs: &[&[f32]; 4],
+    y: &[SyncCell],
+    c: usize,
+    epi: Option<&Epilogue<'_>>,
+) {
+    let m_total = m.rows();
+    let mags = &m.mags;
+    let seg_ptr = &m.seg_ptr;
+    let split = &m.split;
+    for r in rows {
+        let (ss, se) = m.row_slots(r);
+        // Mirror tnn_matvec_inner's single accumulator per lane so every
+        // output column stays bit-identical to the scalar kernel.
+        let mut acc = [0.0f32; 4];
+        for s in ss..se {
+            let (cs, ce) = (seg_ptr[s] as usize, seg_ptr[s + 1] as usize);
+            if cs == ce {
+                continue;
+            }
+            let sp = cs + split[s] as usize;
+            let p = gather_sum4(&col_idx[cs..sp], xs);
+            let q = gather_sum4(&col_idx[sp..ce], xs);
+            let mag = mags[s - ss];
+            for lane in 0..4 {
+                acc[lane] += mag * (p[lane] - q[lane]);
+            }
+        }
+        for lane in 0..4 {
+            y[(c + lane) * m_total + r].set(finish(epi, r, acc[lane]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::paper_example_matrix;
+
+    #[test]
+    fn ternary_row_costs_one_multiply_worth() {
+        // ±0.5 ternary: y = 0.5 · (Σ x[pos] − Σ x[neg]).
+        let m = Dense::from_rows(&[
+            vec![0.5, -0.5, 0.0, 0.5],
+            vec![-0.5, 0.0, -0.5, 0.0],
+        ]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.magnitudes(), 1);
+        let x = vec![1.0, 10.0, 100.0, 1000.0];
+        let mut y = vec![0.0; 2];
+        tnn_matvec(&t, &x, &mut y);
+        assert_eq!(y, vec![0.5 * (1001.0 - 10.0), 0.5 * (0.0 - 101.0)]);
+    }
+
+    #[test]
+    fn padded_slots_do_not_contribute() {
+        let m = Dense::from_rows(&[vec![0.5, 0.5, 0.0], vec![0.0, 0.0, 2.0]]);
+        let t = Tnn::from_dense(&m);
+        assert_eq!(t.padded_slots(), 1);
+        let x = vec![1.0, 10.0, 100.0];
+        let mut y = vec![0.0; 2];
+        tnn_matvec(&t, &x, &mut y);
+        assert_eq!(y, vec![5.5, 200.0]);
+    }
+
+    #[test]
+    fn matches_dense_oracle_on_paper_example() {
+        let m = paper_example_matrix();
+        let t = Tnn::from_dense(&m);
+        let x: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        let mut y = vec![0.0; 5];
+        tnn_matvec(&t, &x, &mut y);
+        for (r, g) in y.iter().enumerate() {
+            let w: f32 = m.row(r).iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "row {r}");
+        }
+    }
+
+    #[test]
+    fn range_pieces_compose_to_full_matvec() {
+        let t = Tnn::from_dense(&paper_example_matrix());
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let mut want = vec![0.0; 5];
+        tnn_matvec(&t, &x, &mut want);
+        let mut got = vec![0.0; 5];
+        let (a, b) = got.split_at_mut(3);
+        tnn_matvec_range(&t, 0..3, &x, a);
+        tnn_matvec_range(&t, 3..5, &x, b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fused_epilogue_bit_identical_to_post_pass() {
+        let t = Tnn::from_dense(&paper_example_matrix());
+        let bias: Vec<f32> = (0..5).map(|r| r as f32 * 0.5 - 40.0).collect();
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        for relu in [false, true] {
+            let epi = Epilogue { bias: &bias, relu };
+            let mut want = vec![0.0; 5];
+            tnn_matvec(&t, &x, &mut want);
+            for (r, v) in want.iter_mut().enumerate() {
+                *v += bias[r];
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut got = vec![0.0; 5];
+            tnn_matvec_range_epi(&t, 0..5, &x, &mut got, &epi);
+            assert_eq!(got, want, "relu={relu}");
+        }
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_per_column_matvec() {
+        let m = Dense::from_rows(&[
+            vec![0.5, -0.5, 0.0, 0.5, 0.0],
+            vec![0.0, -2.0, 0.0, 0.5, -0.5],
+            vec![0.0, 0.0, 0.0, 0.0, 0.0],
+            vec![2.0, 0.0, 0.5, 0.0, 0.5],
+        ]);
+        let t = Tnn::from_dense(&m);
+        for l in [1usize, 4, 5, 9] {
+            let x: Vec<f32> = (0..5 * l).map(|i| (i as f32) * 0.21 - 1.3).collect();
+            let mut got = vec![0.0; 4 * l];
+            tnn_matmul_colmajor(&t, &x, &mut got, l);
+            for c in 0..l {
+                let mut want = vec![0.0; 4];
+                tnn_matvec(&t, &x[c * 5..(c + 1) * 5], &mut want);
+                assert_eq!(&got[c * 4..(c + 1) * 4], &want[..], "column {c}");
+            }
+        }
+    }
+}

@@ -5,7 +5,10 @@
 //! Networks"* (Wiedemann, Müller & Samek, 2018). It implements the paper's
 //! two novel matrix representations — **CER** (Compressed Entropy Row) and
 //! **CSER** (Compressed Shared Elements Row) — together with the dense and
-//! CSR baselines, the paper's elementary-operation energy/time cost model,
+//! CSR baselines, and grows the family with **BSR** (block-sparse rows:
+//! dense tiles amortizing one index over a whole block) and **TNN**
+//! (ternary: sign-partitioned column segments sharing one magnitude per
+//! row). It adds the paper's elementary-operation energy/time cost model,
 //! the quantization/pruning pipelines used in its evaluation, a model zoo
 //! with conv-as-matmul accounting, and an inference coordinator that
 //! auto-selects the cheapest format per layer and can execute layers either
@@ -43,14 +46,20 @@
 //!
 //! ## Modules
 //!
-//! * [`formats`] — the four matrix containers and conversions. Every
-//!   bulk array lives in a [`formats::Storage`]: owned, or a zero-copy
-//!   view into a reference-counted mapped `.cerpack`
-//!   ([`pack::map::PackMap`]) — kernels see `&[T]` either way.
-//! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4),
-//!   each with row-range entry points for sharded execution and a fused
+//! * [`formats`] — the six matrix containers (dense, CSR, CER, CSER,
+//!   BSR, TNN; [`formats::FormatKind::ALL`] is the family's single
+//!   source of truth) and conversions. Every bulk array lives in a
+//!   [`formats::Storage`]: owned, or a zero-copy view into a
+//!   reference-counted mapped `.cerpack` ([`pack::map::PackMap`]) —
+//!   kernels see `&[T]` either way.
+//! * [`kernels`] — the dot-product algorithms (paper Appendix, Alg. 1–4,
+//!   plus the BSR tile and TNN segment kernels), each with row-range
+//!   entry points for sharded execution and a fused
 //!   [`kernels::Epilogue`] (bias + ReLU applied in-shard, while each
-//!   output row is cache-hot).
+//!   output row is cache-hot). `tests/format_generic.rs` proves the
+//!   whole family interchangeable: lossless, byte-exact accounting,
+//!   and bit-identical under sharding/stealing/fusion/mmap, with no
+//!   per-format test code.
 //! * [`exec`] — the multi-core execution plane: a persistent scoped
 //!   thread pool plus per-layer [`exec::ShardPlan`]s that partition rows
 //!   by stored-index (nnz) count, and the [`exec::Pipeline`] job type

@@ -128,14 +128,19 @@ Experiment commands (DESIGN.md §3; CSVs land in --out, default results/):
 
 Artifact commands (.cerpack — the on-disk format for compressed networks):
   pack --network <name>      compress a zoo network (synthesize → auto-select
-                             formats) and serialize it to --out (default
+                             among dense/csr/cer/cser/bsr/tnn per layer) and
+                             serialize it to --out (default
                              <name>.cerpack); add --objective
                              energy|time|ops|storage (default energy),
                              --scale N for shrunken quick runs. Selection is
                              thread-aware: with --threads N the time
                              criterion is each format's sharded critical
                              path at N lanes, so the packed formats can
-                             differ between --threads 1 and --threads 8
+                             differ between --threads 1 and --threads 8.
+                             Besides the zoo, three diagnostic nets pin
+                             selector flips: spike-slab (csr at 1 thread,
+                             dense at 8), block-structured (csr -> bsr on
+                             time), ternary (cser -> tnn on storage)
   inspect <file.cerpack>     verify checksums, dump header + manifest, and
                              compare measured on-disk bytes per layer with
                              the analytic StorageBreakdown bits and the

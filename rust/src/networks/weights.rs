@@ -161,6 +161,42 @@ pub fn synthesize_zoo_layers(
         let layers = vec![("spike".to_string(), m, vec![0.0; 8])];
         return Some((spec, layers));
     }
+    // "block-structured" and "ternary" are the companion diagnostic nets
+    // for the BSR and TNN formats: one fc layer each, built so the full
+    // format-family argmin lands on the new format while the best
+    // pre-existing format is a different one (the selector tests pin
+    // both flips). Like spike-slab they are deliberately absent from
+    // `NetworkSpec::all()`.
+    if net.eq_ignore_ascii_case("block-structured") {
+        let spec = NetworkSpec {
+            name: "block-structured",
+            layers: vec![LayerSpec {
+                name: "blocks".to_string(),
+                kind: crate::networks::zoo::LayerKind::Fc,
+                rows: 64,
+                cols: 128,
+                patches: 1,
+            }],
+        };
+        let m = crate::stats::synth::block_structured(64, 128, 8);
+        let layers = vec![("blocks".to_string(), m, vec![0.0; 64])];
+        return Some((spec, layers));
+    }
+    if net.eq_ignore_ascii_case("ternary") {
+        let spec = NetworkSpec {
+            name: "ternary",
+            layers: vec![LayerSpec {
+                name: "tern".to_string(),
+                kind: crate::networks::zoo::LayerKind::Fc,
+                rows: 64,
+                cols: 128,
+                patches: 1,
+            }],
+        };
+        let m = crate::stats::synth::ternary(64, 128);
+        let layers = vec![("tern".to_string(), m, vec![0.0; 64])];
+        return Some((spec, layers));
+    }
     let spec_used = NetworkSpec::by_name(net)?.scaled(scale);
     let target = TargetStats::table_iv(net)
         .or_else(|| TargetStats::retrained(net))
@@ -284,6 +320,29 @@ mod tests {
         // Not a zoo member — the paper-table evaluations never see it.
         assert!(NetworkSpec::by_name("spike-slab").is_none());
         assert!(NetworkSpec::all().iter().all(|n| n.name != "spike-slab"));
+    }
+
+    #[test]
+    fn format_diagnostic_zoo_nets_are_deterministic_and_off_registry() {
+        for (net, layer, rows, cols) in [
+            ("block-structured", "blocks", 64usize, 128usize),
+            ("ternary", "tern", 64, 128),
+        ] {
+            let (spec, layers) = synthesize_zoo_layers(net, 1, 1).unwrap();
+            assert_eq!(spec.name, net);
+            assert_eq!(layers.len(), 1);
+            let (name, m, bias) = &layers[0];
+            assert_eq!(name, layer);
+            assert_eq!((m.rows(), m.cols()), (rows, cols));
+            assert_eq!(bias.len(), rows);
+            // Seed and scale are ignored: the fixtures are deterministic.
+            let upper = net.to_ascii_uppercase();
+            let (_, again) = synthesize_zoo_layers(&upper, 4, 99).unwrap();
+            assert_eq!(m.data(), again[0].1.data());
+            // Not zoo members — the paper-table evaluations never see them.
+            assert!(NetworkSpec::by_name(net).is_none());
+            assert!(NetworkSpec::all().iter().all(|n| n.name != net));
+        }
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! The paper's deliverable is not a measurement but an artifact: a network
 //! whose layers are stored in their entropy-optimal representations. This
 //! module serializes a whole compressed network — every layer's
-//! [`AnyMatrix`] payload in its *selected* format (dense/CSR/CER/CSER with
-//! codebooks and index-width tags), biases, topology, and a provenance
+//! [`AnyMatrix`] payload in its *selected* format (dense/CSR/CER/CSER/
+//! BSR/TNN with codebooks and index-width tags), biases, topology, and a
+//! provenance
 //! manifest — into a single versioned `.cerpack` file, and loads it back
 //! without re-running pruning, clustering, encoding or format selection
 //! (the engine cold-start path, [`crate::coordinator::Engine::from_pack`]).
@@ -41,7 +42,8 @@
 //!
 //! Strings are `u32` byte-length + UTF-8. Per file: `network` name,
 //! `created_by` tool string, `u32` layer count; then per layer: name,
-//! `u8` format tag (0 dense, 1 CSR, 2 CER, 3 CSER), `u32` rows, `u32`
+//! `u8` format tag (0 dense, 1 CSR, 2 CER, 3 CSER, 4 BSR, 5 TNN),
+//! `u32` rows, `u32`
 //! cols, `u32` codebook size K, `f64` entropy H (bits), `f64` p₀,
 //! `u64` analytic storage bits ([`crate::formats::StorageBreakdown`]),
 //! `u64` measured matrix-array bytes, `u64` total payload bytes, and a
@@ -56,7 +58,8 @@
 //! 3 reserved bytes, followed by the format's own encoding (see
 //! `encode_into`/`decode_from` on [`crate::formats::Dense`],
 //! [`crate::formats::Csr`], [`crate::formats::Cer`],
-//! [`crate::formats::Cser`]). Format payloads write their bulk arrays
+//! [`crate::formats::Cser`], [`crate::formats::Bsr`],
+//! [`crate::formats::Tnn`]). Format payloads write their bulk arrays
 //! widest-element-first (f32/u32, then u16, then u8) with explicit padding
 //! so every array starts naturally aligned at its element size — a
 //! decoder may reinterpret them in place. Pointer and index arrays are
@@ -581,6 +584,58 @@ fn element_stats(matrix: &AnyMatrix) -> (usize, f64, f64) {
                 let run = (m.omega_ptr[slot + 1] - m.omega_ptr[slot]) as u64;
                 if run > 0 {
                     *counts.entry(value_key(m.omega[oi as usize])).or_insert(0) += run;
+                }
+            }
+        }
+        AnyMatrix::Bsr(m) => {
+            // Count every in-bounds tile cell (stored zeros included —
+            // they are real elements of the matrix); everything outside
+            // the stored tiles is exactly 0.0. Zero-padded edge cells
+            // beyond the matrix bounds are storage, not elements.
+            let (br_h, bc_w) = m.block_shape();
+            let tile = br_h * bc_w;
+            let ncols = m.cols();
+            let mut covered = 0u64;
+            for br in 0..m.block_rows() {
+                let (s, e) = m.block_range(br);
+                let rl = br_h.min(m.rows() - br * br_h);
+                for idx in s..e {
+                    let c0 = m.block_col.get(idx) * bc_w;
+                    let cw = bc_w.min(ncols - c0);
+                    covered += (rl * cw) as u64;
+                    for lr in 0..rl {
+                        let base = idx * tile + lr * bc_w;
+                        for &v in &m.values[base..base + cw] {
+                            *counts.entry(value_key(v)).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+            if n > covered {
+                *counts.entry(value_key(0.0)).or_insert(0) += n - covered;
+            }
+        }
+        AnyMatrix::Tnn(m) => {
+            let nnz = m.nnz() as u64;
+            if n > nnz {
+                *counts.entry(value_key(0.0)).or_insert(0) += n - nnz;
+            }
+            for r in 0..m.rows() {
+                let (ss, se) = m.row_slots(r);
+                for s in ss..se {
+                    let (cs, ce) = (m.seg_ptr[s] as u64, m.seg_ptr[s + 1] as u64);
+                    if cs == ce {
+                        continue;
+                    }
+                    let pos = m.split[s] as u64;
+                    let mag = m.mags[s - ss];
+                    if pos > 0 {
+                        *counts.entry(value_key(mag)).or_insert(0) += pos;
+                    }
+                    let neg = (ce - cs) - pos;
+                    if neg > 0 {
+                        *counts.entry(value_key(-mag)).or_insert(0) += neg;
+                    }
                 }
             }
         }

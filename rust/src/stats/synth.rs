@@ -181,10 +181,149 @@ pub fn spike_and_slab(rows: usize, cols: usize, slab_nnz: usize) -> Dense {
     Dense::from_vec(rows, cols, data)
 }
 
+/// Deterministic **block-structured** matrix: 4×4 dense tiles of distinct
+/// values, `active_blocks` tiles per 4-row band, staggered across bands.
+///
+/// Every stored value is distinct (the spike-and-slab `fresh()` counter),
+/// which is the worst case for the codebook formats — CER/CSER degenerate
+/// to one-element runs with massive rank padding — while the tile layout
+/// is exactly what BSR indexes for free: one block-column index per 16
+/// elements, streamed without a gather. Every row carries the same work
+/// (`4 · active_blocks` non-zeros), so its shard plans stay balanced at
+/// every thread count and the BSR-vs-CSR time ranking is
+/// thread-independent. The selector tests pin BSR as the full-family
+/// modeled-time and storage argmin here, with CSR the best of the
+/// pre-BSR formats.
+///
+/// ```
+/// use cer::stats::synth::block_structured;
+///
+/// let m = block_structured(64, 128, 8);
+/// assert_eq!((m.rows(), m.cols()), (64, 128));
+/// // Uniform rows: every row stores exactly 8 tiles x 4 columns.
+/// for r in 0..64 {
+///     let nnz = (0..128).filter(|&c| m.get(r, c) != 0.0).count();
+///     assert_eq!(nnz, 32);
+/// }
+/// ```
+pub fn block_structured(rows: usize, cols: usize, active_blocks: usize) -> Dense {
+    const B: usize = 4;
+    assert!(
+        rows % B == 0 && cols % B == 0 && rows > 0 && cols > 0,
+        "rows and cols must be positive multiples of {B}"
+    );
+    let block_cols = cols / B;
+    let active = active_blocks.clamp(1, block_cols);
+    let mut data = vec![0.0f32; rows * cols];
+    let mut next = 0.0f32;
+    let mut fresh = || {
+        next += 0.5;
+        next + 0.5
+    };
+    for br in 0..rows / B {
+        for j in 0..active {
+            // Spread the band's tiles evenly, staggered per band.
+            let bc = (j * block_cols / active + br) % block_cols;
+            for lr in 0..B {
+                for lc in 0..B {
+                    data[(br * B + lr) * cols + bc * B + lc] = fresh();
+                }
+            }
+        }
+    }
+    Dense::from_vec(rows, cols, data)
+}
+
+/// Deterministic **ternary** matrix over {−α, 0, +α} with α = 0.5.
+///
+/// Every fourth row is *mixed*: `cols/4` positive entries and `cols/16`
+/// negative ones. The remaining rows carry only the minority sign
+/// (`max(1, cols/24)` negatives each). Globally +α is the majority sign,
+/// so CER's frequency-major codebook ranks it first and must emit an
+/// empty padded run for +α in every minority-only row; CSER pays a
+/// per-run ΩI instead. TNN stores one magnitude slot per row and splits
+/// its column list by sign — the minority-only rows cost a single
+/// segment and the whole matrix a one-entry codebook. The selector tests
+/// pin TNN as the full-family storage argmin here, with CSER the best of
+/// the pre-TNN formats.
+///
+/// ```
+/// use cer::stats::synth::ternary;
+///
+/// let m = ternary(64, 128);
+/// assert_eq!((m.rows(), m.cols()), (64, 128));
+/// assert!(m.data().iter().all(|&v| v == 0.0 || v == 0.5 || v == -0.5));
+/// // Mixed row 0: 32 positives, 8 negatives.
+/// assert_eq!((0..128).filter(|&c| m.get(0, c) > 0.0).count(), 32);
+/// assert_eq!((0..128).filter(|&c| m.get(0, c) < 0.0).count(), 8);
+/// // Minority-only row 1: 5 negatives, no positives.
+/// assert_eq!((0..128).filter(|&c| m.get(1, c) < 0.0).count(), 5);
+/// assert_eq!((0..128).filter(|&c| m.get(1, c) > 0.0).count(), 0);
+/// ```
+pub fn ternary(rows: usize, cols: usize) -> Dense {
+    assert!(rows >= 4 && cols >= 16, "need mixed and minority rows");
+    let alpha = 0.5f32;
+    let npos = cols / 4;
+    let nneg = (cols / 16).max(1);
+    let k_minor = (cols / 24).max(1);
+    let mut data = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        if r % 4 == 0 {
+            // Mixed row: positives on the low even columns, negatives on
+            // the low odd ones — disjoint by parity.
+            for j in 0..npos {
+                data[r * cols + 2 * j] = alpha;
+            }
+            for j in 0..nneg {
+                data[r * cols + 2 * j + 1] = -alpha;
+            }
+        } else {
+            // Minority-sign-only row: spread evenly, staggered per row.
+            for j in 0..k_minor {
+                let c = (j * cols / k_minor + r) % cols;
+                data[r * cols + c] = -alpha;
+            }
+        }
+    }
+    Dense::from_vec(rows, cols, data)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::costmodel::DistStats;
+
+    #[test]
+    fn block_structured_is_uniform_and_distinct() {
+        let m = block_structured(64, 128, 8);
+        let s = DistStats::measure(&m);
+        // 64 rows x 32 stored cells, all distinct, plus the zero.
+        assert_eq!(s.k, 64 * 32 + 1);
+        assert!((s.p0 - (1.0 - 32.0 / 128.0)).abs() < 1e-12);
+        // Deterministic: two calls are bit-identical.
+        assert_eq!(m.data(), block_structured(64, 128, 8).data());
+        // Active blocks clamp to the available block columns.
+        let tiny = block_structured(4, 8, 100);
+        assert_eq!(
+            (0..8).filter(|&c| tiny.get(0, c) != 0.0).count(),
+            8,
+            "both block columns active"
+        );
+    }
+
+    #[test]
+    fn ternary_majority_sign_is_positive() {
+        let m = ternary(64, 128);
+        let s = DistStats::measure(&m);
+        assert_eq!(s.k, 3, "alphabet is exactly {{-a, 0, +a}}");
+        let pos = m.data().iter().filter(|&&v| v > 0.0).count();
+        let neg = m.data().iter().filter(|&&v| v < 0.0).count();
+        // 16 mixed rows x 32 positives; 16x8 + 48x5 negatives.
+        assert_eq!(pos, 512);
+        assert_eq!(neg, 368);
+        assert!(pos > neg, "+a must be the global majority sign");
+        assert_eq!(m.data(), ternary(64, 128).data());
+    }
 
     #[test]
     fn hits_requested_entropy_and_sparsity() {

@@ -1,0 +1,309 @@
+//! Cross-format differential harness — the format family's citizenship
+//! test.
+//!
+//! Every assertion below iterates [`FormatKind::ALL`] and reaches each
+//! format only through the type-erased [`AnyMatrix`] surface: encoding,
+//! losslessness, storage accounting, pack codecs (owned and mapped),
+//! serial/sharded/stolen execution, fused epilogues, and multi-rhs
+//! products. There is **no per-format branch anywhere in this file** —
+//! a seventh format added to `FormatKind::ALL` runs the entire gauntlet
+//! automatically and fails it until every dispatch arm, codec, and
+//! work-prefix entry is implemented.
+//!
+//! The corpus is adversarial by construction: all-zero matrices, empty
+//! rows between populated ones, a single dense row in a sea of zeros,
+//! block-aligned and block-misaligned tile patterns, pure ternary
+//! {-a, 0, +a} matrices, a non-zero dominant value (the Ω[0]-correction
+//! regime), and a 70k-column skinny matrix that forces u32 column
+//! indices. Shapes straddle the u8/u16/u32 index-width boundaries.
+//!
+//! Bit-identity assertions (`assert_eq!`) state the repo's determinism
+//! contract: range/shard/steal composition and fused epilogues must
+//! reproduce the serial scalar kernel bit for bit. Accuracy against the
+//! f64 oracle is the only tolerance-based check.
+
+use cer::exec::{StealPlan, ThreadPool};
+use cer::formats::{Dense, FormatKind};
+use cer::kernels::{AnyMatrix, Epilogue};
+use cer::pack::map::PackMap;
+use cer::pack::Pack;
+use cer::stats::synth::{block_structured, ternary};
+use cer::util::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+const BATCHES: [usize; 3] = [1, 3, 8];
+const STEAL_CHUNK_WORK: u64 = 512;
+
+/// The adversarial corpus. Deterministic (one seed, fixed order) so a
+/// failure names a reproducible matrix.
+fn corpus() -> Vec<(String, Dense)> {
+    let mut rng = Rng::new(0xF0FA);
+    let mut cases: Vec<(String, Dense)> = Vec::new();
+
+    // Degenerate mass: every row empty.
+    cases.push(("all-zero 5x9".into(), Dense::zeros(5, 9)));
+
+    // Empty rows interleaved with populated ones (u8 indices).
+    {
+        let (rows, cols) = (8usize, 40usize);
+        let levels = [1.0f32, -0.5, 0.75];
+        let mut data = vec![0.0f32; rows * cols];
+        for r in [1usize, 2, 4, 5, 6] {
+            for _ in 0..10 {
+                data[r * cols + rng.below(cols)] = levels[rng.below(levels.len())];
+            }
+        }
+        cases.push(("empty-rows 8x40".into(), Dense::from_vec(rows, cols, data)));
+    }
+
+    // One fully dense row, everything else empty (u16 indices).
+    {
+        let (rows, cols) = (6usize, 300usize);
+        let levels = [0.5f32, -1.5, 2.0, 0.25, -0.25, 1.0, 3.0];
+        let mut data = vec![0.0f32; rows * cols];
+        for c in 0..cols {
+            data[2 * cols + c] = levels[c % levels.len()];
+        }
+        cases.push(("single-dense-row 6x300".into(), Dense::from_vec(rows, cols, data)));
+    }
+
+    // Tile-aligned block structure — the BSR-friendly regime.
+    cases.push(("block-aligned 16x32".into(), block_structured(16, 32, 4)));
+
+    // Dense patches deliberately off the 4x4 grid, with odd dims, so a
+    // block encoder must handle partial edge tiles and straddled tiles.
+    {
+        let (rows, cols) = (18usize, 37usize);
+        let levels = [0.5f32, -1.0, 2.0, 0.25];
+        let mut data = vec![0.0f32; rows * cols];
+        for (pi, &(r0, c0)) in [(1usize, 3usize), (5, 17), (9, 30), (14, 0)].iter().enumerate() {
+            for dr in 0..3 {
+                for dc in 0..5 {
+                    data[(r0 + dr) * cols + c0 + dc] = levels[(pi + dr + dc) % levels.len()];
+                }
+            }
+        }
+        cases.push(("block-misaligned 18x37".into(), Dense::from_vec(rows, cols, data)));
+    }
+
+    // Pure ternary {-a, 0, +a} — the TNN-friendly regime.
+    cases.push(("ternary 8x32".into(), ternary(8, 32)));
+
+    // Dominant non-zero value: CER/CSER carry the Ω[0] decomposition
+    // correction through every execution path tested below.
+    {
+        let (rows, cols) = (9usize, 14usize);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                if rng.f64() < 0.6 {
+                    2.0
+                } else {
+                    [0.5f32, -0.25, 1.0][rng.below(3)]
+                }
+            })
+            .collect();
+        cases.push(("nonzero-dominant 9x14".into(), Dense::from_vec(rows, cols, data)));
+    }
+
+    // Skinny and very wide: u32 column indices, two-row shard plans.
+    {
+        let (rows, cols) = (2usize, 70_000usize);
+        let levels = [1.0f32, -1.0, 0.5];
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                if rng.f64() < 0.05 {
+                    levels[rng.below(levels.len())]
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        cases.push(("skinny-u32 2x70000".into(), Dense::from_vec(rows, cols, data)));
+    }
+
+    cases
+}
+
+fn seeded_x(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f32() - 0.5).collect()
+}
+
+/// Naive f64 oracle for the accuracy check.
+fn oracle(m: &Dense, x: &[f32]) -> Vec<f32> {
+    (0..m.rows())
+        .map(|r| {
+            m.row(r)
+                .iter()
+                .zip(x)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+#[test]
+fn every_format_is_lossless_and_accounts_its_bytes_exactly() {
+    for (name, m) in corpus() {
+        for kind in FormatKind::ALL {
+            let enc = AnyMatrix::encode(kind, &m);
+            let tag = format!("{kind:?} {name}");
+            assert_eq!(enc.kind(), kind, "{tag}");
+            assert_eq!((enc.rows(), enc.cols()), (m.rows(), m.cols()), "{tag}");
+            // Losslessness: decode reproduces the dense original exactly.
+            assert_eq!(enc.to_dense(), m, "{tag}: lossy encoding");
+            // Measured bytes on disk == the analytic storage accounting.
+            let mut buf = Vec::new();
+            let emitted = enc.encode_into(&mut buf);
+            assert_eq!(emitted.total, buf.len(), "{tag}: byte accounting");
+            assert_eq!(
+                emitted.arrays as u64 * 8,
+                enc.storage().total_bits(),
+                "{tag}: disk arrays diverge from the storage model"
+            );
+            // Owned decode round-trips, and re-encoding is byte-identical.
+            let dec = AnyMatrix::decode_from(&buf).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_eq!(dec.kind(), kind, "{tag}");
+            assert_eq!(dec.to_dense(), m, "{tag}: decode drifted");
+            let mut buf2 = Vec::new();
+            dec.encode_into(&mut buf2);
+            assert_eq!(buf, buf2, "{tag}: re-encode not byte-identical");
+        }
+    }
+}
+
+#[test]
+fn mapped_sections_decode_bit_identically_to_owned() {
+    for (name, m) in corpus() {
+        for kind in FormatKind::ALL {
+            let tag = format!("{kind:?} {name}");
+            let pack = Pack::from_layers(
+                "format-generic",
+                "fixed (test)",
+                vec![(
+                    "l0".to_string(),
+                    AnyMatrix::encode(kind, &m),
+                    vec![0.0; m.rows()],
+                )],
+            );
+            let (bytes, _) = pack.to_bytes();
+            let map = PackMap::from_bytes(&bytes);
+            let mapped = Pack::from_map(&map).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            let owned = Pack::from_bytes(&bytes).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_eq!(mapped.layers[0].matrix.to_dense(), m, "{tag}: mapped decode");
+            // Mapped and owned matrices are the same operator, bit for bit.
+            let x = seeded_x(m.cols(), 0x3A9);
+            let mut y_owned = vec![0.0f32; m.rows()];
+            let mut y_mapped = vec![0.0f32; m.rows()];
+            owned.layers[0].matrix.matvec(&x, &mut y_owned);
+            mapped.layers[0].matrix.matvec(&x, &mut y_mapped);
+            assert_eq!(y_owned, y_mapped, "{tag}: mapped matvec drifted");
+            // A mapped pack re-encodes to the identical file image.
+            let (bytes2, _) = mapped.to_bytes();
+            assert_eq!(bytes, bytes2, "{tag}: mapped re-encode not byte-identical");
+        }
+    }
+}
+
+#[test]
+fn sharded_and_stolen_execution_is_bit_identical_across_the_family() {
+    for (name, m) in corpus() {
+        let x = seeded_x(m.cols(), 0xD1FF);
+        for kind in FormatKind::ALL {
+            let enc = AnyMatrix::encode(kind, &m);
+            let mut want = vec![0.0f32; m.rows()];
+            enc.matvec(&x, &mut want);
+            let prefix = enc.work_prefix();
+            assert_eq!(prefix.len(), m.rows() + 1, "{kind:?} {name}: work prefix shape");
+
+            for t in THREADS {
+                let tag = format!("{kind:?} {name} t={t}");
+                let plan = enc.shard_plan(t);
+                let pool = ThreadPool::new(t.saturating_sub(1));
+                let mut y = vec![0.0f32; m.rows()];
+                enc.matvec_sharded(&x, &mut y, &plan, &pool);
+                assert_eq!(y, want, "{tag}: sharded matvec drifted");
+
+                // Steal-granularity composition: computing every head and
+                // pooled chunk independently through the range entry must
+                // tile the output exactly — the property that makes work
+                // stealing safe for this format.
+                let sp = StealPlan::from_plan(&plan, &prefix, STEAL_CHUNK_WORK);
+                let mut stolen = vec![0.0f32; m.rows()];
+                let mut ranges: Vec<std::ops::Range<usize>> =
+                    (0..sp.head_count()).map(|s| sp.head(s)).collect();
+                ranges.extend((0..sp.chunk_count()).map(|i| sp.chunk(i)));
+                for r in ranges {
+                    let (start, end) = (r.start, r.end);
+                    enc.matvec_range(r, &x, &mut stolen[start..end]);
+                }
+                assert_eq!(stolen, want, "{tag}: steal-chunk composition drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_products_and_fused_epilogues_are_bit_identical() {
+    for (name, m) in corpus() {
+        let (rows, cols) = (m.rows(), m.cols());
+        let bias: Vec<f32> = (0..rows).map(|r| r as f32 * 0.03 - 0.2).collect();
+        for kind in FormatKind::ALL {
+            let enc = AnyMatrix::encode(kind, &m);
+            for l in BATCHES {
+                let x = seeded_x(cols * l, 0xBA7C + l as u64);
+                let mut want = vec![0.0f32; rows * l];
+                enc.matmul_colmajor(&x, &mut want, l);
+
+                // Parallel batched product == serial, bit for bit.
+                for t in [2usize, 4, 7] {
+                    let tag = format!("{kind:?} {name} l={l} t={t}");
+                    let plan = enc.shard_plan(t);
+                    let pool = ThreadPool::new(t - 1);
+                    let mut y = vec![0.0f32; rows * l];
+                    enc.matmul_colmajor_sharded(&x, &mut y, l, &plan, &pool);
+                    assert_eq!(y, want, "{tag}: sharded matmul drifted");
+                }
+
+                // Fused bias+ReLU == unfused + the historical post-pass.
+                for relu in [false, true] {
+                    let tag = format!("{kind:?} {name} l={l} relu={relu}");
+                    let mut post = want.clone();
+                    for c in 0..l {
+                        for r in 0..rows {
+                            let v = &mut post[c * rows + r];
+                            *v += bias[r];
+                            if relu && *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    let epi = Epilogue { bias: &bias, relu };
+                    let mut fused = vec![0.0f32; rows * l];
+                    enc.matmul_colmajor_epi(&x, &mut fused, l, Some(&epi));
+                    assert_eq!(fused, post, "{tag}: fused epilogue drifted");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_format_tracks_the_f64_oracle() {
+    for (name, m) in corpus() {
+        let x = seeded_x(m.cols(), 0x0AC1E);
+        let want = oracle(&m, &x);
+        for kind in FormatKind::ALL {
+            let enc = AnyMatrix::encode(kind, &m);
+            let mut y = vec![0.0f32; m.rows()];
+            enc.matvec(&x, &mut y);
+            for (i, (got, exact)) in y.iter().zip(&want).enumerate() {
+                let tol = 1e-4 * (1.0 + exact.abs());
+                assert!(
+                    (got - exact).abs() <= tol,
+                    "{kind:?} {name}: row {i}: {got} vs oracle {exact}"
+                );
+            }
+        }
+    }
+}

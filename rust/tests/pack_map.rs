@@ -51,19 +51,17 @@ fn sample_matrix(rng: &mut Rng, rows: usize, cols: usize, implicit_zero: bool) -
     Dense::from_vec(rows, cols, data)
 }
 
-/// A 4-layer pack using every format once (chained dims), with biases.
-fn four_format_pack(implicit_zero: bool) -> Pack {
+/// A pack using every format in the family once (chained dims), with
+/// biases — one layer per [`FormatKind::ALL`] entry, in order, so layer 1
+/// is always CSR (the byte-sharing test reads into it) and every new
+/// format's section codec is exercised by each suite below.
+fn family_pack(implicit_zero: bool) -> Pack {
     let mut rng = Rng::new(if implicit_zero { 0x11AA } else { 0x22BB });
-    let dims = [(20usize, 30usize), (12, 20), (9, 12), (5, 9)];
-    let kinds = [
-        FormatKind::Dense,
-        FormatKind::Csr,
-        FormatKind::Cer,
-        FormatKind::Cser,
-    ];
+    let dims = [(24usize, 30usize), (20, 24), (12, 20), (9, 12), (8, 9), (5, 8)];
+    assert_eq!(dims.len(), FormatKind::COUNT, "one layer per format");
     let layers = dims
         .iter()
-        .zip(kinds)
+        .zip(FormatKind::ALL)
         .enumerate()
         .map(|(i, (&(m, n), kind))| {
             (
@@ -79,7 +77,7 @@ fn four_format_pack(implicit_zero: bool) -> Pack {
 #[test]
 fn mapped_reader_bit_identical_to_owned_across_formats_and_regimes() {
     for implicit_zero in [true, false] {
-        let pack = four_format_pack(implicit_zero);
+        let pack = family_pack(implicit_zero);
         let (bytes, _) = pack.to_bytes();
         let path = tmp_path(&format!("equiv-{implicit_zero}"));
         std::fs::write(&path, &bytes).unwrap();
@@ -148,7 +146,7 @@ fn mapped_reader_handles_every_index_width() {
 
 #[test]
 fn engines_on_one_map_share_physical_bytes() {
-    let pack = four_format_pack(true);
+    let pack = family_pack(true);
     let (bytes, _) = pack.to_bytes();
     let path = tmp_path("share");
     std::fs::write(&path, &bytes).unwrap();
@@ -178,7 +176,7 @@ fn engines_on_one_map_share_physical_bytes() {
 
 #[test]
 fn worker_set_serves_one_mapped_pack_bit_identically() {
-    let pack = four_format_pack(false);
+    let pack = family_pack(false);
     let (bytes, _) = pack.to_bytes();
     let path = tmp_path("workers");
     std::fs::write(&path, &bytes).unwrap();
@@ -267,7 +265,7 @@ fn reselection_on_a_mapped_engine_stays_correct() {
     use cer::coordinator::Objective;
     use cer::costmodel::{EnergyModel, TimeModel};
 
-    let pack = four_format_pack(true);
+    let pack = family_pack(true);
     let (bytes, _) = pack.to_bytes();
     let map = PackMap::from_bytes(&bytes);
     let mut e = Engine::from_pack_map(&map).unwrap();
@@ -289,7 +287,7 @@ fn reselection_on_a_mapped_engine_stays_correct() {
 // ---------------------------------------------------------------------
 
 fn sample_bytes() -> Vec<u8> {
-    four_format_pack(true).to_bytes().0
+    family_pack(true).to_bytes().0
 }
 
 #[test]

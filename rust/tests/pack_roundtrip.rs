@@ -1,5 +1,7 @@
 //! `.cerpack` integration tests: seeded-RNG round-trip properties across
-//! all four formats and all index widths (save → load must be bit-exact),
+//! the whole format family — every [`FormatKind::ALL`] entry, including
+//! the BSR and TNN section codecs — and all index widths (save → load
+//! must be bit-exact),
 //! the paper-example acceptance check (measured on-disk size vs the
 //! analytic `StorageBreakdown`), and corruption handling (truncated file,
 //! bad magic, flipped byte → clean typed errors, never UB or garbage

@@ -11,12 +11,17 @@
 //! * Randomized property sweep: across the (H, p0) plane, time at any
 //!   thread count never exceeds the serial estimate plus the dispatch
 //!   overhead, and intrinsic criteria never move.
+//! * Pinned format-family flips: the block-structured diagnostic matrix
+//!   moves the time winner CSR -> BSR, and the ternary diagnostic matrix
+//!   moves the storage winner CSER -> TNN (and the time winner to TNN),
+//!   with the restricted argmin over the original four formats asserted
+//!   so each flip is attributable to the new format alone.
 
 use cer::coordinator::{select_format, select_format_in, Engine, Objective};
 use cer::costmodel::{Criterion4, EnergyModel, ExecContext, TimeModel};
 use cer::formats::FormatKind;
 use cer::kernels::AnyMatrix;
-use cer::stats::synth::{spike_and_slab, PlanePoint};
+use cer::stats::synth::{block_structured, spike_and_slab, ternary, PlanePoint};
 use cer::util::Rng;
 
 fn models() -> (EnergyModel, TimeModel) {
@@ -156,4 +161,87 @@ fn plane_sweep_flips_are_always_justified() {
         }
     }
     assert!(flips >= 1, "the spike-and-slab case must flip");
+}
+
+fn family_index(k: FormatKind) -> usize {
+    FormatKind::ALL.iter().position(|&f| f == k).unwrap()
+}
+
+/// The block-structured diagnostic matrix is the workload BSR was built
+/// for: dense 4x4 tiles amortize one block-column index over sixteen
+/// values, so BSR drops 3/4 of CSR's index loads at identical value
+/// traffic. Among the paper's original four formats CSR wins the
+/// modeled-time argmin; adding BSR to the family flips the winner at
+/// every thread count (the rows are uniform, so sharding preserves the
+/// serial ordering).
+#[test]
+fn block_structured_flips_the_time_winner_from_csr_to_bsr() {
+    let (e, t) = models();
+    let m = block_structured(64, 128, 8);
+    for threads in [1usize, 2, 4, 8] {
+        let (kind, crits) =
+            select_format_in(&m, &e, &t, Objective::Time, ExecContext::with_threads(threads));
+        assert_eq!(kind, FormatKind::Bsr, "@{threads} threads");
+        let restricted = (0..4)
+            .min_by(|&a, &b| crits[a].time_ns.total_cmp(&crits[b].time_ns))
+            .unwrap();
+        assert_eq!(
+            FormatKind::ALL[restricted],
+            FormatKind::Csr,
+            "@{threads} threads: the flip must be attributable to BSR alone"
+        );
+        assert!(
+            crits[family_index(FormatKind::Bsr)].time_ns
+                < crits[family_index(FormatKind::Csr)].time_ns,
+            "@{threads} threads: BSR must beat CSR strictly"
+        );
+    }
+    // Tile-aligned structure also wins the storage argmin outright: the
+    // values array is identical to CSR's but the per-nonzero column
+    // indices collapse to one index per 4x4 block.
+    let (kind, crits) = select_format(&m, &e, &t, Objective::Storage);
+    assert_eq!(kind, FormatKind::Bsr);
+    assert!(
+        crits[family_index(FormatKind::Bsr)].storage_bits
+            < crits[family_index(FormatKind::Csr)].storage_bits
+    );
+}
+
+/// On the ternary diagnostic matrix ({-a, 0, +a} entries) the
+/// sign-partitioned TNN layout stores one shared magnitude plus a
+/// per-row sign split where CSER spends a codebook index per run, so
+/// TNN flips the storage argmin away from CSER. It also flips the
+/// serial modeled-time argmin: TNN spends one multiply per row against
+/// CER's one per run and CSR's one per nonzero.
+#[test]
+fn ternary_flips_the_storage_winner_from_cser_to_tnn() {
+    let (e, t) = models();
+    let m = ternary(64, 128);
+    let (kind, crits) = select_format(&m, &e, &t, Objective::Storage);
+    assert_eq!(kind, FormatKind::Tnn);
+    let restricted = (0..4)
+        .min_by(|&a, &b| crits[a].storage_bits.cmp(&crits[b].storage_bits))
+        .unwrap();
+    assert_eq!(
+        FormatKind::ALL[restricted],
+        FormatKind::Cser,
+        "the flip must be attributable to TNN alone"
+    );
+    // Storage is intrinsic: the winner and its bit count are identical
+    // at every thread count.
+    for threads in [2usize, 4, 8] {
+        let (k, c) =
+            select_format_in(&m, &e, &t, Objective::Storage, ExecContext::with_threads(threads));
+        assert_eq!(k, FormatKind::Tnn, "@{threads} threads");
+        assert_eq!(
+            c[family_index(FormatKind::Tnn)].storage_bits,
+            crits[family_index(FormatKind::Tnn)].storage_bits
+        );
+    }
+    let (kt, ct) = select_format(&m, &e, &t, Objective::Time);
+    assert_eq!(kt, FormatKind::Tnn);
+    assert!(
+        ct[family_index(FormatKind::Tnn)].time_ns < ct[family_index(FormatKind::Cer)].time_ns,
+        "TNN must beat CER strictly on serial modeled time"
+    );
 }

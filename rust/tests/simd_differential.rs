@@ -80,8 +80,8 @@ fn matvec_simd_matches_scalar_across_formats_and_index_widths() {
 
             // The Scalar backend of the dispatch layer must be the very
             // same code path as the plain kernels — bit-identical, not
-            // merely close. (Cer/Cser have no SIMD variant and fall
-            // back to scalar, so for them even the Simd request is
+            // merely close. (Cer/Cser/Bsr/Tnn have no SIMD variant and
+            // fall back to scalar, so for them even the Simd request is
             // bit-identical; the tolerance check above still applies.)
             let mut scalar = vec![0.0f32; rows];
             a.matvec_backend(KernelBackend::Scalar, &x, &mut scalar);
@@ -89,6 +89,48 @@ fn matvec_simd_matches_scalar_across_formats_and_index_widths() {
                 reference,
                 scalar,
                 "{} {rows}x{cols}: scalar backend drifted from the reference",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Formats without a SIMD variant must fall back to the *identical*
+/// scalar code path when the SIMD backend is requested — `assert_eq!`,
+/// not tolerance. This is the wildcard `_ =>` arm of the backend
+/// dispatch: a seventh format added without a SIMD kernel inherits the
+/// same guarantee automatically, while dense/CSR (which do vectorize)
+/// are excluded here because their sums legitimately reassociate.
+#[test]
+fn formats_without_simd_kernels_fall_back_bit_identically() {
+    let no_simd = [FormatKind::Cer, FormatKind::Cser, FormatKind::Bsr, FormatKind::Tnn];
+    let shapes = [(64usize, 200usize), (48, 700), (2, 70_000)];
+    for (si, &(rows, cols)) in shapes.iter().enumerate() {
+        let m = quantized(rows, cols, 11, 0xFA11 + si as u64);
+        let x = random_x(cols, 0xFA22 + si as u64);
+        for kind in no_simd {
+            let a = AnyMatrix::encode(kind, &m);
+            let mut reference = vec![0.0f32; rows];
+            a.matvec(&x, &mut reference);
+            let mut simd = vec![0.0f32; rows];
+            a.matvec_backend(KernelBackend::Simd, &x, &mut simd);
+            assert_eq!(
+                reference,
+                simd,
+                "{} {rows}x{cols}: SIMD request must be the scalar path, bit for bit",
+                kind.name()
+            );
+            // Same under the sharded SIMD driver: the backend threads
+            // through the shard tasks, and each must hit the scalar arm.
+            let plane = ExecPlane::with_threads(4);
+            let pool = plane.pool().expect("parallel plane has a pool");
+            let plan = a.shard_plan(plane.threads());
+            let mut sharded = vec![0.0f32; rows];
+            a.matvec_sharded_backend(KernelBackend::Simd, &x, &mut sharded, &plan, pool);
+            assert_eq!(
+                reference,
+                sharded,
+                "{} {rows}x{cols}: sharded SIMD request drifted for a scalar-only format",
                 kind.name()
             );
         }

@@ -21,6 +21,7 @@ use cer::coordinator::Engine;
 use cer::exec::{ReplanState, ShardPlan, StealPlan, ThreadPool};
 use cer::formats::{Dense, FormatKind};
 use cer::kernels::AnyMatrix;
+use cer::stats::synth::{block_structured, ternary};
 use cer::util::Rng;
 
 const THREADS: [usize; 3] = [2, 4, 7];
@@ -181,14 +182,28 @@ fn check_exactly_once(sp: &StealPlan, plan: &ShardPlan, tag: &str) {
 #[test]
 fn steal_and_reshard_plans_cover_rows_exactly_once() {
     let mut rng = Rng::new(0xC0FE);
+    let mut cases: Vec<(String, Dense)> = Vec::new();
     for (rows, cols) in [(37usize, 41usize), (64, 120), (128, 1024), (3, 70_000)] {
         for implicit_zero in [true, false] {
-            let m = sample_matrix(rows, cols, implicit_zero, &mut rng);
+            cases.push((
+                format!("{rows}x{cols} implicit_zero={implicit_zero}"),
+                sample_matrix(rows, cols, implicit_zero, &mut rng),
+            ));
+        }
+    }
+    // The diagnostic matrices the BSR/TNN encoders were built for: BSR's
+    // work prefix repeats each block row's tile work for every row it
+    // covers, TNN's counts sign-segment spans — both must chunk and
+    // reshard with the same exactly-once surface as the pointer formats.
+    cases.push(("block-structured 64x128".to_string(), block_structured(64, 128, 8)));
+    cases.push(("ternary 64x128".to_string(), ternary(64, 128)));
+    {
+        for (name, m) in &cases {
             for kind in FormatKind::ALL {
-                let enc = AnyMatrix::encode(kind, &m);
+                let enc = AnyMatrix::encode(kind, m);
                 let prefix = enc.work_prefix();
                 for t in THREADS {
-                    let tag = format!("{kind:?} {rows}x{cols} t={t}");
+                    let tag = format!("{kind:?} {name} t={t}");
                     let plan = enc.shard_plan(t);
                     let sp = StealPlan::from_plan(&plan, &prefix, STEAL_CHUNK_WORK);
                     check_exactly_once(&sp, &plan, &tag);
