@@ -5,12 +5,19 @@
 //! artifact subsystem.
 //!
 //! The `cold_start` section compares the two readers head to head per
-//! network: **owned** (`Engine::from_pack` — read, checksum, decode every
-//! array into heap storage) vs **mmap** (`Engine::from_pack_mmap` — map
-//! the file, checksum once, view the bulk arrays in place), each measured
-//! to engine-built and to **time-to-first-inference** (load + one
-//! batch-1 forward), alongside the measured bytes each path copies onto
-//! the heap ([`Engine::storage_residency`]).
+//! network: **owned** (`PackOptions::new(path).open()` — read, checksum,
+//! decode every array into heap storage) vs **mmap**
+//! (`PackOptions::new(path).mmap(true).open()` — map the file, checksum
+//! once, view the bulk arrays in place), each measured to engine-built
+//! and to **time-to-first-inference** (load + one batch-1 forward),
+//! alongside the measured bytes each path copies onto the heap
+//! ([`Engine::storage_residency`]).
+//!
+//! The `entropy` section writes each pack again with the Huffman-coded
+//! storage tier (`--entropy` / `EncodeOptions { entropy: true }`) and
+//! reports `coded_bytes` (on-disk arrays + code books, gated
+//! lower-is-better) next to the raw bytes, plus `decode_us` — the full
+//! coded cold start (read, checksum, Huffman-decode, engine build).
 //!
 //! Run: `cargo bench --bench pack`
 //!
@@ -21,8 +28,9 @@
 use std::io::Write as _;
 use std::time::Instant;
 
-use cer::coordinator::{Engine, Objective};
+use cer::coordinator::{Engine, Objective, PackOptions};
 use cer::costmodel::{EnergyModel, TimeModel};
+use cer::pack::stream::EncodeOptions;
 use cer::networks::weights::synthesize_zoo_layers;
 use cer::util::bench::fmt_ns;
 use cer::util::human_bytes;
@@ -35,6 +43,18 @@ struct Row {
     array_bytes: u64,
     cold_start_ns: f64,
     save_ns: f64,
+}
+
+/// Entropy-coded tier footprint + decode cost, per network.
+struct EntropyRow {
+    net: String,
+    /// Raw minimal-width array bytes (the uncoded tier's footprint).
+    raw_bytes: u64,
+    /// Coded arrays + shared code books on disk (0 when nothing paid).
+    coded_bytes: u64,
+    coded_streams: usize,
+    /// Full coded cold start: read + checksum + Huffman decode + build.
+    decode_ns: f64,
 }
 
 /// Owned vs mmap cold start, per network.
@@ -68,6 +88,7 @@ fn main() {
     let time = TimeModel::default_model();
     let mut rows: Vec<Row> = Vec::new();
     let mut cold_rows: Vec<ColdRow> = Vec::new();
+    let mut entropy_rows: Vec<EntropyRow> = Vec::new();
 
     // Small nets at full scale, large §V-B nets at `scale`.
     let cases: [(&str, usize); 6] = [
@@ -103,7 +124,7 @@ fn main() {
         let mut load_samples = Vec::new();
         for _ in 0..7 {
             let t0 = Instant::now();
-            let e = Engine::from_pack(&path).expect("cold start");
+            let e = PackOptions::new(&path).open().expect("cold start");
             load_samples.push(t0.elapsed().as_nanos() as f64);
             std::hint::black_box(e.storage_bits());
         }
@@ -117,7 +138,7 @@ fn main() {
         let mut bytes_copied_owned = 0u64;
         for _ in 0..7 {
             let t0 = Instant::now();
-            let mut e = Engine::from_pack(&path).expect("owned cold start");
+            let mut e = PackOptions::new(&path).open().expect("owned cold start");
             owned_samples.push(t0.elapsed().as_nanos() as f64);
             let y = e.forward(&x, 1).expect("forward");
             owned_first.push(t0.elapsed().as_nanos() as f64);
@@ -130,7 +151,7 @@ fn main() {
         let mut mapped_bytes = 0u64;
         for _ in 0..7 {
             let t0 = Instant::now();
-            let mut e = Engine::from_pack_mmap(&path).expect("mmap cold start");
+            let mut e = PackOptions::new(&path).mmap(true).open().expect("mmap cold start");
             mmap_samples.push(t0.elapsed().as_nanos() as f64);
             let y = e.forward(&x, 1).expect("forward");
             mmap_first.push(t0.elapsed().as_nanos() as f64);
@@ -140,6 +161,52 @@ fn main() {
             std::hint::black_box(y);
         }
         std::fs::remove_file(&path).ok();
+
+        // Entropy tier: write the same engine with Huffman coding on,
+        // then time the full coded cold start (decode included).
+        let coded_path = std::env::temp_dir().join(format!(
+            "cer-bench-pack-{}-{net}-coded.cerpack",
+            std::process::id()
+        ));
+        let summary = engine
+            .save_pack_with(
+                &coded_path,
+                spec_used.name,
+                "argmin energy (modeled)",
+                &EncodeOptions { entropy: true },
+            )
+            .expect("coded save");
+        let raw_bytes = summary.manifest.total_array_bytes();
+        let (coded_bytes, coded_streams) = summary
+            .coded
+            .as_ref()
+            .map(|r| (r.total_on_disk_bytes(), r.coded_streams))
+            .unwrap_or((0, 0));
+        let mut decode_samples = Vec::new();
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            let e = PackOptions::new(&coded_path).open().expect("coded cold start");
+            decode_samples.push(t0.elapsed().as_nanos() as f64);
+            std::hint::black_box(e.storage_bits());
+        }
+        std::fs::remove_file(&coded_path).ok();
+        let ent = EntropyRow {
+            net: spec_used.name.to_string(),
+            raw_bytes,
+            coded_bytes,
+            coded_streams,
+            decode_ns: median(decode_samples),
+        };
+        println!(
+            "{:<14}  entropy tier: {} coded vs {} raw ({} stream(s)), coded cold start {:>10}",
+            ent.net,
+            human_bytes(ent.coded_bytes as f64),
+            human_bytes(ent.raw_bytes as f64),
+            ent.coded_streams,
+            fmt_ns(ent.decode_ns),
+        );
+        entropy_rows.push(ent);
+
         let cold = ColdRow {
             net: spec_used.name.to_string(),
             owned_ns: median(owned_samples),
@@ -227,12 +294,26 @@ fn main() {
             if i + 1 < cold_rows.len() { "," } else { "" },
         ));
     }
+    json.push_str("],\n\"entropy\": [\n");
+    for (i, r) in entropy_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"net\": \"{}\", \"raw_bytes\": {}, \"coded_bytes\": {}, \
+             \"coded_streams\": {}, \"decode_us\": {:.3}}}{}\n",
+            r.net,
+            r.raw_bytes,
+            r.coded_bytes,
+            r.coded_streams,
+            r.decode_ns / 1e3,
+            if i + 1 < entropy_rows.len() { "," } else { "" },
+        ));
+    }
     json.push_str("]\n}\n");
     let mut f = std::fs::File::create("BENCH_pack.json").expect("BENCH_pack.json");
     f.write_all(json.as_bytes()).expect("write BENCH_pack.json");
     println!(
-        "wrote BENCH_pack.json ({} networks, {} cold-start rows)",
+        "wrote BENCH_pack.json ({} networks, {} cold-start rows, {} entropy rows)",
         rows.len(),
-        cold_rows.len()
+        cold_rows.len(),
+        entropy_rows.len()
     );
 }

@@ -10,7 +10,7 @@
 
 use std::time::Instant;
 
-use cer::coordinator::{Engine, Objective};
+use cer::coordinator::{Engine, Objective, PackOptions};
 use cer::costmodel::{EnergyModel, TimeModel};
 use cer::networks::weights::synthesize_zoo_layers;
 use cer::util::{human_bytes, Rng};
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Cold start: load without re-running any compression.
     let t0 = Instant::now();
-    let mut cold = Engine::from_pack(&path)?;
+    let mut cold = PackOptions::new(&path).open()?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "cold start in {load_ms:.2} ms vs {compress_ms:.0} ms compress+select ({:.0}x faster)",

@@ -37,7 +37,7 @@
 //! [`Engine::forward_reference`] for differential tests and the
 //! fused-vs-unfused benchmark (`cargo bench --bench dot`).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -45,11 +45,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select_format_in, Objective};
-use crate::costmodel::{EnergyModel, ExecContext, TimeModel};
+use crate::costmodel::{Calibration, EnergyModel, ExecContext, TimeModel};
 use crate::exec::{self, ExecPlane, Pipeline, ReplanState, ShardPlan, StealPlan};
 use crate::formats::{Dense, FormatKind, Storage, StorageResidency};
 use crate::kernels::{AnyMatrix, Epilogue, KernelBackend};
 use crate::pack::map::PackMap;
+use crate::pack::stream::{EncodeOptions, PackSummary};
 use crate::pack::{self, LayerView, Manifest, Pack};
 use crate::runtime::{Arg, MlpArtifacts, XlaRuntime};
 
@@ -1138,49 +1139,64 @@ impl Engine {
         Ok((bytes.len() as u64, manifest))
     }
 
-    /// Cold-start a native engine from a `.cerpack` artifact: layers come
-    /// back in their stored (already-selected) formats — no pruning,
-    /// clustering, re-encoding or format selection runs. This is the
-    /// **copying** reader: every array is decoded into owned heap
-    /// storage. See [`Engine::from_pack_mmap`] for the zero-copy path.
+    /// Serialize the engine to a `.cerpack` artifact through the
+    /// streaming writer, with explicit encode options — the path that
+    /// can write the entropy-coded section tier
+    /// ([`EncodeOptions::entropy`]). Peak memory is one encoded layer
+    /// section (plus the manifest), not the whole file image. Returns
+    /// the [`PackSummary`]: file size, the manifest as written, and the
+    /// coded-tier accounting when any section took it.
+    pub fn save_pack_with(
+        &self,
+        path: &Path,
+        network: &str,
+        rationale: &str,
+        opts: &EncodeOptions,
+    ) -> Result<PackSummary> {
+        let views: Vec<LayerView<'_>> = self
+            .layers
+            .iter()
+            .map(|l| LayerView {
+                name: &l.name,
+                matrix: &l.matrix,
+                bias: &l.bias,
+            })
+            .collect();
+        let manifest = pack::build_manifest(network, rationale, &views);
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        pack::stream::write_pack(file, &manifest, views, opts)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Cold-start a native engine from a `.cerpack` artifact through the
+    /// copying reader.
+    #[deprecated(since = "0.2.0", note = "use `PackOptions::new(path).open()`")]
     pub fn from_pack(path: &Path) -> Result<Engine> {
-        let pack = Pack::read(path).with_context(|| format!("loading {}", path.display()))?;
-        Ok(Engine::from_pack_data(pack))
+        PackOptions::new(path).open()
     }
 
-    /// Zero-copy cold start: map the `.cerpack` (`mmap(2)` where
-    /// available, aligned heap read otherwise) and build the engine over
-    /// typed views into the mapping — no per-array heap copy for values,
-    /// codebooks, column indices, biases, or 32-bit-wide pointer arrays
-    /// (narrower pointer arrays are widened, an O(rows) copy). Output is
-    /// bit-identical to [`Engine::from_pack`]: the kernels run the same
-    /// bytes either way.
-    ///
-    /// The mapping is shared: call [`Engine::from_pack_map`] with
-    /// [`Engine::pack_map`]'s `Arc` to stand up further engines (serving
-    /// workers) over the same physical copy of the weights.
-    ///
-    /// Standard mmap contract: the pack file must not be rewritten in
-    /// place while mapped — replace packs by writing a new file and
-    /// renaming it over the old path (see [`crate::pack::map`]).
+    /// Zero-copy cold start over a private mapping of the pack file.
+    #[deprecated(since = "0.2.0", note = "use `PackOptions::new(path).mmap(true).open()`")]
     pub fn from_pack_mmap(path: &Path) -> Result<Engine> {
-        let map = PackMap::open(path).with_context(|| format!("mapping {}", path.display()))?;
-        Engine::from_pack_map(&map)
+        PackOptions::new(path).mmap(true).open()
     }
 
-    /// Cold-start a native engine over an already-mapped pack. Decodes
-    /// the structure again (headers and narrow pointer arrays — cheap)
-    /// but every bulk array is a view into `map`, so N engines built
-    /// from one map share one physical copy of the weights.
+    /// Cold-start a native engine over an already-mapped pack.
+    #[deprecated(since = "0.2.0", note = "use `PackOptions::from_map(map).open()`")]
     pub fn from_pack_map(map: &Arc<PackMap>) -> Result<Engine> {
-        let pack = Pack::from_map(map).context("decoding mapped cerpack")?;
-        let mut engine = Engine::from_pack_data(pack);
-        engine.map = Some(map.clone());
-        Ok(engine)
+        PackOptions::from_map(map).open()
     }
 
     /// Build a native engine from an already-decoded [`Pack`].
+    #[deprecated(since = "0.2.0", note = "use `PackOptions::from_data(pack).open()`")]
     pub fn from_pack_data(pack: Pack) -> Engine {
+        Engine::from_decoded_pack(pack)
+    }
+
+    /// The one place a decoded [`Pack`] becomes an [`Engine`] — every
+    /// [`PackOptions`] source funnels through here.
+    fn from_decoded_pack(pack: Pack) -> Engine {
         Engine::assemble(
             pack.layers
                 .into_iter()
@@ -1224,6 +1240,186 @@ impl Engine {
     /// Formats in use, per layer.
     pub fn formats(&self) -> Vec<FormatKind> {
         self.layers.iter().map(|l| l.matrix.kind()).collect()
+    }
+}
+
+/// Where [`PackOptions::open`] finds the pack bytes.
+enum PackSource {
+    /// A `.cerpack` file on disk (read owned, or mapped with
+    /// [`PackOptions::mmap`]).
+    Path(PathBuf),
+    /// An existing shared mapping — further engines over the same
+    /// physical copy of the weights.
+    Map(Arc<PackMap>),
+    /// An already-decoded in-memory pack.
+    Data(Box<Pack>),
+}
+
+/// The one way to open a `.cerpack` as an [`Engine`].
+///
+/// Collapses the former `Engine::{from_pack, from_pack_mmap,
+/// from_pack_map, from_pack_data}` constructor family into a single
+/// builder: pick a source, flip the knobs that used to require
+/// post-construction setter calls, and [`PackOptions::open`].
+///
+/// ```no_run
+/// # use cer::coordinator::PackOptions;
+/// # use std::path::Path;
+/// # fn main() -> anyhow::Result<()> {
+/// let engine = PackOptions::new(Path::new("net.cerpack"))
+///     .mmap(true)      // zero-copy views into a shared mapping
+///     .prefault(true)  // madvise(WILLNEED) the mapping up front
+///     .threads(8)      // exec plane lanes (0 = all cores)
+///     .open()?;
+/// # drop(engine); Ok(())
+/// # }
+/// ```
+///
+/// Layers always come back in their stored formats; format
+/// re-selection runs only when [`PackOptions::objective`] or
+/// [`PackOptions::calibration`] asks for it.
+pub struct PackOptions {
+    source: PackSource,
+    mmap: bool,
+    prefault: bool,
+    threads: Option<usize>,
+    kernel: Option<KernelBackend>,
+    objective: Option<Objective>,
+    calibration: Option<Calibration>,
+}
+
+impl PackOptions {
+    /// Open the pack file at `path`. Defaults to the **copying** reader
+    /// (every array decoded into owned heap storage); `.mmap(true)`
+    /// switches to zero-copy views into a private mapping.
+    pub fn new(path: impl AsRef<Path>) -> PackOptions {
+        PackOptions::with_source(PackSource::Path(path.as_ref().to_path_buf()))
+    }
+
+    /// Build over an existing mapping — N engines from one map share one
+    /// physical copy of the weights (the serving-worker path).
+    pub fn from_map(map: &Arc<PackMap>) -> PackOptions {
+        PackOptions::with_source(PackSource::Map(map.clone()))
+    }
+
+    /// Build from an already-decoded [`Pack`] (no I/O; infallible apart
+    /// from the configuration steps).
+    pub fn from_data(pack: Pack) -> PackOptions {
+        PackOptions::with_source(PackSource::Data(Box::new(pack)))
+    }
+
+    fn with_source(source: PackSource) -> PackOptions {
+        PackOptions {
+            source,
+            mmap: false,
+            prefault: false,
+            threads: None,
+            kernel: None,
+            objective: None,
+            calibration: None,
+        }
+    }
+
+    /// Map the file (`mmap(2)` where available, aligned heap read
+    /// otherwise) instead of copying: bulk arrays become views into the
+    /// mapping, bit-identical to the owned path. Path sources only;
+    /// [`PackOptions::from_map`] sources are already mapped.
+    ///
+    /// Standard mmap contract: the pack file must not be rewritten in
+    /// place while mapped — replace packs by writing a new file and
+    /// renaming it over the old path (see [`crate::pack::map`]).
+    pub fn mmap(mut self, yes: bool) -> PackOptions {
+        self.mmap = yes;
+        self
+    }
+
+    /// `madvise(MADV_WILLNEED)` the whole mapping before decoding, so
+    /// the kernel starts read-ahead instead of demand-faulting one page
+    /// per touch on the first forward pass. Best-effort and a no-op on
+    /// heap-backed maps or non-mmap sources.
+    pub fn prefault(mut self, yes: bool) -> PackOptions {
+        self.prefault = yes;
+        self
+    }
+
+    /// Exec-plane thread count (0 = all cores). Unset keeps the
+    /// engine's serial default.
+    pub fn threads(mut self, threads: usize) -> PackOptions {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Kernel backend for the inner loops (scalar stays the
+    /// bit-exactness reference).
+    pub fn kernel(mut self, backend: KernelBackend) -> PackOptions {
+        self.kernel = Some(backend);
+        self
+    }
+
+    /// Re-select each layer's format under this objective after the
+    /// engine is configured (threads and kernel applied first, so
+    /// time-sensitive objectives score the real lane count). Unset — the
+    /// common case — keeps the formats stored in the pack.
+    pub fn objective(mut self, objective: Objective) -> PackOptions {
+        self.objective = Some(objective);
+        self
+    }
+
+    /// Apply fitted time-model constants (a `repro calibrate` output) to
+    /// the re-selection pass: the fit for the configured kernel backend
+    /// scales the analytic [`TimeModel`] before formats are re-scored.
+    /// Implies re-selection (under [`PackOptions::objective`], default
+    /// `Time`).
+    pub fn calibration(mut self, cal: Calibration) -> PackOptions {
+        self.calibration = Some(cal);
+        self
+    }
+
+    /// Decode the source and stand the engine up with every configured
+    /// option applied.
+    pub fn open(self) -> Result<Engine> {
+        let mut engine = match self.source {
+            PackSource::Path(path) if self.mmap => {
+                let map = PackMap::open(&path)
+                    .with_context(|| format!("mapping {}", path.display()))?;
+                PackOptions::open_map(&map, self.prefault)?
+            }
+            PackSource::Path(path) => {
+                let pack =
+                    Pack::read(&path).with_context(|| format!("loading {}", path.display()))?;
+                Engine::from_decoded_pack(pack)
+            }
+            PackSource::Map(map) => PackOptions::open_map(&map, self.prefault)?,
+            PackSource::Data(pack) => Engine::from_decoded_pack(*pack),
+        };
+        if let Some(threads) = self.threads {
+            engine.set_threads(exec::resolve_threads(Some(threads)));
+        }
+        if let Some(kernel) = self.kernel {
+            engine.set_kernel_backend(kernel);
+        }
+        if self.objective.is_some() || self.calibration.is_some() {
+            let mut time = TimeModel::default_model();
+            if let Some(cal) = &self.calibration {
+                time = cal.apply(&time, engine.kernel_backend());
+            }
+            engine.reselect_formats(
+                &EnergyModel::table_i(),
+                &time,
+                self.objective.unwrap_or(Objective::Time),
+            );
+        }
+        Ok(engine)
+    }
+
+    fn open_map(map: &Arc<PackMap>, prefault: bool) -> Result<Engine> {
+        if prefault {
+            map.advise_willneed(0, map.len());
+        }
+        let pack = Pack::from_map(map).context("decoding mapped cerpack")?;
+        let mut engine = Engine::from_decoded_pack(pack);
+        engine.map = Some(map.clone());
+        Ok(engine)
     }
 }
 
@@ -1479,7 +1675,7 @@ mod tests {
         assert_eq!(manifest.layers.len(), 3);
         assert!(manifest.layers.iter().all(|l| l.payload_bytes > 0));
 
-        let mut cold = Engine::from_pack(&path).unwrap();
+        let mut cold = PackOptions::new(&path).open().unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(cold.backend(), Backend::Native);
         assert_eq!(cold.formats(), original.formats());
@@ -1509,11 +1705,11 @@ mod tests {
         ));
         original.save_pack(&path, "tiny-net", "argmin energy (modeled)").unwrap();
 
-        let mut owned = Engine::from_pack(&path).unwrap();
-        let mut mapped = Engine::from_pack_mmap(&path).unwrap();
+        let mut owned = PackOptions::new(&path).open().unwrap();
+        let mut mapped = PackOptions::new(&path).mmap(true).prefault(true).open().unwrap();
         // A second worker engine over the *same* mapping: one physical
         // copy of the weights, shared by refcount.
-        let mut worker = Engine::from_pack_map(mapped.pack_map().expect("map")).unwrap();
+        let mut worker = PackOptions::from_map(mapped.pack_map().expect("map")).open().unwrap();
         std::fs::remove_file(&path).ok(); // unlink is fine: the map holds the pages
 
         assert!(owned.pack_map().is_none());
@@ -1547,8 +1743,83 @@ mod tests {
 
     #[test]
     fn from_pack_missing_file_errors() {
-        let e = Engine::from_pack(Path::new("/nonexistent/nope.cerpack")).unwrap_err();
+        let e = PackOptions::new("/nonexistent/nope.cerpack").open().unwrap_err();
         assert!(format!("{e:#}").contains("nope.cerpack"));
+    }
+
+    /// The deprecated constructor family must keep working verbatim for
+    /// one release: each shim is the equivalent [`PackOptions`] spelling.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_from_pack_shims_match_pack_options() {
+        let layers = tiny_layers(23);
+        let original = Engine::native_auto(
+            layers,
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Energy,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "cer-engine-shim-test-{}.cerpack",
+            std::process::id()
+        ));
+        original.save_pack(&path, "tiny-net", "argmin energy (modeled)").unwrap();
+
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..12).map(|_| rng.f32() - 0.5).collect();
+        let want = PackOptions::new(&path).open().unwrap().forward(&x, 1).unwrap();
+        assert_eq!(Engine::from_pack(&path).unwrap().forward(&x, 1).unwrap(), want);
+        let mut mmapped = Engine::from_pack_mmap(&path).unwrap();
+        assert_eq!(mmapped.forward(&x, 1).unwrap(), want);
+        let map = mmapped.pack_map().expect("mmap shim sets the map").clone();
+        assert_eq!(Engine::from_pack_map(&map).unwrap().forward(&x, 1).unwrap(), want);
+        let pack = Pack::read(&path).unwrap();
+        assert_eq!(Engine::from_pack_data(pack).forward(&x, 1).unwrap(), want);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `save_pack_with(entropy)` round-trips through every
+    /// [`PackOptions`] source, bit-identically to the raw buffered
+    /// writer, and the configuration knobs apply.
+    #[test]
+    fn save_pack_with_entropy_roundtrips_through_pack_options() {
+        use crate::pack::stream::EncodeOptions;
+
+        // Skewed quantized layers so at least one stream Huffman-codes.
+        let mut rng = Rng::new(0xC0DE);
+        let values = [0.0f32, 0.0, 0.0, 0.0, 0.5, -0.5, 1.5];
+        let data: Vec<f32> = (0..48 * 31).map(|_| values[rng.below(7)]).collect();
+        let layers = vec![
+            ("fc0".to_string(), Dense::from_vec(48, 31, data), vec![0.25; 48]),
+            ("fc1".to_string(), Dense::zeros(3, 48), vec![0.0; 3]),
+        ];
+        let original = Engine::native_auto(
+            layers,
+            &EnergyModel::table_i(),
+            &TimeModel::default_model(),
+            Objective::Storage,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "cer-engine-entropy-test-{}.cerpack",
+            std::process::id()
+        ));
+        let summary = original
+            .save_pack_with(&path, "tiny-net", "argmin storage (modeled)", &EncodeOptions {
+                entropy: true,
+            })
+            .unwrap();
+        let report = summary.coded.as_ref().expect("skewed layer must code");
+        assert!(report.coded_streams > 0);
+        assert!(report.total_array_bytes() <= summary.manifest.total_array_bytes());
+
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..31).map(|_| rng.f32() - 0.5).collect();
+        let mut owned = PackOptions::new(&path).open().unwrap();
+        let mut mapped = PackOptions::new(&path).mmap(true).prefault(true).threads(2).open().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(owned.formats(), original.formats());
+        let want = owned.forward(&x, 1).unwrap();
+        assert_eq!(mapped.forward(&x, 1).unwrap(), want);
     }
 
     /// A layer big enough that every shard gets pooled tail chunks

@@ -30,7 +30,7 @@ pub mod selector;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{Backend, Engine, EngineLayer};
+pub use engine::{Backend, Engine, EngineLayer, PackOptions};
 pub use metrics::Metrics;
 pub use selector::{select_format, select_format_in, Objective};
 pub use server::{

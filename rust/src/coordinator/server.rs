@@ -210,7 +210,7 @@ impl Drop for InferenceServer {
 /// Each worker is a full [`InferenceServer`]: its own thread, engine,
 /// batcher and metrics. The intended deployment builds every engine over
 /// one shared pack mapping
-/// ([`Engine::from_pack_map`](crate::coordinator::Engine::from_pack_map)
+/// ([`PackOptions::from_map`](crate::coordinator::PackOptions::from_map)
 /// with one `Arc<PackMap>`), so N workers × M kernel threads serve from a
 /// **single physical copy** of the weights — engines share immutable
 /// layer storage by refcount, and per-worker state (activation arenas,

@@ -14,9 +14,12 @@
 //! written at their natural alignment, so on little-endian hosts they are
 //! reinterpreted in place (no per-array heap copy); big-endian hosts and
 //! narrower-than-`u32` pointer arrays transparently fall back to owned
-//! decoding. Mutation goes through [`Storage::make_mut`], which promotes a
-//! mapped view to an owned copy first (copy-on-write) — the map itself is
-//! immutable, always.
+//! decoding. Entropy-coded pack sections ([`crate::pack::entropy`]) are a
+//! third origin: their arrays are Huffman-decoded **once at load** into
+//! owned storage (the mapping, if any, stays coded on disk), after which
+//! nothing downstream can tell the difference. Mutation goes through
+//! [`Storage::make_mut`], which promotes a mapped view to an owned copy
+//! first (copy-on-write) — the map itself is immutable, always.
 
 use std::ops::Deref;
 use std::sync::Arc;
@@ -32,6 +35,12 @@ use crate::pack::PackError;
 /// Implementors must be inhabited for every bit pattern, have no padding,
 /// and have `align_of::<Self>() == size_of::<Self>()` ≤ 8.
 pub unsafe trait Pod: Copy + Send + Sync + 'static {
+    /// Whether the element type holds floating-point values. The entropy
+    /// tier ([`crate::pack::entropy`]) uses this to separate codeable
+    /// integer index arrays from float arrays, which always pass through
+    /// raw.
+    const IS_FLOAT: bool = false;
+
     /// Decode a little-endian byte run (`bytes.len()` must be a multiple
     /// of `size_of::<Self>()`) — the copying fallback used where a mapped
     /// view cannot be taken.
@@ -62,6 +71,8 @@ unsafe impl Pod for u32 {
     }
 }
 unsafe impl Pod for f32 {
+    const IS_FLOAT: bool = true;
+
     fn parse_le(bytes: &[u8]) -> Vec<f32> {
         bytes
             .chunks_exact(4)

@@ -94,11 +94,27 @@
 //!   multiple packs behind one submission surface.
 //! * [`pack`] — the `.cerpack` on-disk artifact container: a whole
 //!   compressed network (selected formats, codebooks, biases, provenance
-//!   manifest, per-section checksums) serialized once and cold-started by
-//!   [`coordinator::Engine::from_pack`] (copying reader) or
-//!   [`coordinator::Engine::from_pack_mmap`] (zero-copy: `mmap(2)` via
-//!   [`pack::map::PackMap`], arrays viewed in place with no per-array
-//!   heap copy, N engines per mapping) without re-running compression.
+//!   manifest, per-section checksums) serialized once — buffered, or
+//!   streamed one layer at a time with the optional entropy-coded
+//!   storage tier ([`pack::stream`]: canonical Huffman over the integer
+//!   arrays, kept per stream only when it pays) — and cold-started
+//!   through one builder, [`coordinator::PackOptions`]:
+//!   `PackOptions::new(path).open()` (copying reader),
+//!   `.mmap(true)` (zero-copy: `mmap(2)` via [`pack::map::PackMap`],
+//!   arrays viewed in place with no per-array heap copy, N engines per
+//!   mapping), `.prefault(true)`, `.threads(n)`, `.kernel(b)`,
+//!   `.objective(o)`, `.calibration(c)` — without re-running
+//!   compression.
+//!
+//!   Migration note: the former constructors `Engine::from_pack`,
+//!   `Engine::from_pack_mmap`, `Engine::from_pack_map` and
+//!   `Engine::from_pack_data` are `#[deprecated]` one-line shims over
+//!   `PackOptions` and will be removed one release after 0.2.0 —
+//!   `Engine::from_pack(&p)` becomes `PackOptions::new(&p).open()`,
+//!   `from_pack_mmap(&p)` adds `.mmap(true)`, `from_pack_map(&m)`
+//!   becomes `PackOptions::from_map(&m).open()`, and
+//!   `from_pack_data(pack)` becomes
+//!   `PackOptions::from_data(pack).open()`.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts (stubbed
 //!   unless built with the `xla` feature).
 //! * [`serve`] — the dependency-free TCP/HTTP network front end over the

@@ -65,7 +65,97 @@ impl Args {
     }
 }
 
+/// The engine-configuration vocabulary shared by
+/// pack/e2e/serve/serve-net/calibrate (and, through [`eval_config`], the
+/// table/figure commands): `--threads`, `--kernel`, `--objective`, and
+/// `--calibration`, parsed **once** and identically everywhere. Each
+/// command reads the fields it cares about; there is exactly one place
+/// the flag spellings, env-var fallbacks, and error messages live.
+struct CommonOpts {
+    /// Resolved exec-plane lane count (`--threads`, `auto`/`0` = all
+    /// cores, fallback `CER_THREADS`, else 1).
+    threads: usize,
+    /// Whether `--threads` (or the env var) was an explicit request —
+    /// replan only forwards the field when the user asked.
+    threads_requested: Option<usize>,
+    /// `--kernel scalar|simd|auto` (fallback `CER_KERNEL`, else scalar).
+    kernel: cer::kernels::KernelBackend,
+    /// `--objective energy|time|ops|storage` (default energy).
+    objective: cer::coordinator::Objective,
+    /// The objective's flag spelling, for log lines and JSON bodies.
+    objective_str: String,
+    /// Whether `--objective` was given explicitly (replan omits the
+    /// field otherwise, so the server keeps its default).
+    objective_requested: bool,
+    /// Parsed `--calibration FILE` constants, when the flag was given.
+    calibration: Option<cer::costmodel::Calibration>,
+    /// The `--calibration` path, for log lines.
+    calibration_path: String,
+}
+
+impl CommonOpts {
+    fn parse(a: &Args) -> anyhow::Result<CommonOpts> {
+        use cer::coordinator::Objective;
+        use cer::kernels::KernelBackend;
+
+        let threads_requested = threads_flag(a);
+        let threads = cer::exec::resolve_threads(threads_requested);
+        let kernel = match a.flags.get("kernel") {
+            Some(v) => KernelBackend::parse(v).map_err(|e| anyhow::anyhow!("--kernel: {e}"))?,
+            None => KernelBackend::from_env().map_err(|e| anyhow::anyhow!(e))?,
+        };
+        let objective_str = a.get_str("objective", "energy");
+        let objective = match objective_str.as_str() {
+            "energy" => Objective::Energy,
+            "time" => Objective::Time,
+            "ops" => Objective::Ops,
+            "storage" => Objective::Storage,
+            other => anyhow::bail!("unknown objective '{other}' (energy|time|ops|storage)"),
+        };
+        let calibration_path = a.get_str("calibration", "");
+        let calibration = if calibration_path.is_empty() {
+            None
+        } else {
+            let text = std::fs::read_to_string(&calibration_path)
+                .map_err(|e| anyhow::anyhow!("reading {calibration_path}: {e}"))?;
+            Some(
+                cer::costmodel::Calibration::parse_str(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing {calibration_path}: {e}"))?,
+            )
+        };
+        Ok(CommonOpts {
+            threads,
+            threads_requested,
+            kernel,
+            objective,
+            objective_str,
+            objective_requested: a.has("objective"),
+            calibration,
+            calibration_path,
+        })
+    }
+
+    /// `calibrate`'s spelling of `--kernel`: a single backend, or `all`
+    /// (the default) for every backend this host supports. Lives here so
+    /// the single-backend arm shares [`CommonOpts::parse`]'s vocabulary.
+    fn backends_flag(a: &Args) -> anyhow::Result<Vec<cer::kernels::KernelBackend>> {
+        use cer::kernels::KernelBackend;
+        let spec = a.get_str("kernel", "all");
+        if spec == "all" {
+            let mut b = vec![KernelBackend::Scalar];
+            if KernelBackend::simd_supported() {
+                b.push(KernelBackend::Simd);
+            }
+            return Ok(b);
+        }
+        Ok(vec![
+            KernelBackend::parse(&spec).map_err(|e| anyhow::anyhow!("--kernel: {e}"))?,
+        ])
+    }
+}
+
 fn eval_config(a: &Args) -> anyhow::Result<EvalConfig> {
+    let co = CommonOpts::parse(a)?;
     let mut cfg = EvalConfig {
         seed: a.get("seed", 0xCE5Eu64),
         scale: a.get("scale", 1usize),
@@ -82,19 +172,13 @@ fn eval_config(a: &Args) -> anyhow::Result<EvalConfig> {
             cfg.time.add, cfg.time.mul, cfg.time.rw
         );
     }
-    let cal_path = a.get_str("calibration", "");
-    if !cal_path.is_empty() {
-        let text = std::fs::read_to_string(&cal_path)
-            .map_err(|e| anyhow::anyhow!("reading {cal_path}: {e}"))?;
-        let cal = cer::costmodel::Calibration::parse_str(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {cal_path}: {e}"))?;
+    if let Some(cal) = &co.calibration {
         // The fit for the backend the engines will actually run (see
         // --kernel); absent fits leave the analytic scales at 1.0.
-        let backend = kernel_flag(a)?;
-        cfg.time = cal.apply(&cfg.time, backend);
+        cfg.time = cal.apply(&cfg.time, co.kernel);
         eprintln!(
-            "applied {cal_path} ({backend} fit): format scales {:?}, dispatch {:.0} ns",
-            cfg.time.format_scale, cfg.time.dispatch_overhead_ns
+            "applied {} ({} fit): format scales {:?}, dispatch {:.0} ns",
+            co.calibration_path, co.kernel, cfg.time.format_scale, cfg.time.dispatch_overhead_ns
         );
     }
     Ok(cfg)
@@ -140,12 +224,27 @@ Artifact commands (.cerpack — the on-disk format for compressed networks):
                              Besides the zoo, three diagnostic nets pin
                              selector flips: spike-slab (csr at 1 thread,
                              dense at 8), block-structured (csr -> bsr on
-                             time), ternary (cser -> tnn on storage)
+                             time), ternary (cser -> tnn on storage).
+                             --entropy adds the Huffman-coded storage
+                             tier: integer index/codebook arrays are
+                             entropy-coded per section (streamed, bounded
+                             peak memory), each stream kept only when it
+                             pays for itself including its code-book
+                             share; readers decode once at load
   inspect <file.cerpack>     verify checksums, dump header + manifest, and
                              compare measured on-disk bytes per layer with
                              the analytic StorageBreakdown bits and the
                              N*H entropy bound (divergence >5% is flagged);
-                             then cold-start an engine from the file
+                             then cold-start an engine from the file.
+                             On entropy-coded packs a `coded` column and
+                             totals line report the coded tier.
+                             --assert-coded exits non-zero unless the
+                             pack is coded and coded on-disk bytes <= raw
+                             array bytes; --assert-coded-within P exits
+                             non-zero when coded bytes exceed the N*H
+                             bound by more than P percent (a regression
+                             tripwire — index-carrying formats sit above
+                             N*H by construction, so give it headroom)
   pack-demo                  tiny end-to-end demo: pack the paper's 5x12
                              example matrix, reload, run a dot product
 
@@ -252,6 +351,9 @@ Common flags:
   --requests N      demo request count for the serve commands
   --verify          (serve <pack>) assert every reply equals the
                     owned-storage cold-start path bit-for-bit
+  --prefault        (serve <pack>) madvise(WILLNEED) the mapped pack up
+                    front so first-request latency doesn't pay the page
+                    faults (also via PackOptions::prefault in the API)
   --kernel K        inner-loop implementation for e2e/serve engines:
                     scalar (default — frozen reduction order, the repo's
                     bit-exactness reference), simd (AVX2/SSE2 on x86_64,
@@ -273,37 +375,6 @@ fn threads_flag(a: &Args) -> Option<usize> {
     } else {
         v.parse().ok()
     }
-}
-
-/// `--kernel {scalar,simd,auto}` (shared by e2e/serve/calibrate and the
-/// `--calibration` flag): which inner-loop implementation engines built
-/// by this command dispatch to. Absent flag falls back to the
-/// `CER_KERNEL` env var, then to scalar — the frozen-reduction-order
-/// bit-exactness reference. Only this front end ever reads the env var;
-/// library constructors always start scalar.
-fn kernel_flag(a: &Args) -> anyhow::Result<cer::kernels::KernelBackend> {
-    use cer::kernels::KernelBackend;
-    match a.flags.get("kernel") {
-        Some(v) => KernelBackend::parse(v).map_err(|e| anyhow::anyhow!("--kernel: {e}")),
-        None => KernelBackend::from_env().map_err(|e| anyhow::anyhow!(e)),
-    }
-}
-
-/// `--objective` (shared by pack/e2e/serve): the deployment argmin the
-/// format selector runs under. Time-sensitive objectives interact with
-/// `--threads` — selection scores each format's sharded critical path at
-/// the configured lane count.
-fn objective_flag(a: &Args) -> anyhow::Result<(cer::coordinator::Objective, String)> {
-    use cer::coordinator::Objective;
-    let s = a.get_str("objective", "energy");
-    let obj = match s.as_str() {
-        "energy" => Objective::Energy,
-        "time" => Objective::Time,
-        "ops" => Objective::Ops,
-        "storage" => Objective::Storage,
-        other => anyhow::bail!("unknown objective '{other}' (energy|time|ops|storage)"),
-    };
-    Ok((obj, s))
 }
 
 /// Exit protocol: 0 = success, 1 = any error (bad flags, bind failure,
@@ -485,7 +556,7 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
         "pack" => cmd_pack(a)?,
         "pack-demo" => cmd_pack_demo()?,
         "inspect" if !a.positional.is_empty() => {
-            cmd_inspect_pack(Path::new(&a.positional[0]))?;
+            cmd_inspect_pack(Path::new(&a.positional[0]), a)?;
         }
         "inspect" => {
             // Catch `repro inspect --some-flag net.cerpack`, where the
@@ -588,9 +659,10 @@ fn run(cmd: &str, a: &Args) -> anyhow::Result<ExitCode> {
 /// operating point, auto-select each layer's format) and serialize it to a
 /// `.cerpack` artifact, then prove the cold-start path by reloading it.
 fn cmd_pack(a: &Args) -> anyhow::Result<()> {
-    use cer::coordinator::Engine;
+    use cer::coordinator::{Engine, PackOptions};
     use cer::formats::FormatKind;
     use cer::networks::weights::synthesize_zoo_layers;
+    use cer::pack::stream::EncodeOptions;
     use cer::util::human_bytes;
     use std::time::Instant;
 
@@ -600,8 +672,8 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
         a.get_str("net", "densenet")
     };
     let cfg = eval_config(a)?;
-    let (objective, objective_str) = objective_flag(a)?;
-    let threads = cer::exec::resolve_threads(threads_flag(a));
+    let co = CommonOpts::parse(a)?;
+    let (objective_str, threads) = (&co.objective_str, co.threads);
 
     eprintln!(
         "synthesizing {net} at scale {} (seed {}) ...",
@@ -611,18 +683,21 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown net '{net}'"))?;
     eprintln!("selecting formats (argmin {objective_str}, modeled at {threads} thread(s)) ...");
     let t0 = Instant::now();
-    let engine = Engine::native_auto_in(layers, &cfg.energy, &cfg.time, objective, threads);
+    let engine = Engine::native_auto_in(layers, &cfg.energy, &cfg.time, co.objective, threads);
     let build_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let out = a.get_str("out", &format!("{}.cerpack", net.to_lowercase()));
     let path = PathBuf::from(&out);
+    let entropy = a.has("entropy");
     let t0 = Instant::now();
-    let (file_bytes, manifest) = engine.save_pack(
+    let summary = engine.save_pack_with(
         &path,
         spec.name,
         &format!("argmin {objective_str} (modeled)"),
+        &EncodeOptions { entropy },
     )?;
     let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (file_bytes, manifest) = (summary.file_bytes, &summary.manifest);
 
     let dense = manifest.dense_baseline_bytes();
     let analytic = manifest.total_analytic_bits();
@@ -649,16 +724,31 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
         human_bytes(measured as f64),
         dense as f64 / (measured.max(1)) as f64
     );
+    match (&summary.coded, entropy) {
+        (Some(report), _) => {
+            let coded = report.total_on_disk_bytes();
+            println!(
+                "  entropy tier: {} coded ({} code books, {} Huffman stream(s)) — {:.1}% below raw",
+                human_bytes(report.total_array_bytes() as f64),
+                human_bytes(report.codebook_bytes as f64),
+                report.coded_streams,
+                (1.0 - coded as f64 / measured.max(1) as f64) * 100.0
+            );
+        }
+        (None, true) => {
+            println!("  entropy tier: no stream paid for itself — pack written raw");
+        }
+        (None, false) => {}
+    }
     println!("  compress+select {build_ms:.0} ms, serialize {save_ms:.1} ms");
 
     // Cold-start proof: reload from disk and run one forward pass. The
     // pack already stores the thread-aware winners, so the cold engine
     // only configures its plane — no reselection needed.
     let t0 = Instant::now();
-    let mut cold = Engine::from_pack(&path)?;
+    let mut cold = PackOptions::new(&path).threads(threads).open()?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
     if threads > 1 {
-        cold.set_threads(threads);
         println!("  exec plane: {threads} threads, nnz-balanced shards per layer");
     }
     let x = vec![0.1f32; cold.in_dim()];
@@ -676,9 +766,9 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
 /// manifest, compare measured on-disk bytes with the analytic
 /// StorageBreakdown bits and the N·H entropy bound, then cold-start an
 /// engine from the file.
-fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
+fn cmd_inspect_pack(path: &Path, a: &Args) -> anyhow::Result<()> {
     use anyhow::Context;
-    use cer::coordinator::Engine;
+    use cer::coordinator::PackOptions;
     use cer::pack::{DIVERGENCE_FLAG_PCT, Pack, VERSION};
     use cer::util::human_bytes;
     use cer::util::table::TextTable;
@@ -692,6 +782,7 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
     let pack = Pack::from_bytes(&bytes).with_context(inspecting)?;
     let decode_ms = t0.elapsed().as_secs_f64() * 1e3;
     let manifest = pack.manifest.clone();
+    let coded = pack.coded.clone();
     println!(
         "{}: cerpack v{VERSION}, network '{}', {} layers, {} on disk",
         path.display(),
@@ -706,10 +797,10 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
     }
 
     let mut t = TextTable::new(&[
-        "layer", "fmt", "shape", "K", "H", "p0", "H-bound", "analytic", "on-disk", "div%",
+        "layer", "fmt", "shape", "K", "H", "p0", "H-bound", "analytic", "on-disk", "coded", "div%",
     ]);
     let mut flagged = 0usize;
-    for l in &manifest.layers {
+    for (i, l) in manifest.layers.iter().enumerate() {
         let elems = l.rows as u64 * l.cols as u64;
         let div = l.divergence_pct();
         let flag = if div.abs() > DIVERGENCE_FLAG_PCT {
@@ -717,6 +808,10 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
             " !"
         } else {
             ""
+        };
+        let coded_cell = match &coded {
+            Some(r) => human_bytes(r.layer_array_bytes[i] as f64),
+            None => "-".to_string(),
         };
         t.row(vec![
             l.name.clone(),
@@ -728,6 +823,7 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
             human_bytes(l.entropy * elems as f64 / 8.0),
             human_bytes(l.analytic_bits as f64 / 8.0),
             human_bytes(l.array_bytes as f64),
+            coded_cell,
             format!("{div:+.2}{flag}"),
         ]);
     }
@@ -743,10 +839,62 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
         human_bytes(measured as f64),
         dense as f64 / (measured.max(1)) as f64
     );
+    // N·H is the paper's per-element entropy bound summed over the net; it
+    // prices element identity only, so index-carrying formats sit above it.
+    let nh_bytes: f64 = manifest
+        .layers
+        .iter()
+        .map(|l| l.entropy * (l.rows as u64 * l.cols as u64) as f64 / 8.0)
+        .sum();
+    if let Some(r) = &coded {
+        let total = r.total_on_disk_bytes();
+        println!(
+            "entropy tier: coded arrays {} + code books {} = {} on disk \
+             ({} Huffman stream(s), {:.1}% below raw, {:.2}x the N*H bound of {})",
+            human_bytes(r.total_array_bytes() as f64),
+            human_bytes(r.codebook_bytes as f64),
+            human_bytes(total as f64),
+            r.coded_streams,
+            (1.0 - total as f64 / measured.max(1) as f64) * 100.0,
+            total as f64 / nh_bytes.max(1.0),
+            human_bytes(nh_bytes),
+        );
+    }
     if flagged > 0 {
         println!(
             "WARNING: {flagged} layer(s) diverge >{DIVERGENCE_FLAG_PCT}% between measured \
              on-disk bytes and the analytic storage model"
+        );
+    }
+
+    if a.has("assert-coded") {
+        let r = coded
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--assert-coded: pack has no entropy-coded tier"))?;
+        let total = r.total_on_disk_bytes();
+        anyhow::ensure!(
+            total <= measured,
+            "--assert-coded: coded on-disk bytes {total} exceed raw array bytes {measured}"
+        );
+        println!("assert-coded: OK ({total} <= {measured} raw)");
+    }
+    if a.has("assert-coded-within") {
+        let pct: f64 = a
+            .get_str("assert-coded-within", "")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--assert-coded-within needs a percentage, e.g. 250"))?;
+        let r = coded.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("--assert-coded-within: pack has no entropy-coded tier")
+        })?;
+        let total = r.total_on_disk_bytes() as f64;
+        let limit = nh_bytes * (1.0 + pct / 100.0);
+        anyhow::ensure!(
+            total <= limit,
+            "--assert-coded-within {pct}: coded on-disk bytes {total:.0} exceed \
+             {limit:.0} (N*H bound {nh_bytes:.0} B + {pct}%)"
+        );
+        println!(
+            "assert-coded-within {pct}%: OK ({total:.0} <= {limit:.0}, N*H {nh_bytes:.0} B)"
         );
     }
 
@@ -755,7 +903,7 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
         println!("cold start: skipped (pack has no layers)");
         return Ok(());
     }
-    let mut engine = Engine::from_pack_data(pack);
+    let mut engine = PackOptions::from_data(pack).open()?;
     let x = vec![0.1f32; engine.in_dim()];
     let y = engine.forward(&x, 1)?;
     println!(
@@ -768,7 +916,7 @@ fn cmd_inspect_pack(path: &Path) -> anyhow::Result<()> {
 /// `repro pack-demo` — smallest end-to-end artifact demo: pack the paper's
 /// 5x12 running example, reload it cold, and check one dot product.
 fn cmd_pack_demo() -> anyhow::Result<()> {
-    use cer::coordinator::Engine;
+    use cer::coordinator::PackOptions;
     use cer::formats::FormatKind;
     use cer::kernels::AnyMatrix;
     use cer::pack::Pack;
@@ -790,7 +938,7 @@ fn cmd_pack_demo() -> anyhow::Result<()> {
         "packed the paper's 5x12 example as CSER: {bytes} B file, {} B arrays vs {} bits analytic",
         l.array_bytes, l.analytic_bits
     );
-    let mut engine = Engine::from_pack(&path)?;
+    let mut engine = PackOptions::new(&path).open()?;
     std::fs::remove_file(&path).ok();
     let x: Vec<f32> = vec![1.0; 12];
     let y = engine.forward(&x, 1)?;
@@ -814,9 +962,8 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
         art.accuracy_quant
     );
     let n_batches = a.get("batches", usize::MAX);
-    let (objective, _) = objective_flag(a)?;
-    let threads = cer::exec::resolve_threads(threads_flag(a));
-    let kernel = kernel_flag(a)?;
+    let co = CommonOpts::parse(a)?;
+    let (objective, threads, kernel) = (co.objective, co.threads, co.kernel);
     if kernel != cer::kernels::KernelBackend::Scalar {
         println!("native kernel backend: {kernel} (scalar stays the bit-exactness reference)");
     }
@@ -879,17 +1026,19 @@ fn run_e2e(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
 /// changes *where* bytes live, never *what* the kernels compute.
 fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
     use cer::coordinator::batcher::BatcherConfig;
-    use cer::coordinator::{Engine, PackRouter, ServerConfig, WorkerSet};
+    use cer::coordinator::{PackOptions, PackRouter, ServerConfig, WorkerSet};
     use cer::pack::map::PackMap;
     use cer::util::{human_bytes, Rng};
 
     let workers = a.get("workers", 1usize).max(1);
     let requests = a.get("requests", 128usize);
     let verify = a.has("verify");
-    let threads = cer::exec::resolve_threads(threads_flag(a));
+    let prefault = a.has("prefault");
+    let co = CommonOpts::parse(a)?;
+    let threads = co.threads;
     // --verify promises bit-identity to the owned-storage path, which only
     // the scalar reference kernels provide — force them and say so.
-    let mut kernel = kernel_flag(a)?;
+    let mut kernel = co.kernel;
     if verify && kernel != cer::kernels::KernelBackend::Scalar {
         eprintln!("serve: --verify forces the scalar kernel backend (bit-identity reference)");
         kernel = cer::kernels::KernelBackend::Scalar;
@@ -922,7 +1071,7 @@ fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("mapping {}: {e}", path.display()))?;
         // One probe engine up front: input dim, residency report, and an
         // early error instead of a failed first request.
-        let probe = Engine::from_pack_map(&map)?;
+        let probe = PackOptions::from_map(&map).prefault(prefault).open()?;
         let res = probe.storage_residency();
         println!(
             "{name}: {} on disk ({}), {workers} worker(s) x {threads} thread(s) — \
@@ -934,14 +1083,14 @@ fn run_serve_packs(packs: &[String], a: &Args) -> anyhow::Result<()> {
         );
         dims.push((name.clone(), probe.in_dim()));
         if verify {
-            reference.push((name.clone(), Engine::from_pack(path)?));
+            reference.push((name.clone(), PackOptions::new(path).open()?));
         }
         drop(probe);
         let map_for_workers = map.clone();
         router.add(
             name,
             WorkerSet::spawn(workers, cfg, move |_i| {
-                Engine::from_pack_map(&map_for_workers)
+                PackOptions::from_map(&map_for_workers).open()
             }),
         );
     }
@@ -1110,16 +1259,7 @@ fn cmd_calibrate(a: &Args) -> anyhow::Result<()> {
     use cer::kernels::KernelBackend;
 
     let smoke = a.has("smoke");
-    let spec = a.get_str("kernel", "all");
-    let backends: Vec<KernelBackend> = if spec == "all" {
-        let mut b = vec![KernelBackend::Scalar];
-        if KernelBackend::simd_supported() {
-            b.push(KernelBackend::Simd);
-        }
-        b
-    } else {
-        vec![KernelBackend::parse(&spec).map_err(|e| anyhow::anyhow!("--kernel: {e}"))?]
-    };
+    let backends: Vec<KernelBackend> = CommonOpts::backends_flag(a)?;
     eprintln!(
         "calibrating {} ({} sizes, cache-ruined best-of-N) ...",
         backends.iter().map(|b| b.name()).collect::<Vec<_>>().join(" + "),
@@ -1183,8 +1323,8 @@ fn cmd_serve_net(packs: &[String], a: &Args) -> anyhow::Result<()> {
 
     let addr = a.get_str("addr", "127.0.0.1:8080");
     let workers = a.get("workers", 1usize).max(1);
-    let threads = cer::exec::resolve_threads(threads_flag(a));
-    let kernel = kernel_flag(a)?;
+    let co = CommonOpts::parse(a)?;
+    let (threads, kernel) = (co.threads, co.kernel);
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch: a.get("max-batch", 32usize),
@@ -1361,20 +1501,20 @@ fn cmd_replan(a: &Args) -> anyhow::Result<()> {
     use std::time::Duration;
 
     let addr = a.get_str("addr", "127.0.0.1:8080");
+    let co = CommonOpts::parse(a)?;
     let mut fields = Vec::new();
     let name = a.get_str("name", "");
     if !name.is_empty() {
         fields.push(format!("\"name\":\"{}\"", json_escape(&name)));
     }
-    if let Some(t) = threads_flag(a) {
+    if let Some(t) = co.threads_requested {
         fields.push(format!("\"threads\":{t}"));
     }
     if a.has("calibrate") {
         fields.push("\"calibrate\":true".to_string());
     }
-    if a.has("objective") {
-        let (_, s) = objective_flag(a)?;
-        fields.push(format!("\"objective\":\"{s}\""));
+    if co.objective_requested {
+        fields.push(format!("\"objective\":\"{}\"", co.objective_str));
     }
     let body = format!("{{{}}}", fields.join(","));
     // Calibration runs micro-benches per worker before the reply comes
@@ -1445,15 +1585,15 @@ fn run_serve_demo(artifacts: &Path, a: &Args) -> anyhow::Result<()> {
 
     let art = MlpArtifacts::load(artifacts)?;
     let requests = a.get("requests", 512usize);
-    let (objective, objective_str) = objective_flag(a)?;
-    let threads = cer::exec::resolve_threads(threads_flag(a));
+    let co = CommonOpts::parse(a)?;
+    let (objective, objective_str, threads) = (co.objective, &co.objective_str, co.threads);
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch: a.get("max-batch", 32usize),
             max_delay_us: a.get("max-delay-us", 2_000u64),
         },
         threads: Some(threads),
-        kernel: kernel_flag(a)?,
+        kernel: co.kernel,
     };
     if threads > 1 {
         println!(

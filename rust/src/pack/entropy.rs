@@ -1,0 +1,943 @@
+//! Dependency-free canonical Huffman codec for the `.cerpack` entropy
+//! tier.
+//!
+//! The paper's bound says a layer's storage should track `N·H` — the
+//! element count times the element entropy — yet the raw pack tier stores
+//! index arrays at fixed minimal widths (8/16/32 bits), paying the gap
+//! between `⌈log₂ K⌉` and `H`. Deep Compression (Han et al., PAPERS.md)
+//! closes exactly that gap with Huffman codes over the quantized
+//! representation; this module is that coder, specialized to the pack's
+//! integer arrays (codebook indices, column indices, pointers — float
+//! arrays pass through raw).
+//!
+//! Design:
+//!
+//! * **Format-agnostic span discovery.** Rather than teach six formats
+//!   how to entropy-code themselves, [`payload_spans`] replays a raw
+//!   payload through a recording [`ArrayLoader`]: every bulk array a
+//!   decoder reads is reported as an [`ArraySpan`] (offset, element
+//!   width, count). Integer spans become candidate symbol streams; the
+//!   bytes between spans (scalar headers, padding) and float spans pass
+//!   through verbatim. A seventh format inherits the tier for free.
+//! * **Canonical codes, length-limited to [`MAX_CODE_LEN`].** Code
+//!   lengths come from a standard two-queue Huffman build; overdeep
+//!   trees are reshaped by the Kraft-preserving counts adjustment (the
+//!   zlib/miniz technique), then codes are assigned canonically in
+//!   (length, symbol) order — so a code book serializes as nothing but
+//!   one `u8` length per symbol.
+//! * **Never larger than raw.** Every stream is coded only if its coded
+//!   bytes plus its share of (new) table bytes undercut the raw bytes;
+//!   otherwise it is stored raw. Coded on-disk bytes are therefore ≤ raw
+//!   bytes by construction, stream by stream.
+//! * **Pack-level code-book dedup.** Identical length tables (layers
+//!   quantized against the same codebook produce them constantly) are
+//!   interned in a [`CodebookSet`] and referenced by id, so a table is
+//!   paid for once per pack, not once per layer.
+//!
+//! Decoding reconstructs the exact raw payload bytes (coded streams are
+//! re-narrowed to their original element width), then hands the result to
+//! the ordinary raw decoder — bit-identity with the raw tier holds by
+//! construction, for every format.
+
+use std::collections::HashMap;
+
+use super::wire::{put_u32, put_u64, ArrayLoader, ArraySpan, Cursor, SpanRecorder};
+use super::PackError;
+use crate::kernels::AnyMatrix;
+
+/// Longest admissible canonical code, in bits. 16 keeps the decode
+/// accumulator comfortably in `u32`, bounds the per-symbol decode loop,
+/// and hosts up to 65536 distinct symbols — far beyond any codebook or
+/// column alphabet the formats produce (streams with more distinct
+/// symbols fall back to raw storage).
+pub const MAX_CODE_LEN: usize = 16;
+
+/// Stream kind tag: structural bytes (scalar headers, padding, float
+/// arrays) stored verbatim.
+pub(crate) const STREAM_RAW: u8 = 0;
+/// Stream kind tag: a Huffman-coded integer array.
+pub(crate) const STREAM_CODED: u8 = 1;
+/// Stream kind tag: an integer array stored verbatim because coding did
+/// not pay for itself. Decodes exactly like [`STREAM_RAW`]; kept distinct
+/// so the on-disk accounting can compare array bytes (coded + fallback)
+/// against the raw tier's `array_bytes` without re-deriving spans.
+pub(crate) const STREAM_RAW_ARRAY: u8 = 2;
+
+/// Fixed wire overhead of a coded stream record (kind, width, table id,
+/// symbol count, coded byte length) — part of the pay-for-itself test.
+const CODED_STREAM_OVERHEAD: usize = 1 + 1 + 4 + 4 + 8;
+/// Fixed wire overhead of a raw stream record (kind, byte length).
+const RAW_STREAM_OVERHEAD: usize = 1 + 8;
+
+/// A canonical Huffman code book over `u32` symbols: one code length per
+/// symbol (0 = symbol absent). Codes are implied — assigned canonically
+/// in (length, symbol) order — so this is also the wire representation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeBook {
+    lens: Vec<u8>,
+}
+
+impl CodeBook {
+    /// Build a length-limited code book from per-symbol frequencies
+    /// (index = symbol). Returns `None` when no symbol occurs or when
+    /// more than `2^MAX_CODE_LEN` distinct symbols would need codes.
+    pub fn from_frequencies(freq: &[u64]) -> Option<CodeBook> {
+        let mut present: Vec<(u64, u32)> = freq
+            .iter()
+            .enumerate()
+            .filter(|&(_, &f)| f > 0)
+            .map(|(s, &f)| (f, s as u32))
+            .collect();
+        if present.is_empty() || present.len() > (1 << MAX_CODE_LEN) {
+            return None;
+        }
+        let mut lens = vec![0u8; freq.len()];
+        if present.len() == 1 {
+            // A degenerate one-symbol alphabet still gets a 1-bit code so
+            // the stream stays uniform (and 8× smaller than raw u8s).
+            lens[present[0].1 as usize] = 1;
+            return Some(CodeBook { lens });
+        }
+        present.sort(); // ascending (frequency, symbol) — deterministic
+        let count = length_counts(&present);
+        // Hand the shortest lengths to the most frequent symbols
+        // (ties broken by symbol for determinism).
+        let mut by_freq = present;
+        by_freq.sort_by(|a, b| (b.0, a.1).cmp(&(a.0, b.1)));
+        let mut i = 0;
+        for (l, &c) in count.iter().enumerate().skip(1) {
+            for _ in 0..c {
+                lens[by_freq[i].1 as usize] = l as u8;
+                i += 1;
+            }
+        }
+        debug_assert_eq!(i, by_freq.len());
+        Some(CodeBook { lens })
+    }
+
+    /// Total coded bits this book spends on a stream with the given
+    /// per-symbol frequencies.
+    pub fn cost_bits(&self, freq: &[u64]) -> u64 {
+        freq.iter()
+            .zip(&self.lens)
+            .map(|(&f, &l)| f * l as u64)
+            .sum()
+    }
+
+    /// Serialized wire size in bytes (`u32` alphabet + one `u8` per
+    /// symbol).
+    pub fn wire_bytes(&self) -> usize {
+        4 + self.lens.len()
+    }
+
+    /// Append the wire form: `u32` alphabet size, then the length bytes.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.lens.len() as u32);
+        out.extend_from_slice(&self.lens);
+    }
+
+    /// Parse and structurally validate one code book.
+    pub fn decode_from(cur: &mut Cursor<'_>) -> Result<CodeBook, PackError> {
+        let alphabet = cur.u32_len("codebook alphabet size")?;
+        if alphabet == 0 || alphabet > MAX_ALPHABET {
+            return Err(PackError::malformed(format!(
+                "implausible codebook alphabet size {alphabet}"
+            )));
+        }
+        let lens = cur.take(alphabet)?.to_vec();
+        let book = CodeBook { lens };
+        book.decoder()?; // rejects over-long / oversubscribed tables
+        Ok(book)
+    }
+
+    /// Per-symbol canonical codes for encoding. Fails on a structurally
+    /// invalid length table (decoded books are pre-validated; fresh books
+    /// are correct by construction).
+    fn codes(&self) -> Result<Vec<(u32, u8)>, PackError> {
+        let (_, first_code) = canonical_geometry(&self.lens)?;
+        let mut next = first_code;
+        let mut codes = vec![(0u32, 0u8); self.lens.len()];
+        for (sym, &l) in self.lens.iter().enumerate() {
+            if l > 0 {
+                codes[sym] = (next[l as usize], l);
+                next[l as usize] += 1;
+            }
+        }
+        Ok(codes)
+    }
+
+    /// Build the canonical decoding tables.
+    pub fn decoder(&self) -> Result<Decoder, PackError> {
+        let (count, first_code) = canonical_geometry(&self.lens)?;
+        let mut first_idx = [0u32; MAX_CODE_LEN + 1];
+        let mut idx = 0u32;
+        for l in 1..=MAX_CODE_LEN {
+            first_idx[l] = idx;
+            idx += count[l];
+        }
+        // Symbols in (length, symbol) order — symbol order is ascending
+        // per length because we scan symbols in ascending order.
+        let mut syms = vec![0u32; idx as usize];
+        let mut next = first_idx;
+        for (sym, &l) in self.lens.iter().enumerate() {
+            if l > 0 {
+                syms[next[l as usize] as usize] = sym as u32;
+                next[l as usize] += 1;
+            }
+        }
+        Ok(Decoder {
+            count,
+            first_code,
+            first_idx,
+            syms,
+        })
+    }
+}
+
+/// Cap on serialized codebook alphabets: a table is one byte per symbol,
+/// so this bounds hostile allocations at 1 MiB while admitting any
+/// realistic column/codebook alphabet.
+const MAX_ALPHABET: usize = 1 << 20;
+
+/// Two-queue Huffman over `present` (sorted ascending by (freq, sym)),
+/// returning code-length counts per length, reshaped to respect
+/// [`MAX_CODE_LEN`] while keeping the Kraft sum exact.
+fn length_counts(present: &[(u64, u32)]) -> [u32; MAX_CODE_LEN + 1] {
+    let n = present.len();
+    debug_assert!(n >= 2);
+    // Node arena: leaves 0..n, then n-1 internal nodes. Weights of
+    // internal nodes are created in nondecreasing order, so two cursors
+    // (next unconsumed leaf, next unconsumed internal) always expose the
+    // two global minima at their fronts.
+    let mut weight: Vec<u64> = present.iter().map(|&(f, _)| f).collect();
+    let mut parent: Vec<usize> = vec![usize::MAX; 2 * n - 1];
+    weight.reserve(n - 1);
+    let (mut leaf, mut inner) = (0usize, n);
+    for _ in 0..n - 1 {
+        let mut take = || {
+            // Prefer the leaf queue on ties: marginally flatter trees,
+            // and a deterministic shape either way.
+            if leaf < n && (inner >= weight.len() || weight[leaf] <= weight[inner]) {
+                leaf += 1;
+                leaf - 1
+            } else {
+                inner += 1;
+                inner - 1
+            }
+        };
+        let (a, b) = (take(), take());
+        let node = weight.len();
+        weight.push(weight[a].saturating_add(weight[b]));
+        parent[a] = node;
+        parent[b] = node;
+    }
+    let root = weight.len() - 1;
+    let mut count = [0u32; MAX_CODE_LEN + 1];
+    let mut total: u64 = 0;
+    for i in 0..n {
+        let mut depth = 0usize;
+        let mut at = i;
+        while at != root {
+            at = parent[at];
+            depth += 1;
+        }
+        let depth = depth.min(MAX_CODE_LEN);
+        count[depth] += 1;
+        total += 1u64 << (MAX_CODE_LEN - depth);
+    }
+    // Clamping overfilled the code space; move codes up the tree until
+    // the Kraft sum is exact again (zlib's length-limiting step).
+    let target = 1u64 << MAX_CODE_LEN;
+    while total > target {
+        count[MAX_CODE_LEN] -= 1;
+        for l in (1..MAX_CODE_LEN).rev() {
+            if count[l] > 0 {
+                count[l] -= 1;
+                count[l + 1] += 2;
+                break;
+            }
+        }
+        total -= 1;
+    }
+    count
+}
+
+/// Per-length code counts and canonical first codes for a length table,
+/// rejecting oversubscribed levels (Kraft violations) so hostile tables
+/// can never make canonical decode ambiguous.
+fn canonical_geometry(
+    lens: &[u8],
+) -> Result<([u32; MAX_CODE_LEN + 1], [u32; MAX_CODE_LEN + 1]), PackError> {
+    let mut count = [0u32; MAX_CODE_LEN + 1];
+    for &l in lens {
+        if l as usize > MAX_CODE_LEN {
+            return Err(PackError::malformed(format!(
+                "huffman code length {l} exceeds the {MAX_CODE_LEN}-bit limit"
+            )));
+        }
+        if l > 0 {
+            count[l as usize] += 1;
+        }
+    }
+    let mut first_code = [0u32; MAX_CODE_LEN + 1];
+    let mut code = 0u64;
+    for l in 1..=MAX_CODE_LEN {
+        code = (code + count[l - 1] as u64) << 1;
+        first_code[l] = code as u32;
+        let end = code + count[l] as u64;
+        if end > 1u64 << l {
+            return Err(PackError::malformed(
+                "oversubscribed huffman length table".to_string(),
+            ));
+        }
+    }
+    Ok((count, first_code))
+}
+
+/// Canonical decoding tables built from a validated [`CodeBook`].
+#[derive(Clone, Debug)]
+pub struct Decoder {
+    count: [u32; MAX_CODE_LEN + 1],
+    first_code: [u32; MAX_CODE_LEN + 1],
+    first_idx: [u32; MAX_CODE_LEN + 1],
+    syms: Vec<u32>,
+}
+
+impl Decoder {
+    /// Decode one symbol, MSB-first.
+    fn symbol(&self, bits: &mut BitReader<'_>) -> Result<u32, PackError> {
+        let mut code = 0u32;
+        for l in 1..=MAX_CODE_LEN {
+            code = (code << 1) | bits.bit()?;
+            let c = self.count[l];
+            if c > 0 && code >= self.first_code[l] && code - self.first_code[l] < c {
+                let i = self.first_idx[l] + (code - self.first_code[l]);
+                return Ok(self.syms[i as usize]);
+            }
+        }
+        Err(PackError::malformed("invalid huffman code".to_string()))
+    }
+}
+
+/// MSB-first bit appender.
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter {
+            out: Vec::new(),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn put(&mut self, code: u32, len: u8) {
+        debug_assert!(len >= 1 && len as usize <= MAX_CODE_LEN);
+        self.acc = (self.acc << len) | code;
+        self.nbits += len as u32;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Flush, zero-padding the final partial byte.
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        self.out
+    }
+}
+
+/// Bounds-checked MSB-first bit reader; running out of bytes is a
+/// malformed-stream error, never a panic.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader {
+            buf,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn bit(&mut self) -> Result<u32, PackError> {
+        if self.nbits == 0 {
+            if self.pos >= self.buf.len() {
+                return Err(PackError::malformed(
+                    "huffman stream ends mid-symbol".to_string(),
+                ));
+            }
+            self.acc = self.buf[self.pos] as u32;
+            self.pos += 1;
+            self.nbits = 8;
+        }
+        self.nbits -= 1;
+        Ok((self.acc >> self.nbits) & 1)
+    }
+
+    /// Bytes consumed so far (the current partial byte counts).
+    fn bytes_consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Pack-level interning of code books: identical length tables are stored
+/// once and referenced by id from every coded stream that uses them.
+/// `Clone` is cheap (a handful of small length tables) — the streaming
+/// writer trial-encodes each layer against a clone and commits it only
+/// when the coded tier wins, so rejected layers never leave stray tables
+/// in the shared section.
+#[derive(Clone, Default)]
+pub struct CodebookSet {
+    books: Vec<CodeBook>,
+    index: HashMap<Vec<u8>, u32>,
+}
+
+impl CodebookSet {
+    pub fn new() -> CodebookSet {
+        CodebookSet::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.books.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.books.len()
+    }
+
+    /// Wire bytes the book would add if interned now (0 when an identical
+    /// table is already present).
+    fn marginal_bytes(&self, book: &CodeBook) -> usize {
+        if self.index.contains_key(&book.lens) {
+            0
+        } else {
+            book.wire_bytes()
+        }
+    }
+
+    fn intern(&mut self, book: CodeBook) -> u32 {
+        if let Some(&id) = self.index.get(&book.lens) {
+            return id;
+        }
+        let id = self.books.len() as u32;
+        self.index.insert(book.lens.clone(), id);
+        self.books.push(book);
+        id
+    }
+
+    /// Serialize the whole set as a `SECTION_CODEBOOKS` payload
+    /// (`u32` table count, then the tables in id order).
+    pub fn encode_section(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, self.books.len() as u32);
+        for b in &self.books {
+            b.encode_into(&mut out);
+        }
+        out
+    }
+}
+
+/// Parse a `SECTION_CODEBOOKS` payload into ready decoding tables.
+pub fn decode_codebooks(buf: &[u8]) -> Result<Vec<Decoder>, PackError> {
+    let mut cur = Cursor::new(buf);
+    let n = cur.u32_len("codebook count")?;
+    if n > cur.remaining() {
+        return Err(PackError::malformed(format!(
+            "implausible codebook count {n}"
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(CodeBook::decode_from(&mut cur)?.decoder()?);
+    }
+    if cur.remaining() != 0 {
+        return Err(PackError::malformed(
+            "trailing bytes after codebooks".to_string(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Replay a raw payload through a recording loader to discover every bulk
+/// array mechanically — no per-format knowledge. Returns the spans in
+/// ascending offset order; the decode also revalidates the payload.
+pub(crate) fn payload_spans(payload: &[u8]) -> Result<Vec<ArraySpan>, PackError> {
+    let rec = SpanRecorder::new();
+    AnyMatrix::decode_from_source(payload, ArrayLoader::recording(&rec))?;
+    let mut spans: Vec<ArraySpan> = rec
+        .into_spans()
+        .into_iter()
+        .filter(|s| s.count > 0)
+        .collect();
+    spans.sort_by_key(|s| s.offset);
+    for w in spans.windows(2) {
+        if w[0].offset + w[0].byte_len() > w[1].offset {
+            // Decoders read strictly forward, so overlap means the
+            // recorder itself is wrong — refuse to code rather than
+            // write a section that cannot reconstruct.
+            return Err(PackError::malformed(
+                "overlapping array spans recorded during entropy encode".to_string(),
+            ));
+        }
+    }
+    Ok(spans)
+}
+
+fn span_symbols(payload: &[u8], span: &ArraySpan) -> Vec<u32> {
+    let bytes = &payload[span.offset..span.offset + span.byte_len()];
+    match span.width {
+        1 => bytes.iter().map(|&b| b as u32).collect(),
+        2 => bytes
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]) as u32)
+            .collect(),
+        _ => bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect(),
+    }
+}
+
+/// The stream list of one coded layer section, plus its accounting.
+pub(crate) struct EncodedStreams {
+    /// Wire bytes: `u32` stream count, then the stream records.
+    pub bytes: Vec<u8>,
+    /// On-disk bytes of the array spans (Huffman-coded plus raw
+    /// fallback) — the figure `repro inspect` compares against the raw
+    /// tier's `array_bytes` and the `N*H` bound.
+    pub array_disk_bytes: u64,
+    /// Streams that took the Huffman path.
+    pub coded_streams: usize,
+}
+
+/// Split a raw payload into streams and Huffman-code every integer array
+/// stream that pays for itself (including its share of new table bytes);
+/// everything else is stored verbatim. Deterministic for a given payload
+/// and `books` state.
+pub(crate) fn encode_streams(
+    payload: &[u8],
+    books: &mut CodebookSet,
+) -> Result<EncodedStreams, PackError> {
+    let spans = payload_spans(payload)?;
+    // Assemble the stream plan first: raw gaps between spans, and a
+    // per-span coded/raw decision.
+    enum Plan {
+        Raw { from: usize, to: usize },
+        RawArray { from: usize, to: usize },
+        Coded { book: CodeBook, id_hint: Option<u32>, span: ArraySpan },
+    }
+    let mut plan: Vec<Plan> = Vec::new();
+    let mut pos = 0usize;
+    let mut push_raw = |plan: &mut Vec<Plan>, from: usize, to: usize| {
+        if to > from {
+            // Merge adjacent raw runs so structural gaps and fallback
+            // arrays don't fragment into needless stream records.
+            if let Some(Plan::Raw { to: prev_to, .. }) = plan.last_mut() {
+                *prev_to = to;
+                return;
+            }
+            plan.push(Plan::Raw { from, to });
+        }
+    };
+    for span in spans {
+        if span.offset > pos {
+            push_raw(&mut plan, pos, span.offset);
+        }
+        pos = span.offset + span.byte_len();
+        if span.float || span.count > u32::MAX as usize {
+            push_raw(&mut plan, span.offset, pos);
+            continue;
+        }
+        let raw_len = span.byte_len();
+        let syms = span_symbols(payload, &span);
+        let max_sym = *syms.iter().max().expect("non-empty span") as usize;
+        // A table stores one byte per alphabet slot — bail before even
+        // counting frequencies when the alphabet alone dwarfs the data.
+        if max_sym >= MAX_ALPHABET || max_sym + 1 > 8 * raw_len {
+            plan.push(Plan::RawArray { from: span.offset, to: pos });
+            continue;
+        }
+        let mut freq = vec![0u64; max_sym + 1];
+        for &s in &syms {
+            freq[s as usize] += 1;
+        }
+        let Some(book) = CodeBook::from_frequencies(&freq) else {
+            plan.push(Plan::RawArray { from: span.offset, to: pos });
+            continue;
+        };
+        let coded_len = (book.cost_bits(&freq) as usize).div_ceil(8);
+        let table_cost = books.marginal_bytes(&book);
+        if coded_len + CODED_STREAM_OVERHEAD + table_cost
+            < raw_len + RAW_STREAM_OVERHEAD
+        {
+            let id_hint = books.index.get(&book.lens).copied();
+            plan.push(Plan::Coded { book, id_hint, span });
+        } else {
+            plan.push(Plan::RawArray { from: span.offset, to: pos });
+        }
+    }
+    if payload.len() > pos {
+        push_raw(&mut plan, pos, payload.len());
+    }
+
+    let mut out = Vec::new();
+    put_u32(&mut out, plan.len() as u32);
+    let mut array_disk_bytes = 0u64;
+    let mut coded_streams = 0usize;
+    for step in plan {
+        match step {
+            Plan::Raw { from, to } => {
+                out.push(STREAM_RAW);
+                put_u64(&mut out, (to - from) as u64);
+                out.extend_from_slice(&payload[from..to]);
+            }
+            Plan::RawArray { from, to } => {
+                out.push(STREAM_RAW_ARRAY);
+                put_u64(&mut out, (to - from) as u64);
+                out.extend_from_slice(&payload[from..to]);
+                array_disk_bytes += (to - from) as u64;
+            }
+            Plan::Coded { book, id_hint, span } => {
+                let codes = book.codes()?;
+                let id = match id_hint {
+                    Some(id) => id,
+                    None => books.intern(book),
+                };
+                let mut bits = BitWriter::new();
+                for &s in &span_symbols(payload, &span) {
+                    let (code, len) = codes[s as usize];
+                    bits.put(code, len);
+                }
+                let coded = bits.finish();
+                out.push(STREAM_CODED);
+                out.push(span.width as u8);
+                put_u32(&mut out, id);
+                put_u32(&mut out, span.count as u32);
+                put_u64(&mut out, coded.len() as u64);
+                out.extend_from_slice(&coded);
+                array_disk_bytes += coded.len() as u64;
+                coded_streams += 1;
+            }
+        }
+    }
+    Ok(EncodedStreams {
+        bytes: out,
+        array_disk_bytes,
+        coded_streams,
+    })
+}
+
+/// A reconstructed raw payload plus the accounting of the coded bytes it
+/// came from.
+pub(crate) struct DecodedStreams {
+    pub payload: Vec<u8>,
+    pub array_disk_bytes: u64,
+    pub coded_streams: usize,
+}
+
+/// Inverse of [`encode_streams`]: read the stream list from `cur` and
+/// reconstruct the exact raw payload bytes. `max_len` bounds the
+/// reconstruction (the declared raw payload length) so corrupt counts
+/// cannot balloon memory.
+pub(crate) fn decode_streams(
+    cur: &mut Cursor<'_>,
+    books: &[Decoder],
+    max_len: usize,
+) -> Result<DecodedStreams, PackError> {
+    let n_streams = cur.u32_len("stream count")?;
+    let mut payload: Vec<u8> = Vec::new();
+    let mut array_disk_bytes = 0u64;
+    let mut coded_streams = 0usize;
+    for _ in 0..n_streams {
+        match cur.u8()? {
+            k @ (STREAM_RAW | STREAM_RAW_ARRAY) => {
+                let len = cur.u64_len("raw stream length")?;
+                let bytes = cur.take(len)?;
+                if payload.len() + len > max_len {
+                    return Err(PackError::malformed(
+                        "streams overrun the declared payload length".to_string(),
+                    ));
+                }
+                payload.extend_from_slice(bytes);
+                if k == STREAM_RAW_ARRAY {
+                    array_disk_bytes += len as u64;
+                }
+            }
+            STREAM_CODED => {
+                let width = cur.u8()? as usize;
+                if !matches!(width, 1 | 2 | 4) {
+                    return Err(PackError::malformed(format!(
+                        "coded stream has invalid element width {width}"
+                    )));
+                }
+                let id = cur.u32_len("codebook id")?;
+                let count = cur.u32_len("coded symbol count")?;
+                let coded_len = cur.u64_len("coded stream length")?;
+                let coded = cur.take(coded_len)?;
+                let dec = books.get(id).ok_or_else(|| {
+                    PackError::malformed(format!("coded stream references unknown codebook {id}"))
+                })?;
+                let decoded_len = count
+                    .checked_mul(width)
+                    .ok_or_else(|| PackError::malformed("coded stream size overflow"))?;
+                if payload.len() + decoded_len > max_len {
+                    return Err(PackError::malformed(
+                        "streams overrun the declared payload length".to_string(),
+                    ));
+                }
+                let mut bits = BitReader::new(coded);
+                for _ in 0..count {
+                    let sym = dec.symbol(&mut bits)?;
+                    if width < 4 && sym >> (8 * width) != 0 {
+                        return Err(PackError::malformed(format!(
+                            "decoded symbol {sym} does not fit a {width}-byte element"
+                        )));
+                    }
+                    payload.extend_from_slice(&sym.to_le_bytes()[..width]);
+                }
+                if bits.bytes_consumed() != coded.len() {
+                    return Err(PackError::malformed(
+                        "coded stream has trailing bytes".to_string(),
+                    ));
+                }
+                array_disk_bytes += coded_len as u64;
+                coded_streams += 1;
+            }
+            other => {
+                return Err(PackError::malformed(format!(
+                    "unknown stream kind {other}"
+                )))
+            }
+        }
+    }
+    Ok(DecodedStreams {
+        payload,
+        array_disk_bytes,
+        coded_streams,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FormatKind;
+    use crate::util::Rng;
+
+    fn roundtrip(syms: &[u32], width: usize) {
+        let max = *syms.iter().max().unwrap() as usize;
+        let mut freq = vec![0u64; max + 1];
+        for &s in syms {
+            freq[s as usize] += 1;
+        }
+        let book = CodeBook::from_frequencies(&freq).expect("book");
+        let codes = book.codes().unwrap();
+        let mut bits = BitWriter::new();
+        for &s in syms {
+            let (c, l) = codes[s as usize];
+            assert!(l >= 1, "present symbol {s} must have a code");
+            bits.put(c, l);
+        }
+        let coded = bits.finish();
+        assert_eq!(coded.len(), (book.cost_bits(&freq) as usize).div_ceil(8));
+        let dec = book.decoder().unwrap();
+        let mut rd = BitReader::new(&coded);
+        let back: Vec<u32> = (0..syms.len()).map(|_| dec.symbol(&mut rd).unwrap()).collect();
+        assert_eq!(back, syms);
+        assert_eq!(rd.bytes_consumed(), coded.len());
+        // Round-trip through the wire form too.
+        let mut wire = Vec::new();
+        book.encode_into(&mut wire);
+        assert_eq!(wire.len(), book.wire_bytes());
+        let back_book = CodeBook::decode_from(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(back_book, book);
+        let _ = width;
+    }
+
+    #[test]
+    fn skewed_stream_roundtrips_below_fixed_width() {
+        let mut rng = Rng::new(0xC0DE);
+        // Zipf-ish skew over 17 symbols.
+        let syms: Vec<u32> = (0..4096)
+            .map(|_| {
+                let r = rng.below(100);
+                if r < 60 {
+                    0
+                } else if r < 80 {
+                    1
+                } else {
+                    2 + rng.below(15) as u32
+                }
+            })
+            .collect();
+        roundtrip(&syms, 1);
+        let max = *syms.iter().max().unwrap() as usize;
+        let mut freq = vec![0u64; max + 1];
+        for &s in &syms {
+            freq[s as usize] += 1;
+        }
+        let book = CodeBook::from_frequencies(&freq).unwrap();
+        // A skewed distribution must beat the 8-bit raw width.
+        assert!(book.cost_bits(&freq) < 8 * syms.len() as u64);
+    }
+
+    #[test]
+    fn single_symbol_stream_is_one_bit_per_element() {
+        let syms = vec![7u32; 300];
+        roundtrip(&syms, 2);
+        let mut freq = vec![0u64; 8];
+        freq[7] = 300;
+        let book = CodeBook::from_frequencies(&freq).unwrap();
+        assert_eq!(book.cost_bits(&freq), 300);
+    }
+
+    #[test]
+    fn fibonacci_frequencies_respect_the_length_limit() {
+        // Fibonacci weights build maximally skewed Huffman trees — depth
+        // would exceed MAX_CODE_LEN without the limiting step.
+        let mut freq = vec![0u64; 24];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freq.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let book = CodeBook::from_frequencies(&freq).unwrap();
+        assert!(book.lens.iter().all(|&l| (l as usize) <= MAX_CODE_LEN));
+        // Still a prefix code after limiting: encode/decode every symbol
+        // through the reshaped tree.
+        let codes = book.codes().unwrap();
+        let syms: Vec<u32> = (0..24).collect();
+        let mut bits = BitWriter::new();
+        for &s in &syms {
+            let (c, l) = codes[s as usize];
+            bits.put(c, l);
+        }
+        let coded = bits.finish();
+        let dec = book.decoder().unwrap();
+        let mut rd = BitReader::new(&coded);
+        let back: Vec<u32> = (0..24).map(|_| dec.symbol(&mut rd).unwrap()).collect();
+        assert_eq!(back, syms);
+    }
+
+    #[test]
+    fn oversubscribed_table_is_rejected() {
+        // Three 1-bit codes violate Kraft.
+        let book = CodeBook { lens: vec![1, 1, 1] };
+        assert!(book.decoder().is_err());
+        let mut wire = Vec::new();
+        book.encode_into(&mut wire);
+        assert!(CodeBook::decode_from(&mut Cursor::new(&wire)).is_err());
+        // Over-long lengths are rejected too.
+        let book = CodeBook { lens: vec![1, 17] };
+        assert!(book.decoder().is_err());
+    }
+
+    #[test]
+    fn truncated_and_invalid_streams_error_cleanly() {
+        let mut freq = vec![0u64; 3];
+        freq[0] = 5;
+        freq[1] = 3;
+        freq[2] = 1;
+        let book = CodeBook::from_frequencies(&freq).unwrap();
+        let dec = book.decoder().unwrap();
+        // Empty stream: first symbol read fails.
+        let mut rd = BitReader::new(&[]);
+        assert!(dec.symbol(&mut rd).is_err());
+        // An all-ones byte eventually walks past every level of an
+        // incomplete tree or runs out of bits — error either way.
+        let mut rd = BitReader::new(&[0xFF]);
+        let mut got_err = false;
+        for _ in 0..16 {
+            if dec.symbol(&mut rd).is_err() {
+                got_err = true;
+                break;
+            }
+        }
+        let _ = got_err; // decoding may legitimately yield symbols first
+    }
+
+    #[test]
+    fn recorded_spans_cover_exactly_the_accounted_array_bytes() {
+        // The recorder must discover precisely the bytes the formats
+        // account as "array bytes" — the invariant the whole tier
+        // stands on. (Emitted.arrays == analytic bits / 8 is already
+        // asserted by the pack tests.)
+        let m = crate::paper_example_matrix();
+        for kind in FormatKind::ALL {
+            let any = AnyMatrix::encode(kind, &m);
+            let mut payload = Vec::new();
+            let emitted = any.encode_into(&mut payload);
+            let spans = payload_spans(&payload).expect("spans");
+            let covered: usize = spans.iter().map(|s| s.byte_len()).sum();
+            assert_eq!(
+                covered, emitted.arrays,
+                "{kind:?}: recorded spans must cover the accounted arrays"
+            );
+            for s in &spans {
+                assert!(s.offset + s.byte_len() <= payload.len());
+            }
+        }
+    }
+
+    #[test]
+    fn stream_encode_reconstructs_every_format_bit_identically() {
+        let mut rng = Rng::new(0xBEEF);
+        let values = [0.0f32, 0.0, 0.0, 0.5, -0.5, 1.5];
+        let data: Vec<f32> = (0..48 * 31).map(|_| values[rng.below(6)]).collect();
+        let m = crate::formats::Dense::from_vec(48, 31, data);
+        let mut books = CodebookSet::new();
+        let mut blobs = Vec::new();
+        for kind in FormatKind::ALL {
+            let any = AnyMatrix::encode(kind, &m);
+            let mut payload = Vec::new();
+            any.encode_into(&mut payload);
+            let enc = encode_streams(&payload, &mut books).expect("encode");
+            blobs.push((kind, payload, enc));
+        }
+        let decs: Vec<Decoder> = {
+            let sec = books.encode_section();
+            decode_codebooks(&sec).expect("codebooks")
+        };
+        for (kind, payload, enc) in blobs {
+            let mut cur = Cursor::new(&enc.bytes);
+            let dec = decode_streams(&mut cur, &decs, payload.len()).expect("decode");
+            assert_eq!(cur.remaining(), 0);
+            assert_eq!(dec.payload, payload, "{kind:?}: reconstruction differs");
+            assert_eq!(dec.array_disk_bytes, enc.array_disk_bytes);
+            assert_eq!(dec.coded_streams, enc.coded_streams);
+        }
+    }
+
+    #[test]
+    fn identical_tables_are_interned_once() {
+        let mut books = CodebookSet::new();
+        let mut freq = vec![0u64; 4];
+        freq[0] = 10;
+        freq[1] = 5;
+        freq[2] = 3;
+        freq[3] = 1;
+        let b1 = CodeBook::from_frequencies(&freq).unwrap();
+        let b2 = CodeBook::from_frequencies(&freq).unwrap();
+        assert!(books.marginal_bytes(&b1) > 0);
+        let id1 = books.intern(b1);
+        assert_eq!(books.marginal_bytes(&b2), 0);
+        let id2 = books.intern(b2);
+        assert_eq!(id1, id2);
+        assert_eq!(books.len(), 1);
+    }
+}

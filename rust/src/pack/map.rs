@@ -80,10 +80,13 @@ mod ffi {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
     }
 
     pub const PROT_READ: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
+    /// `MADV_WILLNEED` — 3 on both Linux and macOS.
+    pub const MADV_WILLNEED: c_int = 3;
 }
 
 impl PackMap {
@@ -182,6 +185,39 @@ impl PackMap {
             Backing::Heap { .. } => false,
         }
     }
+
+    /// Ask the kernel to prefault `len` bytes starting at `offset` —
+    /// `madvise(MADV_WILLNEED)` on the containing pages. Purely a hint:
+    /// errors (and the heap backing, which is already resident) are
+    /// ignored, and access behavior is unchanged either way. Used by
+    /// `PackOptions::prefault` to pull a pack's weight arrays into the
+    /// page cache ahead of the first cold forward pass.
+    pub fn advise_willneed(&self, offset: usize, len: usize) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mmap { ptr, len: map_len } = &self.backing {
+            if len == 0 || offset >= *map_len {
+                return;
+            }
+            let end = offset.saturating_add(len).min(*map_len);
+            // Page-align downward: madvise requires a page-aligned start
+            // address. 4096 is the base page size on every 64-bit unix we
+            // target; on larger-page kernels the call fails EINVAL and is
+            // ignored, like any other refused hint.
+            let start = offset & !4095;
+            // SAFETY: [start, end) lies inside the owned mapping.
+            unsafe {
+                ffi::madvise(
+                    ptr.add(start) as *mut std::os::raw::c_void,
+                    end - start,
+                    ffi::MADV_WILLNEED,
+                );
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            let _ = (offset, len);
+        }
+    }
 }
 
 fn heap_from_reader(r: &mut impl Read, len: usize) -> Result<Backing, PackError> {
@@ -242,6 +278,27 @@ mod tests {
         // mode (one map, many engines).
         let second = map.clone();
         assert!(std::sync::Arc::ptr_eq(&map, &second));
+    }
+
+    #[test]
+    fn advise_willneed_is_a_safe_no_op_everywhere() {
+        // Heap backing: nothing to advise. Mapped backing: a hint the
+        // kernel may refuse. Either way the bytes are unchanged and no
+        // range — empty, interior, overhanging, out of bounds — panics.
+        let data: Vec<u8> = (0..16384).map(|i| (i * 7) as u8).collect();
+        let heap = PackMap::from_bytes(&data);
+        let path = std::env::temp_dir().join(format!("cer-willneed-{}.bin", std::process::id()));
+        std::fs::write(&path, &data).unwrap();
+        let mapped = PackMap::open(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        for map in [&heap, &mapped] {
+            map.advise_willneed(0, map.len());
+            map.advise_willneed(5000, 100);
+            map.advise_willneed(0, 0);
+            map.advise_willneed(map.len() - 1, usize::MAX);
+            map.advise_willneed(map.len() + 10, 8);
+            assert_eq!(map.bytes(), &data[..]);
+        }
     }
 
     #[test]

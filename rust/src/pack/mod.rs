@@ -8,12 +8,12 @@
 //! provenance
 //! manifest — into a single versioned `.cerpack` file, and loads it back
 //! without re-running pruning, clustering, encoding or format selection
-//! (the engine cold-start path, [`crate::coordinator::Engine::from_pack`]).
+//! (the engine cold-start path, [`crate::coordinator::PackOptions`]).
 //!
 //! Two readers share the wire format and every validation rule:
 //! [`Pack::from_bytes`] copies each array into owned storage, while
-//! [`Pack::from_map`] (and [`Pack::open_mapped`] /
-//! [`crate::coordinator::Engine::from_pack_mmap`]) decodes over a shared
+//! [`Pack::from_map`] (and [`Pack::open_mapped`] / the engine's
+//! `PackOptions::new(path).mmap(true).open()`) decodes over a shared
 //! [`map::PackMap`] and hands back zero-copy [`crate::formats::Storage`]
 //! views — the arrays are already written little-endian at their natural
 //! alignment, so no per-array heap copy is made and any number of
@@ -25,18 +25,42 @@
 //! offset  size  field
 //! 0       8     magic  b"CERPACK\0"
 //! 8       2     version (= 1)
-//! 10      2     flags   (= 0, reserved)
+//! 10      2     flags   (bit 0 = entropy-coded sections present;
+//!                        all other bits reserved, rejected)
 //! 12      4     section count  (u32)
 //! 16      24×n  section table, one entry per section:
-//!                   u32 kind        1 = manifest, 2 = layer
+//!                   u32 kind        1 = manifest, 2 = layer,
+//!                                   3 = codebooks, 4 = coded layer
 //!                   u32 crc32       CRC-32 (IEEE) of the raw section bytes
 //!                   u64 offset      absolute file offset (8-byte aligned)
 //!                   u64 len         section byte length (before padding)
 //! ...           sections, each zero-padded to an 8-byte boundary
 //! ```
 //!
-//! The first section is the **manifest** (exactly one per file); it is
-//! followed by one **layer** section per layer, in forward order.
+//! The first **table entry** is the **manifest** (exactly one per file);
+//! the layer entries follow in forward layer order. Physical section
+//! order in the file is unconstrained — the streaming writer
+//! ([`stream::PackWriter`]) appends layers first and the manifest last.
+//!
+//! ## Storage tiers
+//!
+//! A layer section comes in two tiers, chosen per layer at write time:
+//!
+//! * **raw** (kind 2) — arrays at their accounted minimal widths, laid
+//!   out at natural alignment so the mapped reader can view them
+//!   zero-copy in place;
+//! * **coded** (kind 4) — the same payload split into streams, with
+//!   every integer array stream canonically Huffman-coded when that is
+//!   smaller than raw (see [`entropy`]); float arrays and structural
+//!   bytes pass through verbatim. A coded layer decodes **once at load**
+//!   into owned storage and stays coded on disk — closing the gap
+//!   between minimal-width bytes and the paper's `N·H` entropy bound.
+//!   Length tables are deduplicated pack-wide in a single codebooks
+//!   section (kind 3) and referenced by id.
+//!
+//! Readers predating the entropy tier reject coded packs cleanly via the
+//! header flag bit ("unsupported flags"); this reader rejects unknown
+//! flag bits and unknown per-section tier bits the same way.
 //!
 //! ## Manifest section
 //!
@@ -76,7 +100,9 @@
 //! paths are bounds-checked and validate structural invariants (monotone
 //! pointer arrays, in-range column indices and codebook references).
 
+pub mod entropy;
 pub mod map;
+pub mod stream;
 pub mod wire;
 
 use std::fmt;
@@ -95,10 +121,23 @@ use wire::{put_f32_array, put_f64, put_string, put_u16, put_u32, put_u64, ArrayL
 pub const MAGIC: [u8; 8] = *b"CERPACK\0";
 /// Container version this build writes and reads.
 pub const VERSION: u16 = 1;
-/// Section kind: provenance manifest (exactly one, first).
+/// Section kind: provenance manifest (exactly one, first table entry).
 pub const SECTION_MANIFEST: u32 = 1;
-/// Section kind: one encoded layer.
+/// Section kind: one encoded layer (raw tier).
 pub const SECTION_LAYER: u32 = 2;
+/// Section kind: the pack-wide deduplicated Huffman code books (at most
+/// one; present only in entropy-coded packs).
+pub const SECTION_CODEBOOKS: u32 = 3;
+/// Section kind: one entropy-coded layer (coded tier; see [`entropy`]).
+pub const SECTION_LAYER_CODED: u32 = 4;
+
+/// Header flag bit: the pack contains entropy-coded sections. Readers
+/// predating the coded tier reject the whole file on this bit — they can
+/// never misparse a coded section as raw.
+pub const FLAG_ENTROPY: u16 = 0x0001;
+/// Coded-section tier bit: canonical Huffman streams. Any other tier bit
+/// is from a future writer and rejected.
+pub const TIER_HUFFMAN: u32 = 0x0000_0001;
 
 const HEADER_BYTES: usize = 16;
 const TABLE_ENTRY_BYTES: usize = 24;
@@ -320,6 +359,45 @@ pub fn build_manifest(network: &str, rationale: &str, layers: &[LayerView<'_>]) 
     }
 }
 
+/// Encode one layer into a raw-tier section body. Returns the section
+/// bytes and the payload's byte accounting; the payload itself is the
+/// trailing `emitted.total` bytes of the section.
+pub(crate) fn encode_layer_section(layer: &LayerView<'_>) -> (Vec<u8>, Emitted) {
+    let mut payload = Vec::new();
+    let emitted = layer.matrix.encode_into(&mut payload);
+    debug_assert_eq!(emitted.total, payload.len());
+    let mut sec = Vec::new();
+    put_string(&mut sec, layer.name);
+    wire::pad_to(&mut sec, 4);
+    put_u32(&mut sec, layer.bias.len() as u32);
+    put_f32_array(&mut sec, layer.bias);
+    put_u64(&mut sec, payload.len() as u64);
+    sec.extend_from_slice(&payload);
+    (sec, emitted)
+}
+
+/// Encode one layer into a coded-tier section body: tier word, name,
+/// bias, declared payload length, then the entropy-coded stream list
+/// (new code books are interned into `books`). Returns the section bytes
+/// plus the coded accounting (on-disk array bytes, Huffman stream
+/// count).
+pub(crate) fn encode_coded_layer_section(
+    layer: &LayerView<'_>,
+    payload: &[u8],
+    books: &mut entropy::CodebookSet,
+) -> Result<(Vec<u8>, u64, usize), PackError> {
+    let enc = entropy::encode_streams(payload, books)?;
+    let mut sec = Vec::new();
+    put_u32(&mut sec, TIER_HUFFMAN);
+    put_string(&mut sec, layer.name);
+    wire::pad_to(&mut sec, 4);
+    put_u32(&mut sec, layer.bias.len() as u32);
+    put_f32_array(&mut sec, layer.bias);
+    put_u64(&mut sec, payload.len() as u64);
+    sec.extend_from_slice(&enc.bytes);
+    Ok((sec, enc.array_disk_bytes, enc.coded_streams))
+}
+
 /// Serialize borrowed layers under `manifest` into a `.cerpack` file
 /// image. Returns the bytes and the manifest as written (measured byte
 /// counts filled in).
@@ -333,19 +411,9 @@ pub fn serialize(manifest: &Manifest, layers: &[LayerView<'_>]) -> (Vec<u8>, Man
     let mut manifest = manifest.clone();
     let mut layer_sections: Vec<Vec<u8>> = Vec::with_capacity(layers.len());
     for (layer, prov) in layers.iter().zip(&mut manifest.layers) {
-        let mut payload = Vec::new();
-        let emitted = layer.matrix.encode_into(&mut payload);
-        debug_assert_eq!(emitted.total, payload.len());
+        let (sec, emitted) = encode_layer_section(layer);
         prov.array_bytes = emitted.arrays as u64;
         prov.payload_bytes = emitted.total as u64;
-
-        let mut sec = Vec::new();
-        put_string(&mut sec, layer.name);
-        wire::pad_to(&mut sec, 4);
-        put_u32(&mut sec, layer.bias.len() as u32);
-        put_f32_array(&mut sec, layer.bias);
-        put_u64(&mut sec, payload.len() as u64);
-        sec.extend_from_slice(&payload);
         layer_sections.push(sec);
     }
     let manifest_section = encode_manifest(&manifest);
@@ -389,6 +457,36 @@ pub fn serialize(manifest: &Manifest, layers: &[LayerView<'_>]) -> (Vec<u8>, Man
     (out, manifest)
 }
 
+/// On-disk footprint of the entropy tier, measured while decoding a
+/// coded pack (`None` on packs written raw). `layer_array_bytes` aligns
+/// with the manifest's layer order: coded layers report the bytes their
+/// array streams actually occupy on disk (Huffman-coded plus raw
+/// fallback); layers stored raw inside a coded pack report their plain
+/// `array_bytes`. This is the measured side of the paper's `N·H` claim —
+/// `repro inspect` prints it next to the analytic entropy bound.
+#[derive(Clone, Debug, Default)]
+pub struct CodedReport {
+    /// Per-layer on-disk array-stream bytes, manifest order.
+    pub layer_array_bytes: Vec<u64>,
+    /// Bytes of the shared (deduplicated) codebooks section.
+    pub codebook_bytes: u64,
+    /// Huffman-coded streams across all layers.
+    pub coded_streams: usize,
+}
+
+impl CodedReport {
+    /// Total on-disk array bytes across layers (excluding code books).
+    pub fn total_array_bytes(&self) -> u64 {
+        self.layer_array_bytes.iter().sum()
+    }
+
+    /// Total on-disk bytes attributable to the arrays: streams plus the
+    /// shared code books that decode them.
+    pub fn total_on_disk_bytes(&self) -> u64 {
+        self.total_array_bytes() + self.codebook_bytes
+    }
+}
+
 /// An in-memory `.cerpack`: manifest + layers.
 ///
 /// Note: on a freshly built (not yet written) pack, the manifest's
@@ -400,6 +498,9 @@ pub fn serialize(manifest: &Manifest, layers: &[LayerView<'_>]) -> (Vec<u8>, Man
 pub struct Pack {
     pub manifest: Manifest,
     pub layers: Vec<PackLayer>,
+    /// Entropy-tier accounting when this pack was decoded from coded
+    /// sections; `None` for raw packs and freshly built ones.
+    pub coded: Option<CodedReport>,
 }
 
 impl Pack {
@@ -424,6 +525,7 @@ impl Pack {
         Pack {
             manifest,
             layers: pack_layers,
+            coded: None,
         }
     }
 
@@ -449,8 +551,8 @@ impl Pack {
     /// Decode a `.cerpack` from memory (checksums verified). Every array
     /// is decoded into owned storage — the historical copying reader.
     pub fn from_bytes(buf: &[u8]) -> Result<Pack, PackError> {
-        let (manifest, layer_slices) = parse_container(buf)?;
-        assemble_pack(manifest, &layer_slices, None)
+        let sections = parse_container(buf)?;
+        assemble_pack(sections, None)
     }
 
     /// Decode a `.cerpack` from a shared [`PackMap`] (checksums verified
@@ -458,16 +560,18 @@ impl Pack {
     /// column indices, biases, and every pointer array whose accounted
     /// width is 32-bit — come back as zero-copy views into `map`; each
     /// view holds an `Arc` clone, so the mapping outlives the pack and
-    /// can back any number of engines at once.
+    /// can back any number of engines at once. Entropy-coded layers are
+    /// the exception: their arrays are Huffman-decoded into owned
+    /// storage (the mapping stays coded on disk).
     pub fn from_map(map: &Arc<PackMap>) -> Result<Pack, PackError> {
-        let (manifest, layer_slices) = parse_container(map.bytes())?;
-        assemble_pack(manifest, &layer_slices, Some(map))
+        let sections = parse_container(map.bytes())?;
+        assemble_pack(sections, Some(map))
     }
 
     /// Open `path` through the shared storage layer (`mmap(2)` where
     /// available, aligned heap read otherwise) and decode it zero-copy.
     /// Returns the map alongside the pack so callers can share it with
-    /// further engines ([`crate::coordinator::Engine::from_pack_map`]).
+    /// further engines ([`crate::coordinator::PackOptions::from_map`]).
     pub fn open_mapped(path: &Path) -> Result<(Arc<PackMap>, Pack), PackError> {
         let map = PackMap::open(path)?;
         let pack = Pack::from_map(&map)?;
@@ -476,13 +580,15 @@ impl Pack {
 }
 
 /// Decode and cross-validate the layer sections against the manifest.
-/// With `map`, arrays are loaded as zero-copy views; without, as owned
-/// copies — identical validation either way.
-fn assemble_pack(
-    manifest: Manifest,
-    layer_slices: &[(usize, &[u8])],
-    map: Option<&Arc<PackMap>>,
-) -> Result<Pack, PackError> {
+/// With `map`, raw-tier arrays are loaded as zero-copy views; without,
+/// as owned copies — identical validation either way. Coded-tier layers
+/// always decode into owned storage.
+fn assemble_pack(sections: Sections<'_>, map: Option<&Arc<PackMap>>) -> Result<Pack, PackError> {
+    let Sections {
+        manifest,
+        layers: layer_slices,
+        codebooks,
+    } = sections;
     if layer_slices.len() != manifest.layers.len() {
         return Err(PackError::malformed(format!(
             "{} layer sections but manifest lists {} layers",
@@ -490,44 +596,79 @@ fn assemble_pack(
             manifest.layers.len()
         )));
     }
+    let books: Vec<entropy::Decoder> = match codebooks {
+        Some(sec) => entropy::decode_codebooks(sec)?,
+        None => Vec::new(),
+    };
+    let any_coded = codebooks.is_some() || layer_slices.iter().any(|s| s.coded);
+    let mut report = CodedReport {
+        codebook_bytes: codebooks.map_or(0, |s| s.len() as u64),
+        ..CodedReport::default()
+    };
     let mut layers: Vec<PackLayer> = Vec::with_capacity(layer_slices.len());
-    for (i, &(off, sec)) in layer_slices.iter().enumerate() {
-        let src = match map {
-            Some(m) => ArrayLoader::mapped(m, off),
-            None => ArrayLoader::owned(),
+    for (i, slice) in layer_slices.iter().enumerate() {
+        let layer = if slice.coded {
+            let (layer, array_disk_bytes, coded_streams) =
+                decode_coded_layer_section(slice.bytes, &books)
+                    .map_err(|e| annotate_layer(e, i))?;
+            report.layer_array_bytes.push(array_disk_bytes);
+            report.coded_streams += coded_streams;
+            layer
+        } else {
+            let src = match map {
+                Some(m) => ArrayLoader::mapped(m, slice.off),
+                None => ArrayLoader::owned(),
+            };
+            report
+                .layer_array_bytes
+                .push(manifest.layers[i].array_bytes);
+            decode_layer_section(slice.bytes, src).map_err(|e| annotate_layer(e, i))?
         };
-        let layer = decode_layer_section(sec, src).map_err(|e| annotate_layer(e, i))?;
-        let prov = &manifest.layers[i];
-        if layer.matrix.rows() != prov.rows as usize
-            || layer.matrix.cols() != prov.cols as usize
-            || layer.matrix.kind() != prov.format
-        {
-            return Err(PackError::malformed(format!(
-                "layer {i}: payload shape/format disagrees with manifest"
-            )));
-        }
-        // Engine invariants, so a checksum-valid but inconsistent file
-        // errors here instead of panicking inside forward():
-        // bias per output row, and consecutive layers must chain.
-        if layer.bias.len() != layer.matrix.rows() {
-            return Err(PackError::malformed(format!(
-                "layer {i}: bias length {} does not match {} rows",
-                layer.bias.len(),
-                layer.matrix.rows()
-            )));
-        }
-        if let Some(prev) = layers.last() {
-            if layer.matrix.cols() != prev.matrix.rows() {
-                return Err(PackError::malformed(format!(
-                    "layer {i}: input dim {} does not chain with previous output dim {}",
-                    layer.matrix.cols(),
-                    prev.matrix.rows()
-                )));
-            }
-        }
+        validate_layer(i, &layer, &manifest.layers[i], layers.last().map(|p| p.matrix.rows()))?;
         layers.push(layer);
     }
-    Ok(Pack { manifest, layers })
+    Ok(Pack {
+        manifest,
+        layers,
+        coded: any_coded.then_some(report),
+    })
+}
+
+/// Cross-validate one decoded layer against its manifest record and the
+/// previous layer's output dimension — shared by both the whole-pack
+/// readers and the streaming [`stream::PackReader`], so a checksum-valid
+/// but inconsistent file errors at load instead of panicking inside
+/// `forward()`.
+pub(crate) fn validate_layer(
+    i: usize,
+    layer: &PackLayer,
+    prov: &LayerProvenance,
+    prev_rows: Option<usize>,
+) -> Result<(), PackError> {
+    if layer.matrix.rows() != prov.rows as usize
+        || layer.matrix.cols() != prov.cols as usize
+        || layer.matrix.kind() != prov.format
+    {
+        return Err(PackError::malformed(format!(
+            "layer {i}: payload shape/format disagrees with manifest"
+        )));
+    }
+    if layer.bias.len() != layer.matrix.rows() {
+        return Err(PackError::malformed(format!(
+            "layer {i}: bias length {} does not match {} rows",
+            layer.bias.len(),
+            layer.matrix.rows()
+        )));
+    }
+    if let Some(prev) = prev_rows {
+        if layer.matrix.cols() != prev {
+            return Err(PackError::malformed(format!(
+                "layer {i}: input dim {} does not chain with previous output dim {prev}",
+                layer.matrix.cols(),
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// (K, p₀, entropy H) of a matrix's element distribution, computed from
@@ -653,13 +794,31 @@ fn annotate_layer(e: PackError, i: usize) -> PackError {
     }
 }
 
-/// Validate header + section table + CRCs; return the parsed manifest and
-/// the raw layer sections — (absolute byte offset, bytes) — in file
-/// order. Section offsets must be 8-byte aligned (the writer always
-/// aligns them; the zero-copy reader depends on it for every array's
-/// natural alignment, so a misaligned offset is rejected as corruption by
-/// both readers).
-fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackError> {
+/// One layer section located inside a pack image: its absolute byte
+/// offset (for zero-copy views), its bytes, and which storage tier it
+/// was written under.
+pub(crate) struct LayerSlice<'a> {
+    pub off: usize,
+    pub bytes: &'a [u8],
+    pub coded: bool,
+}
+
+/// Everything [`parse_container`] extracts from a validated pack image.
+pub(crate) struct Sections<'a> {
+    pub manifest: Manifest,
+    /// Layer sections in table order (raw and coded tiers interleaved).
+    pub layers: Vec<LayerSlice<'a>>,
+    /// The shared code-books section, present iff any layer is coded.
+    pub codebooks: Option<&'a [u8]>,
+}
+
+/// Validate header + section table + CRCs; return the parsed manifest,
+/// the raw/coded layer sections in table order, and the optional shared
+/// code-books section. Section offsets must be 8-byte aligned (the
+/// writer always aligns them; the zero-copy reader depends on it for
+/// every array's natural alignment, so a misaligned offset is rejected
+/// as corruption by both readers).
+pub(crate) fn parse_container(buf: &[u8]) -> Result<Sections<'_>, PackError> {
     if buf.len() < HEADER_BYTES {
         return if buf.len() >= 8 && buf[..8] != MAGIC {
             Err(PackError::BadMagic)
@@ -677,11 +836,12 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackEr
     if version != VERSION {
         return Err(PackError::UnsupportedVersion(version));
     }
-    // Reserved: a future writer setting a flag (e.g. section compression)
-    // must be rejected cleanly, like an unknown version.
-    if flags != 0 {
+    // Reserved: a future writer setting an unknown flag (e.g. a new
+    // coding tier) must be rejected cleanly, like an unknown version.
+    if flags & !FLAG_ENTROPY != 0 {
         return Err(PackError::malformed(format!("unsupported flags 0x{flags:04x}")));
     }
+    let entropy_flagged = flags & FLAG_ENTROPY != 0;
     if n_sections == 0 || n_sections > MAX_SECTIONS {
         return Err(PackError::malformed(format!(
             "implausible section count {n_sections}"
@@ -693,7 +853,8 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackEr
     }
     let mut cur = Cursor::new(&buf[HEADER_BYTES..table_end]);
     let mut manifest: Option<Manifest> = None;
-    let mut layer_slices = Vec::new();
+    let mut layer_slices: Vec<LayerSlice<'_>> = Vec::new();
+    let mut codebooks: Option<&[u8]> = None;
     let mut max_end = table_end as u64;
     for i in 0..n_sections as usize {
         let kind = cur.u32()?;
@@ -724,7 +885,34 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackEr
                 }
                 manifest = Some(decode_manifest(sec)?);
             }
-            SECTION_LAYER => layer_slices.push((off as usize, sec)),
+            SECTION_LAYER => layer_slices.push(LayerSlice {
+                off: off as usize,
+                bytes: sec,
+                coded: false,
+            }),
+            SECTION_LAYER_CODED => {
+                if !entropy_flagged {
+                    return Err(PackError::malformed(
+                        "coded layer section in a pack without the entropy flag",
+                    ));
+                }
+                layer_slices.push(LayerSlice {
+                    off: off as usize,
+                    bytes: sec,
+                    coded: true,
+                });
+            }
+            SECTION_CODEBOOKS => {
+                if !entropy_flagged {
+                    return Err(PackError::malformed(
+                        "code-books section in a pack without the entropy flag",
+                    ));
+                }
+                if codebooks.is_some() {
+                    return Err(PackError::malformed("duplicate code-books section"));
+                }
+                codebooks = Some(sec);
+            }
             other => {
                 return Err(PackError::malformed(format!(
                     "unknown section kind {other}"
@@ -743,7 +931,11 @@ fn parse_container(buf: &[u8]) -> Result<(Manifest, Vec<(usize, &[u8])>), PackEr
     if buf.len() as u64 > expected_len {
         return Err(PackError::malformed("trailing bytes after the last section"));
     }
-    Ok((manifest, layer_slices))
+    Ok(Sections {
+        manifest,
+        layers: layer_slices,
+        codebooks,
+    })
 }
 
 fn encode_manifest(m: &Manifest) -> Vec<u8> {
@@ -819,6 +1011,50 @@ fn decode_layer_section(buf: &[u8], src: ArrayLoader<'_>) -> Result<PackLayer, P
     }
     let matrix = AnyMatrix::decode_from_source(payload, src.advanced(payload_pos))?;
     Ok(PackLayer { name, matrix, bias })
+}
+
+/// Decode a coded-tier layer section: validate the tier word, read the
+/// header fields, Huffman-decode the stream list back into the exact raw
+/// payload bytes, then hand that payload to the ordinary owned decoder —
+/// bit-identity with the raw tier holds by construction. Returns the
+/// layer plus (on-disk array-stream bytes, Huffman stream count).
+pub(crate) fn decode_coded_layer_section(
+    buf: &[u8],
+    books: &[entropy::Decoder],
+) -> Result<(PackLayer, u64, usize), PackError> {
+    let mut cur = Cursor::new(buf);
+    let tier = cur.u32()?;
+    if tier & !TIER_HUFFMAN != 0 {
+        return Err(PackError::malformed(format!(
+            "unknown tier flags 0x{tier:08x}"
+        )));
+    }
+    if tier != TIER_HUFFMAN {
+        return Err(PackError::malformed(
+            "coded layer section with no coding tier set",
+        ));
+    }
+    let name = cur.string()?;
+    cur.align(4)?;
+    let bias_len = cur.u32_len("bias length")?;
+    let bias = ArrayLoader::owned().typed::<f32>(&mut cur, bias_len, "bias")?;
+    let payload_len = cur.u64_len("payload length")?;
+    let dec = entropy::decode_streams(&mut cur, books, payload_len)?;
+    if cur.remaining() != 0 {
+        return Err(PackError::malformed("trailing bytes after coded streams"));
+    }
+    if dec.payload.len() != payload_len {
+        return Err(PackError::malformed(format!(
+            "coded streams reconstruct {} bytes but the section declares {payload_len}",
+            dec.payload.len()
+        )));
+    }
+    let matrix = AnyMatrix::decode_from(&dec.payload)?;
+    Ok((
+        PackLayer { name, matrix, bias },
+        dec.array_disk_bytes,
+        dec.coded_streams,
+    ))
 }
 
 #[cfg(test)]
@@ -950,10 +1186,153 @@ mod tests {
     fn manifest_only_read_skips_payload_decode() {
         let pack = tiny_pack();
         let (bytes, written) = pack.to_bytes();
-        let (manifest, slices) = parse_container(&bytes).unwrap();
-        assert_eq!(slices.len(), 2);
+        let sections = parse_container(&bytes).unwrap();
+        let manifest = &sections.manifest;
+        assert_eq!(sections.layers.len(), 2);
+        assert!(sections.codebooks.is_none());
+        assert!(sections.layers.iter().all(|s| !s.coded));
         assert_eq!(manifest.layers[0].payload_bytes, written.layers[0].payload_bytes);
         assert_eq!(manifest.total_analytic_bits(), written.total_analytic_bits());
         assert!(manifest.dense_baseline_bytes() >= manifest.total_array_bytes());
+    }
+
+    #[test]
+    fn unknown_header_flag_is_rejected() {
+        let (mut bytes, _) = tiny_pack().to_bytes();
+        // Flags live at bytes 10..12 (after magic + version). Bit 0 is
+        // the entropy tier; any other bit must fail like an unknown
+        // version — a v-next writer's packs are rejected, not misparsed.
+        bytes[10] = 0x02;
+        let err = Pack::from_bytes(&bytes).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported flags"),
+            "got: {err}"
+        );
+    }
+
+    /// A pack big and skewed enough that Huffman streams pay for
+    /// themselves: a quantized 48×31 CSER layer (coded tier) chained
+    /// into a small dense layer (floats — stays raw inside the coded
+    /// pack).
+    fn skewed_pack() -> Pack {
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        let values = [0.0f32, 0.0, 0.0, 0.5, -0.5, 1.5];
+        let data: Vec<f32> = (0..48 * 31).map(|_| values[rng.below(6)]).collect();
+        let m = Dense::from_vec(48, 31, data);
+        Pack::from_layers(
+            "unit-test-coded-net",
+            "fixed (test)",
+            vec![
+                (
+                    "fc0".to_string(),
+                    AnyMatrix::encode(FormatKind::Cser, &m),
+                    vec![0.25; 48],
+                ),
+                (
+                    "fc1".to_string(),
+                    AnyMatrix::encode(FormatKind::Dense, &Dense::zeros(3, 48)),
+                    vec![0.0; 3],
+                ),
+            ],
+        )
+    }
+
+    fn coded_image(pack: &Pack) -> Vec<u8> {
+        let opts = stream::EncodeOptions { entropy: true };
+        let mut bytes = std::io::Cursor::new(Vec::new());
+        stream::write_pack(
+            &mut bytes,
+            &pack.manifest,
+            pack.layers.iter().map(PackLayer::view),
+            &opts,
+        )
+        .unwrap();
+        bytes.into_inner()
+    }
+
+    #[test]
+    fn coded_section_requires_the_entropy_flag() {
+        // A coded pack whose header flag is cleared must be rejected:
+        // the flag is the forward-compat gate, so readers that predate
+        // the entropy tier fail on the flag, and readers that know it
+        // insist on consistency.
+        let pack = skewed_pack();
+        let mut bytes = coded_image(&pack);
+        let back = Pack::from_bytes(&bytes).expect("coded pack decodes");
+        let report = back.coded.expect("pack must actually be coded");
+        assert!(report.coded_streams > 0, "fixture produced no coded streams");
+        bytes[10] &= !(FLAG_ENTROPY as u8);
+        let err = Pack::from_bytes(&bytes).unwrap_err();
+        assert!(
+            err.to_string().contains("without the entropy flag"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_tier_flag_is_rejected() {
+        // Build a coded pack, then set a reserved bit in the first coded
+        // layer's tier word (repairing the section CRC so the tier check
+        // itself is what fires).
+        let pack = skewed_pack();
+        let mut bytes = coded_image(&pack);
+        let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let coded_at = (0..n_sections)
+            .map(|i| HEADER_BYTES + i * TABLE_ENTRY_BYTES)
+            .find(|&e| {
+                u32::from_le_bytes(bytes[e..e + 4].try_into().unwrap()) == SECTION_LAYER_CODED
+            })
+            .expect("a coded layer section");
+        let off = u64::from_le_bytes(bytes[coded_at + 8..coded_at + 16].try_into().unwrap())
+            as usize;
+        let len = u64::from_le_bytes(bytes[coded_at + 16..coded_at + 24].try_into().unwrap())
+            as usize;
+        bytes[off + 1] |= 0x80; // tier word bit 15
+        let crc = crc32(&bytes[off..off + len]);
+        bytes[coded_at + 4..coded_at + 8].copy_from_slice(&crc.to_le_bytes());
+        let err = Pack::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("unknown tier flags"), "got: {err}");
+    }
+
+    #[test]
+    fn coded_pack_roundtrips_bit_identically() {
+        let pack = skewed_pack();
+        let bytes = coded_image(&pack);
+        let back = Pack::from_bytes(&bytes).expect("decode coded");
+        let report = back.coded.as_ref().expect("coded report");
+        assert_eq!(report.layer_array_bytes.len(), back.layers.len());
+        assert!(report.coded_streams > 0);
+        // Coded on-disk array bytes never exceed the raw tier's.
+        assert!(report.total_array_bytes() <= back.manifest.total_array_bytes());
+        for (a, b) in pack.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.matrix.kind(), b.matrix.kind());
+            assert_eq!(a.matrix.to_dense(), b.matrix.to_dense());
+        }
+        // The coded image re-serializes raw into the canonical bytes —
+        // and the mapped reader agrees with the owned one.
+        let (raw_bytes, _) = pack.to_bytes();
+        let (back_bytes, _) = back.to_bytes();
+        assert_eq!(raw_bytes, back_bytes);
+        let map = PackMap::from_bytes(&bytes);
+        let mapped = Pack::from_map(&map).expect("decode coded via map");
+        let (mapped_bytes, _) = mapped.to_bytes();
+        assert_eq!(raw_bytes, mapped_bytes);
+    }
+
+    #[test]
+    fn entropy_writer_falls_back_to_raw_when_coding_cannot_pay() {
+        // Tiny layers: every candidate stream costs more coded than raw,
+        // so the writer must emit a plain raw pack — entropy flag clear,
+        // no code-books section — that decodes to the same network.
+        let pack = tiny_pack();
+        let bytes = coded_image(&pack);
+        assert_eq!(u16::from_le_bytes(bytes[10..12].try_into().unwrap()), 0);
+        let back = Pack::from_bytes(&bytes).unwrap();
+        assert!(back.coded.is_none());
+        let (raw, _) = pack.to_bytes();
+        let (again, _) = back.to_bytes();
+        assert_eq!(raw, again);
     }
 }

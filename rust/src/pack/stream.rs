@@ -1,0 +1,694 @@
+//! Streaming `.cerpack` I/O: encode and load layer-at-a-time with
+//! bounded peak memory.
+//!
+//! The whole-pack paths ([`super::serialize`], [`super::Pack::from_bytes`])
+//! materialize every section at once — fine for the nets in the zoo,
+//! wrong for packs larger than RAM. [`PackWriter`] appends one encoded
+//! layer section per [`PackWriter::add_layer`] call and holds only the
+//! section table, per-layer provenance, and the shared Huffman code books
+//! in memory; [`PackReader`] walks the table and decodes one layer per
+//! [`PackReader::next_layer`] call, so peak memory is one layer plus the
+//! manifest on both sides.
+//!
+//! ## File layout vs the buffered writer
+//!
+//! The streaming writer cannot know section sizes up front, so it
+//! reserves the header + section table region (with two spare slots for
+//! the manifest and code books — unused slack bytes are zero and legal:
+//! readers locate sections through the table, never by adjacency), then
+//! appends 8-aligned layer sections as they arrive, the code books next,
+//! and the manifest **physically last**; a final seek back to offset 0
+//! writes the real header and table with the manifest as table entry 0,
+//! exactly as the container contract requires.
+//!
+//! ## Tier selection
+//!
+//! With [`EncodeOptions::entropy`] set, every layer is trial-encoded
+//! against a clone of the shared [`entropy::CodebookSet`] and written as
+//! a coded section only when at least one stream Huffman-codes *and* the
+//! coded section is smaller than the raw one; otherwise the raw section
+//! is kept and the clone discarded, so losing layers never leave stray
+//! tables in the code-books section. A pack in which no layer wins comes
+//! out as a plain raw pack: entropy flag clear, no code-books section.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::entropy;
+use super::wire::{put_u16, put_u32, put_u64, ArrayLoader, Cursor};
+use super::{
+    annotate_layer, decode_coded_layer_section, decode_layer_section, decode_manifest,
+    element_stats, encode_coded_layer_section, encode_layer_section, encode_manifest,
+    validate_layer, CodedReport, LayerProvenance, LayerView, Manifest, PackError, PackLayer,
+    FLAG_ENTROPY, HEADER_BYTES, MAGIC, MAX_SECTIONS, SECTION_CODEBOOKS, SECTION_LAYER,
+    SECTION_LAYER_CODED, SECTION_MANIFEST, TABLE_ENTRY_BYTES, VERSION,
+};
+use crate::util::crc32::crc32;
+
+/// How [`PackWriter`] encodes layer sections.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodeOptions {
+    /// Write the entropy-coded tier where it pays for itself (see the
+    /// module docs); `false` reproduces the raw tier everywhere.
+    pub entropy: bool,
+}
+
+/// What a finished write produced: the file size, the manifest as
+/// written (measured byte fields filled in), and — when any section took
+/// the coded tier — the coded on-disk accounting.
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    /// Total bytes of the finished file image.
+    pub file_bytes: u64,
+    /// Manifest as written.
+    pub manifest: Manifest,
+    /// Entropy-tier accounting; `None` when the pack came out raw.
+    pub coded: Option<CodedReport>,
+}
+
+/// Streaming `.cerpack` encoder: one layer in memory at a time.
+pub struct PackWriter<W: Write + Seek> {
+    w: W,
+    network: String,
+    opts: EncodeOptions,
+    capacity: usize,
+    /// (kind, crc, offset, len) of every section written so far, in
+    /// physical order — layers, then code books, then manifest.
+    table: Vec<(u32, u32, u64, u64)>,
+    provs: Vec<LayerProvenance>,
+    books: entropy::CodebookSet,
+    report: CodedReport,
+    any_coded: bool,
+    /// Next 8-aligned write offset (the writer keeps `w` positioned here
+    /// between calls).
+    offset: u64,
+}
+
+impl PackWriter<File> {
+    /// Create `path` and write a streaming pack into it. `capacity` is
+    /// the maximum number of layers (the table region is reserved up
+    /// front); fewer is fine.
+    pub fn create(
+        path: &Path,
+        network: &str,
+        capacity: usize,
+        opts: EncodeOptions,
+    ) -> Result<PackWriter<File>, PackError> {
+        PackWriter::new(File::create(path)?, network, capacity, opts)
+    }
+}
+
+impl<W: Write + Seek> PackWriter<W> {
+    /// Start a pack of at most `capacity` layers on `w` (positioned at
+    /// the start of the eventual file).
+    pub fn new(
+        mut w: W,
+        network: &str,
+        capacity: usize,
+        opts: EncodeOptions,
+    ) -> Result<PackWriter<W>, PackError> {
+        // +2: manifest and (possibly unused) code-books slots.
+        let slots = capacity
+            .checked_add(2)
+            .filter(|&n| n <= MAX_SECTIONS as usize)
+            .ok_or_else(|| {
+                PackError::malformed(format!("pack writer capacity {capacity} is implausible"))
+            })?;
+        let reserved = HEADER_BYTES + slots * TABLE_ENTRY_BYTES;
+        debug_assert_eq!(reserved % 8, 0);
+        w.seek(SeekFrom::Start(0))?;
+        // Zero the reserved region now so unused table slack is
+        // deterministic bytes even on writers without sparse semantics.
+        w.write_all(&vec![0u8; reserved])?;
+        Ok(PackWriter {
+            w,
+            network: network.to_string(),
+            opts,
+            capacity,
+            table: Vec::with_capacity(slots),
+            provs: Vec::with_capacity(capacity),
+            books: entropy::CodebookSet::new(),
+            report: CodedReport::default(),
+            any_coded: false,
+            offset: reserved as u64,
+        })
+    }
+
+    /// Encode and append one layer (provenance is measured here, exactly
+    /// as [`super::build_manifest`] would). Layers must arrive in
+    /// forward network order.
+    pub fn add_layer(&mut self, layer: LayerView<'_>, rationale: &str) -> Result<(), PackError> {
+        if self.provs.len() == self.capacity {
+            return Err(PackError::malformed(format!(
+                "pack writer capacity {} exceeded",
+                self.capacity
+            )));
+        }
+        let (mut sec, emitted) = encode_layer_section(&layer);
+        let mut kind = SECTION_LAYER;
+        let mut array_disk_bytes = emitted.arrays as u64;
+        if self.opts.entropy {
+            let payload = &sec[sec.len() - emitted.total..];
+            let mut trial = self.books.clone();
+            let (coded_sec, disk, streams) =
+                encode_coded_layer_section(&layer, payload, &mut trial)?;
+            if streams > 0 && coded_sec.len() < sec.len() {
+                self.books = trial;
+                self.report.coded_streams += streams;
+                self.any_coded = true;
+                kind = SECTION_LAYER_CODED;
+                array_disk_bytes = disk;
+                sec = coded_sec;
+            }
+        }
+        self.report.layer_array_bytes.push(array_disk_bytes);
+        self.write_section(kind, &sec)?;
+        let (k, p0, entropy) = element_stats(layer.matrix);
+        self.provs.push(LayerProvenance {
+            name: layer.name.to_string(),
+            format: layer.matrix.kind(),
+            rows: layer.matrix.rows() as u32,
+            cols: layer.matrix.cols() as u32,
+            k: k as u32,
+            entropy,
+            p0,
+            analytic_bits: layer.matrix.storage().total_bits(),
+            array_bytes: emitted.arrays as u64,
+            payload_bytes: emitted.total as u64,
+            rationale: rationale.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Write the code books and manifest, then back-patch the header and
+    /// section table. Returns the finished pack's summary.
+    pub fn finish(mut self) -> Result<PackSummary, PackError> {
+        if self.any_coded {
+            let sec = self.books.encode_section();
+            self.report.codebook_bytes = sec.len() as u64;
+            self.write_section(SECTION_CODEBOOKS, &sec)?;
+        }
+        let manifest = Manifest {
+            network: self.network.clone(),
+            created_by: format!("cer {} cerpack v{VERSION}", env!("CARGO_PKG_VERSION")),
+            layers: std::mem::take(&mut self.provs),
+        };
+        let man_sec = encode_manifest(&manifest);
+        self.write_section(SECTION_MANIFEST, &man_sec)?;
+        let file_bytes = self.offset;
+
+        let mut head = Vec::with_capacity(HEADER_BYTES + self.table.len() * TABLE_ENTRY_BYTES);
+        head.extend_from_slice(&MAGIC);
+        put_u16(&mut head, VERSION);
+        put_u16(&mut head, if self.any_coded { FLAG_ENTROPY } else { 0 });
+        put_u32(&mut head, self.table.len() as u32);
+        // The manifest was written physically last but must be table
+        // entry 0; physical placement is free, table order is contract.
+        let man_entry = self.table.pop().expect("manifest entry just pushed");
+        for &(kind, crc, off, len) in std::iter::once(&man_entry).chain(self.table.iter()) {
+            put_u32(&mut head, kind);
+            put_u32(&mut head, crc);
+            put_u64(&mut head, off);
+            put_u64(&mut head, len);
+        }
+        self.w.seek(SeekFrom::Start(0))?;
+        self.w.write_all(&head)?;
+        self.w.flush()?;
+        Ok(PackSummary {
+            file_bytes,
+            manifest,
+            coded: self.any_coded.then_some(self.report),
+        })
+    }
+
+    fn write_section(&mut self, kind: u32, sec: &[u8]) -> Result<(), PackError> {
+        self.table
+            .push((kind, crc32(sec), self.offset, sec.len() as u64));
+        self.w.write_all(sec)?;
+        let pad = (8 - sec.len() % 8) % 8;
+        self.w.write_all(&[0u8; 8][..pad])?;
+        self.offset += (sec.len() + pad) as u64;
+        Ok(())
+    }
+}
+
+/// Write a whole pack through [`PackWriter`]: one call per layer, table
+/// sized exactly from the manifest. `manifest` supplies the network name
+/// and per-layer rationales; the measured fields are re-derived during
+/// the write (deterministically, so the returned manifest matches a
+/// [`super::serialize`] of the same layers).
+pub fn write_pack<'a, W, I>(
+    w: W,
+    manifest: &Manifest,
+    layers: I,
+    opts: &EncodeOptions,
+) -> Result<PackSummary, PackError>
+where
+    W: Write + Seek,
+    I: IntoIterator<Item = LayerView<'a>>,
+{
+    let mut writer = PackWriter::new(w, &manifest.network, manifest.layers.len(), *opts)?;
+    let mut n = 0usize;
+    for layer in layers {
+        let rationale = manifest
+            .layers
+            .get(n)
+            .map(|p| p.rationale.as_str())
+            .unwrap_or_default();
+        writer.add_layer(layer, rationale)?;
+        n += 1;
+    }
+    if n != manifest.layers.len() {
+        return Err(PackError::malformed(format!(
+            "{n} layers written but the manifest lists {}",
+            manifest.layers.len()
+        )));
+    }
+    writer.finish()
+}
+
+struct LayerEntry {
+    /// Index in the section table (for checksum error reporting).
+    section: usize,
+    off: u64,
+    len: u64,
+    crc: u32,
+    coded: bool,
+}
+
+/// Streaming `.cerpack` decoder: validates the container shape and the
+/// manifest up front, then decodes one layer per [`PackReader::next_layer`]
+/// call — peak memory is one layer section, never the whole file. Every
+/// validation rule of [`super::Pack::from_bytes`] applies (CRCs, shape/
+/// format/chaining cross-checks); arrays always come back owned.
+pub struct PackReader<R: Read + Seek> {
+    r: R,
+    manifest: Manifest,
+    entries: Vec<LayerEntry>,
+    books: Vec<entropy::Decoder>,
+    report: CodedReport,
+    any_coded: bool,
+    next: usize,
+    prev_rows: Option<usize>,
+}
+
+impl PackReader<File> {
+    /// Open `path` for streaming decode.
+    pub fn open(path: &Path) -> Result<PackReader<File>, PackError> {
+        PackReader::new(File::open(path)?)
+    }
+}
+
+impl<R: Read + Seek> PackReader<R> {
+    /// Validate the container on `r` (header, table, CRC-checked
+    /// manifest and code books) without touching any layer payload.
+    pub fn new(mut r: R) -> Result<PackReader<R>, PackError> {
+        let file_len = r.seek(SeekFrom::End(0))?;
+        r.seek(SeekFrom::Start(0))?;
+        let mut header = [0u8; HEADER_BYTES];
+        read_exact_or_truncated(&mut r, &mut header)?;
+        if header[..8] != MAGIC {
+            return Err(PackError::BadMagic);
+        }
+        let mut cur = Cursor::new(&header[8..]);
+        let version = cur.u16()?;
+        let flags = cur.u16()?;
+        let n_sections = cur.u32()?;
+        if version != VERSION {
+            return Err(PackError::UnsupportedVersion(version));
+        }
+        if flags & !FLAG_ENTROPY != 0 {
+            return Err(PackError::malformed(format!("unsupported flags 0x{flags:04x}")));
+        }
+        let entropy_flagged = flags & FLAG_ENTROPY != 0;
+        if n_sections == 0 || n_sections > MAX_SECTIONS {
+            return Err(PackError::malformed(format!(
+                "implausible section count {n_sections}"
+            )));
+        }
+        let mut table = vec![0u8; n_sections as usize * TABLE_ENTRY_BYTES];
+        read_exact_or_truncated(&mut r, &mut table)?;
+        let mut cur = Cursor::new(&table);
+        let mut manifest_entry: Option<(u64, u64, u32)> = None;
+        let mut codebooks_entry: Option<(u64, u64, u32, usize)> = None;
+        let mut entries: Vec<LayerEntry> = Vec::new();
+        let mut max_end = (HEADER_BYTES + n_sections as usize * TABLE_ENTRY_BYTES) as u64;
+        for i in 0..n_sections as usize {
+            let kind = cur.u32()?;
+            let crc = cur.u32()?;
+            let off = cur.u64()?;
+            let len = cur.u64()?;
+            if off % 8 != 0 {
+                return Err(PackError::malformed(format!(
+                    "section {i} offset {off} is not 8-byte aligned"
+                )));
+            }
+            let end = off.checked_add(len).ok_or(PackError::Truncated)?;
+            if end > file_len {
+                return Err(PackError::Truncated);
+            }
+            max_end = max_end.max(end);
+            match kind {
+                SECTION_MANIFEST => {
+                    if manifest_entry.is_some() {
+                        return Err(PackError::malformed("duplicate manifest section"));
+                    }
+                    if i != 0 {
+                        return Err(PackError::malformed("manifest is not the first section"));
+                    }
+                    manifest_entry = Some((off, len, crc));
+                }
+                SECTION_LAYER | SECTION_LAYER_CODED => {
+                    let coded = kind == SECTION_LAYER_CODED;
+                    if coded && !entropy_flagged {
+                        return Err(PackError::malformed(
+                            "coded layer section in a pack without the entropy flag",
+                        ));
+                    }
+                    entries.push(LayerEntry {
+                        section: i,
+                        off,
+                        len,
+                        crc,
+                        coded,
+                    });
+                }
+                SECTION_CODEBOOKS => {
+                    if !entropy_flagged {
+                        return Err(PackError::malformed(
+                            "code-books section in a pack without the entropy flag",
+                        ));
+                    }
+                    if codebooks_entry.is_some() {
+                        return Err(PackError::malformed("duplicate code-books section"));
+                    }
+                    codebooks_entry = Some((off, len, crc, i));
+                }
+                other => {
+                    return Err(PackError::malformed(format!(
+                        "unknown section kind {other}"
+                    )))
+                }
+            }
+        }
+        // Same length contract as the in-memory reader: the file is the
+        // sections plus their trailing 8-byte alignment pad, exactly.
+        let expected_len = (max_end + 7) & !7;
+        if file_len < expected_len {
+            return Err(PackError::Truncated);
+        }
+        if file_len > expected_len {
+            return Err(PackError::malformed("trailing bytes after the last section"));
+        }
+        let (off, len, crc) =
+            manifest_entry.ok_or_else(|| PackError::malformed("missing manifest section"))?;
+        let sec = read_section(&mut r, off, len, crc, 0)?;
+        let manifest = decode_manifest(&sec)?;
+        let (books, codebook_bytes) = match codebooks_entry {
+            Some((off, len, crc, i)) => {
+                let sec = read_section(&mut r, off, len, crc, i)?;
+                (entropy::decode_codebooks(&sec)?, len)
+            }
+            None => (Vec::new(), 0),
+        };
+        if entries.len() != manifest.layers.len() {
+            return Err(PackError::malformed(format!(
+                "{} layer sections but manifest lists {} layers",
+                entries.len(),
+                manifest.layers.len()
+            )));
+        }
+        Ok(PackReader {
+            r,
+            manifest,
+            entries,
+            books,
+            report: CodedReport {
+                codebook_bytes,
+                ..CodedReport::default()
+            },
+            any_coded: entropy_flagged,
+            next: 0,
+            prev_rows: None,
+        })
+    }
+
+    /// The manifest (available before any layer is decoded).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Whether the pack carries the entropy flag (some sections coded).
+    pub fn is_coded(&self) -> bool {
+        self.any_coded
+    }
+
+    /// Decode the next layer, or `None` after the last. Layers are
+    /// validated against the manifest and the previous layer's output
+    /// dimension exactly like the whole-pack readers.
+    pub fn next_layer(&mut self) -> Result<Option<PackLayer>, PackError> {
+        let i = self.next;
+        let Some(e) = self.entries.get(i) else {
+            return Ok(None);
+        };
+        let sec = read_section(&mut self.r, e.off, e.len, e.crc, e.section)?;
+        let layer = if e.coded {
+            let (layer, disk, streams) = decode_coded_layer_section(&sec, &self.books)
+                .map_err(|err| annotate_layer(err, i))?;
+            self.report.layer_array_bytes.push(disk);
+            self.report.coded_streams += streams;
+            layer
+        } else {
+            self.report
+                .layer_array_bytes
+                .push(self.manifest.layers[i].array_bytes);
+            decode_layer_section(&sec, ArrayLoader::owned())
+                .map_err(|err| annotate_layer(err, i))?
+        };
+        validate_layer(i, &layer, &self.manifest.layers[i], self.prev_rows)?;
+        self.prev_rows = Some(layer.matrix.rows());
+        self.next = i + 1;
+        Ok(Some(layer))
+    }
+
+    /// Entropy-tier accounting, complete once every layer has been read
+    /// (`None` on raw packs).
+    pub fn coded(&self) -> Option<&CodedReport> {
+        self.any_coded.then_some(&self.report)
+    }
+}
+
+fn read_section<R: Read + Seek>(
+    r: &mut R,
+    off: u64,
+    len: u64,
+    crc: u32,
+    section: usize,
+) -> Result<Vec<u8>, PackError> {
+    r.seek(SeekFrom::Start(off))?;
+    let mut sec = vec![0u8; len as usize];
+    read_exact_or_truncated(r, &mut sec)?;
+    if crc32(&sec) != crc {
+        return Err(PackError::ChecksumMismatch { section });
+    }
+    Ok(sec)
+}
+
+fn read_exact_or_truncated<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), PackError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            PackError::Truncated
+        } else {
+            PackError::Io(e)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Pack, PackLayer};
+    use super::*;
+    use crate::formats::{Dense, FormatKind};
+    use crate::kernels::AnyMatrix;
+    use crate::util::Rng;
+    use std::io::Cursor as IoCursor;
+
+    /// Three chained layers: a skewed quantized CSER (codes well), a CSR
+    /// over the same distribution, and a small dense tail (floats, stays
+    /// raw).
+    fn chained_pack() -> Pack {
+        let mut rng = Rng::new(0x5EED);
+        let values = [0.0f32, 0.0, 0.0, 0.75, -0.25, 2.0];
+        let quant = |rng: &mut Rng, rows: usize, cols: usize| {
+            let data: Vec<f32> = (0..rows * cols).map(|_| values[rng.below(6)]).collect();
+            Dense::from_vec(rows, cols, data)
+        };
+        let m0 = quant(&mut rng, 40, 29);
+        let m1 = quant(&mut rng, 24, 40);
+        Pack::from_layers(
+            "stream-test-net",
+            "fixed (test)",
+            vec![
+                (
+                    "fc0".to_string(),
+                    AnyMatrix::encode(FormatKind::Cser, &m0),
+                    vec![0.5; 40],
+                ),
+                (
+                    "fc1".to_string(),
+                    AnyMatrix::encode(FormatKind::Csr, &m1),
+                    vec![-0.5; 24],
+                ),
+                (
+                    "fc2".to_string(),
+                    AnyMatrix::encode(FormatKind::Dense, &Dense::zeros(3, 24)),
+                    vec![0.0; 3],
+                ),
+            ],
+        )
+    }
+
+    fn image(pack: &Pack, entropy: bool) -> (Vec<u8>, PackSummary) {
+        let mut w = IoCursor::new(Vec::new());
+        let summary = write_pack(
+            &mut w,
+            &pack.manifest,
+            pack.layers.iter().map(PackLayer::view),
+            &EncodeOptions { entropy },
+        )
+        .unwrap();
+        (w.into_inner(), summary)
+    }
+
+    fn assert_same_layers(a: &[PackLayer], b: &[PackLayer]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.bias, y.bias);
+            assert_eq!(x.matrix.kind(), y.matrix.kind());
+            assert_eq!(x.matrix.to_dense(), y.matrix.to_dense());
+        }
+    }
+
+    #[test]
+    fn raw_streaming_write_is_read_by_the_whole_pack_reader() {
+        let pack = chained_pack();
+        let (bytes, summary) = image(&pack, false);
+        assert!(summary.coded.is_none());
+        assert_eq!(summary.file_bytes, bytes.len() as u64);
+        let back = Pack::from_bytes(&bytes).expect("decode streamed raw pack");
+        assert!(back.coded.is_none());
+        assert_same_layers(&pack.layers, &back.layers);
+        // Measured provenance matches the buffered serializer's.
+        let (_, buffered) = pack.to_bytes();
+        for (a, b) in summary.manifest.layers.iter().zip(&buffered.layers) {
+            assert_eq!(a.array_bytes, b.array_bytes, "{}", a.name);
+            assert_eq!(a.payload_bytes, b.payload_bytes, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn coded_streaming_write_reads_back_through_both_readers() {
+        let pack = chained_pack();
+        let (bytes, summary) = image(&pack, true);
+        let report = summary.coded.as_ref().expect("some layer must code");
+        assert!(report.coded_streams > 0);
+        assert!(report.total_array_bytes() <= summary.manifest.total_array_bytes());
+        assert_eq!(report.layer_array_bytes.len(), pack.layers.len());
+
+        // Whole-pack reader agrees on both the network and accounting.
+        let back = Pack::from_bytes(&bytes).expect("decode coded pack");
+        assert_same_layers(&pack.layers, &back.layers);
+        let read_report = back.coded.expect("coded report on read");
+        assert_eq!(read_report.layer_array_bytes, report.layer_array_bytes);
+        assert_eq!(read_report.coded_streams, report.coded_streams);
+        assert_eq!(read_report.codebook_bytes, report.codebook_bytes);
+
+        // Streaming reader: same layers, one at a time.
+        let mut reader = PackReader::new(IoCursor::new(bytes)).expect("open");
+        assert!(reader.is_coded());
+        assert_eq!(reader.manifest().layers.len(), 3);
+        let mut streamed = Vec::new();
+        while let Some(layer) = reader.next_layer().expect("layer") {
+            streamed.push(layer);
+        }
+        assert!(reader.next_layer().unwrap().is_none(), "stays exhausted");
+        assert_same_layers(&pack.layers, &streamed);
+        let stream_report = reader.coded().expect("streaming coded report");
+        assert_eq!(stream_report.layer_array_bytes, report.layer_array_bytes);
+    }
+
+    #[test]
+    fn capacity_slack_is_legal_and_overflow_is_an_error() {
+        let pack = chained_pack();
+        let mut w = IoCursor::new(Vec::new());
+        let mut writer =
+            PackWriter::new(&mut w, "stream-test-net", 16, EncodeOptions::default()).unwrap();
+        for layer in &pack.layers {
+            writer.add_layer(layer.view(), "fixed (test)").unwrap();
+        }
+        writer.finish().unwrap();
+        let back = Pack::from_bytes(&w.into_inner()).expect("slack table decodes");
+        assert_same_layers(&pack.layers, &back.layers);
+
+        let mut w = IoCursor::new(Vec::new());
+        let mut writer =
+            PackWriter::new(&mut w, "stream-test-net", 1, EncodeOptions::default()).unwrap();
+        writer.add_layer(pack.layers[0].view(), "fixed (test)").unwrap();
+        let err = writer.add_layer(pack.layers[1].view(), "fixed (test)").unwrap_err();
+        assert!(err.to_string().contains("capacity"), "got: {err}");
+    }
+
+    #[test]
+    fn streaming_reader_reports_corruption_with_the_section_index() {
+        let pack = chained_pack();
+        let (bytes, _) = image(&pack, true);
+        // Corrupt the middle of the second layer's section (table entry 2:
+        // manifest is entry 0, layers follow in order).
+        let entry = HEADER_BYTES + 2 * TABLE_ENTRY_BYTES;
+        let off = u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[entry + 16..entry + 24].try_into().unwrap()) as usize;
+        let mut corrupt = bytes.clone();
+        corrupt[off + len / 2] ^= 0x10;
+        let mut reader = PackReader::new(IoCursor::new(corrupt)).expect("container still valid");
+        reader.next_layer().expect("layer 0 is intact");
+        let err = reader.next_layer().unwrap_err();
+        assert!(
+            matches!(err, PackError::ChecksumMismatch { section: 2 }),
+            "got: {err}"
+        );
+        // Truncation anywhere is caught at open.
+        for cut in [10, HEADER_BYTES + 5, bytes.len() - 3] {
+            assert!(PackReader::new(IoCursor::new(bytes[..cut].to_vec())).is_err());
+        }
+    }
+
+    #[test]
+    fn streaming_reader_rejects_chain_breaks() {
+        // Two valid-in-isolation layers whose dimensions do not chain
+        // must fail at the second next_layer(), not at forward() time.
+        let m = Dense::from_vec(4, 3, (0..12).map(|i| i as f32).collect());
+        let bad = Pack::from_layers(
+            "bad-chain",
+            "fixed (test)",
+            vec![
+                (
+                    "a".to_string(),
+                    AnyMatrix::encode(FormatKind::Dense, &m),
+                    vec![0.0; 4],
+                ),
+                (
+                    "b".to_string(),
+                    AnyMatrix::encode(FormatKind::Dense, &m),
+                    vec![0.0; 4],
+                ),
+            ],
+        );
+        let (bytes, _) = image(&bad, false);
+        let mut reader = PackReader::new(IoCursor::new(bytes)).expect("container parses");
+        reader.next_layer().expect("first layer fine");
+        let err = reader.next_layer().unwrap_err();
+        assert!(err.to_string().contains("chain"), "got: {err}");
+    }
+}

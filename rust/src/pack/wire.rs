@@ -249,9 +249,60 @@ pub fn read_u32s_at_width(
     }
 }
 
+/// One bulk-array read observed by a recording [`ArrayLoader`]: the byte
+/// span of the array within the recorded buffer plus its element
+/// geometry. The entropy tier ([`crate::pack::entropy`]) replays a raw
+/// payload decode through a recorder to learn — with zero per-format
+/// knowledge — exactly where the codeable integer arrays live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArraySpan {
+    /// Byte offset of the array within the recorded buffer.
+    pub offset: usize,
+    /// Element width in bytes (1, 2 or 4).
+    pub width: usize,
+    /// Element count.
+    pub count: usize,
+    /// Float elements (values, codebooks, biases) — the entropy coder
+    /// passes these through raw and codes only integer arrays.
+    pub float: bool,
+}
+
+impl ArraySpan {
+    /// Byte length of the span.
+    pub fn byte_len(&self) -> usize {
+        self.width * self.count
+    }
+}
+
+/// Span sink for a recording [`ArrayLoader`]. Interior-mutable so the
+/// loader can stay `Copy` and thread itself through nested decoders
+/// unchanged.
+#[derive(Default)]
+pub struct SpanRecorder {
+    spans: std::cell::RefCell<Vec<ArraySpan>>,
+}
+
+impl SpanRecorder {
+    pub fn new() -> SpanRecorder {
+        SpanRecorder::default()
+    }
+
+    fn push(&self, span: ArraySpan) {
+        self.spans.borrow_mut().push(span);
+    }
+
+    /// The recorded spans, in the order the decoder read them.
+    pub fn into_spans(self) -> Vec<ArraySpan> {
+        self.spans.into_inner()
+    }
+}
+
 /// How a decoder materializes bulk arrays: by copying out of the cursor
-/// (the historical owned path) or as zero-copy [`Storage`] views into a
-/// shared [`PackMap`].
+/// (the historical owned path), as zero-copy [`Storage`] views into a
+/// shared [`PackMap`], or — the *coded* source — copying while reporting
+/// every array's byte span to a [`SpanRecorder`] (how the entropy tier
+/// discovers what to code, and how coded sections are proven to cover
+/// exactly the accounted arrays).
 ///
 /// The loader pairs with a [`Cursor`] over a sub-slice of the map: `base`
 /// is the byte offset of that sub-slice's first byte within the map, so
@@ -262,12 +313,16 @@ pub fn read_u32s_at_width(
 #[derive(Clone, Copy)]
 pub struct ArrayLoader<'a> {
     map: Option<(&'a Arc<PackMap>, usize)>,
+    rec: Option<(&'a SpanRecorder, usize)>,
 }
 
 impl<'a> ArrayLoader<'a> {
     /// Copying loader — every array is decoded into owned storage.
     pub fn owned() -> ArrayLoader<'static> {
-        ArrayLoader { map: None }
+        ArrayLoader {
+            map: None,
+            rec: None,
+        }
     }
 
     /// Zero-copy loader over `map`; `base` is the absolute byte offset of
@@ -275,6 +330,17 @@ impl<'a> ArrayLoader<'a> {
     pub fn mapped(map: &'a Arc<PackMap>, base: usize) -> ArrayLoader<'a> {
         ArrayLoader {
             map: Some((map, base)),
+            rec: None,
+        }
+    }
+
+    /// Recording loader: decodes owned like [`ArrayLoader::owned`], and
+    /// additionally reports every bulk-array read to `rec` (offsets
+    /// relative to the buffer the loader was created over).
+    pub(crate) fn recording(rec: &'a SpanRecorder) -> ArrayLoader<'a> {
+        ArrayLoader {
+            map: None,
+            rec: Some((rec, 0)),
         }
     }
 
@@ -283,6 +349,18 @@ impl<'a> ArrayLoader<'a> {
     pub fn advanced(self, delta: usize) -> ArrayLoader<'a> {
         ArrayLoader {
             map: self.map.map(|(m, base)| (m, base + delta)),
+            rec: self.rec.map(|(r, base)| (r, base + delta)),
+        }
+    }
+
+    fn record(&self, offset: usize, width: usize, count: usize, float: bool) {
+        if let Some((rec, base)) = self.rec {
+            rec.push(ArraySpan {
+                offset: base + offset,
+                width,
+                count,
+                float,
+            });
         }
     }
 
@@ -301,6 +379,7 @@ impl<'a> ArrayLoader<'a> {
             .ok_or_else(|| PackError::malformed(format!("{what} size overflow")))?;
         let pos = cur.pos();
         let bytes = cur.take(byte_len)?;
+        self.record(pos, std::mem::size_of::<T>(), count, T::IS_FLOAT);
         match self.map {
             Some((map, base)) if cfg!(target_endian = "little") => {
                 Storage::mapped(map.clone(), base + pos, count)
@@ -322,8 +401,14 @@ impl<'a> ArrayLoader<'a> {
     ) -> Result<Storage<u32>, PackError> {
         match width {
             IndexWidth::U32 => self.typed::<u32>(cur, count, what),
-            IndexWidth::U16 => Ok(cur.u16_array_widened(count)?.into()),
-            IndexWidth::U8 => Ok(cur.u8_array_widened(count)?.into()),
+            IndexWidth::U16 => {
+                self.record(cur.pos(), 2, count, false);
+                Ok(cur.u16_array_widened(count)?.into())
+            }
+            IndexWidth::U8 => {
+                self.record(cur.pos(), 1, count, false);
+                Ok(cur.u8_array_widened(count)?.into())
+            }
         }
     }
 

@@ -416,8 +416,9 @@ pub fn verify_against_pack(
     count: usize,
     seed: u64,
 ) -> Result<()> {
-    use crate::coordinator::engine::Engine;
-    let mut engine = Engine::from_pack(pack_path)
+    use crate::coordinator::engine::PackOptions;
+    let mut engine = PackOptions::new(pack_path)
+        .open()
         .with_context(|| format!("loading reference pack {}", pack_path.display()))?;
     let in_dim = engine.in_dim();
     let mut client = HttpClient::connect(addr, client_timeout(deadline_ms))?;

@@ -15,7 +15,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::PackOptions;
 use crate::coordinator::server::{ReplanReport, ReplanRequest, ServerConfig, WorkerSet};
 use crate::pack::map::PackMap;
 use anyhow::{anyhow, Context, Result};
@@ -56,13 +56,14 @@ impl HotRouter {
     fn build_endpoint(&self, name: &str, path: &Path, generation: u64) -> Result<PackEndpoint> {
         let map = PackMap::open(path)
             .with_context(|| format!("opening pack {}", path.display()))?;
-        let probe = Engine::from_pack_map(&map)
+        let probe = PackOptions::from_map(&map)
+            .open()
             .with_context(|| format!("parsing pack {}", path.display()))?;
         let (in_dim, out_dim) = (probe.in_dim(), probe.out_dim());
         drop(probe);
         let build_map = Arc::clone(&map);
         let workers = WorkerSet::spawn(self.workers_per_pack, self.cfg, move |_| {
-            Engine::from_pack_map(&build_map)
+            PackOptions::from_map(&build_map).open()
         });
         Ok(PackEndpoint {
             name: name.to_string(),
@@ -169,6 +170,7 @@ impl HotRouter {
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::engine::Engine;
     use crate::formats::{Dense, FormatKind};
     use crate::util::rng::Rng;
     use std::sync::Weak;

@@ -11,7 +11,9 @@
 //! `packs[net=lenet5].cold_start_ms`. A metric is **tracked** when its
 //! key name says which direction is better:
 //!
-//! * lower-is-better — names ending in `_ms`, `_ns` or `_us`;
+//! * lower-is-better — names ending in `_ms`, `_ns` or `_us`, plus
+//!   `coded_bytes` (the entropy tier's on-disk footprint — growing it is
+//!   a compression regression even though it carries no time suffix);
 //! * higher-is-better — `gflops_equiv`, `speedup_vs_1t`, `fused_speedup`,
 //!   `compression_ratio`, `throughput_rps`, `stealing_speedup`.
 //!
@@ -44,9 +46,14 @@ fn tracked(name: &str) -> Option<bool> {
         "throughput_rps",
         "stealing_speedup",
     ];
+    const LOWER: [&str; 1] = ["coded_bytes"];
     if HIGHER.contains(&name) {
         Some(true)
-    } else if name.ends_with("_ms") || name.ends_with("_ns") || name.ends_with("_us") {
+    } else if LOWER.contains(&name)
+        || name.ends_with("_ms")
+        || name.ends_with("_ns")
+        || name.ends_with("_us")
+    {
         Some(false)
     } else {
         None
@@ -344,6 +351,25 @@ mod tests {
             r.failures().next().unwrap().key,
             "stealing[net=spike-slab,threads=4].stealing_speedup"
         );
+    }
+
+    #[test]
+    fn coded_bytes_and_decode_us_are_tracked_lower_is_better() {
+        // The entropy tier's metrics: a grown coded footprint or a slower
+        // decode both count as regressions.
+        let base = doc(
+            r#"{"entropy": [{"net": "densenet", "coded_bytes": 1000.0, "decode_us": 50.0}]}"#,
+        );
+        let fresh = doc(
+            r#"{"entropy": [{"net": "densenet", "coded_bytes": 2000.0, "decode_us": 120.0}]}"#,
+        );
+        let r = gate(&base, &fresh, 25.0);
+        let failed: Vec<&str> = r.failures().map(|c| c.key.as_str()).collect();
+        assert!(failed.contains(&"entropy[net=densenet].coded_bytes"));
+        assert!(failed.contains(&"entropy[net=densenet].decode_us"));
+        // Other byte counters (e.g. raw_bytes) stay untracked info fields.
+        assert_eq!(tracked("raw_bytes"), None);
+        assert_eq!(tracked("coded_bytes"), Some(false));
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //!
 //! Every assertion below iterates [`FormatKind::ALL`] and reaches each
 //! format only through the type-erased [`AnyMatrix`] surface: encoding,
-//! losslessness, storage accounting, pack codecs (owned and mapped),
-//! serial/sharded/stolen execution, fused epilogues, and multi-rhs
+//! losslessness, storage accounting, pack codecs (owned, mapped, and the
+//! entropy-coded tier), serial/sharded/stolen execution, fused
+//! epilogues, and multi-rhs
 //! products. There is **no per-format branch anywhere in this file** —
 //! a seventh format added to `FormatKind::ALL` runs the entire gauntlet
 //! automatically and fails it until every dispatch arm, codec, and
@@ -201,6 +202,75 @@ fn mapped_sections_decode_bit_identically_to_owned() {
             // A mapped pack re-encodes to the identical file image.
             let (bytes2, _) = mapped.to_bytes();
             assert_eq!(bytes, bytes2, "{tag}: mapped re-encode not byte-identical");
+        }
+    }
+}
+
+#[test]
+fn coded_raw_and_mapped_decodes_agree_across_the_family() {
+    // The entropy tier sweep: the same layer written raw, written coded
+    // (streaming writer, Huffman tier on), and read back owned and
+    // mapped must be the same operator bit for bit. Small or incompressible
+    // cases fall back to raw sections inside the coded writer — the
+    // equality must hold whether or not any stream paid for itself.
+    use cer::pack::stream::{self, EncodeOptions};
+    use cer::pack::LayerView;
+
+    for (name, m) in corpus() {
+        for kind in FormatKind::ALL {
+            let tag = format!("{kind:?} {name}");
+            let pack = Pack::from_layers(
+                "format-generic",
+                "fixed (test)",
+                vec![(
+                    "l0".to_string(),
+                    AnyMatrix::encode(kind, &m),
+                    vec![0.0; m.rows()],
+                )],
+            );
+            let (raw_bytes, _) = pack.to_bytes();
+            let views: Vec<LayerView<'_>> = pack
+                .layers
+                .iter()
+                .map(|l| LayerView {
+                    name: &l.name,
+                    matrix: &l.matrix,
+                    bias: &l.bias,
+                })
+                .collect();
+            let mut w = std::io::Cursor::new(Vec::new());
+            let summary = stream::write_pack(
+                &mut w,
+                &pack.manifest,
+                views,
+                &EncodeOptions { entropy: true },
+            )
+            .unwrap_or_else(|e| panic!("{tag}: coded write: {e}"));
+            let coded_bytes = w.into_inner();
+            if let Some(report) = &summary.coded {
+                assert!(
+                    report.total_on_disk_bytes() <= summary.manifest.total_array_bytes(),
+                    "{tag}: coded tier larger than raw"
+                );
+            }
+
+            let raw = Pack::from_bytes(&raw_bytes).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            let owned =
+                Pack::from_bytes(&coded_bytes).unwrap_or_else(|e| panic!("{tag}: coded: {e}"));
+            let map = PackMap::from_bytes(&coded_bytes);
+            let mapped =
+                Pack::from_map(&map).unwrap_or_else(|e| panic!("{tag}: mapped coded: {e}"));
+
+            let x = seeded_x(m.cols(), 0xC0D3);
+            let mut want = vec![0.0f32; m.rows()];
+            raw.layers[0].matrix.matvec(&x, &mut want);
+            for (path, p) in [("coded-owned", &owned), ("coded-mapped", &mapped)] {
+                assert_eq!(p.layers[0].matrix.kind(), kind, "{tag} {path}");
+                assert_eq!(p.layers[0].matrix.to_dense(), m, "{tag} {path}: decode");
+                let mut y = vec![0.0f32; m.rows()];
+                p.layers[0].matrix.matvec(&x, &mut y);
+                assert_eq!(y, want, "{tag} {path}: matvec drifted from raw");
+            }
         }
     }
 }

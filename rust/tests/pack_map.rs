@@ -3,9 +3,10 @@
 //! Properties under test:
 //!
 //! * **Equivalence** — an engine cold-started through the mapped reader
-//!   ([`Engine::from_pack_mmap`] / [`Pack::from_map`]) is bit-identical in
-//!   output to the owned reader ([`Engine::from_pack`]) for every format,
-//!   both Ω\[0\] regimes, every index width, serial and sharded.
+//!   (`PackOptions::new(path).mmap(true).open()` / [`Pack::from_map`]) is
+//!   bit-identical in output to the owned reader
+//!   (`PackOptions::new(path).open()`) for every format, both Ω\[0\]
+//!   regimes, every index width, serial and sharded.
 //! * **Sharing** — N engines over one `Arc<PackMap>` view the same
 //!   physical bytes (pointer equality), and a [`WorkerSet`] serves from
 //!   them concurrently.
@@ -16,7 +17,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use cer::coordinator::{Engine, PackRouter, ServerConfig, WorkerSet};
+use cer::coordinator::{Engine, PackOptions, PackRouter, ServerConfig, WorkerSet};
 use cer::formats::{Dense, FormatKind};
 use cer::kernels::AnyMatrix;
 use cer::pack::map::PackMap;
@@ -82,8 +83,8 @@ fn mapped_reader_bit_identical_to_owned_across_formats_and_regimes() {
         let path = tmp_path(&format!("equiv-{implicit_zero}"));
         std::fs::write(&path, &bytes).unwrap();
 
-        let mut owned = Engine::from_pack(&path).unwrap();
-        let mut mapped = Engine::from_pack_mmap(&path).unwrap();
+        let mut owned = PackOptions::new(&path).open().unwrap();
+        let mut mapped = PackOptions::new(&path).mmap(true).open().unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(owned.formats(), mapped.formats());
         assert_eq!(owned.storage_bits(), mapped.storage_bits());
@@ -153,8 +154,8 @@ fn engines_on_one_map_share_physical_bytes() {
 
     let (map, _) = Pack::open_mapped(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    let a = Engine::from_pack_map(&map).unwrap();
-    let b = Engine::from_pack_map(&map).unwrap();
+    let a = PackOptions::from_map(&map).open().unwrap();
+    let b = PackOptions::from_map(&map).open().unwrap();
     assert!(Arc::ptr_eq(a.pack_map().unwrap(), b.pack_map().unwrap()));
 
     // The CSR layer's value array: same address in both engines — one
@@ -182,12 +183,12 @@ fn worker_set_serves_one_mapped_pack_bit_identically() {
     std::fs::write(&path, &bytes).unwrap();
 
     let (map, _) = Pack::open_mapped(&path).unwrap();
-    let mut owned = Engine::from_pack(&path).unwrap();
+    let mut owned = PackOptions::new(&path).open().unwrap();
     std::fs::remove_file(&path).ok();
 
     let map_for_workers = map.clone();
     let ws = WorkerSet::spawn(3, ServerConfig::default(), move |_i| {
-        Engine::from_pack_map(&map_for_workers)
+        PackOptions::from_map(&map_for_workers).open()
     });
     let mut rng = Rng::new(0xF00D);
     let xs: Vec<Vec<f32>> = (0..9)
@@ -229,8 +230,8 @@ fn pack_router_serves_two_mapped_packs() {
 
     let (map_a, _) = Pack::open_mapped(&path_a).unwrap();
     let (map_b, _) = Pack::open_mapped(&path_b).unwrap();
-    let mut ref_a = Engine::from_pack(&path_a).unwrap();
-    let mut ref_b = Engine::from_pack(&path_b).unwrap();
+    let mut ref_a = PackOptions::new(&path_a).open().unwrap();
+    let mut ref_b = PackOptions::new(&path_b).open().unwrap();
     std::fs::remove_file(&path_a).ok();
     std::fs::remove_file(&path_b).ok();
 
@@ -238,12 +239,12 @@ fn pack_router_serves_two_mapped_packs() {
     let m = map_a.clone();
     router.add(
         "a",
-        WorkerSet::spawn(2, ServerConfig::default(), move |_| Engine::from_pack_map(&m)),
+        WorkerSet::spawn(2, ServerConfig::default(), move |_| PackOptions::from_map(&m).open()),
     );
     let m = map_b.clone();
     router.add(
         "b",
-        WorkerSet::spawn(1, ServerConfig::default(), move |_| Engine::from_pack_map(&m)),
+        WorkerSet::spawn(1, ServerConfig::default(), move |_| PackOptions::from_map(&m).open()),
     );
 
     let xa = vec![0.25f32; 10];
@@ -268,7 +269,7 @@ fn reselection_on_a_mapped_engine_stays_correct() {
     let pack = family_pack(true);
     let (bytes, _) = pack.to_bytes();
     let map = PackMap::from_bytes(&bytes);
-    let mut e = Engine::from_pack_map(&map).unwrap();
+    let mut e = PackOptions::from_map(&map).open().unwrap();
     let x = vec![0.3f32; e.in_dim()];
     let want = e.forward(&x, 1).unwrap();
     // Re-encoding decodes mapped storage losslessly and replaces it with
@@ -306,7 +307,7 @@ fn truncated_packs_fail_cleanly_in_the_mapped_reader() {
     let path = tmp_path("trunc");
     std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
     assert!(Pack::open_mapped(&path).is_err());
-    assert!(Engine::from_pack_mmap(&path).is_err());
+    assert!(PackOptions::new(&path).mmap(true).open().is_err());
     std::fs::remove_file(&path).ok();
 }
 

@@ -1,7 +1,7 @@
 //! Heap accounting for the zero-copy cold start.
 //!
 //! A byte-counting `#[global_allocator]` wraps the system allocator;
-//! [`Engine::from_pack_mmap`] over a pack whose stored widths all admit
+//! `PackOptions::new(path).mmap(true).open()` over a pack whose widths admit
 //! mapped views (f32 values, u16 column indices, u32 row pointers, f32
 //! biases) must allocate only engine scaffolding — names, layer vectors,
 //! the manifest — and **no per-array heap copy**: allocated bytes stay a
@@ -17,7 +17,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use cer::coordinator::Engine;
+use cer::coordinator::PackOptions;
 use cer::formats::{Dense, FormatKind};
 use cer::kernels::AnyMatrix;
 use cer::pack::Pack;
@@ -108,12 +108,12 @@ fn from_pack_mmap_performs_no_per_array_heap_copy() {
 
     // Warm-up: lazy std initialization (locks, TLS) off the books, and
     // confirm the mapping mode we are about to assert on.
-    let warm = Engine::from_pack_mmap(&path).expect("warm-up cold start");
+    let warm = PackOptions::new(&path).mmap(true).open().expect("warm-up cold start");
     let real_mmap = warm.pack_map().expect("map").is_mmap();
     drop(warm);
 
     let before = BYTES.load(Ordering::SeqCst);
-    let mut mapped = Engine::from_pack_mmap(&path).expect("mmap cold start");
+    let mut mapped = PackOptions::new(&path).mmap(true).open().expect("mmap cold start");
     let mapped_alloc = BYTES.load(Ordering::SeqCst) - before;
 
     // Every array admits a view here: zero owned array bytes.
@@ -145,7 +145,7 @@ fn from_pack_mmap_performs_no_per_array_heap_copy() {
     // Contrast: the owned reader must copy at least the full array
     // payload (plus the read buffer).
     let before = BYTES.load(Ordering::SeqCst);
-    let mut owned = Engine::from_pack(&path).expect("owned cold start");
+    let mut owned = PackOptions::new(&path).open().expect("owned cold start");
     let owned_alloc = BYTES.load(Ordering::SeqCst) - before;
     assert!(
         owned_alloc as u64 > array_bytes,

@@ -9,11 +9,12 @@
 
 use std::path::PathBuf;
 
-use cer::coordinator::Engine;
+use cer::coordinator::{Engine, PackOptions};
 use cer::formats::{Dense, FormatKind};
 use cer::kernels::AnyMatrix;
-use cer::pack::{Pack, PackError};
-use cer::util::Rng;
+use cer::pack::stream::EncodeOptions;
+use cer::pack::{Pack, PackError, SECTION_LAYER_CODED};
+use cer::util::{crc32, Rng};
 
 /// A quantized random matrix with ~`k` distinct values and a heavy zero
 /// mass (the regime the formats are built for).
@@ -121,7 +122,7 @@ fn engine_save_load_bit_exact_for_every_format() {
         let mut original = Engine::native_fixed(layers, kind);
         let path = tmp_path(&format!("fixed-{}", kind.name()));
         original.save_pack(&path, "roundtrip-net", "fixed (test)").unwrap();
-        let mut cold = Engine::from_pack(&path).unwrap();
+        let mut cold = PackOptions::new(&path).open().unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(cold.formats(), vec![kind; 2]);
         let x: Vec<f32> = (0..2 * 14).map(|_| rng.f32() - 0.5).collect();
@@ -181,7 +182,7 @@ fn bad_magic_fails_with_typed_error() {
     // An engine cold start surfaces the same failure as a readable error.
     let path2 = tmp_path("magic2");
     std::fs::write(&path2, &bytes).unwrap();
-    let e = Engine::from_pack(&path2).unwrap_err();
+    let e = PackOptions::new(&path2).open().unwrap_err();
     assert!(format!("{e:#}").contains("bad magic"), "{e:#}");
     std::fs::remove_file(&path2).ok();
 }
@@ -228,6 +229,176 @@ fn header_and_table_corruption_fails_cleanly() {
         assert!(Pack::read(&path).is_err(), "flip at header/table byte {pos}");
     }
     std::fs::remove_file(&path).ok();
+}
+
+/// A matrix whose value mass is skewed enough that the Huffman tier pays
+/// for itself (codebook-index streams compress well below their raw
+/// minimal width once the arrays are a few thousand entries long).
+fn skewed_quantized(rng: &mut Rng, rows: usize, cols: usize) -> Dense {
+    let values = [0.0f32, 0.0, 0.0, 0.0, 0.5, -0.5, 1.5];
+    Dense::from_vec(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| values[rng.below(values.len())])
+            .collect(),
+    )
+}
+
+/// Save an entropy-coded two-layer pack and return its raw file bytes.
+fn coded_pack_bytes(tag: &str) -> Vec<u8> {
+    let mut rng = Rng::new(0xC0DE);
+    let layers = vec![
+        (
+            "fc0".to_string(),
+            skewed_quantized(&mut rng, 64, 96),
+            vec![0.0; 64],
+        ),
+        (
+            "fc1".to_string(),
+            skewed_quantized(&mut rng, 10, 64),
+            vec![0.5; 10],
+        ),
+    ];
+    let engine = Engine::native_fixed(layers, FormatKind::Cser);
+    let path = tmp_path(tag);
+    let summary = engine
+        .save_pack_with(&path, "coded-net", "fixed (test)", &EncodeOptions { entropy: true })
+        .unwrap();
+    let report = summary.coded.expect("fixture must produce a coded pack");
+    assert!(report.coded_streams > 0, "fixture produced no coded streams");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// `(kind, crc_field_pos, section_off, section_len)` per table entry.
+fn section_table(bytes: &[u8]) -> Vec<(u32, usize, usize, usize)> {
+    let n = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    (0..n)
+        .map(|s| {
+            let e = 16 + s * 24;
+            let kind = u32::from_le_bytes(bytes[e..e + 4].try_into().unwrap());
+            let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into().unwrap()) as usize;
+            (kind, e + 4, off, len)
+        })
+        .collect()
+}
+
+/// Recompute a section's CRC after tampering with its bytes, so decoding
+/// exercises the entropy decoder itself instead of stopping at the
+/// checksum.
+fn repair_crc(bytes: &mut [u8], crc_pos: usize, off: usize, len: usize) {
+    let crc = crc32(&bytes[off..off + len]);
+    bytes[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+}
+
+#[test]
+fn coded_pack_cold_start_is_bit_exact_owned_and_mapped() {
+    let mut rng = Rng::new(0xC0DE);
+    let layers = vec![
+        (
+            "fc0".to_string(),
+            skewed_quantized(&mut rng, 64, 96),
+            vec![0.0; 64],
+        ),
+        (
+            "fc1".to_string(),
+            skewed_quantized(&mut rng, 10, 64),
+            vec![0.5; 10],
+        ),
+    ];
+    let mut original = Engine::native_fixed(layers, FormatKind::Cser);
+    let path = tmp_path("coded-exact");
+    let summary = original
+        .save_pack_with(&path, "coded-net", "fixed (test)", &EncodeOptions { entropy: true })
+        .unwrap();
+    let report = summary.coded.expect("coded pack expected");
+    assert!(report.coded_streams > 0);
+    // The tier's whole point: coded on-disk arrays (code books included)
+    // never exceed the raw minimal-width arrays.
+    assert!(report.total_on_disk_bytes() <= summary.manifest.total_array_bytes());
+    let mut owned = PackOptions::new(&path).open().unwrap();
+    let mut mapped = PackOptions::new(&path).mmap(true).open().unwrap();
+    std::fs::remove_file(&path).ok();
+    let x: Vec<f32> = (0..2 * 96).map(|_| rng.f32() - 0.5).collect();
+    let a = original.forward(&x, 2).unwrap();
+    assert_eq!(a, owned.forward(&x, 2).unwrap(), "owned coded cold start");
+    assert_eq!(a, mapped.forward(&x, 2).unwrap(), "mapped coded cold start");
+}
+
+#[test]
+fn flipped_coded_section_bytes_fail_the_checksum() {
+    let bytes = coded_pack_bytes("coded-flip");
+    let coded: Vec<_> = section_table(&bytes)
+        .into_iter()
+        .filter(|(k, ..)| *k == SECTION_LAYER_CODED)
+        .collect();
+    assert!(!coded.is_empty(), "fixture has no coded sections");
+    for (_, _, off, len) in coded {
+        for pos in [off, off + len / 2, off + len - 1] {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x10;
+            assert!(
+                matches!(
+                    Pack::from_bytes(&corrupt),
+                    Err(PackError::ChecksumMismatch { .. })
+                ),
+                "flip at {pos} must fail the coded section's CRC"
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_tier_word_with_repaired_crc_is_rejected() {
+    let bytes = coded_pack_bytes("coded-tier");
+    let (_, crc_pos, off, len) = section_table(&bytes)
+        .into_iter()
+        .find(|(k, ..)| *k == SECTION_LAYER_CODED)
+        .expect("coded section");
+    // An unknown tier bit (a future coding scheme) must be rejected, not
+    // skipped — CRC-valid, so this exercises the tier gate itself.
+    let mut unknown = bytes.clone();
+    unknown[off..off + 4].copy_from_slice(&0x3u32.to_le_bytes());
+    repair_crc(&mut unknown, crc_pos, off, len);
+    let err = Pack::from_bytes(&unknown).unwrap_err();
+    assert!(err.to_string().contains("unknown tier flags"), "got: {err}");
+    // A coded section claiming no tier at all is malformed.
+    let mut zero = bytes.clone();
+    zero[off..off + 4].copy_from_slice(&0u32.to_le_bytes());
+    repair_crc(&mut zero, crc_pos, off, len);
+    let err = Pack::from_bytes(&zero).unwrap_err();
+    assert!(err.to_string().contains("no coding tier"), "got: {err}");
+}
+
+#[test]
+fn corrupt_coded_payload_with_repaired_crc_never_panics() {
+    // Bit flips *behind* a repaired CRC reach the Huffman decoder with a
+    // plausible-looking stream. A flip may still decode (it can land in
+    // a name byte or a raw run), so `Err` is not the invariant — the
+    // invariant is: no panic, and any `Ok` pack is structurally
+    // consistent with its own manifest.
+    let bytes = coded_pack_bytes("coded-fuzz");
+    for (kind, crc_pos, off, len) in section_table(&bytes) {
+        if kind != SECTION_LAYER_CODED {
+            continue;
+        }
+        for pos in (off + 4..off + len).step_by(11) {
+            for mask in [0x01u8, 0x80] {
+                let mut corrupt = bytes.clone();
+                corrupt[pos] ^= mask;
+                repair_crc(&mut corrupt, crc_pos, off, len);
+                if let Ok(p) = Pack::from_bytes(&corrupt) {
+                    assert_eq!(p.layers.len(), p.manifest.layers.len());
+                    for (l, m) in p.layers.iter().zip(&p.manifest.layers) {
+                        assert_eq!(l.name, m.name);
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]

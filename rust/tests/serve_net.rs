@@ -20,7 +20,7 @@ use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use cer::coordinator::batcher::BatcherConfig;
-use cer::coordinator::engine::Engine;
+use cer::coordinator::engine::{Engine, PackOptions};
 use cer::coordinator::server::ServerConfig;
 use cer::formats::{Dense, FormatKind};
 use cer::pack::map::PackMap;
@@ -94,7 +94,7 @@ fn bits(xs: &[f32]) -> Vec<u32> {
 fn socket_replies_are_bit_identical_to_in_process_engine() {
     let dir = scratch_dir("exact");
     let pack = write_pack(&dir, "exact", 42);
-    let mut reference = Engine::from_pack(&pack).unwrap();
+    let mut reference = PackOptions::new(&pack).open().unwrap();
     let handle = spawn(
         &pack,
         "exact",
@@ -219,8 +219,8 @@ fn hot_reload_under_fire_serves_only_whole_generations() {
     let old_pack = write_pack(&dir, "gen-old", 1);
     let new_pack = write_pack(&dir, "gen-new", 2);
     let x = [0.75f32, -0.5, 0.25, 1.0, -1.0, 0.125];
-    let want_old = bits(&Engine::from_pack(&old_pack).unwrap().forward(&x, 1).unwrap());
-    let want_new = bits(&Engine::from_pack(&new_pack).unwrap().forward(&x, 1).unwrap());
+    let want_old = bits(&PackOptions::new(&old_pack).open().unwrap().forward(&x, 1).unwrap());
+    let want_new = bits(&PackOptions::new(&new_pack).open().unwrap().forward(&x, 1).unwrap());
     assert_ne!(want_old, want_new, "seeds must give distinguishable packs");
 
     let router = HotRouter::new(server_cfg(4, 200), 2);
